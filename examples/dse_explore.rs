@@ -1,0 +1,70 @@
+//! Design-space exploration driver (paper §V DSE).
+//!
+//! Sweeps `[Y, N, K, H, L, M]` under the silicon budget + fan-out design
+//! rules, ranks by the paper's GOPS/EPB figure of merit, and reports
+//! where the published optimum `[4,12,3,6,6,3]` lands.
+//!
+//! Run: `cargo run --release --example dse_explore -- [--threads 8]
+//!       [--top 15]`
+
+use difflight::devices::DeviceParams;
+use difflight::dse::{explore, DesignSpace};
+use difflight::util::cli::Args;
+use difflight::util::table::{fmt_si, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let threads = args.get_parsed("threads", 8usize);
+    let top = args.get_parsed("top", 15usize);
+
+    let space = DesignSpace::paper();
+    println!(
+        "grid {} points, {} within the MR budget ({} MRs) + fanout rules",
+        space.grid_size(),
+        space.candidates().len(),
+        space.max_total_mrs
+    );
+    let params = DeviceParams::paper();
+    let points = explore(&space, &params, threads);
+    println!("{} feasible configurations evaluated", points.len());
+
+    let mut t = Table::new(&["rank", "[Y,N,K,H,L,M]", "MRs", "avg GOPS", "avg EPB", "objective"]);
+    for (i, pt) in points.iter().take(top).enumerate() {
+        t.row(&[
+            (i + 1).to_string(),
+            format!("{:?}", pt.config.vector()),
+            pt.total_mrs.to_string(),
+            format!("{:.1}", pt.avg_gops),
+            fmt_si(pt.avg_epb, "J/bit"),
+            format!("{:.3e}", pt.objective),
+        ]);
+    }
+    print!("{}", t.render());
+
+    match points
+        .iter()
+        .position(|pt| pt.config.vector() == difflight::PAPER_OPTIMAL_CONFIG)
+    {
+        Some(rank) => {
+            let pt = &points[rank];
+            println!(
+                "\npaper optimum [4,12,3,6,6,3]: rank {}/{} (top {:.1}%), \
+                 {:.1} GOPS avg, {} avg, objective {:.3e}",
+                rank + 1,
+                points.len(),
+                100.0 * (rank + 1) as f64 / points.len() as f64,
+                pt.avg_gops,
+                fmt_si(pt.avg_epb, "J/bit"),
+                pt.objective
+            );
+            println!(
+                "note: K·N = {} and M·N = {} saturate the 36-element \
+                 distribution-tree design rule — the same bound the paper's \
+                 Lumerical analysis derives (§V)",
+                pt.config.k * pt.config.n,
+                pt.config.m * pt.config.n
+            );
+        }
+        None => println!("paper optimum not inside the swept space?!"),
+    }
+}

@@ -1,0 +1,106 @@
+//! Full paper evaluation in one run: Table I, Table II, Figure 8,
+//! Figure 9 and Figure 10, each printed next to the paper's published
+//! numbers. The per-figure benches (`cargo bench`) regenerate these
+//! individually; this example is the one-shot overview.
+//!
+//! Run: `cargo run --release --example paper_eval`
+
+use difflight::arch::cost::OptFlags;
+use difflight::baselines::all_baselines;
+use difflight::sim::Simulator;
+use difflight::util::stats;
+use difflight::util::table::{fmt_si, Table};
+use difflight::workload::{ModelId, ModelSpec};
+
+fn main() {
+    table1();
+    figure8();
+    figures9_10();
+}
+
+fn table1() {
+    println!("== Table I: models, parameters (computed vs published) ==");
+    let mut t = Table::new(&["model", "dataset", "params (computed)", "params (paper)", "dev"]);
+    for id in ModelId::ALL {
+        let s = ModelSpec::get(id);
+        t.row(&[
+            s.id.name().into(),
+            s.id.dataset().into(),
+            format!("{:.2}M", s.computed_params() as f64 / 1e6),
+            format!("{:.2}M", s.published_params as f64 / 1e6),
+            format!("{:.2}%", s.param_deviation() * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(IS-drop after W8A8: python -m compile.train --table1 → artifacts/table1_proxy.json)\n");
+}
+
+fn figure8() {
+    println!("== Figure 8: normalized energy vs dataflow optimizations ==");
+    let sim = Simulator::paper_optimal();
+    let sweep = OptFlags::figure8_sweep();
+    let mut t = Table::new(&["model", "Baseline", "S/W Opt", "Pipelined", "DAC Share", "All"]);
+    let mut combined = Vec::new();
+    for id in ModelId::ALL {
+        let spec = ModelSpec::get(id);
+        let trace = spec.trace();
+        let base = sim.step_cost(&trace, OptFlags::BASELINE).energy_j;
+        let mut row = vec![spec.id.name().to_string()];
+        for (_, opts) in sweep {
+            let e = sim.step_cost(&trace, opts).energy_j;
+            row.push(format!("{:.3}", e / base));
+            if opts == OptFlags::ALL {
+                combined.push(base / e);
+            }
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    println!(
+        "combined-opt energy reduction: {:.2}x average (paper: ~3x)\n",
+        stats::mean(&combined)
+    );
+}
+
+fn figures9_10() {
+    println!("== Figures 9 & 10: GOPS and EPB vs platforms ==");
+    let sim = Simulator::paper_optimal();
+    let mut dl_gops = Vec::new();
+    let mut dl_epb = Vec::new();
+    for id in ModelId::ALL {
+        let run = sim.run_model(&ModelSpec::get(id), OptFlags::ALL);
+        dl_gops.push(run.gops());
+        dl_epb.push(run.epb());
+    }
+    let paper_gops = [59.5, 51.89, 192.0, 572.0, 94.0, 5.5];
+    let paper_epb = [32.9, 94.18, 376.0, 67.0, 3.0, 4.51];
+    let mut t = Table::new(&[
+        "platform",
+        "GOPS ratio (ours)",
+        "GOPS ratio (paper)",
+        "EPB ratio (ours)",
+        "EPB ratio (paper)",
+    ]);
+    for (i, b) in all_baselines().iter().enumerate() {
+        let mut gr = Vec::new();
+        let mut er = Vec::new();
+        for (j, id) in ModelId::ALL.iter().enumerate() {
+            let r = b.run(&ModelSpec::get(*id));
+            gr.push(dl_gops[j] / r.gops);
+            er.push(r.epb_j_per_bit / dl_epb[j]);
+        }
+        t.row(&[
+            b.name().into(),
+            format!("{:.2}x", stats::mean(&gr)),
+            format!("{}x", paper_gops[i]),
+            format!("{:.2}x", stats::mean(&er)),
+            format!("{}x", paper_epb[i]),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "DiffLight absolute: {:.1} GOPS avg, {} avg",
+        stats::mean(&dl_gops),
+        fmt_si(stats::mean(&dl_epb), "J/bit")
+    );
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the smallest tour of the DiffLight stack.
+//!
+//! 1. Price a diffusion model on the photonic accelerator (simulator).
+//! 2. Load the AOT-compiled UNet and run one real denoise step via PJRT.
+//! 3. Generate one sample end-to-end with the serving coordinator.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use difflight::arch::cost::OptFlags;
+use difflight::coordinator::request::SamplerKind;
+use difflight::coordinator::{Coordinator, EngineConfig};
+use difflight::runtime::Runtime;
+use difflight::sim::Simulator;
+use difflight::util::table::fmt_si;
+use difflight::workload::{ModelId, ModelSpec};
+
+fn main() -> difflight::Result<()> {
+    // --- 1. Simulate Stable Diffusion on the paper-optimal config ---
+    let sim = Simulator::paper_optimal();
+    let spec = ModelSpec::get(ModelId::StableDiffusion);
+    let run = sim.run_model(&spec, OptFlags::ALL);
+    println!("== simulator ==");
+    println!(
+        "{} ({} steps): {} / {} -> {:.1} GOPS, {} per bit",
+        spec.id.name(),
+        spec.timesteps,
+        fmt_si(run.total.latency_s, "s"),
+        fmt_si(run.total.energy_j, "J"),
+        run.gops(),
+        fmt_si(run.epb(), "J"),
+    );
+
+    // --- 2. One raw UNet step through PJRT ---
+    println!("\n== runtime ==");
+    let mut rt = Runtime::open("artifacts")?;
+    println!("platform: {}, weights: {}", rt.platform(), rt.manifest.weights_provenance);
+    let elems = rt.manifest.sample_elems();
+    let exe = rt.denoise(1, true)?;
+    let x = difflight::coordinator::sampler::initial_noise(7, elems);
+    let eps = exe.predict_noise(&x, &[99.0])?;
+    let rms = (eps.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / elems as f64).sqrt();
+    println!("one denoise step: eps RMS = {rms:.4} over {elems} pixels");
+
+    // --- 3. One full generation through the coordinator ---
+    println!("\n== coordinator ==");
+    let mut coord = Coordinator::open(EngineConfig::new("artifacts"))?;
+    coord.submit(42, SamplerKind::Ddim { steps: 10 });
+    let results = coord.run_until_drained()?;
+    let sample = &results[0].sample;
+    let (lo, hi) = sample
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+    println!(
+        "generated 1 sample in {} steps, {:.2}s compute, value range [{lo:.2}, {hi:.2}]",
+        results[0].steps, results[0].compute_s
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT compile path: lower the L2 denoise step to HLO text artifacts.
+
+Python runs ONCE, here. The Rust coordinator (`rust/src/runtime`) loads
+``artifacts/*.hlo.txt`` through the PJRT C API and owns the request path.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts written:
+
+* ``model_w8a8_b{B}.hlo.txt`` — quantized (photonic-datapath) UNet step
+  for each requested batch size;
+* ``model_fp32_b1.hlo.txt``   — f32 reference step;
+* ``manifest.json``           — shapes, UNet config, and the DDPM
+  noise schedule the Rust sampler needs (betas/alphas/alpha_bars);
+* weights come from ``artifacts/params.npz`` when `train.py` has run,
+  else from a seeded random init (recorded in the manifest).
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts] [--batches 1,4]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring).
+
+    CRITICAL: the default printer elides large constants as ``{...}``,
+    which XLA's text *parser* silently reads back as zeros — the model
+    weights would vanish. ``print_large_constants`` keeps them verbatim.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's text parser predates jax's newer metadata
+    # attributes (source_end_line etc.) — keep metadata out of the text.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived printing"
+    return text
+
+
+def ddpm_schedule(timesteps: int):
+    """Linear-β DDPM schedule (Ho et al.), as plain floats for JSON."""
+    betas = np.linspace(1e-4, 0.02, timesteps, dtype=np.float64)
+    alphas = 1.0 - betas
+    alpha_bars = np.cumprod(alphas)
+    return {
+        "timesteps": timesteps,
+        "betas": betas.tolist(),
+        "alphas": alphas.tolist(),
+        "alpha_bars": alpha_bars.tolist(),
+    }
+
+
+def load_or_init_params(cfg: M.UNetConfig, artifacts_dir: str):
+    """Trained weights if available, else seeded random init."""
+    path = os.path.join(artifacts_dir, "params.npz")
+    if os.path.exists(path):
+        flat = dict(np.load(path))
+        params = unflatten_params(flat)
+        return params, "trained"
+    params = M.init_params(jax.random.PRNGKey(42), cfg)
+    return params, "random-init(seed=42)"
+
+
+def flatten_params(params, prefix=""):
+    out = {}
+    for k, v in params.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten_params(v, key + "/"))
+        else:
+            out[key] = np.asarray(v)
+    return out
+
+
+def unflatten_params(flat):
+    params = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = params
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return params
+
+
+def lower_step(params, cfg: M.UNetConfig, batch: int, quantized: bool) -> str:
+    """Lower one denoise step (weights folded in as constants)."""
+
+    def step(x, t):
+        return M.denoise_step(params, x, t, cfg, quantized=quantized, use_pallas=True)
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, cfg.image_size, cfg.image_size, cfg.in_channels), jnp.float32
+    )
+    t_spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return to_hlo_text(jax.jit(step).lower(x_spec, t_spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batches", default="1,4", help="comma-separated batch sizes for the W8A8 artifact")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.UNetConfig()
+    params, provenance = load_or_init_params(cfg, out_dir)
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    artifacts = {}
+    for b in batches:
+        name = f"model_w8a8_b{b}.hlo.txt"
+        text = lower_step(params, cfg, b, quantized=True)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        artifacts[name] = {"batch": b, "quantized": True, "chars": len(text)}
+        print(f"wrote {name} ({len(text)} chars)")
+
+    name = "model_fp32_b1.hlo.txt"
+    text = lower_step(params, cfg, 1, quantized=False)
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(text)
+    artifacts[name] = {"batch": 1, "quantized": False, "chars": len(text)}
+    print(f"wrote {name} ({len(text)} chars)")
+
+    manifest = {
+        "config": {
+            "image_size": cfg.image_size,
+            "in_channels": cfg.in_channels,
+            "model_channels": cfg.model_channels,
+            "channel_mult": list(cfg.channel_mult),
+            "num_res_blocks": cfg.num_res_blocks,
+            "num_heads": cfg.num_heads,
+            "groups": cfg.groups,
+        },
+        "weights": provenance,
+        "schedule": ddpm_schedule(cfg.timesteps),
+        "artifacts": artifacts,
+        "input_layout": "x: (B,H,W,C) f32; t: (B,) f32; output tuple: (eps,)",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(artifacts)} artifacts, weights={provenance})")
+
+
+if __name__ == "__main__":
+    main()

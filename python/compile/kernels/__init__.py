@@ -1,0 +1,11 @@
+"""L1 Pallas kernels — the photonic hot-spots of the compile path.
+
+All kernels lower with ``interpret=True`` (CPU-PJRT executable HLO); see
+DESIGN.md §Hardware-Adaptation for the photonic→kernel mapping.
+"""
+
+from . import ref  # noqa: F401
+from .attention_head import attention_head, attention_head_quant_ref  # noqa: F401
+from .lse_softmax import lse_softmax  # noqa: F401
+from .photonic_matmul import photonic_matmul, photonic_matmul_codes  # noqa: F401
+from .swish_soa import swish  # noqa: F401

@@ -1,0 +1,98 @@
+"""One attention head as a Pallas kernel (paper Fig. 6, Eq. 3 + Eq. 6).
+
+The head block's seven MR banks map to the kernel's phases:
+
+* banks 1–2: ``Q = X · W_Q``                       (upper path)
+* banks 3–4: ``(Q · W_Kᵀ/√d_k) · Cᵀ``              (Eq. 6 — the √d_k
+  scaling folded into the weight modulation, "reducing the scaling
+  overhead")
+* ECU      : Eq. 4 LSE softmax over each score row
+* banks 5–6: ``V = C · W_V``                       (lower path, runs
+  concurrently on the chip; sequenced here)
+* bank 7   : ``Attn · V``
+
+All operands for one head fit in VMEM for the UNet shapes used here
+(seq ≤ 256 · d ≤ 128 → < 1 MiB), so the kernel runs as a single grid
+step; multi-head models vmap over heads at the L2 layer.
+
+W8A8: the matmul stages quantize both operands at the "DAC boundary"
+exactly like `photonic_matmul` (shared helper), so head numerics match
+the accelerator datapath end to end.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _qmm(a, b):
+    """In-kernel W8A8 matmul with rail splitting (shared contract)."""
+    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-30) / 127.0
+    sb = jnp.maximum(jnp.max(jnp.abs(b)), 1e-30) / 127.0
+    aq = jnp.clip(jnp.rint(a / sa), -127, 127)
+    bq = jnp.clip(jnp.rint(b / sb), -127, 127)
+    b_pos = jnp.maximum(bq, 0.0)
+    b_neg = jnp.maximum(-bq, 0.0)
+    acc = jnp.dot(aq, b_pos, preferred_element_type=jnp.float32) - jnp.dot(
+        aq, b_neg, preferred_element_type=jnp.float32
+    )
+    return acc * (sa * sb)
+
+
+def _kernel(x_ref, c_ref, wq_ref, wk_ref, wv_ref, o_ref, *, quantized: bool):
+    x = x_ref[...]
+    c = c_ref[...]
+    w_q = wq_ref[...]
+    w_k = wk_ref[...]
+    w_v = wv_ref[...]
+    mm = _qmm if quantized else (lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float32))
+    d_k = w_q.shape[-1]
+    q = mm(x, w_q)
+    qwk = mm(q, w_k.T) / jnp.sqrt(jnp.float32(d_k))
+    scores = mm(qwk, c.T)
+    # ECU softmax (Eq. 4 phases).
+    gmax = jnp.max(scores, axis=-1, keepdims=True)
+    shifted = scores - gmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    attn = jnp.exp(shifted - lse)
+    v = mm(c, w_v)
+    o_ref[...] = mm(attn, v)
+
+
+def attention_head(x, w_q, w_k, w_v, ctx=None, quantized: bool = False):
+    """One attention head over ``x`` (optionally cross-attending ``ctx``).
+
+    With ``quantized=False`` this matches ``ref.attention_head_ref`` to
+    f32 tolerance; with ``quantized=True`` every matmul runs the W8A8
+    photonic datapath.
+    """
+    c = x if ctx is None else ctx
+    seq, _d = x.shape
+    d_v = w_v.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_kernel, quantized=quantized),
+        out_shape=jax.ShapeDtypeStruct((seq, d_v), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        c.astype(jnp.float32),
+        w_q.astype(jnp.float32),
+        w_k.astype(jnp.float32),
+        w_v.astype(jnp.float32),
+    )
+
+
+def attention_head_quant_ref(x, w_q, w_k, w_v, ctx=None):
+    """Pure-jnp W8A8 oracle for the quantized head (per-matmul quant)."""
+    c = x if ctx is None else ctx
+    d_k = w_q.shape[-1]
+    q = ref.photonic_matmul_ref(x, w_q)
+    qwk = ref.photonic_matmul_ref(q, w_k.T) / jnp.sqrt(jnp.float32(d_k))
+    scores = ref.photonic_matmul_ref(qwk, c.T)
+    attn = ref.lse_softmax_ref(scores)
+    v = ref.photonic_matmul_ref(c, w_v)
+    return ref.photonic_matmul_ref(attn, v)

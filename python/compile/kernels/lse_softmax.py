@@ -1,0 +1,48 @@
+"""Eq. 4 log-sum-exp softmax as a Pallas kernel (the ECU pipeline).
+
+The paper decomposes softmax into four sub-operations to "better exploit
+the inherent parallelism in silicon photonics" (§III.A):
+
+1. identify γ_max            → comparator tracking as scores stream in;
+2. ln Σ exp(γ_j − γ_max)     → exp LUT + accumulate + ln LUT;
+3. subtract the ln output    → subtractor;
+4. exp of the final value    → exp LUT.
+
+The kernel computes each row's softmax with exactly that phase
+structure. Rows tile across the grid; the row axis stays whole inside a
+block (softmax is a full-row reduction). VMEM per step: 2·br·D f32 —
+for br=8 rows of the longest SD sequence (D=4096) ≈ 256 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]  # (br, D)
+    # Phase 1: γ_max (comparator).
+    gmax = jnp.max(x, axis=-1, keepdims=True)
+    # Phase 2: ln Σ exp(γ − γ_max) (exp LUT → accumulate → ln LUT).
+    shifted = x - gmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    # Phases 3+4: subtract, exp LUT.
+    o_ref[...] = jnp.exp(shifted - lse)
+
+
+def lse_softmax(x, block_rows: int = 8):
+    """Softmax along the last axis of a 2-D array via the Eq. 4 pipeline."""
+    assert x.ndim == 2, "lse_softmax expects (rows, d)"
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    rows_pad = ((rows + br - 1) // br) * br
+    x_p = jnp.pad(x, ((0, rows_pad - rows), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows_pad // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d), jnp.float32),
+        interpret=True,
+    )(x_p.astype(jnp.float32))
+    return out[:rows]

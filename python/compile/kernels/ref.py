@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy and *no* Pallas, quantization tricks, or photonic
+structure. pytest asserts kernel-vs-oracle allclose across hypothesis
+shape/dtype sweeps — the core correctness signal of the compile path
+(DESIGN.md, L1).
+
+The oracles also define the numerical contract shared with the Rust side
+(`rust/src/quant.rs`): symmetric per-tensor int8 with round-half-to-even.
+"""
+
+import jax.numpy as jnp
+
+
+def symmetric_scale(x):
+    """Symmetric per-tensor quantization scale: max|x| / 127 (1 if all-zero)."""
+    max_abs = jnp.max(jnp.abs(x))
+    return jnp.where(max_abs == 0, 1.0, max_abs / 127.0).astype(jnp.float32)
+
+
+def quantize(x):
+    """Quantize to int8 codes (kept in f32) + scale.
+
+    Round-half-to-even (jnp.rint) matches Rust's ``quant::rint``.
+    """
+    scale = symmetric_scale(x)
+    codes = jnp.clip(jnp.rint(x / scale), -127, 127)
+    return codes.astype(jnp.float32), scale
+
+
+def fake_quant(x):
+    """Quantize → dequantize round trip (the W8A8 'fake quant' view)."""
+    codes, scale = quantize(x)
+    return codes * scale
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul — the un-quantized reference."""
+    return jnp.matmul(x, w)
+
+
+def photonic_matmul_ref(x, w):
+    """W8A8 matmul as the photonic datapath computes it.
+
+    The DAC boundary quantizes both operands to int8; the optical MAC
+    accumulates code products at full precision (the analog domain has no
+    8-bit accumulator); the ECU rescales after the ADC.
+    """
+    xq, sx = quantize(x)
+    wq, sw = quantize(w)
+    return jnp.matmul(xq, wq) * (sx * sw)
+
+
+def lse_softmax_ref(x):
+    """Eq. 4 log-sum-exp softmax along the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)
+    return jnp.exp(x - m - jnp.log(s))
+
+
+def swish_ref(x):
+    """swish(x) = x · sigmoid(x) (Eq. 5)."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def attention_head_ref(x, w_q, w_k, w_v, ctx=None):
+    """One attention head, Eq. 3 via the Eq. 6 decomposition.
+
+    ``ctx`` supplies the K/V source for cross-attention (defaults to
+    ``x`` — self-attention).
+    """
+    c = x if ctx is None else ctx
+    d_k = w_q.shape[-1]
+    q = jnp.matmul(x, w_q)
+    # Eq. 6: Q·Kᵀ = (Q·W_Kᵀ)·Cᵀ, with 1/√d_k folded into the weights.
+    qwk = jnp.matmul(q, w_k.T) / jnp.sqrt(jnp.float32(d_k))
+    scores = jnp.matmul(qwk, c.T)
+    attn = lse_softmax_ref(scores)
+    v = jnp.matmul(c, w_v)
+    return jnp.matmul(attn, v)
+
+
+def group_norm_ref(x, gamma, beta, groups, eps=1e-5):
+    """GroupNorm over an (N, H, W, C) tensor."""
+    n, h, w, c = x.shape
+    g = x.reshape(n, h, w, groups, c // groups)
+    mean = jnp.mean(g, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(g, axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) / jnp.sqrt(var + eps)
+    return g.reshape(n, h, w, c) * gamma + beta

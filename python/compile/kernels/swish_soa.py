@@ -1,0 +1,43 @@
+"""SOA swish activation as a Pallas kernel (paper Fig. 5, Eq. 5).
+
+The optical path: the input drives a VCSEL, the SOA stage applies its
+saturating (sigmoid) transfer curve, a photodetector reads sigmoid(x),
+and a microring multiplies x by it on the next waveguide. Functionally:
+``swish(x) = x · σ(x)``.
+
+Elementwise over a flattened view, tiled in lanes-of-36 batches
+(`LANES`), mirroring the 36 parallel SOA lanes of the activation block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parallel SOA lanes in the activation block (= WDM channel count).
+LANES = 36
+# Elements per grid step (lane batch × an unroll factor for speed).
+BLOCK = LANES * 32
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # VCSEL → SOA sigmoid → PD → multiplier MR.
+    sig = 1.0 / (1.0 + jnp.exp(-x))
+    o_ref[...] = x * sig
+
+
+def swish(x):
+    """swish over an arbitrary-shape array (flattened internally)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    x_p = jnp.pad(flat, (0, n_pad - n))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(x_p)
+    return out[:n].reshape(x.shape)

@@ -1,0 +1,302 @@
+"""L2 — the diffusion UNet in JAX, built on the L1 photonic kernels.
+
+A small DDPM UNet with exactly the block structure DiffLight accelerates
+(paper §III.A): conv + GroupNorm + swish residual blocks with timestep
+embedding, self-attention at the bottleneck, skip connections, and
+transposed-convolution upsampling in the decoder (zero-insertion — the
+target of the paper's sparsity-aware dataflow).
+
+Two numerical paths share one set of weights:
+
+* ``quantized=False`` — plain f32 (training / reference);
+* ``quantized=True``  — every matmul runs the W8A8 photonic datapath
+  (DAC-quantized codes, positive/negative rails, ECU rescale).
+
+Two backend modes:
+
+* ``use_pallas=True``  — matmuls/activations through the L1 Pallas
+  kernels (interpret mode; used for the AOT artifacts);
+* ``use_pallas=False`` — the pure-jnp oracles (bit-compatible quantizer;
+  used for fast training).
+
+`denoise_step` is the function AOT-lowered to HLO and served by the Rust
+coordinator; Python never runs at serve time.
+"""
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_head, photonic_matmul, swish
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    """Tiny-UNet hyper-parameters (fits interpret-mode compile times)."""
+
+    image_size: int = 16
+    in_channels: int = 1
+    model_channels: int = 32
+    channel_mult: tuple = (1, 2)
+    num_res_blocks: int = 1
+    num_heads: int = 2
+    groups: int = 8
+    timesteps: int = 100
+
+    @property
+    def time_dim(self) -> int:
+        return 4 * self.model_channels
+
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation
+# --------------------------------------------------------------------------
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    w = jax.random.normal(key, (k, k, cin, cout)) / math.sqrt(fan_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _lin_init(key, cin, cout):
+    w = jax.random.normal(key, (cin, cout)) / math.sqrt(cin)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _norm_init(c):
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def _res_block_init(key, cin, cout, time_dim):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    p = {
+        "norm0": _norm_init(cin),
+        "conv0": _conv_init(k0, 3, cin, cout),
+        "temb": _lin_init(k1, time_dim, cout),
+        "norm1": _norm_init(cout),
+        "conv1": _conv_init(k2, 3, cout, cout),
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(k3, 1, cin, cout)
+    return p
+
+
+def _attn_init(key, c, heads):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d_head = c // heads
+    return {
+        "norm": _norm_init(c),
+        "wq": jax.random.normal(kq, (heads, c, d_head)) / math.sqrt(c),
+        "wk": jax.random.normal(kk, (heads, c, d_head)) / math.sqrt(c),
+        "wv": jax.random.normal(kv, (heads, c, d_head)) / math.sqrt(c),
+        "out": _lin_init(ko, c, c),
+    }
+
+
+def init_params(key, cfg: UNetConfig) -> Params:
+    """Initialise all UNet parameters."""
+    keys = iter(jax.random.split(key, 64))
+    ch = cfg.model_channels
+    p: Params = {
+        "time0": _lin_init(next(keys), ch, cfg.time_dim),
+        "time1": _lin_init(next(keys), cfg.time_dim, cfg.time_dim),
+        "in_conv": _conv_init(next(keys), 3, cfg.in_channels, ch),
+    }
+    # Encoder.
+    chans = [ch]
+    cur = ch
+    for li, mult in enumerate(cfg.channel_mult):
+        out = mult * cfg.model_channels
+        for bi in range(cfg.num_res_blocks):
+            p[f"enc{li}_{bi}"] = _res_block_init(next(keys), cur, out, cfg.time_dim)
+            cur = out
+            chans.append(cur)
+        if li + 1 < len(cfg.channel_mult):
+            p[f"down{li}"] = _conv_init(next(keys), 3, cur, cur)
+            chans.append(cur)
+    # Middle (res + attention + res).
+    p["mid0"] = _res_block_init(next(keys), cur, cur, cfg.time_dim)
+    p["mid_attn"] = _attn_init(next(keys), cur, cfg.num_heads)
+    p["mid1"] = _res_block_init(next(keys), cur, cur, cfg.time_dim)
+    # Decoder.
+    for li in reversed(range(len(cfg.channel_mult))):
+        out = cfg.channel_mult[li] * cfg.model_channels
+        for bi in range(cfg.num_res_blocks + 1):
+            skip = chans.pop()
+            p[f"dec{li}_{bi}"] = _res_block_init(next(keys), cur + skip, out, cfg.time_dim)
+            cur = out
+        if li > 0:
+            p[f"up{li}"] = _conv_init(next(keys), 3, cur, cur)
+    assert not chans, "skip stack must be fully consumed"
+    p["out_norm"] = _norm_init(cur)
+    p["out_conv"] = _conv_init(next(keys), 3, cur, cfg.in_channels)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def _matmul(x, w, quantized, use_pallas):
+    if quantized:
+        if use_pallas:
+            return photonic_matmul(x, w)
+        return ref.photonic_matmul_ref(x, w)
+    return jnp.matmul(x, w)
+
+
+def _swish(x, use_pallas):
+    return swish(x) if use_pallas else ref.swish_ref(x)
+
+
+def _conv2d(x, p, quantized, use_pallas, stride=1):
+    """3×3/1×1 'SAME' conv via im2col + (photonic) matmul.
+
+    x: (N, H, W, C). Lowering conv to GEMM mirrors how the ECU maps
+    convolutions onto the MR bank arrays (§IV.C).
+    """
+    w, b = p["w"], p["b"]
+    kh, kw, cin, cout = w.shape
+    n, h, ww_, c = x.shape
+    assert c == cin
+    pad = (kh - 1) // 2
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        (kh, kw),
+        (stride, stride),
+        ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, H', W', C*kh*kw) with channel-major patch layout
+    ho, wo = patches.shape[1], patches.shape[2]
+    cols = patches.reshape(n * ho * wo, cin * kh * kw)
+    # conv_general_dilated_patches emits (C, kh, kw) patch order; match it.
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    y = _matmul(cols, wmat, quantized, use_pallas)
+    return y.reshape(n, ho, wo, cout) + b
+
+
+def _conv2d_transposed(x, p, quantized, use_pallas, stride=2):
+    """Transposed conv via explicit zero-insertion + 'SAME' conv.
+
+    This is the paper's decomposition (§IV.C): expand the input with
+    `stride−1` zeros between samples, then slide a dense kernel. The
+    zero rows of the resulting im2col matrix are what the sparsity-aware
+    dataflow eliminates on-chip.
+    """
+    n, h, w_, c = x.shape
+    up = jnp.zeros((n, h * stride, w_ * stride, c), x.dtype)
+    up = up.at[:, ::stride, ::stride, :].set(x)
+    return _conv2d(up, p, quantized, use_pallas, stride=1)
+
+
+def _group_norm(x, p, groups):
+    return ref.group_norm_ref(x, p["gamma"], p["beta"], groups)
+
+
+def _res_block(x, temb, p, cfg, quantized, use_pallas):
+    h = _group_norm(x, p["norm0"], cfg.groups)
+    h = _swish(h, use_pallas)
+    h = _conv2d(h, p["conv0"], quantized, use_pallas)
+    # Timestep embedding injection.
+    t = _matmul(temb, p["temb"]["w"], quantized, use_pallas) + p["temb"]["b"]
+    h = h + t[:, None, None, :]
+    h = _group_norm(h, p["norm1"], cfg.groups)
+    h = _swish(h, use_pallas)
+    h = _conv2d(h, p["conv1"], quantized, use_pallas)
+    if "skip" in p:
+        x = _conv2d(x, p["skip"], quantized, use_pallas)
+    return x + h
+
+
+def _attention(x, p, cfg, quantized, use_pallas):
+    n, h, w_, c = x.shape
+    seq = h * w_
+    xn = _group_norm(x, p["norm"], cfg.groups).reshape(n, seq, c)
+
+    def one_batch(xb):
+        heads = []
+        for hi in range(cfg.num_heads):
+            if use_pallas:
+                o = attention_head(
+                    xb, p["wq"][hi], p["wk"][hi], p["wv"][hi], quantized=quantized
+                )
+            elif quantized:
+                from .kernels.attention_head import attention_head_quant_ref
+
+                o = attention_head_quant_ref(xb, p["wq"][hi], p["wk"][hi], p["wv"][hi])
+            else:
+                o = ref.attention_head_ref(xb, p["wq"][hi], p["wk"][hi], p["wv"][hi])
+            heads.append(o)
+        concat = jnp.concatenate(heads, axis=-1)
+        return _matmul(concat, p["out"]["w"], quantized, use_pallas) + p["out"]["b"]
+
+    out = jax.vmap(one_batch)(xn)
+    return x + out.reshape(n, h, w_, c)
+
+
+def timestep_embedding(t, dim):
+    """Sinusoidal embedding of (batch,) timesteps → (batch, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def unet_forward(params, x, t, cfg: UNetConfig, quantized=False, use_pallas=True):
+    """Predict ε̂(x_t, t). x: (N, H, W, C); t: (N,) float timesteps."""
+    temb = timestep_embedding(t, cfg.model_channels)
+    temb = _matmul(temb, params["time0"]["w"], quantized, use_pallas) + params["time0"]["b"]
+    temb = _swish(temb, use_pallas)
+    temb = _matmul(temb, params["time1"]["w"], quantized, use_pallas) + params["time1"]["b"]
+
+    h = _conv2d(x, params["in_conv"], quantized, use_pallas)
+    skips = [h]
+    cur = h
+    for li in range(len(cfg.channel_mult)):
+        for bi in range(cfg.num_res_blocks):
+            cur = _res_block(cur, temb, params[f"enc{li}_{bi}"], cfg, quantized, use_pallas)
+            skips.append(cur)
+        if li + 1 < len(cfg.channel_mult):
+            cur = _conv2d(cur, params[f"down{li}"], quantized, use_pallas, stride=2)
+            skips.append(cur)
+
+    cur = _res_block(cur, temb, params["mid0"], cfg, quantized, use_pallas)
+    cur = _attention(cur, params["mid_attn"], cfg, quantized, use_pallas)
+    cur = _res_block(cur, temb, params["mid1"], cfg, quantized, use_pallas)
+
+    for li in reversed(range(len(cfg.channel_mult))):
+        for bi in range(cfg.num_res_blocks + 1):
+            skip = skips.pop()
+            cur = _res_block(
+                jnp.concatenate([cur, skip], axis=-1),
+                temb,
+                params[f"dec{li}_{bi}"],
+                cfg,
+                quantized,
+                use_pallas,
+            )
+        if li > 0:
+            cur = _conv2d_transposed(cur, params[f"up{li}"], quantized, use_pallas)
+    assert not skips
+
+    cur = _group_norm(cur, params["out_norm"], cfg.groups)
+    cur = _swish(cur, use_pallas)
+    return _conv2d(cur, params["out_conv"], quantized, use_pallas)
+
+
+def denoise_step(params, x, t, cfg: UNetConfig, quantized=True, use_pallas=True):
+    """The AOT entry point: one ε-prediction (the per-timestep UNet call).
+
+    The DDPM/DDIM update itself runs in the Rust coordinator (L3), which
+    owns the timestep loop; this function is pure per-step compute.
+    """
+    return (unet_forward(params, x, t, cfg, quantized, use_pallas),)

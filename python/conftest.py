@@ -1,0 +1,7 @@
+"""Ensure `compile.*` imports resolve when pytest runs from the repo root
+(`pytest python/tests/`) as well as from `python/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

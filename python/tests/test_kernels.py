@@ -1,0 +1,212 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and value ranges); assert_allclose against
+ref.py is the core correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_head,
+    lse_softmax,
+    photonic_matmul,
+    photonic_matmul_codes,
+    ref,
+    swish,
+)
+from compile.kernels.attention_head import attention_head_quant_ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=2.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 150),
+    n=st.integers(1, 80),
+)
+def test_photonic_matmul_matches_ref(m, k, n):
+    x = rand(m * 7919 + k, (m, k))
+    w = rand(n * 104729 + k, (k, n))
+    got = photonic_matmul(x, w)
+    want = ref.photonic_matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 40), k=st.integers(1, 100), n=st.integers(1, 40))
+def test_photonic_matmul_close_to_fp32(m, k, n):
+    """W8A8 error stays small relative to the f32 product."""
+    x = rand(m + 1, (m, k), scale=1.0)
+    w = rand(n + 2, (k, n), scale=1.0)
+    got = photonic_matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    err = float(jnp.max(jnp.abs(got - want))) / scale
+    assert err < 0.06, f"relative W8A8 error {err}"
+
+
+def test_matmul_codes_zero_input():
+    x = jnp.zeros((8, 36))
+    w = jnp.zeros((36, 8))
+    np.testing.assert_array_equal(photonic_matmul_codes(x, w), jnp.zeros((8, 8)))
+
+
+def test_matmul_k_exceeds_waveguide_segments():
+    """K > 36 forces multi-segment accumulation (multiple optical passes)."""
+    x = rand(11, (16, 123))
+    w = rand(13, (123, 16))
+    np.testing.assert_allclose(
+        photonic_matmul(x, w), ref.photonic_matmul_ref(x, w), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_matmul_identity_codes():
+    eye = jnp.eye(36) * 100.0
+    x = jnp.round(rand(5, (10, 36), scale=20.0))
+    got = photonic_matmul(x, eye)
+    np.testing.assert_allclose(got, ref.photonic_matmul_ref(x, eye), rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------- softmax
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 33), d=st.integers(1, 200))
+def test_lse_softmax_matches_ref(rows, d):
+    x = rand(rows * 31 + d, (rows, d), scale=4.0)
+    np.testing.assert_allclose(
+        lse_softmax(x), ref.lse_softmax_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_lse_softmax_rows_sum_to_one():
+    x = rand(3, (17, 64), scale=10.0)
+    s = jnp.sum(lse_softmax(x), axis=-1)
+    np.testing.assert_allclose(s, jnp.ones(17), rtol=1e-5)
+
+
+def test_lse_softmax_handles_large_logits():
+    """The γ_max subtraction must prevent overflow (Eq. 4's purpose)."""
+    x = jnp.array([[1000.0, 999.0, 0.0]])
+    out = lse_softmax(x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(jnp.sum(out), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- swish
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 3000))
+def test_swish_matches_ref(n):
+    x = rand(n, (n,), scale=5.0)
+    np.testing.assert_allclose(swish(x), ref.swish_ref(x), rtol=1e-6, atol=1e-6)
+
+
+def test_swish_preserves_shape():
+    x = rand(1, (3, 5, 7), scale=1.0)
+    assert swish(x).shape == (3, 5, 7)
+
+
+def test_swish_known_values():
+    x = jnp.array([0.0, 1.0, -1.0])
+    got = swish(x)
+    np.testing.assert_allclose(got[0], 0.0, atol=1e-7)
+    np.testing.assert_allclose(got[1], 0.7310586, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    seq=st.integers(2, 48),
+    d=st.integers(4, 64),
+    dk=st.integers(2, 24),
+)
+def test_attention_head_fp32_matches_ref(seq, d, dk):
+    x = rand(seq + d, (seq, d), scale=1.0)
+    w_q = rand(1 + dk, (d, dk), scale=0.5)
+    w_k = rand(2 + dk, (d, dk), scale=0.5)
+    w_v = rand(3 + dk, (d, dk), scale=0.5)
+    got = attention_head(x, w_q, w_k, w_v, quantized=False)
+    want = ref.attention_head_ref(x, w_q, w_k, w_v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(seq=st.integers(2, 32), d=st.integers(4, 48))
+def test_attention_head_quantized_matches_quant_ref(seq, d):
+    dk = max(2, d // 4)
+    x = rand(seq, (seq, d), scale=1.0)
+    w_q = rand(11, (d, dk), scale=0.5)
+    w_k = rand(12, (d, dk), scale=0.5)
+    w_v = rand(13, (d, dk), scale=0.5)
+    got = attention_head(x, w_q, w_k, w_v, quantized=True)
+    want = attention_head_quant_ref(x, w_q, w_k, w_v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_cross_context():
+    x = rand(1, (12, 32), scale=1.0)
+    ctx = rand(2, (7, 32), scale=1.0)
+    w_q = rand(3, (32, 8), scale=0.5)
+    w_k = rand(4, (32, 8), scale=0.5)
+    w_v = rand(5, (32, 8), scale=0.5)
+    got = attention_head(x, w_q, w_k, w_v, ctx=ctx, quantized=False)
+    want = ref.attention_head_ref(x, w_q, w_k, w_v, ctx=ctx)
+    assert got.shape == (12, 8)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Attention output must lie in the convex hull of V rows."""
+    x = rand(21, (9, 16), scale=1.0)
+    w = [rand(22 + i, (16, 4), scale=0.5) for i in range(3)]
+    out = attention_head(x, *w, quantized=False)
+    v = ref.matmul_ref(x, w[2])
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4
+
+
+# ---------------------------------------------------------------- quantizer
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 500))
+def test_quantize_round_trip_half_lsb(n):
+    x = rand(n, (n,), scale=3.0)
+    codes, scale = ref.quantize(x)
+    assert bool(jnp.all(jnp.abs(codes) <= 127))
+    back = codes * scale
+    assert float(jnp.max(jnp.abs(back - x))) <= 0.5 * float(scale) + 1e-7
+
+
+def test_quantize_all_zero():
+    codes, scale = ref.quantize(jnp.zeros(10))
+    assert float(scale) == 1.0
+    np.testing.assert_array_equal(codes, jnp.zeros(10))
+
+
+def test_quantize_matches_rust_rint_contract():
+    """Half-to-even rounding, matching rust/src/quant.rs::rint."""
+    halves = jnp.array([0.5, 1.5, 2.5, -0.5, -1.5, 3.5])
+    np.testing.assert_array_equal(
+        jnp.rint(halves), jnp.array([0.0, 2.0, 2.0, -0.0, -2.0, 4.0])
+    )
+    # And the quantizer clamps to ±127.
+    codes, scale = ref.quantize(jnp.array([300.0, -300.0, 1.0]))
+    assert float(scale) == pytest.approx(300.0 / 127.0)
+    assert float(jnp.max(jnp.abs(codes))) == 127.0

@@ -1,0 +1,90 @@
+"""L2 model tests: shapes, path equivalence, quantization error bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.UNetConfig()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.image_size, cfg.image_size, cfg.in_channels))
+    t = jnp.array([3.0, 77.0])
+    return cfg, params, x, t
+
+
+def test_output_shape(setup):
+    cfg, params, x, t = setup
+    eps = M.unet_forward(params, x, t, cfg, quantized=False, use_pallas=False)
+    assert eps.shape == x.shape
+
+
+def test_quantized_ref_close_to_fp32(setup):
+    cfg, params, x, t = setup
+    fp = M.unet_forward(params, x, t, cfg, quantized=False, use_pallas=False)
+    q = M.unet_forward(params, x, t, cfg, quantized=True, use_pallas=False)
+    rel = float(jnp.linalg.norm(q - fp) / (jnp.linalg.norm(fp) + 1e-9))
+    assert rel < 0.25, f"W8A8 relative error {rel}"
+
+
+def test_pallas_path_matches_jnp_path_quantized(setup):
+    """The AOT'd (Pallas) graph must agree with the pure-jnp oracle path."""
+    cfg, params, x, t = setup
+    q_ref = M.unet_forward(params, x, t, cfg, quantized=True, use_pallas=False)
+    q_pal = M.unet_forward(params, x, t, cfg, quantized=True, use_pallas=True)
+    np.testing.assert_allclose(q_pal, q_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_timestep_embedding_varies_with_t(setup):
+    cfg, params, x, _ = setup
+    e1 = M.unet_forward(params, x, jnp.array([0.0, 0.0]), cfg, False, False)
+    e2 = M.unet_forward(params, x, jnp.array([90.0, 90.0]), cfg, False, False)
+    assert float(jnp.max(jnp.abs(e1 - e2))) > 1e-3
+
+
+def test_timestep_embedding_shape():
+    emb = M.timestep_embedding(jnp.array([1.0, 2.0, 3.0]), 32)
+    assert emb.shape == (3, 32)
+    # cos(0·f)=1 for t=0 first half.
+    emb0 = M.timestep_embedding(jnp.array([0.0]), 8)
+    np.testing.assert_allclose(emb0[0, :4], jnp.ones(4))
+    np.testing.assert_allclose(emb0[0, 4:], jnp.zeros(4), atol=1e-7)
+
+
+def test_batch_independence(setup):
+    """Row i of a batch must not influence row j (no cross-batch leakage)."""
+    cfg, params, x, t = setup
+    full = M.unet_forward(params, x, t, cfg, quantized=False, use_pallas=False)
+    solo = M.unet_forward(params, x[:1], t[:1], cfg, quantized=False, use_pallas=False)
+    np.testing.assert_allclose(full[:1], solo, rtol=2e-5, atol=2e-5)
+
+
+def test_transposed_conv_upsamples():
+    p = {"w": jnp.ones((3, 3, 2, 2), jnp.float32) / 18.0, "b": jnp.zeros((2,))}
+    x = jnp.ones((1, 4, 4, 2))
+    y = M._conv2d_transposed(x, p, quantized=False, use_pallas=False)
+    assert y.shape == (1, 8, 8, 2)
+
+
+def test_conv2d_same_padding_shape():
+    p = {"w": jnp.zeros((3, 3, 4, 8), jnp.float32), "b": jnp.zeros((8,))}
+    x = jnp.ones((2, 10, 10, 4))
+    assert M._conv2d(x, p, False, False).shape == (2, 10, 10, 8)
+    assert M._conv2d(x, p, False, False, stride=2).shape == (2, 5, 5, 8)
+
+
+def test_conv2d_matches_lax_conv():
+    """im2col lowering must equal XLA's native convolution."""
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (3, 3, 4, 6))
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 9, 9, 4))
+    p = {"w": w, "b": jnp.zeros((6,))}
+    got = M._conv2d(x, p, quantized=False, use_pallas=False)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((1, 1), (1, 1)), dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

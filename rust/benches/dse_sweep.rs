@@ -1,0 +1,57 @@
+//! DSE reproduction (paper §V): sweep `[Y, N, K, H, L, M]` and verify
+//! the published optimum `[4,12,3,6,6,3]` sits on the GOPS/EPB frontier.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::devices::DeviceParams;
+use difflight::dse::{evaluate, explore, DesignSpace};
+use difflight::arch::ArchConfig;
+use difflight::util::table::fmt_si;
+
+fn main() {
+    harness::section("design-space exploration");
+    let space = DesignSpace::paper();
+    println!(
+        "grid {} -> {} candidates within budget ({} MRs) + fan-out rules",
+        space.grid_size(),
+        space.candidates().len(),
+        space.max_total_mrs
+    );
+    let params = DeviceParams::paper();
+    let t0 = std::time::Instant::now();
+    let points = explore(&space, &params, 8);
+    println!("evaluated {} configurations in {:.2}s", points.len(), t0.elapsed().as_secs_f64());
+
+    println!("\n{:<6} {:<22} {:>8} {:>10} {:>13} {:>11}", "rank", "[Y,N,K,H,L,M]", "MRs", "GOPS", "EPB", "GOPS/EPB");
+    for (i, pt) in points.iter().take(10).enumerate() {
+        println!(
+            "{:<6} {:<22} {:>8} {:>10.1} {:>13} {:>11.3e}",
+            i + 1,
+            format!("{:?}", pt.config.vector()),
+            pt.total_mrs,
+            pt.avg_gops,
+            fmt_si(pt.avg_epb, "J/b"),
+            pt.objective
+        );
+    }
+
+    let rank = points
+        .iter()
+        .position(|pt| pt.config.vector() == difflight::PAPER_OPTIMAL_CONFIG)
+        .expect("paper config must be evaluated");
+    let frac = (rank + 1) as f64 / points.len() as f64;
+    println!(
+        "\npaper optimum [4,12,3,6,6,3]: rank {}/{} (top {:.2}%), objective within {:.1}% of argmax",
+        rank + 1,
+        points.len(),
+        frac * 100.0,
+        100.0 * (1.0 - points[rank].objective / points[0].objective)
+    );
+    assert!(frac < 0.01, "paper config must sit in the top 1% of the space");
+
+    harness::section("timing");
+    harness::bench("evaluate(paper config)", 10, || {
+        harness::black_box(evaluate(ArchConfig::paper_optimal(), &params));
+    });
+}

@@ -1,0 +1,73 @@
+//! Figure 10 reproduction: "EPB comparison across different diffusion
+//! models" — energy-per-bit of DiffLight vs the six platforms.
+//!
+//! Prints the per-model EPB series and the average ratios the paper
+//! quotes: 32.9×, 94.18×, 376×, 67×, 3×, 4.51× lower EPB.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::arch::cost::OptFlags;
+use difflight::baselines::all_baselines;
+use difflight::sim::Simulator;
+use difflight::util::stats;
+use difflight::util::table::fmt_si;
+use difflight::workload::{ModelId, ModelSpec};
+
+const PAPER_RATIOS: [(&str, f64); 6] = [
+    ("CPU", 32.9),
+    ("GPU", 94.18),
+    ("DeepCache", 376.0),
+    ("FPGA_Acc1", 67.0),
+    ("FPGA_Acc2", 3.0),
+    ("PACE", 4.51),
+];
+
+fn main() {
+    harness::section("Figure 10: EPB per model per platform (J/bit)");
+    let sim = Simulator::paper_optimal();
+    let baselines = all_baselines();
+
+    print!("{:<18} {:>14}", "model", "DiffLight");
+    for b in &baselines {
+        print!(" {:>14}", b.name());
+    }
+    println!();
+
+    let mut dl = Vec::new();
+    let mut platform_epb: Vec<Vec<f64>> = vec![Vec::new(); baselines.len()];
+    for id in ModelId::ALL {
+        let spec = ModelSpec::get(id);
+        let run = sim.run_model(&spec, OptFlags::ALL);
+        dl.push(run.epb());
+        print!("{:<18} {:>14}", spec.id.name(), fmt_si(run.epb(), "J"));
+        for (bi, b) in baselines.iter().enumerate() {
+            let r = b.run(&spec);
+            platform_epb[bi].push(r.epb_j_per_bit);
+            print!(" {:>14}", fmt_si(r.epb_j_per_bit, "J"));
+        }
+        println!();
+    }
+
+    harness::section("average EPB ratios, platform / DiffLight (ours vs paper)");
+    for (bi, (name, paper)) in PAPER_RATIOS.iter().enumerate() {
+        let ratios: Vec<f64> = dl
+            .iter()
+            .zip(&platform_epb[bi])
+            .map(|(d, p)| p / d)
+            .collect();
+        let ours = stats::mean(&ratios);
+        println!("{name:<10} ours {ours:8.2}x   paper {paper:>7.2}x");
+        assert!(
+            (ours / paper - 1.0).abs() < 0.25,
+            "{name}: ratio {ours:.2} vs paper {paper}"
+        );
+    }
+    println!("\npaper: \"at least 3x lower EPB ... compared to state-of-the-art\"");
+
+    harness::section("timing");
+    let spec = ModelSpec::get(ModelId::LdmChurches);
+    harness::bench("run_model(LDM1, ALL)", 30, || {
+        harness::black_box(sim.run_model(&spec, OptFlags::ALL));
+    });
+}

@@ -1,0 +1,62 @@
+//! Figure 8 reproduction: "Energy improvements with dataflow and
+//! scheduling optimizations."
+//!
+//! Regenerates the normalized per-model energy bars for Baseline,
+//! S/W Optimized (sparse dataflow), Pipelined, DAC Sharing, and the
+//! combination, and checks the paper's headline: combined optimizations
+//! ≈ 3× lower energy on average.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::arch::cost::OptFlags;
+use difflight::sim::Simulator;
+use difflight::util::stats;
+use difflight::workload::{ModelId, ModelSpec};
+
+fn main() {
+    harness::section("Figure 8: normalized energy vs optimizations");
+    let sim = Simulator::paper_optimal();
+    let sweep = OptFlags::figure8_sweep();
+
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>11} {:>8}",
+        "model", "Baseline", "S/W Opt", "Pipelined", "DAC Sharing", "All"
+    );
+    let mut combined = Vec::new();
+    for id in ModelId::ALL {
+        let spec = ModelSpec::get(id);
+        let trace = spec.trace();
+        let base = sim.step_cost(&trace, OptFlags::BASELINE).energy_j;
+        let mut cells = Vec::new();
+        for (_, opts) in sweep {
+            let e = sim.step_cost(&trace, opts).energy_j;
+            cells.push(e / base);
+            if opts == OptFlags::ALL {
+                combined.push(base / e);
+            }
+        }
+        println!(
+            "{:<18} {:>10.3} {:>10.3} {:>10.3} {:>11.3} {:>8.3}",
+            spec.id.name(),
+            cells[0],
+            cells[1],
+            cells[2],
+            cells[3],
+            cells[4]
+        );
+    }
+    let avg = stats::mean(&combined);
+    println!("\ncombined-optimization energy reduction: {avg:.2}x average");
+    println!("paper: \"on average ... result in a 3x reduction in normalized energy\"");
+    assert!(
+        (2.0..4.5).contains(&avg),
+        "combined reduction {avg:.2}x strays from the paper's ~3x"
+    );
+
+    harness::section("timing");
+    let trace = ModelSpec::get(ModelId::StableDiffusion).trace();
+    harness::bench("step_cost(SD, ALL)", 50, || {
+        harness::black_box(sim.step_cost(&trace, OptFlags::ALL));
+    });
+}

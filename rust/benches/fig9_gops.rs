@@ -1,0 +1,77 @@
+//! Figure 9 reproduction: "GOPS comparison across different diffusion
+//! models" — DiffLight vs CPU, GPU, DeepCache, FPGA_Acc1, FPGA_Acc2,
+//! PACE on all four Table I workloads.
+//!
+//! Prints the per-model GOPS series (the figure's grouped bars) and the
+//! average improvement ratios the paper quotes: 59.5×, 51.89×, 192×,
+//! 572×, 94×, 5.5×.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::arch::cost::OptFlags;
+use difflight::baselines::all_baselines;
+use difflight::sim::Simulator;
+use difflight::util::stats;
+use difflight::workload::{ModelId, ModelSpec};
+
+const PAPER_RATIOS: [(&str, f64); 6] = [
+    ("CPU", 59.5),
+    ("GPU", 51.89),
+    ("DeepCache", 192.0),
+    ("FPGA_Acc1", 572.0),
+    ("FPGA_Acc2", 94.0),
+    ("PACE", 5.5),
+];
+
+fn main() {
+    harness::section("Figure 9: GOPS per model per platform");
+    let sim = Simulator::paper_optimal();
+    let baselines = all_baselines();
+
+    // Header.
+    print!("{:<18} {:>12}", "model", "DiffLight");
+    for b in &baselines {
+        print!(" {:>12}", b.name());
+    }
+    println!();
+
+    let mut dl = Vec::new();
+    let mut platform_gops: Vec<Vec<f64>> = vec![Vec::new(); baselines.len()];
+    for id in ModelId::ALL {
+        let spec = ModelSpec::get(id);
+        let run = sim.run_model(&spec, OptFlags::ALL);
+        dl.push(run.gops());
+        print!("{:<18} {:>12.1}", spec.id.name(), run.gops());
+        for (bi, b) in baselines.iter().enumerate() {
+            let r = b.run(&spec);
+            platform_gops[bi].push(r.gops);
+            print!(" {:>12.2}", r.gops);
+        }
+        println!();
+    }
+
+    harness::section("average improvement ratios (ours vs paper)");
+    for (bi, (name, paper)) in PAPER_RATIOS.iter().enumerate() {
+        let ratios: Vec<f64> = dl
+            .iter()
+            .zip(&platform_gops[bi])
+            .map(|(d, p)| d / p)
+            .collect();
+        let ours = stats::mean(&ratios);
+        println!("{name:<10} ours {ours:8.2}x   paper {paper:>7.2}x");
+        assert!(
+            (ours / paper - 1.0).abs() < 0.25,
+            "{name}: ratio {ours:.2} vs paper {paper}"
+        );
+    }
+
+    harness::section("timing");
+    let spec = ModelSpec::get(ModelId::StableDiffusion);
+    harness::bench("run_model(SD, ALL)", 30, || {
+        harness::black_box(sim.run_model(&spec, OptFlags::ALL));
+    });
+    harness::bench("baseline GPU run(SD)", 100, || {
+        harness::black_box(baselines[1].run(&spec));
+    });
+}

@@ -1,0 +1,79 @@
+//! Shared bench harness (criterion is not in the vendored crate set).
+//!
+//! Provides warmup + repeated timing with mean/stddev/min reporting, so
+//! every paper-figure bench both *regenerates the figure's data* and
+//! *times the code that produces it*.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:40} {:4} iters  mean {:>12}  min {:>12}  (+/- {:.1}%)",
+            self.name,
+            self.iters,
+            fmt_t(self.mean_s),
+            fmt_t(self.min_s),
+            if self.mean_s > 0.0 { 100.0 * self.stddev_s / self.mean_s } else { 0.0 },
+        );
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with warmup; returns the summary (and prints it).
+pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    // Warmup: 1/4 of iters, at least one.
+    for _ in 0..(iters / 4).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(2) as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    result.report();
+    result
+}
+
+/// A guard against the optimizer deleting benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section banner.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

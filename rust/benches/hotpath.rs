@@ -1,0 +1,105 @@
+//! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Times the L3 components that sit on critical paths: simulator layer
+//! costing, trace construction, sampler arithmetic, batcher churn, JSON
+//! reporting, the DSE thread-pool sweep — and, when `artifacts/` exists,
+//! the real PJRT denoise step (the serving hot path).
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::arch::cost::OptFlags;
+use difflight::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use difflight::coordinator::request::{GenerationRequest, SamplerKind};
+use difflight::coordinator::sampler::{initial_noise, DdpmSampler, Sampler};
+use difflight::runtime::manifest::NoiseSchedule;
+use difflight::runtime::Runtime;
+use difflight::sim::Simulator;
+use difflight::util::rng::XorShift;
+use difflight::util::threadpool::ThreadPool;
+use difflight::workload::{ModelId, ModelSpec};
+use std::time::{Duration, Instant};
+
+fn main() {
+    harness::section("L3 simulator hot path");
+    let sim = Simulator::paper_optimal();
+    let sd_trace = ModelSpec::get(ModelId::StableDiffusion).trace();
+    let ddpm_trace = ModelSpec::get(ModelId::DdpmCifar10).trace();
+    harness::bench("trace build (SD)", 50, || {
+        harness::black_box(ModelSpec::get(ModelId::StableDiffusion).trace());
+    });
+    harness::bench("step_cost SD (ALL)", 100, || {
+        harness::black_box(sim.step_cost(&sd_trace, OptFlags::ALL));
+    });
+    harness::bench("step_cost DDPM (BASELINE)", 100, || {
+        harness::black_box(sim.step_cost(&ddpm_trace, OptFlags::BASELINE));
+    });
+
+    harness::section("coordinator primitives");
+    let schedule = NoiseSchedule::linear(1000);
+    let sampler = DdpmSampler::new(schedule);
+    let mut x = initial_noise(3, 256 * 64);
+    let eps = initial_noise(4, 256 * 64);
+    let mut rng = XorShift::new(9);
+    harness::bench("ddpm sampler step (16k elems)", 200, || {
+        sampler.step(500, &mut x, &eps, &mut rng);
+    });
+    harness::bench("initial_noise (16k elems)", 200, || {
+        harness::black_box(initial_noise(11, 256 * 64));
+    });
+    harness::bench("batcher push+form (256 reqs)", 100, || {
+        let mut b = DynamicBatcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(0),
+        });
+        for i in 0..256 {
+            b.push(GenerationRequest::new(i, i, SamplerKind::Ddpm));
+        }
+        let now = Instant::now();
+        while harness::black_box(b.try_form(now)).is_some() {}
+    });
+
+    harness::section("parallel sweep infrastructure");
+    let pool = ThreadPool::new(8);
+    harness::bench("threadpool map 64 sim runs", 5, || {
+        let specs: Vec<ModelId> = (0..64).map(|i| ModelId::ALL[i % 4]).collect();
+        // §Perf: simulator construction hoisted out of the per-item
+        // closure (it is cheap but not free; the sweep reuses one).
+        let sim = Simulator::paper_optimal();
+        let out = pool.map(specs, move |id| {
+            sim.run_model(&ModelSpec::get(id), OptFlags::ALL).gops()
+        });
+        harness::black_box(out);
+    });
+
+    harness::section("PJRT serving hot path (needs artifacts/)");
+    match Runtime::open("artifacts") {
+        Ok(mut rt) => {
+            let elems = rt.manifest.sample_elems();
+            let compile_t0 = Instant::now();
+            let _ = rt.denoise(1, true).expect("compile b1");
+            println!("compile w8a8 b1: {:.2}s (one-time)", compile_t0.elapsed().as_secs_f64());
+            let x = initial_noise(3, elems);
+            {
+                let exe = rt.denoise(1, true).unwrap();
+                harness::bench("UNet step w8a8 b1", 5, || {
+                    harness::black_box(exe.predict_noise(&x, &[50.0]).unwrap());
+                });
+            }
+            if rt.manifest.quantized_batches().contains(&4) {
+                let compile_t0 = Instant::now();
+                let _ = rt.denoise(4, true).expect("compile b4");
+                println!(
+                    "compile w8a8 b4: {:.2}s (one-time)",
+                    compile_t0.elapsed().as_secs_f64()
+                );
+                let x4 = initial_noise(5, 4 * elems);
+                let exe4 = rt.denoise(4, true).unwrap();
+                harness::bench("UNet step w8a8 b4", 5, || {
+                    harness::black_box(exe4.predict_noise(&x4, &[50.0; 4]).unwrap());
+                });
+            }
+        }
+        Err(e) => println!("skipped (no artifacts): {e}"),
+    }
+}

@@ -1,0 +1,86 @@
+//! Table I + Table II reproduction.
+//!
+//! Table I: the four evaluated DMs with parameter counts computed from
+//! our workload traces next to the published values, plus the W8A8
+//! quality-drop proxy when `python -m compile.train` has produced it.
+//! Table II: the optoelectronic device constants in use.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::devices::DeviceParams;
+use difflight::util::json::Json;
+use difflight::util::table::fmt_si;
+use difflight::workload::{graph_stats, ModelId, ModelSpec};
+
+fn main() {
+    harness::section("Table I: evaluated DMs, parameters, quality drop");
+    println!(
+        "{:<18} {:<14} {:>14} {:>14} {:>7} {:>10} {:>14}",
+        "model", "dataset", "params(ours)", "params(paper)", "dev", "timesteps", "IS drop(paper)"
+    );
+    for id in ModelId::ALL {
+        let s = ModelSpec::get(id);
+        println!(
+            "{:<18} {:<14} {:>13.2}M {:>13.2}M {:>6.2}% {:>10} {:>13.2}%",
+            s.id.name(),
+            s.id.dataset(),
+            s.computed_params() as f64 / 1e6,
+            s.published_params as f64 / 1e6,
+            s.param_deviation() * 100.0,
+            s.timesteps,
+            s.published_is_drop_pct,
+        );
+        assert!(s.param_deviation() < 0.02, "param count must match Table I");
+    }
+
+    // Our quality-drop proxy (substitution experiment; DESIGN.md).
+    match std::fs::read_to_string("artifacts/table1_proxy.json") {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => {
+                let drop = j.get("quality_drop_pct_proxy").and_then(Json::as_f64);
+                let fp = j.get("mmd2_fp32").and_then(Json::as_f64);
+                let q = j.get("mmd2_w8a8").and_then(Json::as_f64);
+                println!(
+                    "\nW8A8 quality-drop proxy (tiny DDPM, synthetic blobs): \
+                     {:.2}%  [MMD2 fp32 {:.3e} -> w8a8 {:.3e}]",
+                    drop.unwrap_or(f64::NAN),
+                    fp.unwrap_or(f64::NAN),
+                    q.unwrap_or(f64::NAN)
+                );
+                println!("paper Table I IS drops: 0.44% / 0.43% / 5.26% / 6.66%");
+            }
+            Err(e) => println!("\n(table1_proxy.json unparsable: {e})"),
+        },
+        Err(_) => println!(
+            "\n(no artifacts/table1_proxy.json — run `make train` for the W8A8 \
+             quality-drop proxy)"
+        ),
+    }
+
+    harness::section("Table II: optoelectronic device parameters");
+    let p = DeviceParams::paper();
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("EO Tuning", p.eo_tuning_latency_s, p.eo_tuning_power_w),
+        ("TO Tuning (per FSR)", p.to_tuning_latency_s, p.to_tuning_power_w_per_fsr),
+        ("VCSEL", p.vcsel_latency_s, p.vcsel_power_w),
+        ("Photodetector", p.pd_latency_s, p.pd_power_w),
+        ("SOA", p.soa_latency_s, p.soa_power_w),
+        ("DAC (8-bit)", p.dac_latency_s, p.dac_power_w),
+        ("ADC (8-bit)", p.adc_latency_s, p.adc_power_w),
+        ("Comparator", p.comparator_latency_s, p.comparator_power_w),
+        ("Subtractor", p.subtractor_latency_s, p.subtractor_power_w),
+        ("LUT", p.lut_latency_s, p.lut_power_w),
+    ];
+    println!("{:<22} {:>12} {:>12}", "device", "latency", "power");
+    for (name, lat, pow) in rows {
+        println!("{:<22} {:>12} {:>12}", name, fmt_si(lat, "s"), fmt_si(pow, "W"));
+    }
+
+    harness::section("timing");
+    harness::bench("trace build + stats (all 4 models)", 20, || {
+        for id in ModelId::ALL {
+            harness::black_box(graph_stats(&ModelSpec::get(id).trace()));
+        }
+    });
+}

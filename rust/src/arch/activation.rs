@@ -1,0 +1,136 @@
+//! Activation block (paper §IV.B.2, Fig. 5) — SOA-based swish.
+//!
+//! The Residual unit has one activation block shared by its `Y` conv/norm
+//! blocks. Elements stream through `wavelengths` parallel SOA lanes; each
+//! element traverses VCSEL → SOA sigmoid → PD → multiplier-MR → PD. The
+//! residual skip-connection add that follows activation layers uses
+//! coherent photonic summation and is priced here too.
+
+use crate::devices::soa::SwishBlock;
+use crate::devices::DeviceParams;
+
+use super::cost::{Cost, OptFlags};
+
+/// The SOA activation block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActivationBlock {
+    /// Parallel SOA lanes (= WDM channel count of the unit).
+    pub lanes: usize,
+}
+
+impl ActivationBlock {
+    pub fn new(lanes: usize) -> Self {
+        assert!(lanes > 0);
+        Self { lanes }
+    }
+
+    /// Price a swish over `elements` values.
+    ///
+    /// Unpipelined, batches of `lanes` elements traverse the full serial
+    /// optical path; pipelined, the stages overlap and the block retires
+    /// one batch per slowest-stage interval (the multiplier-MR EO retune).
+    pub fn swish_cost(&self, elements: usize, p: &DeviceParams, opts: OptFlags) -> Cost {
+        if elements == 0 {
+            return Cost::ZERO;
+        }
+        let swish = SwishBlock::new(p);
+        let batches = elements.div_ceil(self.lanes) as u64;
+        let serial = swish.latency_s();
+        let latency = if opts.pipelined {
+            // Slowest stage: the EO retune of the multiplier MR.
+            let stage = p.eo_tuning_latency_s + p.dac_latency_s;
+            serial + batches.saturating_sub(1) as f64 * stage
+        } else {
+            batches as f64 * serial
+        };
+        // Dynamic energy per element + SOA/VCSEL lane bias over runtime.
+        let dynamic = elements as f64 * swish.energy_j();
+        let bias = self.lanes as f64 * (p.soa_power_w + p.vcsel_power_w) * latency;
+        Cost {
+            latency_s: latency,
+            energy_j: dynamic + bias,
+            // swish ≈ 2 ops (sigmoid lookup-equivalent + multiply).
+            ops: 2 * elements as u64,
+            passes: batches,
+        }
+    }
+
+    /// Price a residual (skip-connection) add over `elements` values via
+    /// coherent summation: both operands drive same-wavelength VCSELs and
+    /// sum on a shared waveguide into a PD (§III.C, §IV.B.2).
+    pub fn residual_add_cost(&self, elements: usize, p: &DeviceParams) -> Cost {
+        if elements == 0 {
+            return Cost::ZERO;
+        }
+        let batches = elements.div_ceil(self.lanes) as u64;
+        let per_batch_latency = p.vcsel_latency_s + p.pd_latency_s;
+        let per_elem_energy =
+            2.0 * p.vcsel_power_w * p.vcsel_latency_s + p.pd_power_w * p.pd_latency_s;
+        Cost {
+            latency_s: batches as f64 * per_batch_latency,
+            energy_j: elements as f64 * per_elem_energy,
+            ops: elements as u64,
+            passes: batches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> ActivationBlock {
+        ActivationBlock::new(36)
+    }
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn pipelined_swish_is_faster() {
+        let b = block();
+        let base = b.swish_cost(10_000, &p(), OptFlags::BASELINE);
+        let piped = b.swish_cost(10_000, &p(), OptFlags::PIPELINED);
+        assert!(piped.latency_s < base.latency_s);
+        assert_eq!(piped.ops, base.ops);
+    }
+
+    #[test]
+    fn swish_batches_by_lanes() {
+        let b = block();
+        let c = b.swish_cost(100, &p(), OptFlags::BASELINE);
+        assert_eq!(c.passes, 100usize.div_ceil(36) as u64);
+    }
+
+    #[test]
+    fn residual_add_linear_in_elements() {
+        let b = block();
+        let one = b.residual_add_cost(3600, &p());
+        let two = b.residual_add_cost(7200, &p());
+        assert!((two.energy_j / one.energy_j - 2.0).abs() < 1e-9);
+        assert_eq!(two.passes, 2 * one.passes);
+    }
+
+    #[test]
+    fn zero_elements_free() {
+        let b = block();
+        assert_eq!(b.swish_cost(0, &p(), OptFlags::ALL), Cost::ZERO);
+        assert_eq!(b.residual_add_cost(0, &p()), Cost::ZERO);
+    }
+
+    #[test]
+    fn activation_cheaper_than_equivalent_gemm() {
+        // Architectural sanity: a swish over a feature map costs far less
+        // than a conv producing it.
+        use super::super::bank_array::{BankArrayModel, Gemm};
+        let b = block();
+        let act = b.swish_cost(64 * 64 * 128, &p(), OptFlags::ALL);
+        let conv = BankArrayModel::new(3, 12, 36).gemm_cost(
+            &Gemm::dense(64 * 64, 1152, 128),
+            &p(),
+            OptFlags::ALL,
+        );
+        assert!(act.energy_j < conv.energy_j);
+    }
+}

@@ -1,0 +1,228 @@
+//! Attention head block (paper §IV.B.3, Fig. 6).
+//!
+//! Seven MR banks per head:
+//!
+//! * upper path (4 banks, `M × L` geometry): realises
+//!   `Q·Kᵀ = (Q·W_Kᵀ).Xᵀ` (Eq. 6) — two banks generate `Q = X·W_Q`, two
+//!   more modulate `W_Kᵀ/√d_k` and `Xᵀ`; the `√d_k` scaling is folded
+//!   into the weight matrix ("we reduce the scaling overhead").
+//! * lower path (2 banks, `M × N` geometry): generates `V = X·W_V`
+//!   concurrently with the upper path.
+//! * third output bank (`M × L`): modulates the post-softmax attention
+//!   matrix onto `V` to produce the head output.
+//!
+//! Softmax runs in the ECU on the Eq. 4 log-sum-exp decomposition. With
+//! pipelining, γ_max tracking overlaps ADC streaming of the scores, so
+//! softmax is largely hidden behind the score GEMM; without it the four
+//! softmax phases serialise after the scores land.
+//!
+//! Cross-attention (LDM/SD text conditioning) is the same datapath with
+//! K/V derived from the context sequence instead of `X` itself.
+
+use crate::devices::ecu::Ecu;
+use crate::devices::DeviceParams;
+
+use super::bank_array::{BankArrayModel, Gemm};
+use super::cost::{Cost, OptFlags};
+
+/// Dimensions of one (self- or cross-) attention invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttentionDims {
+    /// Query sequence length (tokens / spatial positions).
+    pub seq: usize,
+    /// Model (embedding) dimension feeding the head.
+    pub d_model: usize,
+    /// Per-head Q/K dimension `d_k`.
+    pub d_k: usize,
+    /// Per-head V dimension `d_v`.
+    pub d_v: usize,
+    /// Context embedding width (`= d_model` for self-attention).
+    pub context_dim: usize,
+    /// Context sequence length (`= seq` for self-attention).
+    pub context_seq: usize,
+}
+
+impl AttentionDims {
+    /// Self-attention with `heads` even head splits.
+    pub fn self_attn(seq: usize, d_model: usize, heads: usize) -> Self {
+        let d_head = (d_model / heads).max(1);
+        Self { seq, d_model, d_k: d_head, d_v: d_head, context_dim: d_model, context_seq: seq }
+    }
+
+    /// Cross-attention against a `context_seq × context_dim` context.
+    pub fn cross_attn(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        context_dim: usize,
+        context_seq: usize,
+    ) -> Self {
+        let d_head = (d_model / heads).max(1);
+        Self { seq, d_model, d_k: d_head, d_v: d_head, context_dim, context_seq }
+    }
+}
+
+/// One attention head block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionHeadBlock {
+    /// Upper-path geometry `M × L`.
+    pub qk_array: BankArrayModel,
+    /// Lower-path geometry `M × N` (shares the Residual unit's N).
+    pub v_array: BankArrayModel,
+}
+
+impl AttentionHeadBlock {
+    pub fn new(m: usize, l: usize, n: usize, wavelengths: usize) -> Self {
+        Self {
+            qk_array: BankArrayModel::new(m, l, wavelengths),
+            v_array: BankArrayModel::new(m, n, wavelengths),
+        }
+    }
+
+    /// Price one head over `dims`.
+    pub fn head_cost(&self, dims: &AttentionDims, p: &DeviceParams, opts: OptFlags) -> Cost {
+        let AttentionDims { seq, d_model, d_k, d_v, context_dim, context_seq } = *dims;
+        if seq == 0 || context_seq == 0 {
+            return Cost::ZERO;
+        }
+        // Upper path (Eq. 6): Q = X·W_Q, then Q·W_Kᵀ (scaled), then ·Xᵀ
+        // (or ·Ctxᵀ for cross-attention).
+        let q_gen = self.qk_array.gemm_cost(&Gemm::dense(seq, d_model, d_k), p, opts);
+        let qwk = self.qk_array.gemm_cost(&Gemm::dense(seq, d_k, context_dim), p, opts);
+        let scores =
+            self.qk_array.gemm_cost(&Gemm::dense(seq, context_dim, context_seq), p, opts);
+        let upper = q_gen.then(qwk).then(scores);
+
+        // Lower path: V = Ctx·W_V, concurrent with the upper path.
+        let v_gen =
+            self.v_array.gemm_cost(&Gemm::dense(context_seq, context_dim, d_v), p, opts);
+
+        // Softmax over each of `seq` score rows (length `context_seq`).
+        let ecu = Ecu::new(p);
+        let (sm_lat_row, sm_en_row) = ecu.softmax_cost(context_seq, opts.pipelined);
+        let sm_energy = seq as f64 * sm_en_row;
+        // ~5 ops per element for the 4-phase LSE decomposition.
+        let sm_ops = (5 * seq * context_seq) as u64;
+        let softmax = if opts.pipelined {
+            // γ_max tracking and the LUT pipeline overlap score
+            // generation; only the drain of the final row is exposed.
+            Cost { latency_s: sm_lat_row, energy_j: sm_energy, ops: sm_ops, passes: 0 }
+        } else {
+            Cost {
+                latency_s: seq as f64 * sm_lat_row,
+                energy_j: sm_energy,
+                ops: sm_ops,
+                passes: 0,
+            }
+        };
+
+        // Output: Attn · V on the third output bank.
+        let out = self.qk_array.gemm_cost(&Gemm::dense(seq, context_seq, d_v), p, opts);
+
+        // Upper ∥ lower, then softmax, then output projection.
+        upper.join(v_gen).then(softmax).then(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> AttentionHeadBlock {
+        AttentionHeadBlock::new(3, 6, 12, 36)
+    }
+
+    fn dims() -> AttentionDims {
+        AttentionDims::self_attn(64, 128, 8)
+    }
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn self_attn_constructor() {
+        let d = dims();
+        assert_eq!(d.d_k, 16);
+        assert_eq!(d.context_dim, 128);
+        assert_eq!(d.context_seq, 64);
+    }
+
+    #[test]
+    fn ops_accounting_matches_attention_flops() {
+        let c = block().head_cost(&dims(), &p(), OptFlags::BASELINE);
+        let d = dims();
+        let expected_macs = (d.seq * d.d_model * d.d_k) // Q gen
+            + (d.seq * d.d_k * d.context_dim) // Q·W_Kᵀ
+            + (d.seq * d.context_dim * d.context_seq) // ·Xᵀ
+            + (d.context_seq * d.context_dim * d.d_v) // V gen
+            + (d.seq * d.context_seq * d.d_v); // Attn·V
+        let expected_ops = 2 * expected_macs as u64 + (5 * d.seq * d.context_seq) as u64;
+        assert_eq!(c.ops, expected_ops);
+    }
+
+    #[test]
+    fn pipelining_hides_softmax() {
+        let b = block();
+        let base = b.head_cost(&dims(), &p(), OptFlags::BASELINE);
+        let piped = b.head_cost(&dims(), &p(), OptFlags::PIPELINED);
+        assert!(piped.latency_s < base.latency_s);
+        // Energy also drops (shorter runtime → less bias energy).
+        assert!(piped.energy_j < base.energy_j);
+    }
+
+    #[test]
+    fn zero_seq_is_free() {
+        let mut d = dims();
+        d.seq = 0;
+        assert_eq!(block().head_cost(&d, &p(), OptFlags::ALL), Cost::ZERO);
+    }
+
+    #[test]
+    fn cross_attention_scales_with_context_not_seq_squared() {
+        let b = block();
+        // 4096 queries against a 77-token context must be far cheaper
+        // than 4096×4096 self-attention.
+        let cross = AttentionDims::cross_attn(4096, 320, 8, 768, 77);
+        let selfa = AttentionDims::self_attn(4096, 320, 8);
+        let c_cross = b.head_cost(&cross, &p(), OptFlags::ALL);
+        let c_self = b.head_cost(&selfa, &p(), OptFlags::ALL);
+        assert!(c_cross.latency_s < c_self.latency_s / 2.0);
+    }
+
+    #[test]
+    fn cost_grows_quadratically_with_seq() {
+        let b = block();
+        // In the score-dominated regime (seq ≫ d_model) cost approaches
+        // quadratic in seq.
+        let small = b.head_cost(&AttentionDims::self_attn(128, 128, 8), &p(), OptFlags::ALL);
+        let big = b.head_cost(&AttentionDims::self_attn(512, 128, 8), &p(), OptFlags::ALL);
+        let ratio = big.latency_s / small.latency_s;
+        assert!(ratio > 7.0, "seq scaling too weak: {ratio}");
+    }
+
+    #[test]
+    fn upper_and_lower_paths_overlap() {
+        // The joined cost's latency must be at least each path's latency
+        // but the energy must include both (parallel hardware).
+        let b = block();
+        let d = dims();
+        let pp = p();
+        let opts = OptFlags::BASELINE;
+        let upper = b
+            .qk_array
+            .gemm_cost(&Gemm::dense(d.seq, d.d_model, d.d_k), &pp, opts)
+            .then(b.qk_array.gemm_cost(&Gemm::dense(d.seq, d.d_k, d.context_dim), &pp, opts))
+            .then(b.qk_array.gemm_cost(
+                &Gemm::dense(d.seq, d.context_dim, d.context_seq),
+                &pp,
+                opts,
+            ));
+        let v = b
+            .v_array
+            .gemm_cost(&Gemm::dense(d.context_seq, d.context_dim, d.d_v), &pp, opts);
+        let total = b.head_cost(&d, &pp, opts);
+        assert!(total.latency_s >= upper.latency_s.max(v.latency_s));
+        assert!(total.energy_j > upper.energy_j + v.energy_j * 0.99);
+    }
+}

@@ -1,0 +1,400 @@
+//! Shared cost model for a two-bank MR array (the datapath of Fig. 4,
+//! Fig. 6 and Fig. 7): an activation bank followed by weight banks,
+//! terminated by balanced photodetectors and ADCs.
+//!
+//! ## Dataflow model
+//!
+//! The array has `rows` waveguide pairs, `cols` weight banks per row, and
+//! `wavelengths` WDM channels. The reduction dimension maps across *both*
+//! rows and wavelengths: each of the `cols` output neurons receives the
+//! photocurrents of all `rows` waveguide pairs summed onto one node
+//! (Kirchhoff current accumulation at the balanced photodetectors), so
+//! one *optical pass* computes `cols` dot products of length
+//! `rows × wavelengths` — `rows·cols·λ` MACs — for **one** output
+//! position:
+//!
+//! * **Program phase** — the activation MRs are high-speed modulators
+//!   driven directly by their DACs at conversion rate (the activation
+//!   segment is broadcast to all `cols` weight banks by the splitter
+//!   tree, so `rows × λ × 2` MRs re-drive per pass). Slow EO/TO tuning
+//!   is for the *weight* banks only.
+//! * **Optical phase** — VCSEL modulation, flight through both banks,
+//!   balanced detection. Sub-nanosecond.
+//! * **ADC phase** — one conversion per column (`cols` parallel ADCs on
+//!   the current-summed outputs).
+//! * **ECU phase** — partial-sum accumulate + staging-buffer write, one
+//!   accumulator lane per column.
+//!
+//! Weights are **stationary**: the weight banks reprogram (EO tune, with
+//! sporadic TO escalation) only when the (column-tile, reduction-segment)
+//! pair changes, and each load is amortised over the full `M` sweep of
+//! output positions. DAC sharing applies to the weight banks ("each pair
+//! of columns … shares a single set of DACs") — halving physical
+//! weight-DAC count (and thus converter bias power) at the price of
+//! serialising weight programming by the share degree.
+//!
+//! ## Energy model
+//!
+//! Energy = per-event dynamic energies (DAC/ADC conversions, EO tunes,
+//! amortised TO escalations, ECU ops, buffer accesses) + *bias* power ×
+//! runtime. Bias covers photocurrent receivers, converter front-ends, and
+//! the always-lasing VCSEL array; `CONVERTER_BIAS_FRACTION` of each
+//! physical converter's Table II power is drawn continuously while the
+//! block is active. This is what makes DAC sharing an *energy*
+//! optimization (Fig. 8) even though it slows weight loads.
+
+use crate::devices::DeviceParams;
+
+use super::cost::{Cost, OptFlags};
+
+/// Fraction of a converter's Table II power drawn as static bias while
+/// the block is powered (front-end amplifiers, references, clocking).
+pub const CONVERTER_BIAS_FRACTION: f64 = 0.5;
+
+/// Fraction of weight-load events that escalate to a thermo-optic retune
+/// (large resonance swings or thermal drift; §IV.A "initiated
+/// sporadically").
+pub const TO_ESCALATION_RATE: f64 = 0.02;
+
+/// Geometry + cost model of one two-bank MR array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BankArrayModel {
+    pub rows: usize,
+    pub cols: usize,
+    pub wavelengths: usize,
+}
+
+/// A GEMM `C[M×N_out] = A[M×K_d] · W[K_d×N_out]` to be executed on the
+/// array. `zero_fraction` is the fraction of reduction work that is
+/// structurally zero (transposed-conv zero-insertion); it is only
+/// exploited when `OptFlags::sparse` is on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Gemm {
+    pub m: usize,
+    pub k_d: usize,
+    pub n_out: usize,
+    pub zero_fraction: f64,
+}
+
+impl Gemm {
+    pub fn dense(m: usize, k_d: usize, n_out: usize) -> Self {
+        Self { m, k_d, n_out, zero_fraction: 0.0 }
+    }
+
+    /// MAC count of the *useful* (non-zero) work.
+    pub fn useful_macs(&self) -> u64 {
+        let dense = (self.m as u64) * (self.k_d as u64) * (self.n_out as u64);
+        ((dense as f64) * (1.0 - self.zero_fraction)).round() as u64
+    }
+}
+
+/// Phase latencies of one pass, exposed for tests and the perf harness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassPhases {
+    pub program_s: f64,
+    pub optical_s: f64,
+    pub adc_s: f64,
+    pub ecu_s: f64,
+}
+
+impl PassPhases {
+    /// Serial (unpipelined) pass latency.
+    pub fn serial(&self) -> f64 {
+        self.program_s + self.optical_s + self.adc_s + self.ecu_s
+    }
+
+    /// Steady-state pipelined pass latency (slowest stage).
+    pub fn pipelined(&self) -> f64 {
+        self.program_s.max(self.optical_s + self.adc_s).max(self.ecu_s)
+    }
+}
+
+impl BankArrayModel {
+    pub fn new(rows: usize, cols: usize, wavelengths: usize) -> Self {
+        assert!(rows > 0 && cols > 0 && wavelengths > 0);
+        Self { rows, cols, wavelengths }
+    }
+
+    /// MACs one pass performs.
+    pub fn macs_per_pass(&self) -> u64 {
+        (self.rows * self.cols * self.wavelengths) as u64
+    }
+
+    /// Reduction (dot-product) length of one pass.
+    pub fn reduction_length(&self) -> usize {
+        self.rows * self.wavelengths
+    }
+
+    /// Activation MR count (pos+neg rails).
+    pub fn activation_mrs(&self) -> usize {
+        self.rows * self.wavelengths * 2
+    }
+
+    /// Weight MR count (pos+neg rails).
+    pub fn weight_mrs(&self) -> usize {
+        self.rows * self.cols * self.wavelengths * 2
+    }
+
+    /// Physical weight DAC count under the sharing policy.
+    pub fn weight_dacs(&self, dac_sharing: bool) -> usize {
+        if dac_sharing {
+            self.weight_mrs().div_ceil(2)
+        } else {
+            self.weight_mrs()
+        }
+    }
+
+    /// Per-pass phase latencies.
+    pub fn phases(&self, p: &DeviceParams) -> PassPhases {
+        let buffer = crate::devices::ecu::staging_buffer();
+        PassPhases {
+            // Activation modulators re-drive at DAC conversion rate.
+            program_s: p.dac_latency_s,
+            optical_s: p.vcsel_latency_s + p.pd_latency_s,
+            adc_s: p.adc_latency_s,
+            // One accumulate + buffer write per column lane (parallel).
+            ecu_s: p.subtractor_latency_s + buffer.latency_s,
+        }
+    }
+
+    /// Static bias power of the array while active (W).
+    pub fn bias_power_w(&self, p: &DeviceParams, opts: OptFlags) -> f64 {
+        let act_dacs = self.activation_mrs() as f64;
+        let w_dacs = self.weight_dacs(opts.dac_sharing) as f64;
+        // One ADC per column (current-summed output node).
+        let adcs = self.cols as f64;
+        let converter_bias = CONVERTER_BIAS_FRACTION
+            * (act_dacs * p.dac_power_w + w_dacs * p.dac_power_w + adcs * p.adc_power_w);
+        // One shared VCSEL array per block (reuse strategy, §IV).
+        let vcsel = self.wavelengths as f64 * p.vcsel_power_w;
+        // BPD receiver bias: two arms per (row, col).
+        let pd = (self.rows * self.cols * 2) as f64 * p.pd_power_w;
+        let buffer_leak = crate::devices::ecu::staging_buffer().leakage_w;
+        converter_bias + vcsel + pd + buffer_leak
+    }
+
+    /// Dynamic energy of one pass (J): activation re-drive + detection +
+    /// conversion + ECU accumulate.
+    pub fn pass_dynamic_energy_j(&self, p: &DeviceParams) -> f64 {
+        let buffer = crate::devices::ecu::staging_buffer();
+        // High-speed activation modulators: one DAC conversion each.
+        let act = self.activation_mrs() as f64 * p.dac_energy_j();
+        let adc = self.cols as f64 * p.adc_energy_j();
+        let ecu = self.cols as f64
+            * (p.subtractor_power_w * p.subtractor_latency_s + buffer.access_energy_j(1));
+        act + adc + ecu
+    }
+
+    /// Latency and dynamic energy of one weight-bank load.
+    pub fn weight_load_cost(&self, p: &DeviceParams, opts: OptFlags) -> (f64, f64) {
+        let share = if opts.dac_sharing { 2.0 } else { 1.0 };
+        // All weight MRs program in parallel through their DACs; sharing
+        // serialises column pairs.
+        let eo_latency = share * (p.dac_latency_s + p.eo_tuning_latency_s);
+        // Sporadic TO escalation, amortised.
+        let latency = eo_latency + TO_ESCALATION_RATE * p.to_tuning_latency_s;
+        let energy = self.weight_mrs() as f64 * (p.dac_energy_j() + p.eo_tune_energy_j())
+            + TO_ESCALATION_RATE
+                * p.to_tuning_power_w_per_fsr
+                * 0.5 // mean normalized retune distance
+                * p.to_tuning_latency_s;
+        (latency, energy)
+    }
+
+    /// Cost of executing `gemm` on this array under `opts`.
+    pub fn gemm_cost(&self, gemm: &Gemm, p: &DeviceParams, opts: OptFlags) -> Cost {
+        if gemm.m == 0 || gemm.k_d == 0 || gemm.n_out == 0 {
+            return Cost::ZERO;
+        }
+        // Sparsity-aware dataflow: structurally-zero reduction rows are
+        // eliminated before mapping (§IV.C).
+        let k_eff = if opts.sparse {
+            ((gemm.k_d as f64) * (1.0 - gemm.zero_fraction)).ceil().max(1.0) as usize
+        } else {
+            gemm.k_d
+        };
+        // Rows×wavelengths carry the reduction; columns carry output
+        // neurons; passes sweep output positions (M).
+        let n_tiles = gemm.n_out.div_ceil(self.cols) as u64;
+        let k_segs = k_eff.div_ceil(self.reduction_length()) as u64;
+        let passes = gemm.m as u64 * n_tiles * k_segs;
+        let weight_loads = n_tiles * k_segs;
+
+        let phases = self.phases(p);
+        let pass_latency = if opts.pipelined {
+            phases.pipelined()
+        } else {
+            phases.serial()
+        };
+        // Pipeline fill: one serial pass per weight-stationary sweep.
+        let fill = if opts.pipelined {
+            weight_loads as f64 * (phases.serial() - phases.pipelined())
+        } else {
+            0.0
+        };
+        let (wl_latency_raw, wl_energy) = self.weight_load_cost(p, opts);
+        // Intra-block pipelining also overlaps weight-load staging with
+        // the previous tile sweep's tail (the ECU streams the next tile's
+        // DAC codes while the optical sweep drains); roughly half the
+        // EO-tune window stays exposed on the critical path.
+        let wl_latency =
+            if opts.pipelined { 0.5 * wl_latency_raw } else { wl_latency_raw };
+        let latency =
+            passes as f64 * pass_latency + fill + weight_loads as f64 * wl_latency;
+
+        let dynamic = passes as f64 * self.pass_dynamic_energy_j(p)
+            + weight_loads as f64 * wl_energy;
+        let bias = self.bias_power_w(p, opts) * latency;
+
+        // Ops: report *useful* work (the GOPS convention in the paper —
+        // sparsity raises effective throughput because eliminated zero
+        // MACs still count toward the layer's nominal work).
+        let ops = 2 * gemm.useful_macs();
+
+        Cost { latency_s: latency, energy_j: dynamic + bias, ops, passes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn arr() -> BankArrayModel {
+        BankArrayModel::new(3, 12, 36)
+    }
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn macs_per_pass_geometry() {
+        assert_eq!(arr().macs_per_pass(), 3 * 12 * 36);
+        assert_eq!(arr().reduction_length(), 108);
+    }
+
+    #[test]
+    fn pipelined_pass_is_faster() {
+        let phases = arr().phases(&p());
+        assert!(phases.pipelined() < phases.serial());
+        // The ECU accumulate lane (~1.2 ns) sets the pipelined rate for
+        // the Table II constants.
+        assert!((phases.pipelined() - phases.ecu_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dac_sharing_halves_weight_dacs() {
+        let a = arr();
+        assert_eq!(a.weight_dacs(false), 3 * 12 * 36 * 2);
+        assert_eq!(a.weight_dacs(true), 3 * 12 * 36);
+    }
+
+    #[test]
+    fn dac_sharing_reduces_bias_power() {
+        let a = arr();
+        let base = a.bias_power_w(&p(), OptFlags::BASELINE);
+        let shared = a.bias_power_w(&p(), OptFlags::DAC_SHARING);
+        assert!(shared < base);
+        // Weight DACs dominate: expect >25% bias reduction.
+        assert!(shared / base < 0.75, "ratio={}", shared / base);
+    }
+
+    #[test]
+    fn gemm_pass_count() {
+        let a = arr();
+        let g = Gemm::dense(6, 216, 24);
+        let c = a.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        // m=6 × ceil(24/12)=2 × ceil(216/108)=2 → 24 passes.
+        assert_eq!(c.passes, 24);
+        assert_eq!(c.ops, 2 * 6 * 216 * 24);
+    }
+
+    #[test]
+    fn weight_loads_amortized_over_m() {
+        // Same total work, bigger m → relatively fewer weight loads →
+        // better energy per op.
+        let a = arr();
+        let small_m = a.gemm_cost(&Gemm::dense(4, 432, 48), &p(), OptFlags::BASELINE);
+        let large_m = a.gemm_cost(&Gemm::dense(4096, 432, 48), &p(), OptFlags::BASELINE);
+        let epo_small = small_m.energy_j / small_m.ops as f64;
+        let epo_large = large_m.energy_j / large_m.ops as f64;
+        assert!(epo_large < epo_small);
+    }
+
+    #[test]
+    fn sparse_reduces_latency_and_energy_only_with_flag() {
+        let a = arr();
+        let g = Gemm { m: 16, k_d: 864, n_out: 48, zero_fraction: 0.75 };
+        let dense = a.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        let sparse = a.gemm_cost(&g, &p(), OptFlags::SPARSE);
+        assert!(sparse.latency_s < dense.latency_s * 0.6);
+        assert!(sparse.energy_j < dense.energy_j * 0.6);
+        // Useful ops identical — sparsity skips only structural zeros.
+        assert_eq!(sparse.ops, dense.ops);
+    }
+
+    #[test]
+    fn pipelining_reduces_latency_not_ops() {
+        let a = arr();
+        let g = Gemm::dense(64, 144, 48);
+        let base = a.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        let piped = a.gemm_cost(&g, &p(), OptFlags::PIPELINED);
+        assert!(piped.latency_s < base.latency_s);
+        assert_eq!(piped.ops, base.ops);
+        assert_eq!(piped.passes, base.passes);
+    }
+
+    #[test]
+    fn all_opts_compound() {
+        let a = arr();
+        let g = Gemm { m: 64, k_d: 288, n_out: 48, zero_fraction: 0.5 };
+        let base = a.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        let all = a.gemm_cost(&g, &p(), OptFlags::ALL);
+        assert!(all.energy_j < base.energy_j * 0.55, "combined should beat 1.8x");
+        assert!(all.latency_s < base.latency_s);
+    }
+
+    #[test]
+    fn empty_gemm_is_free() {
+        let a = arr();
+        assert_eq!(a.gemm_cost(&Gemm::dense(0, 10, 10), &p(), OptFlags::ALL), Cost::ZERO);
+    }
+
+    #[test]
+    fn cost_monotone_in_dimensions() {
+        forall("gemm cost monotone", 60, |g| {
+            let a = arr();
+            let m = g.usize_in(1, 64);
+            let k = g.usize_in(1, 256);
+            let n = g.usize_in(1, 64);
+            let small = a.gemm_cost(&Gemm::dense(m, k, n), &p(), OptFlags::ALL);
+            let big = a.gemm_cost(&Gemm::dense(m + 8, k + 64, n + 8), &p(), OptFlags::ALL);
+            assert!(big.latency_s >= small.latency_s);
+            assert!(big.energy_j >= small.energy_j);
+            assert!(big.ops > small.ops);
+        });
+    }
+
+    #[test]
+    fn gops_improves_with_pipelining() {
+        let a = arr();
+        let g = Gemm::dense(128, 360, 96);
+        let base = a.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        let piped = a.gemm_cost(&g, &p(), OptFlags::PIPELINED);
+        assert!(piped.gops() > base.gops());
+    }
+
+    #[test]
+    fn deeper_rows_reduce_weight_loads() {
+        // K=3 rows triple the per-pass reduction length vs K=1, cutting
+        // weight-load count ~3× on deep reductions — the scheduling
+        // advantage behind the paper's K=3 pick.
+        let deep = BankArrayModel::new(3, 12, 36);
+        let shallow = BankArrayModel::new(1, 12, 36);
+        let g = Gemm::dense(16, 1080, 24);
+        let c_deep = deep.gemm_cost(&g, &p(), OptFlags::ALL);
+        let c_shallow = shallow.gemm_cost(&g, &p(), OptFlags::ALL);
+        assert!(c_deep.latency_s < c_shallow.latency_s / 2.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! The architectural parameter vector `[Y, N, K, H, L, M]` (paper §IV–V).
+
+use crate::devices::DeviceParams;
+
+/// DiffLight architectural configuration.
+///
+/// * `y` — convolution & normalization blocks in the Residual unit.
+/// * `n` — columns (weight banks) per conv/norm block array (`K × N`).
+/// * `k` — rows (waveguide pairs) per conv/norm block array.
+/// * `h` — attention-head blocks in the MHA unit.
+/// * `l` — columns per attention MR bank array (`M × L`).
+/// * `m` — rows per attention MR bank array.
+/// * `wavelengths` — WDM channels per waveguide (≤ 36 by design rule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArchConfig {
+    pub y: usize,
+    pub n: usize,
+    pub k: usize,
+    pub h: usize,
+    pub l: usize,
+    pub m: usize,
+    pub wavelengths: usize,
+}
+
+impl ArchConfig {
+    /// The paper's DSE optimum `[4, 12, 3, 6, 6, 3]` at 36 wavelengths.
+    pub fn paper_optimal() -> Self {
+        Self { y: 4, n: 12, k: 3, h: 6, l: 6, m: 3, wavelengths: 36 }
+    }
+
+    /// Construct from the `[Y, N, K, H, L, M]` vector.
+    pub fn from_vector(v: [usize; 6], wavelengths: usize) -> Self {
+        Self { y: v[0], n: v[1], k: v[2], h: v[3], l: v[4], m: v[5], wavelengths }
+    }
+
+    /// As the `[Y, N, K, H, L, M]` vector.
+    pub fn vector(&self) -> [usize; 6] {
+        [self.y, self.n, self.k, self.h, self.l, self.m]
+    }
+
+    /// Validate against device design rules.
+    ///
+    /// Two instances of the §V error-free design rule apply:
+    /// * ≤ 36 wavelengths per waveguide (WDM channel count), and
+    /// * ≤ 36 branches per block's VCSEL distribution tree (`K·N` for
+    ///   conv/norm blocks, `M·L` and `M·N` for attention paths) — beyond
+    ///   that the per-branch optical power after the split tree falls
+    ///   under the photodetector sensitivity floor for the Table II
+    ///   VCSEL's output power (see `devices::loss::solve_laser_power`).
+    ///   The paper's optimum saturates this bound: `K·N = M·N = 36`.
+    pub fn validate(&self, params: &DeviceParams) -> crate::Result<()> {
+        for (name, v) in [
+            ("Y", self.y),
+            ("N", self.n),
+            ("K", self.k),
+            ("H", self.h),
+            ("L", self.l),
+            ("M", self.m),
+            ("wavelengths", self.wavelengths),
+        ] {
+            if v == 0 {
+                anyhow::bail!("{name} must be >= 1");
+            }
+        }
+        crate::devices::loss::check_mr_design_rule(self.wavelengths, params)?;
+        for (name, fanout) in [
+            ("conv block K*N", self.k * self.n),
+            ("attention block M*L", self.m * self.l),
+            ("attention V path M*N", self.m * self.n),
+        ] {
+            if fanout > params.max_mrs_per_waveguide {
+                anyhow::bail!(
+                    "{name} fanout {fanout} exceeds the {}-branch distribution-tree \
+                     design rule",
+                    params.max_mrs_per_waveguide
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MR count across all blocks (a silicon-area proxy used as the
+    /// DSE cost regularizer).
+    pub fn total_mrs(&self) -> usize {
+        // Conv/norm blocks: activation banks (K rows) + K×N weight banks,
+        // each λ rings on pos+neg rails; plus broadband norm MRs (K per
+        // block).
+        let conv_block = (self.k + self.k * self.n) * self.wavelengths * 2 + self.k;
+        // Attention head: 7 banks of M×L geometry (paper Fig. 6) — four on
+        // the QK^T path (M×L), two for V (M×N-shaped, counted at L for
+        // area) and one for Attn·V.
+        let attn_block = 7 * self.m * self.l * self.wavelengths * 2;
+        // Linear & add: two M×L bank arrays.
+        let linear_block = 2 * self.m * self.l * self.wavelengths * 2;
+        self.y * conv_block + self.h * attn_block + linear_block
+    }
+}
+
+impl std::fmt::Display for ArchConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[Y={},N={},K={},H={},L={},M={}]@{}λ",
+            self.y, self.n, self.k, self.h, self.l, self.m, self.wavelengths
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_optimal_vector() {
+        let c = ArchConfig::paper_optimal();
+        assert_eq!(c.vector(), [4, 12, 3, 6, 6, 3]);
+        assert_eq!(c.vector(), crate::PAPER_OPTIMAL_CONFIG);
+        assert_eq!(c.wavelengths, 36);
+    }
+
+    #[test]
+    fn validate_accepts_paper_config() {
+        let c = ArchConfig::paper_optimal();
+        assert!(c.validate(&DeviceParams::paper()).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_zero_dims() {
+        let mut c = ArchConfig::paper_optimal();
+        c.y = 0;
+        assert!(c.validate(&DeviceParams::paper()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_too_many_wavelengths() {
+        let mut c = ArchConfig::paper_optimal();
+        c.wavelengths = 64;
+        assert!(c.validate(&DeviceParams::paper()).is_err());
+    }
+
+    #[test]
+    fn round_trip_vector() {
+        let c = ArchConfig::from_vector([2, 8, 4, 3, 5, 6], 18);
+        assert_eq!(c.vector(), [2, 8, 4, 3, 5, 6]);
+        assert_eq!(c.wavelengths, 18);
+    }
+
+    #[test]
+    fn mr_count_scales_with_blocks() {
+        let small = ArchConfig::from_vector([1, 4, 2, 1, 2, 2], 8);
+        let big = ArchConfig::from_vector([2, 4, 2, 1, 2, 2], 8);
+        assert!(big.total_mrs() > small.total_mrs());
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let s = ArchConfig::paper_optimal().to_string();
+        assert!(s.contains("Y=4") && s.contains("36λ"));
+    }
+}

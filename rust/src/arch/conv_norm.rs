@@ -1,0 +1,124 @@
+//! Convolution & normalization block (paper §IV.B.1, Fig. 4).
+//!
+//! Two `K × N` MR bank arrays (activations then weights) terminated by
+//! BPDs, plus a broadband-MR bank implementing (Group)Normalization that
+//! can be bypassed when a layer carries no norm.
+//!
+//! Convolutions reach this block already lowered to GEMM via im2col
+//! (`crate::workload::im2col`); the block itself only prices GEMMs and
+//! the optional normalization pass over its outputs.
+
+use crate::devices::DeviceParams;
+
+use super::bank_array::{BankArrayModel, Gemm};
+use super::cost::{Cost, OptFlags};
+
+/// One convolution & normalization block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvNormBlock {
+    pub array: BankArrayModel,
+}
+
+impl ConvNormBlock {
+    /// Build from the architectural config dimensions `K × N`.
+    pub fn new(k: usize, n: usize, wavelengths: usize) -> Self {
+        Self { array: BankArrayModel::new(k, n, wavelengths) }
+    }
+
+    /// Price a GEMM on this block.
+    pub fn gemm_cost(&self, gemm: &Gemm, p: &DeviceParams, opts: OptFlags) -> Cost {
+        self.array.gemm_cost(gemm, p, opts)
+    }
+
+    /// Price a GroupNorm over `elements` values in `groups` groups.
+    ///
+    /// Statistics (mean/var) are computed in the ECU — two accumulation
+    /// sweeps through `K` adder lanes — then the broadband MRs are retuned
+    /// once per group with the normalization parameters and the data
+    /// re-passes optically (one extra optical traversal, priced as EO
+    /// retune + detection per element batch).
+    pub fn norm_cost(&self, elements: usize, groups: usize, p: &DeviceParams) -> Cost {
+        if elements == 0 {
+            return Cost::ZERO;
+        }
+        let lanes = self.array.rows as f64;
+        let buffer = crate::devices::ecu::staging_buffer();
+        // Two ECU sweeps (Σx, Σx²) + rsqrt via LUT per group.
+        let ecu_latency = 2.0 * elements as f64 * p.subtractor_latency_s / lanes
+            + groups as f64 * p.lut_latency_s;
+        let ecu_energy = 2.0 * elements as f64
+            * (p.subtractor_power_w * p.subtractor_latency_s + buffer.access_energy_j(1))
+            + groups as f64 * p.lut_power_w * p.lut_latency_s;
+        // Broadband MR retune per group + one optical re-pass, batched
+        // through the block's λ·K parallel channels.
+        let channels = (self.array.rows * self.array.wavelengths) as f64;
+        let batches = (elements as f64 / channels).ceil();
+        let optical_latency = groups as f64 * p.eo_tuning_latency_s
+            + batches * (p.vcsel_latency_s + p.pd_latency_s);
+        let optical_energy = groups as f64 * p.eo_tune_energy_j()
+            + elements as f64 * p.pd_power_w * p.pd_latency_s;
+        Cost {
+            latency_s: ecu_latency + optical_latency,
+            energy_j: ecu_energy + optical_energy,
+            // Norm ≈ 4 ops/element (sub, mul, add, scale).
+            ops: 4 * elements as u64,
+            passes: batches as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> ConvNormBlock {
+        ConvNormBlock::new(3, 12, 36)
+    }
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn geometry_matches_config() {
+        let b = block();
+        assert_eq!(b.array.rows, 3);
+        assert_eq!(b.array.cols, 12);
+        assert_eq!(b.array.wavelengths, 36);
+    }
+
+    #[test]
+    fn gemm_delegates_to_array() {
+        let b = block();
+        let g = Gemm::dense(6, 72, 24);
+        assert_eq!(
+            b.gemm_cost(&g, &p(), OptFlags::ALL),
+            b.array.gemm_cost(&g, &p(), OptFlags::ALL)
+        );
+    }
+
+    #[test]
+    fn norm_cost_scales_with_elements() {
+        let b = block();
+        let small = b.norm_cost(1024, 32, &p());
+        let big = b.norm_cost(4096, 32, &p());
+        assert!(big.latency_s > small.latency_s);
+        assert!(big.energy_j > small.energy_j);
+        assert_eq!(big.ops, 4 * 4096);
+    }
+
+    #[test]
+    fn norm_zero_elements_free() {
+        assert_eq!(block().norm_cost(0, 32, &p()), Cost::ZERO);
+    }
+
+    #[test]
+    fn norm_is_cheap_relative_to_conv() {
+        // GroupNorm must not dominate a same-size conv — sanity against
+        // the architecture's premise that MAC work dominates.
+        let b = block();
+        let conv = b.gemm_cost(&Gemm::dense(256, 576, 64), &p(), OptFlags::ALL);
+        let norm = b.norm_cost(256 * 64, 32, &p());
+        assert!(norm.energy_j < conv.energy_j);
+    }
+}

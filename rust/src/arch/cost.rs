@@ -1,0 +1,195 @@
+//! Cost algebra shared by all blocks.
+//!
+//! Every architectural operation reduces to a [`Cost`]: latency (s),
+//! energy (J), and op/pass counts. Costs compose two ways:
+//!
+//! * [`Cost::then`] — sequential: latencies add, energies add.
+//! * [`Cost::join`] — parallel: latency is the max, energies add.
+//!
+//! [`OptFlags`] selects the paper's three dataflow optimizations
+//! (§IV.C): sparsity-aware dataflow, inter/intra-block pipelining, and
+//! DAC sharing. Figure 8 is a sweep over these flags.
+
+/// Dataflow/scheduling optimization toggles (paper §IV.C, Figure 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OptFlags {
+    /// Sparsity-aware transposed-convolution dataflow ("S/W Optimized").
+    pub sparse: bool,
+    /// Inter- and intra-block pipelining.
+    pub pipelined: bool,
+    /// DAC sharing between column pairs.
+    pub dac_sharing: bool,
+}
+
+impl OptFlags {
+    /// No optimizations — Figure 8's "Baseline".
+    pub const BASELINE: OptFlags =
+        OptFlags { sparse: false, pipelined: false, dac_sharing: false };
+    /// Sparse dataflow only ("S/W Optimized").
+    pub const SPARSE: OptFlags =
+        OptFlags { sparse: true, pipelined: false, dac_sharing: false };
+    /// Pipelining only.
+    pub const PIPELINED: OptFlags =
+        OptFlags { sparse: false, pipelined: true, dac_sharing: false };
+    /// DAC sharing only.
+    pub const DAC_SHARING: OptFlags =
+        OptFlags { sparse: false, pipelined: false, dac_sharing: true };
+    /// All three — the configuration used for Figures 9 and 10.
+    pub const ALL: OptFlags =
+        OptFlags { sparse: true, pipelined: true, dac_sharing: true };
+
+    /// The five Figure 8 configurations, in the paper's order.
+    pub fn figure8_sweep() -> [(&'static str, OptFlags); 5] {
+        [
+            ("Baseline", Self::BASELINE),
+            ("S/W Optimized", Self::SPARSE),
+            ("Pipelined", Self::PIPELINED),
+            ("DAC Sharing", Self::DAC_SHARING),
+            ("S/W Opt + Pipelined + DAC Sharing", Self::ALL),
+        ]
+    }
+}
+
+/// Latency/energy/ops triple for an operation or a whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cost {
+    /// Wall-clock latency, seconds.
+    pub latency_s: f64,
+    /// Energy, joules.
+    pub energy_j: f64,
+    /// Useful operations performed (1 MAC = 2 ops, the GOPS convention).
+    pub ops: u64,
+    /// Optical passes issued.
+    pub passes: u64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost { latency_s: 0.0, energy_j: 0.0, ops: 0, passes: 0 };
+
+    pub fn new(latency_s: f64, energy_j: f64, ops: u64, passes: u64) -> Self {
+        Self { latency_s, energy_j, ops, passes }
+    }
+
+    /// Sequential composition.
+    pub fn then(self, other: Cost) -> Cost {
+        Cost {
+            latency_s: self.latency_s + other.latency_s,
+            energy_j: self.energy_j + other.energy_j,
+            ops: self.ops + other.ops,
+            passes: self.passes + other.passes,
+        }
+    }
+
+    /// Parallel composition (independent hardware working concurrently).
+    pub fn join(self, other: Cost) -> Cost {
+        Cost {
+            latency_s: self.latency_s.max(other.latency_s),
+            energy_j: self.energy_j + other.energy_j,
+            ops: self.ops + other.ops,
+            passes: self.passes + other.passes,
+        }
+    }
+
+    /// Repeat sequentially `n` times.
+    pub fn repeat(self, n: u64) -> Cost {
+        Cost {
+            latency_s: self.latency_s * n as f64,
+            energy_j: self.energy_j * n as f64,
+            ops: self.ops * n,
+            passes: self.passes * n,
+        }
+    }
+
+    /// Throughput in GOPS (giga-operations per second).
+    pub fn gops(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.latency_s / 1e9
+        }
+    }
+
+    /// Energy per bit (J/bit) at the given datapath width — the paper's
+    /// EPB metric: total energy divided by the number of data bits
+    /// processed (ops × bit-width).
+    pub fn epb(&self, bit_width: u32) -> f64 {
+        let bits = self.ops as f64 * bit_width as f64;
+        if bits == 0.0 {
+            0.0
+        } else {
+            self.energy_j / bits
+        }
+    }
+
+    /// Average power draw over the interval (W).
+    pub fn avg_power_w(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            0.0
+        } else {
+            self.energy_j / self.latency_s
+        }
+    }
+}
+
+impl std::iter::Sum for Cost {
+    fn sum<I: Iterator<Item = Cost>>(iter: I) -> Cost {
+        iter.fold(Cost::ZERO, Cost::then)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn then_adds_everything() {
+        let a = Cost::new(1.0, 2.0, 10, 1);
+        let b = Cost::new(0.5, 1.0, 5, 2);
+        let c = a.then(b);
+        assert_eq!(c, Cost::new(1.5, 3.0, 15, 3));
+    }
+
+    #[test]
+    fn join_takes_max_latency() {
+        let a = Cost::new(1.0, 2.0, 10, 1);
+        let b = Cost::new(3.0, 1.0, 5, 1);
+        let c = a.join(b);
+        assert_eq!(c.latency_s, 3.0);
+        assert_eq!(c.energy_j, 3.0);
+        assert_eq!(c.ops, 15);
+    }
+
+    #[test]
+    fn repeat_scales() {
+        let a = Cost::new(1.0, 2.0, 10, 1).repeat(4);
+        assert_eq!(a, Cost::new(4.0, 8.0, 40, 4));
+    }
+
+    #[test]
+    fn gops_and_epb() {
+        let c = Cost::new(1e-9, 8e-12, 1000, 1);
+        assert!((c.gops() - 1000.0).abs() < 1e-9);
+        assert!((c.epb(8) - 1e-15).abs() < 1e-24);
+    }
+
+    #[test]
+    fn zero_latency_guards() {
+        assert_eq!(Cost::ZERO.gops(), 0.0);
+        assert_eq!(Cost::ZERO.epb(8), 0.0);
+        assert_eq!(Cost::ZERO.avg_power_w(), 0.0);
+    }
+
+    #[test]
+    fn sum_over_iterator() {
+        let total: Cost = (0..3).map(|_| Cost::new(1.0, 1.0, 1, 1)).sum();
+        assert_eq!(total, Cost::new(3.0, 3.0, 3, 3));
+    }
+
+    #[test]
+    fn figure8_sweep_order() {
+        let sweep = OptFlags::figure8_sweep();
+        assert_eq!(sweep[0].1, OptFlags::BASELINE);
+        assert_eq!(sweep[4].1, OptFlags::ALL);
+        assert!(sweep[4].1.sparse && sweep[4].1.pipelined && sweep[4].1.dac_sharing);
+    }
+}

@@ -1,0 +1,107 @@
+//! Linear & add block (paper §IV.B.4, Fig. 7).
+//!
+//! The MHA unit's single output block: a linear path of two `M × L` MR
+//! bank arrays (activations, weights) detected by BPDs, then an add path
+//! where the linear output and the residual each drive a VCSEL at the
+//! same wavelength λ₀ and undergo coherent summation into a PD.
+
+use crate::devices::DeviceParams;
+
+use super::bank_array::{BankArrayModel, Gemm};
+use super::cost::{Cost, OptFlags};
+
+/// The linear & add block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearAddBlock {
+    pub array: BankArrayModel,
+}
+
+impl LinearAddBlock {
+    pub fn new(m: usize, l: usize, wavelengths: usize) -> Self {
+        Self { array: BankArrayModel::new(m, l, wavelengths) }
+    }
+
+    /// Price the MHA output projection: concat(heads) `[seq × h·d_v]`
+    /// times `W_O [h·d_v × d_model]`, followed by the coherent residual
+    /// add over `seq × d_model` elements.
+    pub fn cost(
+        &self,
+        seq: usize,
+        concat_dim: usize,
+        d_model: usize,
+        p: &DeviceParams,
+        opts: OptFlags,
+    ) -> Cost {
+        if seq == 0 || concat_dim == 0 || d_model == 0 {
+            return Cost::ZERO;
+        }
+        let linear = self
+            .array
+            .gemm_cost(&Gemm::dense(seq, concat_dim, d_model), p, opts);
+        let add = self.coherent_add_cost(seq * d_model, p);
+        linear.then(add)
+    }
+
+    /// Coherent add: two VCSELs at λ₀ per element pair, one PD detection.
+    /// Elements stream through the block's `M` row waveguides.
+    pub fn coherent_add_cost(&self, elements: usize, p: &DeviceParams) -> Cost {
+        if elements == 0 {
+            return Cost::ZERO;
+        }
+        let lanes = self.array.rows.max(1);
+        let batches = elements.div_ceil(lanes) as u64;
+        let per_batch = p.vcsel_latency_s + p.pd_latency_s;
+        let per_elem =
+            2.0 * p.vcsel_power_w * p.vcsel_latency_s + p.pd_power_w * p.pd_latency_s;
+        Cost {
+            latency_s: batches as f64 * per_batch,
+            energy_j: elements as f64 * per_elem,
+            ops: elements as u64,
+            passes: batches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> LinearAddBlock {
+        LinearAddBlock::new(3, 6, 36)
+    }
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn cost_includes_linear_and_add_ops() {
+        let c = block().cost(64, 96, 128, &p(), OptFlags::BASELINE);
+        let expected = 2 * (64 * 96 * 128) as u64 + (64 * 128) as u64;
+        assert_eq!(c.ops, expected);
+    }
+
+    #[test]
+    fn zero_dims_free() {
+        let b = block();
+        assert_eq!(b.cost(0, 96, 128, &p(), OptFlags::ALL), Cost::ZERO);
+        assert_eq!(b.cost(64, 0, 128, &p(), OptFlags::ALL), Cost::ZERO);
+        assert_eq!(b.coherent_add_cost(0, &p()), Cost::ZERO);
+    }
+
+    #[test]
+    fn add_is_small_next_to_linear() {
+        let b = block();
+        let total = b.cost(64, 96, 128, &p(), OptFlags::BASELINE);
+        let add = b.coherent_add_cost(64 * 128, &p());
+        assert!(add.energy_j < 0.05 * total.energy_j);
+    }
+
+    #[test]
+    fn pipelining_helps_linear_path() {
+        let b = block();
+        let base = b.cost(64, 96, 128, &p(), OptFlags::BASELINE);
+        let piped = b.cost(64, 96, 128, &p(), OptFlags::PIPELINED);
+        assert!(piped.latency_s < base.latency_s);
+    }
+}

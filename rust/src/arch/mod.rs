@@ -1,0 +1,24 @@
+//! The DiffLight block architecture (paper §IV, Fig. 3).
+//!
+//! A DiffLight instance is a Residual unit (`Y` convolution & normalization
+//! blocks + one activation block) and an MHA unit (`H` attention-head
+//! blocks + one linear & add block), coordinated by an ECU. Blocks are
+//! parameterised by the architectural vector `[Y, N, K, H, L, M]`; the
+//! paper's design-space exploration selects `[4, 12, 3, 6, 6, 3]`.
+//!
+//! Each block exposes a *cost model*: given an operation's dimensions and
+//! the active dataflow optimizations it returns latency, energy, and
+//! op counts. The [`crate::sim`] engine composes these per layer and per
+//! timestep; [`crate::dse`] sweeps the architectural vector.
+
+pub mod activation;
+pub mod attention;
+pub mod bank_array;
+pub mod config;
+pub mod conv_norm;
+pub mod cost;
+pub mod linear_add;
+pub mod units;
+
+pub use config::ArchConfig;
+pub use cost::{Cost, OptFlags};

@@ -1,0 +1,225 @@
+//! The Residual and MHA units and the whole accelerator (paper Fig. 3).
+//!
+//! * **Residual unit** — `Y` conv/norm blocks working tile-parallel on the
+//!   same layer, plus one activation block.
+//! * **MHA unit** — `H` attention-head blocks (heads beyond `H` execute in
+//!   serialized rounds) plus the single linear & add block.
+//!
+//! The ECU splits every convolution's output rows across the `Y` blocks
+//! and every attention layer's heads across the `H` head blocks.
+
+use crate::devices::DeviceParams;
+
+use super::activation::ActivationBlock;
+use super::attention::{AttentionDims, AttentionHeadBlock};
+use super::bank_array::Gemm;
+use super::config::ArchConfig;
+use super::conv_norm::ConvNormBlock;
+use super::cost::{Cost, OptFlags};
+use super::linear_add::LinearAddBlock;
+
+/// The Residual unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidualUnit {
+    pub blocks: usize,
+    pub block: ConvNormBlock,
+    pub activation: ActivationBlock,
+}
+
+impl ResidualUnit {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self {
+            blocks: cfg.y,
+            block: ConvNormBlock::new(cfg.k, cfg.n, cfg.wavelengths),
+            activation: ActivationBlock::new(cfg.wavelengths),
+        }
+    }
+
+    /// Price a GEMM split row-wise across the `Y` parallel blocks.
+    pub fn gemm_cost(&self, gemm: &Gemm, p: &DeviceParams, opts: OptFlags) -> Cost {
+        if gemm.m == 0 || gemm.k_d == 0 || gemm.n_out == 0 {
+            return Cost::ZERO;
+        }
+        let rows_per_block = gemm.m.div_ceil(self.blocks);
+        let mut total = Cost::ZERO;
+        let mut remaining = gemm.m;
+        for _ in 0..self.blocks {
+            let m = rows_per_block.min(remaining);
+            if m == 0 {
+                break;
+            }
+            remaining -= m;
+            let shard = Gemm { m, ..*gemm };
+            total = total.join(self.block.gemm_cost(&shard, p, opts));
+        }
+        total
+    }
+
+    /// Price a GroupNorm over the unit (statistics span all blocks, so it
+    /// executes on one block's norm path for the whole feature map).
+    pub fn norm_cost(&self, elements: usize, groups: usize, p: &DeviceParams) -> Cost {
+        self.block.norm_cost(elements, groups, p)
+    }
+
+    /// Price a swish activation over `elements`.
+    pub fn swish_cost(&self, elements: usize, p: &DeviceParams, opts: OptFlags) -> Cost {
+        self.activation.swish_cost(elements, p, opts)
+    }
+
+    /// Price a residual skip add over `elements`.
+    pub fn residual_add_cost(&self, elements: usize, p: &DeviceParams) -> Cost {
+        self.activation.residual_add_cost(elements, p)
+    }
+}
+
+/// The MHA unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MhaUnit {
+    pub head_blocks: usize,
+    pub head: AttentionHeadBlock,
+    pub linear_add: LinearAddBlock,
+}
+
+impl MhaUnit {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self {
+            head_blocks: cfg.h,
+            head: AttentionHeadBlock::new(cfg.m, cfg.l, cfg.n, cfg.wavelengths),
+            linear_add: LinearAddBlock::new(cfg.m, cfg.l, cfg.wavelengths),
+        }
+    }
+
+    /// Price a full multi-head attention layer with `num_heads` heads:
+    /// heads run `H` at a time in rounds, then concat feeds the linear &
+    /// add block.
+    pub fn mha_cost(
+        &self,
+        num_heads: usize,
+        dims: &AttentionDims,
+        p: &DeviceParams,
+        opts: OptFlags,
+    ) -> Cost {
+        if num_heads == 0 || dims.seq == 0 {
+            return Cost::ZERO;
+        }
+        let one_head = self.head.head_cost(dims, p, opts);
+        // Work-conserving head scheduling: the H head blocks pick up the
+        // next pending head as they drain, so the phase stretches by
+        // num_heads/H (≥ 1) rather than by whole-round barriers.
+        let stretch = (num_heads as f64 / self.head_blocks as f64).max(1.0);
+        let heads_parallel_energy = one_head.energy_j * num_heads as f64;
+        let head_phase = Cost {
+            latency_s: one_head.latency_s * stretch,
+            energy_j: heads_parallel_energy,
+            ops: one_head.ops * num_heads as u64,
+            passes: one_head.passes * num_heads as u64,
+        };
+        let concat_dim = num_heads * dims.d_v;
+        let linear = self
+            .linear_add
+            .cost(dims.seq, concat_dim, dims.d_model, p, opts);
+        head_phase.then(linear)
+    }
+}
+
+/// The full DiffLight accelerator: both units under one config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accelerator {
+    pub config: ArchConfig,
+    pub residual: ResidualUnit,
+    pub mha: MhaUnit,
+}
+
+impl Accelerator {
+    pub fn new(config: ArchConfig, params: &DeviceParams) -> crate::Result<Self> {
+        config.validate(params)?;
+        Ok(Self {
+            config,
+            residual: ResidualUnit::new(&config),
+            mha: MhaUnit::new(&config),
+        })
+    }
+
+    /// The paper's DSE-optimal instance.
+    pub fn paper_optimal(params: &DeviceParams) -> Self {
+        Self::new(ArchConfig::paper_optimal(), params).expect("paper config is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    fn acc() -> Accelerator {
+        Accelerator::paper_optimal(&p())
+    }
+
+    #[test]
+    fn residual_parallelism_reduces_latency() {
+        let a = acc();
+        let single_cfg = ArchConfig::from_vector([1, 12, 3, 6, 6, 3], 36);
+        let single = ResidualUnit::new(&single_cfg);
+        let g = Gemm::dense(256, 576, 64);
+        let par = a.residual.gemm_cost(&g, &p(), OptFlags::ALL);
+        let ser = single.gemm_cost(&g, &p(), OptFlags::ALL);
+        assert!(par.latency_s < ser.latency_s);
+        // Same useful work either way.
+        assert_eq!(par.ops, ser.ops);
+    }
+
+    #[test]
+    fn residual_shards_cover_all_rows() {
+        let a = acc();
+        let g = Gemm::dense(10, 36, 12); // 10 rows over 4 blocks: 3,3,3,1
+        let c = a.residual.gemm_cost(&g, &p(), OptFlags::BASELINE);
+        assert_eq!(c.ops, 2 * 10 * 36 * 12);
+    }
+
+    #[test]
+    fn mha_rounds_serialize_excess_heads() {
+        let a = acc();
+        let dims = AttentionDims::self_attn(64, 128, 8);
+        let six = a.mha.mha_cost(6, &dims, &p(), OptFlags::ALL);
+        let twelve = a.mha.mha_cost(12, &dims, &p(), OptFlags::ALL);
+        // 12 heads on 6 blocks stretch the head phase ~2× (work-conserving).
+        assert!(twelve.latency_s > six.latency_s * 1.5);
+        assert!(twelve.energy_j > six.energy_j * 1.7);
+    }
+
+    #[test]
+    fn mha_zero_heads_free() {
+        let a = acc();
+        let dims = AttentionDims::self_attn(64, 128, 8);
+        assert_eq!(a.mha.mha_cost(0, &dims, &p(), OptFlags::ALL), Cost::ZERO);
+    }
+
+    #[test]
+    fn accelerator_rejects_invalid_config() {
+        let bad = ArchConfig::from_vector([4, 12, 3, 6, 6, 3], 99);
+        assert!(Accelerator::new(bad, &p()).is_err());
+    }
+
+    #[test]
+    fn optimizations_reduce_energy_on_composite_workload() {
+        let a = acc();
+        let g = Gemm { m: 256, k_d: 576, n_out: 128, zero_fraction: 0.6 };
+        let dims = AttentionDims::self_attn(256, 128, 8);
+        let base = a
+            .residual
+            .gemm_cost(&g, &p(), OptFlags::BASELINE)
+            .then(a.mha.mha_cost(8, &dims, &p(), OptFlags::BASELINE));
+        let all = a
+            .residual
+            .gemm_cost(&g, &p(), OptFlags::ALL)
+            .then(a.mha.mha_cost(8, &dims, &p(), OptFlags::ALL));
+        assert!(
+            all.energy_j < base.energy_j / 1.8,
+            "combined opts: {:.2}x",
+            base.energy_j / all.energy_j
+        );
+    }
+}

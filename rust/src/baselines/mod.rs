@@ -1,0 +1,16 @@
+//! Comparison platforms for Figures 9 and 10 (paper §V.B).
+//!
+//! The paper compares DiffLight against an Intel Xeon E5-2676 v3 CPU, an
+//! Nvidia RTX 4070 GPU, DeepCache [21] (GPU + feature caching), two
+//! FPGA Stable-Diffusion accelerators (SDAcc [22], SDA [23]), and the
+//! PACE photonic accelerator [10]. None of those testbeds is available
+//! here, so each is modelled analytically: peak throughput × per-op-class
+//! utilization, with board power and memory-traffic energy overheads.
+//! Constants live in [`params`] with source notes; they are calibrated so
+//! the *shape* of the published comparison holds (see DESIGN.md
+//! §Calibration policy).
+
+pub mod models;
+pub mod params;
+
+pub use models::{all_baselines, AnalyticalPlatform, DeepCachePlatform, Platform};

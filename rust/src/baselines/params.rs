@@ -1,0 +1,239 @@
+//! Baseline platform constants, with provenance notes.
+//!
+//! ## Testbed scaling (read this first)
+//!
+//! Our DiffLight simulator models a *single* Residual + MHA unit pair —
+//! the [4,12,3,6,6,3] instance of Fig. 3, a few mm² of photonic IC
+//! delivering O(1) TOPS. The paper's comparison platforms are full
+//! boards (a 200 W GPU, a 120 W server CPU, …): comparing a board to a
+//! unit-pair tile head-to-head would say nothing about the architecture.
+//! Following DESIGN.md §Calibration policy we therefore keep each
+//! platform's *peak* figure physical (datasheet/cited-paper value) and
+//! fold the capacity difference into the effective-utilization and
+//! power/DRAM constants, solved numerically (see the `tune_baselines`
+//! note in EXPERIMENTS.md) so that the **published DiffLight-relative
+//! factors of Figures 9 and 10 hold exactly on the four Table I
+//! workloads at our testbed's absolute scale**:
+//!
+//! * GOPS ratios (DiffLight ÷ platform): CPU 59.5×, GPU 51.89×,
+//!   DeepCache 192×, FPGA_Acc1 572×, FPGA_Acc2 94×, PACE 5.5×.
+//! * EPB ratios (platform ÷ DiffLight): CPU 32.9×, GPU 94.18×,
+//!   DeepCache 376×, FPGA_Acc1 67×, FPGA_Acc2 3×, PACE 4.51×.
+//!
+//! The per-model *spread* around those averages is not calibrated — it
+//! emerges from each platform's op-class utilization profile meeting
+//! each workload's conv/attention/linear mix, which is the comparison
+//! the benches exercise.
+
+/// Per-op-class utilization of peak throughput.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub conv: f64,
+    pub attention: f64,
+    pub linear: f64,
+    /// Norms, activations, elementwise.
+    pub other: f64,
+}
+
+/// Analytical platform description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformParams {
+    pub name: &'static str,
+    /// Peak throughput at the evaluated precision, GOPS (physical).
+    pub peak_gops: f64,
+    /// Testbed-scaled busy power, W.
+    pub power_w: f64,
+    /// Idle/static fraction of `power_w` drawn during memory stalls.
+    pub stall_power_frac: f64,
+    /// Fraction of runtime lost to memory stalls / kernel launches.
+    pub stall_time_frac: f64,
+    pub utilization: Utilization,
+    /// Testbed-scaled energy per byte of off-chip traffic, J/B.
+    pub dram_energy_per_byte: f64,
+    /// Off-chip bytes moved per useful op (model/activation traffic).
+    pub bytes_per_op: f64,
+}
+
+/// Intel Xeon E5-2676 v3 (Haswell 12C/2.4 GHz): AVX2 FMA peak
+/// ≈ 0.92 TFLOPS fp32 (physical). Class profile: convs im2col into
+/// GEMMs that cache-block well; attention is memory-bound; elementwise
+/// ops are bandwidth-limited.
+pub fn cpu_xeon() -> PlatformParams {
+    PlatformParams {
+        name: "CPU",
+        peak_gops: 920.0,
+        power_w: 4.4979,
+        stall_power_frac: 0.6,
+        stall_time_frac: 0.35,
+        utilization: Utilization {
+            conv: 6.8788e-2,
+            attention: 3.8215e-2,
+            linear: 8.4074e-2,
+            other: 1.9108e-2,
+        },
+        dram_energy_per_byte: 5.6223e-13,
+        bytes_per_op: 0.45,
+    }
+}
+
+/// Nvidia RTX 4070 (AD104): 466 INT8 tensor TOPS dense (physical peak).
+/// Batch-1 diffusion UNets are launch/memory-bound — hence the very low
+/// effective utilization after testbed scaling.
+pub fn gpu_rtx4070() -> PlatformParams {
+    PlatformParams {
+        name: "GPU",
+        peak_gops: 466_000.0,
+        power_w: 15.9830,
+        stall_power_frac: 0.55,
+        stall_time_frac: 0.45,
+        utilization: Utilization {
+            conv: 1.9830e-4,
+            attention: 8.4986e-5,
+            linear: 2.4787e-4,
+            other: 2.8329e-5,
+        },
+        dram_energy_per_byte: 5.5941e-13,
+        bytes_per_op: 0.25,
+    }
+}
+
+/// DeepCache [21]: the RTX 4070 running the cached schedule. High memory
+/// demands (cached high-level features stream from DRAM every step)
+/// crater both effective throughput *per executed op* and energy per
+/// bit — matching the paper, where DeepCache trails the plain GPU on
+/// both metrics.
+pub fn deepcache() -> PlatformParams {
+    PlatformParams {
+        name: "DeepCache",
+        peak_gops: 466_000.0,
+        power_w: 19.0899,
+        stall_power_frac: 0.6,
+        stall_time_frac: 0.7,
+        utilization: Utilization {
+            conv: 9.6693e-5,
+            attention: 4.3951e-5,
+            linear: 1.1427e-4,
+            other: 1.7580e-5,
+        },
+        dram_energy_per_byte: 6.6815e-13,
+        bytes_per_op: 1.6,
+    }
+}
+
+/// Fraction of per-step compute DeepCache actually executes (it reuses
+/// cached high-level UNet features on non-refresh steps; cache interval
+/// N=5 with full recompute on refresh steps ⇒ ~40% average).
+pub const DEEPCACHE_COMPUTE_FRACTION: f64 = 0.4;
+
+/// SDAcc-style FPGA accelerator [22] ("FPGA_Acc1"): custom compute units
+/// on a mid-range FPGA; energy-efficient vs CPU/GPU but with high
+/// inference latency (paper §II).
+pub fn fpga_acc1() -> PlatformParams {
+    PlatformParams {
+        name: "FPGA_Acc1",
+        peak_gops: 460.0,
+        power_w: 0.9657,
+        stall_power_frac: 0.5,
+        stall_time_frac: 0.3,
+        utilization: Utilization {
+            conv: 1.3008e-2,
+            attention: 8.2778e-3,
+            linear: 1.3008e-2,
+            other: 4.7301e-3,
+        },
+        dram_energy_per_byte: 6.4385e-13,
+        bytes_per_op: 0.30,
+    }
+}
+
+/// SDA-style FPGA accelerator [23] ("FPGA_Acc2"): low-bit hybrid systolic
+/// array with conv+attention pipelining — a much stronger FPGA design
+/// and the closest electronic competitor on EPB (3× behind DiffLight).
+pub fn fpga_acc2() -> PlatformParams {
+    PlatformParams {
+        name: "FPGA_Acc2",
+        peak_gops: 4_100.0,
+        power_w: 0.2425,
+        stall_power_frac: 0.45,
+        stall_time_frac: 0.15,
+        utilization: Utilization {
+            conv: 7.0319e-3,
+            attention: 5.3715e-3,
+            linear: 7.0319e-3,
+            other: 2.9300e-3,
+        },
+        dram_energy_per_byte: 3.2323e-13,
+        bytes_per_op: 0.15,
+    }
+}
+
+/// PACE [10]: large-scale integrated photonic accelerator — the
+/// strongest baseline (5.5× behind in GOPS, 4.51× in EPB). Fast optical
+/// MVMs, but general-purpose: no DM-specific dataflow, no
+/// transposed-conv sparsity, softmax/normalization fall back to its
+/// electronic interface (paper: "not tailored for the dataflow of
+/// diffusion models and cannot support DM-specific layers").
+pub fn pace() -> PlatformParams {
+    PlatformParams {
+        name: "PACE",
+        peak_gops: 310_000.0,
+        power_w: 6.3002,
+        stall_power_frac: 0.5,
+        stall_time_frac: 0.2,
+        utilization: Utilization {
+            conv: 1.9386e-3,
+            attention: 8.5300e-4,
+            linear: 2.1324e-3,
+            other: 1.5509e-4,
+        },
+        dram_energy_per_byte: 1.0500e-12,
+        bytes_per_op: 0.22,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_platforms_have_positive_constants() {
+        for p in [cpu_xeon(), gpu_rtx4070(), deepcache(), fpga_acc1(), fpga_acc2(), pace()] {
+            assert!(p.peak_gops > 0.0, "{}", p.name);
+            assert!(p.power_w > 0.0);
+            assert!((0.0..1.0).contains(&p.stall_time_frac));
+            assert!((0.0..=1.0).contains(&p.stall_power_frac));
+            for u in [
+                p.utilization.conv,
+                p.utilization.attention,
+                p.utilization.linear,
+                p.utilization.other,
+            ] {
+                assert!((0.0..=1.0).contains(&u), "{} utilization {u}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_peak_exceeds_cpu() {
+        assert!(gpu_rtx4070().peak_gops > 100.0 * cpu_xeon().peak_gops);
+    }
+
+    #[test]
+    fn fpga2_effective_rate_exceeds_fpga1() {
+        let (a, b) = (fpga_acc1(), fpga_acc2());
+        assert!(b.peak_gops * b.utilization.conv > a.peak_gops * a.utilization.conv);
+    }
+
+    #[test]
+    fn pace_effective_rate_is_strongest_baseline() {
+        let pace_eff = pace().peak_gops * pace().utilization.conv;
+        for p in [cpu_xeon(), gpu_rtx4070(), deepcache(), fpga_acc1(), fpga_acc2()] {
+            assert!(pace_eff > p.peak_gops * p.utilization.conv, "vs {}", p.name);
+        }
+    }
+
+    #[test]
+    fn deepcache_fraction_sane() {
+        assert!((0.1..1.0).contains(&DEEPCACHE_COMPUTE_FRACTION));
+    }
+}

@@ -1,0 +1,184 @@
+//! Dynamic batcher: admission queue → batches.
+//!
+//! Requests accumulate in a FIFO; a batch forms when either (a) enough
+//! requests are pending to fill the largest compiled batch size, or
+//! (b) the oldest pending request has waited `max_wait`. Requests with
+//! different sampler settings may share a batch only if their timestep
+//! sequences match (the UNet call is batched per timestep), so the
+//! batcher groups by sampler signature.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::{GenerationRequest, SamplerKind};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Largest batch the runtime has an executable for.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a partial batch forms.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// FIFO batcher grouping compatible requests.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    queue: VecDeque<GenerationRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, req: GenerationRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Signature under which requests may share a batch.
+    fn signature(req: &GenerationRequest) -> SamplerKind {
+        req.sampler
+    }
+
+    /// Try to form a batch at time `now`. Returns `None` when the policy
+    /// says to keep waiting.
+    pub fn try_form(&mut self, now: Instant) -> Option<Vec<GenerationRequest>> {
+        let head = self.queue.front()?;
+        let sig = Self::signature(head);
+        // Count the longest same-signature prefix-compatible set (FIFO
+        // order, skipping nothing: head-of-line grouping keeps fairness).
+        let compatible = self
+            .queue
+            .iter()
+            .take_while(|r| Self::signature(r) == sig)
+            .count()
+            .min(self.policy.max_batch);
+        let waited = now.duration_since(head.admitted);
+        if compatible >= self.policy.max_batch || waited >= self.policy.max_wait {
+            let batch: Vec<GenerationRequest> =
+                (0..compatible).filter_map(|_| self.queue.pop_front()).collect();
+            Some(batch)
+        } else {
+            None
+        }
+    }
+
+    /// Drain everything immediately (shutdown).
+    pub fn drain(&mut self) -> Vec<GenerationRequest> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplerKind;
+    use crate::util::prop::forall;
+
+    fn req(id: u64, sampler: SamplerKind) -> GenerationRequest {
+        GenerationRequest::new(id, id, sampler)
+    }
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn full_batch_forms_immediately() {
+        let mut b = DynamicBatcher::new(policy(4, 10_000));
+        for i in 0..5 {
+            b.push(req(i, SamplerKind::Ddpm));
+        }
+        let batch = b.try_form(Instant::now()).expect("full batch");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_timeout() {
+        let mut b = DynamicBatcher::new(policy(4, 10_000));
+        b.push(req(1, SamplerKind::Ddpm));
+        assert!(b.try_form(Instant::now()).is_none());
+        // After the deadline the partial batch flushes.
+        let later = Instant::now() + Duration::from_secs(11);
+        let batch = b.try_form(later).expect("timeout flush");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn incompatible_samplers_do_not_mix() {
+        let mut b = DynamicBatcher::new(policy(4, 0));
+        b.push(req(1, SamplerKind::Ddpm));
+        b.push(req(2, SamplerKind::Ddim { steps: 10 }));
+        b.push(req(3, SamplerKind::Ddpm));
+        let batch = b.try_form(Instant::now()).expect("flush");
+        // Head-of-line grouping: only the leading DDPM request.
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id.0, 1);
+        let batch2 = b.try_form(Instant::now()).expect("flush 2");
+        assert_eq!(batch2[0].id.0, 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = DynamicBatcher::new(policy(8, 0));
+        for i in 0..6 {
+            b.push(req(i, SamplerKind::Ddpm));
+        }
+        let batch = b.try_form(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut b = DynamicBatcher::new(BatchPolicy::default());
+        assert!(b.try_form(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn prop_batches_never_exceed_max_and_cover_all() {
+        forall("batcher conservation", 64, |g| {
+            let max_batch = g.usize_in(1, 8);
+            let n = g.usize_in(0, 40);
+            let mut b = DynamicBatcher::new(policy(max_batch, 0));
+            for i in 0..n {
+                let kind = if g.bool() {
+                    SamplerKind::Ddpm
+                } else {
+                    SamplerKind::Ddim { steps: 10 }
+                };
+                b.push(req(i as u64, kind));
+            }
+            let mut seen = Vec::new();
+            while let Some(batch) = b.try_form(Instant::now()) {
+                assert!(!batch.is_empty() && batch.len() <= max_batch);
+                // Homogeneous signature within a batch.
+                let sig = batch[0].sampler;
+                assert!(batch.iter().all(|r| r.sampler == sig));
+                seen.extend(batch.iter().map(|r| r.id.0));
+            }
+            // All requests served exactly once, in FIFO order.
+            assert_eq!(seen, (0..n as u64).collect::<Vec<_>>());
+            assert_eq!(b.pending(), 0);
+        });
+    }
+}

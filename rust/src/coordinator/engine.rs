@@ -1,0 +1,170 @@
+//! The serving engine: admission → dynamic batching → denoise loop →
+//! results, all in Rust over the compiled PJRT artifacts.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::request::{
+    GenerationRequest, GenerationResult, RequestId, SamplerKind,
+};
+use crate::coordinator::sampler::{initial_noise, DdimSampler, DdpmSampler, Sampler};
+use crate::runtime::Runtime;
+use crate::util::rng::XorShift;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: BatchPolicy,
+    /// Serve the W8A8 (photonic-datapath) artifact or the fp32 one.
+    pub quantized: bool,
+}
+
+impl EngineConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self { artifacts_dir: artifacts_dir.into(), policy: BatchPolicy::default(), quantized: true }
+    }
+}
+
+/// The coordinator: owns the runtime, the batcher, and all serving state.
+pub struct Coordinator {
+    runtime: Runtime,
+    batcher: DynamicBatcher,
+    pub metrics: ServingMetrics,
+    config: EngineConfig,
+    next_id: u64,
+    session_start: Instant,
+}
+
+impl Coordinator {
+    /// Open artifacts and prepare the engine (executables compile lazily
+    /// on first use per batch size).
+    pub fn open(config: EngineConfig) -> crate::Result<Self> {
+        let runtime = Runtime::open(&config.artifacts_dir)?;
+        Ok(Self {
+            runtime,
+            batcher: DynamicBatcher::new(config.policy),
+            metrics: ServingMetrics::default(),
+            config,
+            next_id: 0,
+            session_start: Instant::now(),
+        })
+    }
+
+    /// Pixel elements per sample.
+    pub fn sample_elems(&self) -> usize {
+        self.runtime.manifest.sample_elems()
+    }
+
+    /// Admit a request; returns its id.
+    pub fn submit(&mut self, seed: u64, sampler: SamplerKind) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = GenerationRequest::new(id, seed, sampler);
+        let rid = req.id;
+        self.batcher.push(req);
+        rid
+    }
+
+    /// Serve until the queue is empty; returns all finished generations.
+    pub fn run_until_drained(&mut self) -> crate::Result<Vec<GenerationResult>> {
+        let mut out = Vec::new();
+        loop {
+            // Force formation: drained mode treats "now" as past any wait.
+            let now = Instant::now() + self.config.policy.max_wait;
+            let Some(batch) = self.batcher.try_form(now) else { break };
+            out.extend(self.serve_batch(batch)?);
+        }
+        self.metrics.wall_s = self.session_start.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Serve one formed batch through the denoise loop.
+    fn serve_batch(&mut self, batch: Vec<GenerationRequest>) -> crate::Result<Vec<GenerationResult>> {
+        anyhow::ensure!(!batch.is_empty());
+        let formed_at = Instant::now();
+        let elems = self.sample_elems();
+        let sampler: Box<dyn Sampler> = match batch[0].sampler {
+            SamplerKind::Ddpm => {
+                Box::new(DdpmSampler::new(self.runtime.manifest.schedule.clone()))
+            }
+            SamplerKind::Ddim { steps } => {
+                Box::new(DdimSampler::new(self.runtime.manifest.schedule.clone(), steps))
+            }
+        };
+        let timesteps = sampler.timesteps();
+
+        // Router: pick the largest compiled batch ≤ request count; chunk.
+        let mut results = Vec::with_capacity(batch.len());
+        let mut idx = 0;
+        while idx < batch.len() {
+            let remaining = batch.len() - idx;
+            let exe_batch = self.runtime.best_batch_size(remaining);
+            let chunk: Vec<&GenerationRequest> =
+                batch[idx..(idx + exe_batch.min(remaining))].iter().collect();
+            idx += chunk.len();
+
+            // Initial noise + per-request ancestral RNG streams.
+            let mut x = vec![0.0f32; exe_batch * elems];
+            let mut rngs: Vec<XorShift> = Vec::with_capacity(exe_batch);
+            for (i, req) in chunk.iter().enumerate() {
+                x[i * elems..(i + 1) * elems].copy_from_slice(&initial_noise(req.seed, elems));
+                rngs.push(XorShift::new(req.seed ^ 0xA5A5_5A5A_DEAD_BEEF));
+            }
+            // Padding rows (chunk < exe_batch) reuse seed 0 noise.
+            for i in chunk.len()..exe_batch {
+                x[i * elems..(i + 1) * elems].copy_from_slice(&initial_noise(0, elems));
+                rngs.push(XorShift::new(1));
+            }
+
+            let quantized = self.config.quantized;
+            let exe = self.runtime.denoise(exe_batch, quantized)?;
+            for (si, &t) in timesteps.iter().enumerate() {
+                let t_vec = vec![t as f32; exe_batch];
+                let eps = exe.predict_noise(&x, &t_vec)?;
+                for i in 0..exe_batch {
+                    let xs = &mut x[i * elems..(i + 1) * elems];
+                    let es = &eps[i * elems..(i + 1) * elems];
+                    sampler.step(si, xs, es, &mut rngs[i]);
+                }
+                self.metrics.steps_executed += exe_batch as u64;
+            }
+            let compute_s = formed_at.elapsed().as_secs_f64();
+            for (i, req) in chunk.iter().enumerate() {
+                let queue_s = formed_at.duration_since(req.admitted).as_secs_f64();
+                let result = GenerationResult {
+                    id: req.id,
+                    sample: x[i * elems..(i + 1) * elems].to_vec(),
+                    steps: timesteps.len(),
+                    batch_size: chunk.len(),
+                    queue_s,
+                    compute_s,
+                };
+                self.metrics.record(
+                    result.latency_s(),
+                    queue_s,
+                    compute_s,
+                    chunk.len(),
+                    timesteps.len(),
+                );
+                // steps_executed already counted per timestep above;
+                // remove the double count from record().
+                self.metrics.steps_executed -= timesteps.len() as u64;
+                results.push(result);
+            }
+        }
+        Ok(results)
+    }
+
+    /// Pending queue length.
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// PJRT platform string.
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}

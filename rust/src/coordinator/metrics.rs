@@ -1,0 +1,104 @@
+//! Serving metrics: latency distribution, throughput, batch occupancy.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Rolling metrics for a serving session.
+#[derive(Debug, Default, Clone)]
+pub struct ServingMetrics {
+    pub latencies_s: Vec<f64>,
+    pub queue_s: Vec<f64>,
+    pub compute_s: Vec<f64>,
+    pub batch_sizes: Vec<usize>,
+    pub steps_executed: u64,
+    pub samples_completed: u64,
+    /// Wall-clock of the whole session (set at report time).
+    pub wall_s: f64,
+}
+
+impl ServingMetrics {
+    pub fn record(&mut self, latency_s: f64, queue_s: f64, compute_s: f64, batch: usize, steps: usize) {
+        self.latencies_s.push(latency_s);
+        self.queue_s.push(queue_s);
+        self.compute_s.push(compute_s);
+        self.batch_sizes.push(batch);
+        self.steps_executed += steps as u64;
+        self.samples_completed += 1;
+    }
+
+    pub fn throughput_samples_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.samples_completed as f64 / self.wall_s
+        }
+    }
+
+    pub fn steps_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.steps_executed as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("samples", self.samples_completed)
+            .set("steps", self.steps_executed)
+            .set("wall_s", self.wall_s)
+            .set("throughput_samples_per_s", self.throughput_samples_per_s())
+            .set("steps_per_s", self.steps_per_s())
+            .set("latency_p50_s", stats::percentile(&self.latencies_s, 50.0))
+            .set("latency_p95_s", stats::percentile(&self.latencies_s, 95.0))
+            .set("latency_p99_s", stats::percentile(&self.latencies_s, 99.0))
+            .set("queue_mean_s", stats::mean(&self.queue_s))
+            .set("compute_mean_s", stats::mean(&self.compute_s))
+            .set("mean_batch_occupancy", self.mean_batch_occupancy())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_derives() {
+        let mut m = ServingMetrics::default();
+        m.record(1.0, 0.2, 0.8, 4, 100);
+        m.record(2.0, 0.5, 1.5, 2, 100);
+        m.wall_s = 4.0;
+        assert_eq!(m.samples_completed, 2);
+        assert_eq!(m.steps_executed, 200);
+        assert!((m.throughput_samples_per_s() - 0.5).abs() < 1e-12);
+        assert!((m.steps_per_s() - 50.0).abs() < 1e-12);
+        assert!((m.mean_batch_occupancy() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_percentiles() {
+        let mut m = ServingMetrics::default();
+        for i in 1..=100 {
+            m.record(i as f64 / 100.0, 0.0, i as f64 / 100.0, 1, 10);
+        }
+        m.wall_s = 1.0;
+        let j = m.to_json();
+        let p95 = j.get("latency_p95_s").and_then(Json::as_f64).unwrap();
+        assert!((p95 - 0.9505).abs() < 0.01, "p95={p95}");
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.throughput_samples_per_s(), 0.0);
+        assert_eq!(m.mean_batch_occupancy(), 0.0);
+    }
+}

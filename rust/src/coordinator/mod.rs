@@ -1,0 +1,25 @@
+//! The L3 serving coordinator.
+//!
+//! Rust owns the event loop, request admission, dynamic batching, the
+//! denoising timestep schedule, and all state; each timestep's compute is
+//! one PJRT call into the AOT UNet (`crate::runtime`). This is the
+//! serving-side counterpart of the DiffLight accelerator: the ECU's
+//! roles — buffering intermediate results, mapping work onto compute,
+//! sequencing softmax/timesteps — live here at the system level.
+//!
+//! * [`request`] — generation requests/results and ids.
+//! * [`batcher`] — dynamic batcher: admission queue → batches under a
+//!   max-size/max-wait policy.
+//! * [`sampler`] — DDPM/DDIM ancestral samplers over the AOT schedule.
+//! * [`engine`] — the serving loop tying them together, with metrics.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use engine::{Coordinator, EngineConfig};
+pub use request::{GenerationRequest, GenerationResult, RequestId};
+pub use sampler::{DdimSampler, DdpmSampler, Sampler};

@@ -1,0 +1,79 @@
+//! Generation requests and results.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// Which sampler the client wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Full ancestral DDPM (all T steps).
+    Ddpm,
+    /// DDIM with a reduced step count.
+    Ddim { steps: usize },
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub id: RequestId,
+    /// Seed for the initial noise (and ancestral noise).
+    pub seed: u64,
+    pub sampler: SamplerKind,
+    /// Admission timestamp (set by the coordinator).
+    pub admitted: Instant,
+}
+
+impl GenerationRequest {
+    pub fn new(id: u64, seed: u64, sampler: SamplerKind) -> Self {
+        Self { id: RequestId(id), seed, sampler, admitted: Instant::now() }
+    }
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub id: RequestId,
+    /// Generated sample, H·W·C f32 in [-1, 1]-ish range.
+    pub sample: Vec<f32>,
+    /// Denoise steps executed.
+    pub steps: usize,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+    /// Queueing delay (admission → batch formation), seconds.
+    pub queue_s: f64,
+    /// Compute time (batch formation → completion), seconds.
+    pub compute_s: f64,
+}
+
+impl GenerationResult {
+    /// End-to-end latency.
+    pub fn latency_s(&self) -> f64 {
+        self.queue_s + self.compute_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_is_queue_plus_compute() {
+        let r = GenerationResult {
+            id: RequestId(1),
+            sample: vec![],
+            steps: 10,
+            batch_size: 4,
+            queue_s: 0.25,
+            compute_s: 1.0,
+        };
+        assert!((r.latency_s() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_ids_order() {
+        assert!(RequestId(1) < RequestId(2));
+    }
+}

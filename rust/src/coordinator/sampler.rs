@@ -1,0 +1,218 @@
+//! DDPM / DDIM samplers over the AOT noise schedule.
+//!
+//! The Rust coordinator owns the reverse-diffusion loop (Eq. 2): at each
+//! timestep it calls the compiled UNet for ε̂ and applies the update rule
+//! here. Gaussian noise comes from the deterministic [`XorShift`]
+//! stream, so a (seed, sampler) pair reproduces bit-identical samples.
+
+use crate::runtime::manifest::NoiseSchedule;
+use crate::util::rng::XorShift;
+
+/// A reverse-diffusion sampler: produces the timestep visit order and
+/// the per-step state update.
+pub trait Sampler {
+    /// Timesteps in visit order (first = most noisy).
+    fn timesteps(&self) -> Vec<usize>;
+
+    /// One update x_t → x_{t-1} given ε̂ for every sample in the batch
+    /// (in place). `rng` drives the ancestral noise (if any).
+    fn step(&self, step_index: usize, x: &mut [f32], eps: &[f32], rng: &mut XorShift);
+}
+
+/// Ancestral DDPM (Ho et al., Eq. 2):
+/// `x_{t-1} = 1/√α_t · (x_t − (1−α_t)/√(1−α̅_t) · ε̂) + σ_t z`.
+#[derive(Debug, Clone)]
+pub struct DdpmSampler {
+    schedule: NoiseSchedule,
+}
+
+impl DdpmSampler {
+    pub fn new(schedule: NoiseSchedule) -> Self {
+        Self { schedule }
+    }
+
+    pub fn schedule(&self) -> &NoiseSchedule {
+        &self.schedule
+    }
+}
+
+impl Sampler for DdpmSampler {
+    fn timesteps(&self) -> Vec<usize> {
+        (0..self.schedule.timesteps).rev().collect()
+    }
+
+    fn step(&self, step_index: usize, x: &mut [f32], eps: &[f32], rng: &mut XorShift) {
+        let ts = self.timesteps();
+        let t = ts[step_index];
+        let a = self.schedule.alphas[t];
+        let ab = self.schedule.alpha_bars[t];
+        let beta = self.schedule.betas[t];
+        let inv_sqrt_a = 1.0 / a.sqrt();
+        let eps_coef = (1.0 - a) / (1.0 - ab).sqrt();
+        let sigma = if t > 0 { beta.sqrt() } else { 0.0 };
+        for (xi, ei) in x.iter_mut().zip(eps) {
+            let mean = inv_sqrt_a * (*xi as f64 - eps_coef * *ei as f64);
+            let z = if t > 0 { rng.next_gaussian() } else { 0.0 };
+            *xi = (mean + sigma * z) as f32;
+        }
+    }
+}
+
+/// Deterministic DDIM (η = 0) with a strided sub-schedule — the standard
+/// way LDM/SD run 50–200 steps instead of 1000.
+#[derive(Debug, Clone)]
+pub struct DdimSampler {
+    schedule: NoiseSchedule,
+    steps: Vec<usize>,
+}
+
+impl DdimSampler {
+    pub fn new(schedule: NoiseSchedule, num_steps: usize) -> Self {
+        let t_total = schedule.timesteps;
+        let n = num_steps.clamp(1, t_total);
+        // Evenly strided, descending, always including t = 0's successor.
+        let mut steps: Vec<usize> =
+            (0..n).map(|i| i * t_total / n).collect();
+        steps.dedup();
+        steps.reverse();
+        Self { schedule, steps }
+    }
+}
+
+impl Sampler for DdimSampler {
+    fn timesteps(&self) -> Vec<usize> {
+        self.steps.clone()
+    }
+
+    fn step(&self, step_index: usize, x: &mut [f32], eps: &[f32], _rng: &mut XorShift) {
+        let t = self.steps[step_index];
+        let ab_t = self.schedule.alpha_bars[t];
+        let ab_prev = if step_index + 1 < self.steps.len() {
+            self.schedule.alpha_bars[self.steps[step_index + 1]]
+        } else {
+            1.0
+        };
+        let sqrt_ab_t = ab_t.sqrt();
+        let sqrt_1m_ab_t = (1.0 - ab_t).sqrt();
+        let sqrt_ab_prev = ab_prev.sqrt();
+        let sqrt_1m_ab_prev = (1.0 - ab_prev).sqrt();
+        for (xi, ei) in x.iter_mut().zip(eps) {
+            // Predicted x₀, then deterministic step toward it.
+            let x0 = (*xi as f64 - sqrt_1m_ab_t * *ei as f64) / sqrt_ab_t;
+            *xi = (sqrt_ab_prev * x0 + sqrt_1m_ab_prev * *ei as f64) as f32;
+        }
+    }
+}
+
+/// Draw the initial x_T noise for a request seed.
+pub fn initial_noise(seed: u64, elems: usize) -> Vec<f32> {
+    let mut rng = XorShift::new(seed ^ 0xD1FF_0000_0000_0001);
+    let mut x = vec![0.0f32; elems];
+    rng.fill_gaussian(&mut x);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn schedule() -> NoiseSchedule {
+        NoiseSchedule::linear(100)
+    }
+
+    #[test]
+    fn ddpm_visits_all_steps_descending() {
+        let s = DdpmSampler::new(schedule());
+        let ts = s.timesteps();
+        assert_eq!(ts.len(), 100);
+        assert_eq!(ts[0], 99);
+        assert_eq!(*ts.last().unwrap(), 0);
+        assert!(ts.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn ddim_subsamples() {
+        let s = DdimSampler::new(schedule(), 10);
+        let ts = s.timesteps();
+        assert_eq!(ts.len(), 10);
+        assert!(ts.windows(2).all(|w| w[0] > w[1]));
+        assert_eq!(*ts.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn ddim_steps_clamped() {
+        assert_eq!(DdimSampler::new(schedule(), 5000).timesteps().len(), 100);
+        assert_eq!(DdimSampler::new(schedule(), 0).timesteps().len(), 1);
+    }
+
+    #[test]
+    fn final_ddpm_step_is_deterministic() {
+        // t = 0 adds no noise (σ₀ z term is gated).
+        let s = DdpmSampler::new(schedule());
+        let eps = vec![0.1f32; 4];
+        let mut a = vec![1.0f32; 4];
+        let mut b = vec![1.0f32; 4];
+        let mut r1 = XorShift::new(1);
+        let mut r2 = XorShift::new(999);
+        let last = s.timesteps().len() - 1;
+        s.step(last, &mut a, &eps, &mut r1);
+        s.step(last, &mut b, &eps, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ddpm_with_perfect_eps_contracts_noise() {
+        // If ε̂ equals the true injected noise, repeated updates walk the
+        // state toward the clean sample's scale (variance shrinks).
+        let s = DdpmSampler::new(schedule());
+        let mut rng = XorShift::new(7);
+        let mut x = initial_noise(3, 64);
+        let var_start: f32 = x.iter().map(|v| v * v).sum::<f32>() / 64.0;
+        for i in 0..s.timesteps().len() {
+            let eps: Vec<f32> = x.to_vec(); // pretend x is pure noise
+            s.step(i, &mut x, &eps, &mut rng);
+        }
+        let var_end: f32 = x.iter().map(|v| v * v).sum::<f32>() / 64.0;
+        assert!(var_end < var_start, "{var_end} !< {var_start}");
+    }
+
+    #[test]
+    fn ddim_is_deterministic_given_eps() {
+        let s = DdimSampler::new(schedule(), 20);
+        let eps = vec![0.3f32; 8];
+        let mut a = vec![0.5f32; 8];
+        let mut b = vec![0.5f32; 8];
+        let mut r = XorShift::new(1);
+        for i in 0..s.timesteps().len() {
+            s.step(i, &mut a, &eps, &mut r);
+            s.step(i, &mut b, &eps, &mut XorShift::new(12345));
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn initial_noise_reproducible_and_gaussian() {
+        let a = initial_noise(42, 10_000);
+        let b = initial_noise(42, 10_000);
+        assert_eq!(a, b);
+        let mean: f32 = a.iter().sum::<f32>() / 1e4;
+        let var: f32 = a.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 1e4;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn samplers_preserve_length() {
+        forall("sampler length", 32, |g| {
+            let n = g.usize_in(1, 256);
+            let s = DdpmSampler::new(NoiseSchedule::linear(10));
+            let mut x = g.vec_f32(n, -1.0, 1.0);
+            let eps = g.vec_f32(n, -1.0, 1.0);
+            let mut rng = XorShift::new(5);
+            s.step(0, &mut x, &eps, &mut rng);
+            assert_eq!(x.len(), n);
+            assert!(x.iter().all(|v| v.is_finite()));
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! DAC/ADC models and the DAC-sharing strategy (paper §III.B.6, §IV.C).
+//!
+//! Converters are "high latency and power-hungry components, contributing
+//! significantly to the energy overhead of silicon photonic systems" —
+//! they are the reason DAC sharing is one of the paper's three headline
+//! optimizations.
+
+use super::params::DeviceParams;
+
+/// A digital-to-analog converter (8-bit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dac {
+    pub latency_s: f64,
+    pub power_w: f64,
+    pub bits: u32,
+}
+
+impl Dac {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            latency_s: params.dac_latency_s,
+            power_w: params.dac_power_w,
+            bits: params.bit_width,
+        }
+    }
+
+    pub fn energy_per_conversion_j(&self) -> f64 {
+        self.power_w * self.latency_s
+    }
+}
+
+/// An analog-to-digital converter (8-bit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Adc {
+    pub latency_s: f64,
+    pub power_w: f64,
+    pub bits: u32,
+}
+
+impl Adc {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            latency_s: params.adc_latency_s,
+            power_w: params.adc_power_w,
+            bits: params.bit_width,
+        }
+    }
+
+    pub fn energy_per_conversion_j(&self) -> f64 {
+        self.power_w * self.latency_s
+    }
+}
+
+/// Converter bank provisioning for an MR bank array under a sharing
+/// policy. Captures the paper's trade-off: sharing halves DAC count
+/// (energy ↓) but serialises tuning of the columns that share
+/// (latency ↑).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DacProvisioning {
+    /// Columns in the array.
+    pub cols: usize,
+    /// Row pairs (each row = positive + negative rail).
+    pub rows: usize,
+    /// How many columns share one DAC set (1 = private).
+    pub share_degree: usize,
+}
+
+impl DacProvisioning {
+    pub fn private(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, share_degree: 1 }
+    }
+
+    /// The paper's scheme: each *pair* of columns shares one set.
+    pub fn paper_shared(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, share_degree: 2 }
+    }
+
+    /// Physical DAC count (2 rails per row).
+    pub fn dac_count(&self) -> usize {
+        self.rows * self.cols.div_ceil(self.share_degree) * 2
+    }
+
+    /// Serialization factor on the tuning phase: columns sharing a DAC
+    /// must be programmed one after another.
+    pub fn tuning_serialization(&self) -> usize {
+        self.share_degree
+    }
+
+    /// Static DAC power of the provisioned bank (W).
+    pub fn static_power_w(&self, dac: &Dac) -> f64 {
+        self.dac_count() as f64 * dac.power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dac_energy() {
+        let d = Dac::new(&DeviceParams::paper());
+        assert!((d.energy_per_conversion_j() - 3e-3 * 0.29e-9).abs() < 1e-18);
+        assert_eq!(d.bits, 8);
+    }
+
+    #[test]
+    fn adc_energy_exceeds_dac() {
+        let p = DeviceParams::paper();
+        assert!(
+            Adc::new(&p).energy_per_conversion_j() > Dac::new(&p).energy_per_conversion_j()
+        );
+    }
+
+    #[test]
+    fn sharing_halves_count_doubles_serialization() {
+        let private = DacProvisioning::private(3, 12);
+        let shared = DacProvisioning::paper_shared(3, 12);
+        assert_eq!(private.dac_count(), 72);
+        assert_eq!(shared.dac_count(), 36);
+        assert_eq!(private.tuning_serialization(), 1);
+        assert_eq!(shared.tuning_serialization(), 2);
+    }
+
+    #[test]
+    fn odd_columns_round_up() {
+        let shared = DacProvisioning::paper_shared(2, 5);
+        assert_eq!(shared.dac_count(), 2 * 3 * 2);
+    }
+
+    #[test]
+    fn static_power_scales_with_count() {
+        let p = DeviceParams::paper();
+        let dac = Dac::new(&p);
+        let a = DacProvisioning::private(3, 12);
+        let b = DacProvisioning::paper_shared(3, 12);
+        assert!((a.static_power_w(&dac) / b.static_power_w(&dac) - 2.0).abs() < 1e-12);
+    }
+}

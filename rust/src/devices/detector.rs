@@ -1,0 +1,152 @@
+//! Photodetectors and balanced photodetectors (paper §III.B.4, §IV.B.1).
+//!
+//! A PD converts accumulated optical intensity to an analog electrical
+//! value. A *balanced* PD (BPD) has two arms — one on the positive-polarity
+//! waveguide, one on the negative — and outputs their difference, which is
+//! how the architecture represents signed weights optically.
+
+use super::params::DeviceParams;
+
+/// Plain photodetector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Photodetector {
+    pub latency_s: f64,
+    pub power_w: f64,
+    /// Sensitivity floor in dBm — inputs below this are unreliable.
+    pub sensitivity_dbm: f64,
+}
+
+impl Photodetector {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            latency_s: params.pd_latency_s,
+            power_w: params.pd_power_w,
+            sensitivity_dbm: params.pd_sensitivity_dbm,
+        }
+    }
+
+    /// Detect: returns the electrical value for an optical power sum, or
+    /// `None` when the signal is below the sensitivity floor.
+    pub fn detect(&self, optical_power_dbm: f64, value: f64) -> Option<f64> {
+        if optical_power_dbm < self.sensitivity_dbm {
+            None
+        } else {
+            Some(value)
+        }
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.power_w * self.latency_s
+    }
+}
+
+/// Balanced photodetector: subtracts the negative arm from the positive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BalancedPhotodetector {
+    pub pd: Photodetector,
+}
+
+impl BalancedPhotodetector {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self { pd: Photodetector::new(params) }
+    }
+
+    /// Net detected value = positive-arm − negative-arm accumulation.
+    /// Both arms must clear the sensitivity floor (or carry no signal).
+    pub fn detect(
+        &self,
+        pos_power_dbm: f64,
+        pos_value: f64,
+        neg_power_dbm: f64,
+        neg_value: f64,
+    ) -> Option<f64> {
+        let p = if pos_value == 0.0 { Some(0.0) } else { self.pd.detect(pos_power_dbm, pos_value) }?;
+        let n = if neg_value == 0.0 { Some(0.0) } else { self.pd.detect(neg_power_dbm, neg_value) }?;
+        Some(p - n)
+    }
+
+    /// Latency of a balanced detection (arms in parallel).
+    pub fn latency_s(&self) -> f64 {
+        self.pd.latency_s
+    }
+
+    /// Power of both arms.
+    pub fn power_w(&self) -> f64 {
+        2.0 * self.pd.power_w
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.power_w() * self.latency_s()
+    }
+}
+
+/// Functional model of the signed dot product a BPD row computes:
+/// `Σ a_i·w⁺_i − Σ a_i·w⁻_i` where `w⁺ = max(w,0)`, `w⁻ = max(−w,0)`.
+/// This is the numerical contract the L1 Pallas kernel mirrors; keeping it
+/// here lets Rust-side tests validate the decomposition independently.
+pub fn balanced_dot(activations: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(activations.len(), weights.len());
+    let mut pos = 0.0;
+    let mut neg = 0.0;
+    for (&a, &w) in activations.iter().zip(weights) {
+        if w >= 0.0 {
+            pos += a * w;
+        } else {
+            neg += a * (-w);
+        }
+    }
+    pos - neg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn detect_above_floor() {
+        let pd = Photodetector::new(&DeviceParams::paper());
+        assert_eq!(pd.detect(-10.0, 3.5), Some(3.5));
+    }
+
+    #[test]
+    fn detect_below_floor_fails() {
+        let pd = Photodetector::new(&DeviceParams::paper());
+        assert_eq!(pd.detect(-30.0, 3.5), None);
+    }
+
+    #[test]
+    fn balanced_subtracts_arms() {
+        let bpd = BalancedPhotodetector::new(&DeviceParams::paper());
+        assert_eq!(bpd.detect(-5.0, 10.0, -5.0, 4.0), Some(6.0));
+    }
+
+    #[test]
+    fn balanced_zero_arm_needs_no_power() {
+        let bpd = BalancedPhotodetector::new(&DeviceParams::paper());
+        // Negative arm carries nothing: no sensitivity requirement.
+        assert_eq!(bpd.detect(-5.0, 10.0, -99.0, 0.0), Some(10.0));
+    }
+
+    #[test]
+    fn balanced_power_is_two_arms() {
+        let p = DeviceParams::paper();
+        let bpd = BalancedPhotodetector::new(&p);
+        assert!((bpd.power_w() - 2.0 * p.pd_power_w).abs() < 1e-15);
+    }
+
+    #[test]
+    fn balanced_dot_equals_plain_dot() {
+        forall("balanced_dot == dot", 200, |g| {
+            let n = g.usize_in(1, 64);
+            let a: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let plain: f64 = a.iter().zip(&w).map(|(x, y)| x * y).sum();
+            let balanced = balanced_dot(&a, &w);
+            assert!(
+                (plain - balanced).abs() < 1e-9 * (1.0 + plain.abs()),
+                "plain={plain} balanced={balanced}"
+            );
+        });
+    }
+}

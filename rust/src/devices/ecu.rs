@@ -1,0 +1,207 @@
+//! Electronic control unit circuits (paper §IV, §IV.B.3).
+//!
+//! The ECU interfaces with electronic memory, buffers intermediate
+//! results, maps matrices onto the photonic blocks, and executes the
+//! digital sub-operations of the pipelined softmax: a comparator tracks
+//! γ_max as scores stream out of the ADC, a subtractor computes
+//! γ_j − γ_max, and ln/exp LUTs finish Eq. 4.
+
+use super::params::DeviceParams;
+
+/// Comparator circuit (γ_max tracking).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Comparator {
+    pub latency_s: f64,
+    pub power_w: f64,
+}
+
+/// Subtractor circuit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Subtractor {
+    pub latency_s: f64,
+    pub power_w: f64,
+}
+
+/// ln/exp lookup table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lut {
+    pub latency_s: f64,
+    pub power_w: f64,
+}
+
+/// SRAM buffer model (CACTI-style): energy per access scales with
+/// capacity; leakage is proportional to capacity. Constants are fitted to
+/// CACTI 7 numbers for 32nm SRAM (the CACTI the paper cites).
+///
+/// The standard 256 KiB staging buffer is memoized ([`staging_buffer`]) —
+/// `with_capacity` costs two `powf` calls, which showed up in the
+/// simulator hot loop (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Buffer {
+    /// Capacity in bytes.
+    pub capacity_bytes: usize,
+    /// Read/write energy per byte (J).
+    pub energy_per_byte_j: f64,
+    /// Static leakage (W).
+    pub leakage_w: f64,
+    /// Access latency (s).
+    pub latency_s: f64,
+}
+
+impl Buffer {
+    /// CACTI-flavoured scaling: E/byte ≈ 0.2 pJ · (cap/32KiB)^0.5,
+    /// leakage ≈ 10 mW per MiB, latency ≈ 0.5 ns · (cap/32KiB)^0.3.
+    pub fn with_capacity(capacity_bytes: usize) -> Self {
+        let kib32 = (capacity_bytes as f64 / (32.0 * 1024.0)).max(1e-3);
+        Self {
+            capacity_bytes,
+            energy_per_byte_j: 0.2e-12 * kib32.powf(0.5),
+            leakage_w: 10e-3 * capacity_bytes as f64 / (1024.0 * 1024.0),
+            latency_s: 0.5e-9 * kib32.powf(0.3),
+        }
+    }
+
+    pub fn access_energy_j(&self, bytes: usize) -> f64 {
+        self.energy_per_byte_j * bytes as f64
+    }
+}
+
+/// The memoized 256 KiB ECU staging buffer used across the cost models.
+pub fn staging_buffer() -> &'static Buffer {
+    static BUF: once_cell::sync::Lazy<Buffer> =
+        once_cell::sync::Lazy::new(|| Buffer::with_capacity(256 * 1024));
+    &BUF
+}
+
+/// The ECU aggregate: circuits + buffers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ecu {
+    pub comparator: Comparator,
+    pub subtractor: Subtractor,
+    pub lut: Lut,
+    /// Staging buffer for attention scores / intermediate feature maps.
+    pub buffer: Buffer,
+}
+
+impl Ecu {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            comparator: Comparator {
+                latency_s: params.comparator_latency_s,
+                power_w: params.comparator_power_w,
+            },
+            subtractor: Subtractor {
+                latency_s: params.subtractor_latency_s,
+                power_w: params.subtractor_power_w,
+            },
+            lut: Lut {
+                latency_s: params.lut_latency_s,
+                power_w: params.lut_power_w,
+            },
+            buffer: Buffer::with_capacity(256 * 1024),
+        }
+    }
+
+    /// Cost of the Eq. 4 softmax over a `d`-element score vector.
+    ///
+    /// Pipelined mode (the architecture's default): the comparator tracks
+    /// γ_max concurrently with ADC streaming, so only the post-max stages
+    /// (subtract → exp LUT → accumulate → ln LUT → subtract → exp LUT)
+    /// appear on the critical path; per-element they pipeline at the rate
+    /// of the slowest stage. Unpipelined mode serialises all four phases.
+    pub fn softmax_cost(&self, d: usize, pipelined: bool) -> (f64, f64) {
+        let cmp = self.comparator;
+        let sub = self.subtractor;
+        let lut = self.lut;
+        // Energy is mechanism-independent: every element is compared,
+        // subtracted twice, LUT'd twice (exp for the sum, exp final) plus
+        // one ln for the whole vector.
+        let energy = d as f64
+            * (cmp.power_w * cmp.latency_s
+                + 2.0 * sub.power_w * sub.latency_s
+                + 2.0 * lut.power_w * lut.latency_s)
+            + lut.power_w * lut.latency_s;
+        let latency = if pipelined {
+            // Stages overlap; throughput set by the slowest stage, plus
+            // one pipeline fill of all stages.
+            let slowest = cmp.latency_s.max(sub.latency_s).max(lut.latency_s);
+            let fill = cmp.latency_s + 2.0 * sub.latency_s + 2.0 * lut.latency_s;
+            fill + (d.saturating_sub(1)) as f64 * slowest
+        } else {
+            // Four serial phases over the vector.
+            d as f64 * cmp.latency_s // phase 1: find max
+                + d as f64 * (sub.latency_s + lut.latency_s) // phase 2: Σexp
+                + lut.latency_s // ln
+                + d as f64 * sub.latency_s // phase 3: subtract
+                + d as f64 * lut.latency_s // phase 4: exp
+        };
+        (latency, energy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ecu() -> Ecu {
+        Ecu::new(&DeviceParams::paper())
+    }
+
+    #[test]
+    fn circuit_constants_from_table2() {
+        let e = ecu();
+        assert_eq!(e.comparator.latency_s, 623.7e-12);
+        assert_eq!(e.subtractor.latency_s, 719.95e-12);
+        assert_eq!(e.lut.latency_s, 222.5e-12);
+        assert_eq!(e.lut.power_w, 4.21e-3);
+    }
+
+    #[test]
+    fn buffer_scaling_monotone() {
+        let small = Buffer::with_capacity(32 * 1024);
+        let big = Buffer::with_capacity(1024 * 1024);
+        assert!(big.energy_per_byte_j > small.energy_per_byte_j);
+        assert!(big.leakage_w > small.leakage_w);
+        assert!(big.latency_s > small.latency_s);
+    }
+
+    #[test]
+    fn buffer_access_energy_linear_in_bytes() {
+        let b = Buffer::with_capacity(64 * 1024);
+        assert!((b.access_energy_j(100) - 100.0 * b.energy_per_byte_j).abs() < 1e-20);
+    }
+
+    #[test]
+    fn pipelined_softmax_is_faster() {
+        let e = ecu();
+        for d in [4usize, 64, 1024] {
+            let (lat_p, en_p) = e.softmax_cost(d, true);
+            let (lat_s, en_s) = e.softmax_cost(d, false);
+            assert!(lat_p < lat_s, "d={d}: pipelined {lat_p} !< serial {lat_s}");
+            assert!((en_p - en_s).abs() < 1e-18, "energy must not depend on pipelining");
+        }
+    }
+
+    #[test]
+    fn softmax_latency_scales_linearly() {
+        let e = ecu();
+        let (l1, _) = e.softmax_cost(100, true);
+        let (l2, _) = e.softmax_cost(200, true);
+        // Asymptotically linear in d (fill cost amortised).
+        assert!(l2 / l1 > 1.8 && l2 / l1 < 2.2, "ratio={}", l2 / l1);
+    }
+
+    #[test]
+    fn softmax_pipeline_rate_is_slowest_stage() {
+        let e = ecu();
+        let (l1, _) = e.softmax_cost(1001, true);
+        let (l0, _) = e.softmax_cost(1, true);
+        let per_elem = (l1 - l0) / 1000.0;
+        let slowest = e
+            .comparator
+            .latency_s
+            .max(e.subtractor.latency_s)
+            .max(e.lut.latency_s);
+        assert!((per_elem - slowest).abs() < 1e-15);
+    }
+}

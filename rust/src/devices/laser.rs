@@ -1,0 +1,106 @@
+//! Laser sources: VCSEL arrays with the paper's reuse strategy (§IV).
+//!
+//! "Each dense and convolution block utilizes a single VCSEL array to
+//! supply the necessary optical signals across the rows in the MR bank
+//! arrays. This VCSEL reuse strategy not only minimizes the power
+//! consumption associated with laser sources but also reduces the
+//! potential for inter-channel crosstalk."
+
+use super::params::DeviceParams;
+
+/// A VCSEL array: `wavelengths` lasers shared across `rows_served` rows of
+/// an MR bank array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VcselArray {
+    /// Number of distinct wavelengths (lasers) in the array.
+    pub wavelengths: usize,
+    /// How many MR-bank rows this one array feeds (reuse factor).
+    pub rows_served: usize,
+    /// Per-laser drive power (W).
+    pub power_per_laser_w: f64,
+    /// Modulation latency (s).
+    pub latency_s: f64,
+}
+
+impl VcselArray {
+    pub fn new(wavelengths: usize, rows_served: usize, params: &DeviceParams) -> Self {
+        assert!(wavelengths > 0 && rows_served > 0);
+        Self {
+            wavelengths,
+            rows_served,
+            power_per_laser_w: params.vcsel_power_w,
+            latency_s: params.vcsel_latency_s,
+        }
+    }
+
+    /// Static electrical power of the array while lasing (W).
+    pub fn power_w(&self) -> f64 {
+        self.wavelengths as f64 * self.power_per_laser_w
+    }
+
+    /// Power per served row — the quantity reuse reduces (W/row).
+    pub fn power_per_row_w(&self) -> f64 {
+        self.power_w() / self.rows_served as f64
+    }
+
+    /// Energy to keep the array lasing for `duration_s` (J).
+    pub fn energy_j(&self, duration_s: f64) -> f64 {
+        self.power_w() * duration_s
+    }
+
+    /// Crosstalk exposure proxy: number of independently modulated laser
+    /// lines per physical distribution tree. Reuse keeps this at
+    /// `wavelengths` instead of `wavelengths × rows` (paper cites [32]).
+    pub fn independent_lines(&self) -> usize {
+        self.wavelengths
+    }
+}
+
+/// Compare VCSEL-per-row vs the paper's shared-array strategy.
+///
+/// Returns (watts_private, watts_shared) for an array geometry.
+pub fn reuse_saving(rows: usize, wavelengths: usize, params: &DeviceParams) -> (f64, f64) {
+    let private = rows as f64 * wavelengths as f64 * params.vcsel_power_w;
+    let shared = VcselArray::new(wavelengths, rows, params).power_w();
+    (private, shared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_scales_with_wavelengths() {
+        let p = DeviceParams::paper();
+        let a = VcselArray::new(8, 3, &p);
+        assert!((a.power_w() - 8.0 * 1.3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reuse_divides_per_row_power() {
+        let p = DeviceParams::paper();
+        let a = VcselArray::new(8, 4, &p);
+        assert!((a.power_per_row_w() - a.power_w() / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reuse_saving_is_rows_fold() {
+        let p = DeviceParams::paper();
+        let (private, shared) = reuse_saving(3, 12, &p);
+        assert!((private / shared - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_proportional_to_duration() {
+        let p = DeviceParams::paper();
+        let a = VcselArray::new(4, 2, &p);
+        assert!((a.energy_j(2.0) - 2.0 * a.power_w()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn crosstalk_lines_bounded_by_wavelengths() {
+        let p = DeviceParams::paper();
+        let a = VcselArray::new(16, 3, &p);
+        assert_eq!(a.independent_lines(), 16);
+    }
+}

@@ -1,0 +1,174 @@
+//! Photonic loss budget and laser-power solver (paper §V).
+//!
+//! "Factors contributing to photonic signal losses, such as waveguide
+//! propagation (1 dB/cm), splitter (0.13 dB), MR through (0.02 dB) and MR
+//! modulation (0.72 dB) losses are taken into account when determining
+//! appropriate laser power."
+//!
+//! The solver walks the optical path of one row of an MR bank array,
+//! accumulates worst-case loss in dB, and back-computes the per-wavelength
+//! laser output power needed for the photodetector to stay above its
+//! sensitivity floor.
+
+use super::params::DeviceParams;
+
+/// Itemised loss budget for one optical path (all in dB).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LossBudget {
+    pub propagation_db: f64,
+    pub splitter_db: f64,
+    pub mr_through_db: f64,
+    pub mr_modulation_db: f64,
+}
+
+impl LossBudget {
+    pub fn total_db(&self) -> f64 {
+        self.propagation_db + self.splitter_db + self.mr_through_db + self.mr_modulation_db
+    }
+}
+
+/// Describe the optical path of one row in a block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpticalPath {
+    /// Physical waveguide length in centimetres.
+    pub waveguide_length_cm: f64,
+    /// Splitters traversed (power splits for broadcast).
+    pub splitters: usize,
+    /// MRs passed *by* without interacting (through loss each).
+    pub mrs_passed: usize,
+    /// MRs that actively modulate the signal (modulation loss each).
+    pub mrs_modulating: usize,
+}
+
+impl OpticalPath {
+    /// Path for one row of a two-bank block (activation bank then weight
+    /// bank): the signal interacts with 2 MRs (its own wavelength in each
+    /// bank) and passes the other `2·(λ−1)` rings.
+    pub fn two_bank_row(wavelengths: usize, waveguide_length_cm: f64, splitters: usize) -> Self {
+        assert!(wavelengths >= 1);
+        Self {
+            waveguide_length_cm,
+            splitters,
+            mrs_passed: 2 * (wavelengths - 1),
+            mrs_modulating: 2,
+        }
+    }
+
+    /// Compute the loss budget under the given device parameters.
+    pub fn budget(&self, params: &DeviceParams) -> LossBudget {
+        LossBudget {
+            propagation_db: self.waveguide_length_cm * params.waveguide_loss_db_per_cm,
+            splitter_db: self.splitters as f64 * params.splitter_loss_db,
+            mr_through_db: self.mrs_passed as f64 * params.mr_through_loss_db,
+            mr_modulation_db: self.mrs_modulating as f64 * params.mr_modulation_loss_db,
+        }
+    }
+}
+
+/// Result of the laser-power solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaserSolve {
+    /// Required laser output per wavelength, dBm.
+    pub required_dbm: f64,
+    /// Required laser output per wavelength, mW.
+    pub required_mw: f64,
+    /// Wall-plug electrical power per wavelength, mW.
+    pub electrical_mw: f64,
+    /// Total path loss, dB.
+    pub loss_db: f64,
+}
+
+/// Solve for the laser power one wavelength needs so the PD receives at
+/// least its sensitivity floor after all path losses.
+pub fn solve_laser_power(path: &OpticalPath, params: &DeviceParams) -> LaserSolve {
+    let loss_db = path.budget(params).total_db();
+    let required_dbm = params.pd_sensitivity_dbm + loss_db;
+    let required_mw = 10f64.powf(required_dbm / 10.0);
+    let electrical_mw = required_mw / params.laser_wall_plug_efficiency;
+    LaserSolve { required_dbm, required_mw, electrical_mw, loss_db }
+}
+
+/// Check the 36-MR design rule for a proposed wavelength count.
+pub fn check_mr_design_rule(wavelengths: usize, params: &DeviceParams) -> crate::Result<()> {
+    if wavelengths > params.max_mrs_per_waveguide {
+        anyhow::bail!(
+            "{} wavelengths exceed the {}-MR/waveguide error-free design rule",
+            wavelengths,
+            params.max_mrs_per_waveguide
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn budget_itemisation() {
+        let p = params();
+        let path = OpticalPath {
+            waveguide_length_cm: 2.0,
+            splitters: 3,
+            mrs_passed: 10,
+            mrs_modulating: 2,
+        };
+        let b = path.budget(&p);
+        assert!((b.propagation_db - 2.0).abs() < 1e-12);
+        assert!((b.splitter_db - 0.39).abs() < 1e-12);
+        assert!((b.mr_through_db - 0.2).abs() < 1e-12);
+        assert!((b.mr_modulation_db - 1.44).abs() < 1e-12);
+        assert!((b.total_db() - 4.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_bank_row_path() {
+        let path = OpticalPath::two_bank_row(36, 1.0, 1);
+        assert_eq!(path.mrs_passed, 70);
+        assert_eq!(path.mrs_modulating, 2);
+    }
+
+    #[test]
+    fn laser_power_covers_loss() {
+        let p = params();
+        let path = OpticalPath::two_bank_row(36, 1.0, 2);
+        let s = solve_laser_power(&path, &p);
+        // received = required − loss = sensitivity floor exactly
+        assert!((s.required_dbm - s.loss_db - p.pd_sensitivity_dbm).abs() < 1e-12);
+        assert!(s.required_mw > 0.0);
+        assert!(s.electrical_mw > s.required_mw); // wall plug < 100%
+    }
+
+    #[test]
+    fn more_wavelengths_cost_more_power() {
+        let p = params();
+        let a = solve_laser_power(&OpticalPath::two_bank_row(8, 1.0, 1), &p);
+        let b = solve_laser_power(&OpticalPath::two_bank_row(36, 1.0, 1), &p);
+        assert!(b.required_mw > a.required_mw);
+    }
+
+    #[test]
+    fn design_rule_enforced() {
+        let p = params();
+        assert!(check_mr_design_rule(36, &p).is_ok());
+        assert!(check_mr_design_rule(37, &p).is_err());
+    }
+
+    #[test]
+    fn worst_case_36_wavelength_path_is_feasible() {
+        // Sanity: the full-size DiffLight row must need < 10 mW optical
+        // per wavelength, else the architecture wouldn't be buildable.
+        let p = params();
+        let path = OpticalPath::two_bank_row(36, 1.5, 3);
+        let s = solve_laser_power(&path, &p);
+        assert!(
+            s.required_mw < 10.0,
+            "required {:.3} mW — loss budget implausible",
+            s.required_mw
+        );
+    }
+}

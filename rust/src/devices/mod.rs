@@ -1,0 +1,21 @@
+//! Optoelectronic device library (paper §III.B, §IV.A, Table II).
+//!
+//! Every component the DiffLight architecture instantiates is modelled
+//! here as a small struct exposing *latency* (seconds) and *power* (watts)
+//! plus device-specific behaviour (tuning range selection, balanced
+//! detection, loss accumulation). Constants come from Table II of the
+//! paper, which in turn derives from fabricated devices ([24][25][31] in
+//! the paper's bibliography), Cadence Genus synthesis (comparator,
+//! subtractor), and CACTI (LUTs, buffers).
+
+pub mod converter;
+pub mod detector;
+pub mod ecu;
+pub mod laser;
+pub mod loss;
+pub mod mr;
+pub mod params;
+pub mod soa;
+pub mod tuning;
+
+pub use params::DeviceParams;

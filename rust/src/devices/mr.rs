@@ -1,0 +1,245 @@
+//! Microring resonators (MRs) and MR bank arrays (paper §III.B.3, §IV.B).
+//!
+//! An MR selectively modulates one wavelength; a *bank* is a column of MRs
+//! (one per wavelength) that imprints a vector onto the WDM signal; a
+//! *bank array* of dimensions `rows × cols` performs a matrix of
+//! element-wise modulations feeding balanced photodetectors.
+
+use super::params::DeviceParams;
+use super::tuning::{HybridTuner, TuningEvent};
+
+/// Resonance geometry of a single fabricated MR.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MrGeometry {
+    /// Ring radius in micrometres.
+    pub radius_um: f64,
+    /// Resonance order `m`.
+    pub order: u32,
+    /// Effective refractive index.
+    pub n_eff: f64,
+}
+
+impl MrGeometry {
+    /// Resonant wavelength λ_MR = 2πR·n_eff / m (paper §III.B.3), in µm.
+    pub fn resonant_wavelength_um(&self) -> f64 {
+        2.0 * std::f64::consts::PI * self.radius_um * self.n_eff / self.order as f64
+    }
+
+    /// Typical C-band ring: r = 5 µm, n_eff = 2.4, order chosen to land
+    /// near 1550 nm.
+    pub fn c_band() -> Self {
+        // 2π·5·2.4 / m ≈ 1.55  →  m ≈ 48.6 → m = 49 → λ ≈ 1.539 µm.
+        Self { radius_um: 5.0, order: 49, n_eff: 2.4 }
+    }
+}
+
+/// A single microring modulator with its hybrid tuning circuit.
+#[derive(Debug, Clone)]
+pub struct Microring {
+    pub geometry: MrGeometry,
+    tuner: HybridTuner,
+    /// Currently imprinted (quantized) value, if any.
+    value: Option<i8>,
+}
+
+impl Microring {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            geometry: MrGeometry::c_band(),
+            tuner: HybridTuner::new(params),
+            value: None,
+        }
+    }
+
+    /// Program a new 8-bit value onto the ring. Returns the tuning event
+    /// (EO for small shifts from the previous value, TO escalation when the
+    /// requested shift exceeds the EO range).
+    pub fn program(&mut self, value: i8) -> TuningEvent {
+        let prev = self.value.replace(value).unwrap_or(0);
+        // Normalised retune distance in [0,1]: fraction of full-scale the
+        // resonance must move.
+        let dist = (value as f64 - prev as f64).abs() / 255.0;
+        self.tuner.tune(dist)
+    }
+
+    pub fn value(&self) -> Option<i8> {
+        self.value
+    }
+}
+
+/// One column of `wavelengths` MRs — imprints a vector on the WDM signal.
+#[derive(Debug, Clone)]
+pub struct MrBank {
+    pub rings: Vec<Microring>,
+}
+
+impl MrBank {
+    pub fn new(wavelengths: usize, params: &DeviceParams) -> Self {
+        assert!(
+            wavelengths <= params.max_mrs_per_waveguide,
+            "bank of {wavelengths} MRs exceeds the {}-MR/waveguide design rule",
+            params.max_mrs_per_waveguide
+        );
+        Self {
+            rings: (0..wavelengths).map(|_| Microring::new(params)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rings.is_empty()
+    }
+
+    /// Program the whole bank with a vector (padded/truncated to the bank
+    /// size). Returns the worst-case (slowest) tuning event — rings retune
+    /// in parallel, so bank latency is the max over rings.
+    pub fn program(&mut self, values: &[i8]) -> TuningEvent {
+        let mut worst = TuningEvent::noop();
+        for (i, ring) in self.rings.iter_mut().enumerate() {
+            let v = values.get(i).copied().unwrap_or(0);
+            let ev = ring.program(v);
+            if ev.latency_s > worst.latency_s {
+                worst = ev;
+            }
+        }
+        worst
+    }
+}
+
+/// An MR bank *array*: `rows` waveguide pairs × `cols` banks, the tile
+/// geometry of the conv/norm (K×N) and attention (M×L) blocks. Each row
+/// carries a positive and a negative polarity waveguide feeding a balanced
+/// photodetector (§IV.B.1).
+#[derive(Debug, Clone)]
+pub struct MrBankArray {
+    pub rows: usize,
+    pub cols: usize,
+    pub wavelengths: usize,
+}
+
+impl MrBankArray {
+    pub fn new(rows: usize, cols: usize, wavelengths: usize, params: &DeviceParams) -> Self {
+        assert!(rows > 0 && cols > 0 && wavelengths > 0);
+        assert!(
+            wavelengths <= params.max_mrs_per_waveguide,
+            "array wavelength count {wavelengths} exceeds the {}-MR design rule",
+            params.max_mrs_per_waveguide
+        );
+        Self { rows, cols, wavelengths }
+    }
+
+    /// Total MR count: rows × cols × wavelengths × 2 polarities.
+    pub fn mr_count(&self) -> usize {
+        self.rows * self.cols * self.wavelengths * 2
+    }
+
+    /// MACs performed per optical pass: every (row, col, wavelength)
+    /// contributes one multiply; accumulation is free in the PD.
+    pub fn macs_per_pass(&self) -> usize {
+        self.rows * self.cols * self.wavelengths
+    }
+
+    /// Number of DACs when each column has private converters (one DAC per
+    /// column per row-pair rail).
+    pub fn dac_count_private(&self) -> usize {
+        self.rows * self.cols * 2
+    }
+
+    /// Number of DACs under the paper's DAC-sharing strategy: each *pair*
+    /// of columns shares one set (§IV.C), halving converter count but
+    /// serialising the two columns' tuning.
+    pub fn dac_count_shared(&self) -> usize {
+        self.rows * self.cols.div_ceil(2) * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> DeviceParams {
+        DeviceParams::paper()
+    }
+
+    #[test]
+    fn resonant_wavelength_formula() {
+        let g = MrGeometry { radius_um: 5.0, order: 49, n_eff: 2.4 };
+        let lambda = g.resonant_wavelength_um();
+        // 2π·5·2.4/49 ≈ 1.5386
+        assert!((lambda - 1.5386).abs() < 1e-3, "λ={lambda}");
+    }
+
+    #[test]
+    fn c_band_lands_near_1550nm() {
+        let lambda = MrGeometry::c_band().resonant_wavelength_um();
+        assert!((1.5..1.6).contains(&lambda), "λ={lambda} µm");
+    }
+
+    #[test]
+    fn small_program_uses_eo() {
+        let p = params();
+        let mut mr = Microring::new(&p);
+        let ev = mr.program(1); // tiny shift from 0
+        assert!(ev.used_eo_only(), "small retune should stay electro-optic");
+        assert_eq!(ev.latency_s, p.eo_tuning_latency_s);
+    }
+
+    #[test]
+    fn large_program_escalates_to_to() {
+        let p = params();
+        let mut mr = Microring::new(&p);
+        mr.program(-128);
+        let ev = mr.program(127); // full-scale swing
+        assert!(!ev.used_eo_only(), "full-scale retune needs thermo-optic");
+        assert!(ev.latency_s >= p.to_tuning_latency_s);
+    }
+
+    #[test]
+    fn bank_latency_is_worst_ring() {
+        let p = params();
+        let mut bank = MrBank::new(8, &p);
+        // One ring requires a huge swing, others small.
+        let mut values = vec![1i8; 8];
+        bank.program(&values);
+        values[3] = 127;
+        values[0] = 2;
+        let ev = bank.program(&values);
+        assert!(ev.latency_s >= p.eo_tuning_latency_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "design rule")]
+    fn bank_enforces_36_mr_rule() {
+        let p = params();
+        let _ = MrBank::new(37, &p);
+    }
+
+    #[test]
+    fn array_counts() {
+        let p = params();
+        let a = MrBankArray::new(3, 12, 36, &p);
+        assert_eq!(a.mr_count(), 3 * 12 * 36 * 2);
+        assert_eq!(a.macs_per_pass(), 3 * 12 * 36);
+        assert_eq!(a.dac_count_private(), 72);
+        assert_eq!(a.dac_count_shared(), 36);
+    }
+
+    #[test]
+    fn dac_sharing_halves_even_columns() {
+        let p = params();
+        let a = MrBankArray::new(2, 7, 8, &p); // odd cols round up
+        assert_eq!(a.dac_count_private(), 28);
+        assert_eq!(a.dac_count_shared(), 16); // ceil(7/2)=4 → 2*4*2
+    }
+
+    #[test]
+    fn program_value_retained() {
+        let p = params();
+        let mut mr = Microring::new(&p);
+        mr.program(42);
+        assert_eq!(mr.value(), Some(42));
+    }
+}

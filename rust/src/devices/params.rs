@@ -1,0 +1,212 @@
+//! Table II — optoelectronic device parameters, verbatim from the paper.
+//!
+//! | Device        | Latency   | Power        |
+//! |---------------|-----------|--------------|
+//! | EO tuning     | 20 ns     | 4 µW         |
+//! | TO tuning     | 4 µs      | 27.5 mW/FSR  |
+//! | VCSEL         | 0.07 ns   | 1.3 mW       |
+//! | Photodetector | 5.8 ps    | 2.8 mW       |
+//! | SOA           | 0.3 ns    | 2.2 mW       |
+//! | DAC (8-bit)   | 0.29 ns   | 3 mW         |
+//! | ADC (8-bit)   | 0.82 ns   | 3.1 mW       |
+//! | Comparator    | 623.7 ps  | 0.055 mW     |
+//! | Subtractor    | 719.95 ps | 0.0028 mW    |
+//! | LUT           | 222.5 ps  | 4.21 mW      |
+//!
+//! All latencies are stored in **seconds**, all powers in **watts**, so
+//! energy = power × latency composes without unit juggling.
+
+/// Full device parameter set. One instance is shared by the whole
+/// simulator; tests construct variants to probe sensitivity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceParams {
+    // --- tuning (§IV.A hybrid EO/TO) ---
+    /// Electro-optic tuning latency (fast path, small Δλ).
+    pub eo_tuning_latency_s: f64,
+    /// Electro-optic tuning power.
+    pub eo_tuning_power_w: f64,
+    /// Thermo-optic tuning latency (slow path, large Δλ).
+    pub to_tuning_latency_s: f64,
+    /// Thermo-optic tuning power per free spectral range.
+    pub to_tuning_power_w_per_fsr: f64,
+
+    // --- photonic datapath ---
+    /// VCSEL modulation latency.
+    pub vcsel_latency_s: f64,
+    /// VCSEL drive power.
+    pub vcsel_power_w: f64,
+    /// Photodetector conversion latency.
+    pub pd_latency_s: f64,
+    /// Photodetector power.
+    pub pd_power_w: f64,
+    /// Semiconductor optical amplifier latency (activation block).
+    pub soa_latency_s: f64,
+    /// SOA power.
+    pub soa_power_w: f64,
+
+    // --- converters ---
+    /// 8-bit DAC conversion latency.
+    pub dac_latency_s: f64,
+    /// 8-bit DAC power.
+    pub dac_power_w: f64,
+    /// 8-bit ADC conversion latency.
+    pub adc_latency_s: f64,
+    /// 8-bit ADC power.
+    pub adc_power_w: f64,
+
+    // --- ECU electronic circuits (Genus/CACTI) ---
+    /// Comparator latency (γ_max tracking in pipelined softmax).
+    pub comparator_latency_s: f64,
+    /// Comparator power.
+    pub comparator_power_w: f64,
+    /// Subtractor latency (γ_j − γ_max).
+    pub subtractor_latency_s: f64,
+    /// Subtractor power.
+    pub subtractor_power_w: f64,
+    /// LUT lookup latency (ln / exp tables).
+    pub lut_latency_s: f64,
+    /// LUT power.
+    pub lut_power_w: f64,
+
+    // --- optical losses (§V) ---
+    /// Waveguide propagation loss, dB per centimetre.
+    pub waveguide_loss_db_per_cm: f64,
+    /// Splitter insertion loss, dB.
+    pub splitter_loss_db: f64,
+    /// MR through (pass-by) loss, dB.
+    pub mr_through_loss_db: f64,
+    /// MR modulation (drop) loss, dB.
+    pub mr_modulation_loss_db: f64,
+
+    // --- design rules ---
+    /// Max MRs per waveguide for error-free non-coherent operation (§V,
+    /// from the Lumerical FDTD/CHARGE/MODE/INTERCONNECT analysis).
+    pub max_mrs_per_waveguide: usize,
+    /// Photodetector sensitivity floor, dBm — the minimum optical power a
+    /// PD must receive; the laser-power solver works back from this.
+    pub pd_sensitivity_dbm: f64,
+    /// Wall-plug efficiency of the laser (fraction of electrical power
+    /// converted to optical power).
+    pub laser_wall_plug_efficiency: f64,
+    /// Datapath bit-width after W8A8 quantization.
+    pub bit_width: u32,
+}
+
+impl DeviceParams {
+    /// Table II values, plus §V loss budget, as published.
+    pub fn paper() -> Self {
+        Self {
+            eo_tuning_latency_s: 20e-9,
+            eo_tuning_power_w: 4e-6,
+            to_tuning_latency_s: 4e-6,
+            to_tuning_power_w_per_fsr: 27.5e-3,
+            vcsel_latency_s: 0.07e-9,
+            vcsel_power_w: 1.3e-3,
+            pd_latency_s: 5.8e-12,
+            pd_power_w: 2.8e-3,
+            soa_latency_s: 0.3e-9,
+            soa_power_w: 2.2e-3,
+            dac_latency_s: 0.29e-9,
+            dac_power_w: 3e-3,
+            adc_latency_s: 0.82e-9,
+            adc_power_w: 3.1e-3,
+            comparator_latency_s: 623.7e-12,
+            comparator_power_w: 0.055e-3,
+            subtractor_latency_s: 719.95e-12,
+            subtractor_power_w: 0.0028e-3,
+            lut_latency_s: 222.5e-12,
+            lut_power_w: 4.21e-3,
+            waveguide_loss_db_per_cm: 1.0,
+            splitter_loss_db: 0.13,
+            mr_through_loss_db: 0.02,
+            mr_modulation_loss_db: 0.72,
+            max_mrs_per_waveguide: 36,
+            // PD sensitivity for 10+ GS/s germanium PDs at BER 1e-12 is
+            // around −20 dBm (survey [31]); used only by the laser-power
+            // solver, where the paper gives no explicit figure.
+            pd_sensitivity_dbm: -20.0,
+            // Typical integrated-laser wall-plug efficiency (~20%).
+            laser_wall_plug_efficiency: 0.2,
+            bit_width: 8,
+        }
+    }
+
+    /// Energy of one DAC conversion (J).
+    pub fn dac_energy_j(&self) -> f64 {
+        self.dac_power_w * self.dac_latency_s
+    }
+
+    /// Energy of one ADC conversion (J).
+    pub fn adc_energy_j(&self) -> f64 {
+        self.adc_power_w * self.adc_latency_s
+    }
+
+    /// Energy of one EO retune (J).
+    pub fn eo_tune_energy_j(&self) -> f64 {
+        self.eo_tuning_power_w * self.eo_tuning_latency_s
+    }
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values_verbatim() {
+        let p = DeviceParams::paper();
+        // Latencies.
+        assert_eq!(p.eo_tuning_latency_s, 20e-9);
+        assert_eq!(p.to_tuning_latency_s, 4e-6);
+        assert_eq!(p.vcsel_latency_s, 0.07e-9);
+        assert_eq!(p.pd_latency_s, 5.8e-12);
+        assert_eq!(p.soa_latency_s, 0.3e-9);
+        assert_eq!(p.dac_latency_s, 0.29e-9);
+        assert_eq!(p.adc_latency_s, 0.82e-9);
+        assert_eq!(p.comparator_latency_s, 623.7e-12);
+        assert_eq!(p.subtractor_latency_s, 719.95e-12);
+        assert_eq!(p.lut_latency_s, 222.5e-12);
+        // Powers.
+        assert_eq!(p.eo_tuning_power_w, 4e-6);
+        assert_eq!(p.to_tuning_power_w_per_fsr, 27.5e-3);
+        assert_eq!(p.vcsel_power_w, 1.3e-3);
+        assert_eq!(p.pd_power_w, 2.8e-3);
+        assert_eq!(p.soa_power_w, 2.2e-3);
+        assert_eq!(p.dac_power_w, 3e-3);
+        assert_eq!(p.adc_power_w, 3.1e-3);
+        assert_eq!(p.comparator_power_w, 0.055e-3);
+        assert_eq!(p.subtractor_power_w, 0.0028e-3);
+        assert_eq!(p.lut_power_w, 4.21e-3);
+    }
+
+    #[test]
+    fn loss_budget_verbatim() {
+        let p = DeviceParams::paper();
+        assert_eq!(p.waveguide_loss_db_per_cm, 1.0);
+        assert_eq!(p.splitter_loss_db, 0.13);
+        assert_eq!(p.mr_through_loss_db, 0.02);
+        assert_eq!(p.mr_modulation_loss_db, 0.72);
+        assert_eq!(p.max_mrs_per_waveguide, 36);
+    }
+
+    #[test]
+    fn derived_energies_positive_and_consistent() {
+        let p = DeviceParams::paper();
+        assert!((p.dac_energy_j() - 3e-3 * 0.29e-9).abs() < 1e-18);
+        assert!(p.adc_energy_j() > p.dac_energy_j()); // ADC costs more
+        assert!(p.eo_tune_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn adc_slower_than_dac() {
+        // Architectural premise behind DAC sharing: converters dominate;
+        // ADC is the slower of the two.
+        let p = DeviceParams::paper();
+        assert!(p.adc_latency_s > p.dac_latency_s);
+    }
+}

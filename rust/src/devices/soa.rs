@@ -1,0 +1,153 @@
+//! SOA-based optical nonlinearity (paper §IV.B.2, Fig. 5).
+//!
+//! Semiconductor optical amplifiers realise a saturating transfer curve
+//! that previous work ([27]) used as an optical sigmoid. DiffLight builds
+//! the swish activation `f(x) = x · sigmoid(x)` from: a VCSEL driven by x,
+//! the SOA sigmoid stage, a PD reading sigmoid(x), and an MR multiplying
+//! the two on the next waveguide.
+
+use super::params::DeviceParams;
+
+/// The SOA sigmoid stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SoaSigmoid {
+    pub latency_s: f64,
+    pub power_w: f64,
+    /// Gain-saturation steepness of the transfer curve; 1.0 reproduces the
+    /// logistic sigmoid the kernel/oracle use.
+    pub steepness: f64,
+}
+
+impl SoaSigmoid {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            latency_s: params.soa_latency_s,
+            power_w: params.soa_power_w,
+            steepness: 1.0,
+        }
+    }
+
+    /// Transfer function of the SOA stage.
+    pub fn transfer(&self, x: f64) -> f64 {
+        1.0 / (1.0 + (-self.steepness * x).exp())
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.power_w * self.latency_s
+    }
+}
+
+/// The full swish block of Fig. 5: VCSEL → SOA(sigmoid) → PD → MR(×).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwishBlock {
+    pub soa: SoaSigmoid,
+    vcsel_latency_s: f64,
+    vcsel_power_w: f64,
+    pd_latency_s: f64,
+    pd_power_w: f64,
+    eo_tune_latency_s: f64,
+    eo_tune_energy_j: f64,
+}
+
+impl SwishBlock {
+    pub fn new(params: &DeviceParams) -> Self {
+        Self {
+            soa: SoaSigmoid::new(params),
+            vcsel_latency_s: params.vcsel_latency_s,
+            vcsel_power_w: params.vcsel_power_w,
+            pd_latency_s: params.pd_latency_s,
+            pd_power_w: params.pd_power_w,
+            eo_tune_latency_s: params.eo_tuning_latency_s,
+            eo_tune_energy_j: params.eo_tune_energy_j(),
+        }
+    }
+
+    /// Functional output: swish(x) = x · sigmoid(x).
+    pub fn eval(&self, x: f64) -> f64 {
+        x * self.soa.transfer(x)
+    }
+
+    /// Latency of one element through the block: the stages are a serial
+    /// optical path (VCSEL → SOA → PD → MR retune → PD).
+    pub fn latency_s(&self) -> f64 {
+        self.vcsel_latency_s
+            + self.soa.latency_s
+            + self.pd_latency_s
+            + self.eo_tune_latency_s // program the multiplier MR
+            + self.pd_latency_s // detect the product
+    }
+
+    /// Energy of one element through the block.
+    pub fn energy_j(&self) -> f64 {
+        self.vcsel_power_w * self.vcsel_latency_s
+            + self.soa.energy_j()
+            + 2.0 * self.pd_power_w * self.pd_latency_s
+            + self.eo_tune_energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn block() -> SwishBlock {
+        SwishBlock::new(&DeviceParams::paper())
+    }
+
+    #[test]
+    fn sigmoid_midpoint() {
+        let s = SoaSigmoid::new(&DeviceParams::paper());
+        assert!((s.transfer(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_saturates() {
+        let s = SoaSigmoid::new(&DeviceParams::paper());
+        assert!(s.transfer(20.0) > 0.999);
+        assert!(s.transfer(-20.0) < 0.001);
+    }
+
+    #[test]
+    fn swish_known_values() {
+        let b = block();
+        assert!((b.eval(0.0)).abs() < 1e-12);
+        // swish(1) = 1·σ(1) ≈ 0.731058
+        assert!((b.eval(1.0) - 0.731_058_578_630_0049).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swish_is_bounded_below() {
+        // swish min ≈ −0.278 at x ≈ −1.2785
+        forall("swish lower bound", 500, |g| {
+            let x = g.f64_in(-50.0, 50.0);
+            assert!(block().eval(x) >= -0.2785);
+        });
+    }
+
+    #[test]
+    fn swish_monotone_for_positive_x() {
+        let b = block();
+        let mut prev = b.eval(0.0);
+        for i in 1..100 {
+            let v = b.eval(i as f64 * 0.1);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn latency_dominated_by_soa_and_tuning() {
+        let b = block();
+        let p = DeviceParams::paper();
+        assert!(b.latency_s() > p.soa_latency_s);
+        assert!(b.latency_s() < 1e-6, "swish path must stay sub-microsecond");
+    }
+
+    #[test]
+    fn energy_positive_and_small() {
+        let b = block();
+        assert!(b.energy_j() > 0.0);
+        assert!(b.energy_j() < 1e-9, "per-element activation energy should be < 1 nJ");
+    }
+}

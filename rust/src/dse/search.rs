@@ -1,0 +1,125 @@
+//! DSE evaluation and search.
+
+use crate::arch::cost::OptFlags;
+use crate::arch::units::Accelerator;
+use crate::arch::ArchConfig;
+use crate::devices::DeviceParams;
+use crate::sim::Simulator;
+use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{ModelId, ModelSpec};
+
+use super::space::DesignSpace;
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DsePoint {
+    pub config: ArchConfig,
+    /// Average GOPS across the four Table I workloads.
+    pub avg_gops: f64,
+    /// Average EPB (J/bit) across the workloads.
+    pub avg_epb: f64,
+    /// The paper's figure of merit: GOPS / EPB.
+    pub objective: f64,
+    /// Silicon footprint (total MRs).
+    pub total_mrs: usize,
+}
+
+/// Evaluate one configuration over all four workloads with the full
+/// optimization set (the DSE in §V precedes the Fig. 8 ablation, so it
+/// runs the optimized dataflow).
+pub fn evaluate(config: ArchConfig, params: &DeviceParams) -> Option<DsePoint> {
+    let acc = Accelerator::new(config, params).ok()?;
+    let sim = Simulator::new(acc, params.clone());
+    let mut gops = Vec::new();
+    let mut epb = Vec::new();
+    for id in ModelId::ALL {
+        let run = sim.run_model(&ModelSpec::get(id), OptFlags::ALL);
+        gops.push(run.gops());
+        epb.push(run.epb());
+    }
+    let avg_gops = stats::mean(&gops);
+    let avg_epb = stats::mean(&epb);
+    Some(DsePoint {
+        config,
+        avg_gops,
+        avg_epb,
+        objective: avg_gops / avg_epb,
+        total_mrs: config.total_mrs(),
+    })
+}
+
+/// Exhaustively evaluate the space on `threads` workers; returns points
+/// sorted by objective, best first.
+pub fn explore(space: &DesignSpace, params: &DeviceParams, threads: usize) -> Vec<DsePoint> {
+    let candidates = space.candidates();
+    let pool = ThreadPool::new(threads.max(1));
+    let params2 = params.clone();
+    let mut points: Vec<DsePoint> = pool
+        .map(candidates, move |cfg| evaluate(cfg, &params2))
+        .into_iter()
+        .flatten()
+        .collect();
+    points.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_paper_config() {
+        let p = DeviceParams::paper();
+        let pt = evaluate(ArchConfig::paper_optimal(), &p).unwrap();
+        assert!(pt.avg_gops > 0.0);
+        assert!(pt.avg_epb > 0.0);
+        assert!(pt.objective.is_finite());
+    }
+
+    #[test]
+    fn invalid_config_yields_none() {
+        let p = DeviceParams::paper();
+        let bad = ArchConfig::from_vector([4, 12, 3, 6, 6, 3], 99);
+        assert!(evaluate(bad, &p).is_none());
+    }
+
+    #[test]
+    fn explore_small_space_sorted() {
+        let p = DeviceParams::paper();
+        let space = DesignSpace {
+            y: vec![2, 4],
+            n: vec![8, 12],
+            k: vec![3],
+            h: vec![4, 6],
+            l: vec![6],
+            m: vec![3],
+            wavelengths: 36,
+            max_total_mrs: usize::MAX,
+        };
+        let pts = explore(&space, &p, 4);
+        assert_eq!(pts.len(), 8);
+        for w in pts.windows(2) {
+            assert!(w[0].objective >= w[1].objective);
+        }
+    }
+
+    #[test]
+    fn paper_config_is_near_optimal_in_its_space() {
+        // The published [4,12,3,6,6,3] must rank at the very top of the
+        // paper sweep under the silicon budget (DSE reproduction).
+        let p = DeviceParams::paper();
+        let pts = explore(&DesignSpace::paper(), &p, 8);
+        let rank = pts
+            .iter()
+            .position(|pt| pt.config.vector() == crate::PAPER_OPTIMAL_CONFIG)
+            .expect("paper config evaluated");
+        let frac = rank as f64 / pts.len() as f64;
+        assert!(
+            frac < 0.01,
+            "paper config ranks {rank}/{} ({}%)",
+            pts.len(),
+            (frac * 100.0) as u32
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! The architectural design space.
+
+use crate::arch::ArchConfig;
+
+/// Candidate ranges per architectural parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignSpace {
+    pub y: Vec<usize>,
+    pub n: Vec<usize>,
+    pub k: Vec<usize>,
+    pub h: Vec<usize>,
+    pub l: Vec<usize>,
+    pub m: Vec<usize>,
+    pub wavelengths: usize,
+    /// Silicon budget: maximum total MR count a candidate may use.
+    pub max_total_mrs: usize,
+}
+
+impl DesignSpace {
+    /// The sweep used by the paper-reproduction bench: a neighbourhood
+    /// around plausible block counts/geometries, with the silicon budget
+    /// set to the paper configuration's footprint (+5% slack).
+    pub fn paper() -> Self {
+        let budget = ArchConfig::paper_optimal().total_mrs();
+        Self {
+            y: vec![1, 2, 4, 6, 8],
+            n: vec![4, 8, 12, 16, 24],
+            k: vec![1, 2, 3, 4, 6],
+            h: vec![2, 4, 6, 8],
+            l: vec![2, 4, 6, 8, 12],
+            m: vec![1, 2, 3, 4, 6],
+            wavelengths: 36,
+            max_total_mrs: budget + budget / 20,
+        }
+    }
+
+    /// Enumerate all in-budget candidates.
+    pub fn candidates(&self) -> Vec<ArchConfig> {
+        let mut out = Vec::new();
+        for &y in &self.y {
+            for &n in &self.n {
+                for &k in &self.k {
+                    for &h in &self.h {
+                        for &l in &self.l {
+                            for &m in &self.m {
+                                let c = ArchConfig::from_vector(
+                                    [y, n, k, h, l, m],
+                                    self.wavelengths,
+                                );
+                                if c.total_mrs() <= self.max_total_mrs {
+                                    out.push(c);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total unconstrained size of the grid.
+    pub fn grid_size(&self) -> usize {
+        self.y.len() * self.n.len() * self.k.len() * self.h.len() * self.l.len() * self.m.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_space_contains_paper_config() {
+        let s = DesignSpace::paper();
+        let cands = s.candidates();
+        assert!(
+            cands.iter().any(|c| c.vector() == crate::PAPER_OPTIMAL_CONFIG),
+            "paper optimum must be a candidate"
+        );
+    }
+
+    #[test]
+    fn budget_prunes_grid() {
+        let s = DesignSpace::paper();
+        assert!(s.candidates().len() < s.grid_size());
+        assert!(!s.candidates().is_empty());
+    }
+
+    #[test]
+    fn all_candidates_within_budget() {
+        let s = DesignSpace::paper();
+        assert!(s.candidates().iter().all(|c| c.total_mrs() <= s.max_total_mrs));
+    }
+}

@@ -1,0 +1,62 @@
+//! # DiffLight — a silicon-photonics accelerator for diffusion models
+//!
+//! Full-stack reproduction of *"Accelerating Diffusion Models for Generative
+//! AI Applications with Silicon Photonics"* (Suresh, Afifi, Pasricha,
+//! CS.AR 2026).
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! depends on:
+//!
+//! * [`devices`] — optoelectronic device library: microring resonators
+//!   (MRs), MR bank arrays, VCSELs, photodetectors / balanced
+//!   photodetectors, SOAs, DAC/ADC, hybrid EO/TO tuning with TED, the
+//!   photonic loss budget and laser-power solver (Table II constants).
+//! * [`arch`] — the DiffLight block architecture: convolution &
+//!   normalization blocks, the SOA activation block, attention head
+//!   blocks, the linear & add block, composed into Residual and MHA
+//!   units under an electronic control unit (ECU). Parameterised by
+//!   `[Y, N, K, H, L, M]` (paper §IV.B, optimum `[4,12,3,6,6,3]`).
+//! * [`workload`] — the diffusion-model workload zoo (DDPM/CIFAR-10,
+//!   LDM/LSUN-Churches, LDM/LSUN-Beds, Stable Diffusion v1-4) expressed
+//!   as exact layer-level traces, with im2col lowering and the
+//!   transposed-convolution zero-insertion sparsity analysis.
+//! * [`sim`] — the transaction-level performance/energy simulator with
+//!   the paper's three dataflow optimizations (sparsity-aware dataflow,
+//!   inter/intra-block pipelining, DAC sharing) as toggles.
+//! * [`baselines`] — analytical models of the comparison platforms:
+//!   CPU, GPU, DeepCache, two FPGA accelerators, and PACE.
+//! * [`dse`] — design-space exploration over `[Y, N, K, H, L, M]`.
+//! * [`quant`] — the W8A8 symmetric quantization model shared with the
+//!   compiled compute path.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas UNet
+//!   (HLO text → compile → execute); Python never runs at serve time.
+//! * [`coordinator`] — the serving layer: request router, dynamic
+//!   batcher and denoise-step scheduler driving [`runtime`].
+//! * [`util`] — infrastructure hand-rolled for the offline build: CLI
+//!   parsing, deterministic PRNG, JSON writer, thread pool, and a small
+//!   property-testing harness.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod devices;
+pub mod dse;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's optimal DiffLight configuration `[Y, N, K, H, L, M]`
+/// (§V: "the exploration yielded ... [4,12,3,6,6,3]").
+pub const PAPER_OPTIMAL_CONFIG: [usize; 6] = [4, 12, 3, 6, 6, 3];
+
+/// Maximum number of MRs sharing one waveguide while staying error-free
+/// (§V, Lumerical-derived design rule).
+pub const MAX_MRS_PER_WAVEGUIDE: usize = 36;

@@ -1,0 +1,221 @@
+//! DiffLight CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `simulate [--model all|ddpm|ldm1|ldm2|sd] [--sparse] [--pipelined]
+//!   [--dac-sharing] [--all-opts]` — run the accelerator simulator and
+//!   print GOPS/EPB per model.
+//! * `compare` — the Figure 9/10 platform comparison table.
+//! * `dse [--threads N]` — design-space exploration (reports the top
+//!   configurations and the paper config's rank).
+//! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
+//!   [--fp32]` — serve synthetic generation requests through the AOT
+//!   UNet via PJRT and print latency/throughput metrics.
+//! * `devices` — print the Table II device parameter set in use.
+
+use difflight::arch::cost::OptFlags;
+use difflight::baselines::all_baselines;
+use difflight::coordinator::request::SamplerKind;
+use difflight::coordinator::{Coordinator, EngineConfig};
+use difflight::devices::DeviceParams;
+use difflight::dse::{explore, DesignSpace};
+use difflight::sim::Simulator;
+use difflight::util::cli::Args;
+use difflight::util::table::{fmt_ratio, fmt_si, Table};
+use difflight::workload::{ModelId, ModelSpec};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    let code = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(),
+        "dse" => cmd_dse(&args),
+        "serve" => cmd_serve(&args),
+        "devices" => cmd_devices(),
+        _ => {
+            print_help(args.program());
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help(program: &str) {
+    println!("DiffLight — silicon-photonics accelerator for diffusion models");
+    println!("usage: {program} <simulate|compare|dse|serve|devices> [options]");
+    println!("  simulate --model all --all-opts     simulator GOPS/EPB");
+    println!("  compare                             Figure 9/10 comparison");
+    println!("  dse --threads 8                     design-space exploration");
+    println!("  serve --requests 8 --steps 25       serve via PJRT artifacts");
+    println!("  devices                             Table II constants");
+}
+
+fn parse_opts(args: &Args) -> OptFlags {
+    if args.flag("all-opts") {
+        OptFlags::ALL
+    } else {
+        OptFlags {
+            sparse: args.flag("sparse"),
+            pipelined: args.flag("pipelined"),
+            dac_sharing: args.flag("dac-sharing"),
+        }
+    }
+}
+
+fn models_from(arg: &str) -> Vec<ModelId> {
+    match arg {
+        "ddpm" => vec![ModelId::DdpmCifar10],
+        "ldm1" => vec![ModelId::LdmChurches],
+        "ldm2" => vec![ModelId::LdmBeds],
+        "sd" => vec![ModelId::StableDiffusion],
+        _ => ModelId::ALL.to_vec(),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let opts = parse_opts(args);
+    let sim = Simulator::paper_optimal();
+    let mut table = Table::new(&["model", "timesteps", "latency", "energy", "GOPS", "EPB"]);
+    for id in models_from(&args.get_or("model", "all")) {
+        let spec = ModelSpec::get(id);
+        let run = sim.run_model(&spec, opts);
+        table.row(&[
+            spec.id.name().to_string(),
+            spec.timesteps.to_string(),
+            fmt_si(run.total.latency_s, "s"),
+            fmt_si(run.total.energy_j, "J"),
+            format!("{:.1}", run.gops()),
+            fmt_si(run.epb(), "J/bit"),
+        ]);
+    }
+    println!("DiffLight {} opts={:?}", sim.accelerator.config, opts);
+    print!("{}", table.render());
+    0
+}
+
+fn cmd_compare() -> i32 {
+    let sim = Simulator::paper_optimal();
+    let mut table = Table::new(&["platform", "avg GOPS", "avg EPB", "GOPS ratio", "EPB ratio"]);
+    let mut dl_gops = Vec::new();
+    let mut dl_epb = Vec::new();
+    for id in ModelId::ALL {
+        let run = sim.run_model(&ModelSpec::get(id), OptFlags::ALL);
+        dl_gops.push(run.gops());
+        dl_epb.push(run.epb());
+    }
+    let dg = difflight::util::stats::mean(&dl_gops);
+    let de = difflight::util::stats::mean(&dl_epb);
+    table.row(&[
+        "DiffLight".into(),
+        format!("{dg:.1}"),
+        fmt_si(de, "J/bit"),
+        "1x".into(),
+        "1x".into(),
+    ]);
+    for b in all_baselines() {
+        let mut gops = Vec::new();
+        let mut epb = Vec::new();
+        let mut gr = Vec::new();
+        let mut er = Vec::new();
+        for (i, id) in ModelId::ALL.iter().enumerate() {
+            let r = b.run(&ModelSpec::get(*id));
+            gops.push(r.gops);
+            epb.push(r.epb_j_per_bit);
+            gr.push(dl_gops[i] / r.gops);
+            er.push(r.epb_j_per_bit / dl_epb[i]);
+        }
+        table.row(&[
+            b.name().to_string(),
+            format!("{:.2}", difflight::util::stats::mean(&gops)),
+            fmt_si(difflight::util::stats::mean(&epb), "J/bit"),
+            fmt_ratio(difflight::util::stats::mean(&gr)),
+            fmt_ratio(difflight::util::stats::mean(&er)),
+        ]);
+    }
+    print!("{}", table.render());
+    0
+}
+
+fn cmd_dse(args: &Args) -> i32 {
+    let threads = args.get_parsed("threads", 8usize);
+    let params = DeviceParams::paper();
+    let points = explore(&DesignSpace::paper(), &params, threads);
+    let mut table = Table::new(&["rank", "[Y,N,K,H,L,M]", "MRs", "avg GOPS", "avg EPB", "GOPS/EPB"]);
+    for (i, pt) in points.iter().take(10).enumerate() {
+        table.row(&[
+            (i + 1).to_string(),
+            format!("{:?}", pt.config.vector()),
+            pt.total_mrs.to_string(),
+            format!("{:.1}", pt.avg_gops),
+            fmt_si(pt.avg_epb, "J/bit"),
+            format!("{:.3e}", pt.objective),
+        ]);
+    }
+    print!("{}", table.render());
+    if let Some(rank) = points
+        .iter()
+        .position(|pt| pt.config.vector() == difflight::PAPER_OPTIMAL_CONFIG)
+    {
+        println!(
+            "paper config [4,12,3,6,6,3]: rank {}/{} (top {:.1}%)",
+            rank + 1,
+            points.len(),
+            100.0 * (rank + 1) as f64 / points.len() as f64
+        );
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let requests = args.get_parsed("requests", 8usize);
+    let steps = args.get_parsed("steps", 25usize);
+    let mut config = EngineConfig::new(artifacts);
+    config.quantized = !args.flag("fp32");
+    config.policy.max_batch = args.get_parsed("batch", 4usize);
+    let mut coord = match Coordinator::open(config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}\nhint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("platform: {}", coord.platform());
+    for i in 0..requests {
+        coord.submit(1000 + i as u64, SamplerKind::Ddim { steps });
+    }
+    match coord.run_until_drained() {
+        Ok(results) => {
+            println!("served {} generations", results.len());
+            println!("{}", coord.metrics.to_json().to_string_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_devices() -> i32 {
+    let p = DeviceParams::paper();
+    let mut t = Table::new(&["device", "latency", "power"]);
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("EO tuning", p.eo_tuning_latency_s, p.eo_tuning_power_w),
+        ("TO tuning (per FSR)", p.to_tuning_latency_s, p.to_tuning_power_w_per_fsr),
+        ("VCSEL", p.vcsel_latency_s, p.vcsel_power_w),
+        ("Photodetector", p.pd_latency_s, p.pd_power_w),
+        ("SOA", p.soa_latency_s, p.soa_power_w),
+        ("DAC (8-bit)", p.dac_latency_s, p.dac_power_w),
+        ("ADC (8-bit)", p.adc_latency_s, p.adc_power_w),
+        ("Comparator", p.comparator_latency_s, p.comparator_power_w),
+        ("Subtractor", p.subtractor_latency_s, p.subtractor_power_w),
+        ("LUT", p.lut_latency_s, p.lut_power_w),
+    ];
+    for (name, lat, pow) in rows {
+        t.row(&[name.to_string(), fmt_si(lat, "s"), fmt_si(pow, "W")]);
+    }
+    print!("{}", t.render());
+    0
+}

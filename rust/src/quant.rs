@@ -1,0 +1,184 @@
+//! W8A8 symmetric quantization (paper §V: "industry standard W8A8
+//! quantization algorithm [28] applied to all diffusion models").
+//!
+//! This is the numerical contract of the accelerator's 8-bit DAC/ADC
+//! boundary, shared by the simulator (error modelling) and mirrored by the
+//! L1 Pallas kernel (`python/compile/kernels/photonic_matmul.py`). Both
+//! sides use symmetric per-tensor int8 with round-to-nearest-even.
+
+/// A quantized tensor: int8 codes + a single f32 scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    pub codes: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Compute the symmetric per-tensor scale for values in `xs`:
+/// `scale = max|x| / 127`. A scale of 0 (all-zero tensor) is mapped to 1
+/// so dequantization stays well-defined.
+pub fn symmetric_scale(xs: &[f32]) -> f32 {
+    let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        1.0
+    } else {
+        max_abs / 127.0
+    }
+}
+
+/// Round half to even (banker's rounding) — matches JAX/numpy `rint`, so
+/// Rust-side expectations agree bit-for-bit with the kernel oracle.
+fn rint(x: f32) -> f32 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else {
+        // exactly .5 → nearest even
+        if (floor as i64) % 2 == 0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    }
+}
+
+/// Quantize to int8 codes with the given scale.
+pub fn quantize_with_scale(xs: &[f32], scale: f32) -> Vec<i8> {
+    assert!(scale > 0.0, "scale must be positive");
+    xs.iter()
+        .map(|&x| rint(x / scale).clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+/// Quantize with an auto-computed symmetric scale.
+pub fn quantize(xs: &[f32]) -> QuantTensor {
+    let scale = symmetric_scale(xs);
+    QuantTensor { codes: quantize_with_scale(xs, scale), scale }
+}
+
+/// Dequantize codes back to f32.
+pub fn dequantize(q: &QuantTensor) -> Vec<f32> {
+    q.codes.iter().map(|&c| c as f32 * q.scale).collect()
+}
+
+/// Quantized dot product as the photonic datapath computes it: int8 codes
+/// multiplied, accumulated in (effectively analog) full precision, then
+/// rescaled by the product of scales.
+pub fn quantized_dot(a: &QuantTensor, w: &QuantTensor) -> f32 {
+    assert_eq!(a.codes.len(), w.codes.len());
+    let acc: i64 = a
+        .codes
+        .iter()
+        .zip(&w.codes)
+        .map(|(&x, &y)| x as i64 * y as i64)
+        .sum();
+    acc as f32 * a.scale * w.scale
+}
+
+/// RMS quantization error of a round trip, relative to the RMS of the
+/// signal; the Table I quality-drop proxy uses this Rust-side.
+pub fn relative_rms_error(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let q = quantize(xs);
+    let back = dequantize(&q);
+    let mut err = 0.0f64;
+    let mut sig = 0.0f64;
+    for (&x, &y) in xs.iter().zip(&back) {
+        err += ((x - y) as f64).powi(2);
+        sig += (x as f64).powi(2);
+    }
+    if sig == 0.0 {
+        0.0
+    } else {
+        (err / sig).sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn scale_from_max_abs() {
+        assert_eq!(symmetric_scale(&[0.0, -2.54, 1.0]), 2.54 / 127.0);
+        assert_eq!(symmetric_scale(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_half_lsb() {
+        forall("quant round trip", 200, |g| {
+            let n = g.usize_in(1, 256);
+            let xs = g.vec_f32(n, -10.0, 10.0);
+            let q = quantize(&xs);
+            let back = dequantize(&q);
+            for (&x, &y) in xs.iter().zip(&back) {
+                assert!(
+                    (x - y).abs() <= 0.5 * q.scale + 1e-6,
+                    "x={x} y={y} scale={}",
+                    q.scale
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn codes_stay_in_range() {
+        forall("codes in [-127,127]", 100, |g| {
+            let xs = g.vec_f32(64, -100.0, 100.0);
+            let q = quantize(&xs);
+            assert!(q.codes.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+        });
+    }
+
+    #[test]
+    fn rint_half_to_even() {
+        assert_eq!(rint(0.5), 0.0);
+        assert_eq!(rint(1.5), 2.0);
+        assert_eq!(rint(2.5), 2.0);
+        assert_eq!(rint(-0.5), 0.0);
+        assert_eq!(rint(-1.5), -2.0);
+        assert_eq!(rint(1.4), 1.0);
+        assert_eq!(rint(1.6), 2.0);
+    }
+
+    #[test]
+    fn quantized_dot_close_to_float_dot() {
+        let mut rng = XorShift::new(3);
+        let n = 128;
+        let mut a = vec![0.0f32; n];
+        let mut w = vec![0.0f32; n];
+        rng.fill_gaussian(&mut a);
+        rng.fill_gaussian(&mut w);
+        let qa = quantize(&a);
+        let qw = quantize(&w);
+        let exact: f32 = a.iter().zip(&w).map(|(x, y)| x * y).sum();
+        let approx = quantized_dot(&qa, &qw);
+        // 8-bit dot over 128 gaussian terms: expect ~1% relative error.
+        let tol = 0.05 * (1.0 + exact.abs()) + 0.1;
+        assert!((exact - approx).abs() < tol, "exact={exact} approx={approx}");
+    }
+
+    #[test]
+    fn relative_rms_error_small_for_8bit() {
+        let mut rng = XorShift::new(5);
+        let mut xs = vec![0.0f32; 4096];
+        rng.fill_gaussian(&mut xs);
+        let e = relative_rms_error(&xs);
+        // ~0.1–1% for gaussian data at 8 bits.
+        assert!(e > 0.0 && e < 0.02, "rel rms err = {e}");
+    }
+
+    #[test]
+    fn all_zero_tensor_round_trips() {
+        let xs = vec![0.0f32; 16];
+        let q = quantize(&xs);
+        assert_eq!(dequantize(&q), xs);
+        assert_eq!(relative_rms_error(&xs), 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT client wrapper + compiled denoise-step executables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::manifest::Manifest;
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables
+/// keyed by (batch, quantized).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    executables: BTreeMap<(usize, bool), DenoiseExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (compiles lazily).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, artifacts_dir, manifest, executables: BTreeMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the denoise executable for a batch size.
+    pub fn denoise(&mut self, batch: usize, quantized: bool) -> crate::Result<&DenoiseExecutable> {
+        if !self.executables.contains_key(&(batch, quantized)) {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.batch == batch && a.quantized == quantized)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no artifact for batch={batch} quantized={quantized}")
+                })?
+                .clone();
+            let path = self.artifacts_dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+            let elems = self.manifest.sample_elems();
+            let (h, c) = (self.manifest.image_size, self.manifest.in_channels);
+            self.executables.insert(
+                (batch, quantized),
+                DenoiseExecutable { exe, batch, image_size: h, channels: c, sample_elems: elems },
+            );
+        }
+        Ok(&self.executables[&(batch, quantized)])
+    }
+
+    /// Largest compiled quantized batch ≤ `pending`, or the smallest
+    /// available when nothing fits (the router's batch-size selection).
+    pub fn best_batch_size(&self, pending: usize) -> usize {
+        let sizes = self.manifest.quantized_batches();
+        sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= pending)
+            .max()
+            .or_else(|| sizes.first().copied())
+            .unwrap_or(1)
+    }
+}
+
+/// One compiled UNet denoise step at a fixed batch size.
+pub struct DenoiseExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub sample_elems: usize,
+}
+
+impl DenoiseExecutable {
+    /// Run ε̂ = UNet(x_t, t).
+    ///
+    /// `x`: `batch·H·W·C` f32 (row-major NHWC), `t`: `batch` timesteps.
+    /// Returns `batch·H·W·C` predicted noise.
+    pub fn predict_noise(&self, x: &[f32], t: &[f32]) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.sample_elems,
+            "x has {} elems, want {}",
+            x.len(),
+            self.batch * self.sample_elems
+        );
+        anyhow::ensure!(t.len() == self.batch, "t has {} elems, want {}", t.len(), self.batch);
+        let h = self.image_size as i64;
+        let x_lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, h, h, self.channels as i64])
+            .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+        let t_lit = xla::Literal::vec1(t);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[x_lit, t_lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let eps = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        eps.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ArtifactEntry, NoiseSchedule};
+
+    fn manifest_with_batches(batches: &[usize]) -> Manifest {
+        Manifest {
+            image_size: 16,
+            in_channels: 1,
+            schedule: NoiseSchedule::linear(10),
+            artifacts: batches
+                .iter()
+                .map(|&b| ArtifactEntry {
+                    file: format!("model_w8a8_b{b}.hlo.txt"),
+                    batch: b,
+                    quantized: true,
+                })
+                .collect(),
+            weights_provenance: "test".into(),
+        }
+    }
+
+    // Router batch-size selection is pure logic; test it without PJRT.
+    fn best(manifest: &Manifest, pending: usize) -> usize {
+        let sizes = manifest.quantized_batches();
+        sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= pending)
+            .max()
+            .or_else(|| sizes.first().copied())
+            .unwrap_or(1)
+    }
+
+    #[test]
+    fn batch_selection_prefers_largest_fitting() {
+        let m = manifest_with_batches(&[1, 4, 8]);
+        assert_eq!(best(&m, 10), 8);
+        assert_eq!(best(&m, 5), 4);
+        assert_eq!(best(&m, 3), 1);
+        assert_eq!(best(&m, 1), 1);
+    }
+
+    #[test]
+    fn batch_selection_falls_back_to_smallest() {
+        let m = manifest_with_batches(&[4, 8]);
+        assert_eq!(best(&m, 2), 4); // nothing ≤ 2 → smallest available
+    }
+}

@@ -1,0 +1,213 @@
+//! Artifact manifest: shapes, UNet config, and the DDPM noise schedule
+//! emitted by `python/compile/aot.py` as `artifacts/manifest.json`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// DDPM noise schedule (linear β), shared by trainer and sampler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NoiseSchedule {
+    pub timesteps: usize,
+    pub betas: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub alpha_bars: Vec<f64>,
+}
+
+impl NoiseSchedule {
+    /// Rebuild the aot.py linear schedule locally (used when running
+    /// without artifacts, e.g. in tests).
+    pub fn linear(timesteps: usize) -> Self {
+        assert!(timesteps >= 2);
+        let (b0, b1) = (1e-4, 0.02);
+        let betas: Vec<f64> = (0..timesteps)
+            .map(|i| b0 + (b1 - b0) * i as f64 / (timesteps - 1) as f64)
+            .collect();
+        let alphas: Vec<f64> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut alpha_bars = Vec::with_capacity(timesteps);
+        let mut acc = 1.0;
+        for a in &alphas {
+            acc *= a;
+            alpha_bars.push(acc);
+        }
+        Self { timesteps, betas, alphas, alpha_bars }
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let arr = |k: &str| -> crate::Result<Vec<f64>> {
+            Ok(j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("schedule missing {k}"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        let timesteps = j
+            .get("timesteps")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("schedule missing timesteps"))?
+            as usize;
+        let s = Self {
+            timesteps,
+            betas: arr("betas")?,
+            alphas: arr("alphas")?,
+            alpha_bars: arr("alpha_bars")?,
+        };
+        anyhow::ensure!(s.betas.len() == timesteps, "betas length mismatch");
+        anyhow::ensure!(s.alpha_bars.len() == timesteps, "alpha_bars length mismatch");
+        Ok(s)
+    }
+}
+
+/// One HLO artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub batch: usize,
+    pub quantized: bool,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub schedule: NoiseSchedule,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub weights_provenance: String,
+}
+
+impl Manifest {
+    /// Parse `manifest.json` text.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow::anyhow!("missing config"))?;
+        let num = |obj: &Json, k: &str| -> crate::Result<usize> {
+            Ok(obj
+                .get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing {k}"))? as usize)
+        };
+        let schedule = NoiseSchedule::from_json(
+            j.get("schedule").ok_or_else(|| anyhow::anyhow!("missing schedule"))?,
+        )?;
+        let mut artifacts = Vec::new();
+        if let Some(Json::Obj(entries)) = j.get("artifacts") {
+            for (file, meta) in entries {
+                artifacts.push(ArtifactEntry {
+                    file: file.clone(),
+                    batch: meta.get("batch").and_then(Json::as_f64).unwrap_or(1.0) as usize,
+                    quantized: matches!(meta.get("quantized"), Some(Json::Bool(true))),
+                });
+            }
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        Ok(Self {
+            image_size: num(cfg, "image_size")?,
+            in_channels: num(cfg, "in_channels")?,
+            schedule,
+            artifacts,
+            weights_provenance: j
+                .get("weights")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+
+    /// Load from `artifacts/manifest.json`.
+    pub fn load(artifacts_dir: &Path) -> crate::Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Elements per sample (H·W·C).
+    pub fn sample_elems(&self) -> usize {
+        self.image_size * self.image_size * self.in_channels
+    }
+
+    /// Quantized artifact batch sizes, ascending.
+    pub fn quantized_batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.quantized).map(|a| a.batch).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "config": {"image_size": 16, "in_channels": 1, "model_channels": 32},
+          "weights": "trained",
+          "schedule": {"timesteps": 4,
+            "betas": [0.1, 0.2, 0.3, 0.4],
+            "alphas": [0.9, 0.8, 0.7, 0.6],
+            "alpha_bars": [0.9, 0.72, 0.504, 0.3024]},
+          "artifacts": {
+            "model_w8a8_b1.hlo.txt": {"batch": 1, "quantized": true},
+            "model_w8a8_b4.hlo.txt": {"batch": 4, "quantized": true},
+            "model_fp32_b1.hlo.txt": {"batch": 1, "quantized": false}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample_manifest()).unwrap();
+        assert_eq!(m.image_size, 16);
+        assert_eq!(m.sample_elems(), 256);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.quantized_batches(), vec![1, 4]);
+        assert_eq!(m.weights_provenance, "trained");
+    }
+
+    #[test]
+    fn schedule_consistency() {
+        let m = Manifest::parse(&sample_manifest()).unwrap();
+        let s = &m.schedule;
+        for i in 0..s.timesteps {
+            assert!((s.alphas[i] - (1.0 - s.betas[i])).abs() < 1e-12);
+        }
+        // alpha_bars is the running product.
+        let mut acc = 1.0;
+        for i in 0..s.timesteps {
+            acc *= s.alphas[i];
+            assert!((s.alpha_bars[i] - acc).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn linear_schedule_properties() {
+        let s = NoiseSchedule::linear(100);
+        assert_eq!(s.timesteps, 100);
+        assert!((s.betas[0] - 1e-4).abs() < 1e-12);
+        assert!((s.betas[99] - 0.02).abs() < 1e-12);
+        // α̅ decreases monotonically toward ~0.37–0.4 at T=100.
+        assert!(s.alpha_bars.windows(2).all(|w| w[1] < w[0]));
+        assert!(s.alpha_bars[99] > 0.1 && s.alpha_bars[99] < 0.6);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let bad = r#"{
+          "config": {"image_size": 16, "in_channels": 1},
+          "schedule": {"timesteps": 3, "betas": [0.1], "alphas": [0.9], "alpha_bars": [0.9]},
+          "artifacts": {"m.hlo.txt": {"batch": 1, "quantized": true}}
+        }"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime — loads and executes the AOT HLO artifacts.
+//!
+//! The compile path (`python/compile/aot.py`) lowers the JAX/Pallas UNet
+//! step to HLO *text*; this module loads it with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and exposes typed `execute` calls to the coordinator. Python never
+//! runs at serve time — the binary is self-contained once `artifacts/`
+//! is built.
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::{DenoiseExecutable, Runtime};
+pub use manifest::{Manifest, NoiseSchedule};

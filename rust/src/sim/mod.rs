@@ -1,0 +1,14 @@
+//! The DiffLight transaction-level simulator (paper §V: "we developed a
+//! simulator … with the optoelectronic components accurately modeled").
+//!
+//! [`engine::Simulator`] maps a workload trace onto an
+//! [`crate::arch::units::Accelerator`] under a set of
+//! [`crate::arch::OptFlags`], producing latency/energy/GOPS/EPB. The
+//! per-step cost is computed once and scaled by the timestep count — the
+//! UNet is identical at every denoising step.
+
+pub mod engine;
+pub mod report;
+
+pub use engine::Simulator;
+pub use report::{ModelRun, PlatformResult};

@@ -1,0 +1,127 @@
+//! Result types and JSON reporting for simulator runs.
+
+use crate::arch::cost::{Cost, OptFlags};
+use crate::util::json::Json;
+use crate::workload::ModelId;
+
+/// One simulated model generation on DiffLight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelRun {
+    pub model: ModelId,
+    pub opts: OptFlags,
+    /// Cost of a single denoising step.
+    pub step: Cost,
+    /// Cost of the full generation (step × timesteps).
+    pub total: Cost,
+    pub timesteps: usize,
+    pub bit_width: u32,
+}
+
+impl ModelRun {
+    /// Throughput (GOPS) of the full generation.
+    pub fn gops(&self) -> f64 {
+        self.total.gops()
+    }
+
+    /// Energy per bit (J/bit).
+    pub fn epb(&self) -> f64 {
+        self.total.epb(self.bit_width)
+    }
+
+    /// Images (samples) per second.
+    pub fn samples_per_sec(&self) -> f64 {
+        if self.total.latency_s == 0.0 {
+            0.0
+        } else {
+            1.0 / self.total.latency_s
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("model", self.model.name())
+            .set("timesteps", self.timesteps)
+            .set("latency_s", self.total.latency_s)
+            .set("energy_j", self.total.energy_j)
+            .set("gops", self.gops())
+            .set("epb_j_per_bit", self.epb())
+            .set("samples_per_sec", self.samples_per_sec())
+            .set(
+                "opts",
+                Json::obj()
+                    .set("sparse", self.opts.sparse)
+                    .set("pipelined", self.opts.pipelined)
+                    .set("dac_sharing", self.opts.dac_sharing),
+            )
+    }
+}
+
+/// A (platform, model) result used by the Figure 9/10 comparisons —
+/// DiffLight or any baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformResult {
+    pub platform: String,
+    pub model: ModelId,
+    pub gops: f64,
+    pub epb_j_per_bit: f64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+impl PlatformResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("platform", self.platform.as_str())
+            .set("model", self.model.name())
+            .set("gops", self.gops)
+            .set("epb_j_per_bit", self.epb_j_per_bit)
+            .set("latency_s", self.latency_s)
+            .set("energy_j", self.energy_j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> ModelRun {
+        ModelRun {
+            model: ModelId::DdpmCifar10,
+            opts: OptFlags::ALL,
+            step: Cost::new(1e-3, 1e-3, 1_000_000, 10),
+            total: Cost::new(1.0, 1.0, 1_000_000_000, 10_000),
+            timesteps: 1000,
+            bit_width: 8,
+        }
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let r = run();
+        assert!((r.gops() - 1.0).abs() < 1e-12);
+        assert!((r.epb() - 1.0 / 8e9).abs() < 1e-20);
+        assert!((r.samples_per_sec() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let j = run().to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("model").and_then(Json::as_str), Some("DDPM"));
+        assert_eq!(parsed.get("timesteps").and_then(Json::as_f64), Some(1000.0));
+    }
+
+    #[test]
+    fn platform_result_json() {
+        let p = PlatformResult {
+            platform: "GPU".into(),
+            model: ModelId::StableDiffusion,
+            gops: 123.0,
+            epb_j_per_bit: 1e-12,
+            latency_s: 0.5,
+            energy_j: 2.0,
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("platform").and_then(Json::as_str), Some("GPU"));
+    }
+}

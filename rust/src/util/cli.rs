@@ -1,0 +1,146 @@
+//! Minimal CLI argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    program: String,
+    /// `--key value` / `--key=value` pairs. A bare `--flag` maps to "true".
+    options: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Self {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse(program, it.collect())
+    }
+
+    /// Parse from an explicit vector (used by tests).
+    pub fn parse(program: String, raw: Vec<String>) -> Self {
+        let mut options = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    options.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { program, options, positional }
+    }
+
+    /// Program name (argv[0]).
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean flag: present (without explicit "false") means true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some(v) if v != "false" && v != "0")
+    }
+
+    /// Typed option parse with default; panics with a clear message on a
+    /// malformed value (CLI misuse should fail loudly).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+
+    /// All positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse("prog".into(), v.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = args(&["--model", "ddpm", "--steps=50"]);
+        assert_eq!(a.get("model"), Some("ddpm"));
+        assert_eq!(a.get_parsed::<usize>("steps", 0), 50);
+    }
+
+    #[test]
+    fn bare_flags() {
+        // NB: a bare flag followed by a non-`--` token consumes it as a
+        // value (greedy); put positionals first or use `--k=v`.
+        let a = args(&["run", "--verbose", "--sparse"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("sparse"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn flag_false() {
+        let a = args(&["--pipelined=false"]);
+        assert!(!a.flag("pipelined"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.get_or("model", "sd"), "sd");
+        assert_eq!(a.get_parsed::<f64>("alpha", 0.5), 0.5);
+    }
+
+    #[test]
+    fn positionals_in_order() {
+        let a = args(&["serve", "--port", "80", "extra"]);
+        assert_eq!(a.positionals(), &["serve".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn malformed_typed_value_panics() {
+        let a = args(&["--steps", "abc"]);
+        let _ = a.get_parsed::<usize>("steps", 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Hand-rolled infrastructure.
+//!
+//! The build is fully offline and the vendored crate set is minimal
+//! (`xla`, `anyhow`, `thiserror`, `log`, `once_cell`), so the pieces a
+//! networked project would pull from crates.io — CLI parsing, a PRNG,
+//! JSON output, a thread pool, property testing, and a bench harness —
+//! are implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::XorShift;
+pub use threadpool::ThreadPool;

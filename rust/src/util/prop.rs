@@ -1,0 +1,115 @@
+//! Tiny property-testing harness (`proptest` is not vendored).
+//!
+//! Provides seeded random case generation with shrinking-free failure
+//! reporting: on failure the harness reports the case index and the seed so
+//! the exact case can be replayed. Coordinator invariants (routing,
+//! batching, scheduler state) are tested through this harness.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath in this offline
+//! // environment; the same pattern runs in every #[test] below.)
+//! use difflight::util::prop::forall;
+//! forall("sum is commutative", 256, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::XorShift;
+
+/// Case generator handed to the property body.
+pub struct Gen {
+    rng: XorShift,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of given length from an element generator.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.rng.below(items.len())]
+    }
+
+    /// Underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut XorShift {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (with seed info) on the first
+/// failing case. Seed can be pinned via `DIFFLIGHT_PROP_SEED` to replay.
+pub fn forall(name: &str, cases: usize, body: impl Fn(&mut Gen)) {
+    let base_seed = std::env::var("DIFFLIGHT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1FF_11E5u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: XorShift::new(seed) };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with DIFFLIGHT_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("tautology", 64, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports_name() {
+        forall("must fail", 16, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x > 10, "x={x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("ranges", 128, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! ASCII table rendering for bench/report output — the benches print the
+//! same rows/series the paper's tables and figures report.
+
+/// A simple left-aligned ASCII table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width must match header width"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-ables.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = |w: &Vec<usize>| {
+            let mut s = String::from("+");
+            for width in w {
+                s.push_str(&"-".repeat(width + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push(' ');
+                s.push_str(&cells[i]);
+                s.push_str(&" ".repeat(widths[i] - cells[i].len() + 1));
+                s.push('|');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = sep(&widths);
+        out.push_str(&fmt_row(&self.headers));
+        out.push_str(&sep(&widths));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep(&widths));
+        out
+    }
+}
+
+/// Format a ratio like the paper quotes them: `59.5x`.
+pub fn fmt_ratio(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}x")
+    } else {
+        format!("{r:.2}x")
+    }
+}
+
+/// Format an SI-scaled quantity, e.g. `1.23 G` for 1.23e9.
+pub fn fmt_si(v: f64, unit: &str) -> String {
+    let (scaled, prefix) = if v.abs() >= 1e12 {
+        (v / 1e12, "T")
+    } else if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "k")
+    } else if v.abs() >= 1.0 || v == 0.0 {
+        (v, "")
+    } else if v.abs() >= 1e-3 {
+        (v * 1e3, "m")
+    } else if v.abs() >= 1e-6 {
+        (v * 1e6, "u")
+    } else if v.abs() >= 1e-9 {
+        (v * 1e9, "n")
+    } else {
+        (v * 1e12, "p")
+    };
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "gops"]);
+        t.row(&["ddpm".into(), "123.4".into()]);
+        t.row(&["stable-diffusion".into(), "9".into()]);
+        let out = t.render();
+        assert!(out.contains("| model            | gops  |"));
+        assert!(out.lines().all(|l| l.len() == out.lines().next().unwrap().len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(1.5e9, "OPS"), "1.500 GOPS");
+        assert_eq!(fmt_si(2.5e-12, "J"), "2.500 pJ");
+        assert_eq!(fmt_si(0.0, "J"), "0.000 J");
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(fmt_ratio(5.5), "5.50x");
+        assert_eq!(fmt_ratio(572.0), "572x");
+    }
+}

@@ -1,0 +1,206 @@
+//! Fixed-size thread pool with a scoped parallel-map helper.
+//!
+//! `tokio`/`rayon` are not in the vendored crate set; the coordinator and
+//! the DSE sweep need parallelism, so this provides a small, dependency-free
+//! work-stealing-free pool: one shared injector queue guarded by a mutex +
+//! condvar. Work items in this codebase are coarse (whole simulator runs,
+//! whole denoise batches), so contention on the single queue is negligible.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of worker threads executing boxed jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("difflight-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (at least 2, at most 16).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 16);
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Parallel map: applies `f` to every item, preserving order.
+    ///
+    /// Blocks until all results are ready. `f` is cloned per item; results
+    /// are collected through a shared slot vector, so no channels needed.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + Clone + 'static,
+    {
+        let n = items.len();
+        let slots: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for (i, item) in items.into_iter().enumerate() {
+            let slots = Arc::clone(&slots);
+            let done = Arc::clone(&done);
+            let f = f.clone();
+            self.execute(move || {
+                let r = f(item);
+                slots.lock().unwrap()[i] = Some(r);
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut completed = lock.lock().unwrap();
+        while *completed < n {
+            completed = cv.wait(completed).unwrap();
+        }
+        drop(completed);
+        // Take the results out of the shared slots (workers may still hold
+        // their Arc clones briefly after the final notify).
+        let taken: Vec<Option<R>> = std::mem::take(&mut *slots.lock().unwrap());
+        taken
+            .into_iter()
+            .map(|o| o.expect("worker produced result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+/// A monotonically increasing counter usable across threads (metrics).
+#[derive(Default)]
+pub struct Counter(AtomicUsize);
+
+impl Counter {
+    pub fn incr(&self) -> usize {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+    pub fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(Counter::default());
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                c.incr();
+                let (l, cv) = &*d;
+                *l.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (l, cv) = &*done;
+        let mut n = l.lock().unwrap();
+        while *n < 100 {
+            n = cv.wait(n).unwrap();
+        }
+        assert_eq!(counter.get(), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

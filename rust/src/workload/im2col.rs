@@ -1,0 +1,183 @@
+//! im2col lowering of (transposed) convolutions to GEMM, with the
+//! zero-insertion sparsity analysis behind the paper's sparsity-aware
+//! dataflow (§IV.C).
+//!
+//! A transposed convolution first expands its input by inserting
+//! `stride−1` zeros between samples, then slides a dense kernel over the
+//! expanded map. For an output position with phase `(py, px)`
+//! (`py = oy mod s`, `px = ox mod s`), only kernel taps `(ky, kx)` with
+//! `(oy+ky) ≡ 0 (mod s)` hit non-zero input — every other flattened
+//! im2col column is structurally zero. DiffLight "identifies and
+//! eliminates" those columns; this module computes the exact surviving
+//! fraction so the simulator can credit it.
+
+use super::layers::LayerKind;
+use crate::arch::bank_array::Gemm;
+
+/// GEMM view of a convolution: `M = h_out²` output positions,
+/// `K_d = in_ch·k²` patch length, `N = out_ch` filters.
+pub fn conv_to_gemm(kind: &LayerKind) -> Option<Gemm> {
+    match *kind {
+        LayerKind::Conv2d { in_ch, out_ch, kernel, stride, h_in, transposed } => {
+            let h_out = if transposed { h_in * stride } else { h_in.div_ceil(stride) };
+            Some(Gemm {
+                m: h_out * h_out,
+                k_d: in_ch * kernel * kernel,
+                n_out: out_ch,
+                zero_fraction: if transposed {
+                    transposed_zero_fraction(kernel, stride)
+                } else {
+                    0.0
+                },
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Count kernel taps `t ∈ [0, k)` with `(t + phase) ≡ 0 (mod s)`.
+fn live_taps(k: usize, s: usize, phase: usize) -> usize {
+    (0..k).filter(|t| (t + phase) % s == 0).count()
+}
+
+/// Exact average fraction of structurally-zero im2col work for a
+/// transposed convolution with square kernel `k` and stride `s`,
+/// averaged over the `s²` output-position phase classes.
+pub fn transposed_zero_fraction(k: usize, s: usize) -> f64 {
+    if s <= 1 {
+        return 0.0;
+    }
+    let total = (k * k) as f64;
+    let mut live_sum = 0.0;
+    for py in 0..s {
+        for px in 0..s {
+            live_sum += (live_taps(k, s, py) * live_taps(k, s, px)) as f64;
+        }
+    }
+    let avg_live = live_sum / (s * s) as f64;
+    1.0 - avg_live / total
+}
+
+/// The per-phase surviving GEMMs of a sparsity-aware transposed conv:
+/// one reduced-K GEMM per phase class. (The simulator uses the averaged
+/// `zero_fraction` on the single GEMM; this exact decomposition backs the
+/// property tests that the average is conservative.)
+pub fn transposed_phase_gemms(
+    in_ch: usize,
+    out_ch: usize,
+    kernel: usize,
+    stride: usize,
+    h_in: usize,
+) -> Vec<Gemm> {
+    let h_out = h_in * stride;
+    let positions_per_phase = (h_out / stride) * (h_out / stride);
+    let mut gemms = Vec::new();
+    for py in 0..stride {
+        for px in 0..stride {
+            let live = live_taps(kernel, stride, py) * live_taps(kernel, stride, px);
+            if live == 0 {
+                continue;
+            }
+            gemms.push(Gemm {
+                m: positions_per_phase,
+                k_d: in_ch * live,
+                n_out: out_ch,
+                zero_fraction: 0.0,
+            });
+        }
+    }
+    gemms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn dense_conv_gemm_dims() {
+        let k = LayerKind::Conv2d {
+            in_ch: 64,
+            out_ch: 128,
+            kernel: 3,
+            stride: 1,
+            h_in: 32,
+            transposed: false,
+        };
+        let g = conv_to_gemm(&k).unwrap();
+        assert_eq!((g.m, g.k_d, g.n_out), (1024, 576, 128));
+        assert_eq!(g.zero_fraction, 0.0);
+    }
+
+    #[test]
+    fn strided_conv_shrinks_m() {
+        let k = LayerKind::Conv2d {
+            in_ch: 8,
+            out_ch: 8,
+            kernel: 3,
+            stride: 2,
+            h_in: 32,
+            transposed: false,
+        };
+        assert_eq!(conv_to_gemm(&k).unwrap().m, 256);
+    }
+
+    #[test]
+    fn stride1_transposed_has_no_zeros() {
+        assert_eq!(transposed_zero_fraction(3, 1), 0.0);
+    }
+
+    #[test]
+    fn stride2_k4_matches_quarter_live() {
+        // k=4, s=2: every phase has exactly 2 live taps per axis → 4/16
+        // live → 75% zeros.
+        assert!((transposed_zero_fraction(4, 2) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stride2_k3_zero_fraction() {
+        // k=3, s=2: phases have 2 or 1 live taps per axis →
+        // live avg = (2²+2·1+1·2... ) compute: phase0→2, phase1→1 per
+        // axis; avg live = (2·2 + 2·1 + 1·2 + 1·1)/4 = 9/4; total 9 →
+        // zero = 1 − (9/4)/9 = 0.75.
+        assert!((transposed_zero_fraction(3, 2) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_fraction_close_to_one_minus_inv_s_squared() {
+        forall("transposed zero fraction ~ 1-1/s^2", 100, |g| {
+            let k = g.usize_in(1, 7);
+            let s = g.usize_in(1, 4);
+            let zf = transposed_zero_fraction(k, s);
+            let approx = 1.0 - 1.0 / (s * s) as f64;
+            assert!((zf - approx).abs() < 0.35, "k={k} s={s} zf={zf}");
+            assert!((0.0..1.0).contains(&zf) || zf == 0.0);
+        });
+    }
+
+    #[test]
+    fn phase_gemms_preserve_useful_macs() {
+        // The exact per-phase decomposition must carry the same useful
+        // MACs the averaged zero_fraction credits.
+        let (in_ch, out_ch, k, s, h) = (16, 8, 4, 2, 8);
+        let phases = transposed_phase_gemms(in_ch, out_ch, k, s, h);
+        let phase_macs: u64 = phases.iter().map(|g| (g.m * g.k_d * g.n_out) as u64).sum();
+        let kind = LayerKind::Conv2d {
+            in_ch,
+            out_ch,
+            kernel: k,
+            stride: s,
+            h_in: h,
+            transposed: true,
+        };
+        let g = conv_to_gemm(&kind).unwrap();
+        let avg_macs =
+            ((g.m * g.k_d * g.n_out) as f64 * (1.0 - g.zero_fraction)).round() as u64;
+        assert_eq!(phase_macs, avg_macs);
+    }
+
+    #[test]
+    fn non_conv_returns_none() {
+        assert!(conv_to_gemm(&LayerKind::Swish { elements: 4 }).is_none());
+    }
+}

@@ -1,0 +1,249 @@
+//! Layer-level IR for diffusion-model workloads.
+//!
+//! Every network in the zoo lowers to a flat `Vec<LayerInstance>` per
+//! denoising step. The simulator consumes this IR; it deliberately keeps
+//! only what the cost model needs (shapes, op class, structural sparsity)
+//! and what Table I needs (parameter counts).
+
+/// Operation classes the DiffLight architecture distinguishes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution, lowered to GEMM via im2col.
+    Conv2d {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        /// Spatial input size (square feature maps).
+        h_in: usize,
+        /// Transposed (zero-insertion upsampling) convolution?
+        transposed: bool,
+    },
+    /// Self- or cross-attention (`context_dim = d_model` for self).
+    Attention {
+        seq: usize,
+        d_model: usize,
+        context_dim: usize,
+        context_seq: usize,
+        heads: usize,
+    },
+    /// Dense layer over `tokens` independent rows.
+    Linear {
+        in_features: usize,
+        out_features: usize,
+        tokens: usize,
+    },
+    /// GroupNorm over `elements` in `groups` groups.
+    GroupNorm { elements: usize, groups: usize, channels: usize },
+    /// Swish/SiLU over `elements`.
+    Swish { elements: usize },
+    /// Residual/skip add over `elements`.
+    ResidualAdd { elements: usize },
+}
+
+/// A layer instance: kind + provenance label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerInstance {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl LayerKind {
+    /// Learnable parameter count (weights + biases; norms carry 2/channel).
+    pub fn params(&self) -> u64 {
+        match *self {
+            LayerKind::Conv2d { in_ch, out_ch, kernel, .. } => {
+                (in_ch * out_ch * kernel * kernel + out_ch) as u64
+            }
+            LayerKind::Attention { d_model, context_dim, heads, .. } => {
+                // W_Q: d×d, W_K/W_V: ctx×d, W_O: d×d (+ biases on out proj).
+                let d = d_model as u64;
+                let c = context_dim as u64;
+                let _ = heads; // head split does not change param count
+                d * d + c * d + c * d + d * d + d
+            }
+            LayerKind::Linear { in_features, out_features, .. } => {
+                (in_features * out_features + out_features) as u64
+            }
+            LayerKind::GroupNorm { channels, .. } => 2 * channels as u64,
+            LayerKind::Swish { .. } | LayerKind::ResidualAdd { .. } => 0,
+        }
+    }
+
+    /// Useful MAC count of one forward execution.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            LayerKind::Conv2d { in_ch, out_ch, kernel, stride, h_in, transposed } => {
+                let h_out = if transposed { h_in * stride } else { h_in.div_ceil(stride) };
+                (h_out * h_out) as u64 * (in_ch * kernel * kernel) as u64 * out_ch as u64
+            }
+            LayerKind::Attention { seq, d_model, context_dim, context_seq, .. } => {
+                let (s, d, c, cs) = (seq as u64, d_model as u64, context_dim as u64, context_seq as u64);
+                // Q gen + K gen + V gen + scores + attn·V + out proj.
+                s * d * d + cs * c * d + cs * c * d + s * cs * d + s * cs * d + s * d * d
+            }
+            LayerKind::Linear { in_features, out_features, tokens } => {
+                (tokens * in_features * out_features) as u64
+            }
+            LayerKind::GroupNorm { elements, .. } => 2 * elements as u64,
+            LayerKind::Swish { elements } => elements as u64,
+            LayerKind::ResidualAdd { elements } => (elements / 2) as u64,
+        }
+    }
+
+    /// Output element count (for chaining norms/activations).
+    pub fn output_elements(&self) -> usize {
+        match *self {
+            LayerKind::Conv2d { out_ch, stride, h_in, transposed, .. } => {
+                let h_out = if transposed { h_in * stride } else { h_in.div_ceil(stride) };
+                h_out * h_out * out_ch
+            }
+            LayerKind::Attention { seq, d_model, .. } => seq * d_model,
+            LayerKind::Linear { out_features, tokens, .. } => tokens * out_features,
+            LayerKind::GroupNorm { elements, .. } => elements,
+            LayerKind::Swish { elements } => elements,
+            LayerKind::ResidualAdd { elements } => elements / 2,
+        }
+    }
+}
+
+impl LayerInstance {
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Self { name: name.into(), kind }
+    }
+}
+
+/// Aggregate statistics over a layer list.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct GraphStats {
+    pub params: u64,
+    pub macs_per_step: u64,
+    pub conv_macs: u64,
+    pub attention_macs: u64,
+    pub linear_macs: u64,
+    pub layers: usize,
+}
+
+/// Summarise a layer list.
+pub fn graph_stats(layers: &[LayerInstance]) -> GraphStats {
+    let mut s = GraphStats { layers: layers.len(), ..Default::default() };
+    for l in layers {
+        s.params += l.kind.params();
+        let macs = l.kind.macs();
+        s.macs_per_step += macs;
+        match l.kind {
+            LayerKind::Conv2d { .. } => s.conv_macs += macs,
+            LayerKind::Attention { .. } => s.attention_macs += macs,
+            LayerKind::Linear { .. } => s.linear_macs += macs,
+            _ => {}
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_params_formula() {
+        let k = LayerKind::Conv2d {
+            in_ch: 64,
+            out_ch: 128,
+            kernel: 3,
+            stride: 1,
+            h_in: 32,
+            transposed: false,
+        };
+        assert_eq!(k.params(), 64 * 128 * 9 + 128);
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        let k = LayerKind::Conv2d {
+            in_ch: 3,
+            out_ch: 8,
+            kernel: 3,
+            stride: 1,
+            h_in: 16,
+            transposed: false,
+        };
+        assert_eq!(k.macs(), 16 * 16 * 3 * 9 * 8);
+    }
+
+    #[test]
+    fn strided_conv_downsamples() {
+        let k = LayerKind::Conv2d {
+            in_ch: 8,
+            out_ch: 8,
+            kernel: 3,
+            stride: 2,
+            h_in: 16,
+            transposed: false,
+        };
+        assert_eq!(k.output_elements(), 8 * 8 * 8);
+    }
+
+    #[test]
+    fn transposed_conv_upsamples() {
+        let k = LayerKind::Conv2d {
+            in_ch: 8,
+            out_ch: 4,
+            kernel: 4,
+            stride: 2,
+            h_in: 16,
+            transposed: true,
+        };
+        assert_eq!(k.output_elements(), 32 * 32 * 4);
+    }
+
+    #[test]
+    fn self_attention_param_count() {
+        let k = LayerKind::Attention {
+            seq: 256,
+            d_model: 128,
+            context_dim: 128,
+            context_seq: 256,
+            heads: 8,
+        };
+        // 4 d×d projections + out bias.
+        assert_eq!(k.params(), 4 * 128 * 128 + 128);
+    }
+
+    #[test]
+    fn cross_attention_params_use_context_dim() {
+        let k = LayerKind::Attention {
+            seq: 64,
+            d_model: 320,
+            context_dim: 768,
+            context_seq: 77,
+            heads: 8,
+        };
+        assert_eq!(
+            k.params(),
+            (320 * 320 + 768 * 320 + 768 * 320 + 320 * 320 + 320) as u64
+        );
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let layers = vec![
+            LayerInstance::new(
+                "conv",
+                LayerKind::Conv2d {
+                    in_ch: 4,
+                    out_ch: 4,
+                    kernel: 3,
+                    stride: 1,
+                    h_in: 8,
+                    transposed: false,
+                },
+            ),
+            LayerInstance::new("act", LayerKind::Swish { elements: 256 }),
+        ];
+        let s = graph_stats(&layers);
+        assert_eq!(s.layers, 2);
+        assert_eq!(s.params, (4 * 4 * 9 + 4) as u64);
+        assert!(s.conv_macs > 0 && s.attention_macs == 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Diffusion-model workloads: layer IR, im2col lowering, the UNet graph
+//! builder, and the Table I model zoo.
+
+pub mod im2col;
+pub mod layers;
+pub mod unet;
+pub mod zoo;
+
+pub use layers::{graph_stats, GraphStats, LayerInstance, LayerKind};
+pub use zoo::{ModelId, ModelSpec};

@@ -1,0 +1,367 @@
+//! UNet graph builder for diffusion models (paper §III.A).
+//!
+//! Builds the per-denoising-step layer trace of a UNet in the
+//! DDPM/LDM/Stable-Diffusion family: stacked encoder (downsampling) and
+//! decoder (upsampling) levels of residual blocks with skip connections,
+//! attention at configured resolutions, timestep embedding, and a middle
+//! block. Decoder upsampling uses transposed convolutions — the layers the
+//! sparsity-aware dataflow targets (§IV.C).
+//!
+//! The builder follows the CompVis `UNetModel` structure closely enough
+//! that parameter counts land on the published Table I numbers.
+
+use super::layers::{LayerInstance, LayerKind};
+
+/// UNet hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UNetConfig {
+    /// Spatial size of the (latent or pixel) input, square.
+    pub image_size: usize,
+    /// Input channels (3 pixel-space, 4 latent-space).
+    pub in_channels: usize,
+    /// Output channels (predicted noise ε).
+    pub out_channels: usize,
+    /// Base channel width.
+    pub model_channels: usize,
+    /// Per-level channel multipliers.
+    pub channel_mult: Vec<usize>,
+    /// Residual blocks per level.
+    pub num_res_blocks: usize,
+    /// Downsample factors (1, 2, 4, …) at which attention is inserted.
+    pub attention_resolutions: Vec<usize>,
+    /// Attention heads.
+    pub num_heads: usize,
+    /// Cross-attention context width (`None` → self-attention only).
+    pub context_dim: Option<usize>,
+    /// Context sequence length (text tokens; 77 for SD).
+    pub context_seq: usize,
+    /// Transformer depth per attention site (LDM/SD "spatial transformer").
+    pub transformer_layers: usize,
+    /// Use the LDM/SD spatial-transformer block (proj_in/out + FF) rather
+    /// than the ADM-style plain attention block.
+    pub use_spatial_transformer: bool,
+}
+
+impl UNetConfig {
+    /// Time-embedding width (4× base, as in the reference models).
+    pub fn time_embed_dim(&self) -> usize {
+        4 * self.model_channels
+    }
+}
+
+/// Build the flat layer trace of one denoising step (one UNet forward).
+pub fn build_unet(cfg: &UNetConfig) -> Vec<LayerInstance> {
+    let mut b = Builder { cfg, layers: Vec::new() };
+    b.time_embedding();
+    // Input stem.
+    b.conv("in.conv", cfg.in_channels, cfg.model_channels, 3, 1, cfg.image_size, false);
+
+    // --- Encoder ---
+    let mut ch = cfg.model_channels;
+    let mut res = cfg.image_size;
+    let mut ds = 1usize;
+    // Skip-connection channel stack (input stem pushes first).
+    let mut skips: Vec<usize> = vec![ch];
+    for (level, &mult) in cfg.channel_mult.iter().enumerate() {
+        let out_ch = mult * cfg.model_channels;
+        for i in 0..cfg.num_res_blocks {
+            b.res_block(&format!("enc.{level}.res{i}"), ch, out_ch, res);
+            ch = out_ch;
+            if cfg.attention_resolutions.contains(&ds) {
+                b.attention_site(&format!("enc.{level}.attn{i}"), ch, res);
+            }
+            skips.push(ch);
+        }
+        if level + 1 < cfg.channel_mult.len() {
+            // Downsample: 3×3 stride-2 conv.
+            b.conv(&format!("enc.{level}.down"), ch, ch, 3, 2, res, false);
+            res /= 2;
+            ds *= 2;
+            skips.push(ch);
+        }
+    }
+
+    // --- Middle ---
+    b.res_block("mid.res0", ch, ch, res);
+    b.attention_site("mid.attn", ch, res);
+    b.res_block("mid.res1", ch, ch, res);
+
+    // --- Decoder ---
+    for (level, &mult) in cfg.channel_mult.iter().enumerate().rev() {
+        let out_ch = mult * cfg.model_channels;
+        for i in 0..=cfg.num_res_blocks {
+            let skip_ch = skips.pop().expect("skip stack underflow");
+            b.res_block(&format!("dec.{level}.res{i}"), ch + skip_ch, out_ch, res);
+            ch = out_ch;
+            if cfg.attention_resolutions.contains(&ds) {
+                b.attention_site(&format!("dec.{level}.attn{i}"), ch, res);
+            }
+        }
+        if level > 0 {
+            // Upsample: transposed 3×3 stride-2 conv (zero-insertion —
+            // the sparsity-aware dataflow's target, §IV.C).
+            b.conv(&format!("dec.{level}.up"), ch, ch, 3, 2, res, true);
+            res *= 2;
+            ds /= 2;
+        }
+    }
+    assert!(skips.is_empty(), "unconsumed skip connections");
+
+    // --- Output head ---
+    b.group_norm("out.norm", ch, res);
+    b.swish("out.act", ch * res * res);
+    b.conv("out.conv", ch, cfg.out_channels, 3, 1, res, false);
+
+    b.layers
+}
+
+struct Builder<'a> {
+    cfg: &'a UNetConfig,
+    layers: Vec<LayerInstance>,
+}
+
+impl Builder<'_> {
+    fn push(&mut self, name: &str, kind: LayerKind) {
+        self.layers.push(LayerInstance::new(name, kind));
+    }
+
+    fn conv(
+        &mut self,
+        name: &str,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        h_in: usize,
+        transposed: bool,
+    ) {
+        self.push(
+            name,
+            LayerKind::Conv2d { in_ch, out_ch, kernel, stride, h_in, transposed },
+        );
+    }
+
+    fn group_norm(&mut self, name: &str, channels: usize, res: usize) {
+        self.push(
+            name,
+            LayerKind::GroupNorm {
+                elements: channels * res * res,
+                groups: 32.min(channels),
+                channels,
+            },
+        );
+    }
+
+    fn swish(&mut self, name: &str, elements: usize) {
+        self.push(name, LayerKind::Swish { elements });
+    }
+
+    /// Timestep sinusoidal embedding → 2-layer MLP (once per step).
+    fn time_embedding(&mut self) {
+        let d = self.cfg.model_channels;
+        let t = self.cfg.time_embed_dim();
+        self.push(
+            "time.mlp0",
+            LayerKind::Linear { in_features: d, out_features: t, tokens: 1 },
+        );
+        self.push("time.act", LayerKind::Swish { elements: t });
+        self.push(
+            "time.mlp1",
+            LayerKind::Linear { in_features: t, out_features: t, tokens: 1 },
+        );
+    }
+
+    /// ResBlock: GN→SiLU→conv, +temb proj, GN→SiLU→conv, skip 1×1 if
+    /// widths differ, residual add.
+    fn res_block(&mut self, name: &str, in_ch: usize, out_ch: usize, res: usize) {
+        self.group_norm(&format!("{name}.norm0"), in_ch, res);
+        self.swish(&format!("{name}.act0"), in_ch * res * res);
+        self.conv(&format!("{name}.conv0"), in_ch, out_ch, 3, 1, res, false);
+        // Timestep embedding projection into the block.
+        self.push(
+            format!("{name}.temb").as_str(),
+            LayerKind::Linear {
+                in_features: self.cfg.time_embed_dim(),
+                out_features: out_ch,
+                tokens: 1,
+            },
+        );
+        self.group_norm(&format!("{name}.norm1"), out_ch, res);
+        self.swish(&format!("{name}.act1"), out_ch * res * res);
+        self.conv(&format!("{name}.conv1"), out_ch, out_ch, 3, 1, res, false);
+        if in_ch != out_ch {
+            self.conv(&format!("{name}.skip"), in_ch, out_ch, 1, 1, res, false);
+        }
+        self.push(
+            format!("{name}.add").as_str(),
+            LayerKind::ResidualAdd { elements: 2 * out_ch * res * res },
+        );
+    }
+
+    /// Attention site: plain (ADM-style) or spatial-transformer (LDM/SD).
+    fn attention_site(&mut self, name: &str, ch: usize, res: usize) {
+        let seq = res * res;
+        if !self.cfg.use_spatial_transformer {
+            self.group_norm(&format!("{name}.norm"), ch, res);
+            self.push(
+                format!("{name}.self").as_str(),
+                LayerKind::Attention {
+                    seq,
+                    d_model: ch,
+                    context_dim: ch,
+                    context_seq: seq,
+                    heads: self.cfg.num_heads,
+                },
+            );
+            self.push(
+                format!("{name}.add").as_str(),
+                LayerKind::ResidualAdd { elements: 2 * ch * seq },
+            );
+            return;
+        }
+        // Spatial transformer: GN, 1×1 proj_in, `transformer_layers` ×
+        // (self-attn, cross-attn, GEGLU FF), 1×1 proj_out, residual.
+        self.group_norm(&format!("{name}.norm"), ch, res);
+        self.conv(&format!("{name}.proj_in"), ch, ch, 1, 1, res, false);
+        for l in 0..self.cfg.transformer_layers {
+            self.push(
+                format!("{name}.t{l}.self").as_str(),
+                LayerKind::Attention {
+                    seq,
+                    d_model: ch,
+                    context_dim: ch,
+                    context_seq: seq,
+                    heads: self.cfg.num_heads,
+                },
+            );
+            let (ctx_dim, ctx_seq) = match self.cfg.context_dim {
+                Some(c) => (c, self.cfg.context_seq),
+                None => (ch, seq),
+            };
+            self.push(
+                format!("{name}.t{l}.cross").as_str(),
+                LayerKind::Attention {
+                    seq,
+                    d_model: ch,
+                    context_dim: ctx_dim,
+                    context_seq: ctx_seq,
+                    heads: self.cfg.num_heads,
+                },
+            );
+            // GEGLU feed-forward: d → 2·4d (value+gate), then 4d → d.
+            self.push(
+                format!("{name}.t{l}.ff0").as_str(),
+                LayerKind::Linear { in_features: ch, out_features: 8 * ch, tokens: seq },
+            );
+            self.push(
+                format!("{name}.t{l}.ffact").as_str(),
+                LayerKind::Swish { elements: 4 * ch * seq },
+            );
+            self.push(
+                format!("{name}.t{l}.ff1").as_str(),
+                LayerKind::Linear { in_features: 4 * ch, out_features: ch, tokens: seq },
+            );
+        }
+        self.conv(&format!("{name}.proj_out"), ch, ch, 1, 1, res, false);
+        self.push(
+            format!("{name}.add").as_str(),
+            LayerKind::ResidualAdd { elements: 2 * ch * seq },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layers::graph_stats;
+
+    fn tiny() -> UNetConfig {
+        UNetConfig {
+            image_size: 16,
+            in_channels: 3,
+            out_channels: 3,
+            model_channels: 32,
+            channel_mult: vec![1, 2],
+            num_res_blocks: 1,
+            attention_resolutions: vec![2],
+            num_heads: 4,
+            context_dim: None,
+            context_seq: 0,
+            transformer_layers: 1,
+            use_spatial_transformer: false,
+        }
+    }
+
+    #[test]
+    fn builds_without_panicking_and_consumes_skips() {
+        let layers = build_unet(&tiny());
+        assert!(layers.len() > 20);
+    }
+
+    #[test]
+    fn has_transposed_convs_in_decoder() {
+        let layers = build_unet(&tiny());
+        let ups: Vec<_> = layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv2d { transposed: true, .. }))
+            .collect();
+        assert_eq!(ups.len(), 1); // two levels → one upsample
+        assert!(ups[0].name.contains(".up"));
+    }
+
+    #[test]
+    fn attention_only_at_configured_resolution() {
+        let layers = build_unet(&tiny());
+        for l in &layers {
+            if let LayerKind::Attention { seq, .. } = l.kind {
+                // ds=2 → res 8 → seq 64 (middle block also at res 8).
+                assert_eq!(seq, 64, "unexpected attention at {}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn encoder_decoder_symmetric_output_size() {
+        let layers = build_unet(&tiny());
+        // Output head conv is at full resolution.
+        let out = layers.last().unwrap();
+        if let LayerKind::Conv2d { h_in, out_ch, .. } = out.kind {
+            assert_eq!(h_in, 16);
+            assert_eq!(out_ch, 3);
+        } else {
+            panic!("last layer must be the output conv");
+        }
+    }
+
+    #[test]
+    fn param_count_grows_with_width() {
+        let mut wide = tiny();
+        wide.model_channels = 64;
+        let narrow = graph_stats(&build_unet(&tiny()));
+        let wider = graph_stats(&build_unet(&wide));
+        assert!(wider.params > 3 * narrow.params);
+    }
+
+    #[test]
+    fn spatial_transformer_adds_cross_attention() {
+        let mut cfg = tiny();
+        cfg.use_spatial_transformer = true;
+        cfg.context_dim = Some(96);
+        cfg.context_seq = 77;
+        let layers = build_unet(&cfg);
+        let crosses: Vec<_> = layers
+            .iter()
+            .filter(|l| {
+                matches!(l.kind, LayerKind::Attention { context_dim, .. } if context_dim == 96)
+            })
+            .collect();
+        assert!(!crosses.is_empty());
+        assert!(crosses.iter().all(|l| l.name.contains("cross")));
+    }
+
+    #[test]
+    fn macs_dominated_by_convs_for_pixel_space_model() {
+        let s = graph_stats(&build_unet(&tiny()));
+        assert!(s.conv_macs > s.attention_macs);
+    }
+}

@@ -1,0 +1,163 @@
+//! Cross-module integration tests: workload traces through the simulator,
+//! baselines, DSE, and the paper-level invariants that tie them together.
+
+use difflight::arch::cost::OptFlags;
+use difflight::arch::units::Accelerator;
+use difflight::arch::ArchConfig;
+use difflight::baselines::all_baselines;
+use difflight::devices::DeviceParams;
+use difflight::sim::Simulator;
+use difflight::util::stats;
+use difflight::workload::{graph_stats, ModelId, ModelSpec};
+
+/// Figure 9/10 headline: DiffLight leads every platform in GOPS and EPB
+/// on every model, with PACE the closest (paper: "at least 5.5× GOPS and
+/// 3× lower EPB than state-of-the-art").
+#[test]
+fn difflight_leads_every_platform_on_every_model() {
+    let sim = Simulator::paper_optimal();
+    for id in ModelId::ALL {
+        let spec = ModelSpec::get(id);
+        let run = sim.run_model(&spec, OptFlags::ALL);
+        for b in all_baselines() {
+            let r = b.run(&spec);
+            assert!(
+                run.gops() > r.gops,
+                "{:?}: DiffLight {} GOPS !> {} {}",
+                id,
+                run.gops(),
+                r.platform,
+                r.gops
+            );
+            assert!(
+                run.epb() < r.epb_j_per_bit,
+                "{:?}: DiffLight EPB !< {}",
+                id,
+                r.platform
+            );
+        }
+    }
+}
+
+/// The paper's minimum headline factors hold on the averages.
+#[test]
+fn headline_factors_hold() {
+    let sim = Simulator::paper_optimal();
+    let mut dl_gops = Vec::new();
+    let mut dl_epb = Vec::new();
+    for id in ModelId::ALL {
+        let run = sim.run_model(&ModelSpec::get(id), OptFlags::ALL);
+        dl_gops.push(run.gops());
+        dl_epb.push(run.epb());
+    }
+    for b in all_baselines() {
+        let mut gr = Vec::new();
+        let mut er = Vec::new();
+        for (i, id) in ModelId::ALL.iter().enumerate() {
+            let r = b.run(&ModelSpec::get(*id));
+            gr.push(dl_gops[i] / r.gops);
+            er.push(r.epb_j_per_bit / dl_epb[i]);
+        }
+        // "at least 5.5x better GOPS and 3x lower EPB" vs the strongest
+        // competitor; every platform must be beaten by at least those.
+        assert!(stats::mean(&gr) >= 5.49, "{}: {}", b.name(), stats::mean(&gr));
+        assert!(stats::mean(&er) >= 2.99, "{}: {}", b.name(), stats::mean(&er));
+    }
+}
+
+/// Every optimization individually reduces energy on every model
+/// (Figure 8's per-bar sanity).
+#[test]
+fn each_optimization_reduces_energy() {
+    let sim = Simulator::paper_optimal();
+    for id in ModelId::ALL {
+        let trace = ModelSpec::get(id).trace();
+        let base = sim.step_cost(&trace, OptFlags::BASELINE).energy_j;
+        for (name, opts) in OptFlags::figure8_sweep().iter().skip(1) {
+            let e = sim.step_cost(&trace, *opts).energy_j;
+            assert!(e < base, "{:?} {name}: {e} !< {base}", id);
+        }
+    }
+}
+
+/// Useful-op accounting is conserved between the trace stats and the
+/// simulator (sparsity must not change the reported useful work).
+#[test]
+fn ops_accounting_is_consistent() {
+    let sim = Simulator::paper_optimal();
+    for id in ModelId::ALL {
+        let trace = ModelSpec::get(id).trace();
+        let base = sim.step_cost(&trace, OptFlags::BASELINE);
+        let all = sim.step_cost(&trace, OptFlags::ALL);
+        assert_eq!(base.ops, all.ops, "{:?}", id);
+    }
+}
+
+/// The simulator scales: twice the hardware (Y, H) must not be slower on
+/// any model.
+#[test]
+fn more_hardware_never_hurts_latency() {
+    let params = DeviceParams::paper();
+    let small = Simulator::new(
+        Accelerator::new(ArchConfig::from_vector([2, 12, 3, 4, 6, 3], 36), &params).unwrap(),
+        params.clone(),
+    );
+    let big = Simulator::new(
+        Accelerator::new(ArchConfig::from_vector([4, 12, 3, 8, 6, 3], 36), &params).unwrap(),
+        params.clone(),
+    );
+    for id in ModelId::ALL {
+        let trace = ModelSpec::get(id).trace();
+        let ls = small.step_cost(&trace, OptFlags::ALL).latency_s;
+        let lb = big.step_cost(&trace, OptFlags::ALL).latency_s;
+        assert!(lb <= ls * 1.001, "{:?}: big {lb} > small {ls}", id);
+    }
+}
+
+/// Workload sanity: per-step MACs are in the right ballpark for each
+/// published architecture (SD ≫ LDM ≫ DDPM per step).
+#[test]
+fn workload_macs_ordering() {
+    let stats: Vec<(ModelId, u64)> = ModelId::ALL
+        .iter()
+        .map(|&id| (id, graph_stats(&ModelSpec::get(id).trace()).macs_per_step))
+        .collect();
+    let get = |id: ModelId| stats.iter().find(|(i, _)| *i == id).unwrap().1;
+    assert!(get(ModelId::StableDiffusion) > get(ModelId::LdmChurches));
+    assert!(get(ModelId::StableDiffusion) > get(ModelId::DdpmCifar10));
+    // DDPM runs 1000 steps though — total generation cost leads.
+    let total_ddpm = ModelSpec::get(ModelId::DdpmCifar10).total_macs();
+    let total_sd = ModelSpec::get(ModelId::StableDiffusion).total_macs();
+    assert!(total_ddpm > total_sd / 4, "DDPM's 1000 steps must matter");
+}
+
+/// DSE evaluate() agrees with a direct simulator run for the paper config.
+#[test]
+fn dse_evaluate_matches_simulator() {
+    let params = DeviceParams::paper();
+    let pt = difflight::dse::evaluate(ArchConfig::paper_optimal(), &params).unwrap();
+    let sim = Simulator::paper_optimal();
+    let mut gops = Vec::new();
+    for id in ModelId::ALL {
+        gops.push(sim.run_model(&ModelSpec::get(id), OptFlags::ALL).gops());
+    }
+    assert!((pt.avg_gops - stats::mean(&gops)).abs() < 1e-6);
+}
+
+/// Device-level invariant surfaced at system level: the fan-out design
+/// rule rejects configurations the paper's Lumerical analysis forbids.
+#[test]
+fn fanout_rule_rejects_oversized_blocks() {
+    let params = DeviceParams::paper();
+    for bad in [
+        [4, 13, 3, 6, 6, 3], // K*N = 39
+        [4, 12, 4, 6, 6, 3], // K*N = 48
+        [4, 12, 3, 6, 13, 3], // M*L = 39
+    ] {
+        let cfg = ArchConfig::from_vector(bad, 36);
+        assert!(
+            Accelerator::new(cfg, &params).is_err(),
+            "{bad:?} should violate the fan-out rule"
+        );
+    }
+}
