@@ -8,7 +8,12 @@
 //! `artifacts/serve_report.json` and are recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example serve_denoise -- [--requests 12]
-//!       [--steps 20] [--batch 4] [--seed 1] [--fp32]`
+//!       [--steps 20] [--batch 4] [--seed 1] [--fp32] [--devices 1]`
+//!
+//! With `--devices N > 1` the coordinator shards the workload across an
+//! N-device simulated fleet (step-level continuous batching) and writes
+//! the fleet roll-up to `artifacts/cluster_report.json` next to the
+//! serving report.
 
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -23,12 +28,16 @@ fn main() -> difflight::Result<()> {
     let batch = args.get_parsed("batch", 4usize);
     let seed = args.get_parsed("seed", 1u64);
 
+    let devices = args.get_parsed("devices", 1usize);
     let mut config = EngineConfig::new(args.get_or("artifacts", "artifacts"));
     config.quantized = !args.flag("fp32");
     config.policy.max_batch = batch;
+    config.cluster.devices = devices;
+    config.cluster.capacity = batch;
     let mut coord = Coordinator::open(config)?;
     println!(
-        "serving {requests} requests, {steps} DDIM steps, max_batch {batch}, platform {}",
+        "serving {requests} requests, {steps} DDIM steps, max_batch {batch}, \
+         {devices} device(s), platform {}",
         coord.platform()
     );
 
@@ -81,9 +90,24 @@ fn main() -> difflight::Result<()> {
         coord.metrics.throughput_samples_per_s(),
         coord.metrics.steps_per_s()
     );
-    let report = coord.metrics.to_json().set("quality_ok", all_ok);
+    let mut report = coord.metrics.to_json().set("quality_ok", all_ok);
+    if coord.fleet_metrics.is_some() {
+        // Fleet drains record per-request latencies on the simulated
+        // device clocks; wall_s stays host time. Mark the domain so
+        // trajectory comparisons don't mix units across --devices runs.
+        report = report.set("latency_clock_domain", "simulated-device");
+    }
     std::fs::write("artifacts/serve_report.json", report.to_string_pretty())?;
     println!("wrote artifacts/serve_report.json");
+    if let Some(fleet) = &coord.fleet_metrics {
+        println!(
+            "fleet: {:.1} samples/s over {} devices (simulated)",
+            fleet.throughput_samples_per_s(),
+            fleet.devices.len()
+        );
+        std::fs::write("artifacts/cluster_report.json", fleet.to_json().to_string_pretty())?;
+        println!("wrote artifacts/cluster_report.json");
+    }
     anyhow::ensure!(all_ok, "quality sanity check failed");
     anyhow::ensure!(results.len() == requests, "dropped requests");
     Ok(())

@@ -1,0 +1,88 @@
+//! Scale-out sweep: fleet serving throughput for devices ∈ {1, 2, 4, 8}.
+//!
+//! Serves the same synthetic burst through each fleet size and reports
+//! simulated aggregate throughput, latency percentiles, utilization and
+//! the scaling efficiency vs the single-device baseline. Emits the whole
+//! sweep as JSON (`artifacts/cluster_scale.json`) via `util::json` so
+//! bench trajectory files can track scale-out numbers, and times the
+//! scheduler itself (host-side) with the shared harness.
+
+#[path = "harness.rs"]
+mod harness;
+
+use difflight::cluster::{
+    synthetic_workload, Cluster, ClusterConfig, ShardPolicy, SimExecutor,
+};
+use difflight::coordinator::request::SamplerKind;
+use difflight::util::json::Json;
+use difflight::util::table::fmt_si;
+
+const DEVICE_SWEEP: [usize; 4] = [1, 2, 4, 8];
+const REQUESTS: usize = 64;
+const STEPS: usize = 20;
+
+fn run_fleet(devices: usize) -> difflight::cluster::ClusterOutcome {
+    let mut cluster = Cluster::simulated(ClusterConfig {
+        devices,
+        capacity: 4,
+        max_queue: 256,
+        policy: ShardPolicy::LeastLoaded,
+        ..ClusterConfig::default()
+    });
+    let workload = synthetic_workload(REQUESTS, 7, SamplerKind::Ddim { steps: STEPS }, 0.0);
+    cluster.serve(workload, &mut SimExecutor).expect("fleet serve")
+}
+
+fn main() {
+    harness::section(&format!(
+        "cluster scale-out: {REQUESTS} requests x {STEPS} DDIM steps, least-loaded"
+    ));
+
+    let mut sweep = Vec::new();
+    let mut base_throughput = 0.0;
+    println!(
+        "{:>8} {:>16} {:>12} {:>12} {:>10} {:>10}",
+        "devices", "samples/s (sim)", "p50", "p99", "speedup", "efficiency"
+    );
+    for &devices in &DEVICE_SWEEP {
+        let out = run_fleet(devices);
+        let m = &out.metrics;
+        assert_eq!(out.results.len(), REQUESTS, "no request may be dropped");
+        let tput = m.throughput_samples_per_s();
+        if devices == 1 {
+            base_throughput = tput;
+        }
+        let speedup = tput / base_throughput;
+        println!(
+            "{:>8} {:>16.2} {:>12} {:>12} {:>9.2}x {:>9.0}%",
+            devices,
+            tput,
+            fmt_si(m.latency_p50_s(), "s"),
+            fmt_si(m.latency_p99_s(), "s"),
+            speedup,
+            100.0 * speedup / devices as f64,
+        );
+        sweep.push(
+            Json::obj()
+                .set("devices", devices)
+                .set("speedup_vs_1", speedup)
+                .set("report", m.to_json()),
+        );
+    }
+
+    let report = Json::obj()
+        .set("bench", "cluster_scale")
+        .set("requests", REQUESTS)
+        .set("steps", STEPS)
+        .set("sweep", Json::Arr(sweep));
+    if std::fs::create_dir_all("artifacts").is_ok() {
+        let path = "artifacts/cluster_scale.json";
+        std::fs::write(path, report.to_string_pretty()).expect("write sweep report");
+        println!("\nwrote {path}");
+    }
+
+    harness::section("timing (host-side scheduler cost)");
+    harness::bench("fleet(4).serve(64 reqs x 20 steps)", 10, || {
+        harness::black_box(run_fleet(4));
+    });
+}

@@ -1,0 +1,174 @@
+//! A simulated DiffLight device handle: batch-slot capacity, an
+//! admission queue, and a simulated clock priced by the [`crate::sim`]
+//! cost model.
+//!
+//! Each device models one accelerator tile serving UNet denoise steps.
+//! A step over `k` resident samples costs the single-sample step latency
+//! plus a marginal term per extra sample (the photonic array is
+//! weight-stationary, so extra activations stream through the same MR
+//! banks and only pay the electro-optic conversion again), while energy
+//! and useful ops scale linearly with `k`.
+
+use crate::arch::cost::Cost;
+
+/// Identifier of a device within a cluster (dense, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+/// One simulated accelerator in the fleet.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: DeviceId,
+    /// Max samples resident in the step batch at once.
+    pub capacity: usize,
+    /// Max samples waiting behind the resident set before the router
+    /// must shed load to another device (or reject).
+    pub max_queue: usize,
+    /// Cost of one denoise step for a single sample (from the simulator).
+    step_base: Cost,
+    /// Marginal latency per extra resident sample, as a fraction of the
+    /// single-sample step latency.
+    batch_marginal: f64,
+    /// Simulated time at which the in-flight step (if any) completes.
+    busy_until_s: Option<f64>,
+    // --- accounting ---
+    pub steps_executed: u64,
+    pub samples_completed: u64,
+    pub busy_s: f64,
+    pub energy_j: f64,
+    pub ops: u64,
+}
+
+impl Device {
+    pub fn new(id: usize, step_base: Cost, capacity: usize, max_queue: usize, batch_marginal: f64) -> Self {
+        assert!(capacity >= 1, "device needs at least one batch slot");
+        assert!(step_base.latency_s > 0.0, "step cost must have positive latency");
+        Self {
+            id: DeviceId(id),
+            capacity,
+            max_queue,
+            step_base,
+            batch_marginal,
+            busy_until_s: None,
+            steps_executed: 0,
+            samples_completed: 0,
+            busy_s: 0.0,
+            energy_j: 0.0,
+            ops: 0,
+        }
+    }
+
+    /// Latency of one fused step over `k` resident samples.
+    pub fn step_latency_s(&self, k: usize) -> f64 {
+        assert!(k >= 1);
+        self.step_base.latency_s * (1.0 + self.batch_marginal * (k - 1) as f64)
+    }
+
+    /// Simulated completion time of the in-flight step, if stepping.
+    pub fn busy_until(&self) -> Option<f64> {
+        self.busy_until_s
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.busy_until_s.is_none()
+    }
+
+    /// Begin one fused step over `k` samples at simulated time `now_s`;
+    /// returns the completion time. Accounts busy time, energy and ops.
+    pub fn begin_step(&mut self, now_s: f64, k: usize) -> f64 {
+        assert!(self.busy_until_s.is_none(), "device {} already stepping", self.id.0);
+        assert!(k >= 1 && k <= self.capacity, "step batch {k} outside 1..={}", self.capacity);
+        let lat = self.step_latency_s(k);
+        self.busy_until_s = Some(now_s + lat);
+        self.busy_s += lat;
+        self.energy_j += self.step_base.energy_j * k as f64;
+        self.ops += self.step_base.ops * k as u64;
+        self.steps_executed += k as u64;
+        now_s + lat
+    }
+
+    /// Mark the in-flight step finished (the scheduler drives this at the
+    /// completion event).
+    pub fn finish_step(&mut self) {
+        assert!(self.busy_until_s.is_some(), "device {} not stepping", self.id.0);
+        self.busy_until_s = None;
+    }
+
+    /// Zero the accounting counters (one serving run = one accounting
+    /// window; without this, back-to-back `serve` calls would blend
+    /// runs and report >100% utilization).
+    pub fn reset_accounting(&mut self) {
+        assert!(self.busy_until_s.is_none(), "reset mid-step on device {}", self.id.0);
+        self.steps_executed = 0;
+        self.samples_completed = 0;
+        self.busy_s = 0.0;
+        self.energy_j = 0.0;
+        self.ops = 0;
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device::new(0, Cost::new(1e-3, 2e-3, 1_000_000, 10), 4, 8, 0.25)
+    }
+
+    #[test]
+    fn batch_latency_is_sublinear() {
+        let d = dev();
+        let l1 = d.step_latency_s(1);
+        let l4 = d.step_latency_s(4);
+        assert!((l1 - 1e-3).abs() < 1e-12);
+        assert!(l4 < 4.0 * l1, "fused batch must beat serial");
+        assert!(l4 > l1, "more samples still cost more");
+    }
+
+    #[test]
+    fn begin_finish_accounting() {
+        let mut d = dev();
+        assert!(d.is_idle());
+        let done = d.begin_step(10.0, 4);
+        assert!((done - 10.0 - d.step_latency_s(4)).abs() < 1e-12);
+        assert_eq!(d.busy_until(), Some(done));
+        assert_eq!(d.steps_executed, 4);
+        assert!((d.energy_j - 8e-3).abs() < 1e-12);
+        assert_eq!(d.ops, 4_000_000);
+        d.finish_step();
+        assert!(d.is_idle());
+    }
+
+    #[test]
+    fn gops_rolls_up_through_snapshot() {
+        let mut d = dev();
+        d.begin_step(0.0, 2);
+        d.finish_step();
+        // 2 Mops in 1.25 ms → 1.6 GOPS.
+        let m = crate::cluster::metrics::DeviceMetrics::snapshot(&d);
+        assert!((m.gops() - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_accounting_zeroes_counters() {
+        let mut d = dev();
+        d.begin_step(0.0, 3);
+        d.finish_step();
+        d.samples_completed = 3;
+        d.reset_accounting();
+        assert_eq!(d.steps_executed, 0);
+        assert_eq!(d.samples_completed, 0);
+        assert_eq!(d.ops, 0);
+        assert_eq!(d.busy_s, 0.0);
+        assert_eq!(d.energy_j, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already stepping")]
+    fn double_begin_panics() {
+        let mut d = dev();
+        d.begin_step(0.0, 1);
+        d.begin_step(0.1, 1);
+    }
+}

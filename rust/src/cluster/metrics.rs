@@ -1,0 +1,228 @@
+//! Fleet metrics: per-device and aggregate roll-ups over a serving run.
+//!
+//! All times are **simulated** seconds (the cluster's device clocks), so
+//! throughput/latency here compose with the `sim::report` numbers rather
+//! than with host wall-clock. Percentiles reuse [`crate::util::stats`].
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::device::Device;
+
+/// Per-device accounting snapshot.
+#[derive(Debug, Clone)]
+pub struct DeviceMetrics {
+    pub id: usize,
+    pub steps_executed: u64,
+    pub samples_completed: u64,
+    pub busy_s: f64,
+    pub energy_j: f64,
+    pub ops: u64,
+}
+
+impl DeviceMetrics {
+    pub fn snapshot(d: &Device) -> Self {
+        Self {
+            id: d.id.0,
+            steps_executed: d.steps_executed,
+            samples_completed: d.samples_completed,
+            busy_s: d.busy_s,
+            energy_j: d.energy_j,
+            ops: d.ops,
+        }
+    }
+
+    /// Busy fraction of the fleet makespan.
+    pub fn utilization(&self, makespan_s: f64) -> f64 {
+        if makespan_s == 0.0 {
+            0.0
+        } else {
+            self.busy_s / makespan_s
+        }
+    }
+
+    pub fn gops(&self) -> f64 {
+        if self.busy_s == 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / self.busy_s / 1e9
+        }
+    }
+
+    /// Energy per bit at the given datapath width.
+    pub fn epb(&self, bit_width: u32) -> f64 {
+        let bits = self.ops as f64 * bit_width as f64;
+        if bits == 0.0 {
+            0.0
+        } else {
+            self.energy_j / bits
+        }
+    }
+
+    pub fn to_json(&self, makespan_s: f64, bit_width: u32) -> Json {
+        Json::obj()
+            .set("device", self.id)
+            .set("steps", self.steps_executed)
+            .set("samples", self.samples_completed)
+            .set("busy_s", self.busy_s)
+            .set("utilization", self.utilization(makespan_s))
+            .set("energy_j", self.energy_j)
+            .set("gops", self.gops())
+            .set("epb_j_per_bit", self.epb(bit_width))
+    }
+}
+
+/// Aggregate metrics for a whole fleet serving run.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    pub devices: Vec<DeviceMetrics>,
+    /// End-to-end simulated latency per completed request.
+    pub latencies_s: Vec<f64>,
+    /// Simulated queueing delay (arrival → first denoise step).
+    pub queue_s: Vec<f64>,
+    /// Simulated makespan of the active serving window (first arrival →
+    /// last completion).
+    pub makespan_s: f64,
+    pub samples_completed: u64,
+    pub rejected: u64,
+    pub bit_width: u32,
+}
+
+impl FleetMetrics {
+    pub fn record_completion(&mut self, latency_s: f64, queue_s: f64) {
+        self.latencies_s.push(latency_s);
+        self.queue_s.push(queue_s);
+        self.samples_completed += 1;
+    }
+
+    /// Aggregate simulated throughput, samples/s.
+    pub fn throughput_samples_per_s(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            0.0
+        } else {
+            self.samples_completed as f64 / self.makespan_s
+        }
+    }
+
+    pub fn latency_p50_s(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 50.0)
+    }
+
+    pub fn latency_p99_s(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 99.0)
+    }
+
+    /// Fleet energy per bit: total energy over total data bits moved.
+    pub fn fleet_epb(&self) -> f64 {
+        let energy: f64 = self.devices.iter().map(|d| d.energy_j).sum();
+        let bits: f64 = self
+            .devices
+            .iter()
+            .map(|d| d.ops as f64 * self.bit_width as f64)
+            .sum();
+        if bits == 0.0 {
+            0.0
+        } else {
+            energy / bits
+        }
+    }
+
+    /// Fleet GOPS over the makespan (aggregate, not per-busy-second).
+    pub fn fleet_gops(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            return 0.0;
+        }
+        let ops: f64 = self.devices.iter().map(|d| d.ops as f64).sum();
+        ops / self.makespan_s / 1e9
+    }
+
+    /// JSON report, exported alongside the `sim::report` output so bench
+    /// trajectory files can track scale-out numbers.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("devices", self.devices.len())
+            .set("samples", self.samples_completed)
+            .set("rejected", self.rejected)
+            .set("makespan_s", self.makespan_s)
+            .set("throughput_samples_per_s", self.throughput_samples_per_s())
+            .set("latency_p50_s", self.latency_p50_s())
+            .set("latency_p99_s", self.latency_p99_s())
+            .set("queue_mean_s", stats::mean(&self.queue_s))
+            .set("fleet_gops", self.fleet_gops())
+            .set("fleet_epb_j_per_bit", self.fleet_epb())
+            .set(
+                "per_device",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| d.to_json(self.makespan_s, self.bit_width))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dm(id: usize, busy: f64, energy: f64, ops: u64) -> DeviceMetrics {
+        DeviceMetrics {
+            id,
+            steps_executed: 10,
+            samples_completed: 2,
+            busy_s: busy,
+            energy_j: energy,
+            ops,
+        }
+    }
+
+    fn fleet() -> FleetMetrics {
+        let mut m = FleetMetrics {
+            devices: vec![dm(0, 1.0, 8.0, 1_000_000_000), dm(1, 3.0, 8.0, 3_000_000_000)],
+            makespan_s: 4.0,
+            bit_width: 8,
+            ..Default::default()
+        };
+        m.record_completion(1.0, 0.25);
+        m.record_completion(3.0, 0.75);
+        m
+    }
+
+    #[test]
+    fn roll_ups() {
+        let m = fleet();
+        assert!((m.throughput_samples_per_s() - 0.5).abs() < 1e-12);
+        assert!((m.latency_p50_s() - 2.0).abs() < 1e-12);
+        // 4 Gops over 4 s makespan → 1 GOPS aggregate.
+        assert!((m.fleet_gops() - 1.0).abs() < 1e-12);
+        // 16 J over 4e9 ops * 8 bits.
+        assert!((m.fleet_epb() - 16.0 / 32e9).abs() < 1e-20);
+    }
+
+    #[test]
+    fn per_device_derived() {
+        let m = fleet();
+        assert!((m.devices[0].utilization(m.makespan_s) - 0.25).abs() < 1e-12);
+        assert!((m.devices[0].gops() - 1.0).abs() < 1e-12);
+        assert!((m.devices[0].epb(8) - 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = fleet().to_json();
+        assert_eq!(j.get("devices").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("per_device").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert!(j.get("latency_p99_s").is_some());
+        // Round-trips through the writer/parser.
+        assert!(Json::parse(&j.to_string_pretty()).is_ok());
+    }
+
+    #[test]
+    fn empty_fleet_is_zero() {
+        let m = FleetMetrics::default();
+        assert_eq!(m.throughput_samples_per_s(), 0.0);
+        assert_eq!(m.fleet_epb(), 0.0);
+        assert_eq!(m.fleet_gops(), 0.0);
+    }
+}

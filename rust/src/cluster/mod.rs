@@ -1,0 +1,180 @@
+//! Multi-accelerator sharded serving with continuous step-level batching.
+//!
+//! A fleet of N simulated DiffLight devices — each one a
+//! [`crate::sim::Simulator`]-priced compute tile — behind a step-level
+//! scheduler. Where the single-device coordinator runs every batch to
+//! completion, the cluster interleaves requests at **denoise-step
+//! granularity**: devices own step queues, requests join and leave
+//! batches between UNet calls, and a shard router spreads load with
+//! admission control and backpressure.
+//!
+//! * [`device`] — device handle: batch-slot capacity, simulated clock,
+//!   per-step cost from [`crate::arch::cost`].
+//! * [`router`] — shard policies: round-robin, least-loaded,
+//!   sampler-signature affinity.
+//! * [`scheduler`] — the step-interleaved event loop (continuous
+//!   batching) over [`crate::util::threadpool`].
+//! * [`metrics`] — per-device + fleet p50/p99 latency, EPB and GOPS
+//!   roll-ups reusing [`crate::util::stats`].
+
+pub mod device;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+
+pub use device::{Device, DeviceId};
+pub use metrics::{DeviceMetrics, FleetMetrics};
+pub use router::{DeviceLoad, Router, ShardPolicy};
+pub use scheduler::{
+    ClusterOutcome, ClusterRequest, ClusterResult, SimExecutor, StepExecutor, StepScheduler,
+};
+
+use crate::arch::cost::OptFlags;
+use crate::coordinator::request::SamplerKind;
+use crate::runtime::manifest::NoiseSchedule;
+use crate::sim::Simulator;
+use crate::util::rng::XorShift;
+use crate::workload::{ModelId, ModelSpec};
+
+/// Fleet shape and policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of simulated DiffLight devices.
+    pub devices: usize,
+    /// Resident batch slots per device.
+    pub capacity: usize,
+    /// Admission-queue depth per device before backpressure.
+    pub max_queue: usize,
+    /// Fleet-level deferral backlog: requests that find every device
+    /// full wait here and are re-routed at the next step boundary.
+    /// `0` (the default) sheds immediately — live-serving backpressure;
+    /// drained/offline callers raise it so nothing is dropped.
+    pub max_backlog: usize,
+    pub policy: ShardPolicy,
+    /// Workload whose per-step cost prices the device clock.
+    pub model: ModelId,
+    pub opts: OptFlags,
+    /// Marginal latency of each extra resident sample in a fused step,
+    /// as a fraction of the single-sample step latency.
+    pub batch_marginal: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            devices: 1,
+            capacity: 4,
+            max_queue: 64,
+            max_backlog: 0,
+            policy: ShardPolicy::default(),
+            model: ModelId::DdpmCifar10,
+            opts: OptFlags::ALL,
+            batch_marginal: 0.25,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_devices(devices: usize) -> Self {
+        Self { devices, ..Self::default() }
+    }
+}
+
+/// Facade tying the cost model to the scheduler: prices one denoise step
+/// on the paper-optimal accelerator and builds the fleet.
+pub struct Cluster {
+    pub config: ClusterConfig,
+    scheduler: StepScheduler,
+}
+
+impl Cluster {
+    /// Build a fleet, pricing the per-step device cost from the
+    /// transaction-level simulator for `config.model` under `config.opts`.
+    pub fn new(config: ClusterConfig, schedule: NoiseSchedule, elems: usize) -> Self {
+        let sim = Simulator::paper_optimal();
+        let trace = ModelSpec::get(config.model).trace();
+        let step_cost = sim.step_cost(&trace, config.opts);
+        let bit_width = sim.params.bit_width;
+        Self {
+            scheduler: StepScheduler::new(&config, step_cost, schedule, elems, bit_width),
+            config,
+        }
+    }
+
+    /// Pure-simulation fleet over a locally rebuilt noise schedule (no
+    /// artifacts required) — what the benches and the `cluster` CLI use.
+    pub fn simulated(config: ClusterConfig) -> Self {
+        // T=1000 (the DDPM convention) so DDIM sub-schedules up to 1000
+        // steps run unclamped; 16×16×1 sample geometry matches the AOT
+        // pipeline's default.
+        Self::new(config, NoiseSchedule::linear(1000), 256)
+    }
+
+    /// Serve a workload to completion through `executor`.
+    pub fn serve(
+        &mut self,
+        requests: Vec<ClusterRequest>,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
+        self.scheduler.serve(requests, executor)
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.scheduler.device_count()
+    }
+}
+
+/// Synthetic open-loop workload: `n` requests with exponential
+/// inter-arrival gaps (mean `mean_gap_s`), deterministic in `seed`.
+pub fn synthetic_workload(
+    n: usize,
+    seed: u64,
+    sampler: SamplerKind,
+    mean_gap_s: f64,
+) -> Vec<ClusterRequest> {
+    let mut rng = XorShift::new(seed);
+    let mut at = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let req = ClusterRequest::new(i as u64, seed.wrapping_mul(1000) + i as u64, sampler, at);
+            // Exponential gap; max(1e-12) guards ln(0).
+            at += -mean_gap_s * (1.0 - rng.next_f64()).max(1e-12).ln();
+            req
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_cluster_serves() {
+        let mut c = Cluster::simulated(ClusterConfig::with_devices(2));
+        assert_eq!(c.device_count(), 2);
+        let reqs = synthetic_workload(6, 3, SamplerKind::Ddim { steps: 5 }, 0.0);
+        let out = c.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 6);
+        assert!(out.metrics.makespan_s > 0.0);
+        assert!(out.metrics.fleet_gops() > 0.0);
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_ordered() {
+        let a = synthetic_workload(20, 9, SamplerKind::Ddpm, 1e-3);
+        let b = synthetic_workload(20, 9, SamplerKind::Ddpm, 1e-3);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert!((x.arrival_s - y.arrival_s).abs() < 1e-15);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert_eq!(a[0].arrival_s, 0.0);
+    }
+
+    #[test]
+    fn zero_gap_workload_is_a_burst() {
+        let w = synthetic_workload(5, 1, SamplerKind::Ddpm, 0.0);
+        assert!(w.iter().all(|r| r.arrival_s == 0.0));
+    }
+}

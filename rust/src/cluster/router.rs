@@ -1,0 +1,269 @@
+//! Shard router: assigns incoming generation requests to fleet devices.
+//!
+//! Three policies:
+//!
+//! * [`ShardPolicy::RoundRobin`] — rotate through non-full devices.
+//! * [`ShardPolicy::LeastLoaded`] — lowest resident+queued occupancy,
+//!   ties broken by device id (deterministic).
+//! * [`ShardPolicy::Affinity`] — hash the request's sampler signature to
+//!   a home device so same-signature requests co-locate (keeps each
+//!   device's compiled-executable cache and timestep stride hot), with
+//!   least-loaded fallback when the home device is full.
+//!
+//! Admission control: a device is *full* when `resident + queued` reaches
+//! `capacity + max_queue`; when every device is full the router returns
+//! `None` and the caller must shed the request (backpressure).
+
+use crate::coordinator::request::SamplerKind;
+
+use super::device::DeviceId;
+
+/// Routing policy for sharding requests across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    RoundRobin,
+    #[default]
+    LeastLoaded,
+    /// Sampler-signature affinity with least-loaded fallback.
+    Affinity,
+}
+
+impl ShardPolicy {
+    /// Parse a CLI spelling; `None` for unknown values.
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(ShardPolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(ShardPolicy::LeastLoaded),
+            "affinity" => Some(ShardPolicy::Affinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::RoundRobin => "round-robin",
+            ShardPolicy::LeastLoaded => "least-loaded",
+            ShardPolicy::Affinity => "affinity",
+        }
+    }
+}
+
+/// Occupancy snapshot of one device, as the router sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceLoad {
+    pub resident: usize,
+    pub queued: usize,
+    pub capacity: usize,
+    pub max_queue: usize,
+}
+
+impl DeviceLoad {
+    pub fn total(&self) -> usize {
+        self.resident + self.queued
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.total() >= self.capacity + self.max_queue
+    }
+}
+
+/// Stable 64-bit signature of a sampler setting (affinity key).
+pub fn sampler_signature(sampler: SamplerKind) -> u64 {
+    // splitmix64 finalizer over a small discriminant+payload encoding.
+    let raw = match sampler {
+        SamplerKind::Ddpm => 1u64 << 32,
+        SamplerKind::Ddim { steps } => (2u64 << 32) | steps as u64,
+    };
+    let mut z = raw.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The shard router. Stateful only for round-robin rotation.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: ShardPolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: ShardPolicy) -> Self {
+        Self { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Pick a device for a request, or `None` when every device is full.
+    pub fn route(&mut self, sampler: SamplerKind, loads: &[DeviceLoad]) -> Option<DeviceId> {
+        if loads.is_empty() || loads.iter().all(DeviceLoad::is_full) {
+            return None;
+        }
+        let pick = match self.policy {
+            ShardPolicy::RoundRobin => {
+                let n = loads.len();
+                let mut chosen = None;
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if !loads[i].is_full() {
+                        chosen = Some(i);
+                        self.rr_next = (i + 1) % n;
+                        break;
+                    }
+                }
+                chosen?
+            }
+            ShardPolicy::LeastLoaded => least_loaded(loads)?,
+            ShardPolicy::Affinity => {
+                // Stay home while the home device has free batch slots;
+                // once it is saturated (resident + queued at capacity),
+                // spill to the least-loaded device — otherwise a
+                // homogeneous workload would serialize the whole fleet
+                // onto one device.
+                let home = (sampler_signature(sampler) % loads.len() as u64) as usize;
+                if loads[home].total() < loads[home].capacity {
+                    home
+                } else {
+                    least_loaded(loads)?
+                }
+            }
+        };
+        Some(DeviceId(pick))
+    }
+}
+
+/// Index of the non-full device with the lowest total load (ties → lowest id).
+fn least_loaded(loads: &[DeviceLoad]) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !l.is_full())
+        .min_by_key(|(i, l)| (l.total(), *i))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(resident: usize, queued: usize) -> DeviceLoad {
+        DeviceLoad { resident, queued, capacity: 4, max_queue: 4 }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_full() {
+        let mut r = Router::new(ShardPolicy::RoundRobin);
+        let loads = [load(0, 0), load(4, 4), load(1, 0)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(0)));
+        // Device 1 is full → skipped.
+        assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(2)));
+        assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(0)));
+    }
+
+    #[test]
+    fn least_loaded_prefers_lowest_occupancy() {
+        let mut r = Router::new(ShardPolicy::LeastLoaded);
+        let loads = [load(3, 1), load(1, 0), load(2, 0)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(1)));
+    }
+
+    #[test]
+    fn least_loaded_ties_break_by_id() {
+        let mut r = Router::new(ShardPolicy::LeastLoaded);
+        let loads = [load(2, 0), load(1, 1), load(2, 0)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(1)));
+        let even = [load(1, 0), load(1, 0)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &even), Some(DeviceId(0)));
+    }
+
+    #[test]
+    fn affinity_is_stable_per_signature_and_falls_back() {
+        let mut r = Router::new(ShardPolicy::Affinity);
+        let loads = [load(0, 0), load(0, 0), load(0, 0), load(0, 0)];
+        let s = SamplerKind::Ddim { steps: 25 };
+        let first = r.route(s, &loads).unwrap();
+        for _ in 0..8 {
+            assert_eq!(r.route(s, &loads), Some(first), "affinity must be stable");
+        }
+        // Distinct signatures should not all collapse onto one device.
+        let spread: std::collections::BTreeSet<usize> = (1..64)
+            .map(|steps| r.route(SamplerKind::Ddim { steps }, &loads).unwrap().0)
+            .collect();
+        assert!(spread.len() > 1, "signature hash must spread across devices");
+        // Full home device falls back to least-loaded.
+        let mut full = [load(0, 0); 4];
+        full[first.0] = load(4, 4);
+        let fallback = r.route(s, &full).unwrap();
+        assert_ne!(fallback, first);
+    }
+
+    #[test]
+    fn affinity_spills_once_home_slots_saturate() {
+        // A homogeneous workload must not serialize onto one device: as
+        // soon as the home device's batch slots are occupied, further
+        // same-signature requests spread to the rest of the fleet.
+        let mut r = Router::new(ShardPolicy::Affinity);
+        let s = SamplerKind::Ddim { steps: 25 };
+        let mut loads = vec![load(0, 0); 4];
+        let mut used = std::collections::BTreeSet::new();
+        for _ in 0..16 {
+            let d = r.route(s, &loads).unwrap().0;
+            used.insert(d);
+            if loads[d].resident < loads[d].capacity {
+                loads[d].resident += 1;
+            } else {
+                loads[d].queued += 1;
+            }
+        }
+        assert_eq!(used.len(), 4, "16 one-signature requests must reach all 4 devices");
+    }
+
+    #[test]
+    fn backpressure_when_all_full() {
+        let mut r = Router::new(ShardPolicy::LeastLoaded);
+        assert_eq!(r.route(SamplerKind::Ddpm, &[load(4, 4), load(4, 4)]), None);
+        assert_eq!(r.route(SamplerKind::Ddpm, &[]), None);
+    }
+
+    #[test]
+    fn prop_routing_invariants_under_random_load() {
+        // XorShift-seeded random fleets: every policy must (a) never pick
+        // a full device, (b) reject iff all devices are full, and (c) be
+        // deterministic for identical inputs.
+        crate::util::prop::forall("router invariants", 128, |g| {
+            let n = g.usize_in(1, 8);
+            let loads: Vec<DeviceLoad> = (0..n)
+                .map(|_| DeviceLoad {
+                    resident: g.usize_in(0, 4),
+                    queued: g.usize_in(0, 4),
+                    capacity: 4,
+                    max_queue: 4,
+                })
+                .collect();
+            let sampler = if g.bool() {
+                SamplerKind::Ddpm
+            } else {
+                SamplerKind::Ddim { steps: g.usize_in(1, 100) }
+            };
+            for policy in [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity] {
+                let pick = Router::new(policy).route(sampler, &loads);
+                let pick2 = Router::new(policy).route(sampler, &loads);
+                assert_eq!(pick, pick2, "{} must be deterministic", policy.name());
+                match pick {
+                    Some(did) => assert!(!loads[did.0].is_full(), "{} picked a full device", policy.name()),
+                    None => assert!(loads.iter().all(DeviceLoad::is_full), "{} rejected with room left", policy.name()),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity] {
+            assert_eq!(ShardPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ShardPolicy::parse("bogus"), None);
+    }
+}

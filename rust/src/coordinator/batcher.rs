@@ -71,8 +71,11 @@ impl DynamicBatcher {
             .take_while(|r| Self::signature(r) == sig)
             .count()
             .min(self.policy.max_batch);
+        // A prefix terminated by an incompatible request can never grow:
+        // waiting out `max_wait` would buy nothing, so flush immediately.
+        let blocked = compatible < self.queue.len();
         let waited = now.duration_since(head.admitted);
-        if compatible >= self.policy.max_batch || waited >= self.policy.max_wait {
+        if compatible >= self.policy.max_batch || blocked || waited >= self.policy.max_wait {
             let batch: Vec<GenerationRequest> =
                 (0..compatible).filter_map(|_| self.queue.pop_front()).collect();
             Some(batch)
@@ -152,6 +155,73 @@ mod tests {
     fn empty_queue_yields_none() {
         let mut b = DynamicBatcher::new(BatchPolicy::default());
         assert!(b.try_form(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn empty_queue_poll_is_stable_after_drain() {
+        // Polling an emptied batcher must stay None (no stale state).
+        let mut b = DynamicBatcher::new(policy(2, 0));
+        b.push(req(1, SamplerKind::Ddpm));
+        assert!(b.try_form(Instant::now()).is_some());
+        for _ in 0..3 {
+            assert!(b.try_form(Instant::now() + Duration::from_secs(60)).is_none());
+        }
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn single_request_flushes_exactly_at_max_wait() {
+        let mut b = DynamicBatcher::new(policy(4, 1_000));
+        b.push(req(1, SamplerKind::Ddim { steps: 7 }));
+        let admitted = b.queue.front().unwrap().admitted;
+        // One nanosecond early: keep waiting.
+        assert!(b.try_form(admitted + Duration::from_millis(1_000) - Duration::from_nanos(1)).is_none());
+        // Exactly at the deadline: flush the singleton.
+        let batch = b.try_form(admitted + Duration::from_millis(1_000)).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id.0, 1);
+    }
+
+    #[test]
+    fn blocked_prefix_flushes_without_waiting() {
+        // A partial batch whose growth is blocked by an incompatible
+        // follower can never fill; waiting out max_wait buys nothing.
+        let mut b = DynamicBatcher::new(policy(4, 10_000));
+        b.push(req(1, SamplerKind::Ddpm));
+        b.push(req(2, SamplerKind::Ddpm));
+        b.push(req(3, SamplerKind::Ddim { steps: 10 }));
+        let batch = b.try_form(Instant::now()).expect("blocked prefix must flush");
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|r| r.sampler == SamplerKind::Ddpm));
+        // The DDIM tail is now an unblocked singleton → waits again.
+        assert!(b.try_form(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn prop_mixed_signatures_never_form_oversized_or_mixed_batch() {
+        forall("mixed-signature batches stay homogeneous and sized", 64, |g| {
+            let max_batch = g.usize_in(1, 6);
+            let n = g.usize_in(0, 48);
+            // Large max_wait: only fullness or blocked-prefix may flush.
+            let mut b = DynamicBatcher::new(policy(max_batch, 1_000_000));
+            let kinds = [
+                SamplerKind::Ddpm,
+                SamplerKind::Ddim { steps: 10 },
+                SamplerKind::Ddim { steps: 25 },
+            ];
+            for i in 0..n {
+                b.push(req(i as u64, *g.choose(&kinds)));
+            }
+            while let Some(batch) = b.try_form(Instant::now()) {
+                assert!(!batch.is_empty());
+                assert!(batch.len() <= max_batch, "oversized batch {}", batch.len());
+                let sig = batch[0].sampler;
+                assert!(batch.iter().all(|r| r.sampler == sig), "mixed batch");
+            }
+            // Whatever remains is a single unblocked same-signature
+            // prefix shorter than max_batch, still inside its wait.
+            assert!(b.pending() < max_batch);
+        });
     }
 
     #[test]

@@ -1,9 +1,21 @@
 //! The serving engine: admission → dynamic batching → denoise loop →
 //! results, all in Rust over the compiled PJRT artifacts.
+//!
+//! Two serving tiers share this front door:
+//!
+//! * **Single device** (`cluster.devices == 1`) — the original
+//!   run-to-completion loop: form a batch, denoise it across all
+//!   timesteps, emit, repeat.
+//! * **Fleet** (`cluster.devices > 1`) — requests are handed to the
+//!   [`crate::cluster`] step-level scheduler, which shards them across N
+//!   simulated DiffLight devices with continuous batching; the PJRT
+//!   runtime stays the compute substrate via [`StepExecutor`].
 
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::cluster::{Cluster, ClusterConfig, ClusterRequest, FleetMetrics, StepExecutor};
+use crate::cluster::device::DeviceId;
 use crate::coordinator::batcher::{BatchPolicy, DynamicBatcher};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::request::{
@@ -20,11 +32,24 @@ pub struct EngineConfig {
     pub policy: BatchPolicy,
     /// Serve the W8A8 (photonic-datapath) artifact or the fp32 one.
     pub quantized: bool,
+    /// Fleet shape; `devices: 1` keeps the single-device loop.
+    pub cluster: ClusterConfig,
 }
 
 impl EngineConfig {
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
-        Self { artifacts_dir: artifacts_dir.into(), policy: BatchPolicy::default(), quantized: true }
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            policy: BatchPolicy::default(),
+            quantized: true,
+            cluster: ClusterConfig::default(),
+        }
+    }
+
+    /// Serve through an N-device fleet instead of the single-device loop.
+    pub fn with_cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = cluster;
+        self
     }
 }
 
@@ -33,6 +58,9 @@ pub struct Coordinator {
     runtime: Runtime,
     batcher: DynamicBatcher,
     pub metrics: ServingMetrics,
+    /// Fleet roll-up of the most recent cluster-mode drain (simulated
+    /// clocks); `None` until a fleet run happens.
+    pub fleet_metrics: Option<FleetMetrics>,
     config: EngineConfig,
     next_id: u64,
     session_start: Instant,
@@ -47,6 +75,7 @@ impl Coordinator {
             runtime,
             batcher: DynamicBatcher::new(config.policy),
             metrics: ServingMetrics::default(),
+            fleet_metrics: None,
             config,
             next_id: 0,
             session_start: Instant::now(),
@@ -70,6 +99,9 @@ impl Coordinator {
 
     /// Serve until the queue is empty; returns all finished generations.
     pub fn run_until_drained(&mut self) -> crate::Result<Vec<GenerationResult>> {
+        if self.config.cluster.devices > 1 {
+            return self.run_cluster_drained();
+        }
         let mut out = Vec::new();
         loop {
             // Force formation: drained mode treats "now" as past any wait.
@@ -79,6 +111,65 @@ impl Coordinator {
         }
         self.metrics.wall_s = self.session_start.elapsed().as_secs_f64();
         Ok(out)
+    }
+
+    /// Fleet drain: hand the whole admission queue to the step-level
+    /// cluster scheduler; PJRT stays the compute substrate, the cluster
+    /// owns interleaving and the simulated device clocks.
+    ///
+    /// Clock domains: per-request `queue_s`/`compute_s` (and the latency
+    /// percentiles derived from them) are **simulated** device-clock
+    /// seconds; `metrics.wall_s` stays host wall-clock. `fleet_metrics`
+    /// is the internally consistent simulated-domain view.
+    fn run_cluster_drained(&mut self) -> crate::Result<Vec<GenerationResult>> {
+        let elems = self.sample_elems();
+        let schedule = self.runtime.manifest.schedule.clone();
+        let session_start = self.session_start;
+        let requests: Vec<ClusterRequest> = self
+            .batcher
+            .drain()
+            .into_iter()
+            .map(|r| ClusterRequest {
+                id: r.id,
+                seed: r.seed,
+                sampler: r.sampler,
+                // Real admission offsets become simulated arrival times.
+                arrival_s: r.admitted.duration_since(session_start).as_secs_f64(),
+            })
+            .collect();
+        // Drained mode is offline: there is no client to push back on, so
+        // overload defers to the fleet backlog instead of shedding.
+        let mut cluster_config = self.config.cluster;
+        cluster_config.max_backlog = usize::MAX;
+        let mut cluster = Cluster::new(cluster_config, schedule, elems);
+        let mut executor =
+            PjrtStepExecutor { runtime: &mut self.runtime, quantized: self.config.quantized };
+        let outcome = cluster.serve(requests, &mut executor)?;
+        anyhow::ensure!(
+            outcome.rejected.is_empty(),
+            "unbounded backlog must never shed ({} dropped)",
+            outcome.rejected.len()
+        );
+
+        let mut results = Vec::with_capacity(outcome.results.len());
+        for r in outcome.results {
+            let queue_s = r.queue_s();
+            let compute_s = r.finish_s - r.first_step_s;
+            // Report the occupancy the sample actually ran at.
+            let batch_size = r.mean_batch.round().max(1.0) as usize;
+            self.metrics.record(r.latency_s(), queue_s, compute_s, batch_size, r.steps);
+            results.push(GenerationResult {
+                id: r.id,
+                sample: r.sample,
+                steps: r.steps,
+                batch_size,
+                queue_s,
+                compute_s,
+            });
+        }
+        self.metrics.wall_s = self.session_start.elapsed().as_secs_f64();
+        self.fleet_metrics = Some(outcome.metrics);
+        Ok(results)
     }
 
     /// Serve one formed batch through the denoise loop.
@@ -101,7 +192,7 @@ impl Coordinator {
         let mut idx = 0;
         while idx < batch.len() {
             let remaining = batch.len() - idx;
-            let exe_batch = self.runtime.best_batch_size(remaining);
+            let exe_batch = self.runtime.best_batch_size(remaining, self.config.quantized);
             let chunk: Vec<&GenerationRequest> =
                 batch[idx..(idx + exe_batch.min(remaining))].iter().collect();
             idx += chunk.len();
@@ -166,5 +257,43 @@ impl Coordinator {
     /// PJRT platform string.
     pub fn platform(&self) -> String {
         self.runtime.platform()
+    }
+}
+
+/// [`StepExecutor`] over the PJRT runtime: one fused cluster step maps
+/// onto the compiled fixed-batch executables, chunking and padding the
+/// resident rows exactly like the single-device router does.
+struct PjrtStepExecutor<'a> {
+    runtime: &'a mut Runtime,
+    quantized: bool,
+}
+
+impl StepExecutor for PjrtStepExecutor<'_> {
+    fn predict_noise(
+        &mut self,
+        _device: DeviceId,
+        x: &[f32],
+        t: &[f32],
+        elems: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let k = t.len();
+        anyhow::ensure!(x.len() == k * elems, "fused batch shape mismatch");
+        let mut out = Vec::with_capacity(k * elems);
+        let mut idx = 0;
+        while idx < k {
+            let remaining = k - idx;
+            let exe_batch = self.runtime.best_batch_size(remaining, self.quantized);
+            let take = exe_batch.min(remaining);
+            let mut xb = vec![0.0f32; exe_batch * elems];
+            xb[..take * elems].copy_from_slice(&x[idx * elems..(idx + take) * elems]);
+            // Padding rows replay the last real timestep over zero input.
+            let mut tb = vec![t[idx + take - 1]; exe_batch];
+            tb[..take].copy_from_slice(&t[idx..idx + take]);
+            let exe = self.runtime.denoise(exe_batch, self.quantized)?;
+            let eps = exe.predict_noise(&xb, &tb)?;
+            out.extend_from_slice(&eps[..take * elems]);
+            idx += take;
+        }
+        Ok(out)
     }
 }

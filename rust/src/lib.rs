@@ -32,6 +32,10 @@
 //!   (HLO text → compile → execute); Python never runs at serve time.
 //! * [`coordinator`] — the serving layer: request router, dynamic
 //!   batcher and denoise-step scheduler driving [`runtime`].
+//! * [`cluster`] — multi-accelerator sharded serving: a fleet of N
+//!   simulated DiffLight devices behind a step-level continuous-batching
+//!   scheduler, with round-robin / least-loaded / sampler-affinity shard
+//!   routing, admission control, and per-device + fleet metric roll-ups.
 //! * [`util`] — infrastructure hand-rolled for the offline build: CLI
 //!   parsing, deterministic PRNG, JSON writer, thread pool, and a small
 //!   property-testing harness.
@@ -41,6 +45,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod devices;
 pub mod dse;

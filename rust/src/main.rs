@@ -9,12 +9,18 @@
 //! * `dse [--threads N]` — design-space exploration (reports the top
 //!   configurations and the paper config's rank).
 //! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
-//!   [--fp32]` — serve synthetic generation requests through the AOT
-//!   UNet via PJRT and print latency/throughput metrics.
+//!   [--fp32] [--devices N]` — serve synthetic generation requests
+//!   through the AOT UNet via PJRT (sharded across an N-device fleet
+//!   when `--devices > 1`) and print latency/throughput metrics.
+//! * `cluster [--devices N] [--requests R] [--steps S] [--capacity C]
+//!   [--policy rr|ll|affinity] [--gap-us G]` — pure-simulation fleet
+//!   serving (no artifacts needed): continuous step-level batching over
+//!   N simulated DiffLight devices, with a fleet JSON report.
 //! * `devices` — print the Table II device parameter set in use.
 
 use difflight::arch::cost::OptFlags;
 use difflight::baselines::all_baselines;
+use difflight::cluster::{synthetic_workload, Cluster, ClusterConfig, ShardPolicy, SimExecutor};
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
 use difflight::devices::DeviceParams;
@@ -32,6 +38,7 @@ fn main() {
         "compare" => cmd_compare(),
         "dse" => cmd_dse(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "devices" => cmd_devices(),
         _ => {
             print_help(args.program());
@@ -43,11 +50,12 @@ fn main() {
 
 fn print_help(program: &str) {
     println!("DiffLight — silicon-photonics accelerator for diffusion models");
-    println!("usage: {program} <simulate|compare|dse|serve|devices> [options]");
+    println!("usage: {program} <simulate|compare|dse|serve|cluster|devices> [options]");
     println!("  simulate --model all --all-opts     simulator GOPS/EPB");
     println!("  compare                             Figure 9/10 comparison");
     println!("  dse --threads 8                     design-space exploration");
     println!("  serve --requests 8 --steps 25       serve via PJRT artifacts");
+    println!("  cluster --devices 4 --requests 32   simulated fleet serving");
     println!("  devices                             Table II constants");
 }
 
@@ -174,6 +182,8 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut config = EngineConfig::new(artifacts);
     config.quantized = !args.flag("fp32");
     config.policy.max_batch = args.get_parsed("batch", 4usize);
+    config.cluster.devices = args.get_parsed("devices", 1usize);
+    config.cluster.capacity = config.policy.max_batch;
     let mut coord = match Coordinator::open(config) {
         Ok(c) => c,
         Err(e) => {
@@ -188,7 +198,17 @@ fn cmd_serve(args: &Args) -> i32 {
     match coord.run_until_drained() {
         Ok(results) => {
             println!("served {} generations", results.len());
-            println!("{}", coord.metrics.to_json().to_string_pretty());
+            let mut report = coord.metrics.to_json();
+            if coord.fleet_metrics.is_some() {
+                // Fleet drains record per-request latencies on the
+                // simulated device clocks; wall_s stays host time.
+                report = report.set("latency_clock_domain", "simulated-device");
+            }
+            println!("{}", report.to_string_pretty());
+            if let Some(fleet) = &coord.fleet_metrics {
+                println!("fleet (simulated clocks):");
+                println!("{}", fleet.to_json().to_string_pretty());
+            }
             0
         }
         Err(e) => {
@@ -196,6 +216,74 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_cluster(args: &Args) -> i32 {
+    let config = ClusterConfig {
+        devices: args.get_parsed("devices", 4usize),
+        capacity: args.get_parsed("capacity", 4usize),
+        max_queue: args.get_parsed("max-queue", 64usize),
+        policy: ShardPolicy::parse(&args.get_or("policy", "least-loaded"))
+            .unwrap_or_else(|| {
+                eprintln!("unknown --policy (want rr|least-loaded|affinity); using least-loaded");
+                ShardPolicy::LeastLoaded
+            }),
+        ..ClusterConfig::default()
+    };
+    let requests = args.get_parsed("requests", 32usize);
+    let steps = args.get_parsed("steps", 25usize);
+    if steps > 1000 {
+        eprintln!("--steps {steps} exceeds the T=1000 schedule; generations run 1000 steps");
+    }
+    let gap_s = args.get_parsed("gap-us", 0.0f64) * 1e-6;
+    let seed = args.get_parsed("seed", 1u64);
+
+    let mut cluster = Cluster::simulated(config);
+    let workload = synthetic_workload(requests, seed, SamplerKind::Ddim { steps }, gap_s);
+    let outcome = match cluster.serve(workload, &mut SimExecutor) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("cluster serving failed: {e:#}");
+            return 1;
+        }
+    };
+
+    let m = &outcome.metrics;
+    println!(
+        "{} devices ({} policy): served {}/{} requests, {} rejected",
+        config.devices,
+        config.policy.name(),
+        outcome.results.len(),
+        requests,
+        outcome.rejected.len()
+    );
+    let mut table = Table::new(&["device", "steps", "samples", "busy", "util", "GOPS", "EPB"]);
+    for d in &m.devices {
+        table.row(&[
+            d.id.to_string(),
+            d.steps_executed.to_string(),
+            d.samples_completed.to_string(),
+            fmt_si(d.busy_s, "s"),
+            format!("{:.0}%", 100.0 * d.utilization(m.makespan_s)),
+            format!("{:.1}", d.gops()),
+            fmt_si(d.epb(m.bit_width), "J/bit"),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "fleet: {:.1} samples/s (simulated), p50 {} p99 {}, {:.1} GOPS, EPB {}",
+        m.throughput_samples_per_s(),
+        fmt_si(m.latency_p50_s(), "s"),
+        fmt_si(m.latency_p99_s(), "s"),
+        m.fleet_gops(),
+        fmt_si(m.fleet_epb(), "J/bit"),
+    );
+    if std::fs::create_dir_all("artifacts").is_ok()
+        && std::fs::write("artifacts/cluster_report.json", m.to_json().to_string_pretty()).is_ok()
+    {
+        println!("wrote artifacts/cluster_report.json");
+    }
+    0
 }
 
 fn cmd_devices() -> i32 {

@@ -61,10 +61,11 @@ impl Runtime {
         Ok(&self.executables[&(batch, quantized)])
     }
 
-    /// Largest compiled quantized batch ≤ `pending`, or the smallest
-    /// available when nothing fits (the router's batch-size selection).
-    pub fn best_batch_size(&self, pending: usize) -> usize {
-        let sizes = self.manifest.quantized_batches();
+    /// Largest compiled batch ≤ `pending` for the selected datapath, or
+    /// the smallest available when nothing fits (the router's batch-size
+    /// selection).
+    pub fn best_batch_size(&self, pending: usize, quantized: bool) -> usize {
+        let sizes = self.manifest.batches(quantized);
         sizes
             .iter()
             .copied()
@@ -140,7 +141,7 @@ mod tests {
 
     // Router batch-size selection is pure logic; test it without PJRT.
     fn best(manifest: &Manifest, pending: usize) -> usize {
-        let sizes = manifest.quantized_batches();
+        let sizes = manifest.batches(true);
         sizes
             .iter()
             .copied()

@@ -130,8 +130,17 @@ impl Manifest {
 
     /// Quantized artifact batch sizes, ascending.
     pub fn quantized_batches(&self) -> Vec<usize> {
-        let mut b: Vec<usize> =
-            self.artifacts.iter().filter(|a| a.quantized).map(|a| a.batch).collect();
+        self.batches(true)
+    }
+
+    /// Artifact batch sizes for one datapath (quantized or fp32), ascending.
+    pub fn batches(&self, quantized: bool) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.quantized == quantized)
+            .map(|a| a.batch)
+            .collect();
         b.sort_unstable();
         b.dedup();
         b

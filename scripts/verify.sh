@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and format-check the whole workspace.
+# Usage: scripts/verify.sh   (run from anywhere; cd's to the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+# fmt is advisory when rustfmt is not installed in the build image.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt unavailable; skipping format check"
+fi
+
+echo "verify: OK"

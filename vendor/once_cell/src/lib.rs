@@ -1,0 +1,41 @@
+//! Minimal offline stand-in for `once_cell`: only `sync::Lazy`, which is
+//! the single item this codebase uses, implemented over `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, like `once_cell::sync::Lazy`.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> std::ops::Deref for Lazy<T, F> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    #[test]
+    fn initializes_once() {
+        static N: Lazy<usize> = Lazy::new(|| 40 + 2);
+        assert_eq!(*N, 42);
+        assert_eq!(*N, 42);
+    }
+}

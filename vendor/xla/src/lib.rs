@@ -1,0 +1,283 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The build image does not ship libxla, so this crate reproduces the
+//! narrow API surface `difflight::runtime` uses — client, HLO loading,
+//! compile, execute, literals — with a **simulated interpreter** behind
+//! `execute`. Failure modes are preserved (missing HLO files and shape
+//! mismatches still error), and execution is a deterministic, smooth,
+//! timestep-sensitive function of the inputs so the serving stack above
+//! it (samplers, batcher, cluster scheduler) exercises end to end with
+//! reproducible, finite outputs. Swap this crate for the real bindings
+//! by pointing the workspace `xla` path at them; no source changes
+//! needed upstream.
+
+use std::fmt;
+
+/// Error type matching how the real bindings are consumed (`{e:?}`).
+pub struct XlaError(String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// A host literal: f32 buffer + shape, or a tuple of literals.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array { data: Vec<f32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal::Array { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want as usize != data.len() {
+                    return Err(XlaError(format!(
+                        "reshape: {} elems into {:?}",
+                        data.len(),
+                        dims
+                    )));
+                }
+                Ok(Literal::Array { data, dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => Err(XlaError("reshape on tuple".into())),
+        }
+    }
+
+    /// Unwrap a 1-tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        match self {
+            Literal::Tuple(mut items) if items.len() == 1 => Ok(items.remove(0)),
+            other => Err(XlaError(format!("not a 1-tuple: {other:?}"))),
+        }
+    }
+
+    /// Copy out as a flat vector. Only f32 is supported.
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => Ok(data.iter().map(|&v| T::from_f32(v)).collect()),
+            Literal::Tuple(_) => Err(XlaError("to_vec on tuple".into())),
+        }
+    }
+
+    fn dims(&self) -> &[i64] {
+        match self {
+            Literal::Array { dims, .. } => dims,
+            Literal::Tuple(_) => &[],
+        }
+    }
+
+    fn data(&self) -> &[f32] {
+        match self {
+            Literal::Array { data, .. } => data,
+            Literal::Tuple(_) => &[],
+        }
+    }
+}
+
+/// Element conversion for [`Literal::to_vec`].
+pub trait FromF32 {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Parsed HLO module (text retained for diagnostics only).
+pub struct HloModuleProto {
+    name: String,
+    #[allow(dead_code)]
+    text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. Errors when the file is missing or
+    /// empty — preserving the real bindings' failure mode for absent
+    /// artifacts.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("read {path}: {e}")))?;
+        if text.trim().is_empty() {
+            return Err(XlaError(format!("{path}: empty HLO module")));
+        }
+        let name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule "))
+            .unwrap_or("module")
+            .split_whitespace()
+            .next()
+            .unwrap_or("module")
+            .to_string();
+        Ok(HloModuleProto { name, text_len: text.len() })
+    }
+}
+
+/// An unoptimized computation ready to compile.
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { name: proto.name.clone() }
+    }
+}
+
+/// The PJRT client (simulated host backend).
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "sim-host" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: comp.name.clone() })
+    }
+}
+
+/// A compiled executable. `execute` runs the simulated denoise step.
+pub struct PjRtLoadedExecutable {
+    #[allow(dead_code)]
+    name: String,
+}
+
+/// Smooth per-sample ε̂ ≈ UNet(x, t): a tanh-squashed local mix of each
+/// element with its neighbours, modulated by the timestep embedding.
+/// Deterministic in (x, t); different t must yield different ε̂.
+fn pseudo_unet(x: &[f32], t: f32) -> Vec<f32> {
+    let n = x.len();
+    // Timestep "embedding": two smooth scalar channels.
+    let g = 0.85 + 0.15 * (t as f64 * 0.013).sin();
+    let b = 0.05 * (t as f64 * 0.031).cos();
+    let mut eps = Vec::with_capacity(n);
+    for i in 0..n {
+        let prev = x[if i == 0 { n - 1 } else { i - 1 }] as f64;
+        let next = x[if i + 1 == n { 0 } else { i + 1 }] as f64;
+        let mix = 0.8 * x[i] as f64 + 0.1 * prev + 0.1 * next;
+        eps.push(((mix * g).tanh() + b) as f32);
+    }
+    eps
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with (x: [b, h, w, c], t: [b]) → 1-tuple of ε̂ shaped like x.
+    pub fn execute<L: AsHostLiteral>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if args.len() != 2 {
+            return Err(XlaError(format!("expected 2 args, got {}", args.len())));
+        }
+        let x = args[0].as_literal();
+        let t = args[1].as_literal();
+        let xd = x.dims();
+        if xd.len() != 4 {
+            return Err(XlaError(format!("x must be rank 4, got {xd:?}")));
+        }
+        let batch = xd[0] as usize;
+        let elems = (xd[1] * xd[2] * xd[3]) as usize;
+        if t.data().len() != batch {
+            return Err(XlaError(format!(
+                "t has {} entries for batch {batch}",
+                t.data().len()
+            )));
+        }
+        let mut out = Vec::with_capacity(batch * elems);
+        for bi in 0..batch {
+            let row = &x.data()[bi * elems..(bi + 1) * elems];
+            out.extend(pseudo_unet(row, t.data()[bi]));
+        }
+        let eps = Literal::Array { data: out, dims: xd.to_vec() };
+        Ok(vec![vec![PjRtBuffer { literal: Literal::Tuple(vec![eps]) }]])
+    }
+}
+
+/// Device buffer handle (host-resident here).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Input coercion for [`PjRtLoadedExecutable::execute`].
+pub trait AsHostLiteral {
+    fn as_literal(&self) -> &Literal;
+}
+
+impl AsHostLiteral for Literal {
+    fn as_literal(&self) -> &Literal {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exe() -> PjRtLoadedExecutable {
+        PjRtLoadedExecutable { name: "m".into() }
+    }
+
+    fn run(x: &[f32], dims: &[i64], t: &[f32]) -> Result<Vec<f32>> {
+        let xl = Literal::vec1(x).reshape(dims)?;
+        let tl = Literal::vec1(t);
+        exe().execute::<Literal>(&[xl, tl])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?
+            .to_vec::<f32>()
+    }
+
+    #[test]
+    fn deterministic_and_t_sensitive() {
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = run(&x, &[1, 4, 4, 1], &[10.0]).unwrap();
+        let b = run(&x, &[1, 4, 4, 1], &[10.0]).unwrap();
+        assert_eq!(a, b);
+        let c = run(&x, &[1, 4, 4, 1], &[90.0]).unwrap();
+        assert!(a.iter().zip(&c).any(|(p, q)| (p - q).abs() > 1e-4));
+        assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.1));
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.11).cos()).collect();
+        let two = run(&x, &[2, 4, 4, 1], &[5.0, 5.0]).unwrap();
+        let one = run(&x[..16], &[1, 4, 4, 1], &[5.0]).unwrap();
+        assert_eq!(&two[..16], &one[..]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        assert!(Literal::vec1(&[0.0; 7]).reshape(&[2, 2, 2, 1]).is_err());
+        let xl = Literal::vec1(&[0.0; 8]).reshape(&[2, 2, 2, 1]).unwrap();
+        let tl = Literal::vec1(&[1.0]); // batch mismatch
+        assert!(exe().execute::<Literal>(&[xl, tl]).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/m.hlo.txt").is_err());
+    }
+}
