@@ -18,15 +18,17 @@ use difflight::util::json::Json;
 use difflight::util::table::fmt_si;
 
 const DEVICE_SWEEP: [usize; 4] = [1, 2, 4, 8];
+const REUSE_SWEEP: [usize; 4] = [1, 2, 3, 4];
 const REQUESTS: usize = 64;
 const STEPS: usize = 20;
 
-fn run_fleet(devices: usize) -> difflight::cluster::ClusterOutcome {
+fn run_fleet(devices: usize, reuse_interval: usize) -> difflight::cluster::ClusterOutcome {
     let mut cluster = Cluster::simulated(ClusterConfig {
         devices,
         capacity: 4,
         max_queue: 256,
         policy: ShardPolicy::LeastLoaded,
+        reuse_interval,
         ..ClusterConfig::default()
     });
     let workload = synthetic_workload(REQUESTS, 7, SamplerKind::Ddim { steps: STEPS }, 0.0);
@@ -45,7 +47,7 @@ fn main() {
         "devices", "samples/s (sim)", "p50", "p99", "speedup", "efficiency"
     );
     for &devices in &DEVICE_SWEEP {
-        let out = run_fleet(devices);
+        let out = run_fleet(devices, 1);
         let m = &out.metrics;
         assert_eq!(out.results.len(), REQUESTS, "no request may be dropped");
         let tput = m.throughput_samples_per_s();
@@ -70,11 +72,45 @@ fn main() {
         );
     }
 
+    harness::section(&format!(
+        "DeepCache step reuse at 4 devices: K in {REUSE_SWEEP:?} (--reuse-interval)"
+    ));
+    let mut reuse_sweep = Vec::new();
+    let mut base_reuse_tput = 0.0;
+    println!(
+        "{:>4} {:>16} {:>12} {:>12} {:>10}",
+        "K", "samples/s (sim)", "p50", "hit rate", "speedup"
+    );
+    for &k in &REUSE_SWEEP {
+        let out = run_fleet(4, k);
+        let m = &out.metrics;
+        assert_eq!(out.results.len(), REQUESTS, "no request may be dropped");
+        let tput = m.throughput_samples_per_s();
+        if k == 1 {
+            base_reuse_tput = tput;
+        }
+        println!(
+            "{:>4} {:>16.2} {:>12} {:>11.0}% {:>9.2}x",
+            k,
+            tput,
+            fmt_si(m.latency_p50_s(), "s"),
+            100.0 * m.reuse_hit_rate(),
+            tput / base_reuse_tput,
+        );
+        reuse_sweep.push(
+            Json::obj()
+                .set("reuse_interval", k)
+                .set("speedup_vs_k1", tput / base_reuse_tput)
+                .set("report", m.to_json()),
+        );
+    }
+
     let report = Json::obj()
         .set("bench", "cluster_scale")
         .set("requests", REQUESTS)
         .set("steps", STEPS)
-        .set("sweep", Json::Arr(sweep));
+        .set("sweep", Json::Arr(sweep))
+        .set("reuse_sweep", Json::Arr(reuse_sweep));
     if std::fs::create_dir_all("artifacts").is_ok() {
         let path = "artifacts/cluster_scale.json";
         std::fs::write(path, report.to_string_pretty()).expect("write sweep report");
@@ -83,6 +119,6 @@ fn main() {
 
     harness::section("timing (host-side scheduler cost)");
     harness::bench("fleet(4).serve(64 reqs x 20 steps)", 10, || {
-        harness::black_box(run_fleet(4));
+        harness::black_box(run_fleet(4, 1));
     });
 }

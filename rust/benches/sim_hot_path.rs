@@ -1,0 +1,228 @@
+//! Perf-trajectory harness for the memoized cost pipeline (ISSUE 2).
+//!
+//! Times the two hot paths the `sim::cache` layer accelerates, each
+//! before/after, and records the results in `BENCH_sim.json` at the
+//! workspace root so the repo's perf trajectory is tracked in-tree:
+//!
+//! 1. **DSE sweep** — the full paper design-space exploration on the
+//!    uncached reference path (`dse::explore_uncached`: trace rebuilt
+//!    and every layer re-priced per candidate) vs the memoized path
+//!    (`dse::explore`: interned traces + structural-signature cost
+//!    memo). Asserts the two sweeps are **bit-identical** and that the
+//!    memoized path is ≥5x faster.
+//! 2. **Cluster drain** — a 10k-request fleet drain without step reuse
+//!    vs with DeepCache `--reuse-interval 3`. Asserts samples are
+//!    bit-identical and the simulated fleet throughput is ≥1.5x.
+//!
+//! `--smoke` runs a 1-iteration miniature of everything (tiny design
+//! space, 200 requests) so `scripts/verify.sh` can keep the harness
+//! from bit-rotting without paying full bench time. Ratio assertions
+//! still run in smoke mode.
+//!
+//! ## `BENCH_sim.json` schema
+//!
+//! ```json
+//! {
+//!   "bench": "sim_hot_path", "mode": "full|smoke", "threads": N,
+//!   "dse": { "candidates": N, "iters": N,
+//!            "uncached_s": mean, "cached_s": mean,
+//!            "speedup": uncached/cached, "bit_identical": true,
+//!            "cache": {"hits": N, "misses": N,
+//!                       "layer_entries": N, "step_entries": N} },
+//!   "cluster": { "requests": N, "steps": N, "devices": N,
+//!     "no_reuse":  {"throughput_samples_per_s": x, "makespan_s": x,
+//!                   "host_drain_s": x, "reuse_hits": 0},
+//!     "reuse_k3":  {"throughput_samples_per_s": x, "makespan_s": x,
+//!                   "host_drain_s": x, "reuse_hits": N,
+//!                   "reuse_misses": N, "reuse_hit_rate": x},
+//!     "throughput_ratio": t_k3 / t_k1 }
+//! }
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use difflight::cluster::{
+    synthetic_workload, Cluster, ClusterConfig, ClusterOutcome, ShardPolicy, SimExecutor,
+};
+use difflight::coordinator::request::SamplerKind;
+use difflight::devices::DeviceParams;
+use difflight::dse::{explore, explore_uncached, explore_with, DesignSpace};
+use difflight::sim::CostCache;
+use difflight::util::json::Json;
+
+fn smoke_space() -> DesignSpace {
+    DesignSpace {
+        y: vec![2, 4],
+        n: vec![8, 12],
+        k: vec![3],
+        h: vec![4, 6],
+        l: vec![6],
+        m: vec![3],
+        wavelengths: 36,
+        max_total_mrs: usize::MAX,
+    }
+}
+
+fn drain(devices: usize, requests: usize, steps: usize, reuse_interval: usize) -> (ClusterOutcome, f64) {
+    let mut cluster = Cluster::simulated(ClusterConfig {
+        devices,
+        capacity: 4,
+        max_queue: 64,
+        // Offline drain: defer overload instead of shedding it.
+        max_backlog: usize::MAX,
+        policy: ShardPolicy::LeastLoaded,
+        reuse_interval,
+        ..ClusterConfig::default()
+    });
+    let workload = synthetic_workload(requests, 11, SamplerKind::Ddim { steps }, 0.0);
+    let t0 = Instant::now();
+    let out = cluster.serve(workload, &mut SimExecutor).expect("fleet drain");
+    let host_s = t0.elapsed().as_secs_f64();
+    assert_eq!(out.results.len(), requests, "offline drain must serve everything");
+    (out, host_s)
+}
+
+fn cluster_json(out: &ClusterOutcome, host_s: f64) -> Json {
+    let m = &out.metrics;
+    Json::obj()
+        .set("throughput_samples_per_s", m.throughput_samples_per_s())
+        .set("makespan_s", m.makespan_s)
+        .set("host_drain_s", host_s)
+        .set("reuse_hits", m.reuse_hits())
+        .set("reuse_misses", m.reuse_misses())
+        .set("reuse_hit_rate", m.reuse_hit_rate())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mode = if smoke { "smoke" } else { "full" };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let params = DeviceParams::paper();
+    let space = if smoke { smoke_space() } else { DesignSpace::paper() };
+    let candidates = space.candidates().len();
+    let iters = if smoke { 1 } else { 3 };
+
+    // ---- (a) DSE sweep: uncached reference vs memoized pipeline ----
+    harness::section(&format!(
+        "DSE sweep ({mode}): {candidates} candidates x 4 workloads, {threads} threads"
+    ));
+    // The timed closures keep their last result so the bit-identity
+    // gate below doesn't pay for an extra (slow) uncached sweep.
+    let mut ref_points = None;
+    let mut memo_points = None;
+    let uncached = harness::bench("explore uncached (reference)", iters, || {
+        ref_points = Some(harness::black_box(explore_uncached(&space, &params, threads)));
+    });
+    let cached = harness::bench("explore memoized (sim::cache)", iters, || {
+        memo_points = Some(harness::black_box(explore(&space, &params, threads)));
+    });
+    let speedup = uncached.mean_s / cached.mean_s;
+    println!("DSE speedup (memoized vs uncached): {speedup:.1}x");
+
+    // Correctness gate: the memoized sweep must be bit-identical.
+    assert_eq!(
+        ref_points.expect("bench ran"),
+        memo_points.expect("bench ran"),
+        "memoized sweep must be bit-identical"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 5.0,
+            "memoized DSE sweep must be >= 5x faster (got {speedup:.1}x)"
+        );
+    }
+
+    // Cache shape after one sweep (fresh cache, so numbers are per-sweep).
+    let cache = Arc::new(CostCache::new(params.clone()));
+    harness::black_box(explore_with(&space, &params, threads, &cache));
+    let cs = cache.stats();
+    println!(
+        "cache after one sweep: {} hits / {} misses ({:.1}% hit rate), {} layer + {} step entries",
+        cs.hits,
+        cs.misses,
+        100.0 * cs.hit_rate(),
+        cs.layer_entries,
+        cs.step_entries,
+    );
+
+    // ---- (b) cluster drain: no reuse vs DeepCache K=3 ----
+    let (requests, steps, devices) = if smoke { (200, 10, 4) } else { (10_000, 10, 4) };
+    harness::section(&format!(
+        "cluster drain ({mode}): {requests} requests x {steps} DDIM steps, {devices} devices"
+    ));
+    let (k1, k1_host) = drain(devices, requests, steps, 1);
+    let (k3, k3_host) = drain(devices, requests, steps, 3);
+    // Step reuse is a cost-model knob: generated samples must not move.
+    // (Index by id — completion order may differ between reuse settings.)
+    let mut k1_samples: Vec<Option<&Vec<f32>>> = vec![None; requests];
+    for r in &k1.results {
+        k1_samples[r.id.0 as usize] = Some(&r.sample);
+    }
+    for r in &k3.results {
+        let a = k1_samples[r.id.0 as usize].expect("id served in both runs");
+        assert_eq!(a, &r.sample, "reuse must not change samples");
+    }
+    let t1 = k1.metrics.throughput_samples_per_s();
+    let t3 = k3.metrics.throughput_samples_per_s();
+    let ratio = t3 / t1;
+    println!(
+        "no reuse:  {:.1} samples/s (sim), makespan {:.3}s, host {:.2}s",
+        t1, k1.metrics.makespan_s, k1_host
+    );
+    println!(
+        "reuse K=3: {:.1} samples/s (sim), makespan {:.3}s, host {:.2}s, hit rate {:.0}%",
+        t3,
+        k3.metrics.makespan_s,
+        k3_host,
+        100.0 * k3.metrics.reuse_hit_rate()
+    );
+    println!("simulated fleet throughput ratio: {ratio:.2}x");
+    assert!(
+        ratio >= 1.5,
+        "reuse K=3 must lift simulated fleet throughput >= 1.5x (got {ratio:.2}x)"
+    );
+
+    // ---- record the trajectory ----
+    let report = Json::obj()
+        .set("bench", "sim_hot_path")
+        .set("mode", mode)
+        .set("threads", threads)
+        .set(
+            "dse",
+            Json::obj()
+                .set("candidates", candidates)
+                .set("iters", iters)
+                .set("uncached_s", uncached.mean_s)
+                .set("cached_s", cached.mean_s)
+                .set("speedup", speedup)
+                .set("bit_identical", true)
+                .set(
+                    "cache",
+                    Json::obj()
+                        .set("hits", cs.hits)
+                        .set("misses", cs.misses)
+                        .set("layer_entries", cs.layer_entries)
+                        .set("step_entries", cs.step_entries),
+                ),
+        )
+        .set(
+            "cluster",
+            Json::obj()
+                .set("requests", requests)
+                .set("steps", steps)
+                .set("devices", devices)
+                .set("no_reuse", cluster_json(&k1, k1_host))
+                .set("reuse_k3", cluster_json(&k3, k3_host))
+                .set("throughput_ratio", ratio),
+        );
+    let path = "BENCH_sim.json";
+    std::fs::write(path, report.to_string_pretty()).expect("write bench report");
+    println!("\nwrote {path}");
+}

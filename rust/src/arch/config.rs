@@ -11,7 +11,7 @@ use crate::devices::DeviceParams;
 /// * `l` — columns per attention MR bank array (`M × L`).
 /// * `m` — rows per attention MR bank array.
 /// * `wavelengths` — WDM channels per waveguide (≤ 36 by design rule).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ArchConfig {
     pub y: usize,
     pub n: usize,

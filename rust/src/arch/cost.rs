@@ -11,7 +11,9 @@
 //! DAC sharing. Figure 8 is a sweep over these flags.
 
 /// Dataflow/scheduling optimization toggles (paper §IV.C, Figure 8).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// `Hash` because the flags are part of the cost-memo key in
+/// [`crate::sim::cache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub struct OptFlags {
     /// Sparsity-aware transposed-convolution dataflow ("S/W Optimized").
     pub sparse: bool,

@@ -8,12 +8,58 @@
 //! weight-stationary, so extra activations stream through the same MR
 //! banks and only pay the electro-optic conversion again), while energy
 //! and useful ops scale linearly with `k`.
+//!
+//! ## DeepCache-style step reuse
+//!
+//! With a [`ReuseSchedule`] of interval `K > 1`, the device runs the
+//! **full** UNet only on every `K`-th fused step; in between it runs a
+//! **shallow** step (the cache-hit path: only the outermost UNet stages
+//! recompute against the cached deep features), priced at
+//! `shallow_frac` of the full step's latency/energy/ops. The device
+//! tracks its position in the reuse cycle so every resident sample sees
+//! the same full/shallow cadence (step alignment is the scheduler's
+//! job — it phase-aligns requests to the device cycle at admission and
+//! escalates to a full step whenever a fresh sample, whose feature cache
+//! is empty, takes its first step).
+//!
+//! `interval = 1` is exactly the pre-reuse device: every step full,
+//! zero hits, identical timings.
 
 use crate::arch::cost::Cost;
 
 /// Identifier of a device within a cluster (dense, 0-based).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct DeviceId(pub usize);
+
+/// DeepCache-style step-reuse schedule: full UNet every `interval`
+/// steps, shallow (cache-hit) steps in between.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReuseSchedule {
+    /// Full UNet every `interval` fused steps; `1` disables reuse.
+    pub interval: usize,
+    /// Cost of a shallow step as a fraction of the full step (latency,
+    /// energy and ops all scale; in `(0, 1]`).
+    pub shallow_frac: f64,
+}
+
+impl ReuseSchedule {
+    /// No reuse: every step runs the full UNet.
+    pub const NONE: ReuseSchedule = ReuseSchedule { interval: 1, shallow_frac: 1.0 };
+
+    pub fn every(interval: usize, shallow_frac: f64) -> Self {
+        Self { interval, shallow_frac }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval > 1
+    }
+}
+
+impl Default for ReuseSchedule {
+    fn default() -> Self {
+        Self::NONE
+    }
+}
 
 /// One simulated accelerator in the fleet.
 #[derive(Debug, Clone)]
@@ -24,44 +70,92 @@ pub struct Device {
     /// Max samples waiting behind the resident set before the router
     /// must shed load to another device (or reject).
     pub max_queue: usize,
-    /// Cost of one denoise step for a single sample (from the simulator).
+    /// Cost of one full denoise step for a single sample (from the
+    /// simulator).
     step_base: Cost,
+    /// Cost of one shallow (cache-hit) step for a single sample.
+    step_shallow: Cost,
+    /// The step-reuse cadence this device runs.
+    reuse: ReuseSchedule,
     /// Marginal latency per extra resident sample, as a fraction of the
     /// single-sample step latency.
     batch_marginal: f64,
     /// Simulated time at which the in-flight step (if any) completes.
     busy_until_s: Option<f64>,
+    /// Position within the reuse cycle; `0` ⇒ the next fused step runs
+    /// the full UNet.
+    cycle_pos: usize,
     // --- accounting ---
     pub steps_executed: u64,
     pub samples_completed: u64,
     pub busy_s: f64,
     pub energy_j: f64,
     pub ops: u64,
+    /// Fused step events executed (full + shallow).
+    pub fused_steps: u64,
+    /// Sample-steps that ran the shallow cache-hit path.
+    pub reuse_hits: u64,
+    /// Sample-steps that ran the full UNet.
+    pub reuse_misses: u64,
 }
 
 impl Device {
-    pub fn new(id: usize, step_base: Cost, capacity: usize, max_queue: usize, batch_marginal: f64) -> Self {
+    pub fn new(
+        id: usize,
+        step_base: Cost,
+        capacity: usize,
+        max_queue: usize,
+        batch_marginal: f64,
+        reuse: ReuseSchedule,
+    ) -> Self {
         assert!(capacity >= 1, "device needs at least one batch slot");
         assert!(step_base.latency_s > 0.0, "step cost must have positive latency");
+        assert!(reuse.interval >= 1, "reuse interval must be >= 1");
+        assert!(
+            reuse.shallow_frac > 0.0 && reuse.shallow_frac <= 1.0,
+            "shallow step fraction must be in (0, 1]"
+        );
+        let f = reuse.shallow_frac;
+        let step_shallow = Cost {
+            latency_s: step_base.latency_s * f,
+            energy_j: step_base.energy_j * f,
+            ops: (step_base.ops as f64 * f).round() as u64,
+            passes: (step_base.passes as f64 * f).round() as u64,
+        };
         Self {
             id: DeviceId(id),
             capacity,
             max_queue,
             step_base,
+            step_shallow,
+            reuse,
             batch_marginal,
             busy_until_s: None,
+            cycle_pos: 0,
             steps_executed: 0,
             samples_completed: 0,
             busy_s: 0.0,
             energy_j: 0.0,
             ops: 0,
+            fused_steps: 0,
+            reuse_hits: 0,
+            reuse_misses: 0,
         }
     }
 
+    /// Will the next fused step run the full UNet? `force_full` is set by
+    /// the scheduler when any resident sample is on its first denoise
+    /// step (its feature cache is empty, so the full network must run —
+    /// this also restarts the cycle, keeping all residents step-aligned).
+    pub fn next_step_full(&self, force_full: bool) -> bool {
+        !self.reuse.enabled() || force_full || self.cycle_pos == 0
+    }
+
     /// Latency of one fused step over `k` resident samples.
-    pub fn step_latency_s(&self, k: usize) -> f64 {
+    pub fn step_latency_s(&self, k: usize, full: bool) -> f64 {
         assert!(k >= 1);
-        self.step_base.latency_s * (1.0 + self.batch_marginal * (k - 1) as f64)
+        let base = if full { &self.step_base } else { &self.step_shallow };
+        base.latency_s * (1.0 + self.batch_marginal * (k - 1) as f64)
     }
 
     /// Simulated completion time of the in-flight step, if stepping.
@@ -74,16 +168,28 @@ impl Device {
     }
 
     /// Begin one fused step over `k` samples at simulated time `now_s`;
-    /// returns the completion time. Accounts busy time, energy and ops.
-    pub fn begin_step(&mut self, now_s: f64, k: usize) -> f64 {
+    /// returns the completion time. Accounts busy time, energy, ops and
+    /// the reuse hit/miss counters, and advances the reuse cycle.
+    pub fn begin_step(&mut self, now_s: f64, k: usize, full: bool) -> f64 {
         assert!(self.busy_until_s.is_none(), "device {} already stepping", self.id.0);
         assert!(k >= 1 && k <= self.capacity, "step batch {k} outside 1..={}", self.capacity);
-        let lat = self.step_latency_s(k);
+        let base = if full { self.step_base } else { self.step_shallow };
+        let lat = self.step_latency_s(k, full);
         self.busy_until_s = Some(now_s + lat);
         self.busy_s += lat;
-        self.energy_j += self.step_base.energy_j * k as f64;
-        self.ops += self.step_base.ops * k as u64;
+        self.energy_j += base.energy_j * k as f64;
+        self.ops += base.ops * k as u64;
         self.steps_executed += k as u64;
+        self.fused_steps += 1;
+        if full {
+            self.reuse_misses += k as u64;
+            // A full step restarts the cycle: position 1 of `interval`
+            // (with interval 1 this wraps straight back to "full next").
+            self.cycle_pos = 1 % self.reuse.interval;
+        } else {
+            self.reuse_hits += k as u64;
+            self.cycle_pos = (self.cycle_pos + 1) % self.reuse.interval;
+        }
         now_s + lat
     }
 
@@ -96,7 +202,8 @@ impl Device {
 
     /// Zero the accounting counters (one serving run = one accounting
     /// window; without this, back-to-back `serve` calls would blend
-    /// runs and report >100% utilization).
+    /// runs and report >100% utilization). Also rewinds the reuse cycle
+    /// so every window starts on a full step, deterministically.
     pub fn reset_accounting(&mut self) {
         assert!(self.busy_until_s.is_none(), "reset mid-step on device {}", self.id.0);
         self.steps_executed = 0;
@@ -104,6 +211,10 @@ impl Device {
         self.busy_s = 0.0;
         self.energy_j = 0.0;
         self.ops = 0;
+        self.fused_steps = 0;
+        self.reuse_hits = 0;
+        self.reuse_misses = 0;
+        self.cycle_pos = 0;
     }
 
 }
@@ -113,14 +224,25 @@ mod tests {
     use super::*;
 
     fn dev() -> Device {
-        Device::new(0, Cost::new(1e-3, 2e-3, 1_000_000, 10), 4, 8, 0.25)
+        Device::new(0, Cost::new(1e-3, 2e-3, 1_000_000, 10), 4, 8, 0.25, ReuseSchedule::NONE)
+    }
+
+    fn reuse_dev(interval: usize, frac: f64) -> Device {
+        Device::new(
+            0,
+            Cost::new(1e-3, 2e-3, 1_000_000, 10),
+            4,
+            8,
+            0.25,
+            ReuseSchedule::every(interval, frac),
+        )
     }
 
     #[test]
     fn batch_latency_is_sublinear() {
         let d = dev();
-        let l1 = d.step_latency_s(1);
-        let l4 = d.step_latency_s(4);
+        let l1 = d.step_latency_s(1, true);
+        let l4 = d.step_latency_s(4, true);
         assert!((l1 - 1e-3).abs() < 1e-12);
         assert!(l4 < 4.0 * l1, "fused batch must beat serial");
         assert!(l4 > l1, "more samples still cost more");
@@ -130,8 +252,8 @@ mod tests {
     fn begin_finish_accounting() {
         let mut d = dev();
         assert!(d.is_idle());
-        let done = d.begin_step(10.0, 4);
-        assert!((done - 10.0 - d.step_latency_s(4)).abs() < 1e-12);
+        let done = d.begin_step(10.0, 4, true);
+        assert!((done - 10.0 - d.step_latency_s(4, true)).abs() < 1e-12);
         assert_eq!(d.busy_until(), Some(done));
         assert_eq!(d.steps_executed, 4);
         assert!((d.energy_j - 8e-3).abs() < 1e-12);
@@ -143,7 +265,7 @@ mod tests {
     #[test]
     fn gops_rolls_up_through_snapshot() {
         let mut d = dev();
-        d.begin_step(0.0, 2);
+        d.begin_step(0.0, 2, true);
         d.finish_step();
         // 2 Mops in 1.25 ms → 1.6 GOPS.
         let m = crate::cluster::metrics::DeviceMetrics::snapshot(&d);
@@ -151,9 +273,72 @@ mod tests {
     }
 
     #[test]
-    fn reset_accounting_zeroes_counters() {
+    fn no_reuse_schedule_is_always_full() {
         let mut d = dev();
-        d.begin_step(0.0, 3);
+        for _ in 0..5 {
+            assert!(d.next_step_full(false));
+            d.begin_step(0.0, 1, true);
+            d.finish_step();
+        }
+        assert_eq!(d.reuse_hits, 0);
+        assert_eq!(d.reuse_misses, 5);
+    }
+
+    #[test]
+    fn reuse_cycle_runs_full_every_k_steps() {
+        let mut d = reuse_dev(3, 0.25);
+        let mut pattern = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..7 {
+            let full = d.next_step_full(false);
+            pattern.push(full);
+            now = d.begin_step(now, 1, full);
+            d.finish_step();
+        }
+        assert_eq!(pattern, [true, false, false, true, false, false, true]);
+        assert_eq!(d.reuse_misses, 3);
+        assert_eq!(d.reuse_hits, 4);
+        assert_eq!(d.fused_steps, 7);
+    }
+
+    #[test]
+    fn forced_full_restarts_cycle() {
+        let mut d = reuse_dev(3, 0.25);
+        d.begin_step(0.0, 1, d.next_step_full(false)); // full (cycle 0)
+        d.finish_step();
+        assert!(!d.next_step_full(false));
+        // A new arrival forces a full step mid-cycle...
+        assert!(d.next_step_full(true));
+        d.begin_step(1.0, 1, true);
+        d.finish_step();
+        // ...and the cycle restarts: two shallow steps follow.
+        assert!(!d.next_step_full(false));
+        d.begin_step(2.0, 1, false);
+        d.finish_step();
+        assert!(!d.next_step_full(false));
+        d.begin_step(3.0, 1, false);
+        d.finish_step();
+        assert!(d.next_step_full(false));
+    }
+
+    #[test]
+    fn shallow_steps_cost_a_fraction() {
+        let mut d = reuse_dev(2, 0.25);
+        assert!((d.step_latency_s(1, false) - 0.25e-3).abs() < 1e-15);
+        d.begin_step(0.0, 2, false);
+        d.finish_step();
+        // 2 samples × 0.25 × 2e-3 J.
+        assert!((d.energy_j - 1e-3).abs() < 1e-15);
+        assert_eq!(d.ops, 500_000);
+        assert_eq!(d.reuse_hits, 2);
+    }
+
+    #[test]
+    fn reset_accounting_zeroes_counters() {
+        let mut d = reuse_dev(2, 0.5);
+        d.begin_step(0.0, 3, true);
+        d.finish_step();
+        d.begin_step(1.0, 3, false);
         d.finish_step();
         d.samples_completed = 3;
         d.reset_accounting();
@@ -162,13 +347,18 @@ mod tests {
         assert_eq!(d.ops, 0);
         assert_eq!(d.busy_s, 0.0);
         assert_eq!(d.energy_j, 0.0);
+        assert_eq!(d.fused_steps, 0);
+        assert_eq!(d.reuse_hits, 0);
+        assert_eq!(d.reuse_misses, 0);
+        // Cycle rewound: next step is full again.
+        assert!(d.next_step_full(false));
     }
 
     #[test]
     #[should_panic(expected = "already stepping")]
     fn double_begin_panics() {
         let mut d = dev();
-        d.begin_step(0.0, 1);
-        d.begin_step(0.1, 1);
+        d.begin_step(0.0, 1, true);
+        d.begin_step(0.1, 1, true);
     }
 }

@@ -18,6 +18,12 @@ pub struct DeviceMetrics {
     pub busy_s: f64,
     pub energy_j: f64,
     pub ops: u64,
+    /// Fused step events (full + shallow).
+    pub fused_steps: u64,
+    /// Sample-steps served by the DeepCache shallow path.
+    pub reuse_hits: u64,
+    /// Sample-steps that ran the full UNet.
+    pub reuse_misses: u64,
 }
 
 impl DeviceMetrics {
@@ -29,6 +35,9 @@ impl DeviceMetrics {
             busy_s: d.busy_s,
             energy_j: d.energy_j,
             ops: d.ops,
+            fused_steps: d.fused_steps,
+            reuse_hits: d.reuse_hits,
+            reuse_misses: d.reuse_misses,
         }
     }
 
@@ -69,6 +78,9 @@ impl DeviceMetrics {
             .set("energy_j", self.energy_j)
             .set("gops", self.gops())
             .set("epb_j_per_bit", self.epb(bit_width))
+            .set("fused_steps", self.fused_steps)
+            .set("reuse_hits", self.reuse_hits)
+            .set("reuse_misses", self.reuse_misses)
     }
 }
 
@@ -127,6 +139,26 @@ impl FleetMetrics {
         }
     }
 
+    /// Total DeepCache shallow-path sample-steps across the fleet.
+    pub fn reuse_hits(&self) -> u64 {
+        self.devices.iter().map(|d| d.reuse_hits).sum()
+    }
+
+    /// Total full-UNet sample-steps across the fleet.
+    pub fn reuse_misses(&self) -> u64 {
+        self.devices.iter().map(|d| d.reuse_misses).sum()
+    }
+
+    /// Fraction of sample-steps served by the shallow cache-hit path.
+    pub fn reuse_hit_rate(&self) -> f64 {
+        let total = self.reuse_hits() + self.reuse_misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.reuse_hits() as f64 / total as f64
+        }
+    }
+
     /// Fleet GOPS over the makespan (aggregate, not per-busy-second).
     pub fn fleet_gops(&self) -> f64 {
         if self.makespan_s == 0.0 {
@@ -150,6 +182,9 @@ impl FleetMetrics {
             .set("queue_mean_s", stats::mean(&self.queue_s))
             .set("fleet_gops", self.fleet_gops())
             .set("fleet_epb_j_per_bit", self.fleet_epb())
+            .set("reuse_hits", self.reuse_hits())
+            .set("reuse_misses", self.reuse_misses())
+            .set("reuse_hit_rate", self.reuse_hit_rate())
             .set(
                 "per_device",
                 Json::Arr(
@@ -174,6 +209,9 @@ mod tests {
             busy_s: busy,
             energy_j: energy,
             ops,
+            fused_steps: 10,
+            reuse_hits: 6,
+            reuse_misses: 4,
         }
     }
 
@@ -214,8 +252,21 @@ mod tests {
         assert_eq!(j.get("devices").and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.get("per_device").and_then(Json::as_arr).map(|a| a.len()), Some(2));
         assert!(j.get("latency_p99_s").is_some());
+        // DeepCache hit/miss counts ride along in the fleet export.
+        assert_eq!(j.get("reuse_hits").and_then(Json::as_f64), Some(12.0));
+        assert_eq!(j.get("reuse_misses").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(j.get("reuse_hit_rate").and_then(Json::as_f64), Some(0.6));
         // Round-trips through the writer/parser.
         assert!(Json::parse(&j.to_string_pretty()).is_ok());
+    }
+
+    #[test]
+    fn reuse_roll_ups() {
+        let m = fleet();
+        assert_eq!(m.reuse_hits(), 12);
+        assert_eq!(m.reuse_misses(), 8);
+        assert!((m.reuse_hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(FleetMetrics::default().reuse_hit_rate(), 0.0);
     }
 
     #[test]

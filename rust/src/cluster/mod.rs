@@ -22,7 +22,7 @@ pub mod metrics;
 pub mod router;
 pub mod scheduler;
 
-pub use device::{Device, DeviceId};
+pub use device::{Device, DeviceId, ReuseSchedule};
 pub use metrics::{DeviceMetrics, FleetMetrics};
 pub use router::{DeviceLoad, Router, ShardPolicy};
 pub use scheduler::{
@@ -34,7 +34,7 @@ use crate::coordinator::request::SamplerKind;
 use crate::runtime::manifest::NoiseSchedule;
 use crate::sim::Simulator;
 use crate::util::rng::XorShift;
-use crate::workload::{ModelId, ModelSpec};
+use crate::workload::ModelId;
 
 /// Fleet shape and policy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,6 +57,16 @@ pub struct ClusterConfig {
     /// Marginal latency of each extra resident sample in a fused step,
     /// as a fraction of the single-sample step latency.
     pub batch_marginal: f64,
+    /// DeepCache step reuse: run the full UNet every `reuse_interval`
+    /// fused steps and the shallow cache-hit path in between. `1` (the
+    /// default) disables reuse and reproduces the pre-reuse schedule
+    /// exactly.
+    pub reuse_interval: usize,
+    /// Cost of a shallow cache-hit step relative to a full step.
+    pub reuse_shallow_frac: f64,
+    /// Let idle, empty devices steal queued requests from the
+    /// most-loaded busy device at step boundaries.
+    pub work_stealing: bool,
 }
 
 impl Default for ClusterConfig {
@@ -70,6 +80,9 @@ impl Default for ClusterConfig {
             model: ModelId::DdpmCifar10,
             opts: OptFlags::ALL,
             batch_marginal: 0.25,
+            reuse_interval: 1,
+            reuse_shallow_frac: 0.25,
+            work_stealing: true,
         }
     }
 }
@@ -77,6 +90,12 @@ impl Default for ClusterConfig {
 impl ClusterConfig {
     pub fn with_devices(devices: usize) -> Self {
         Self { devices, ..Self::default() }
+    }
+
+    /// Enable DeepCache step reuse at interval `k` (1 = off).
+    pub fn with_reuse(mut self, k: usize) -> Self {
+        self.reuse_interval = k.max(1);
+        self
     }
 }
 
@@ -89,11 +108,12 @@ pub struct Cluster {
 
 impl Cluster {
     /// Build a fleet, pricing the per-step device cost from the
-    /// transaction-level simulator for `config.model` under `config.opts`.
+    /// transaction-level simulator for `config.model` under `config.opts`
+    /// (through the shared cost cache and the interned trace store, so
+    /// repeated fleet constructions never re-price or rebuild the trace).
     pub fn new(config: ClusterConfig, schedule: NoiseSchedule, elems: usize) -> Self {
-        let sim = Simulator::paper_optimal();
-        let trace = ModelSpec::get(config.model).trace();
-        let step_cost = sim.step_cost(&trace, config.opts);
+        let sim = Simulator::paper_cached();
+        let step_cost = sim.model_step_cost(config.model, config.opts);
         let bit_width = sim.params.bit_width;
         Self {
             scheduler: StepScheduler::new(&config, step_cost, schedule, elems, bit_width),

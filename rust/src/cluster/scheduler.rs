@@ -24,7 +24,7 @@ use crate::runtime::manifest::NoiseSchedule;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
-use super::device::{Device, DeviceId};
+use super::device::{Device, DeviceId, ReuseSchedule};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::router::{DeviceLoad, Router};
 use super::ClusterConfig;
@@ -58,6 +58,9 @@ pub struct ClusterResult {
     pub finish_s: f64,
     /// Mean fused-batch size this sample actually ran at.
     pub mean_batch: f64,
+    /// Denoise steps that ran the full UNet (the rest were DeepCache
+    /// shallow cache-hit steps; equals `steps` when reuse is off).
+    pub full_steps: usize,
 }
 
 impl ClusterResult {
@@ -126,6 +129,8 @@ struct Slot {
     /// Sum of fused-batch sizes over this sample's executed steps
     /// (actual occupancy, for reporting).
     occupancy_sum: u64,
+    /// Steps that ran the full UNet (vs DeepCache shallow steps).
+    full_steps: u64,
 }
 
 /// The compute behind one fused denoise step. The cluster separates
@@ -196,6 +201,9 @@ pub struct StepScheduler {
     /// One shared sampler per signature seen, so admission clones an
     /// `Arc` instead of deep-copying the T-length schedule tables.
     sampler_cache: Vec<(SamplerKind, SlotSampler)>,
+    /// Work stealing: an idle, empty device pulls queued requests from
+    /// the most-loaded busy device at step boundaries.
+    work_stealing: bool,
 }
 
 impl StepScheduler {
@@ -209,9 +217,20 @@ impl StepScheduler {
         bit_width: u32,
     ) -> Self {
         assert!(config.devices >= 1, "cluster needs at least one device");
+        let reuse = ReuseSchedule::every(
+            config.reuse_interval.max(1),
+            config.reuse_shallow_frac,
+        );
         let devices: Vec<Device> = (0..config.devices)
             .map(|i| {
-                Device::new(i, step_cost, config.capacity, config.max_queue, config.batch_marginal)
+                Device::new(
+                    i,
+                    step_cost,
+                    config.capacity,
+                    config.max_queue,
+                    config.batch_marginal,
+                    reuse,
+                )
             })
             .collect();
         let workers = config.devices.clamp(2, 8);
@@ -227,6 +246,7 @@ impl StepScheduler {
             backlog: VecDeque::new(),
             max_backlog: config.max_backlog,
             sampler_cache: Vec::new(),
+            work_stealing: config.work_stealing,
         }
     }
 
@@ -347,6 +367,7 @@ impl StepScheduler {
             step_index: 0,
             first_step_s: None,
             occupancy_sum: 0,
+            full_steps: 0,
             req,
         }
     }
@@ -377,16 +398,42 @@ impl StepScheduler {
     }
 
     /// Start a step on every idle device that has work (resident samples
-    /// mid-generation or admitted queue entries).
+    /// mid-generation or admitted queue entries). A device that went idle
+    /// with nothing at all first tries to steal queued work from the
+    /// most-loaded busy device.
     fn kick_idle(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
         for di in 0..self.devices.len() {
-            if self.devices[di].is_idle()
-                && (!self.queued[di].is_empty() || !self.resident[di].is_empty())
+            if !self.devices[di].is_idle() {
+                continue;
+            }
+            if self.work_stealing
+                && self.queued[di].is_empty()
+                && self.resident[di].is_empty()
             {
+                self.steal_into(di);
+            }
+            if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
                 self.start_step(di, now_s, executor)?;
             }
         }
         Ok(())
+    }
+
+    /// Work stealing (ROADMAP "Scaling out"): an idle device with an
+    /// empty admission queue pulls the oldest queued requests from the
+    /// most-loaded device, up to its own batch capacity. Donors must be
+    /// mid-step (their queued work is guaranteed to wait at least one
+    /// full step; an idle donor starts its own work this same boundary).
+    /// Deterministic: ties break toward the lowest donor id.
+    fn steal_into(&mut self, di: usize) {
+        while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
+            let donor = (0..self.devices.len())
+                .filter(|&j| j != di && !self.devices[j].is_idle() && !self.queued[j].is_empty())
+                .max_by_key(|&j| (self.queued[j].len(), std::cmp::Reverse(j)));
+            let Some(j) = donor else { break };
+            let slot = self.queued[j].pop_front().expect("donor queue non-empty");
+            self.queued[di].push_back(slot);
+        }
     }
 
     /// Handle a device's step-completion event: retire finished samples,
@@ -413,6 +460,7 @@ impl StepScheduler {
                     first_step_s: slot.first_step_s.unwrap_or(slot.req.arrival_s),
                     finish_s: now_s,
                     mean_batch: slot.occupancy_sum as f64 / steps.max(1) as f64,
+                    full_steps: slot.full_steps as usize,
                 });
             } else {
                 still_resident.push(slot);
@@ -442,6 +490,17 @@ impl StepScheduler {
         if k == 0 {
             return Ok(());
         }
+
+        // DeepCache step reuse: the device cycles full/shallow steps;
+        // admission phase-aligns to the cycle (a freshly promoted sample
+        // — `step_index == 0`, empty feature cache — escalates the fused
+        // step to full and restarts the cycle, so every resident row
+        // always agrees on the step class). In simulation the executor
+        // still runs every step — reuse changes the *priced* cost, not
+        // the sample trajectory, so `K` is a pure performance knob and
+        // results stay bit-identical across reuse intervals.
+        let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
+        let full = self.devices[di].next_step_full(force_full);
 
         // Fused UNet call: one t per row (rows may sit at different
         // denoise depths — that is the whole point of step-level batching).
@@ -481,8 +540,9 @@ impl StepScheduler {
             slot.rng = rng;
             slot.step_index += 1;
             slot.occupancy_sum += k as u64;
+            slot.full_steps += full as u64;
         }
-        self.devices[di].begin_step(now_s, k);
+        self.devices[di].begin_step(now_s, k, full);
         Ok(())
     }
 }
@@ -656,6 +716,116 @@ mod tests {
         let mut s = scheduler(1);
         let out = s.serve(workload(1, 6), &mut SimExecutor).unwrap();
         assert!((out.results[0].mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    fn scheduler_with(config: ClusterConfig) -> StepScheduler {
+        StepScheduler::new(
+            &config,
+            Cost::new(1e-3, 2e-3, 1_000_000, 4),
+            NoiseSchedule::linear(100),
+            16,
+            8,
+        )
+    }
+
+    #[test]
+    fn reuse_interval_one_reproduces_no_reuse_exactly() {
+        // K=1 must be the pre-reuse scheduler bit-for-bit: the shallow
+        // fraction is never exercised, every step is a full UNet step,
+        // and all timings/metrics match the default (no-reuse) config.
+        let base = config(2);
+        let k1 = ClusterConfig {
+            reuse_interval: 1,
+            reuse_shallow_frac: 0.125, // must be irrelevant at K=1
+            ..config(2)
+        };
+        let out_a = scheduler_with(base).serve(workload(10, 8), &mut SimExecutor).unwrap();
+        let out_b = scheduler_with(k1).serve(workload(10, 8), &mut SimExecutor).unwrap();
+        assert_eq!(out_a.results.len(), out_b.results.len());
+        for (ra, rb) in out_a.results.iter().zip(&out_b.results) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.sample, rb.sample);
+            assert_eq!(ra.finish_s, rb.finish_s, "K=1 timing must be bit-identical");
+            assert_eq!(ra.full_steps, ra.steps, "no shallow steps at K=1");
+        }
+        assert_eq!(out_b.metrics.reuse_hits(), 0);
+        assert_eq!(out_b.metrics.reuse_misses(), 10 * 8);
+        assert_eq!(out_a.metrics.makespan_s, out_b.metrics.makespan_s);
+    }
+
+    #[test]
+    fn reuse_speeds_up_fleet_and_counts_hits() {
+        let serve = |k: usize| {
+            let cfg = ClusterConfig { reuse_interval: k, ..config(2) };
+            scheduler_with(cfg).serve(workload(16, 12), &mut SimExecutor).unwrap()
+        };
+        let (k1, k3) = (serve(1), serve(3));
+        // Reuse is a pure cost-model knob: samples stay bit-identical.
+        for (ra, rb) in k1.results.iter().zip(&k3.results) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.sample, rb.sample, "reuse must not change samples");
+        }
+        let t1 = k1.metrics.throughput_samples_per_s();
+        let t3 = k3.metrics.throughput_samples_per_s();
+        assert!(
+            t3 >= 1.5 * t1,
+            "K=3 reuse must lift simulated throughput >= 1.5x (got {:.2}x)",
+            t3 / t1
+        );
+        assert_eq!(k1.metrics.reuse_hits(), 0);
+        assert!(k3.metrics.reuse_hits() > 0, "K=3 must record cache hits");
+        let total: u64 = k3.metrics.reuse_hits() + k3.metrics.reuse_misses();
+        let steps: u64 = k3.metrics.devices.iter().map(|d| d.steps_executed).sum();
+        assert_eq!(total, steps, "every sample-step is either a hit or a miss");
+        for r in &k3.results {
+            assert!(r.full_steps >= 1, "first step always runs the full UNet");
+            assert!(r.full_steps < r.steps, "some steps must be shallow at K=3");
+        }
+    }
+
+    #[test]
+    fn work_stealing_balances_skewed_queues() {
+        // Least-loaded routing alternates the t=0 burst: even ids (long,
+        // 40-step generations) land on device 0, odd ids (2-step) on
+        // device 1. Device 1 drains quickly and must then steal device
+        // 0's queued work instead of idling.
+        let cfg = |stealing: bool| ClusterConfig {
+            devices: 2,
+            capacity: 1,
+            max_queue: 16,
+            policy: ShardPolicy::LeastLoaded,
+            work_stealing: stealing,
+            ..ClusterConfig::default()
+        };
+        let reqs = || -> Vec<ClusterRequest> {
+            (0..8)
+                .map(|i| {
+                    let steps = if i % 2 == 0 { 40 } else { 2 };
+                    ClusterRequest::new(i, 100 + i, SamplerKind::Ddim { steps }, 0.0)
+                })
+                .collect()
+        };
+        let with = scheduler_with(cfg(true)).serve(reqs(), &mut SimExecutor).unwrap();
+        let without = scheduler_with(cfg(false)).serve(reqs(), &mut SimExecutor).unwrap();
+        assert_eq!(with.results.len(), 8);
+        assert_eq!(without.results.len(), 8);
+        // Without stealing, device 0 serializes all four long jobs.
+        assert!(
+            with.metrics.makespan_s < 0.7 * without.metrics.makespan_s,
+            "stealing must shorten the makespan ({} vs {})",
+            with.metrics.makespan_s,
+            without.metrics.makespan_s
+        );
+        let stolen = with
+            .results
+            .iter()
+            .any(|r| r.id.0 % 2 == 0 && r.device == DeviceId(1));
+        assert!(stolen, "device 1 must have stolen at least one long job");
+        // Stealing never changes what gets generated.
+        for ra in &with.results {
+            let rb = without.results.iter().find(|r| r.id == ra.id).unwrap();
+            assert_eq!(ra.sample, rb.sample);
+        }
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! * **Single device** (`cluster.devices == 1`) — the original
 //!   run-to-completion loop: form a batch, denoise it across all
 //!   timesteps, emit, repeat.
-//! * **Fleet** (`cluster.devices > 1`) — requests are handed to the
-//!   [`crate::cluster`] step-level scheduler, which shards them across N
-//!   simulated DiffLight devices with continuous batching; the PJRT
-//!   runtime stays the compute substrate via [`StepExecutor`].
+//! * **Fleet** (`cluster.devices > 1`, or `cluster.reuse_interval > 1`
+//!   on a single device) — requests are handed to the [`crate::cluster`]
+//!   step-level scheduler, which shards them across N simulated
+//!   DiffLight devices with continuous batching and DeepCache step
+//!   reuse; the PJRT runtime stays the compute substrate via
+//!   [`StepExecutor`].
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -99,7 +101,10 @@ impl Coordinator {
 
     /// Serve until the queue is empty; returns all finished generations.
     pub fn run_until_drained(&mut self) -> crate::Result<Vec<GenerationResult>> {
-        if self.config.cluster.devices > 1 {
+        // The cluster scheduler owns both sharding and DeepCache step
+        // reuse, so either a multi-device fleet *or* a reuse interval
+        // routes through it (a 1-device cluster is the reuse-only case).
+        if self.config.cluster.devices > 1 || self.config.cluster.reuse_interval > 1 {
             return self.run_cluster_drained();
         }
         let mut out = Vec::new();

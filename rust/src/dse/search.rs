@@ -1,10 +1,22 @@
 //! DSE evaluation and search.
+//!
+//! The sweep prices every candidate through a shared [`CostCache`]: the
+//! four workload traces are interned (built once per process), and each
+//! structurally distinct layer is priced once per *relevant* slice of
+//! the architectural vector rather than once per candidate — candidates
+//! that differ only in MHA dimensions reuse every conv/norm/activation
+//! price, and vice versa (see [`crate::sim::cache`] for the key design).
+//! [`explore_uncached`] keeps the pre-memoization path alive as the
+//! reference for bit-identity tests and the perf harness's
+//! before/after comparison.
+
+use std::sync::Arc;
 
 use crate::arch::cost::OptFlags;
 use crate::arch::units::Accelerator;
 use crate::arch::ArchConfig;
 use crate::devices::DeviceParams;
-use crate::sim::Simulator;
+use crate::sim::{CostCache, Simulator};
 use crate::util::stats;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::{ModelId, ModelSpec};
@@ -29,6 +41,40 @@ pub struct DsePoint {
 /// optimization set (the DSE in §V precedes the Fig. 8 ablation, so it
 /// runs the optimized dataflow).
 pub fn evaluate(config: ArchConfig, params: &DeviceParams) -> Option<DsePoint> {
+    let cache = Arc::new(CostCache::new(params.clone()));
+    evaluate_cached(config, params, &cache)
+}
+
+/// Evaluate one configuration through a shared cost cache (which must
+/// have been built from the same `params`).
+pub fn evaluate_cached(
+    config: ArchConfig,
+    params: &DeviceParams,
+    cache: &Arc<CostCache>,
+) -> Option<DsePoint> {
+    // Hard check: the cache deliberately omits DeviceParams from its
+    // memo keys, so a mismatched cache would return silently wrong
+    // costs (the ~30 float compares are noise next to one evaluation).
+    assert!(
+        cache.params() == params,
+        "evaluate_cached: cache built from different DeviceParams"
+    );
+    let acc = Accelerator::new(config, params).ok()?;
+    let sim = Simulator::with_cache(acc, Arc::clone(cache));
+    let mut gops = Vec::new();
+    let mut epb = Vec::new();
+    for id in ModelId::ALL {
+        let run = sim.run_model_id(id, OptFlags::ALL);
+        gops.push(run.gops());
+        epb.push(run.epb());
+    }
+    Some(point(config, &gops, &epb))
+}
+
+/// Reference evaluation without any memoization or trace interning —
+/// the pre-cache hot path, kept for bit-identity tests and the
+/// `sim_hot_path` bench's before/after timing.
+pub fn evaluate_uncached(config: ArchConfig, params: &DeviceParams) -> Option<DsePoint> {
     let acc = Accelerator::new(config, params).ok()?;
     let sim = Simulator::new(acc, params.clone());
     let mut gops = Vec::new();
@@ -38,29 +84,77 @@ pub fn evaluate(config: ArchConfig, params: &DeviceParams) -> Option<DsePoint> {
         gops.push(run.gops());
         epb.push(run.epb());
     }
-    let avg_gops = stats::mean(&gops);
-    let avg_epb = stats::mean(&epb);
-    Some(DsePoint {
+    Some(point(config, &gops, &epb))
+}
+
+fn point(config: ArchConfig, gops: &[f64], epb: &[f64]) -> DsePoint {
+    let avg_gops = stats::mean(gops);
+    let avg_epb = stats::mean(epb);
+    DsePoint {
         config,
         avg_gops,
         avg_epb,
         objective: avg_gops / avg_epb,
         total_mrs: config.total_mrs(),
-    })
+    }
+}
+
+/// Order points best-objective-first, totally and without panicking:
+/// `f64::total_cmp` instead of `partial_cmp(..).unwrap()` (a NaN
+/// objective — e.g. a degenerate 0/0 GOPS-over-EPB — used to crash the
+/// sweep), with NaN objectives deterministically sorted last.
+pub fn sort_by_objective(points: &mut [DsePoint]) {
+    points.sort_by(|a, b| match (a.objective.is_nan(), b.objective.is_nan()) {
+        (false, false) => b.objective.total_cmp(&a.objective),
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater, // NaN after real scores
+        (false, true) => std::cmp::Ordering::Less,
+    });
 }
 
 /// Exhaustively evaluate the space on `threads` workers; returns points
-/// sorted by objective, best first.
+/// sorted by objective, best first. All workers share one [`CostCache`].
 pub fn explore(space: &DesignSpace, params: &DeviceParams, threads: usize) -> Vec<DsePoint> {
+    let cache = Arc::new(CostCache::new(params.clone()));
+    explore_with(space, params, threads, &cache)
+}
+
+/// [`explore`] over a caller-provided cache (so back-to-back sweeps —
+/// or a sweep after serving traffic — reuse already-priced layers).
+pub fn explore_with(
+    space: &DesignSpace,
+    params: &DeviceParams,
+    threads: usize,
+    cache: &Arc<CostCache>,
+) -> Vec<DsePoint> {
+    let candidates = space.candidates();
+    let pool = ThreadPool::new(threads.max(1));
+    let params2 = params.clone();
+    let cache2 = Arc::clone(cache);
+    let mut points: Vec<DsePoint> = pool
+        .map(candidates, move |cfg| evaluate_cached(cfg, &params2, &cache2))
+        .into_iter()
+        .flatten()
+        .collect();
+    sort_by_objective(&mut points);
+    points
+}
+
+/// Reference sweep on the uncached path (see [`evaluate_uncached`]).
+pub fn explore_uncached(
+    space: &DesignSpace,
+    params: &DeviceParams,
+    threads: usize,
+) -> Vec<DsePoint> {
     let candidates = space.candidates();
     let pool = ThreadPool::new(threads.max(1));
     let params2 = params.clone();
     let mut points: Vec<DsePoint> = pool
-        .map(candidates, move |cfg| evaluate(cfg, &params2))
+        .map(candidates, move |cfg| evaluate_uncached(cfg, &params2))
         .into_iter()
         .flatten()
         .collect();
-    points.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
+    sort_by_objective(&mut points);
     points
 }
 
@@ -82,12 +176,22 @@ mod tests {
         let p = DeviceParams::paper();
         let bad = ArchConfig::from_vector([4, 12, 3, 6, 6, 3], 99);
         assert!(evaluate(bad, &p).is_none());
+        assert!(evaluate_uncached(bad, &p).is_none());
     }
 
     #[test]
-    fn explore_small_space_sorted() {
+    fn cached_evaluation_bit_identical_to_uncached() {
         let p = DeviceParams::paper();
-        let space = DesignSpace {
+        for v in [[4, 12, 3, 6, 6, 3], [2, 8, 3, 4, 6, 3], [1, 12, 2, 2, 4, 2]] {
+            let cfg = ArchConfig::from_vector(v, 36);
+            let cached = evaluate(cfg, &p).unwrap();
+            let uncached = evaluate_uncached(cfg, &p).unwrap();
+            assert_eq!(cached, uncached, "{v:?}");
+        }
+    }
+
+    fn small_space() -> DesignSpace {
+        DesignSpace {
             y: vec![2, 4],
             n: vec![8, 12],
             k: vec![3],
@@ -96,12 +200,53 @@ mod tests {
             m: vec![3],
             wavelengths: 36,
             max_total_mrs: usize::MAX,
-        };
-        let pts = explore(&space, &p, 4);
+        }
+    }
+
+    #[test]
+    fn explore_small_space_sorted() {
+        let p = DeviceParams::paper();
+        let pts = explore(&small_space(), &p, 4);
         assert_eq!(pts.len(), 8);
         for w in pts.windows(2) {
             assert!(w[0].objective >= w[1].objective);
         }
+    }
+
+    #[test]
+    fn explore_matches_uncached_sweep_bitwise() {
+        let p = DeviceParams::paper();
+        let cached = explore(&small_space(), &p, 4);
+        let uncached = explore_uncached(&small_space(), &p, 4);
+        assert_eq!(cached, uncached, "memoized sweep must be bit-identical");
+    }
+
+    #[test]
+    fn nan_objective_sorts_last_without_panicking() {
+        // Regression: the old `partial_cmp(..).unwrap()` sort panicked on
+        // NaN objectives (0 GOPS / 0 EPB degenerate points).
+        let pt = |objective: f64| DsePoint {
+            config: ArchConfig::paper_optimal(),
+            avg_gops: 0.0,
+            avg_epb: 0.0,
+            objective,
+            total_mrs: 0,
+        };
+        let mut pts = vec![
+            pt(f64::NAN),
+            pt(1.0),
+            pt(f64::INFINITY),
+            pt(2.0),
+            pt(f64::NAN),
+            pt(-1.0),
+        ];
+        sort_by_objective(&mut pts);
+        let objs: Vec<f64> = pts.iter().map(|p| p.objective).collect();
+        assert_eq!(objs[0], f64::INFINITY);
+        assert_eq!(objs[1], 2.0);
+        assert_eq!(objs[2], 1.0);
+        assert_eq!(objs[3], -1.0);
+        assert!(objs[4].is_nan() && objs[5].is_nan());
     }
 
     #[test]

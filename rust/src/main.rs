@@ -9,13 +9,16 @@
 //! * `dse [--threads N]` — design-space exploration (reports the top
 //!   configurations and the paper config's rank).
 //! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
-//!   [--fp32] [--devices N]` — serve synthetic generation requests
-//!   through the AOT UNet via PJRT (sharded across an N-device fleet
-//!   when `--devices > 1`) and print latency/throughput metrics.
+//!   [--fp32] [--devices N] [--reuse-interval K]` — serve synthetic
+//!   generation requests through the AOT UNet via PJRT (sharded across
+//!   an N-device fleet when `--devices > 1`, with DeepCache step reuse
+//!   when `K > 1`) and print latency/throughput metrics.
 //! * `cluster [--devices N] [--requests R] [--steps S] [--capacity C]
-//!   [--policy rr|ll|affinity] [--gap-us G]` — pure-simulation fleet
-//!   serving (no artifacts needed): continuous step-level batching over
-//!   N simulated DiffLight devices, with a fleet JSON report.
+//!   [--policy rr|ll|affinity] [--gap-us G] [--reuse-interval K]
+//!   [--shallow-frac F] [--no-steal]` — pure-simulation fleet serving
+//!   (no artifacts needed): continuous step-level batching over N
+//!   simulated DiffLight devices with work stealing and DeepCache-style
+//!   step reuse, with a fleet JSON report.
 //! * `devices` — print the Table II device parameter set in use.
 
 use difflight::arch::cost::OptFlags;
@@ -56,6 +59,7 @@ fn print_help(program: &str) {
     println!("  dse --threads 8                     design-space exploration");
     println!("  serve --requests 8 --steps 25       serve via PJRT artifacts");
     println!("  cluster --devices 4 --requests 32   simulated fleet serving");
+    println!("          --reuse-interval 3          DeepCache step reuse (1 = off)");
     println!("  devices                             Table II constants");
 }
 
@@ -184,6 +188,7 @@ fn cmd_serve(args: &Args) -> i32 {
     config.policy.max_batch = args.get_parsed("batch", 4usize);
     config.cluster.devices = args.get_parsed("devices", 1usize);
     config.cluster.capacity = config.policy.max_batch;
+    config.cluster.reuse_interval = args.get_parsed("reuse-interval", 1usize);
     let mut coord = match Coordinator::open(config) {
         Ok(c) => c,
         Err(e) => {
@@ -228,6 +233,11 @@ fn cmd_cluster(args: &Args) -> i32 {
                 eprintln!("unknown --policy (want rr|least-loaded|affinity); using least-loaded");
                 ShardPolicy::LeastLoaded
             }),
+        reuse_interval: args.get_parsed("reuse-interval", 1usize).max(1),
+        reuse_shallow_frac: args
+            .get_parsed("shallow-frac", 0.25f64)
+            .clamp(0.01, 1.0),
+        work_stealing: !args.flag("no-steal"),
         ..ClusterConfig::default()
     };
     let requests = args.get_parsed("requests", 32usize);
@@ -278,6 +288,15 @@ fn cmd_cluster(args: &Args) -> i32 {
         m.fleet_gops(),
         fmt_si(m.fleet_epb(), "J/bit"),
     );
+    if config.reuse_interval > 1 {
+        println!(
+            "reuse: K={} — {} cache-hit / {} full sample-steps ({:.0}% hit rate)",
+            config.reuse_interval,
+            m.reuse_hits(),
+            m.reuse_misses(),
+            100.0 * m.reuse_hit_rate(),
+        );
+    }
     if std::fs::create_dir_all("artifacts").is_ok()
         && std::fs::write("artifacts/cluster_report.json", m.to_json().to_string_pretty()).is_ok()
     {

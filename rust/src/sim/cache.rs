@@ -1,0 +1,470 @@
+//! Cost memoization for the sim→DSE→cluster hot path.
+//!
+//! Three layers of reuse, from coarse to fine:
+//!
+//! 1. **Interned traces** — each [`ModelSpec`]'s per-step layer trace is
+//!    built exactly once per process and shared via `Arc`
+//!    ([`interned_trace`]). On top of the raw trace, [`CompiledTrace`]
+//!    pre-deduplicates structurally identical layers (UNets repeat the
+//!    same res-block shapes dozens of times), so pricing a step touches
+//!    each *distinct* layer shape once and then replays a cheap index
+//!    sequence.
+//! 2. **Layer memo** — a structural-signature → [`Cost`] table inside
+//!    [`CostCache`], keyed by `(LayerKind, arch-subkey, OptFlags,
+//!    bit-width)`. The *arch-subkey* ([`arch_subkey`]) is the slice of
+//!    the `[Y,N,K,H,L,M]@λ` vector a layer class can actually observe:
+//!
+//!    | layer class          | cost depends on       |
+//!    |----------------------|-----------------------|
+//!    | `Conv2d` / `Linear`  | `Y, N, K, λ`          |
+//!    | `GroupNorm`          | `N, K, λ`             |
+//!    | `Swish`/`ResidualAdd`| `λ`                   |
+//!    | `Attention`          | `H, L, M, N, λ`       |
+//!
+//!    During a DSE sweep this is what makes memoization pay: two
+//!    candidates that differ only in MHA dimensions share every priced
+//!    conv/norm/activation layer, and vice versa (`subkey_is_sound`
+//!    guards the table against unit-model changes).
+//! 3. **Step memo** — a `(ModelId, ArchConfig, OptFlags, bit-width)` →
+//!    step-[`Cost`] table for whole denoise steps, which collapses the
+//!    serving/cluster hot path (same model, same config, every request)
+//!    to a single map lookup.
+//!
+//! Cached pricing is **bit-identical** to uncached pricing: both paths
+//! run the same `raw_layer_cost` / `fold_step_cost` code on the same
+//! inputs, and every input that can influence the result is part of the
+//! key (asserted in tests over all `ModelId` × `OptFlags` combos).
+//!
+//! A cache is tied to the [`DeviceParams`] it was built with; the
+//! process-wide [`CostCache::shared_paper`] instance serves the Table II
+//! paper parameters, which is what the CLI, coordinator and cluster use.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::arch::cost::{Cost, OptFlags};
+use crate::arch::units::Accelerator;
+use crate::arch::ArchConfig;
+use crate::devices::DeviceParams;
+use crate::workload::{LayerInstance, LayerKind, ModelId, ModelSpec};
+
+use super::engine::{fold_step_cost, is_mha_kind, raw_layer_cost};
+
+/// Multiplicative rotate-xor hasher (FxHash-style). The memo keys are a
+/// handful of machine words; SipHash's per-lookup setup would cost more
+/// than some of the cheaper layer-cost computations it guards.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(0x517c_c1b7_2722_0a95);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_isize(&mut self, n: isize) {
+        self.add(n as u64);
+    }
+}
+
+type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// A model trace compiled for fast repeated pricing: the full layer list
+/// (shared across the process), the deduplicated layer kinds, and the
+/// execution order as indices into the deduplicated set.
+#[derive(Debug)]
+pub struct CompiledTrace {
+    pub model: ModelId,
+    /// The full per-step trace, in execution order.
+    pub layers: Arc<Vec<LayerInstance>>,
+    /// Structurally distinct layer kinds (typically ~5-10x smaller than
+    /// `layers` — UNet stages repeat identical shapes).
+    pub unique: Vec<LayerKind>,
+    /// `(index into unique, runs-on-MHA-unit)` per executed layer.
+    pub seq: Vec<(u32, bool)>,
+}
+
+fn compile(id: ModelId) -> Arc<CompiledTrace> {
+    let layers = Arc::new(ModelSpec::get(id).trace());
+    let mut unique: Vec<LayerKind> = Vec::new();
+    let mut index: FxMap<LayerKind, u32> = FxMap::default();
+    let mut seq = Vec::with_capacity(layers.len());
+    for l in layers.iter() {
+        let idx = *index.entry(l.kind).or_insert_with(|| {
+            unique.push(l.kind);
+            (unique.len() - 1) as u32
+        });
+        seq.push((idx, is_mha_kind(&l.kind)));
+    }
+    Arc::new(CompiledTrace { model: id, layers, unique, seq })
+}
+
+static TRACES: once_cell::sync::Lazy<Vec<Arc<CompiledTrace>>> =
+    once_cell::sync::Lazy::new(|| ModelId::ALL.iter().map(|id| compile(*id)).collect());
+
+/// The process-wide compiled trace of `id` (built once, `Arc`-shared).
+pub fn compiled_trace(id: ModelId) -> Arc<CompiledTrace> {
+    TRACES[id.index()].clone()
+}
+
+/// The process-wide interned layer trace of `id` (built once,
+/// `Arc`-shared; identical to `ModelSpec::get(id).trace()`).
+pub fn interned_trace(id: ModelId) -> Arc<Vec<LayerInstance>> {
+    TRACES[id.index()].layers.clone()
+}
+
+/// The architectural dimensions a layer class can observe, as a dense
+/// sub-vector (see the module docs table). The `LayerKind` discriminant
+/// is always part of the full key, so sub-vectors never collide across
+/// classes.
+fn arch_subkey(kind: &LayerKind, cfg: &ArchConfig) -> [u32; 5] {
+    match kind {
+        // Residual-unit GEMMs shard over Y blocks of K×N@λ arrays.
+        LayerKind::Conv2d { .. } | LayerKind::Linear { .. } => {
+            [cfg.y as u32, cfg.n as u32, cfg.k as u32, cfg.wavelengths as u32, 0]
+        }
+        // GroupNorm runs on one block's norm path (Y-independent).
+        LayerKind::GroupNorm { .. } => {
+            [0, cfg.n as u32, cfg.k as u32, cfg.wavelengths as u32, 0]
+        }
+        // The activation block only has λ-wide geometry.
+        LayerKind::Swish { .. } | LayerKind::ResidualAdd { .. } => {
+            [0, 0, 0, cfg.wavelengths as u32, 0]
+        }
+        // MHA: H head blocks of M×L arrays (V path M×N) + linear&add.
+        LayerKind::Attention { .. } => [
+            cfg.h as u32,
+            cfg.l as u32,
+            cfg.m as u32,
+            cfg.n as u32,
+            cfg.wavelengths as u32,
+        ],
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct LayerKey {
+    kind: LayerKind,
+    arch: [u32; 5],
+    opts: OptFlags,
+    bit_width: u32,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct StepKey {
+    model: ModelId,
+    config: ArchConfig,
+    opts: OptFlags,
+    bit_width: u32,
+}
+
+/// Hit/miss/size snapshot of a [`CostCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub layer_entries: usize,
+    pub step_entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Structural-signature → [`Cost`] memo, tied to one [`DeviceParams`]
+/// set. Thread-safe: the DSE sweep shares one cache across all workers.
+pub struct CostCache {
+    params: DeviceParams,
+    layers: RwLock<FxMap<LayerKey, Cost>>,
+    steps: RwLock<FxMap<StepKey, Cost>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+static PAPER_CACHE: once_cell::sync::Lazy<Arc<CostCache>> =
+    once_cell::sync::Lazy::new(|| Arc::new(CostCache::new(DeviceParams::paper())));
+
+impl CostCache {
+    pub fn new(params: DeviceParams) -> Self {
+        Self {
+            params,
+            layers: RwLock::new(FxMap::default()),
+            steps: RwLock::new(FxMap::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache over the Table II paper parameters.
+    pub fn shared_paper() -> Arc<CostCache> {
+        PAPER_CACHE.clone()
+    }
+
+    /// The device parameters every memoized cost was computed with.
+    pub fn params(&self) -> &DeviceParams {
+        &self.params
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            layer_entries: self.layers.read().expect("cache lock").len(),
+            step_entries: self.steps.read().expect("cache lock").len(),
+        }
+    }
+
+    /// Memoized price of one layer on `acc`. `acc` must be built from the
+    /// same [`DeviceParams`] this cache was created with (the params are
+    /// deliberately *not* part of the key).
+    pub fn layer_cost(&self, acc: &Accelerator, kind: &LayerKind, opts: OptFlags) -> Cost {
+        let key = LayerKey {
+            kind: *kind,
+            arch: arch_subkey(kind, &acc.config),
+            opts,
+            bit_width: self.params.bit_width,
+        };
+        if let Some(c) = self.layers.read().expect("cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *c;
+        }
+        // Concurrent misses on the same key recompute the same bits, so
+        // racing inserts are benign.
+        let c = raw_layer_cost(acc, &self.params, kind, opts);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.layers.write().expect("cache lock").insert(key, c);
+        c
+    }
+
+    /// Memoized cost of one full denoise step of `model` on `acc`:
+    /// prices each *distinct* layer shape through the layer memo, then
+    /// replays the compiled execution sequence with the same pipelining
+    /// fold the uncached [`super::Simulator::step_cost`] uses.
+    pub fn step_cost(&self, acc: &Accelerator, model: ModelId, opts: OptFlags) -> Cost {
+        let key = StepKey {
+            model,
+            config: acc.config,
+            opts,
+            bit_width: self.params.bit_width,
+        };
+        if let Some(c) = self.steps.read().expect("cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *c;
+        }
+        let ct = compiled_trace(model);
+        let costs: Vec<Cost> =
+            ct.unique.iter().map(|k| self.layer_cost(acc, k, opts)).collect();
+        let c = fold_step_cost(
+            ct.seq.iter().map(|&(idx, mha)| (mha, costs[idx as usize])),
+            opts,
+        );
+        self.steps.write().expect("cache lock").insert(key, c);
+        c
+    }
+}
+
+impl std::fmt::Debug for CostCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("CostCache")
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("layer_entries", &s.layer_entries)
+            .field("step_entries", &s.step_entries)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+
+    fn sweep_opts() -> [OptFlags; 5] {
+        [
+            OptFlags::BASELINE,
+            OptFlags::SPARSE,
+            OptFlags::PIPELINED,
+            OptFlags::DAC_SHARING,
+            OptFlags::ALL,
+        ]
+    }
+
+    #[test]
+    fn interned_trace_matches_fresh_build_and_is_shared() {
+        for id in ModelId::ALL {
+            let interned = interned_trace(id);
+            assert_eq!(*interned, ModelSpec::get(id).trace(), "{:?}", id);
+            // Same allocation on every call.
+            assert!(Arc::ptr_eq(&interned, &interned_trace(id)));
+        }
+    }
+
+    #[test]
+    fn compiled_trace_dedups_but_replays_everything() {
+        for id in ModelId::ALL {
+            let ct = compiled_trace(id);
+            assert_eq!(ct.seq.len(), ct.layers.len());
+            assert!(ct.unique.len() < ct.layers.len(), "{:?}: no repeated layers?", id);
+            for (i, &(idx, mha)) in ct.seq.iter().enumerate() {
+                assert_eq!(ct.unique[idx as usize], ct.layers[i].kind);
+                assert_eq!(mha, is_mha_kind(&ct.layers[i].kind));
+            }
+        }
+    }
+
+    #[test]
+    fn cached_step_cost_bit_identical_to_uncached() {
+        // The acceptance-criterion test: memoized pricing must be
+        // bit-for-bit the uncached result for every model × flag combo.
+        let uncached = Simulator::paper_optimal();
+        let cached = Simulator::paper_cached();
+        for id in ModelId::ALL {
+            let trace = ModelSpec::get(id).trace();
+            for opts in sweep_opts() {
+                let want = uncached.step_cost(&trace, opts);
+                let got = cached.model_step_cost(id, opts);
+                assert_eq!(got, want, "{:?} {:?}", id, opts);
+                // Second call exercises the step-memo hit path.
+                assert_eq!(cached.model_step_cost(id, opts), want);
+            }
+        }
+    }
+
+    #[test]
+    fn cached_layer_costs_bit_identical_to_uncached() {
+        let uncached = Simulator::paper_optimal();
+        let cache = CostCache::new(DeviceParams::paper());
+        let acc = uncached.accelerator.clone();
+        for id in ModelId::ALL {
+            for layer in interned_trace(id).iter() {
+                for opts in [OptFlags::BASELINE, OptFlags::ALL] {
+                    let want = uncached.layer_cost(layer, opts);
+                    assert_eq!(cache.layer_cost(&acc, &layer.kind, opts), want);
+                    assert_eq!(cache.layer_cost(&acc, &layer.kind, opts), want);
+                }
+            }
+        }
+        let s = cache.stats();
+        assert!(s.hits > 0 && s.misses > 0);
+        assert!(s.hits >= s.misses, "repeated lookups must hit");
+    }
+
+    #[test]
+    fn subkey_is_sound() {
+        // The arch-subkey claims certain dimensions cannot affect certain
+        // layer classes. Verify that claim against ground truth: price
+        // uncached under configs that differ ONLY in claimed-irrelevant
+        // dims and demand identical costs.
+        let p = DeviceParams::paper();
+        let base = ArchConfig::paper_optimal(); // [4,12,3,6,6,3]@36
+        let sims: Vec<Simulator> = [
+            base,
+            ArchConfig::from_vector([4, 12, 3, 2, 4, 2], 36), // MHA dims differ
+            ArchConfig::from_vector([2, 12, 3, 6, 6, 3], 36), // Y differs
+        ]
+        .iter()
+        .map(|c| Simulator::new(Accelerator::new(*c, &p).unwrap(), p.clone()))
+        .collect();
+        let trace = interned_trace(ModelId::StableDiffusion);
+        for layer in trace.iter() {
+            let costs: Vec<Cost> =
+                sims.iter().map(|s| s.layer_cost(layer, OptFlags::ALL)).collect();
+            match layer.kind {
+                // Conv/Linear/GroupNorm/activations must ignore H/L/M.
+                LayerKind::Conv2d { .. }
+                | LayerKind::Linear { .. }
+                | LayerKind::GroupNorm { .. }
+                | LayerKind::Swish { .. }
+                | LayerKind::ResidualAdd { .. } => {
+                    assert_eq!(costs[0], costs[1], "{} saw MHA dims", layer.name);
+                }
+                // Attention must ignore Y.
+                LayerKind::Attention { .. } => {
+                    assert_eq!(costs[0], costs[2], "{} saw Y", layer.name);
+                }
+            }
+            // GroupNorm and activations must also ignore Y.
+            if matches!(
+                layer.kind,
+                LayerKind::GroupNorm { .. } | LayerKind::Swish { .. } | LayerKind::ResidualAdd { .. }
+            ) {
+                assert_eq!(costs[0], costs[2], "{} saw Y", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_configs_do_not_collide() {
+        // Same cache, two configs: each must get its own priced costs.
+        let p = DeviceParams::paper();
+        let cache = CostCache::new(p.clone());
+        let a = Accelerator::new(ArchConfig::paper_optimal(), &p).unwrap();
+        let b = Accelerator::new(ArchConfig::from_vector([1, 12, 3, 6, 6, 3], 36), &p).unwrap();
+        let conv = interned_trace(ModelId::DdpmCifar10)
+            .iter()
+            .find(|l| matches!(l.kind, LayerKind::Conv2d { .. }))
+            .unwrap()
+            .clone();
+        let ca = cache.layer_cost(&a, &conv.kind, OptFlags::ALL);
+        let cb = cache.layer_cost(&b, &conv.kind, OptFlags::ALL);
+        assert!(ca.latency_s < cb.latency_s, "Y=4 must beat Y=1 on a conv");
+        // And both stay stable on re-lookup.
+        assert_eq!(cache.layer_cost(&a, &conv.kind, OptFlags::ALL), ca);
+        assert_eq!(cache.layer_cost(&b, &conv.kind, OptFlags::ALL), cb);
+    }
+
+    #[test]
+    fn shared_paper_cache_is_process_wide() {
+        let a = CostCache::shared_paper();
+        let b = CostCache::shared_paper();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.params().bit_width, DeviceParams::paper().bit_width);
+    }
+}

@@ -1,31 +1,61 @@
 //! Core mapping engine: layer trace → accelerator blocks → [`Cost`].
 
+use std::sync::Arc;
+
 use crate::arch::attention::AttentionDims;
 use crate::arch::bank_array::Gemm;
 use crate::arch::cost::{Cost, OptFlags};
 use crate::arch::units::Accelerator;
 use crate::devices::DeviceParams;
 use crate::workload::im2col::conv_to_gemm;
-use crate::workload::{LayerInstance, LayerKind, ModelSpec};
+use crate::workload::{LayerInstance, LayerKind, ModelId, ModelSpec};
 
+use super::cache::CostCache;
 use super::report::ModelRun;
 
 /// The transaction-level simulator.
+///
+/// Optionally carries a [`CostCache`]: a cached simulator memoizes layer
+/// and step prices (bit-identically — see [`crate::sim::cache`]) and is
+/// what the DSE sweep and the cluster tier run on; an uncached one
+/// recomputes everything and serves as the reference/baseline path.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub accelerator: Accelerator,
     pub params: DeviceParams,
+    cache: Option<Arc<CostCache>>,
 }
 
 impl Simulator {
+    /// Uncached simulator (reference pricing path).
     pub fn new(accelerator: Accelerator, params: DeviceParams) -> Self {
-        Self { accelerator, params }
+        Self { accelerator, params, cache: None }
     }
 
-    /// Simulator over the paper's DSE-optimal configuration.
+    /// Simulator sharing `cache`'s memo tables; the device parameters are
+    /// taken from the cache so key and computation can never disagree.
+    pub fn with_cache(accelerator: Accelerator, cache: Arc<CostCache>) -> Self {
+        let params = cache.params().clone();
+        Self { accelerator, params, cache: Some(cache) }
+    }
+
+    /// Simulator over the paper's DSE-optimal configuration (uncached).
     pub fn paper_optimal() -> Self {
         let params = DeviceParams::paper();
-        Self { accelerator: Accelerator::paper_optimal(&params), params }
+        Self::new(Accelerator::paper_optimal(&params), params)
+    }
+
+    /// Paper-optimal simulator over the process-wide shared cost cache —
+    /// the hot-path construction used by the serving/cluster tiers.
+    pub fn paper_cached() -> Self {
+        let cache = CostCache::shared_paper();
+        let accelerator = Accelerator::paper_optimal(cache.params());
+        Self::with_cache(accelerator, cache)
+    }
+
+    /// The cost cache, if this simulator prices through one.
+    pub fn cache(&self) -> Option<&Arc<CostCache>> {
+        self.cache.as_ref()
     }
 
     /// Price one layer.
@@ -33,31 +63,9 @@ impl Simulator {
     /// Routing (§IV): convolutions, dense layers, norms, activations and
     /// skip adds go to the Residual unit; attention goes to the MHA unit.
     pub fn layer_cost(&self, layer: &LayerInstance, opts: OptFlags) -> Cost {
-        let p = &self.params;
-        let acc = &self.accelerator;
-        match layer.kind {
-            LayerKind::Conv2d { .. } => {
-                let gemm = conv_to_gemm(&layer.kind).expect("conv lowers to gemm");
-                acc.residual.gemm_cost(&gemm, p, opts)
-            }
-            LayerKind::Linear { in_features, out_features, tokens } => acc
-                .residual
-                .gemm_cost(&Gemm::dense(tokens, in_features, out_features), p, opts),
-            LayerKind::Attention { seq, d_model, context_dim, context_seq, heads } => {
-                let dims = if context_dim == d_model && context_seq == seq {
-                    AttentionDims::self_attn(seq, d_model, heads)
-                } else {
-                    AttentionDims::cross_attn(seq, d_model, heads, context_dim, context_seq)
-                };
-                acc.mha.mha_cost(heads, &dims, p, opts)
-            }
-            LayerKind::GroupNorm { elements, groups, .. } => {
-                acc.residual.norm_cost(elements, groups, p)
-            }
-            LayerKind::Swish { elements } => acc.residual.swish_cost(elements, p, opts),
-            LayerKind::ResidualAdd { elements } => {
-                acc.residual.residual_add_cost(elements, p)
-            }
+        match &self.cache {
+            Some(cache) => cache.layer_cost(&self.accelerator, &layer.kind, opts),
+            None => raw_layer_cost(&self.accelerator, &self.params, &layer.kind, opts),
         }
     }
 
@@ -67,62 +75,144 @@ impl Simulator {
     /// the Residual unit works on layer *i+1*, the MHA unit can drain
     /// layer *i* (and vice versa). We model this as hiding the smaller of
     /// each adjacent cross-unit pair's latencies.
+    ///
+    /// Allocation-free: the trace streams through the pipelining fold
+    /// without materializing a per-layer cost vector.
     pub fn step_cost(&self, trace: &[LayerInstance], opts: OptFlags) -> Cost {
-        let costs: Vec<(bool, Cost)> = trace
-            .iter()
-            .map(|l| (is_mha_layer(l), self.layer_cost(l, opts)))
-            .collect();
-        if !opts.pipelined {
-            return costs.into_iter().map(|(_, c)| c).sum();
-        }
-        // Inter-block pipelining: when execution alternates units, the
-        // earlier layer's tail overlaps the later layer's head. Credit
-        // min(latency_i, latency_{i+1}) · OVERLAP for unit switches.
-        const OVERLAP: f64 = 0.65;
-        let mut total = Cost::ZERO;
-        let mut prev: Option<(bool, Cost)> = None;
-        for (unit, cost) in costs {
-            let mut c = cost;
-            if let Some((prev_unit, prev_cost)) = prev {
-                if prev_unit != unit {
-                    let hidden = prev_cost.latency_s.min(c.latency_s) * OVERLAP;
-                    c.latency_s -= hidden;
-                }
+        fold_step_cost(
+            trace.iter().map(|l| (is_mha_layer(l), self.layer_cost(l, opts))),
+            opts,
+        )
+    }
+
+    /// Price one denoise step of a zoo model by id, through the interned
+    /// trace store (and the step memo, when this simulator is cached).
+    pub fn model_step_cost(&self, id: ModelId, opts: OptFlags) -> Cost {
+        match &self.cache {
+            Some(cache) => cache.step_cost(&self.accelerator, id, opts),
+            None => {
+                let trace = super::cache::interned_trace(id);
+                self.step_cost(&trace, opts)
             }
-            prev = Some((unit, cost));
-            total = total.then(c);
         }
-        total
     }
 
     /// Run a full model generation (all timesteps).
     pub fn run_model(&self, spec: &ModelSpec, opts: OptFlags) -> ModelRun {
         let trace = spec.trace();
         let step = self.step_cost(&trace, opts);
-        let total = step.repeat(spec.timesteps as u64);
+        self.finish_run(spec, opts, step)
+    }
+
+    /// Run a full generation of a zoo model by id — like [`run_model`]
+    /// but through the interned trace store, so the hot DSE/serving
+    /// paths never rebuild a trace.
+    ///
+    /// [`run_model`]: Simulator::run_model
+    pub fn run_model_id(&self, id: ModelId, opts: OptFlags) -> ModelRun {
+        let spec = ModelSpec::get(id);
+        let step = self.model_step_cost(id, opts);
+        self.finish_run(&spec, opts, step)
+    }
+
+    fn finish_run(&self, spec: &ModelSpec, opts: OptFlags, step: Cost) -> ModelRun {
         ModelRun {
             model: spec.id,
             opts,
             step,
-            total,
+            total: step.repeat(spec.timesteps as u64),
             timesteps: spec.timesteps,
             bit_width: self.params.bit_width,
         }
     }
 
     /// Per-layer cost breakdown (name, cost) — the profiling hook used by
-    /// the perf harness and the ablation benches.
-    pub fn breakdown(&self, trace: &[LayerInstance], opts: OptFlags) -> Vec<(String, Cost)> {
+    /// the perf harness and the ablation benches. Names are borrowed from
+    /// the trace (no per-call `String` clones).
+    pub fn breakdown<'t>(
+        &self,
+        trace: &'t [LayerInstance],
+        opts: OptFlags,
+    ) -> Vec<(&'t str, Cost)> {
         trace
             .iter()
-            .map(|l| (l.name.clone(), self.layer_cost(l, opts)))
+            .map(|l| (l.name.as_str(), self.layer_cost(l, opts)))
             .collect()
     }
 }
 
+/// Price one layer kind on `acc` under `p` — the single pricing routine
+/// both the cached and uncached paths share, which is what makes
+/// memoized results bit-identical to uncached ones.
+pub(crate) fn raw_layer_cost(
+    acc: &Accelerator,
+    p: &DeviceParams,
+    kind: &LayerKind,
+    opts: OptFlags,
+) -> Cost {
+    match *kind {
+        LayerKind::Conv2d { .. } => {
+            let gemm = conv_to_gemm(kind).expect("conv lowers to gemm");
+            acc.residual.gemm_cost(&gemm, p, opts)
+        }
+        LayerKind::Linear { in_features, out_features, tokens } => acc
+            .residual
+            .gemm_cost(&Gemm::dense(tokens, in_features, out_features), p, opts),
+        LayerKind::Attention { seq, d_model, context_dim, context_seq, heads } => {
+            let dims = if context_dim == d_model && context_seq == seq {
+                AttentionDims::self_attn(seq, d_model, heads)
+            } else {
+                AttentionDims::cross_attn(seq, d_model, heads, context_dim, context_seq)
+            };
+            acc.mha.mha_cost(heads, &dims, p, opts)
+        }
+        LayerKind::GroupNorm { elements, groups, .. } => {
+            acc.residual.norm_cost(elements, groups, p)
+        }
+        LayerKind::Swish { elements } => acc.residual.swish_cost(elements, p, opts),
+        LayerKind::ResidualAdd { elements } => acc.residual.residual_add_cost(elements, p),
+    }
+}
+
+/// Fold per-layer `(runs-on-MHA-unit, cost)` pairs into a step cost,
+/// applying the inter-block pipelining overlap credit when enabled.
+/// Shared (bit-for-bit) by [`Simulator::step_cost`] and the
+/// [`CostCache`] step memo.
+pub(crate) fn fold_step_cost<I>(costs: I, opts: OptFlags) -> Cost
+where
+    I: Iterator<Item = (bool, Cost)>,
+{
+    if !opts.pipelined {
+        return costs.map(|(_, c)| c).sum();
+    }
+    // Inter-block pipelining: when execution alternates units, the
+    // earlier layer's tail overlaps the later layer's head. Credit
+    // min(latency_i, latency_{i+1}) · OVERLAP for unit switches.
+    const OVERLAP: f64 = 0.65;
+    let mut total = Cost::ZERO;
+    let mut prev: Option<(bool, Cost)> = None;
+    for (unit, cost) in costs {
+        let mut c = cost;
+        if let Some((prev_unit, prev_cost)) = prev {
+            if prev_unit != unit {
+                let hidden = prev_cost.latency_s.min(c.latency_s) * OVERLAP;
+                c.latency_s -= hidden;
+            }
+        }
+        prev = Some((unit, cost));
+        total = total.then(c);
+    }
+    total
+}
+
 /// Does this layer execute on the MHA unit?
 fn is_mha_layer(layer: &LayerInstance) -> bool {
-    matches!(layer.kind, LayerKind::Attention { .. })
+    is_mha_kind(&layer.kind)
+}
+
+/// Does this layer kind execute on the MHA unit?
+pub(crate) fn is_mha_kind(kind: &LayerKind) -> bool {
+    matches!(kind, LayerKind::Attention { .. })
 }
 
 #[cfg(test)]
@@ -180,6 +270,17 @@ mod tests {
     }
 
     #[test]
+    fn run_model_id_matches_run_model() {
+        for s in [Simulator::paper_optimal(), Simulator::paper_cached()] {
+            for id in ModelId::ALL {
+                let by_id = s.run_model_id(id, OptFlags::ALL);
+                let by_spec = s.run_model(&ModelSpec::get(id), OptFlags::ALL);
+                assert_eq!(by_id, by_spec, "{:?}", id);
+            }
+        }
+    }
+
+    #[test]
     fn sparsity_helps_models_with_transposed_convs() {
         let s = sim();
         for id in ModelId::ALL {
@@ -222,5 +323,8 @@ mod tests {
         let trace = ModelSpec::get(ModelId::DdpmCifar10).trace();
         let bd = s.breakdown(&trace, OptFlags::ALL);
         assert_eq!(bd.len(), trace.len());
+        for ((name, _), layer) in bd.iter().zip(&trace) {
+            assert_eq!(*name, layer.name.as_str());
+        }
     }
 }

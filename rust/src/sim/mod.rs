@@ -7,8 +7,10 @@
 //! per-step cost is computed once and scaled by the timestep count — the
 //! UNet is identical at every denoising step.
 
+pub mod cache;
 pub mod engine;
 pub mod report;
 
+pub use cache::{interned_trace, CacheStats, CostCache};
 pub use engine::Simulator;
 pub use report::{ModelRun, PlatformResult};

@@ -6,7 +6,11 @@
 //! and what Table I needs (parameter counts).
 
 /// Operation classes the DiffLight architecture distinguishes.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Copy + Eq + Hash` because the kind doubles as the *structural
+/// signature* in [`crate::sim::cache`]'s cost memo: two layers with equal
+/// kinds are guaranteed to price identically on the same accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     /// 2-D convolution, lowered to GEMM via im2col.
     Conv2d {

@@ -32,6 +32,17 @@ impl ModelId {
         ModelId::StableDiffusion,
     ];
 
+    /// Dense position of this model in [`ModelId::ALL`] (used by the
+    /// interned-trace store in [`crate::sim::cache`]).
+    pub fn index(&self) -> usize {
+        match self {
+            ModelId::DdpmCifar10 => 0,
+            ModelId::LdmChurches => 1,
+            ModelId::LdmBeds => 2,
+            ModelId::StableDiffusion => 3,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             ModelId::DdpmCifar10 => "DDPM",

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Perf-trajectory harness: times the paper DSE sweep (memoized vs the
+# uncached reference) and a 10k-request fleet drain (DeepCache reuse on
+# vs off), asserting the ISSUE 2 targets (>=5x DSE, >=1.5x fleet
+# throughput at K=3) and writing BENCH_sim.json at the repo root.
+#
+# Usage: scripts/bench.sh [--smoke]
+#   --smoke   1-iteration miniature (what scripts/verify.sh runs) so the
+#             harness stays cheap enough for CI.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+cargo bench --bench sim_hot_path -- "$@"
+
+echo "bench: wrote $(pwd)/BENCH_sim.json"

@@ -11,6 +11,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== bench smoke (sim_hot_path --smoke) =="
+# 1-iteration miniature of the perf harness so it cannot bit-rot; also
+# re-checks cached-vs-uncached bit-identity and the K=3 reuse speedup.
+cargo bench --bench sim_hot_path -- --smoke
+
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
 if cargo fmt --version >/dev/null 2>&1; then
