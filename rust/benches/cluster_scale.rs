@@ -1,4 +1,7 @@
-//! Scale-out sweep: fleet serving throughput for devices ∈ {1, 2, 4, 8}.
+//! Scale-out sweep: fleet serving throughput for devices ∈ {1, 2, 4, 8},
+//! plus the scheduler-scaling sweep (devices ∈ {1, 4, 16, 64, 256})
+//! comparing the heap/index event core against the retained O(N)
+//! reference loop in host-side scheduler events/sec.
 //!
 //! Serves the same synthetic burst through each fleet size and reports
 //! simulated aggregate throughput, latency percentiles, utilization and
@@ -6,6 +9,10 @@
 //! sweep as JSON (`artifacts/cluster_scale.json`) via `util::json` so
 //! bench trajectory files can track scale-out numbers, and times the
 //! scheduler itself (host-side) with the shared harness.
+//!
+//! `--devices-sweep` (what `scripts/bench.sh --devices-sweep` passes)
+//! runs the full {1, 4, 16, 64, 256} scheduler-scaling sweep; without it
+//! the sweep stops at 64 devices to keep ad-hoc runs quick.
 
 #[path = "harness.rs"]
 mod harness;
@@ -21,6 +28,10 @@ const DEVICE_SWEEP: [usize; 4] = [1, 2, 4, 8];
 const REUSE_SWEEP: [usize; 4] = [1, 2, 3, 4];
 const REQUESTS: usize = 64;
 const STEPS: usize = 20;
+
+/// Scheduler-scaling sweep over the shared fleet-scale workload
+/// (`harness::fleet_scale_time_core`, same points as `sim_hot_path`).
+const SCALE_DEVICES: [usize; 5] = [1, 4, 16, 64, 256];
 
 fn run_fleet(devices: usize, reuse_interval: usize) -> difflight::cluster::ClusterOutcome {
     let mut cluster = Cluster::simulated(ClusterConfig {
@@ -105,12 +116,54 @@ fn main() {
         );
     }
 
+    // ---- scheduler-scaling sweep: heap core vs reference loop ----
+    let full_sweep = std::env::args().any(|a| a == "--devices-sweep");
+    let scale_devices: Vec<usize> = SCALE_DEVICES
+        .iter()
+        .copied()
+        .filter(|&d| full_sweep || d <= 64)
+        .collect();
+    harness::section(&format!(
+        "scheduler scaling: devices in {scale_devices:?}, {} reqs/device x {} DDIM steps, \
+         events/sec (host)",
+        harness::FLEET_SCALE_REQS_PER_DEVICE,
+        harness::FLEET_SCALE_STEPS,
+    ));
+    let mut scale_sweep = Vec::new();
+    println!(
+        "{:>8} {:>10} {:>18} {:>18} {:>9}",
+        "devices", "events", "heap ev/s", "reference ev/s", "speedup"
+    );
+    for &devices in &scale_devices {
+        let iters = if devices >= 64 { 3 } else { 5 };
+        let (events, heap_s, heap_eps) = harness::fleet_scale_time_core(devices, iters, false);
+        let (ref_events, ref_s, ref_eps) = harness::fleet_scale_time_core(devices, iters, true);
+        assert_eq!(events, ref_events, "event counts must match (bit-identity)");
+        let speedup = heap_eps / ref_eps;
+        println!(
+            "{:>8} {:>10} {:>18.0} {:>18.0} {:>8.1}x",
+            devices, events, heap_eps, ref_eps, speedup
+        );
+        scale_sweep.push(
+            Json::obj()
+                .set("devices", devices)
+                .set("requests", devices * harness::FLEET_SCALE_REQS_PER_DEVICE)
+                .set("events", events)
+                .set("heap_min_s", heap_s)
+                .set("reference_min_s", ref_s)
+                .set("heap_events_per_s", heap_eps)
+                .set("reference_events_per_s", ref_eps)
+                .set("speedup", speedup),
+        );
+    }
+
     let report = Json::obj()
         .set("bench", "cluster_scale")
         .set("requests", REQUESTS)
         .set("steps", STEPS)
         .set("sweep", Json::Arr(sweep))
-        .set("reuse_sweep", Json::Arr(reuse_sweep));
+        .set("reuse_sweep", Json::Arr(reuse_sweep))
+        .set("scheduler_scaling", Json::Arr(scale_sweep));
     if std::fs::create_dir_all("artifacts").is_ok() {
         let path = "artifacts/cluster_scale.json";
         std::fs::write(path, report.to_string_pretty()).expect("write sweep report");

@@ -77,3 +77,69 @@ pub fn black_box<T>(x: T) -> T {
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
+
+// ---------------------------------------------------------------------
+// Fleet-scale scheduler-scaling workload, shared by `cluster_scale` and
+// `sim_hot_path` so both sweeps measure the same points: small samples
+// (8 elems) and short DDIM generations make host-side event processing
+// — not executor compute — dominate, so scheduler overhead is what gets
+// measured.
+// ---------------------------------------------------------------------
+
+pub const FLEET_SCALE_ELEMS: usize = 8;
+pub const FLEET_SCALE_STEPS: usize = 12;
+pub const FLEET_SCALE_REQS_PER_DEVICE: usize = 32;
+
+/// Time one scheduler core (heap event core, or the retained O(N)
+/// reference loop) on the scaling workload at a fleet size; returns
+/// `(events, min host seconds, events/sec at the min)`. Min-of-N rather
+/// than the mean: this ratio gates CI (`scripts/verify.sh` smoke-runs
+/// the 64-device point), so it must shrug off transient host load.
+pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (u64, f64, f64) {
+    use difflight::arch::cost::Cost;
+    use difflight::cluster::{
+        synthetic_workload, ClusterConfig, ReferenceScheduler, ShardPolicy, SimExecutor,
+        StepScheduler,
+    };
+    use difflight::coordinator::request::SamplerKind;
+    use difflight::runtime::manifest::NoiseSchedule;
+
+    let cfg = ClusterConfig {
+        devices,
+        capacity: 4,
+        max_queue: 16,
+        max_backlog: usize::MAX,
+        policy: ShardPolicy::LeastLoaded,
+        ..ClusterConfig::default()
+    };
+    let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+    let schedule = NoiseSchedule::linear(100);
+    let workload = synthetic_workload(
+        devices * FLEET_SCALE_REQS_PER_DEVICE,
+        13,
+        SamplerKind::Ddim { steps: FLEET_SCALE_STEPS },
+        1e-5,
+    );
+    let mut events = 0u64;
+    let name = format!(
+        "{}({devices} dev).serve({} reqs)",
+        if reference { "reference" } else { "heap" },
+        workload.len()
+    );
+    let timing = if reference {
+        let mut s = ReferenceScheduler::new(&cfg, cost, schedule, FLEET_SCALE_ELEMS, 8);
+        bench(&name, iters, || {
+            let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
+            events = out.metrics.sched_events;
+            black_box(out);
+        })
+    } else {
+        let mut s = StepScheduler::new(&cfg, cost, schedule, FLEET_SCALE_ELEMS, 8);
+        bench(&name, iters, || {
+            let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
+            events = out.metrics.sched_events;
+            black_box(out);
+        })
+    };
+    (events, timing.min_s, events as f64 / timing.min_s)
+}

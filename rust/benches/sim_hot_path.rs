@@ -13,11 +13,18 @@
 //! 2. **Cluster drain** — a 10k-request fleet drain without step reuse
 //!    vs with DeepCache `--reuse-interval 3`. Asserts samples are
 //!    bit-identical and the simulated fleet throughput is ≥1.5x.
+//! 3. **Fleet scale** — scheduler events/sec for the heap/index event
+//!    core vs the retained O(events × devices) reference loop across
+//!    devices ∈ {1, 4, 16, 64, 256}. Asserts the heap core beats the
+//!    reference ≥5x at the 256-device point (≥1.2x at 64 devices in
+//!    smoke mode, which sweeps {1, 16, 64}).
 //!
-//! `--smoke` runs a 1-iteration miniature of everything (tiny design
-//! space, 200 requests) so `scripts/verify.sh` can keep the harness
-//! from bit-rotting without paying full bench time. Ratio assertions
-//! still run in smoke mode.
+//! `--smoke` runs a miniature of everything (tiny design space, 200
+//! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
+//! harness from bit-rotting without paying full bench time. Ratio
+//! assertions still run in smoke mode (the smoke fleet-scale gate is
+//! the 64-device point at min-of-2 timing, so scheduler-scaling
+//! regressions fail CI without load-spike flakiness).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -35,7 +42,12 @@
 //!     "reuse_k3":  {"throughput_samples_per_s": x, "makespan_s": x,
 //!                   "host_drain_s": x, "reuse_hits": N,
 //!                   "reuse_misses": N, "reuse_hit_rate": x},
-//!     "throughput_ratio": t_k3 / t_k1 }
+//!     "throughput_ratio": t_k3 / t_k1 },
+//!   "fleet_scale": { "steps": N, "reqs_per_device": N,
+//!     "sweep": [ { "devices": N, "requests": N, "events": N,
+//!                  "heap_events_per_s": x, "reference_events_per_s": x,
+//!                  "speedup": x } ],
+//!     "top_devices": N, "speedup_at_top": x }
 //! }
 //! ```
 
@@ -189,6 +201,60 @@ fn main() {
         "reuse K=3 must lift simulated fleet throughput >= 1.5x (got {ratio:.2}x)"
     );
 
+    // ---- (c) fleet scale: heap event core vs O(N) reference loop ----
+    // Smoke sweeps up to the 64-device point (the CI gate, min-of-2 so
+    // transient host load cannot flip it); full mode extends to 256
+    // devices, where the >= 5x target is asserted.
+    let (scale_devices, scale_iters): (Vec<usize>, usize) = if smoke {
+        (vec![1, 16, 64], 2)
+    } else {
+        (vec![1, 4, 16, 64, 256], 3)
+    };
+    harness::section(&format!(
+        "fleet scale ({mode}): devices in {scale_devices:?}, {} reqs/device x {} DDIM steps, \
+         scheduler events/sec (host)",
+        harness::FLEET_SCALE_REQS_PER_DEVICE,
+        harness::FLEET_SCALE_STEPS,
+    ));
+    let mut scale_sweep = Vec::new();
+    let mut top_speedup = 0.0f64;
+    let top_devices = *scale_devices.last().expect("non-empty sweep");
+    for &devices in &scale_devices {
+        let (events, _, heap_eps) = harness::fleet_scale_time_core(devices, scale_iters, false);
+        let (ref_events, _, ref_eps) = harness::fleet_scale_time_core(devices, scale_iters, true);
+        assert_eq!(events, ref_events, "event counts must match (bit-identity)");
+        let speedup = heap_eps / ref_eps;
+        if devices == top_devices {
+            top_speedup = speedup;
+        }
+        println!(
+            "{devices:>4} devices: heap {heap_eps:>12.0} ev/s, reference {ref_eps:>12.0} ev/s \
+             ({speedup:.1}x)"
+        );
+        scale_sweep.push(
+            Json::obj()
+                .set("devices", devices)
+                .set("requests", devices * harness::FLEET_SCALE_REQS_PER_DEVICE)
+                .set("events", events)
+                .set("heap_events_per_s", heap_eps)
+                .set("reference_events_per_s", ref_eps)
+                .set("speedup", speedup),
+        );
+    }
+    if smoke {
+        assert!(
+            top_speedup >= 1.2,
+            "heap core must beat the reference loop >= 1.2x at {top_devices} devices \
+             (got {top_speedup:.2}x)"
+        );
+    } else {
+        assert!(
+            top_speedup >= 5.0,
+            "heap core must beat the reference loop >= 5x at {top_devices} devices \
+             (got {top_speedup:.2}x)"
+        );
+    }
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -221,6 +287,15 @@ fn main() {
                 .set("no_reuse", cluster_json(&k1, k1_host))
                 .set("reuse_k3", cluster_json(&k3, k3_host))
                 .set("throughput_ratio", ratio),
+        )
+        .set(
+            "fleet_scale",
+            Json::obj()
+                .set("steps", harness::FLEET_SCALE_STEPS)
+                .set("reqs_per_device", harness::FLEET_SCALE_REQS_PER_DEVICE)
+                .set("sweep", Json::Arr(scale_sweep))
+                .set("top_devices", top_devices)
+                .set("speedup_at_top", top_speedup),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

@@ -31,6 +31,12 @@ use crate::arch::cost::Cost;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct DeviceId(pub usize);
 
+impl DeviceId {
+    /// Sentinel for results that never touched a device (e.g. zero-step
+    /// requests, which complete at admission with their initial noise).
+    pub const NONE: DeviceId = DeviceId(usize::MAX);
+}
+
 /// DeepCache-style step-reuse schedule: full UNet every `interval`
 /// steps, shallow (cache-hit) steps in between.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -112,10 +118,12 @@ impl Device {
         assert!(step_base.latency_s > 0.0, "step cost must have positive latency");
         assert!(reuse.interval >= 1, "reuse interval must be >= 1");
         assert!(
-            reuse.shallow_frac > 0.0 && reuse.shallow_frac <= 1.0,
-            "shallow step fraction must be in (0, 1]"
+            !reuse.enabled() || (reuse.shallow_frac > 0.0 && reuse.shallow_frac <= 1.0),
+            "shallow step fraction must be in (0, 1] when reuse is enabled"
         );
-        let f = reuse.shallow_frac;
+        // With reuse off the shallow path is unreachable; ignore the frac
+        // (callers may leave it at any value when interval == 1).
+        let f = if reuse.enabled() { reuse.shallow_frac } else { 1.0 };
         let step_shallow = Cost {
             latency_s: step_base.latency_s * f,
             energy_j: step_base.energy_j * f,
@@ -352,6 +360,30 @@ mod tests {
         assert_eq!(d.reuse_misses, 0);
         // Cycle rewound: next step is full again.
         assert!(d.next_step_full(false));
+    }
+
+    #[test]
+    fn reuse_off_ignores_out_of_range_frac() {
+        // With interval 1 the shallow path is unreachable, so a config
+        // that leaves the frac at a nonsense value must not panic.
+        let mut d = Device::new(
+            0,
+            Cost::new(1e-3, 2e-3, 1_000_000, 10),
+            4,
+            8,
+            0.25,
+            ReuseSchedule::every(1, 0.0),
+        );
+        assert!(d.next_step_full(false));
+        d.begin_step(0.0, 1, true);
+        d.finish_step();
+        assert_eq!(d.reuse_hits, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shallow step fraction")]
+    fn reuse_on_rejects_zero_frac() {
+        Device::new(0, Cost::new(1e-3, 2e-3, 1, 1), 1, 1, 0.0, ReuseSchedule::every(2, 0.0));
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::util::stats;
 use super::device::Device;
 
 /// Per-device accounting snapshot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceMetrics {
     pub id: usize,
     pub steps_executed: u64,
@@ -84,8 +84,9 @@ impl DeviceMetrics {
     }
 }
 
-/// Aggregate metrics for a whole fleet serving run.
-#[derive(Debug, Clone, Default)]
+/// Aggregate metrics for a whole fleet serving run. `PartialEq` so the
+/// heap event core can be asserted bit-identical to the reference loop.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetMetrics {
     pub devices: Vec<DeviceMetrics>,
     /// End-to-end simulated latency per completed request.
@@ -98,6 +99,10 @@ pub struct FleetMetrics {
     pub samples_completed: u64,
     pub rejected: u64,
     pub bit_width: u32,
+    /// Discrete events the scheduler processed in this serving window
+    /// (arrival bursts + step completions) — the denominator for the
+    /// scheduler-throughput (events/sec) benches.
+    pub sched_events: u64,
 }
 
 impl FleetMetrics {
@@ -176,6 +181,7 @@ impl FleetMetrics {
             .set("samples", self.samples_completed)
             .set("rejected", self.rejected)
             .set("makespan_s", self.makespan_s)
+            .set("sched_events", self.sched_events)
             .set("throughput_samples_per_s", self.throughput_samples_per_s())
             .set("latency_p50_s", self.latency_p50_s())
             .set("latency_p99_s", self.latency_p99_s())

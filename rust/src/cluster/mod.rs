@@ -11,20 +11,26 @@
 //! * [`device`] — device handle: batch-slot capacity, simulated clock,
 //!   per-step cost from [`crate::arch::cost`].
 //! * [`router`] — shard policies: round-robin, least-loaded,
-//!   sampler-signature affinity.
-//! * [`scheduler`] — the step-interleaved event loop (continuous
-//!   batching) over [`crate::util::threadpool`].
+//!   sampler-signature affinity; both the stateless snapshot router and
+//!   the incrementally maintained O(log N) [`RouterIndex`].
+//! * [`scheduler`] — the heap-based discrete-event core (O(log N) per
+//!   event: completion heap, router index, dirty-set kicks, zero-alloc
+//!   fused-step buffers) over [`crate::util::threadpool`].
+//! * [`reference`] — the retained O(events × devices) loop, the
+//!   bit-identity oracle and scaling baseline for the event core.
 //! * [`metrics`] — per-device + fleet p50/p99 latency, EPB and GOPS
 //!   roll-ups reusing [`crate::util::stats`].
 
 pub mod device;
 pub mod metrics;
+pub mod reference;
 pub mod router;
 pub mod scheduler;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
 pub use metrics::{DeviceMetrics, FleetMetrics};
-pub use router::{DeviceLoad, Router, ShardPolicy};
+pub use reference::ReferenceScheduler;
+pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
 pub use scheduler::{
     ClusterOutcome, ClusterRequest, ClusterResult, SimExecutor, StepExecutor, StepScheduler,
 };

@@ -1,0 +1,385 @@
+//! The retained O(events × devices) scheduler loop, kept as the
+//! bit-identity oracle for the heap/index event core.
+//!
+//! This is the pre-rewrite [`super::scheduler::StepScheduler`] event
+//! loop, frozen: every event scans all devices for the next completion
+//! (`min_by` over `busy_until`), every routing decision rebuilds a fresh
+//! `loads()` snapshot, `kick_idle` sweeps the whole fleet, and the
+//! per-row sampler fan-out boxes one pooled job (plus an `eps` copy) per
+//! row. Randomized tests in `scheduler.rs` assert the new core produces
+//! bit-identical samples, timings and metrics; `benches/cluster_scale.rs`
+//! and `benches/sim_hot_path.rs` use it as the scaling baseline (the
+//! `fleet_scale` harness asserts the heap core beats it ≥5x at 256
+//! devices).
+//!
+//! Behavioral changes are mirrored here only when they change scheduler
+//! *semantics* (e.g. zero-step requests completing at admission), never
+//! for performance — that is the whole point of keeping it.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::request::{RequestId, SamplerKind};
+use crate::runtime::manifest::NoiseSchedule;
+use crate::util::rng::XorShift;
+use crate::util::threadpool::ThreadPool;
+
+use super::device::{Device, DeviceId, ReuseSchedule};
+use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::router::{DeviceLoad, Router};
+use super::scheduler::{
+    zero_step_result, ClusterOutcome, ClusterRequest, ClusterResult, Slot, SlotSampler,
+    StepExecutor,
+};
+use super::ClusterConfig;
+
+/// The reference fleet scheduler: devices + stateless router + O(N)
+/// event loop. Same public surface as [`super::StepScheduler`].
+pub struct ReferenceScheduler {
+    devices: Vec<Device>,
+    router: Router,
+    pool: ThreadPool,
+    schedule: NoiseSchedule,
+    elems: usize,
+    bit_width: u32,
+    resident: Vec<Vec<Slot>>,
+    queued: Vec<VecDeque<Slot>>,
+    backlog: VecDeque<Slot>,
+    max_backlog: usize,
+    /// Linear-scan sampler cache (the retired pre-keyed-map form).
+    sampler_cache: Vec<(SamplerKind, SlotSampler)>,
+    work_stealing: bool,
+    events_processed: u64,
+}
+
+impl ReferenceScheduler {
+    pub fn new(
+        config: &ClusterConfig,
+        step_cost: crate::arch::cost::Cost,
+        schedule: NoiseSchedule,
+        elems: usize,
+        bit_width: u32,
+    ) -> Self {
+        assert!(config.devices >= 1, "cluster needs at least one device");
+        let reuse = ReuseSchedule::every(
+            config.reuse_interval.max(1),
+            config.reuse_shallow_frac,
+        );
+        let devices: Vec<Device> = (0..config.devices)
+            .map(|i| {
+                Device::new(
+                    i,
+                    step_cost,
+                    config.capacity,
+                    config.max_queue,
+                    config.batch_marginal,
+                    reuse,
+                )
+            })
+            .collect();
+        Self {
+            resident: vec![Vec::new(); devices.len()],
+            queued: vec![VecDeque::new(); devices.len()],
+            devices,
+            router: Router::new(config.policy),
+            pool: ThreadPool::default_size(),
+            schedule,
+            elems,
+            bit_width,
+            backlog: VecDeque::new(),
+            max_backlog: config.max_backlog,
+            sampler_cache: Vec::new(),
+            work_stealing: config.work_stealing,
+            events_processed: 0,
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Occupancy snapshot for the router — rebuilt (and reallocated) on
+    /// every routing decision; the O(N) cost the index replaces.
+    fn loads(&self) -> Vec<DeviceLoad> {
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceLoad {
+                resident: self.resident[i].len(),
+                queued: self.queued[i].len(),
+                capacity: d.capacity,
+                max_queue: d.max_queue,
+            })
+            .collect()
+    }
+
+    /// Serve a workload to completion (reference semantics).
+    pub fn serve(
+        &mut self,
+        mut requests: Vec<ClusterRequest>,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
+        requests.sort_by(|a, b| {
+            a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
+        });
+        let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
+        for d in &mut self.devices {
+            d.reset_accounting();
+        }
+        self.events_processed = 0;
+        let mut pending = requests.into_iter().peekable();
+        let mut results: Vec<ClusterResult> = Vec::new();
+        let mut rejected: Vec<RequestId> = Vec::new();
+
+        loop {
+            let next_arrival = pending.peek().map(|r| r.arrival_s);
+            let next_completion = self
+                .devices
+                .iter()
+                .filter_map(|d| d.busy_until().map(|t| (t, d.id.0)))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+            let take_arrival = match (next_arrival, next_completion) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(at), Some((ct, _))) => at <= ct,
+            };
+            if take_arrival {
+                let at = next_arrival.expect("arrival selected");
+                while pending.peek().is_some_and(|r| r.arrival_s == at) {
+                    let req = pending.next().expect("peeked");
+                    self.admit(req, &mut rejected, &mut results);
+                }
+                self.kick_idle(at, executor)?;
+            } else {
+                let (ct, di) = next_completion.expect("completion selected");
+                self.complete(di, ct, executor, &mut results)?;
+            }
+            self.events_processed += 1;
+        }
+
+        rejected.extend(self.backlog.drain(..).map(|s| s.req.id));
+
+        let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        let mut metrics = FleetMetrics {
+            devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
+            makespan_s: (last_finish_s - first_arrival_s).max(0.0),
+            rejected: rejected.len() as u64,
+            bit_width: self.bit_width,
+            sched_events: self.events_processed,
+            ..Default::default()
+        };
+        results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
+        for r in &results {
+            metrics.record_completion(r.latency_s(), r.queue_s());
+        }
+        Ok(ClusterOutcome { results, rejected, metrics })
+    }
+
+    fn admit(
+        &mut self,
+        req: ClusterRequest,
+        rejected: &mut Vec<RequestId>,
+        results: &mut Vec<ClusterResult>,
+    ) {
+        if req.is_zero_step() {
+            results.push(zero_step_result(&req, self.elems));
+            return;
+        }
+        let loads = self.loads();
+        match self.router.route(req.sampler, &loads) {
+            Some(did) => {
+                let slot = self.make_slot(req);
+                self.queued[did.0].push_back(slot);
+            }
+            None if self.backlog.len() < self.max_backlog => {
+                let slot = self.make_slot(req);
+                self.backlog.push_back(slot);
+            }
+            None => rejected.push(req.id),
+        }
+    }
+
+    fn make_slot(&mut self, req: ClusterRequest) -> Slot {
+        let sampler = self.sampler_for(req.sampler);
+        Slot::new(req, sampler, self.elems)
+    }
+
+    fn sampler_for(&mut self, kind: SamplerKind) -> SlotSampler {
+        if let Some((_, s)) = self.sampler_cache.iter().find(|(k, _)| *k == kind) {
+            return s.clone();
+        }
+        let s = SlotSampler::build(kind, &self.schedule);
+        self.sampler_cache.push((kind, s.clone()));
+        s
+    }
+
+    fn drain_backlog(&mut self) {
+        while let Some(slot) = self.backlog.front() {
+            let loads = self.loads();
+            match self.router.route(slot.req.sampler, &loads) {
+                Some(did) => {
+                    let slot = self.backlog.pop_front().expect("peeked");
+                    self.queued[did.0].push_back(slot);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Full-fleet sweep at every boundary (the O(N) kick).
+    fn kick_idle(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
+        for di in 0..self.devices.len() {
+            if !self.devices[di].is_idle() {
+                continue;
+            }
+            if self.work_stealing
+                && self.queued[di].is_empty()
+                && self.resident[di].is_empty()
+            {
+                self.steal_into(di);
+            }
+            if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
+                self.start_step(di, now_s, executor)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Donor selection by full scan, ties toward the lowest donor id.
+    fn steal_into(&mut self, di: usize) {
+        while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
+            let donor = (0..self.devices.len())
+                .filter(|&j| j != di && !self.devices[j].is_idle() && !self.queued[j].is_empty())
+                .max_by_key(|&j| (self.queued[j].len(), std::cmp::Reverse(j)));
+            let Some(j) = donor else { break };
+            let slot = self.queued[j].pop_front().expect("donor queue non-empty");
+            self.queued[di].push_back(slot);
+        }
+    }
+
+    fn complete(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        results: &mut Vec<ClusterResult>,
+    ) -> crate::Result<()> {
+        self.devices[di].finish_step();
+        let mut still_resident = Vec::with_capacity(self.resident[di].len());
+        for slot in self.resident[di].drain(..) {
+            if slot.step_index >= slot.timesteps.len() {
+                self.devices[di].samples_completed += 1;
+                let steps = slot.timesteps.len();
+                results.push(ClusterResult {
+                    id: slot.req.id,
+                    device: DeviceId(di),
+                    sample: slot.x,
+                    steps,
+                    arrival_s: slot.req.arrival_s,
+                    first_step_s: slot.first_step_s.unwrap_or(slot.req.arrival_s),
+                    finish_s: now_s,
+                    mean_batch: slot.occupancy_sum as f64 / steps.max(1) as f64,
+                    full_steps: slot.full_steps as usize,
+                });
+            } else {
+                still_resident.push(slot);
+            }
+        }
+        self.resident[di] = still_resident;
+        self.drain_backlog();
+        self.kick_idle(now_s, executor)
+    }
+
+    fn start_step(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<()> {
+        while self.resident[di].len() < self.devices[di].capacity {
+            let Some(mut slot) = self.queued[di].pop_front() else { break };
+            slot.first_step_s = Some(now_s);
+            self.resident[di].push(slot);
+        }
+        let k = self.resident[di].len();
+        if k == 0 {
+            return Ok(());
+        }
+
+        let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
+        let full = self.devices[di].next_step_full(force_full);
+
+        // Fresh x/t/eps allocations every fused step (the cost the
+        // zero-alloc path removes).
+        let elems = self.elems;
+        let mut x = Vec::with_capacity(k * elems);
+        let mut t = Vec::with_capacity(k);
+        for slot in &self.resident[di] {
+            x.extend_from_slice(&slot.x);
+            t.push(slot.timesteps[slot.step_index] as f32);
+        }
+        let mut eps = Vec::new();
+        executor.predict_noise(DeviceId(di), &x, &t, elems, &mut eps)?;
+        anyhow::ensure!(
+            eps.len() == k * elems,
+            "executor returned {} elems, want {}",
+            eps.len(),
+            k * elems
+        );
+
+        // One boxed pool job per row, with a copied eps slice per row.
+        let items: Vec<(Vec<f32>, Vec<f32>, SlotSampler, usize, XorShift)> = self.resident[di]
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                (
+                    std::mem::take(&mut slot.x),
+                    eps[i * elems..(i + 1) * elems].to_vec(),
+                    slot.sampler.clone(),
+                    slot.step_index,
+                    slot.rng.clone(),
+                )
+            })
+            .collect();
+        let updated = self.pool.map(items, |(mut x, eps, sampler, idx, mut rng)| {
+            sampler.apply(idx, &mut x, &eps, &mut rng);
+            (x, rng)
+        });
+        for (slot, (x, rng)) in self.resident[di].iter_mut().zip(updated) {
+            slot.x = x;
+            slot.rng = rng;
+            slot.step_index += 1;
+            slot.occupancy_sum += k as u64;
+            slot.full_steps += full as u64;
+        }
+        self.devices[di].begin_step(now_s, k, full);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::cost::Cost;
+    use crate::cluster::SimExecutor;
+
+    #[test]
+    fn reference_loop_still_serves() {
+        let mut s = ReferenceScheduler::new(
+            &ClusterConfig { devices: 2, capacity: 4, max_queue: 64, ..ClusterConfig::default() },
+            Cost::new(1e-3, 2e-3, 1_000_000, 4),
+            NoiseSchedule::linear(100),
+            16,
+            8,
+        );
+        assert_eq!(s.device_count(), 2);
+        let reqs: Vec<ClusterRequest> = (0..6)
+            .map(|i| ClusterRequest::new(i, 100 + i, SamplerKind::Ddim { steps: 5 }, 0.0))
+            .collect();
+        let out = s.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 6);
+        assert!(out.rejected.is_empty());
+        assert!(out.metrics.sched_events > 0);
+    }
+}

@@ -13,8 +13,25 @@
 //! Admission control: a device is *full* when `resident + queued` reaches
 //! `capacity + max_queue`; when every device is full the router returns
 //! `None` and the caller must shed the request (backpressure).
+//!
+//! Two implementations share those semantics:
+//!
+//! * [`Router`] — stateless-per-call: every `route` scans a fresh
+//!   `&[DeviceLoad]` snapshot, O(N) per decision. Kept as the reference
+//!   the O(log N) index is property-tested against (and used by the
+//!   [`super::reference`] scheduler).
+//! * [`RouterIndex`] — incrementally maintained ordered structures
+//!   (occupancy-ordered set for least-loaded, non-full id set for
+//!   round-robin, a sampler-signature→home-device map for affinity, and
+//!   a donor set for work stealing), updated on admit/promote/complete
+//!   in O(log N). Routing decisions are **identical** to [`Router`] fed
+//!   a from-scratch snapshot (asserted by the property tests below).
+
+use std::cmp::Reverse;
+use std::collections::BTreeSet;
 
 use crate::coordinator::request::SamplerKind;
+use crate::util::fxhash::FxMap;
 
 use super::device::DeviceId;
 
@@ -49,7 +66,7 @@ impl ShardPolicy {
 }
 
 /// Occupancy snapshot of one device, as the router sees it.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DeviceLoad {
     pub resident: usize,
     pub queued: usize,
@@ -142,6 +159,174 @@ fn least_loaded(loads: &[DeviceLoad]) -> Option<usize> {
         .filter(|(_, l)| !l.is_full())
         .min_by_key(|(i, l)| (l.total(), *i))
         .map(|(i, _)| i)
+}
+
+/// Incrementally maintained routing index over the fleet: the scheduler
+/// reports every occupancy/busy transition through [`RouterIndex::set_counts`]
+/// / [`RouterIndex::set_busy`], and routing, backlog drain and donor
+/// selection become O(log N) ordered-set queries instead of O(N) scans
+/// over a rebuilt snapshot.
+#[derive(Debug, Clone)]
+pub struct RouterIndex {
+    policy: ShardPolicy,
+    rr_next: usize,
+    /// Per-device occupancy (the authoritative mirror of the scheduler's
+    /// `resident`/`queued` lengths).
+    loads: Vec<DeviceLoad>,
+    busy: Vec<bool>,
+    /// `(total, id)` over **non-full** devices; `first()` is the
+    /// least-loaded pick (ties → lowest id, matching [`least_loaded`]).
+    by_load: BTreeSet<(usize, usize)>,
+    /// Non-full device ids, for round-robin's circular "first non-full
+    /// at or after `rr_next`" query.
+    nonfull: BTreeSet<usize>,
+    /// `(queued, Reverse(id))` over **busy** devices with a non-empty
+    /// admission queue; `last()` is the work-stealing donor (most queued,
+    /// ties → lowest id, matching the reference `max_by_key`).
+    donors: BTreeSet<(usize, Reverse<usize>)>,
+    /// Affinity: sampler signature → home device (`signature % N` cached
+    /// so repeat signatures skip the hash).
+    home: FxMap<SamplerKind, usize>,
+}
+
+impl RouterIndex {
+    /// Build the index over an initial fleet snapshot.
+    pub fn new(policy: ShardPolicy, loads: Vec<DeviceLoad>) -> Self {
+        let mut idx = Self {
+            policy,
+            rr_next: 0,
+            busy: vec![false; loads.len()],
+            by_load: BTreeSet::new(),
+            nonfull: BTreeSet::new(),
+            donors: BTreeSet::new(),
+            home: FxMap::default(),
+            loads,
+        };
+        for d in 0..idx.loads.len() {
+            let l = idx.loads[d];
+            if !l.is_full() {
+                idx.by_load.insert((l.total(), d));
+                idx.nonfull.insert(d);
+            }
+        }
+        idx
+    }
+
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Reset occupancy/busy state for a fresh serving window while
+    /// preserving policy state that outlives a window (the round-robin
+    /// cursor and the affinity home map) — matching the stateless
+    /// [`Router`], whose rotation persists across windows.
+    pub fn reset_occupancy(&mut self, loads: Vec<DeviceLoad>) {
+        self.loads = loads;
+        self.busy = vec![false; self.loads.len()];
+        self.by_load.clear();
+        self.nonfull.clear();
+        self.donors.clear();
+        for d in 0..self.loads.len() {
+            let l = self.loads[d];
+            if !l.is_full() {
+                self.by_load.insert((l.total(), d));
+                self.nonfull.insert(d);
+            }
+        }
+    }
+
+    /// Current occupancy of one device.
+    pub fn load(&self, device: usize) -> DeviceLoad {
+        self.loads[device]
+    }
+
+    /// The full occupancy mirror (what a from-scratch snapshot would be).
+    pub fn loads(&self) -> &[DeviceLoad] {
+        &self.loads
+    }
+
+    /// Report a device's new `resident`/`queued` occupancy. O(log N).
+    pub fn set_counts(&mut self, device: usize, resident: usize, queued: usize) {
+        let old = self.loads[device];
+        let new = DeviceLoad { resident, queued, ..old };
+        if !old.is_full() {
+            self.by_load.remove(&(old.total(), device));
+            self.nonfull.remove(&device);
+        }
+        if !new.is_full() {
+            self.by_load.insert((new.total(), device));
+            self.nonfull.insert(device);
+        }
+        if self.busy[device] {
+            self.donors.remove(&(old.queued, Reverse(device)));
+            if new.queued > 0 {
+                self.donors.insert((new.queued, Reverse(device)));
+            }
+        }
+        self.loads[device] = new;
+    }
+
+    /// Report a device starting (`true`) or finishing (`false`) a fused
+    /// step. Only busy devices are eligible work-stealing donors (their
+    /// queued work is guaranteed to wait at least one full step).
+    pub fn set_busy(&mut self, device: usize, busy: bool) {
+        let q = self.loads[device].queued;
+        if busy && !self.busy[device] {
+            if q > 0 {
+                self.donors.insert((q, Reverse(device)));
+            }
+        } else if !busy && self.busy[device] {
+            self.donors.remove(&(q, Reverse(device)));
+        }
+        self.busy[device] = busy;
+    }
+
+    /// The work-stealing donor: the busy device with the most queued
+    /// requests (ties → lowest id), if any. O(log N).
+    pub fn max_donor(&self) -> Option<usize> {
+        self.donors.iter().next_back().map(|&(_, Reverse(d))| d)
+    }
+
+    /// Pick a device for a request, or `None` when every device is full.
+    /// Decision-for-decision identical to [`Router::route`] over a fresh
+    /// snapshot, in O(log N).
+    pub fn route(&mut self, sampler: SamplerKind) -> Option<DeviceId> {
+        if self.nonfull.is_empty() {
+            return None;
+        }
+        let pick = match self.policy {
+            ShardPolicy::RoundRobin => {
+                let i = self
+                    .nonfull
+                    .range(self.rr_next..)
+                    .next()
+                    .or_else(|| self.nonfull.iter().next())
+                    .copied()
+                    .expect("nonfull checked non-empty");
+                self.rr_next = (i + 1) % self.loads.len();
+                i
+            }
+            ShardPolicy::LeastLoaded => {
+                self.by_load.iter().next().expect("nonfull checked non-empty").1
+            }
+            ShardPolicy::Affinity => {
+                let n = self.loads.len();
+                let home = *self
+                    .home
+                    .entry(sampler)
+                    .or_insert_with(|| (sampler_signature(sampler) % n as u64) as usize);
+                // Stay home while the home device has free batch slots;
+                // spill to least-loaded once they're saturated (same rule
+                // as the stateless router).
+                if self.loads[home].total() < self.loads[home].capacity {
+                    home
+                } else {
+                    self.by_load.iter().next().expect("nonfull checked non-empty").1
+                }
+            }
+        };
+        Some(DeviceId(pick))
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +442,90 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn prop_index_agrees_with_snapshot_router() {
+        // Randomized admit/promote/complete/busy sequences: the
+        // incrementally maintained RouterIndex must agree at every step
+        // with (a) a from-scratch loads() snapshot, (b) the stateless
+        // Router fed that snapshot, and (c) a from-scratch donor scan.
+        crate::util::prop::forall("router index = snapshot router", 96, |g| {
+            let n = g.usize_in(1, 8);
+            let capacity = g.usize_in(1, 4);
+            let max_queue = g.usize_in(0, 4);
+            let policy = *g.choose(&[
+                ShardPolicy::RoundRobin,
+                ShardPolicy::LeastLoaded,
+                ShardPolicy::Affinity,
+            ]);
+            let blank = DeviceLoad { resident: 0, queued: 0, capacity, max_queue };
+            let mut index = RouterIndex::new(policy, vec![blank; n]);
+            let mut shadow = vec![blank; n];
+            let mut busy = vec![false; n];
+            // The stateless reference router, fed the same decision
+            // sequence so its round-robin cursor stays in lockstep.
+            let mut router = Router::new(policy);
+            for _ in 0..g.usize_in(4, 48) {
+                let sampler = if g.bool() {
+                    SamplerKind::Ddpm
+                } else {
+                    SamplerKind::Ddim { steps: g.usize_in(1, 50) }
+                };
+                match g.usize_in(0, 3) {
+                    // Admit: route through both, compare, apply.
+                    0 => {
+                        let want = router.route(sampler, &shadow);
+                        let got = index.route(sampler);
+                        assert_eq!(got, want, "{} diverged", policy.name());
+                        if let Some(DeviceId(d)) = got {
+                            shadow[d].queued += 1;
+                            index.set_counts(d, shadow[d].resident, shadow[d].queued);
+                        }
+                    }
+                    // Promote: queued → resident on a random device.
+                    1 => {
+                        let d = g.usize_in(0, n - 1);
+                        if shadow[d].queued > 0 && shadow[d].resident < capacity {
+                            shadow[d].queued -= 1;
+                            shadow[d].resident += 1;
+                            index.set_counts(d, shadow[d].resident, shadow[d].queued);
+                        }
+                    }
+                    // Complete: a resident sample finishes.
+                    2 => {
+                        let d = g.usize_in(0, n - 1);
+                        if shadow[d].resident > 0 {
+                            shadow[d].resident -= 1;
+                            index.set_counts(d, shadow[d].resident, shadow[d].queued);
+                        }
+                    }
+                    // Busy transition (step begin/finish).
+                    _ => {
+                        let d = g.usize_in(0, n - 1);
+                        busy[d] = !busy[d];
+                        index.set_busy(d, busy[d]);
+                    }
+                }
+                assert_eq!(index.loads(), &shadow[..], "occupancy mirror diverged");
+                let donor_scan = (0..n)
+                    .filter(|&j| busy[j] && shadow[j].queued > 0)
+                    .max_by_key(|&j| (shadow[j].queued, std::cmp::Reverse(j)));
+                assert_eq!(index.max_donor(), donor_scan, "donor pick diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn index_backpressure_and_reopen() {
+        let full = DeviceLoad { resident: 1, queued: 1, capacity: 1, max_queue: 1 };
+        let mut idx = RouterIndex::new(ShardPolicy::LeastLoaded, vec![full; 2]);
+        assert_eq!(idx.route(SamplerKind::Ddpm), None, "all-full must shed");
+        // A completion reopens the fleet.
+        idx.set_counts(1, 0, 1);
+        assert_eq!(idx.route(SamplerKind::Ddpm), Some(DeviceId(1)));
+        let empty = RouterIndex::new(ShardPolicy::LeastLoaded, Vec::new());
+        assert_eq!(empty.clone().route(SamplerKind::Ddpm), None);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Step-level continuous-batching scheduler over a device fleet.
+//! Step-level continuous-batching scheduler over a device fleet — the
+//! O(log N) discrete-event core.
 //!
 //! Replaces the coordinator's run-to-completion denoise loop: every
 //! device owns a resident step batch plus an admission queue, and
@@ -10,23 +11,53 @@
 //! denoising as soon as the in-flight step completes — it never waits
 //! for the whole earlier batch to finish its generation.
 //!
-//! Per-row sampler updates inside a fused step are independent, so they
-//! fan out over [`crate::util::threadpool::ThreadPool`]; each row owns
-//! its ancestral RNG stream, keeping results bit-identical regardless of
-//! worker interleaving.
+//! ## Event core
+//!
+//! The per-event cost is O(log N) in the device count:
+//!
+//! * **Completion events** live in a [`BinaryHeap`] keyed by
+//!   `(time, device)` (deterministic tie-breaking), so "which device
+//!   finishes next" is a heap peek instead of a scan over every
+//!   device's `busy_until`.
+//! * **Routing** goes through [`RouterIndex`]: occupancy-ordered sets
+//!   maintained incrementally on admit/promote/complete, so least-loaded
+//!   picks, round-robin rotation, affinity spill, backlog drain and
+//!   work-stealing donor selection are ordered-set queries — no
+//!   per-decision `loads()` snapshot allocation.
+//! * **Kicks are dirty-set driven**: only devices whose state actually
+//!   changed since the last boundary (plus, under work stealing, the
+//!   idle-empty steal candidates) are visited, instead of sweeping the
+//!   whole fleet at every event.
+//!
+//! The retired O(events × devices) loop survives as
+//! [`super::reference::ReferenceScheduler`]; randomized tests assert the
+//! two are bit-identical (samples, timings, metrics).
+//!
+//! ## Zero-alloc step path
+//!
+//! The fused-step hot path reuses scheduler-owned `x`/`t`/`eps` buffers
+//! (the event loop is single-threaded, so one set serves every device),
+//! per-row sampler updates run inline for small batches and fan out over
+//! [`crate::util::threadpool::ThreadPool`] in **chunks** (one pooled job
+//! per chunk, the shared `eps` buffer lent via `Arc`) for large ones,
+//! and samplers are shared per signature through a keyed cache. Each row
+//! owns its ancestral RNG stream, keeping results bit-identical
+//! regardless of worker interleaving.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 use std::sync::Arc;
 
 use crate::coordinator::request::{RequestId, SamplerKind};
 use crate::coordinator::sampler::{initial_noise, DdimSampler, DdpmSampler, Sampler};
 use crate::runtime::manifest::NoiseSchedule;
+use crate::util::fxhash::FxMap;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId, ReuseSchedule};
 use super::metrics::{DeviceMetrics, FleetMetrics};
-use super::router::{DeviceLoad, Router};
+use super::router::{DeviceLoad, RouterIndex};
 use super::ClusterConfig;
 
 /// A generation request with a simulated arrival time.
@@ -43,12 +74,20 @@ impl ClusterRequest {
     pub fn new(id: u64, seed: u64, sampler: SamplerKind, arrival_s: f64) -> Self {
         Self { id: RequestId(id), seed, sampler, arrival_s }
     }
+
+    /// A request with no denoise work at all (`Ddim { steps: 0 }`): it
+    /// completes immediately at admission with its initial noise.
+    pub(super) fn is_zero_step(&self) -> bool {
+        matches!(self.sampler, SamplerKind::Ddim { steps: 0 })
+    }
 }
 
 /// A finished generation with its fleet timeline.
 #[derive(Debug, Clone)]
 pub struct ClusterResult {
     pub id: RequestId,
+    /// Device that served the request ([`DeviceId::NONE`] for zero-step
+    /// requests, which complete at admission without touching a device).
     pub device: DeviceId,
     pub sample: Vec<f32>,
     pub steps: usize,
@@ -73,6 +112,22 @@ impl ClusterResult {
     }
 }
 
+/// The completed-at-admission result for a zero-step request (shared by
+/// the heap core and the reference loop so both stay bit-identical).
+pub(super) fn zero_step_result(req: &ClusterRequest, elems: usize) -> ClusterResult {
+    ClusterResult {
+        id: req.id,
+        device: DeviceId::NONE,
+        sample: initial_noise(req.seed, elems),
+        steps: 0,
+        arrival_s: req.arrival_s,
+        first_step_s: req.arrival_s,
+        finish_s: req.arrival_s,
+        mean_batch: 0.0,
+        full_steps: 0,
+    }
+}
+
 /// Outcome of serving one workload through the fleet.
 #[derive(Debug, Clone)]
 pub struct ClusterOutcome {
@@ -86,13 +141,13 @@ pub struct ClusterOutcome {
 /// to the thread pool share one schedule instead of deep-copying the
 /// α/β tables on every fused step.
 #[derive(Debug, Clone)]
-enum SlotSampler {
+pub(super) enum SlotSampler {
     Ddpm(Arc<DdpmSampler>),
     Ddim(Arc<DdimSampler>),
 }
 
 impl SlotSampler {
-    fn build(kind: SamplerKind, schedule: &NoiseSchedule) -> Self {
+    pub(super) fn build(kind: SamplerKind, schedule: &NoiseSchedule) -> Self {
         match kind {
             SamplerKind::Ddpm => SlotSampler::Ddpm(Arc::new(DdpmSampler::new(schedule.clone()))),
             SamplerKind::Ddim { steps } => {
@@ -101,14 +156,14 @@ impl SlotSampler {
         }
     }
 
-    fn timesteps(&self) -> Vec<usize> {
+    pub(super) fn timesteps(&self) -> Vec<usize> {
         match self {
             SlotSampler::Ddpm(s) => s.timesteps(),
             SlotSampler::Ddim(s) => s.timesteps(),
         }
     }
 
-    fn apply(&self, step_index: usize, x: &mut [f32], eps: &[f32], rng: &mut XorShift) {
+    pub(super) fn apply(&self, step_index: usize, x: &mut [f32], eps: &[f32], rng: &mut XorShift) {
         match self {
             SlotSampler::Ddpm(s) => s.step(step_index, x, eps, rng),
             SlotSampler::Ddim(s) => s.step(step_index, x, eps, rng),
@@ -118,19 +173,36 @@ impl SlotSampler {
 
 /// One sample resident on (or queued for) a device.
 #[derive(Debug, Clone)]
-struct Slot {
-    req: ClusterRequest,
-    sampler: SlotSampler,
-    timesteps: Vec<usize>,
-    step_index: usize,
-    x: Vec<f32>,
-    rng: XorShift,
-    first_step_s: Option<f64>,
+pub(super) struct Slot {
+    pub(super) req: ClusterRequest,
+    pub(super) sampler: SlotSampler,
+    pub(super) timesteps: Vec<usize>,
+    pub(super) step_index: usize,
+    pub(super) x: Vec<f32>,
+    pub(super) rng: XorShift,
+    pub(super) first_step_s: Option<f64>,
     /// Sum of fused-batch sizes over this sample's executed steps
     /// (actual occupancy, for reporting).
-    occupancy_sum: u64,
+    pub(super) occupancy_sum: u64,
     /// Steps that ran the full UNet (vs DeepCache shallow steps).
-    full_steps: u64,
+    pub(super) full_steps: u64,
+}
+
+impl Slot {
+    pub(super) fn new(req: ClusterRequest, sampler: SlotSampler, elems: usize) -> Self {
+        let timesteps = sampler.timesteps();
+        Slot {
+            x: initial_noise(req.seed, elems),
+            rng: XorShift::new(req.seed ^ 0xA5A5_5A5A_DEAD_BEEF),
+            sampler,
+            timesteps,
+            step_index: 0,
+            first_step_s: None,
+            occupancy_sum: 0,
+            full_steps: 0,
+            req,
+        }
+    }
 }
 
 /// The compute behind one fused denoise step. The cluster separates
@@ -139,14 +211,18 @@ struct Slot {
 /// (tests, benches, the `cluster` CLI subcommand) use [`SimExecutor`].
 pub trait StepExecutor {
     /// ε̂ = UNet(x, t) for a fused batch: `x` is `k·elems` row-major,
-    /// `t` holds one timestep per row. Returns `k·elems` predicted noise.
+    /// `t` holds one timestep per row. Appends the `k·elems` predicted
+    /// noise values to `eps` — the caller clears the buffer beforehand
+    /// and reuses it across steps, so the hot path allocates nothing
+    /// once the buffer has grown to the fleet's largest fused batch.
     fn predict_noise(
         &mut self,
         device: DeviceId,
         x: &[f32],
         t: &[f32],
         elems: usize,
-    ) -> crate::Result<Vec<f32>>;
+        eps: &mut Vec<f32>,
+    ) -> crate::Result<()>;
 }
 
 /// Closed-form stand-in for the UNet: a smooth, timestep-modulated local
@@ -167,9 +243,10 @@ impl StepExecutor for SimExecutor {
         x: &[f32],
         t: &[f32],
         elems: usize,
-    ) -> crate::Result<Vec<f32>> {
+        eps: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         anyhow::ensure!(elems > 0 && x.len() == t.len() * elems, "bad fused batch shape");
-        let mut eps = Vec::with_capacity(x.len());
+        eps.reserve(x.len());
         for (row, &tv) in x.chunks_exact(elems).zip(t) {
             let g = 0.85 + 0.15 * (tv as f64 * 0.013).sin();
             let b = 0.05 * (tv as f64 * 0.031).cos();
@@ -180,14 +257,48 @@ impl StepExecutor for SimExecutor {
                 eps.push(((mix * g).tanh() + b) as f32);
             }
         }
-        Ok(eps)
+        Ok(())
     }
 }
 
-/// The fleet scheduler: devices + router + event loop state.
+/// A device step-completion event, min-ordered by `(time, device)` so
+/// simultaneous completions process in device-id order (deterministic,
+/// matching the reference loop's scan).
+#[derive(Debug, Clone, Copy)]
+struct CompletionEvent {
+    time_s: f64,
+    device: usize,
+}
+
+impl PartialEq for CompletionEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for CompletionEvent {}
+
+impl PartialOrd for CompletionEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CompletionEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_s.total_cmp(&other.time_s).then(self.device.cmp(&other.device))
+    }
+}
+
+/// Fused batches at least this large (in total f32 elements) fan their
+/// per-row sampler updates out over the thread pool; smaller ones run
+/// inline — the pooled path's queue/wakeup overhead would dominate.
+const PARALLEL_ROWS_MIN_ELEMS: usize = 4096;
+
+/// The fleet scheduler: devices + router index + discrete-event state.
 pub struct StepScheduler {
     devices: Vec<Device>,
-    router: Router,
+    index: RouterIndex,
     pool: ThreadPool,
     schedule: NoiseSchedule,
     elems: usize,
@@ -200,10 +311,29 @@ pub struct StepScheduler {
     max_backlog: usize,
     /// One shared sampler per signature seen, so admission clones an
     /// `Arc` instead of deep-copying the T-length schedule tables.
-    sampler_cache: Vec<(SamplerKind, SlotSampler)>,
+    sampler_cache: FxMap<SamplerKind, SlotSampler>,
     /// Work stealing: an idle, empty device pulls queued requests from
     /// the most-loaded busy device at step boundaries.
     work_stealing: bool,
+    // --- discrete-event core ---
+    /// Pending step-completion events, min-first.
+    events: BinaryHeap<Reverse<CompletionEvent>>,
+    /// Devices whose occupancy/busy state changed since the last kick.
+    dirty: BTreeSet<usize>,
+    /// Idle devices with nothing resident or queued — the only possible
+    /// work-stealing thieves, visited at every kick when stealing is on.
+    idle_empty: BTreeSet<usize>,
+    /// Scratch for the kick sweep's visit list (reused across events).
+    kick_scratch: Vec<usize>,
+    /// Events processed in the current serve window (arrival bursts +
+    /// step completions), for the scheduler-throughput benches.
+    events_processed: u64,
+    // --- reusable fused-step buffers (the event loop is single-threaded,
+    // so one set serves every device) ---
+    x_buf: Vec<f32>,
+    t_buf: Vec<f32>,
+    eps_buf: Vec<f32>,
+    retire_scratch: Vec<Slot>,
 }
 
 impl StepScheduler {
@@ -233,39 +363,36 @@ impl StepScheduler {
                 )
             })
             .collect();
-        let workers = config.devices.clamp(2, 8);
+        let index = RouterIndex::new(config.policy, blank_loads(&devices));
         Self {
             resident: vec![Vec::new(); devices.len()],
             queued: vec![VecDeque::new(); devices.len()],
+            idle_empty: (0..devices.len()).collect(),
             devices,
-            router: Router::new(config.policy),
-            pool: ThreadPool::new(workers),
+            index,
+            // Row fan-out is a host-side workload: size the pool to the
+            // machine, not to the simulated device count.
+            pool: ThreadPool::default_size(),
             schedule,
             elems,
             bit_width,
             backlog: VecDeque::new(),
             max_backlog: config.max_backlog,
-            sampler_cache: Vec::new(),
+            sampler_cache: FxMap::default(),
             work_stealing: config.work_stealing,
+            events: BinaryHeap::new(),
+            dirty: BTreeSet::new(),
+            kick_scratch: Vec::new(),
+            events_processed: 0,
+            x_buf: Vec::new(),
+            t_buf: Vec::new(),
+            eps_buf: Vec::new(),
+            retire_scratch: Vec::new(),
         }
     }
 
     pub fn device_count(&self) -> usize {
         self.devices.len()
-    }
-
-    /// Occupancy snapshot for the router.
-    fn loads(&self) -> Vec<DeviceLoad> {
-        self.devices
-            .iter()
-            .enumerate()
-            .map(|(i, d)| DeviceLoad {
-                resident: self.resident[i].len(),
-                queued: self.queued[i].len(),
-                capacity: d.capacity,
-                max_queue: d.max_queue,
-            })
-            .collect()
     }
 
     /// Serve a workload to completion. Requests may arrive in any order;
@@ -279,21 +406,27 @@ impl StepScheduler {
             a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
         });
         let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
-        // Each serve call is one accounting window.
+        // Each serve call is one accounting window; reset the event core
+        // too (a drained fleet leaves it empty, but be defensive).
         for d in &mut self.devices {
             d.reset_accounting();
         }
+        self.events.clear();
+        self.dirty.clear();
+        self.idle_empty = (0..self.devices.len()).collect();
+        // Occupancy resets per window; the round-robin cursor and the
+        // affinity home map persist (the stateless router does too).
+        self.index.reset_occupancy(blank_loads(&self.devices));
+        self.events_processed = 0;
+
         let mut pending = requests.into_iter().peekable();
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();
 
         loop {
             let next_arrival = pending.peek().map(|r| r.arrival_s);
-            let next_completion = self
-                .devices
-                .iter()
-                .filter_map(|d| d.busy_until().map(|t| (t, d.id.0)))
-                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let next_completion =
+                self.events.peek().map(|Reverse(ev)| (ev.time_s, ev.device));
 
             // Arrivals win ties so a request landing exactly on a step
             // boundary is admissible in the very next step.
@@ -309,13 +442,14 @@ impl StepScheduler {
                 let at = next_arrival.expect("arrival selected");
                 while pending.peek().is_some_and(|r| r.arrival_s == at) {
                     let req = pending.next().expect("peeked");
-                    self.admit(req, &mut rejected);
+                    self.admit(req, &mut rejected, &mut results);
                 }
-                self.kick_idle(at, executor)?;
+                self.kick(at, executor)?;
             } else {
-                let (ct, di) = next_completion.expect("completion selected");
-                self.complete(di, ct, executor, &mut results)?;
+                let Reverse(ev) = self.events.pop().expect("completion selected");
+                self.complete(ev.device, ev.time_s, executor, &mut results)?;
             }
+            self.events_processed += 1;
         }
 
         // Anything still deferred when all devices drained is undeliverable
@@ -330,6 +464,7 @@ impl StepScheduler {
             makespan_s: (last_finish_s - first_arrival_s).max(0.0),
             rejected: rejected.len() as u64,
             bit_width: self.bit_width,
+            sched_events: self.events_processed,
             ..Default::default()
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
@@ -340,13 +475,23 @@ impl StepScheduler {
     }
 
     /// Route one arriving request into a device queue, defer it to the
-    /// fleet backlog, or shed it.
-    fn admit(&mut self, req: ClusterRequest, rejected: &mut Vec<RequestId>) {
-        let loads = self.loads();
-        match self.router.route(req.sampler, &loads) {
+    /// fleet backlog, or shed it. Zero-step requests (`Ddim { steps: 0 }`)
+    /// have no denoise work and complete immediately instead of reaching
+    /// `start_step` with an empty timestep list.
+    fn admit(
+        &mut self,
+        req: ClusterRequest,
+        rejected: &mut Vec<RequestId>,
+        results: &mut Vec<ClusterResult>,
+    ) {
+        if req.is_zero_step() {
+            results.push(zero_step_result(&req, self.elems));
+            return;
+        }
+        match self.index.route(req.sampler) {
             Some(did) => {
                 let slot = self.make_slot(req);
-                self.queued[did.0].push_back(slot);
+                self.enqueue(did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
                 let slot = self.make_slot(req);
@@ -358,64 +503,81 @@ impl StepScheduler {
 
     fn make_slot(&mut self, req: ClusterRequest) -> Slot {
         let sampler = self.sampler_for(req.sampler);
-        let timesteps = sampler.timesteps();
-        Slot {
-            x: initial_noise(req.seed, self.elems),
-            rng: XorShift::new(req.seed ^ 0xA5A5_5A5A_DEAD_BEEF),
-            sampler,
-            timesteps,
-            step_index: 0,
-            first_step_s: None,
-            occupancy_sum: 0,
-            full_steps: 0,
-            req,
-        }
+        Slot::new(req, sampler, self.elems)
     }
 
     /// Shared sampler for a signature (built once, then `Arc`-cloned).
     fn sampler_for(&mut self, kind: SamplerKind) -> SlotSampler {
-        if let Some((_, s)) = self.sampler_cache.iter().find(|(k, _)| *k == kind) {
+        if let Some(s) = self.sampler_cache.get(&kind) {
             return s.clone();
         }
         let s = SlotSampler::build(kind, &self.schedule);
-        self.sampler_cache.push((kind, s.clone()));
+        self.sampler_cache.insert(kind, s.clone());
         s
+    }
+
+    /// Push a slot onto a device's admission queue, syncing the router
+    /// index and marking the device for the next kick.
+    fn enqueue(&mut self, di: usize, slot: Slot) {
+        self.queued[di].push_back(slot);
+        self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        self.dirty.insert(di);
     }
 
     /// Re-route deferred requests once device queues have space (called
     /// at every step boundary, FIFO so deferral preserves arrival order).
     fn drain_backlog(&mut self) {
         while let Some(slot) = self.backlog.front() {
-            let loads = self.loads();
-            match self.router.route(slot.req.sampler, &loads) {
+            match self.index.route(slot.req.sampler) {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
-                    self.queued[did.0].push_back(slot);
+                    self.enqueue(did.0, slot);
                 }
                 None => break,
             }
         }
     }
 
-    /// Start a step on every idle device that has work (resident samples
-    /// mid-generation or admitted queue entries). A device that went idle
-    /// with nothing at all first tries to steal queued work from the
-    /// most-loaded busy device.
-    fn kick_idle(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
-        for di in 0..self.devices.len() {
-            if !self.devices[di].is_idle() {
-                continue;
+    /// Start a step on every device that may have become startable since
+    /// the last boundary: the dirty set (occupancy/busy changes) plus,
+    /// under work stealing, the idle-empty steal candidates. Devices are
+    /// visited in ascending id order — the same order the reference
+    /// loop's full-fleet sweep uses, so steal interactions (an earlier
+    /// device starting a step can make it a donor for a later thief)
+    /// resolve identically.
+    fn kick(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
+        let mut visits = std::mem::take(&mut self.kick_scratch);
+        visits.clear();
+        visits.extend(self.dirty.iter().copied());
+        if self.work_stealing {
+            visits.extend(self.idle_empty.iter().copied());
+            visits.sort_unstable();
+            visits.dedup();
+        }
+        self.dirty.clear();
+        for &di in &visits {
+            if self.devices[di].is_idle() {
+                if self.work_stealing
+                    && self.queued[di].is_empty()
+                    && self.resident[di].is_empty()
+                {
+                    self.steal_into(di);
+                }
+                if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
+                    self.start_step(di, now_s, executor)?;
+                }
             }
-            if self.work_stealing
+            // Refresh steal-candidate membership for the visited device.
+            if self.devices[di].is_idle()
                 && self.queued[di].is_empty()
                 && self.resident[di].is_empty()
             {
-                self.steal_into(di);
-            }
-            if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
-                self.start_step(di, now_s, executor)?;
+                self.idle_empty.insert(di);
+            } else {
+                self.idle_empty.remove(&di);
             }
         }
+        self.kick_scratch = visits;
         Ok(())
     }
 
@@ -424,15 +586,16 @@ impl StepScheduler {
     /// most-loaded device, up to its own batch capacity. Donors must be
     /// mid-step (their queued work is guaranteed to wait at least one
     /// full step; an idle donor starts its own work this same boundary).
-    /// Deterministic: ties break toward the lowest donor id.
+    /// Deterministic: ties break toward the lowest donor id. The donor
+    /// is an O(log N) index query, not a fleet scan.
     fn steal_into(&mut self, di: usize) {
         while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
-            let donor = (0..self.devices.len())
-                .filter(|&j| j != di && !self.devices[j].is_idle() && !self.queued[j].is_empty())
-                .max_by_key(|&j| (self.queued[j].len(), std::cmp::Reverse(j)));
-            let Some(j) = donor else { break };
+            // `di` is idle, so it can never be its own donor.
+            let Some(j) = self.index.max_donor() else { break };
             let slot = self.queued[j].pop_front().expect("donor queue non-empty");
+            self.index.set_counts(j, self.resident[j].len(), self.queued[j].len());
             self.queued[di].push_back(slot);
+            self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
         }
     }
 
@@ -446,7 +609,8 @@ impl StepScheduler {
         results: &mut Vec<ClusterResult>,
     ) -> crate::Result<()> {
         self.devices[di].finish_step();
-        let mut still_resident = Vec::with_capacity(self.resident[di].len());
+        self.index.set_busy(di, false);
+        let mut still_resident = std::mem::take(&mut self.retire_scratch);
         for slot in self.resident[di].drain(..) {
             if slot.step_index >= slot.timesteps.len() {
                 self.devices[di].samples_completed += 1;
@@ -466,11 +630,14 @@ impl StepScheduler {
                 still_resident.push(slot);
             }
         }
-        self.resident[di] = still_resident;
+        std::mem::swap(&mut self.resident[di], &mut still_resident);
+        self.retire_scratch = still_resident;
+        self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        self.dirty.insert(di);
         // Freed slots (and queue space) may unblock deferred requests —
-        // possibly onto other, currently idle devices, so kick them all.
+        // possibly onto other, currently idle devices.
         self.drain_backlog();
-        self.kick_idle(now_s, executor)
+        self.kick(now_s, executor)
     }
 
     /// Promote queued requests into free slots and launch the next fused
@@ -481,10 +648,15 @@ impl StepScheduler {
         now_s: f64,
         executor: &mut dyn StepExecutor,
     ) -> crate::Result<()> {
+        let mut promoted = false;
         while self.resident[di].len() < self.devices[di].capacity {
             let Some(mut slot) = self.queued[di].pop_front() else { break };
             slot.first_step_s = Some(now_s);
             self.resident[di].push(slot);
+            promoted = true;
+        }
+        if promoted {
+            self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
         }
         let k = self.resident[di].len();
         if k == 0 {
@@ -502,55 +674,97 @@ impl StepScheduler {
         let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
         let full = self.devices[di].next_step_full(force_full);
 
-        // Fused UNet call: one t per row (rows may sit at different
-        // denoise depths — that is the whole point of step-level batching).
+        // Fused UNet call over the reusable batch buffers: one t per row
+        // (rows may sit at different denoise depths — that is the whole
+        // point of step-level batching).
         let elems = self.elems;
-        let mut x = Vec::with_capacity(k * elems);
-        let mut t = Vec::with_capacity(k);
+        self.x_buf.clear();
+        self.t_buf.clear();
+        self.x_buf.reserve(k * elems);
         for slot in &self.resident[di] {
-            x.extend_from_slice(&slot.x);
-            t.push(slot.timesteps[slot.step_index] as f32);
+            self.x_buf.extend_from_slice(&slot.x);
+            self.t_buf.push(slot.timesteps[slot.step_index] as f32);
         }
-        let eps = executor.predict_noise(DeviceId(di), &x, &t, elems)?;
-        anyhow::ensure!(eps.len() == k * elems, "executor returned {} elems, want {}", eps.len(), k * elems);
+        self.eps_buf.clear();
+        executor.predict_noise(DeviceId(di), &self.x_buf, &self.t_buf, elems, &mut self.eps_buf)?;
+        anyhow::ensure!(
+            self.eps_buf.len() == k * elems,
+            "executor returned {} elems, want {}",
+            self.eps_buf.len(),
+            k * elems
+        );
 
-        // Per-row sampler updates are independent; fan out over the pool.
-        // Rows (x, rng) are moved out and back rather than cloned; the
-        // sampler clone is an `Arc` bump. Each row owns its RNG, so
-        // worker order cannot change results.
-        let items: Vec<(Vec<f32>, Vec<f32>, SlotSampler, usize, XorShift)> = self.resident[di]
-            .iter_mut()
-            .enumerate()
-            .map(|(i, slot)| {
-                (
-                    std::mem::take(&mut slot.x),
-                    eps[i * elems..(i + 1) * elems].to_vec(),
-                    slot.sampler.clone(),
-                    slot.step_index,
-                    slot.rng.clone(),
-                )
+        // Per-row sampler updates are independent; each row owns its RNG,
+        // so worker order cannot change results. Small fused batches run
+        // inline on the shared eps buffer (zero moves, zero allocation);
+        // large ones fan out over the pool in chunks, lending the eps
+        // buffer via `Arc` instead of copying a slice per row.
+        if k * elems < PARALLEL_ROWS_MIN_ELEMS {
+            for (i, slot) in self.resident[di].iter_mut().enumerate() {
+                let eps_row = &self.eps_buf[i * elems..(i + 1) * elems];
+                slot.sampler.apply(slot.step_index, &mut slot.x, eps_row, &mut slot.rng);
+            }
+        } else {
+            let eps = Arc::new(std::mem::take(&mut self.eps_buf));
+            let rows: Vec<(Vec<f32>, SlotSampler, usize, XorShift)> = self.resident[di]
+                .iter_mut()
+                .map(|slot| {
+                    (
+                        std::mem::take(&mut slot.x),
+                        slot.sampler.clone(),
+                        slot.step_index,
+                        slot.rng.clone(),
+                    )
+                })
+                .collect();
+            let chunk = k.div_ceil(self.pool.size());
+            let shared = Arc::clone(&eps);
+            let updated = self.pool.map_chunked(rows, chunk, move |i, (mut x, sampler, idx, mut rng)| {
+                sampler.apply(idx, &mut x, &shared[i * elems..(i + 1) * elems], &mut rng);
+                (x, rng)
+            });
+            for (slot, (x, rng)) in self.resident[di].iter_mut().zip(updated) {
+                slot.x = x;
+                slot.rng = rng;
+            }
+            // Reclaim the buffer; a worker may still briefly hold its Arc
+            // clone after the final notify — fall back to a fresh one then.
+            self.eps_buf = Arc::try_unwrap(eps).map(|mut v| {
+                v.clear();
+                v
             })
-            .collect();
-        let updated = self.pool.map(items, |(mut x, eps, sampler, idx, mut rng)| {
-            sampler.apply(idx, &mut x, &eps, &mut rng);
-            (x, rng)
-        });
-        for (slot, (x, rng)) in self.resident[di].iter_mut().zip(updated) {
-            slot.x = x;
-            slot.rng = rng;
+            .unwrap_or_default();
+        }
+        for slot in self.resident[di].iter_mut() {
             slot.step_index += 1;
             slot.occupancy_sum += k as u64;
             slot.full_steps += full as u64;
         }
-        self.devices[di].begin_step(now_s, k, full);
+        let done_s = self.devices[di].begin_step(now_s, k, full);
+        self.index.set_busy(di, true);
+        self.events.push(Reverse(CompletionEvent { time_s: done_s, device: di }));
         Ok(())
     }
+}
+
+/// Fresh (empty) occupancy snapshots for a fleet, for index (re)builds.
+pub(super) fn blank_loads(devices: &[Device]) -> Vec<DeviceLoad> {
+    devices
+        .iter()
+        .map(|d| DeviceLoad {
+            resident: 0,
+            queued: 0,
+            capacity: d.capacity,
+            max_queue: d.max_queue,
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::cost::Cost;
+    use crate::cluster::reference::ReferenceScheduler;
     use crate::cluster::router::ShardPolicy;
 
     fn config(devices: usize) -> ClusterConfig {
@@ -589,6 +803,7 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
         assert_eq!(out.metrics.samples_completed, 10);
+        assert!(out.metrics.sched_events > 0);
         for r in &out.results {
             assert_eq!(r.steps, 8);
             assert!(r.sample.iter().all(|v| v.is_finite()));
@@ -829,6 +1044,174 @@ mod tests {
     }
 
     #[test]
+    fn zero_step_request_completes_at_admission() {
+        // Regression: a Ddim { steps: 0 } request must not reach
+        // start_step (it has no timesteps to index) — it completes
+        // immediately with its initial noise, and riding-along normal
+        // requests are unaffected.
+        let mut s = scheduler(2);
+        let mut reqs = workload(4, 6);
+        reqs.push(ClusterRequest::new(50, 777, SamplerKind::Ddim { steps: 0 }, 0.0));
+        reqs.push(ClusterRequest::new(51, 778, SamplerKind::Ddim { steps: 0 }, 1e-3));
+        let out = s.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 6);
+        assert!(out.rejected.is_empty());
+        for zid in [50u64, 51] {
+            let z = out.results.iter().find(|r| r.id.0 == zid).unwrap();
+            assert_eq!(z.steps, 0);
+            assert_eq!(z.full_steps, 0);
+            assert_eq!(z.device, DeviceId::NONE);
+            assert_eq!(z.finish_s, z.arrival_s, "zero-step completes at admission");
+            assert_eq!(z.latency_s(), 0.0);
+            let seed = if zid == 50 { 777 } else { 778 };
+            assert_eq!(z.sample, initial_noise(seed, 16));
+        }
+        // The normal requests still serve exactly as without the riders.
+        let baseline = scheduler(2).serve(workload(4, 6), &mut SimExecutor).unwrap();
+        for rb in &baseline.results {
+            let ra = out.results.iter().find(|r| r.id == rb.id).unwrap();
+            assert_eq!(ra.sample, rb.sample);
+            assert_eq!(ra.finish_s, rb.finish_s);
+        }
+    }
+
+    #[test]
+    fn heap_core_bit_identical_to_reference_loop() {
+        // The acceptance gate: across devices∈{1,2,4,8}, reuse K∈{1,3},
+        // stealing on/off, randomized workloads (mixed samplers, random
+        // arrivals, zero-step riders, all three policies, random
+        // capacities/queues/backlogs) must produce bit-identical
+        // results, timings and metrics on both scheduler cores.
+        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+        for devices in [1usize, 2, 4, 8] {
+            for reuse_k in [1usize, 3] {
+                for stealing in [true, false] {
+                    let name = format!(
+                        "heap = reference (d={devices}, k={reuse_k}, steal={stealing})"
+                    );
+                    crate::util::prop::forall(&name, 2, |g| {
+                        let cfg = ClusterConfig {
+                            devices,
+                            capacity: g.usize_in(1, 4),
+                            max_queue: g.usize_in(0, 6),
+                            max_backlog: *g.choose(&[0usize, 4, usize::MAX]),
+                            policy: *g.choose(&[
+                                ShardPolicy::RoundRobin,
+                                ShardPolicy::LeastLoaded,
+                                ShardPolicy::Affinity,
+                            ]),
+                            reuse_interval: reuse_k,
+                            work_stealing: stealing,
+                            ..ClusterConfig::default()
+                        };
+                        let n = g.usize_in(1, 20);
+                        let mut at = 0.0f64;
+                        let reqs: Vec<ClusterRequest> = (0..n)
+                            .map(|i| {
+                                let sampler = match g.usize_in(0, 5) {
+                                    0 => SamplerKind::Ddpm,
+                                    1 => SamplerKind::Ddim { steps: 0 },
+                                    _ => SamplerKind::Ddim { steps: g.usize_in(1, 16) },
+                                };
+                                // Occasionally burst at the same instant.
+                                if g.usize_in(0, 2) > 0 {
+                                    at += g.f64_in(0.0, 2e-3);
+                                }
+                                ClusterRequest::new(i as u64, 1000 + i as u64, sampler, at)
+                            })
+                            .collect();
+                        let schedule = NoiseSchedule::linear(40);
+                        let mut heap =
+                            StepScheduler::new(&cfg, cost, schedule.clone(), 16, 8);
+                        let mut reference =
+                            ReferenceScheduler::new(&cfg, cost, schedule, 16, 8);
+                        let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+                        let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+                        assert_eq!(a.rejected, b.rejected, "shed set diverged");
+                        assert_eq!(a.results.len(), b.results.len());
+                        for (ra, rb) in a.results.iter().zip(&b.results) {
+                            assert_eq!(ra.id, rb.id, "completion order diverged");
+                            assert_eq!(ra.device, rb.device, "placement diverged");
+                            assert_eq!(ra.sample, rb.sample, "samples diverged");
+                            assert_eq!(ra.steps, rb.steps);
+                            assert_eq!(ra.full_steps, rb.full_steps);
+                            assert!(
+                                ra.finish_s == rb.finish_s
+                                    && ra.first_step_s == rb.first_step_s
+                                    && ra.mean_batch == rb.mean_batch,
+                                "timings must be bit-identical (req {:?})",
+                                ra.id
+                            );
+                        }
+                        assert_eq!(a.metrics, b.metrics, "metrics diverged");
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cursor_persists_across_serve_windows() {
+        // The stateless router's rotation survives serve() windows; the
+        // index must too (occupancy resets, the cursor does not).
+        let cfg = ClusterConfig {
+            devices: 3,
+            capacity: 1,
+            max_queue: 4,
+            policy: ShardPolicy::RoundRobin,
+            ..ClusterConfig::default()
+        };
+        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+        let mut heap = StepScheduler::new(&cfg, cost, NoiseSchedule::linear(50), 16, 8);
+        let mut reference =
+            ReferenceScheduler::new(&cfg, cost, NoiseSchedule::linear(50), 16, 8);
+        // 5 requests over 3 devices leave the rotation mid-fleet.
+        for window in 0..2u64 {
+            let reqs: Vec<ClusterRequest> = (0..5)
+                .map(|i| {
+                    ClusterRequest::new(window * 10 + i, 42 + i, SamplerKind::Ddim { steps: 3 }, 0.0)
+                })
+                .collect();
+            let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+            let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+            assert_eq!(a.metrics, b.metrics, "window {window} metrics diverged");
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!((ra.id, ra.device), (rb.id, rb.device), "window {window}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_row_fanout_matches_reference_at_large_elems() {
+        // Large samples push k·elems past PARALLEL_ROWS_MIN_ELEMS, so
+        // this exercises the pooled chunked fan-out path (the other
+        // tests run the inline path) — still bit-identical.
+        let cfg = ClusterConfig {
+            devices: 2,
+            capacity: 8,
+            max_queue: 32,
+            ..ClusterConfig::default()
+        };
+        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+        let elems = 1024;
+        assert!(5 * elems >= PARALLEL_ROWS_MIN_ELEMS, "test must hit the pooled path");
+        let reqs: Vec<ClusterRequest> = (0..10)
+            .map(|i| ClusterRequest::new(i, 500 + i, SamplerKind::Ddim { steps: 5 }, 0.0))
+            .collect();
+        let mut heap = StepScheduler::new(&cfg, cost, NoiseSchedule::linear(100), elems, 8);
+        let mut reference =
+            ReferenceScheduler::new(&cfg, cost, NoiseSchedule::linear(100), elems, 8);
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+        let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.sample, rb.sample);
+            assert!(ra.finish_s == rb.finish_s);
+        }
+    }
+
+    #[test]
     fn executor_error_propagates() {
         struct Broken;
         impl StepExecutor for Broken {
@@ -838,7 +1221,8 @@ mod tests {
                 _x: &[f32],
                 _t: &[f32],
                 _e: usize,
-            ) -> crate::Result<Vec<f32>> {
+                _eps: &mut Vec<f32>,
+            ) -> crate::Result<()> {
                 anyhow::bail!("device fault injected")
             }
         }

@@ -280,10 +280,11 @@ impl StepExecutor for PjrtStepExecutor<'_> {
         x: &[f32],
         t: &[f32],
         elems: usize,
-    ) -> crate::Result<Vec<f32>> {
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         let k = t.len();
         anyhow::ensure!(x.len() == k * elems, "fused batch shape mismatch");
-        let mut out = Vec::with_capacity(k * elems);
+        out.reserve(k * elems);
         let mut idx = 0;
         while idx < k {
             let remaining = k - idx;
@@ -299,6 +300,6 @@ impl StepExecutor for PjrtStepExecutor<'_> {
             out.extend_from_slice(&eps[..take * elems]);
             idx += take;
         }
-        Ok(out)
+        Ok(())
     }
 }

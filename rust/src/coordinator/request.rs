@@ -6,8 +6,9 @@ use std::time::Instant;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RequestId(pub u64);
 
-/// Which sampler the client wants.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which sampler the client wants. `Hash` so schedulers can key sampler
+/// caches and affinity maps directly on the signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SamplerKind {
     /// Full ancestral DDPM (all T steps).
     Ddpm,

@@ -250,6 +250,7 @@ fn cmd_cluster(args: &Args) -> i32 {
 
     let mut cluster = Cluster::simulated(config);
     let workload = synthetic_workload(requests, seed, SamplerKind::Ddim { steps }, gap_s);
+    let host_t0 = std::time::Instant::now();
     let outcome = match cluster.serve(workload, &mut SimExecutor) {
         Ok(o) => o,
         Err(e) => {
@@ -257,6 +258,7 @@ fn cmd_cluster(args: &Args) -> i32 {
             return 1;
         }
     };
+    let host_s = host_t0.elapsed().as_secs_f64();
 
     let m = &outcome.metrics;
     println!(
@@ -287,6 +289,12 @@ fn cmd_cluster(args: &Args) -> i32 {
         fmt_si(m.latency_p99_s(), "s"),
         m.fleet_gops(),
         fmt_si(m.fleet_epb(), "J/bit"),
+    );
+    println!(
+        "scheduler: {} events in {} host time ({:.0} events/s)",
+        m.sched_events,
+        fmt_si(host_s, "s"),
+        if host_s > 0.0 { m.sched_events as f64 / host_s } else { 0.0 },
     );
     if config.reuse_interval > 1 {
         println!(

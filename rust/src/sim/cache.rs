@@ -39,8 +39,6 @@
 //! process-wide [`CostCache::shared_paper`] instance serves the Table II
 //! paper parameters, which is what the CLI, coordinator and cluster use.
 
-use std::collections::HashMap;
-use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -48,65 +46,14 @@ use crate::arch::cost::{Cost, OptFlags};
 use crate::arch::units::Accelerator;
 use crate::arch::ArchConfig;
 use crate::devices::DeviceParams;
+use crate::util::fxhash::{fx_hash_one, FxMap};
 use crate::workload::{LayerInstance, LayerKind, ModelId, ModelSpec};
 
 use super::engine::{fold_step_cost, is_mha_kind, raw_layer_cost};
 
-/// Multiplicative rotate-xor hasher (FxHash-style). The memo keys are a
-/// handful of machine words; SipHash's per-lookup setup would cost more
-/// than some of the cheaper layer-cost computations it guards.
-#[derive(Default)]
-pub struct FxHasher {
-    hash: u64,
-}
-
-impl FxHasher {
-    #[inline]
-    fn add(&mut self, v: u64) {
-        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(0x517c_c1b7_2722_0a95);
-    }
-}
-
-impl Hasher for FxHasher {
-    #[inline]
-    fn finish(&self) -> u64 {
-        self.hash
-    }
-
-    #[inline]
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.add(b as u64);
-        }
-    }
-
-    #[inline]
-    fn write_u8(&mut self, n: u8) {
-        self.add(n as u64);
-    }
-
-    #[inline]
-    fn write_u32(&mut self, n: u32) {
-        self.add(n as u64);
-    }
-
-    #[inline]
-    fn write_u64(&mut self, n: u64) {
-        self.add(n);
-    }
-
-    #[inline]
-    fn write_usize(&mut self, n: usize) {
-        self.add(n as u64);
-    }
-
-    #[inline]
-    fn write_isize(&mut self, n: isize) {
-        self.add(n as u64);
-    }
-}
-
-type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+// The memo keys are a handful of machine words, so the maps hash with
+// the shared FxHash-style hasher (re-exported here for back-compat).
+pub use crate::util::fxhash::FxHasher;
 
 /// A model trace compiled for fast repeated pricing: the full layer list
 /// (shared across the process), the deduplicated layer kinds, and the
@@ -217,11 +164,19 @@ impl CacheStats {
     }
 }
 
+/// Number of hash-selected shards in the layer memo. Cold multi-threaded
+/// DSE sweeps are write-heavy (every worker inserting freshly priced
+/// layers); sharding turns one contended `RwLock` writer queue into 16
+/// mostly-disjoint ones. Power of two so shard selection is a mask.
+const LAYER_SHARDS: usize = 16;
+
 /// Structural-signature → [`Cost`] memo, tied to one [`DeviceParams`]
 /// set. Thread-safe: the DSE sweep shares one cache across all workers.
+/// The layer memo is hash-sharded across [`LAYER_SHARDS`] `RwLock` maps
+/// to cut write contention while the cache is cold.
 pub struct CostCache {
     params: DeviceParams,
-    layers: RwLock<FxMap<LayerKey, Cost>>,
+    layers: Vec<RwLock<FxMap<LayerKey, Cost>>>,
     steps: RwLock<FxMap<StepKey, Cost>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -234,11 +189,16 @@ impl CostCache {
     pub fn new(params: DeviceParams) -> Self {
         Self {
             params,
-            layers: RwLock::new(FxMap::default()),
+            layers: (0..LAYER_SHARDS).map(|_| RwLock::new(FxMap::default())).collect(),
             steps: RwLock::new(FxMap::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// The shard holding `key` (stable for the process lifetime).
+    fn layer_shard(&self, key: &LayerKey) -> &RwLock<FxMap<LayerKey, Cost>> {
+        &self.layers[(fx_hash_one(key) as usize) & (LAYER_SHARDS - 1)]
     }
 
     /// The process-wide cache over the Table II paper parameters.
@@ -255,7 +215,11 @@ impl CostCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            layer_entries: self.layers.read().expect("cache lock").len(),
+            layer_entries: self
+                .layers
+                .iter()
+                .map(|s| s.read().expect("cache lock").len())
+                .sum(),
             step_entries: self.steps.read().expect("cache lock").len(),
         }
     }
@@ -270,7 +234,8 @@ impl CostCache {
             opts,
             bit_width: self.params.bit_width,
         };
-        if let Some(c) = self.layers.read().expect("cache lock").get(&key) {
+        let shard = self.layer_shard(&key);
+        if let Some(c) = shard.read().expect("cache lock").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *c;
         }
@@ -278,7 +243,7 @@ impl CostCache {
         // racing inserts are benign.
         let c = raw_layer_cost(acc, &self.params, kind, opts);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.layers.write().expect("cache lock").insert(key, c);
+        shard.write().expect("cache lock").insert(key, c);
         c
     }
 
@@ -297,6 +262,9 @@ impl CostCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *c;
         }
+        // Count the step-memo miss so hits/misses stay consistent across
+        // both memo levels (the layer lookups below count their own).
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let ct = compiled_trace(model);
         let costs: Vec<Cost> =
             ct.unique.iter().map(|k| self.layer_cost(acc, k, opts)).collect();
@@ -458,6 +426,23 @@ mod tests {
         // And both stay stable on re-lookup.
         assert_eq!(cache.layer_cost(&a, &conv.kind, OptFlags::ALL), ca);
         assert_eq!(cache.layer_cost(&b, &conv.kind, OptFlags::ALL), cb);
+    }
+
+    #[test]
+    fn sharded_layer_memo_counts_entries_across_shards() {
+        // One distinct key per distinct layer shape (fixed arch/opts/bit
+        // here): stats() must sum entries over all hash shards.
+        let cache = CostCache::new(DeviceParams::paper());
+        let acc = Simulator::paper_optimal().accelerator.clone();
+        let mut distinct = std::collections::HashSet::new();
+        for layer in interned_trace(ModelId::StableDiffusion).iter() {
+            cache.layer_cost(&acc, &layer.kind, OptFlags::ALL);
+            distinct.insert(layer.kind);
+        }
+        let s = cache.stats();
+        assert_eq!(s.layer_entries, distinct.len());
+        assert_eq!(s.misses as usize, distinct.len());
+        assert!(distinct.len() > 8, "sweep must populate several shards");
     }
 
     #[test]

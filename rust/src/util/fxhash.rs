@@ -1,0 +1,96 @@
+//! FxHash-style hashing for small machine-word keys.
+//!
+//! The memo/index keys in this codebase (cost-cache signatures, sampler
+//! signatures, router affinity keys) are a handful of machine words;
+//! SipHash's per-lookup setup would cost more than some of the cheaper
+//! computations those maps guard. This multiplicative rotate-xor hasher
+//! (the rustc `FxHasher` recipe) is the shared replacement.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+/// Multiplicative rotate-xor hasher (FxHash-style).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(0x517c_c1b7_2722_0a95);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_isize(&mut self, n: isize) {
+        self.add(n as u64);
+    }
+}
+
+/// `HashMap` specialized to [`FxHasher`].
+pub type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// One-shot hash of a key with [`FxHasher`] (shard selection, signatures).
+pub fn fx_hash_one<T: Hash>(key: &T) -> u64 {
+    let mut h = FxHasher::default();
+    key.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_spreading() {
+        assert_eq!(fx_hash_one(&42u64), fx_hash_one(&42u64));
+        // Nearby keys must not collapse onto one shard.
+        let shards: std::collections::BTreeSet<u64> =
+            (0u64..64).map(|k| fx_hash_one(&k) % 16).collect();
+        assert!(shards.len() > 4, "hash must spread across shards");
+    }
+
+    #[test]
+    fn map_works() {
+        let mut m: FxMap<(u32, u32), u32> = FxMap::default();
+        for i in 0..100 {
+            m.insert((i, i + 1), i);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.get(&(7, 8)), Some(&7));
+    }
+}

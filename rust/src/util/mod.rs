@@ -7,6 +7,7 @@
 //! are implemented here from scratch.
 
 pub mod cli;
+pub mod fxhash;
 pub mod json;
 pub mod prop;
 pub mod rng;

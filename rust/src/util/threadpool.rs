@@ -45,13 +45,19 @@ impl ThreadPool {
         Self { shared, workers }
     }
 
-    /// Pool sized to the machine (at least 2, at most 16).
-    pub fn default_size() -> Self {
-        let n = std::thread::available_parallelism()
+    /// Machine-sized worker count (at least 2, at most 16). Callers that
+    /// need a pool matched to the host — rather than to some workload
+    /// dimension like a device count — should size with this.
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4)
-            .clamp(2, 16);
-        Self::new(n)
+            .clamp(2, 16)
+    }
+
+    /// Pool sized to the machine (at least 2, at most 16).
+    pub fn default_size() -> Self {
+        Self::new(Self::default_workers())
     }
 
     /// Number of workers.
@@ -106,6 +112,44 @@ impl ThreadPool {
             .into_iter()
             .map(|o| o.expect("worker produced result"))
             .collect()
+    }
+
+    /// Parallel indexed map with chunked dispatch: applies `f(i, item)`
+    /// to every item (where `i` is the item's index in `items`), but
+    /// submits one pooled job per `chunk_size`-item chunk instead of one
+    /// boxed job per item. Order is preserved. When everything fits in a
+    /// single chunk the map runs inline on the caller thread — small
+    /// batches pay zero queue/wakeup overhead.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, chunk_size: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + Clone + 'static,
+    {
+        let chunk_size = chunk_size.max(1);
+        if items.len() <= chunk_size {
+            return items.into_iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let mut chunks: Vec<(usize, Vec<T>)> = Vec::new();
+        let mut start = 0;
+        let mut it = items.into_iter();
+        loop {
+            let chunk: Vec<T> = it.by_ref().take(chunk_size).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            let len = chunk.len();
+            chunks.push((start, chunk));
+            start += len;
+        }
+        let per_chunk: Vec<Vec<R>> = self.map(chunks, move |(start, chunk)| {
+            chunk
+                .into_iter()
+                .enumerate()
+                .map(|(j, item)| f(start + j, item))
+                .collect()
+        });
+        per_chunk.into_iter().flatten().collect()
     }
 }
 
@@ -188,6 +232,26 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunked_preserves_order_and_indices() {
+        let pool = ThreadPool::new(3);
+        // Multi-chunk path (50 items, chunks of 8) and the inline path
+        // (4 items <= chunk) must agree with a plain indexed map.
+        let want: Vec<usize> = (0..50).map(|i| i * 10 + i).collect();
+        let out = pool.map_chunked((0..50).map(|i| i * 10).collect(), 8, |i, x| x + i);
+        assert_eq!(out, want);
+        let inline = pool.map_chunked((0..4).map(|i| i * 10).collect(), 8, |i, x| x + i);
+        assert_eq!(inline, vec![0, 11, 22, 33]);
+        let empty: Vec<usize> = pool.map_chunked(Vec::new(), 4, |i, x: usize| x + i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn default_workers_clamped() {
+        let n = ThreadPool::default_workers();
+        assert!((2..=16).contains(&n));
     }
 
     #[test]

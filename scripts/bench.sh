@@ -1,16 +1,37 @@
 #!/usr/bin/env bash
 # Perf-trajectory harness: times the paper DSE sweep (memoized vs the
-# uncached reference) and a 10k-request fleet drain (DeepCache reuse on
-# vs off), asserting the ISSUE 2 targets (>=5x DSE, >=1.5x fleet
-# throughput at K=3) and writing BENCH_sim.json at the repo root.
+# uncached reference), a 10k-request fleet drain (DeepCache reuse on
+# vs off), and the fleet-scale scheduler sweep (heap event core vs the
+# O(N) reference loop), asserting the ISSUE targets (>=5x DSE, >=1.5x
+# fleet throughput at K=3, >=5x scheduler events/sec at 256 devices)
+# and writing BENCH_sim.json at the repo root.
 #
-# Usage: scripts/bench.sh [--smoke]
-#   --smoke   1-iteration miniature (what scripts/verify.sh runs) so the
-#             harness stays cheap enough for CI.
+# Usage: scripts/bench.sh [--smoke] [--devices-sweep]
+#   --smoke          1-iteration miniature (what scripts/verify.sh runs,
+#                    gating the 64-device scheduler point) so the
+#                    harness stays cheap enough for CI.
+#   --devices-sweep  additionally run benches/cluster_scale.rs with its
+#                    full devices in {1,4,16,64,256} scheduler-scaling
+#                    sweep (artifacts/cluster_scale.json).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-cargo bench --bench sim_hot_path -- "$@"
+devices_sweep=0
+passthrough=()
+for arg in "$@"; do
+    if [ "$arg" = "--devices-sweep" ]; then
+        devices_sweep=1
+    else
+        passthrough+=("$arg")
+    fi
+done
+
+cargo bench --bench sim_hot_path -- ${passthrough[@]+"${passthrough[@]}"}
 
 echo "bench: wrote $(pwd)/BENCH_sim.json"
+
+if [ "$devices_sweep" = 1 ]; then
+    cargo bench --bench cluster_scale -- --devices-sweep
+    echo "bench: wrote $(pwd)/artifacts/cluster_scale.json"
+fi

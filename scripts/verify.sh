@@ -13,7 +13,10 @@ cargo test -q
 
 echo "== bench smoke (sim_hot_path --smoke) =="
 # 1-iteration miniature of the perf harness so it cannot bit-rot; also
-# re-checks cached-vs-uncached bit-identity and the K=3 reuse speedup.
+# re-checks cached-vs-uncached bit-identity, the K=3 reuse speedup, and
+# the fleet-scale sweep up to the 64-device point (heap event core must
+# beat the O(N) reference loop there, so scheduler-scaling regressions
+# fail this gate).
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== cargo fmt --check =="
