@@ -32,8 +32,7 @@ fn main() -> difflight::Result<()> {
     let mut config = EngineConfig::new(args.get_or("artifacts", "artifacts"));
     config.quantized = !args.flag("fp32");
     config.policy.max_batch = batch;
-    config.cluster.devices = devices;
-    config.cluster.capacity = batch;
+    config.cluster = difflight::cluster::ClusterConfig::with_devices(devices).capacity(batch);
     let mut coord = Coordinator::open(config)?;
     println!(
         "serving {requests} requests, {steps} DDIM steps, max_batch {batch}, \

@@ -1,7 +1,9 @@
 //! Scale-out sweep: fleet serving throughput for devices ∈ {1, 2, 4, 8},
-//! plus the scheduler-scaling sweep (devices ∈ {1, 4, 16, 64, 256})
-//! comparing the heap/index event core against the retained O(N)
-//! reference loop in host-side scheduler events/sec.
+//! a heterogeneous big/small fleet sweep (cost-aware vs occupancy-only
+//! routing vs an equal-device-count homogeneous fleet), plus the
+//! scheduler-scaling sweep (devices ∈ {1, 4, 16, 64, 256}) comparing
+//! the heap/index event core against the retained O(N) reference loop
+//! in host-side scheduler events/sec.
 //!
 //! Serves the same synthetic burst through each fleet size and reports
 //! simulated aggregate throughput, latency percentiles, utilization and
@@ -34,14 +36,14 @@ const STEPS: usize = 20;
 const SCALE_DEVICES: [usize; 5] = [1, 4, 16, 64, 256];
 
 fn run_fleet(devices: usize, reuse_interval: usize) -> difflight::cluster::ClusterOutcome {
-    let mut cluster = Cluster::simulated(ClusterConfig {
-        devices,
-        capacity: 4,
-        max_queue: 256,
-        policy: ShardPolicy::LeastLoaded,
-        reuse_interval,
-        ..ClusterConfig::default()
-    });
+    let mut cluster = Cluster::simulated(
+        ClusterConfig::with_devices(devices)
+            .capacity(4)
+            .max_queue(256)
+            .policy(ShardPolicy::LeastLoaded)
+            .with_reuse(reuse_interval),
+    )
+    .expect("valid fleet");
     let workload = synthetic_workload(REQUESTS, 7, SamplerKind::Ddim { steps: STEPS }, 0.0);
     cluster.serve(workload, &mut SimExecutor).expect("fleet serve")
 }
@@ -116,6 +118,58 @@ fn main() {
         );
     }
 
+    // ---- heterogeneous fleet: cost-aware vs occupancy-only routing ----
+    harness::section(&format!(
+        "hetero fleet: {}x{:?} + {}x{:?}, {} requests x {} DDIM steps",
+        harness::HETERO_BIG_COUNT,
+        harness::HETERO_BIG_ARCH,
+        harness::HETERO_SMALL_COUNT,
+        harness::HETERO_SMALL_ARCH,
+        4 * REQUESTS,
+        STEPS,
+    ));
+    let mixed = || {
+        ClusterConfig::heterogeneous(harness::hetero_fleet()).stealing(false)
+    };
+    let homog_devices = harness::HETERO_BIG_COUNT + harness::HETERO_SMALL_COUNT;
+    let mut hetero_sweep = Vec::new();
+    println!(
+        "{:>16} {:>16} {:>12} {:>12}",
+        "fleet", "samples/s (sim)", "p50", "p99"
+    );
+    let mut hetero_tputs = [0.0f64; 3];
+    for (i, (name, cfg)) in [
+        ("cost-aware", mixed().cost_aware(true)),
+        ("occupancy-only", mixed().cost_aware(false)),
+        (
+            "homogeneous",
+            ClusterConfig::with_devices(homog_devices).stealing(false),
+        ),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let (out, _) = harness::hetero_drain(cfg, 4 * REQUESTS, STEPS);
+        let m = &out.metrics;
+        hetero_tputs[i] = m.throughput_samples_per_s();
+        println!(
+            "{:>16} {:>16.2} {:>12} {:>12}",
+            name,
+            m.throughput_samples_per_s(),
+            fmt_si(m.latency_p50_s(), "s"),
+            fmt_si(m.latency_p99_s(), "s"),
+        );
+        hetero_sweep.push(
+            Json::obj()
+                .set("fleet", name)
+                .set("report", m.to_json()),
+        );
+    }
+    println!(
+        "cost-aware routing gain over occupancy-only: {:.2}x",
+        hetero_tputs[0] / hetero_tputs[1]
+    );
+
     // ---- scheduler-scaling sweep: heap core vs reference loop ----
     let full_sweep = std::env::args().any(|a| a == "--devices-sweep");
     let scale_devices: Vec<usize> = SCALE_DEVICES
@@ -163,6 +217,7 @@ fn main() {
         .set("steps", STEPS)
         .set("sweep", Json::Arr(sweep))
         .set("reuse_sweep", Json::Arr(reuse_sweep))
+        .set("hetero_sweep", Json::Arr(hetero_sweep))
         .set("scheduler_scaling", Json::Arr(scale_sweep));
     if std::fs::create_dir_all("artifacts").is_ok() {
         let path = "artifacts/cluster_scale.json";

@@ -104,15 +104,12 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
     use difflight::coordinator::request::SamplerKind;
     use difflight::runtime::manifest::NoiseSchedule;
 
-    let cfg = ClusterConfig {
-        devices,
-        capacity: 4,
-        max_queue: 16,
-        max_backlog: usize::MAX,
-        policy: ShardPolicy::LeastLoaded,
-        ..ClusterConfig::default()
-    };
-    let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+    let cfg = ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(16)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded);
+    let costs = vec![Cost::new(1e-3, 2e-3, 1_000_000, 4); cfg.fleet.len()];
     let schedule = NoiseSchedule::linear(100);
     let workload = synthetic_workload(
         devices * FLEET_SCALE_REQS_PER_DEVICE,
@@ -127,14 +124,14 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
         workload.len()
     );
     let timing = if reference {
-        let mut s = ReferenceScheduler::new(&cfg, cost, schedule, FLEET_SCALE_ELEMS, 8);
+        let mut s = ReferenceScheduler::new(&cfg, &costs, schedule, FLEET_SCALE_ELEMS);
         bench(&name, iters, || {
             let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
             events = out.metrics.sched_events;
             black_box(out);
         })
     } else {
-        let mut s = StepScheduler::new(&cfg, cost, schedule, FLEET_SCALE_ELEMS, 8);
+        let mut s = StepScheduler::new(&cfg, &costs, schedule, FLEET_SCALE_ELEMS);
         bench(&name, iters, || {
             let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
             events = out.metrics.sched_events;
@@ -142,4 +139,59 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
         })
     };
     (events, timing.min_s, events as f64 / timing.min_s)
+}
+
+// ---------------------------------------------------------------------
+// Heterogeneous-fleet workload shared by `cluster_scale` and
+// `sim_hot_path`: a mixed big/small DiffLight fleet from the paper's
+// DSE family, drained with cost-aware vs occupancy-only routing. Work
+// stealing is off in both arms so the comparison isolates the routing
+// policy (stealing would partially rescue the occupancy-only arm at
+// the tail).
+// ---------------------------------------------------------------------
+
+/// The big die: paper-optimal scaled up (more Residual blocks and
+/// attention heads), still within the 36-branch design rule.
+pub const HETERO_BIG_ARCH: [usize; 6] = [8, 12, 3, 8, 6, 3];
+/// The small die: a minimal member of the DSE family (single Residual
+/// block, two attention heads).
+pub const HETERO_SMALL_ARCH: [usize; 6] = [1, 12, 3, 2, 6, 3];
+pub const HETERO_BIG_COUNT: usize = 2;
+pub const HETERO_SMALL_COUNT: usize = 6;
+
+/// The mixed 2-big + 6-small fleet spec.
+pub fn hetero_fleet() -> Vec<(difflight::cluster::DeviceProfile, usize)> {
+    use difflight::arch::ArchConfig;
+    use difflight::cluster::DeviceProfile;
+    let big = DeviceProfile {
+        arch: ArchConfig::from_vector(HETERO_BIG_ARCH, 36),
+        ..DeviceProfile::default()
+    };
+    let small = DeviceProfile {
+        arch: ArchConfig::from_vector(HETERO_SMALL_ARCH, 36),
+        ..DeviceProfile::default()
+    };
+    vec![(big, HETERO_BIG_COUNT), (small, HETERO_SMALL_COUNT)]
+}
+
+/// Drain `requests` DDIM generations through a fleet config; returns
+/// the outcome plus host seconds. Offline semantics (unbounded backlog,
+/// nothing shed).
+pub fn hetero_drain(
+    config: difflight::cluster::ClusterConfig,
+    requests: usize,
+    steps: usize,
+) -> (difflight::cluster::ClusterOutcome, f64) {
+    use difflight::cluster::{synthetic_workload, Cluster, SimExecutor};
+    use difflight::coordinator::request::SamplerKind;
+    use std::time::Instant;
+
+    let mut cluster = Cluster::simulated(config.backlog(usize::MAX).max_queue(256))
+        .expect("hetero fleet must satisfy the design rules");
+    let workload = synthetic_workload(requests, 17, SamplerKind::Ddim { steps }, 0.0);
+    let t0 = Instant::now();
+    let out = cluster.serve(workload, &mut SimExecutor).expect("fleet drain");
+    let host_s = t0.elapsed().as_secs_f64();
+    assert_eq!(out.results.len(), requests, "offline drain must serve everything");
+    (out, host_s)
 }

@@ -18,13 +18,22 @@
 //!    devices ∈ {1, 4, 16, 64, 256}. Asserts the heap core beats the
 //!    reference ≥5x at the 256-device point (≥1.2x at 64 devices in
 //!    smoke mode, which sweeps {1, 16, 64}).
+//! 4. **Fleet hetero** — a mixed big/small fleet (2 + 6 dies from the
+//!    DSE family, per-profile priced) drained with cost-aware routing
+//!    vs occupancy-only routing, plus an equal-device-count homogeneous
+//!    paper fleet for reference. Asserts (a) a 2-profile fleet is
+//!    bit-identical between the heap core and `ReferenceScheduler`
+//!    (the `scripts/verify.sh` hetero parity gate) and (b) cost-aware
+//!    routing lifts mixed-fleet throughput ≥1.2x — both deterministic
+//!    simulated-time results, so they gate in smoke mode too.
 //!
 //! `--smoke` runs a miniature of everything (tiny design space, 200
 //! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
 //! harness from bit-rotting without paying full bench time. Ratio
 //! assertions still run in smoke mode (the smoke fleet-scale gate is
 //! the 64-device point at min-of-2 timing, so scheduler-scaling
-//! regressions fail CI without load-spike flakiness).
+//! regressions fail CI without load-spike flakiness). `--hetero` forces
+//! the full-size hetero sweep (`scripts/bench.sh --hetero`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -47,7 +56,14 @@
 //!     "sweep": [ { "devices": N, "requests": N, "events": N,
 //!                  "heap_events_per_s": x, "reference_events_per_s": x,
 //!                  "speedup": x } ],
-//!     "top_devices": N, "speedup_at_top": x }
+//!     "top_devices": N, "speedup_at_top": x },
+//!   "fleet_hetero": { "requests": N, "steps": N, "work_stealing": false,
+//!     "big": {"arch": "[Y,N,K,H,L,M]", "count": N},
+//!     "small": {"arch": "[Y,N,K,H,L,M]", "count": N},
+//!     "mixed_mrs": N, "homogeneous_mrs": N,
+//!     "cost_aware": {...}, "occupancy_only": {...},
+//!     "homogeneous_equal_area": {...},
+//!     "routing_gain": t_aware / t_blind, "parity_bit_identical": true }
 //! }
 //! ```
 
@@ -57,11 +73,14 @@ mod harness;
 use std::sync::Arc;
 use std::time::Instant;
 
+use difflight::arch::ArchConfig;
 use difflight::cluster::{
-    synthetic_workload, Cluster, ClusterConfig, ClusterOutcome, ShardPolicy, SimExecutor,
+    profile_step_costs, synthetic_workload, Cluster, ClusterConfig, ClusterOutcome,
+    ReferenceScheduler, ShardPolicy, SimExecutor, StepScheduler,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
+use difflight::runtime::manifest::NoiseSchedule;
 use difflight::dse::{explore, explore_uncached, explore_with, DesignSpace};
 use difflight::sim::CostCache;
 use difflight::util::json::Json;
@@ -80,16 +99,16 @@ fn smoke_space() -> DesignSpace {
 }
 
 fn drain(devices: usize, requests: usize, steps: usize, reuse_interval: usize) -> (ClusterOutcome, f64) {
-    let mut cluster = Cluster::simulated(ClusterConfig {
-        devices,
-        capacity: 4,
-        max_queue: 64,
-        // Offline drain: defer overload instead of shedding it.
-        max_backlog: usize::MAX,
-        policy: ShardPolicy::LeastLoaded,
-        reuse_interval,
-        ..ClusterConfig::default()
-    });
+    let mut cluster = Cluster::simulated(
+        ClusterConfig::with_devices(devices)
+            .capacity(4)
+            .max_queue(64)
+            // Offline drain: defer overload instead of shedding it.
+            .backlog(usize::MAX)
+            .policy(ShardPolicy::LeastLoaded)
+            .with_reuse(reuse_interval),
+    )
+    .expect("valid fleet");
     let workload = synthetic_workload(requests, 11, SamplerKind::Ddim { steps }, 0.0);
     let t0 = Instant::now();
     let out = cluster.serve(workload, &mut SimExecutor).expect("fleet drain");
@@ -255,6 +274,96 @@ fn main() {
         );
     }
 
+    // ---- (d) heterogeneous fleet: cost-aware vs occupancy-only ----
+    // Mixed big/small DiffLight dies from the DSE family (shared
+    // workload in benches/harness.rs). Smoke runs a miniature but still
+    // asserts both gates — the parity check and the routing-gain ratio
+    // are simulated-time results, deterministic under host load.
+    // `--hetero` forces the full-size sweep even in smoke mode
+    // (`scripts/bench.sh --hetero`).
+    let hetero_full = !smoke || std::env::args().any(|a| a == "--hetero");
+    let (h_requests, h_steps) = if hetero_full { (512, 12) } else { (160, 8) };
+    harness::section(&format!(
+        "fleet hetero ({}): {}x{:?} + {}x{:?}, {h_requests} requests x {h_steps} DDIM steps",
+        if hetero_full { "full" } else { "smoke" },
+        harness::HETERO_BIG_COUNT,
+        harness::HETERO_BIG_ARCH,
+        harness::HETERO_SMALL_COUNT,
+        harness::HETERO_SMALL_ARCH,
+    ));
+
+    // Parity gate (runs in smoke too — scripts/verify.sh relies on it):
+    // a 2-profile fleet must be bit-identical between the heap event
+    // core and the ReferenceScheduler, metrics included.
+    {
+        let cfg = ClusterConfig::heterogeneous(harness::hetero_fleet())
+            .max_queue(256)
+            .backlog(usize::MAX);
+        let costs = profile_step_costs(&cfg).expect("hetero fleet must price");
+        let schedule = NoiseSchedule::linear(1000);
+        let reqs = synthetic_workload(64, 23, SamplerKind::Ddim { steps: 8 }, 1e-5);
+        let mut heap = StepScheduler::new(&cfg, &costs, schedule.clone(), 256);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, schedule, 256);
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).expect("heap serve");
+        let b = reference.serve(reqs, &mut SimExecutor).expect("reference serve");
+        assert_eq!(a.metrics, b.metrics, "hetero parity: metrics diverged");
+        assert_eq!(a.results.len(), b.results.len());
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device), "hetero parity: placement");
+            assert_eq!(ra.sample, rb.sample, "hetero parity: samples");
+            assert!(ra.finish_s == rb.finish_s, "hetero parity: timings");
+        }
+        println!(
+            "hetero parity gate: heap == reference over a 2-profile fleet \
+             ({} events, bit-identical)",
+            a.metrics.sched_events
+        );
+    }
+
+    // Work stealing off in both arms: the comparison isolates routing.
+    let mixed = || ClusterConfig::heterogeneous(harness::hetero_fleet()).stealing(false);
+    let (aware, aware_host) = harness::hetero_drain(mixed().cost_aware(true), h_requests, h_steps);
+    let (blind, blind_host) = harness::hetero_drain(mixed().cost_aware(false), h_requests, h_steps);
+    // Equal-device-count homogeneous paper fleet as the area reference.
+    let homog_cfg = ClusterConfig::with_devices(
+        harness::HETERO_BIG_COUNT + harness::HETERO_SMALL_COUNT,
+    )
+    .stealing(false);
+    let (homog, homog_host) = harness::hetero_drain(homog_cfg, h_requests, h_steps);
+    // Routing never changes what gets generated.
+    for (ra, rb) in aware.results.iter().zip(blind.results.iter()) {
+        assert_eq!(ra.id, rb.id);
+        assert_eq!(ra.sample, rb.sample, "routing must not change samples");
+    }
+    let t_aware = aware.metrics.throughput_samples_per_s();
+    let t_blind = blind.metrics.throughput_samples_per_s();
+    let routing_gain = t_aware / t_blind;
+    let mixed_mrs = harness::HETERO_BIG_COUNT
+        * ArchConfig::from_vector(harness::HETERO_BIG_ARCH, 36).total_mrs()
+        + harness::HETERO_SMALL_COUNT
+            * ArchConfig::from_vector(harness::HETERO_SMALL_ARCH, 36).total_mrs();
+    let homog_mrs = (harness::HETERO_BIG_COUNT + harness::HETERO_SMALL_COUNT)
+        * ArchConfig::paper_optimal().total_mrs();
+    println!(
+        "cost-aware:     {:.1} samples/s (sim), makespan {:.3}s, host {:.2}s",
+        t_aware, aware.metrics.makespan_s, aware_host
+    );
+    println!(
+        "occupancy-only: {:.1} samples/s (sim), makespan {:.3}s, host {:.2}s",
+        t_blind, blind.metrics.makespan_s, blind_host
+    );
+    println!(
+        "homogeneous:    {:.1} samples/s (sim, 8x paper die, {homog_mrs} MRs vs mixed {mixed_mrs}), host {:.2}s",
+        homog.metrics.throughput_samples_per_s(),
+        homog_host
+    );
+    println!("cost-aware routing gain over occupancy-only: {routing_gain:.2}x");
+    assert!(
+        routing_gain >= 1.2,
+        "cost-aware routing must lift mixed-fleet throughput >= 1.2x \
+         over occupancy-only (got {routing_gain:.2}x)"
+    );
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -296,6 +405,32 @@ fn main() {
                 .set("sweep", Json::Arr(scale_sweep))
                 .set("top_devices", top_devices)
                 .set("speedup_at_top", top_speedup),
+        )
+        .set(
+            "fleet_hetero",
+            Json::obj()
+                .set("requests", h_requests)
+                .set("steps", h_steps)
+                .set("work_stealing", false)
+                .set(
+                    "big",
+                    Json::obj()
+                        .set("arch", format!("{:?}", harness::HETERO_BIG_ARCH))
+                        .set("count", harness::HETERO_BIG_COUNT),
+                )
+                .set(
+                    "small",
+                    Json::obj()
+                        .set("arch", format!("{:?}", harness::HETERO_SMALL_ARCH))
+                        .set("count", harness::HETERO_SMALL_COUNT),
+                )
+                .set("mixed_mrs", mixed_mrs)
+                .set("homogeneous_mrs", homog_mrs)
+                .set("cost_aware", cluster_json(&aware, aware_host))
+                .set("occupancy_only", cluster_json(&blind, blind_host))
+                .set("homogeneous_equal_area", cluster_json(&homog, homog_host))
+                .set("routing_gain", routing_gain)
+                .set("parity_bit_identical", true),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

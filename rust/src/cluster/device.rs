@@ -71,6 +71,12 @@ impl Default for ReuseSchedule {
 #[derive(Debug, Clone)]
 pub struct Device {
     pub id: DeviceId,
+    /// Index of the [`crate::cluster::DeviceProfile`] group this device
+    /// was built from (0 for ad-hoc devices), for per-profile metric
+    /// roll-ups.
+    pub profile: usize,
+    /// Datapath bit-width of this die (EPB denominator).
+    pub bit_width: u32,
     /// Max samples resident in the step batch at once.
     pub capacity: usize,
     /// Max samples waiting behind the resident set before the router
@@ -132,6 +138,8 @@ impl Device {
         };
         Self {
             id: DeviceId(id),
+            profile: 0,
+            bit_width: 8,
             capacity,
             max_queue,
             step_base,
@@ -149,6 +157,46 @@ impl Device {
             reuse_hits: 0,
             reuse_misses: 0,
         }
+    }
+
+    /// Build a fleet device from its profile: the step cost comes from
+    /// pricing the profile's own `[Y,N,K,H,L,M]@λ`/`OptFlags`/bit-width
+    /// (see [`crate::cluster::profile_step_costs`]); everything else is
+    /// the profile's queueing shape.
+    pub fn from_profile(
+        id: usize,
+        profile_index: usize,
+        profile: &crate::cluster::DeviceProfile,
+        step_base: Cost,
+    ) -> Self {
+        let mut d = Self::new(
+            id,
+            step_base,
+            profile.capacity,
+            profile.max_queue,
+            profile.batch_marginal,
+            ReuseSchedule::every(profile.reuse_interval.max(1), profile.reuse_shallow_frac),
+        );
+        d.profile = profile_index;
+        d.bit_width = profile.bit_width;
+        d
+    }
+
+    /// Estimated per-occupant drain cost in integer nanoseconds — the
+    /// cost-aware router's weight. This is the expected single-sample
+    /// step latency averaged over the reuse cycle (one full step plus
+    /// `interval - 1` shallow steps), so a die running DeepCache at K=3
+    /// ranks as proportionally faster to drain. Integer so it can key
+    /// ordered sets; clamped to ≥ 1 so occupancy never vanishes from
+    /// the product.
+    pub fn drain_ns(&self) -> u64 {
+        let eff = if self.reuse.enabled() {
+            let k = self.reuse.interval as f64;
+            self.step_base.latency_s * (1.0 + (k - 1.0) * self.reuse.shallow_frac) / k
+        } else {
+            self.step_base.latency_s
+        };
+        ((eff * 1e9).ceil() as u64).max(1)
     }
 
     /// Will the next fused step run the full UNet? `force_full` is set by
@@ -384,6 +432,35 @@ mod tests {
     #[should_panic(expected = "shallow step fraction")]
     fn reuse_on_rejects_zero_frac() {
         Device::new(0, Cost::new(1e-3, 2e-3, 1, 1), 1, 1, 0.0, ReuseSchedule::every(2, 0.0));
+    }
+
+    #[test]
+    fn from_profile_carries_identity_and_shape() {
+        let profile = crate::cluster::DeviceProfile {
+            capacity: 2,
+            max_queue: 5,
+            batch_marginal: 0.5,
+            reuse_interval: 3,
+            reuse_shallow_frac: 0.25,
+            bit_width: 4,
+            ..crate::cluster::DeviceProfile::default()
+        };
+        let d = Device::from_profile(7, 1, &profile, Cost::new(2e-3, 1e-3, 100, 1));
+        assert_eq!(d.id, DeviceId(7));
+        assert_eq!((d.profile, d.bit_width), (1, 4));
+        assert_eq!((d.capacity, d.max_queue), (2, 5));
+        assert!(!d.next_step_full(false) || d.next_step_full(true));
+    }
+
+    #[test]
+    fn drain_ns_weights_by_reuse_cycle() {
+        let no_reuse = dev();
+        // 1e-3 s full step → 1_000_000 ns per occupant.
+        assert_eq!(no_reuse.drain_ns(), 1_000_000);
+        // K=4 at frac 0.25: (1 + 3·0.25)/4 = 0.4375 of the full step.
+        let d = reuse_dev(4, 0.25);
+        assert_eq!(d.drain_ns(), 437_500);
+        assert!(d.drain_ns() < no_reuse.drain_ns());
     }
 
     #[test]

@@ -1,8 +1,14 @@
-//! Fleet metrics: per-device and aggregate roll-ups over a serving run.
+//! Fleet metrics: per-device, per-profile and aggregate roll-ups over a
+//! serving run.
 //!
 //! All times are **simulated** seconds (the cluster's device clocks), so
 //! throughput/latency here compose with the `sim::report` numbers rather
 //! than with host wall-clock. Percentiles reuse [`crate::util::stats`].
+//!
+//! Every derived rate guards its denominator: a degenerate run (zero
+//! makespan, no completions, no ops — reachable via an all-zero-step
+//! workload that completes at admission) reports `0.0`, never NaN and
+//! never a panic.
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -13,6 +19,11 @@ use super::device::Device;
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceMetrics {
     pub id: usize,
+    /// Index of the fleet profile group this device belongs to.
+    pub profile: usize,
+    /// The device's own datapath bit-width (EPB denominator — devices in
+    /// a heterogeneous fleet may differ).
+    pub bit_width: u32,
     pub steps_executed: u64,
     pub samples_completed: u64,
     pub busy_s: f64,
@@ -30,6 +41,8 @@ impl DeviceMetrics {
     pub fn snapshot(d: &Device) -> Self {
         Self {
             id: d.id.0,
+            profile: d.profile,
+            bit_width: d.bit_width,
             steps_executed: d.steps_executed,
             samples_completed: d.samples_completed,
             busy_s: d.busy_s,
@@ -41,7 +54,7 @@ impl DeviceMetrics {
         }
     }
 
-    /// Busy fraction of the fleet makespan.
+    /// Busy fraction of the fleet makespan; 0.0 for a zero makespan.
     pub fn utilization(&self, makespan_s: f64) -> f64 {
         if makespan_s == 0.0 {
             0.0
@@ -58,9 +71,9 @@ impl DeviceMetrics {
         }
     }
 
-    /// Energy per bit at the given datapath width.
-    pub fn epb(&self, bit_width: u32) -> f64 {
-        let bits = self.ops as f64 * bit_width as f64;
+    /// Energy per bit at this device's own datapath width.
+    pub fn epb(&self) -> f64 {
+        let bits = self.ops as f64 * self.bit_width as f64;
         if bits == 0.0 {
             0.0
         } else {
@@ -68,17 +81,92 @@ impl DeviceMetrics {
         }
     }
 
-    pub fn to_json(&self, makespan_s: f64, bit_width: u32) -> Json {
+    pub fn to_json(&self, makespan_s: f64) -> Json {
         Json::obj()
             .set("device", self.id)
+            .set("profile", self.profile)
+            .set("bit_width", self.bit_width)
             .set("steps", self.steps_executed)
             .set("samples", self.samples_completed)
             .set("busy_s", self.busy_s)
             .set("utilization", self.utilization(makespan_s))
             .set("energy_j", self.energy_j)
             .set("gops", self.gops())
-            .set("epb_j_per_bit", self.epb(bit_width))
+            .set("epb_j_per_bit", self.epb())
             .set("fused_steps", self.fused_steps)
+            .set("reuse_hits", self.reuse_hits)
+            .set("reuse_misses", self.reuse_misses)
+    }
+}
+
+/// Roll-up of one fleet profile group (all devices built from the same
+/// [`super::DeviceProfile`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileMetrics {
+    pub profile: usize,
+    pub devices: usize,
+    pub bit_width: u32,
+    pub steps_executed: u64,
+    pub samples_completed: u64,
+    pub busy_s: f64,
+    pub energy_j: f64,
+    pub ops: u64,
+    pub reuse_hits: u64,
+    pub reuse_misses: u64,
+}
+
+impl ProfileMetrics {
+    /// Group throughput over the fleet makespan; 0.0 for zero makespan.
+    pub fn throughput_samples_per_s(&self, makespan_s: f64) -> f64 {
+        if makespan_s == 0.0 {
+            0.0
+        } else {
+            self.samples_completed as f64 / makespan_s
+        }
+    }
+
+    /// Mean busy fraction across the group's devices; 0.0 when the group
+    /// is empty or the makespan is zero.
+    pub fn utilization(&self, makespan_s: f64) -> f64 {
+        let denom = self.devices as f64 * makespan_s;
+        if denom == 0.0 {
+            0.0
+        } else {
+            self.busy_s / denom
+        }
+    }
+
+    /// Group energy per bit at the group's datapath width.
+    pub fn epb(&self) -> f64 {
+        let bits = self.ops as f64 * self.bit_width as f64;
+        if bits == 0.0 {
+            0.0
+        } else {
+            self.energy_j / bits
+        }
+    }
+
+    /// Group GOPS over the makespan; 0.0 for zero makespan.
+    pub fn gops(&self, makespan_s: f64) -> f64 {
+        if makespan_s == 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / makespan_s / 1e9
+        }
+    }
+
+    pub fn to_json(&self, makespan_s: f64) -> Json {
+        Json::obj()
+            .set("profile", self.profile)
+            .set("devices", self.devices)
+            .set("bit_width", self.bit_width)
+            .set("steps", self.steps_executed)
+            .set("samples", self.samples_completed)
+            .set("throughput_samples_per_s", self.throughput_samples_per_s(makespan_s))
+            .set("utilization", self.utilization(makespan_s))
+            .set("energy_j", self.energy_j)
+            .set("gops", self.gops(makespan_s))
+            .set("epb_j_per_bit", self.epb())
             .set("reuse_hits", self.reuse_hits)
             .set("reuse_misses", self.reuse_misses)
     }
@@ -98,6 +186,8 @@ pub struct FleetMetrics {
     pub makespan_s: f64,
     pub samples_completed: u64,
     pub rejected: u64,
+    /// Representative datapath width (the first device's); per-device
+    /// and per-profile EPB use each group's own width.
     pub bit_width: u32,
     /// Discrete events the scheduler processed in this serving window
     /// (arrival bursts + step completions) — the denominator for the
@@ -112,7 +202,7 @@ impl FleetMetrics {
         self.samples_completed += 1;
     }
 
-    /// Aggregate simulated throughput, samples/s.
+    /// Aggregate simulated throughput, samples/s; 0.0 for zero makespan.
     pub fn throughput_samples_per_s(&self) -> f64 {
         if self.makespan_s == 0.0 {
             0.0
@@ -121,21 +211,25 @@ impl FleetMetrics {
         }
     }
 
+    /// p50 end-to-end latency; 0.0 when nothing completed.
     pub fn latency_p50_s(&self) -> f64 {
         stats::percentile(&self.latencies_s, 50.0)
     }
 
+    /// p99 end-to-end latency; 0.0 when nothing completed.
     pub fn latency_p99_s(&self) -> f64 {
         stats::percentile(&self.latencies_s, 99.0)
     }
 
-    /// Fleet energy per bit: total energy over total data bits moved.
+    /// Fleet energy per bit: total energy over total data bits moved
+    /// (each device weighted by its own datapath width); 0.0 when no
+    /// ops ran.
     pub fn fleet_epb(&self) -> f64 {
         let energy: f64 = self.devices.iter().map(|d| d.energy_j).sum();
         let bits: f64 = self
             .devices
             .iter()
-            .map(|d| d.ops as f64 * self.bit_width as f64)
+            .map(|d| d.ops as f64 * d.bit_width as f64)
             .sum();
         if bits == 0.0 {
             0.0
@@ -164,13 +258,50 @@ impl FleetMetrics {
         }
     }
 
-    /// Fleet GOPS over the makespan (aggregate, not per-busy-second).
+    /// Fleet GOPS over the makespan (aggregate, not per-busy-second);
+    /// 0.0 for zero makespan.
     pub fn fleet_gops(&self) -> f64 {
         if self.makespan_s == 0.0 {
             return 0.0;
         }
         let ops: f64 = self.devices.iter().map(|d| d.ops as f64).sum();
         ops / self.makespan_s / 1e9
+    }
+
+    /// Per-profile roll-up, ascending profile index. Every device
+    /// contributes to exactly one group.
+    pub fn per_profile(&self) -> Vec<ProfileMetrics> {
+        let mut groups: Vec<ProfileMetrics> = Vec::new();
+        for d in &self.devices {
+            let group = match groups.iter_mut().find(|g| g.profile == d.profile) {
+                Some(g) => g,
+                None => {
+                    groups.push(ProfileMetrics {
+                        profile: d.profile,
+                        devices: 0,
+                        bit_width: d.bit_width,
+                        steps_executed: 0,
+                        samples_completed: 0,
+                        busy_s: 0.0,
+                        energy_j: 0.0,
+                        ops: 0,
+                        reuse_hits: 0,
+                        reuse_misses: 0,
+                    });
+                    groups.last_mut().expect("just pushed")
+                }
+            };
+            group.devices += 1;
+            group.steps_executed += d.steps_executed;
+            group.samples_completed += d.samples_completed;
+            group.busy_s += d.busy_s;
+            group.energy_j += d.energy_j;
+            group.ops += d.ops;
+            group.reuse_hits += d.reuse_hits;
+            group.reuse_misses += d.reuse_misses;
+        }
+        groups.sort_by_key(|g| g.profile);
+        groups
     }
 
     /// JSON report, exported alongside the `sim::report` output so bench
@@ -192,11 +323,20 @@ impl FleetMetrics {
             .set("reuse_misses", self.reuse_misses())
             .set("reuse_hit_rate", self.reuse_hit_rate())
             .set(
+                "per_profile",
+                Json::Arr(
+                    self.per_profile()
+                        .iter()
+                        .map(|g| g.to_json(self.makespan_s))
+                        .collect(),
+                ),
+            )
+            .set(
                 "per_device",
                 Json::Arr(
                     self.devices
                         .iter()
-                        .map(|d| d.to_json(self.makespan_s, self.bit_width))
+                        .map(|d| d.to_json(self.makespan_s))
                         .collect(),
                 ),
             )
@@ -210,6 +350,8 @@ mod tests {
     fn dm(id: usize, busy: f64, energy: f64, ops: u64) -> DeviceMetrics {
         DeviceMetrics {
             id,
+            profile: 0,
+            bit_width: 8,
             steps_executed: 10,
             samples_completed: 2,
             busy_s: busy,
@@ -249,7 +391,26 @@ mod tests {
         let m = fleet();
         assert!((m.devices[0].utilization(m.makespan_s) - 0.25).abs() < 1e-12);
         assert!((m.devices[0].gops() - 1.0).abs() < 1e-12);
-        assert!((m.devices[0].epb(8) - 1e-9).abs() < 1e-18);
+        assert!((m.devices[0].epb() - 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn per_profile_groups_by_profile_index() {
+        let mut m = fleet();
+        m.devices[1].profile = 1;
+        m.devices[1].bit_width = 4;
+        m.devices.push(DeviceMetrics { id: 2, profile: 1, ..dm(2, 1.0, 4.0, 1_000_000_000) });
+        let groups = m.per_profile();
+        assert_eq!(groups.len(), 2);
+        assert_eq!((groups[0].profile, groups[0].devices), (0, 1));
+        assert_eq!((groups[1].profile, groups[1].devices), (1, 2));
+        assert_eq!(groups[1].bit_width, 4);
+        assert_eq!(groups[1].samples_completed, 4);
+        // Group 1: (8 + 4) J over (3e9 + 1e9) ops * 4 bits.
+        assert!((groups[1].epb() - 12.0 / 16e9).abs() < 1e-20);
+        // Mean utilization of group 1's two devices: (3 + 1) / (2 * 4).
+        assert!((groups[1].utilization(m.makespan_s) - 0.5).abs() < 1e-12);
+        assert!((groups[1].throughput_samples_per_s(m.makespan_s) - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -257,6 +418,7 @@ mod tests {
         let j = fleet().to_json();
         assert_eq!(j.get("devices").and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.get("per_device").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert_eq!(j.get("per_profile").and_then(Json::as_arr).map(|a| a.len()), Some(1));
         assert!(j.get("latency_p99_s").is_some());
         // DeepCache hit/miss counts ride along in the fleet export.
         assert_eq!(j.get("reuse_hits").and_then(Json::as_f64), Some(12.0));
@@ -281,5 +443,51 @@ mod tests {
         assert_eq!(m.throughput_samples_per_s(), 0.0);
         assert_eq!(m.fleet_epb(), 0.0);
         assert_eq!(m.fleet_gops(), 0.0);
+    }
+
+    #[test]
+    fn degenerate_run_reports_zeros_not_nans() {
+        // Regression (ISSUE 4 satellite): a run with devices attached
+        // but zero makespan, zero completions and zero ops — what an
+        // all-`Ddim { steps: 0 }` workload produces — must report 0.0
+        // everywhere, with no NaN and no panic, and still serialize.
+        let idle = DeviceMetrics {
+            steps_executed: 0,
+            samples_completed: 0,
+            busy_s: 0.0,
+            energy_j: 0.0,
+            ops: 0,
+            fused_steps: 0,
+            reuse_hits: 0,
+            reuse_misses: 0,
+            ..dm(0, 0.0, 0.0, 0)
+        };
+        let m = FleetMetrics {
+            devices: vec![idle.clone(), DeviceMetrics { id: 1, profile: 1, ..idle }],
+            makespan_s: 0.0,
+            bit_width: 8,
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_samples_per_s(), 0.0);
+        assert_eq!(m.latency_p50_s(), 0.0);
+        assert_eq!(m.latency_p99_s(), 0.0);
+        assert_eq!(m.fleet_epb(), 0.0);
+        assert_eq!(m.fleet_gops(), 0.0);
+        assert_eq!(m.reuse_hit_rate(), 0.0);
+        for d in &m.devices {
+            assert_eq!(d.utilization(m.makespan_s), 0.0);
+            assert_eq!(d.gops(), 0.0);
+            assert_eq!(d.epb(), 0.0);
+        }
+        for g in m.per_profile() {
+            assert_eq!(g.throughput_samples_per_s(m.makespan_s), 0.0);
+            assert_eq!(g.utilization(m.makespan_s), 0.0);
+            assert_eq!(g.epb(), 0.0);
+            assert_eq!(g.gops(m.makespan_s), 0.0);
+        }
+        let j = m.to_json();
+        let text = j.to_string_pretty();
+        assert!(!text.contains("NaN") && !text.contains("nan"), "JSON must not carry NaN");
+        assert!(Json::parse(&text).is_ok());
     }
 }

@@ -8,68 +8,81 @@
 //! batches between UNet calls, and a shard router spreads load with
 //! admission control and backpressure.
 //!
+//! Fleets may be **heterogeneous**: [`ClusterConfig`] is a fleet spec —
+//! `Vec<(DeviceProfile, count)>` — and every device is priced from its
+//! *own* `[Y,N,K,H,L,M]@λ` architecture, optimizations and bit-width
+//! through the shared [`crate::sim::cache`] step memo (whose key already
+//! carries `ArchConfig`/`OptFlags`/bit-width, so profiles share priced
+//! layers). The homogeneous fleet is the one-profile special case and
+//! reproduces the pre-heterogeneous scheduler bit-for-bit.
+//!
+//! * [`profile`] — [`DeviceProfile`] and the `--fleet` spec grammar.
 //! * [`device`] — device handle: batch-slot capacity, simulated clock,
 //!   per-step cost from [`crate::arch::cost`].
 //! * [`router`] — shard policies: round-robin, least-loaded,
 //!   sampler-signature affinity; both the stateless snapshot router and
-//!   the incrementally maintained O(log N) [`RouterIndex`].
+//!   the incrementally maintained O(log N) [`RouterIndex`]. Least-loaded
+//!   ranks by estimated **time-to-drain** (occupancy × per-device step
+//!   latency), so a mixed big/small fleet loads dies in proportion to
+//!   their speed.
 //! * [`scheduler`] — the heap-based discrete-event core (O(log N) per
 //!   event: completion heap, router index, dirty-set kicks, zero-alloc
 //!   fused-step buffers) over [`crate::util::threadpool`].
 //! * [`reference`] — the retained O(events × devices) loop, the
 //!   bit-identity oracle and scaling baseline for the event core.
-//! * [`metrics`] — per-device + fleet p50/p99 latency, EPB and GOPS
-//!   roll-ups reusing [`crate::util::stats`].
+//! * [`metrics`] — per-device, per-profile and fleet p50/p99 latency,
+//!   EPB and GOPS roll-ups reusing [`crate::util::stats`].
 
 pub mod device;
 pub mod metrics;
+pub mod profile;
 pub mod reference;
 pub mod router;
 pub mod scheduler;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
-pub use metrics::{DeviceMetrics, FleetMetrics};
+pub use metrics::{DeviceMetrics, FleetMetrics, ProfileMetrics};
+pub use profile::{parse_fleet_json, parse_fleet_spec, DeviceProfile};
 pub use reference::ReferenceScheduler;
 pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
 pub use scheduler::{
     ClusterOutcome, ClusterRequest, ClusterResult, SimExecutor, StepExecutor, StepScheduler,
 };
 
-use crate::arch::cost::OptFlags;
+use std::sync::Arc;
+
+use crate::arch::cost::{Cost, OptFlags};
+use crate::arch::units::Accelerator;
 use crate::coordinator::request::SamplerKind;
+use crate::devices::DeviceParams;
 use crate::runtime::manifest::NoiseSchedule;
-use crate::sim::Simulator;
+use crate::sim::{CostCache, Simulator};
 use crate::util::rng::XorShift;
 use crate::workload::ModelId;
 
-/// Fleet shape and policy.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Fleet shape and policy: a spec of `(profile, count)` device groups
+/// plus the fleet-level scheduling knobs. Devices are numbered densely
+/// in spec order (group 0's devices first).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
-    /// Number of simulated DiffLight devices.
-    pub devices: usize,
-    /// Resident batch slots per device.
-    pub capacity: usize,
-    /// Admission-queue depth per device before backpressure.
-    pub max_queue: usize,
+    /// The fleet spec: device groups in id order. One group = the
+    /// homogeneous fleet (today's behaviour, bit-for-bit).
+    pub fleet: Vec<(DeviceProfile, usize)>,
     /// Fleet-level deferral backlog: requests that find every device
     /// full wait here and are re-routed at the next step boundary.
     /// `0` (the default) sheds immediately — live-serving backpressure;
     /// drained/offline callers raise it so nothing is dropped.
     pub max_backlog: usize,
     pub policy: ShardPolicy,
-    /// Workload whose per-step cost prices the device clock.
+    /// Workload whose per-step cost prices the device clocks.
     pub model: ModelId,
-    pub opts: OptFlags,
-    /// Marginal latency of each extra resident sample in a fused step,
-    /// as a fraction of the single-sample step latency.
-    pub batch_marginal: f64,
-    /// DeepCache step reuse: run the full UNet every `reuse_interval`
-    /// fused steps and the shallow cache-hit path in between. `1` (the
-    /// default) disables reuse and reproduces the pre-reuse schedule
-    /// exactly.
-    pub reuse_interval: usize,
-    /// Cost of a shallow cache-hit step relative to a full step.
-    pub reuse_shallow_frac: f64,
+    /// Rank least-loaded picks and work-stealing donors by estimated
+    /// time-to-drain (occupancy × per-device step latency) instead of
+    /// raw occupancy. On a homogeneous fleet the two are identical; on
+    /// a mixed fleet cost-aware routing loads devices in proportion to
+    /// their speed. `false` keeps the occupancy-only ranking (the
+    /// baseline the hetero benches compare against).
+    pub cost_aware: bool,
     /// Let idle, empty devices steal queued requests from the
     /// most-loaded busy device at step boundaries.
     pub work_stealing: bool,
@@ -78,58 +91,221 @@ pub struct ClusterConfig {
 impl Default for ClusterConfig {
     fn default() -> Self {
         Self {
-            devices: 1,
-            capacity: 4,
-            max_queue: 64,
+            fleet: vec![(DeviceProfile::default(), 1)],
             max_backlog: 0,
             policy: ShardPolicy::default(),
             model: ModelId::DdpmCifar10,
-            opts: OptFlags::ALL,
-            batch_marginal: 0.25,
-            reuse_interval: 1,
-            reuse_shallow_frac: 0.25,
+            cost_aware: true,
             work_stealing: true,
         }
     }
 }
 
 impl ClusterConfig {
+    /// A homogeneous fleet of `devices` paper-optimal dies.
     pub fn with_devices(devices: usize) -> Self {
-        Self { devices, ..Self::default() }
+        Self::homogeneous(DeviceProfile::default(), devices)
     }
 
-    /// Enable DeepCache step reuse at interval `k` (1 = off).
+    /// A homogeneous fleet of `count` copies of one profile.
+    pub fn homogeneous(profile: DeviceProfile, count: usize) -> Self {
+        Self { fleet: vec![(profile, count)], ..Self::default() }
+    }
+
+    /// A heterogeneous fleet from a spec (`(profile, count)` groups).
+    pub fn heterogeneous(fleet: Vec<(DeviceProfile, usize)>) -> Self {
+        Self { fleet, ..Self::default() }
+    }
+
+    /// Total device count across all groups.
+    pub fn device_count(&self) -> usize {
+        self.fleet.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Does any profile run DeepCache step reuse?
+    pub fn any_reuse(&self) -> bool {
+        self.fleet.iter().any(|(p, _)| p.reuse_interval > 1)
+    }
+
+    /// Does this config require the step-level fleet scheduler — more
+    /// than one device, any DeepCache reuse, or a profile whose *priced
+    /// identity* (arch / opts / bit-width) differs from the default
+    /// die? A custom arch only has meaning on the simulated device
+    /// clocks, so a one-device `--fleet "Y2...x1"` must still route to
+    /// the cluster path rather than being silently dropped. Capacity /
+    /// queue shape alone keeps the single-device loop (there they alias
+    /// the batcher's `max_batch`).
+    pub fn needs_fleet_scheduler(&self) -> bool {
+        let d = DeviceProfile::default();
+        self.device_count() > 1
+            || self.any_reuse()
+            || self
+                .fleet
+                .iter()
+                .any(|(p, _)| p.arch != d.arch || p.opts != d.opts || p.bit_width != d.bit_width)
+    }
+
+    /// Per-device profiles in device-id order, as `(profile index,
+    /// profile)` pairs — what the schedulers materialize devices from.
+    pub fn device_profiles(&self) -> impl Iterator<Item = (usize, &DeviceProfile)> {
+        self.fleet
+            .iter()
+            .enumerate()
+            .flat_map(|(pi, (p, n))| std::iter::repeat((pi, p)).take(*n))
+    }
+
+    // --- chainable knob setters (applied to every profile group, so the
+    // homogeneous call sites read like the old field assignments) ---
+
+    /// Set resident batch slots on every profile.
+    pub fn capacity(mut self, capacity: usize) -> Self {
+        for (p, _) in &mut self.fleet {
+            p.capacity = capacity;
+        }
+        self
+    }
+
+    /// Set admission-queue depth on every profile.
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        for (p, _) in &mut self.fleet {
+            p.max_queue = max_queue;
+        }
+        self
+    }
+
+    /// Set the fused-batch marginal-latency factor on every profile.
+    pub fn batch_marginal(mut self, marginal: f64) -> Self {
+        for (p, _) in &mut self.fleet {
+            p.batch_marginal = marginal;
+        }
+        self
+    }
+
+    /// Enable DeepCache step reuse at interval `k` (1 = off) fleet-wide.
     pub fn with_reuse(mut self, k: usize) -> Self {
-        self.reuse_interval = k.max(1);
+        for (p, _) in &mut self.fleet {
+            p.reuse_interval = k.max(1);
+        }
+        self
+    }
+
+    /// Set the shallow cache-hit step cost fraction on every profile.
+    pub fn shallow_frac(mut self, frac: f64) -> Self {
+        for (p, _) in &mut self.fleet {
+            p.reuse_shallow_frac = frac;
+        }
+        self
+    }
+
+    /// Set the dataflow optimizations on every profile.
+    pub fn opts(mut self, opts: OptFlags) -> Self {
+        for (p, _) in &mut self.fleet {
+            p.opts = opts;
+        }
+        self
+    }
+
+    pub fn policy(mut self, policy: ShardPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn backlog(mut self, max_backlog: usize) -> Self {
+        self.max_backlog = max_backlog;
+        self
+    }
+
+    pub fn stealing(mut self, on: bool) -> Self {
+        self.work_stealing = on;
+        self
+    }
+
+    pub fn cost_aware(mut self, on: bool) -> Self {
+        self.cost_aware = on;
         self
     }
 }
 
-/// Facade tying the cost model to the scheduler: prices one denoise step
-/// on the paper-optimal accelerator and builds the fleet.
+/// Process-wide per-bit-width cost caches for non-paper datapaths (a
+/// [`CostCache`] is tied to the [`DeviceParams`] it was built with, so
+/// each width needs its own). Shared across fleet constructions so
+/// repeated `Cluster::new` calls never re-price; bounded by the number
+/// of distinct bit-widths ever used in the process (a handful).
+static WIDTH_CACHES: once_cell::sync::Lazy<std::sync::Mutex<Vec<(u32, Arc<CostCache>)>>> =
+    once_cell::sync::Lazy::new(|| std::sync::Mutex::new(Vec::new()));
+
+/// The shared cost cache for Table II paper parameters at `bit_width`
+/// (the paper width resolves to [`CostCache::shared_paper`] itself).
+fn cache_for_width(bit_width: u32) -> Arc<CostCache> {
+    let paper = CostCache::shared_paper();
+    if bit_width == paper.params().bit_width {
+        return paper;
+    }
+    let mut caches = WIDTH_CACHES.lock().expect("width cache lock");
+    if let Some((_, c)) = caches.iter().find(|(w, _)| *w == bit_width) {
+        return c.clone();
+    }
+    let params = DeviceParams { bit_width, ..DeviceParams::paper() };
+    let c = Arc::new(CostCache::new(params));
+    caches.push((bit_width, c.clone()));
+    c
+}
+
+/// Price one denoise step of `model` for every profile group, through
+/// the shared per-bit-width cost caches (the step key already carries
+/// `ArchConfig`/`OptFlags`/bit-width, so profiles share priced layers
+/// and repeated fleet constructions never re-price). Returns one
+/// [`Cost`] per fleet group.
+pub fn profile_step_costs(config: &ClusterConfig) -> crate::Result<Vec<Cost>> {
+    // An empty spec must be an Err from the Result-returning facade, not
+    // a downstream scheduler assertion panic.
+    anyhow::ensure!(
+        config.device_count() >= 1,
+        "fleet spec has no devices ({} profile groups)",
+        config.fleet.len()
+    );
+    let mut costs = Vec::with_capacity(config.fleet.len());
+    for (profile, count) in &config.fleet {
+        anyhow::ensure!(*count >= 1, "fleet group {} has count 0", profile.spec());
+        let cache = cache_for_width(profile.bit_width);
+        profile.validate(cache.params())?;
+        let accelerator = Accelerator::new(profile.arch, cache.params())?;
+        let sim = Simulator::with_cache(accelerator, cache);
+        costs.push(sim.model_step_cost(config.model, profile.opts));
+    }
+    Ok(costs)
+}
+
+/// Facade tying the cost model to the scheduler: prices each profile's
+/// denoise step on its own accelerator configuration and builds the
+/// fleet.
 pub struct Cluster {
     pub config: ClusterConfig,
     scheduler: StepScheduler,
 }
 
 impl Cluster {
-    /// Build a fleet, pricing the per-step device cost from the
-    /// transaction-level simulator for `config.model` under `config.opts`
-    /// (through the shared cost cache and the interned trace store, so
-    /// repeated fleet constructions never re-price or rebuild the trace).
-    pub fn new(config: ClusterConfig, schedule: NoiseSchedule, elems: usize) -> Self {
-        let sim = Simulator::paper_cached();
-        let step_cost = sim.model_step_cost(config.model, config.opts);
-        let bit_width = sim.params.bit_width;
-        Self {
-            scheduler: StepScheduler::new(&config, step_cost, schedule, elems, bit_width),
+    /// Build a fleet, pricing each group's per-step device cost from the
+    /// transaction-level simulator for `config.model` under the group's
+    /// own `[Y,N,K,H,L,M]@λ`/`OptFlags`/bit-width (through the shared
+    /// cost cache and the interned trace store, so repeated fleet
+    /// constructions never re-price or rebuild traces). Fails if any
+    /// profile violates the device design rules.
+    pub fn new(
+        config: ClusterConfig,
+        schedule: NoiseSchedule,
+        elems: usize,
+    ) -> crate::Result<Self> {
+        let step_costs = profile_step_costs(&config)?;
+        Ok(Self {
+            scheduler: StepScheduler::new(&config, &step_costs, schedule, elems),
             config,
-        }
+        })
     }
 
     /// Pure-simulation fleet over a locally rebuilt noise schedule (no
     /// artifacts required) — what the benches and the `cluster` CLI use.
-    pub fn simulated(config: ClusterConfig) -> Self {
+    pub fn simulated(config: ClusterConfig) -> crate::Result<Self> {
         // T=1000 (the DDPM convention) so DDIM sub-schedules up to 1000
         // steps run unclamped; 16×16×1 sample geometry matches the AOT
         // pipeline's default.
@@ -173,16 +349,136 @@ pub fn synthetic_workload(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::ArchConfig;
 
     #[test]
     fn simulated_cluster_serves() {
-        let mut c = Cluster::simulated(ClusterConfig::with_devices(2));
+        let mut c = Cluster::simulated(ClusterConfig::with_devices(2)).unwrap();
         assert_eq!(c.device_count(), 2);
         let reqs = synthetic_workload(6, 3, SamplerKind::Ddim { steps: 5 }, 0.0);
         let out = c.serve(reqs, &mut SimExecutor).unwrap();
         assert_eq!(out.results.len(), 6);
         assert!(out.metrics.makespan_s > 0.0);
         assert!(out.metrics.fleet_gops() > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_cluster_serves_and_prices_per_profile() {
+        let big = DeviceProfile {
+            arch: ArchConfig::from_vector([8, 12, 3, 8, 6, 3], 36),
+            ..DeviceProfile::default()
+        };
+        let small = DeviceProfile {
+            arch: ArchConfig::from_vector([2, 12, 3, 3, 6, 3], 36),
+            capacity: 2,
+            ..DeviceProfile::default()
+        };
+        let config = ClusterConfig::heterogeneous(vec![(big, 1), (small, 2)]);
+        let costs = profile_step_costs(&config).unwrap();
+        assert_eq!(costs.len(), 2);
+        assert!(
+            costs[0].latency_s < costs[1].latency_s,
+            "the bigger die must price a faster step ({} vs {})",
+            costs[0].latency_s,
+            costs[1].latency_s
+        );
+        let mut c = Cluster::simulated(config).unwrap();
+        assert_eq!(c.device_count(), 3);
+        let reqs = synthetic_workload(9, 5, SamplerKind::Ddim { steps: 4 }, 0.0);
+        let out = c.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 9);
+        // Per-profile roll-up covers both groups.
+        let rollup = out.metrics.per_profile();
+        assert_eq!(rollup.len(), 2);
+        assert_eq!(rollup[0].devices, 1);
+        assert_eq!(rollup[1].devices, 2);
+    }
+
+    #[test]
+    fn invalid_profile_fails_fleet_construction() {
+        let bad = DeviceProfile {
+            arch: ArchConfig::from_vector([64, 64, 16, 8, 64, 64], 36),
+            ..DeviceProfile::default()
+        };
+        assert!(Cluster::simulated(ClusterConfig::homogeneous(bad, 2)).is_err());
+        // An empty fleet is an Err, not a scheduler assertion panic.
+        assert!(Cluster::simulated(ClusterConfig::heterogeneous(vec![])).is_err());
+        assert!(
+            Cluster::simulated(ClusterConfig::homogeneous(DeviceProfile::default(), 0)).is_err()
+        );
+    }
+
+    #[test]
+    fn grouping_identical_profiles_is_equivalent_to_homogeneous() {
+        // Two groups of the same profile must behave exactly like one
+        // group with the summed count: grouping is presentation, not
+        // semantics.
+        let p = DeviceProfile::default();
+        let serve = |config: ClusterConfig| {
+            let mut c = Cluster::simulated(config).unwrap();
+            let reqs = synthetic_workload(10, 7, SamplerKind::Ddim { steps: 6 }, 1e-4);
+            c.serve(reqs, &mut SimExecutor).unwrap()
+        };
+        let one = serve(ClusterConfig::homogeneous(p, 4));
+        let two = serve(ClusterConfig::heterogeneous(vec![(p, 2), (p, 2)]));
+        assert_eq!(one.results.len(), two.results.len());
+        for (a, b) in one.results.iter().zip(&two.results) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.sample, b.sample);
+            assert_eq!(a.finish_s, b.finish_s);
+        }
+        assert_eq!(one.metrics.makespan_s, two.metrics.makespan_s);
+        assert_eq!(one.metrics.samples_completed, two.metrics.samples_completed);
+    }
+
+    #[test]
+    fn builder_knobs_apply_to_every_profile() {
+        let cfg = ClusterConfig::heterogeneous(vec![
+            (DeviceProfile::default(), 1),
+            (DeviceProfile::default(), 2),
+        ])
+        .capacity(2)
+        .max_queue(8)
+        .with_reuse(3)
+        .shallow_frac(0.5)
+        .policy(ShardPolicy::RoundRobin)
+        .backlog(16)
+        .stealing(false);
+        assert_eq!(cfg.device_count(), 3);
+        assert!(cfg.any_reuse());
+        for (p, _) in &cfg.fleet {
+            assert_eq!((p.capacity, p.max_queue, p.reuse_interval), (2, 8, 3));
+            assert!((p.reuse_shallow_frac - 0.5).abs() < 1e-12);
+        }
+        assert_eq!(cfg.policy, ShardPolicy::RoundRobin);
+        assert_eq!(cfg.max_backlog, 16);
+        assert!(!cfg.work_stealing);
+        let ids: Vec<usize> = cfg.device_profiles().map(|(pi, _)| pi).collect();
+        assert_eq!(ids, [0, 1, 1]);
+    }
+
+    #[test]
+    fn needs_fleet_scheduler_detects_custom_profiles() {
+        // Default single die → single-device loop.
+        assert!(!ClusterConfig::default().needs_fleet_scheduler());
+        // Capacity/queue shape alone stays on the single-device loop
+        // (it aliases the batcher's max_batch there).
+        assert!(!ClusterConfig::with_devices(1).capacity(8).max_queue(16).needs_fleet_scheduler());
+        // More than one device, reuse, or a custom priced identity
+        // (arch / opts / bit-width) all require the fleet scheduler.
+        assert!(ClusterConfig::with_devices(2).needs_fleet_scheduler());
+        assert!(ClusterConfig::with_devices(1).with_reuse(3).needs_fleet_scheduler());
+        assert!(ClusterConfig::with_devices(1)
+            .opts(crate::arch::cost::OptFlags::BASELINE)
+            .needs_fleet_scheduler());
+        let custom = DeviceProfile {
+            arch: ArchConfig::from_vector([2, 12, 3, 3, 6, 3], 36),
+            ..DeviceProfile::default()
+        };
+        assert!(ClusterConfig::homogeneous(custom, 1).needs_fleet_scheduler());
+        let w4 = DeviceProfile { bit_width: 4, ..DeviceProfile::default() };
+        assert!(ClusterConfig::homogeneous(w4, 1).needs_fleet_scheduler());
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Per-device accelerator profiles for heterogeneous fleets.
+//!
+//! The paper's DSE sweep over `[Y,N,K,H,L,M]` produces a *family* of
+//! DiffLight configurations with different latency/energy points; a
+//! realistically provisioned deployment mixes large and small dies. A
+//! [`DeviceProfile`] captures everything one device needs to be priced
+//! and scheduled independently of its neighbours:
+//!
+//! * the architectural vector ([`ArchConfig`], `[Y,N,K,H,L,M]@λ`),
+//! * the dataflow optimizations ([`OptFlags`]) and datapath bit-width,
+//! * batch-slot capacity, admission-queue depth, the fused-batch
+//!   marginal-latency factor, and the DeepCache reuse cycle.
+//!
+//! A fleet spec is a `Vec<(DeviceProfile, count)>`; the homogeneous
+//! fleet is the one-profile special case. Two textual forms exist:
+//!
+//! * the compact CLI grammar parsed by [`parse_fleet_spec`]
+//!   (`--fleet "Y4N12K3H6L6M3:cap4x3,Y2N12K3H3L6M3:cap2x5"`), and
+//! * the JSON form parsed by [`parse_fleet_json`] (`--fleet-file`).
+//!
+//! See `rust/src/cluster/README.md` for the full grammar.
+
+use crate::arch::cost::OptFlags;
+use crate::arch::ArchConfig;
+use crate::devices::DeviceParams;
+use crate::util::json::Json;
+
+/// Everything one fleet device needs to be priced and scheduled on its
+/// own: architecture, optimizations, bit-width, and queueing shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// The `[Y,N,K,H,L,M]@λ` architectural vector this die implements.
+    pub arch: ArchConfig,
+    /// Dataflow optimizations the die runs with (priced into its step).
+    pub opts: OptFlags,
+    /// Datapath bit-width (8 = the paper's W8A8 photonic datapath).
+    pub bit_width: u32,
+    /// Resident batch slots.
+    pub capacity: usize,
+    /// Admission-queue depth behind the resident set.
+    pub max_queue: usize,
+    /// Marginal latency of each extra resident sample in a fused step,
+    /// as a fraction of the single-sample step latency.
+    pub batch_marginal: f64,
+    /// DeepCache step reuse interval (`1` = off).
+    pub reuse_interval: usize,
+    /// Cost of a shallow cache-hit step relative to a full step.
+    pub reuse_shallow_frac: f64,
+}
+
+impl Default for DeviceProfile {
+    /// The paper-optimal die with the PR 1 fleet defaults — a fleet of
+    /// these is exactly the pre-heterogeneous homogeneous cluster.
+    fn default() -> Self {
+        Self {
+            arch: ArchConfig::paper_optimal(),
+            opts: OptFlags::ALL,
+            bit_width: 8,
+            capacity: 4,
+            max_queue: 64,
+            batch_marginal: 0.25,
+            reuse_interval: 1,
+            reuse_shallow_frac: 0.25,
+        }
+    }
+}
+
+impl DeviceProfile {
+    /// A profile of the paper-optimal die with a different queue shape.
+    pub fn with_capacity(capacity: usize, max_queue: usize) -> Self {
+        Self { capacity, max_queue, ..Self::default() }
+    }
+
+    /// Validate the architectural vector against the device design rules
+    /// (same checks `Accelerator::new` applies at pricing time).
+    pub fn validate(&self, params: &DeviceParams) -> crate::Result<()> {
+        self.arch.validate(params)?;
+        anyhow::ensure!(self.capacity >= 1, "profile needs at least one batch slot");
+        anyhow::ensure!(self.bit_width >= 1, "bit width must be >= 1");
+        anyhow::ensure!(
+            self.batch_marginal.is_finite() && self.batch_marginal >= 0.0,
+            "batch_marginal must be a finite non-negative number (got {}) — a negative \
+             marginal makes fused steps take zero or negative time",
+            self.batch_marginal
+        );
+        anyhow::ensure!(self.reuse_interval >= 1, "reuse interval must be >= 1");
+        if self.reuse_interval > 1 {
+            anyhow::ensure!(
+                self.reuse_shallow_frac > 0.0 && self.reuse_shallow_frac <= 1.0,
+                "shallow step fraction must be in (0, 1] when reuse is enabled"
+            );
+        }
+        Ok(())
+    }
+
+    /// Compact spec string. Round-trips through [`parse_fleet_spec`]
+    /// for every field the grammar can express — `opts` has no compact
+    /// spelling (it is JSON-only), so a non-default `opts` is *not*
+    /// represented here.
+    pub fn spec(&self) -> String {
+        let d = DeviceProfile::default();
+        let [y, n, k, h, l, m] = self.arch.vector();
+        let mut s = format!("Y{y}N{n}K{k}H{h}L{l}M{m}");
+        if self.arch.wavelengths != 36 {
+            s.push_str(&format!("@{}", self.arch.wavelengths));
+        }
+        s.push_str(&format!(":cap{}:q{}", self.capacity, self.max_queue));
+        if self.reuse_interval > 1 {
+            s.push_str(&format!(":reuse{}", self.reuse_interval));
+        }
+        if self.reuse_shallow_frac != d.reuse_shallow_frac {
+            s.push_str(&format!(":frac{}", self.reuse_shallow_frac));
+        }
+        if self.batch_marginal != d.batch_marginal {
+            s.push_str(&format!(":marg{}", self.batch_marginal));
+        }
+        if self.bit_width != d.bit_width {
+            s.push_str(&format!(":bits{}", self.bit_width));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for DeviceProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.spec())
+    }
+}
+
+/// Parse the compact `--fleet` grammar into a fleet spec:
+///
+/// ```text
+/// fleet  := group ("," group)*
+/// group  := [arch]["@" λ](":" attr)* ["x" count]
+/// arch   := "Y" int "N" int "K" int "H" int "L" int "M" int
+/// attr   := "cap" int | "q" int | "reuse" int | "frac" float
+///         | "marg" float | "bits" int
+/// ```
+///
+/// An omitted `arch` means the paper-optimal die; an omitted `count`
+/// means 1. Letters are case-insensitive. Every parsed profile is
+/// validated against the Table II design rules.
+pub fn parse_fleet_spec(spec: &str) -> crate::Result<Vec<(DeviceProfile, usize)>> {
+    let params = DeviceParams::paper();
+    let mut fleet = Vec::new();
+    for group in spec.split(',') {
+        let group = group.trim();
+        anyhow::ensure!(!group.is_empty(), "empty fleet group in {spec:?}");
+        fleet.push(parse_group(group, &params)?);
+    }
+    anyhow::ensure!(!fleet.is_empty(), "fleet spec {spec:?} has no groups");
+    Ok(fleet)
+}
+
+fn parse_group(group: &str, params: &DeviceParams) -> crate::Result<(DeviceProfile, usize)> {
+    // Count: a trailing `x<digits>` on the last `:`-token.
+    let (body, count) = match group.rfind(|c| c == 'x' || c == 'X') {
+        Some(i) if i + 1 < group.len() && group[i + 1..].bytes().all(|b| b.is_ascii_digit()) => {
+            (&group[..i], group[i + 1..].parse::<usize>()?)
+        }
+        _ => (group, 1),
+    };
+    anyhow::ensure!(count >= 1, "fleet group {group:?} has count 0");
+
+    let mut profile = DeviceProfile::default();
+    let mut tokens = body.split(':');
+    let arch_token = tokens.next().unwrap_or("").trim();
+    if !arch_token.is_empty() {
+        profile.arch = parse_arch(arch_token)?;
+    }
+    for attr in tokens {
+        let attr = attr.trim();
+        let split = attr
+            .find(|c: char| c.is_ascii_digit() || c == '.')
+            .ok_or_else(|| anyhow::anyhow!("fleet attr {attr:?} has no value"))?;
+        let (name, value) = attr.split_at(split);
+        match name.to_ascii_lowercase().as_str() {
+            "cap" => profile.capacity = value.parse()?,
+            "q" => profile.max_queue = value.parse()?,
+            "reuse" => profile.reuse_interval = value.parse()?,
+            "frac" => profile.reuse_shallow_frac = value.parse()?,
+            "marg" => profile.batch_marginal = value.parse()?,
+            "bits" => profile.bit_width = value.parse()?,
+            other => anyhow::bail!(
+                "unknown fleet attr {other:?} (want cap|q|reuse|frac|marg|bits)"
+            ),
+        }
+    }
+    profile.validate(params)?;
+    Ok((profile, count))
+}
+
+/// Parse `Y4N12K3H6L6M3[@36]` (case-insensitive, any dimension order,
+/// all six dimensions required — or `@λ` alone for the paper die at an
+/// overridden wavelength count).
+fn parse_arch(token: &str) -> crate::Result<ArchConfig> {
+    let (dims, wavelengths) = match token.split_once('@') {
+        Some((d, w)) => (d, w.parse::<usize>()?),
+        None => (token, 36),
+    };
+    if dims.is_empty() {
+        // "@18" — the paper-optimal die at λ=18 (matches the JSON
+        // form's wavelengths-only group).
+        let mut cfg = ArchConfig::paper_optimal();
+        cfg.wavelengths = wavelengths;
+        return Ok(cfg);
+    }
+    let mut vals: [Option<usize>; 6] = [None; 6];
+    let bytes = dims.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let letter = bytes[i].to_ascii_uppercase();
+        let slot = match letter {
+            b'Y' => 0,
+            b'N' => 1,
+            b'K' => 2,
+            b'H' => 3,
+            b'L' => 4,
+            b'M' => 5,
+            other => anyhow::bail!(
+                "unexpected {:?} in arch spec {token:?} (want Y/N/K/H/L/M)",
+                other as char
+            ),
+        };
+        i += 1;
+        let start = i;
+        while i < bytes.len() && bytes[i].is_ascii_digit() {
+            i += 1;
+        }
+        anyhow::ensure!(start < i, "dimension {:?} in {token:?} has no value", letter as char);
+        anyhow::ensure!(
+            vals[slot].is_none(),
+            "dimension {:?} given twice in {token:?}",
+            letter as char
+        );
+        vals[slot] = Some(dims[start..i].parse()?);
+    }
+    let mut v = [0usize; 6];
+    for (slot, name) in ["Y", "N", "K", "H", "L", "M"].iter().enumerate() {
+        v[slot] = vals[slot]
+            .ok_or_else(|| anyhow::anyhow!("arch spec {token:?} is missing {name}"))?;
+    }
+    Ok(ArchConfig::from_vector(v, wavelengths))
+}
+
+/// Parse the `--fleet-file` JSON form: either a top-level array of
+/// profile objects or `{"fleet": [...]}`. Every key except `arch` is
+/// optional and defaults to the paper-optimal homogeneous profile:
+///
+/// ```json
+/// [{"arch": [8,12,3,8,6,3], "wavelengths": 36, "count": 2,
+///   "capacity": 4, "max_queue": 64, "batch_marginal": 0.25,
+///   "reuse_interval": 1, "shallow_frac": 0.25, "bit_width": 8,
+///   "opts": "all"}]
+/// ```
+///
+/// `opts` is `"all"`, `"baseline"`, or a comma list of
+/// `sparse|pipelined|dac-sharing`.
+pub fn parse_fleet_json(text: &str) -> crate::Result<Vec<(DeviceProfile, usize)>> {
+    let json = Json::parse(text).map_err(|e| anyhow::anyhow!("fleet file: {e}"))?;
+    let groups = match &json {
+        Json::Arr(a) => a.as_slice(),
+        obj => obj
+            .get("fleet")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("fleet file must be an array or {{\"fleet\": []}}"))?,
+    };
+    let params = DeviceParams::paper();
+    let mut fleet = Vec::new();
+    for g in groups {
+        // Strict key set: a mistyped key (say "reuse" for
+        // "reuse_interval") must error, not silently run the defaults.
+        const KNOWN: [&str; 10] = [
+            "arch",
+            "wavelengths",
+            "count",
+            "capacity",
+            "max_queue",
+            "batch_marginal",
+            "reuse_interval",
+            "shallow_frac",
+            "bit_width",
+            "opts",
+        ];
+        if let Json::Obj(entries) = g {
+            for (key, _) in entries {
+                anyhow::ensure!(
+                    KNOWN.contains(&key.as_str()),
+                    "unknown fleet key {key:?} (want one of {KNOWN:?})"
+                );
+            }
+        } else {
+            anyhow::bail!("each fleet group must be a JSON object");
+        }
+        let mut profile = DeviceProfile::default();
+        // A λ override applies with or without an explicit arch (a
+        // wavelengths-only group means the paper die at that λ).
+        profile.arch.wavelengths = uint_or(g, "wavelengths", profile.arch.wavelengths)?;
+        if let Some(arch) = g.get("arch") {
+            let arch = arch
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("\"arch\" must be the [Y,N,K,H,L,M] array"))?;
+            anyhow::ensure!(arch.len() == 6, "\"arch\" must be the [Y,N,K,H,L,M] vector");
+            let mut v = [0usize; 6];
+            for (slot, x) in arch.iter().enumerate() {
+                v[slot] = uint_field(x, "arch dimension")?;
+            }
+            profile.arch = ArchConfig::from_vector(v, profile.arch.wavelengths);
+        }
+        profile.capacity = uint_or(g, "capacity", profile.capacity)?;
+        profile.max_queue = uint_or(g, "max_queue", profile.max_queue)?;
+        profile.batch_marginal = float_or(g, "batch_marginal", profile.batch_marginal)?;
+        profile.reuse_interval = uint_or(g, "reuse_interval", profile.reuse_interval)?;
+        profile.reuse_shallow_frac = float_or(g, "shallow_frac", profile.reuse_shallow_frac)?;
+        let bit_width = uint_or(g, "bit_width", profile.bit_width as usize)?;
+        anyhow::ensure!(
+            bit_width <= u32::MAX as usize,
+            "\"bit_width\" {bit_width} out of range"
+        );
+        profile.bit_width = bit_width as u32;
+        if let Some(opts) = g.get("opts") {
+            let opts = opts
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("\"opts\" must be a string"))?;
+            profile.opts = parse_opts(opts)?;
+        }
+        let count = uint_or(g, "count", 1)?;
+        anyhow::ensure!(count >= 1, "fleet group has count 0");
+        profile.validate(&params)?;
+        fleet.push((profile, count));
+    }
+    anyhow::ensure!(!fleet.is_empty(), "fleet file has no groups");
+    Ok(fleet)
+}
+
+/// A present-but-wrong-typed or negative/fractional value is an error,
+/// not a silent default.
+fn uint_or(obj: &Json, key: &str, default: usize) -> crate::Result<usize> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => uint_field(v, key),
+    }
+}
+
+fn uint_field(v: &Json, what: &str) -> crate::Result<usize> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{what:?} must be a number"))?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64,
+        "{what:?} must be a non-negative integer (got {n})"
+    );
+    Ok(n as usize)
+}
+
+fn float_or(obj: &Json, key: &str, default: f64) -> crate::Result<f64> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("{key:?} must be a number")),
+    }
+}
+
+fn parse_opts(s: &str) -> crate::Result<OptFlags> {
+    match s.to_ascii_lowercase().as_str() {
+        "all" => return Ok(OptFlags::ALL),
+        "baseline" | "none" => return Ok(OptFlags::BASELINE),
+        _ => {}
+    }
+    let mut opts = OptFlags::BASELINE;
+    for part in s.split(',') {
+        match part.trim().to_ascii_lowercase().as_str() {
+            "sparse" => opts.sparse = true,
+            "pipelined" => opts.pipelined = true,
+            "dac-sharing" | "dac_sharing" => opts.dac_sharing = true,
+            other => anyhow::bail!(
+                "unknown opt {other:?} (want all|baseline|sparse|pipelined|dac-sharing)"
+            ),
+        }
+    }
+    Ok(opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_is_the_paper_die() {
+        let p = DeviceProfile::default();
+        assert_eq!(p.arch, ArchConfig::paper_optimal());
+        assert_eq!(p.opts, OptFlags::ALL);
+        assert_eq!((p.capacity, p.max_queue, p.bit_width), (4, 64, 8));
+        assert!(p.validate(&DeviceParams::paper()).is_ok());
+    }
+
+    #[test]
+    fn parses_the_issue_style_spec() {
+        let fleet =
+            parse_fleet_spec("Y8N12K3H8L6M3:cap4x2,Y2N12K3H3L6M3:cap2:q16x5").unwrap();
+        assert_eq!(fleet.len(), 2);
+        let (big, n_big) = fleet[0];
+        assert_eq!(big.arch.vector(), [8, 12, 3, 8, 6, 3]);
+        assert_eq!((big.capacity, n_big), (4, 2));
+        let (small, n_small) = fleet[1];
+        assert_eq!(small.arch.vector(), [2, 12, 3, 3, 6, 3]);
+        assert_eq!((small.capacity, small.max_queue, n_small), (2, 16, 5));
+    }
+
+    #[test]
+    fn arch_defaults_count_defaults_and_case() {
+        // Bare count over the default die; lowercase letters/attrs.
+        let fleet = parse_fleet_spec("x3,y4n12k3h6l6m3:CAP2").unwrap();
+        assert_eq!(fleet[0].0.arch, ArchConfig::paper_optimal());
+        assert_eq!(fleet[0].1, 3);
+        assert_eq!(fleet[1].0.capacity, 2);
+        assert_eq!(fleet[1].1, 1);
+    }
+
+    #[test]
+    fn wavelengths_only_group_is_paper_die_at_lambda() {
+        // "@18" = the paper die at λ=18, matching the JSON form's
+        // wavelengths-only group.
+        let fleet = parse_fleet_spec("@18:cap2x2").unwrap();
+        let (p, n) = fleet[0];
+        assert_eq!(p.arch.vector(), ArchConfig::paper_optimal().vector());
+        assert_eq!(p.arch.wavelengths, 18);
+        assert_eq!((p.capacity, n), (2, 2));
+        // Out-of-rule λ still errors through validate.
+        assert!(parse_fleet_spec("@64x1").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_through_display() {
+        for spec in [
+            "Y8N12K3H8L6M3:cap4:q32:reuse3x2",
+            "Y4N12K3H6L6M3:cap2:q8:reuse3:frac0.5:marg0.1:bits4x5",
+            "Y2N12K3H3L6M3@18:cap1:q0x1",
+        ] {
+            let fleet = parse_fleet_spec(spec).unwrap();
+            let (p, n) = fleet[0];
+            let rendered = format!("{p}x{n}");
+            let again = parse_fleet_spec(&rendered).unwrap();
+            assert_eq!(again, fleet, "{spec} -> {rendered} must round-trip");
+        }
+    }
+
+    #[test]
+    fn attrs_reuse_frac_marg_bits() {
+        let fleet = parse_fleet_spec(":reuse3:frac0.5:marg0.1:bits4x2").unwrap();
+        let (p, n) = fleet[0];
+        assert_eq!(p.reuse_interval, 3);
+        assert!((p.reuse_shallow_frac - 0.5).abs() < 1e-12);
+        assert!((p.batch_marginal - 0.1).abs() < 1e-12);
+        assert_eq!((p.bit_width, n), (4, 2));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        // Design rule: K*N fanout over 36 branches.
+        assert!(parse_fleet_spec("Y64N64K16H8L64M64x3").is_err());
+        assert!(parse_fleet_spec("").is_err());
+        assert!(parse_fleet_spec("Y4N12K3H6L6x1").is_err(), "missing M");
+        assert!(parse_fleet_spec("Y4N12K3H6L6M3:bogus7x1").is_err());
+        assert!(parse_fleet_spec("Y4N12K3H6L6M3x0").is_err(), "count 0");
+        assert!(parse_fleet_spec("Z4x1").is_err(), "unknown dimension");
+        assert!(parse_fleet_spec("Y4Y4N12K3H6L6M3x1").is_err(), "dup dim");
+    }
+
+    #[test]
+    fn json_fleet_parses_with_defaults() {
+        let fleet = parse_fleet_json(
+            r#"{"fleet": [
+                {"arch": [8,12,3,8,6,3], "count": 2, "capacity": 6},
+                {"reuse_interval": 3, "shallow_frac": 0.5, "opts": "sparse,pipelined"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[0].0.arch.vector(), [8, 12, 3, 8, 6, 3]);
+        assert_eq!((fleet[0].0.capacity, fleet[0].1), (6, 2));
+        let p = fleet[1].0;
+        assert_eq!(p.arch, ArchConfig::paper_optimal());
+        assert_eq!(p.reuse_interval, 3);
+        assert!(p.opts.sparse && p.opts.pipelined && !p.opts.dac_sharing);
+        assert_eq!(fleet[1].1, 1);
+    }
+
+    #[test]
+    fn json_fleet_rejects_bad_input() {
+        assert!(parse_fleet_json("not json").is_err());
+        assert!(parse_fleet_json("{}").is_err());
+        assert!(parse_fleet_json(r#"[{"arch": [1,2,3]}]"#).is_err());
+        assert!(parse_fleet_json(r#"[{"opts": "warp-drive"}]"#).is_err());
+        // Mistyped keys and wrong-typed/invalid values must error, not
+        // silently fall back to defaults.
+        assert!(parse_fleet_json(r#"[{"reuse": 3}]"#).is_err(), "unknown key");
+        assert!(parse_fleet_json(r#"[{"capacity": "6"}]"#).is_err(), "string number");
+        assert!(parse_fleet_json(r#"[{"max_queue": -5}]"#).is_err(), "negative");
+        assert!(parse_fleet_json(r#"[{"count": 2.5}]"#).is_err(), "fractional count");
+        assert!(parse_fleet_json(r#"[{"opts": 3}]"#).is_err(), "non-string opts");
+        // A negative marginal would make fused steps take <= 0 time.
+        assert!(parse_fleet_json(r#"[{"batch_marginal": -1.0}]"#).is_err());
+    }
+
+    #[test]
+    fn json_wavelengths_override_applies_without_arch() {
+        // A wavelengths-only group is the paper die at that λ — it must
+        // not be silently dropped.
+        let fleet = parse_fleet_json(r#"[{"wavelengths": 18, "count": 2}]"#).unwrap();
+        assert_eq!(fleet[0].0.arch.wavelengths, 18);
+        assert_eq!(fleet[0].0.arch.vector(), ArchConfig::paper_optimal().vector());
+        assert_eq!(fleet[0].1, 2);
+        // And an out-of-rule λ still errors through validate.
+        assert!(parse_fleet_json(r#"[{"wavelengths": 64}]"#).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_profiles() {
+        let params = DeviceParams::paper();
+        let mut p = DeviceProfile::default();
+        p.capacity = 0;
+        assert!(p.validate(&params).is_err());
+        let mut p = DeviceProfile::default();
+        p.reuse_interval = 3;
+        p.reuse_shallow_frac = 0.0;
+        assert!(p.validate(&params).is_err());
+    }
+}

@@ -23,7 +23,7 @@ use crate::runtime::manifest::NoiseSchedule;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
-use super::device::{Device, DeviceId, ReuseSchedule};
+use super::device::{Device, DeviceId};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::router::{DeviceLoad, Router};
 use super::scheduler::{
@@ -40,7 +40,6 @@ pub struct ReferenceScheduler {
     pool: ThreadPool,
     schedule: NoiseSchedule,
     elems: usize,
-    bit_width: u32,
     resident: Vec<Vec<Slot>>,
     queued: Vec<VecDeque<Slot>>,
     backlog: VecDeque<Slot>,
@@ -48,33 +47,33 @@ pub struct ReferenceScheduler {
     /// Linear-scan sampler cache (the retired pre-keyed-map form).
     sampler_cache: Vec<(SamplerKind, SlotSampler)>,
     work_stealing: bool,
+    /// Per-device router weight: the device's drain cost in ns, or 1 for
+    /// every device when cost-aware routing is off (occupancy-only).
+    drain_ns: Vec<u64>,
     events_processed: u64,
 }
 
 impl ReferenceScheduler {
     pub fn new(
         config: &ClusterConfig,
-        step_cost: crate::arch::cost::Cost,
+        step_costs: &[crate::arch::cost::Cost],
         schedule: NoiseSchedule,
         elems: usize,
-        bit_width: u32,
     ) -> Self {
-        assert!(config.devices >= 1, "cluster needs at least one device");
-        let reuse = ReuseSchedule::every(
-            config.reuse_interval.max(1),
-            config.reuse_shallow_frac,
+        assert_eq!(
+            step_costs.len(),
+            config.fleet.len(),
+            "need one step cost per fleet profile group"
         );
-        let devices: Vec<Device> = (0..config.devices)
-            .map(|i| {
-                Device::new(
-                    i,
-                    step_cost,
-                    config.capacity,
-                    config.max_queue,
-                    config.batch_marginal,
-                    reuse,
-                )
-            })
+        assert!(config.device_count() >= 1, "cluster needs at least one device");
+        let devices: Vec<Device> = config
+            .device_profiles()
+            .enumerate()
+            .map(|(i, (pi, profile))| Device::from_profile(i, pi, profile, step_costs[pi]))
+            .collect();
+        let drain_ns = devices
+            .iter()
+            .map(|d| if config.cost_aware { d.drain_ns() } else { 1 })
             .collect();
         Self {
             resident: vec![Vec::new(); devices.len()],
@@ -84,11 +83,11 @@ impl ReferenceScheduler {
             pool: ThreadPool::default_size(),
             schedule,
             elems,
-            bit_width,
             backlog: VecDeque::new(),
             max_backlog: config.max_backlog,
             sampler_cache: Vec::new(),
             work_stealing: config.work_stealing,
+            drain_ns,
             events_processed: 0,
         }
     }
@@ -108,6 +107,7 @@ impl ReferenceScheduler {
                 queued: self.queued[i].len(),
                 capacity: d.capacity,
                 max_queue: d.max_queue,
+                drain_ns: self.drain_ns[i],
             })
             .collect()
     }
@@ -165,7 +165,7 @@ impl ReferenceScheduler {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
             makespan_s: (last_finish_s - first_arrival_s).max(0.0),
             rejected: rejected.len() as u64,
-            bit_width: self.bit_width,
+            bit_width: self.devices.first().map_or(8, |d| d.bit_width),
             sched_events: self.events_processed,
             ..Default::default()
         };
@@ -246,12 +246,20 @@ impl ReferenceScheduler {
         Ok(())
     }
 
-    /// Donor selection by full scan, ties toward the lowest donor id.
+    /// Donor selection by full scan: the busy device whose queue
+    /// represents the most drain time (queued × per-device weight), ties
+    /// toward the lowest donor id. The thief fills up to its *own*
+    /// capacity, so capacity-asymmetric fleets steal correctly.
     fn steal_into(&mut self, di: usize) {
         while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
             let donor = (0..self.devices.len())
                 .filter(|&j| j != di && !self.devices[j].is_idle() && !self.queued[j].is_empty())
-                .max_by_key(|&j| (self.queued[j].len(), std::cmp::Reverse(j)));
+                .max_by_key(|&j| {
+                    (
+                        self.queued[j].len() as u128 * self.drain_ns[j].max(1) as u128,
+                        std::cmp::Reverse(j),
+                    )
+                });
             let Some(j) = donor else { break };
             let slot = self.queued[j].pop_front().expect("donor queue non-empty");
             self.queued[di].push_back(slot);
@@ -367,11 +375,10 @@ mod tests {
     #[test]
     fn reference_loop_still_serves() {
         let mut s = ReferenceScheduler::new(
-            &ClusterConfig { devices: 2, capacity: 4, max_queue: 64, ..ClusterConfig::default() },
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
+            &ClusterConfig::with_devices(2),
+            &[Cost::new(1e-3, 2e-3, 1_000_000, 4)],
             NoiseSchedule::linear(100),
             16,
-            8,
         );
         assert_eq!(s.device_count(), 2);
         let reqs: Vec<ClusterRequest> = (0..6)

@@ -3,8 +3,14 @@
 //! Three policies:
 //!
 //! * [`ShardPolicy::RoundRobin`] — rotate through non-full devices.
-//! * [`ShardPolicy::LeastLoaded`] — lowest resident+queued occupancy,
-//!   ties broken by device id (deterministic).
+//! * [`ShardPolicy::LeastLoaded`] — lowest estimated **time-to-drain**
+//!   (occupancy × the device's per-occupant step latency), ties broken
+//!   by device id (deterministic). On a homogeneous fleet every weight
+//!   is equal, so this reduces to the classic lowest-occupancy pick; on
+//!   a heterogeneous fleet it loads big and small dies in proportion to
+//!   their speed instead of treating a queued sample on a slow die as
+//!   cheap as one on a fast die. Occupancy-only ranking is kept behind
+//!   `drain_ns: 1` (see [`DeviceLoad::drain_ns`]).
 //! * [`ShardPolicy::Affinity`] — hash the request's sampler signature to
 //!   a home device so same-signature requests co-locate (keeps each
 //!   device's compiled-executable cache and timestep stride hot), with
@@ -21,11 +27,12 @@
 //!   the O(log N) index is property-tested against (and used by the
 //!   [`super::reference`] scheduler).
 //! * [`RouterIndex`] — incrementally maintained ordered structures
-//!   (occupancy-ordered set for least-loaded, non-full id set for
+//!   (drain-cost-ordered set for least-loaded, non-full id set for
 //!   round-robin, a sampler-signature→home-device map for affinity, and
-//!   a donor set for work stealing), updated on admit/promote/complete
-//!   in O(log N). Routing decisions are **identical** to [`Router`] fed
-//!   a from-scratch snapshot (asserted by the property tests below).
+//!   a weighted donor set for work stealing), updated on
+//!   admit/promote/complete in O(log N). Routing decisions are
+//!   **identical** to [`Router`] fed a from-scratch snapshot (asserted
+//!   by the property tests below).
 
 use std::cmp::Reverse;
 use std::collections::BTreeSet;
@@ -46,9 +53,14 @@ pub enum ShardPolicy {
 }
 
 impl ShardPolicy {
-    /// Parse a CLI spelling; `None` for unknown values.
+    /// Every policy, in CLI-listing order.
+    pub const ALL: [ShardPolicy; 3] =
+        [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity];
+
+    /// Parse a CLI spelling (case-insensitive); `None` for unknown
+    /// values — CLI callers should then list [`ShardPolicy::names`].
     pub fn parse(s: &str) -> Option<ShardPolicy> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "round-robin" | "rr" => Some(ShardPolicy::RoundRobin),
             "least-loaded" | "ll" => Some(ShardPolicy::LeastLoaded),
             "affinity" => Some(ShardPolicy::Affinity),
@@ -63,6 +75,11 @@ impl ShardPolicy {
             ShardPolicy::Affinity => "affinity",
         }
     }
+
+    /// The valid policy names, comma-joined — for CLI error messages.
+    pub fn names() -> String {
+        Self::ALL.map(|p| p.name()).join(", ")
+    }
 }
 
 /// Occupancy snapshot of one device, as the router sees it.
@@ -72,6 +89,11 @@ pub struct DeviceLoad {
     pub queued: usize,
     pub capacity: usize,
     pub max_queue: usize,
+    /// Per-occupant drain weight in nanoseconds (the device's expected
+    /// single-sample step latency; see `Device::drain_ns`). `1` for
+    /// every device ⇒ occupancy-only ranking — exactly the
+    /// pre-heterogeneous router.
+    pub drain_ns: u64,
 }
 
 impl DeviceLoad {
@@ -81,6 +103,18 @@ impl DeviceLoad {
 
     pub fn is_full(&self) -> bool {
         self.total() >= self.capacity + self.max_queue
+    }
+
+    /// Estimated time-to-drain: occupancy × per-occupant step latency.
+    /// u128 so `usize::MAX`-ish occupancies cannot overflow the product.
+    pub fn drain_cost(&self) -> u128 {
+        self.total() as u128 * self.drain_ns.max(1) as u128
+    }
+
+    /// Estimated wait behind the admission queue (the work-stealing
+    /// donor weight: queued samples × per-occupant step latency).
+    pub fn queued_cost(&self) -> u128 {
+        self.queued as u128 * self.drain_ns.max(1) as u128
     }
 }
 
@@ -151,13 +185,14 @@ impl Router {
     }
 }
 
-/// Index of the non-full device with the lowest total load (ties → lowest id).
+/// Index of the non-full device with the lowest estimated time-to-drain
+/// (ties → lowest id).
 fn least_loaded(loads: &[DeviceLoad]) -> Option<usize> {
     loads
         .iter()
         .enumerate()
         .filter(|(_, l)| !l.is_full())
-        .min_by_key(|(i, l)| (l.total(), *i))
+        .min_by_key(|(i, l)| (l.drain_cost(), *i))
         .map(|(i, _)| i)
 }
 
@@ -174,16 +209,17 @@ pub struct RouterIndex {
     /// `resident`/`queued` lengths).
     loads: Vec<DeviceLoad>,
     busy: Vec<bool>,
-    /// `(total, id)` over **non-full** devices; `first()` is the
+    /// `(drain cost, id)` over **non-full** devices; `first()` is the
     /// least-loaded pick (ties → lowest id, matching [`least_loaded`]).
-    by_load: BTreeSet<(usize, usize)>,
+    by_load: BTreeSet<(u128, usize)>,
     /// Non-full device ids, for round-robin's circular "first non-full
     /// at or after `rr_next`" query.
     nonfull: BTreeSet<usize>,
-    /// `(queued, Reverse(id))` over **busy** devices with a non-empty
-    /// admission queue; `last()` is the work-stealing donor (most queued,
-    /// ties → lowest id, matching the reference `max_by_key`).
-    donors: BTreeSet<(usize, Reverse<usize>)>,
+    /// `(queued cost, Reverse(id))` over **busy** devices with a
+    /// non-empty admission queue; `last()` is the work-stealing donor
+    /// (most queued drain time, ties → lowest id, matching the
+    /// reference `max_by_key`).
+    donors: BTreeSet<(u128, Reverse<usize>)>,
     /// Affinity: sampler signature → home device (`signature % N` cached
     /// so repeat signatures skip the hash).
     home: FxMap<SamplerKind, usize>,
@@ -205,7 +241,7 @@ impl RouterIndex {
         for d in 0..idx.loads.len() {
             let l = idx.loads[d];
             if !l.is_full() {
-                idx.by_load.insert((l.total(), d));
+                idx.by_load.insert((l.drain_cost(), d));
                 idx.nonfull.insert(d);
             }
         }
@@ -229,7 +265,7 @@ impl RouterIndex {
         for d in 0..self.loads.len() {
             let l = self.loads[d];
             if !l.is_full() {
-                self.by_load.insert((l.total(), d));
+                self.by_load.insert((l.drain_cost(), d));
                 self.nonfull.insert(d);
             }
         }
@@ -250,17 +286,17 @@ impl RouterIndex {
         let old = self.loads[device];
         let new = DeviceLoad { resident, queued, ..old };
         if !old.is_full() {
-            self.by_load.remove(&(old.total(), device));
+            self.by_load.remove(&(old.drain_cost(), device));
             self.nonfull.remove(&device);
         }
         if !new.is_full() {
-            self.by_load.insert((new.total(), device));
+            self.by_load.insert((new.drain_cost(), device));
             self.nonfull.insert(device);
         }
         if self.busy[device] {
-            self.donors.remove(&(old.queued, Reverse(device)));
+            self.donors.remove(&(old.queued_cost(), Reverse(device)));
             if new.queued > 0 {
-                self.donors.insert((new.queued, Reverse(device)));
+                self.donors.insert((new.queued_cost(), Reverse(device)));
             }
         }
         self.loads[device] = new;
@@ -270,19 +306,19 @@ impl RouterIndex {
     /// step. Only busy devices are eligible work-stealing donors (their
     /// queued work is guaranteed to wait at least one full step).
     pub fn set_busy(&mut self, device: usize, busy: bool) {
-        let q = self.loads[device].queued;
+        let l = self.loads[device];
         if busy && !self.busy[device] {
-            if q > 0 {
-                self.donors.insert((q, Reverse(device)));
+            if l.queued > 0 {
+                self.donors.insert((l.queued_cost(), Reverse(device)));
             }
         } else if !busy && self.busy[device] {
-            self.donors.remove(&(q, Reverse(device)));
+            self.donors.remove(&(l.queued_cost(), Reverse(device)));
         }
         self.busy[device] = busy;
     }
 
-    /// The work-stealing donor: the busy device with the most queued
-    /// requests (ties → lowest id), if any. O(log N).
+    /// The work-stealing donor: the busy device whose queue represents
+    /// the most drain time (ties → lowest id), if any. O(log N).
     pub fn max_donor(&self) -> Option<usize> {
         self.donors.iter().next_back().map(|&(_, Reverse(d))| d)
     }
@@ -334,7 +370,11 @@ mod tests {
     use super::*;
 
     fn load(resident: usize, queued: usize) -> DeviceLoad {
-        DeviceLoad { resident, queued, capacity: 4, max_queue: 4 }
+        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns: 1 }
+    }
+
+    fn weighted(resident: usize, queued: usize, drain_ns: u64) -> DeviceLoad {
+        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns }
     }
 
     #[test]
@@ -361,6 +401,25 @@ mod tests {
         assert_eq!(r.route(SamplerKind::Ddpm, &loads), Some(DeviceId(1)));
         let even = [load(1, 0), load(1, 0)];
         assert_eq!(r.route(SamplerKind::Ddpm, &even), Some(DeviceId(0)));
+    }
+
+    #[test]
+    fn cost_aware_ranking_prefers_faster_drain() {
+        // Device 0 is 4x slower per occupant: one sample there is a
+        // longer wait than three on the fast device.
+        let mut r = Router::new(ShardPolicy::LeastLoaded);
+        let loads = [weighted(1, 0, 4000), weighted(3, 0, 1000)];
+        assert_eq!(
+            r.route(SamplerKind::Ddpm, &loads),
+            Some(DeviceId(1)),
+            "3 x 1000ns beats 1 x 4000ns"
+        );
+        // Equal drain cost → lowest id, deterministically.
+        let tied = [weighted(1, 0, 2000), weighted(2, 0, 1000)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &tied), Some(DeviceId(0)));
+        // With unit weights the ranking degrades to raw occupancy.
+        let unit = [weighted(1, 0, 1), weighted(3, 0, 1)];
+        assert_eq!(r.route(SamplerKind::Ddpm, &unit), Some(DeviceId(0)));
     }
 
     #[test]
@@ -414,9 +473,10 @@ mod tests {
 
     #[test]
     fn prop_routing_invariants_under_random_load() {
-        // XorShift-seeded random fleets: every policy must (a) never pick
-        // a full device, (b) reject iff all devices are full, and (c) be
-        // deterministic for identical inputs.
+        // XorShift-seeded random fleets (random per-device weights):
+        // every policy must (a) never pick a full device, (b) reject iff
+        // all devices are full, and (c) be deterministic for identical
+        // inputs.
         crate::util::prop::forall("router invariants", 128, |g| {
             let n = g.usize_in(1, 8);
             let loads: Vec<DeviceLoad> = (0..n)
@@ -425,6 +485,7 @@ mod tests {
                     queued: g.usize_in(0, 4),
                     capacity: 4,
                     max_queue: 4,
+                    drain_ns: g.usize_in(1, 5_000_000) as u64,
                 })
                 .collect();
             let sampler = if g.bool() {
@@ -432,7 +493,7 @@ mod tests {
             } else {
                 SamplerKind::Ddim { steps: g.usize_in(1, 100) }
             };
-            for policy in [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity] {
+            for policy in ShardPolicy::ALL {
                 let pick = Router::new(policy).route(sampler, &loads);
                 let pick2 = Router::new(policy).route(sampler, &loads);
                 assert_eq!(pick, pick2, "{} must be deterministic", policy.name());
@@ -446,22 +507,31 @@ mod tests {
 
     #[test]
     fn prop_index_agrees_with_snapshot_router() {
-        // Randomized admit/promote/complete/busy sequences: the
-        // incrementally maintained RouterIndex must agree at every step
-        // with (a) a from-scratch loads() snapshot, (b) the stateless
-        // Router fed that snapshot, and (c) a from-scratch donor scan.
+        // Randomized admit/promote/complete/busy sequences over fleets
+        // with random per-device drain weights (heterogeneous-fleet
+        // shape): the incrementally maintained RouterIndex must agree at
+        // every step with (a) a from-scratch loads() snapshot, (b) the
+        // stateless Router fed that snapshot, and (c) a from-scratch
+        // weighted donor scan.
         crate::util::prop::forall("router index = snapshot router", 96, |g| {
             let n = g.usize_in(1, 8);
             let capacity = g.usize_in(1, 4);
             let max_queue = g.usize_in(0, 4);
-            let policy = *g.choose(&[
-                ShardPolicy::RoundRobin,
-                ShardPolicy::LeastLoaded,
-                ShardPolicy::Affinity,
-            ]);
-            let blank = DeviceLoad { resident: 0, queued: 0, capacity, max_queue };
-            let mut index = RouterIndex::new(policy, vec![blank; n]);
-            let mut shadow = vec![blank; n];
+            let policy = *g.choose(&ShardPolicy::ALL);
+            // Mix unit weights (the homogeneous/occupancy-only shape)
+            // with distinct per-device weights.
+            let uniform = g.bool();
+            let blanks: Vec<DeviceLoad> = (0..n)
+                .map(|_| DeviceLoad {
+                    resident: 0,
+                    queued: 0,
+                    capacity,
+                    max_queue,
+                    drain_ns: if uniform { 1 } else { g.usize_in(1, 4_000_000) as u64 },
+                })
+                .collect();
+            let mut index = RouterIndex::new(policy, blanks.clone());
+            let mut shadow = blanks;
             let mut busy = vec![false; n];
             // The stateless reference router, fed the same decision
             // sequence so its round-robin cursor stays in lockstep.
@@ -510,15 +580,29 @@ mod tests {
                 assert_eq!(index.loads(), &shadow[..], "occupancy mirror diverged");
                 let donor_scan = (0..n)
                     .filter(|&j| busy[j] && shadow[j].queued > 0)
-                    .max_by_key(|&j| (shadow[j].queued, std::cmp::Reverse(j)));
+                    .max_by_key(|&j| (shadow[j].queued_cost(), std::cmp::Reverse(j)));
                 assert_eq!(index.max_donor(), donor_scan, "donor pick diverged");
             }
         });
     }
 
     #[test]
+    fn weighted_donor_prefers_longest_queue_drain() {
+        // Donor ranking is queued × weight: 2 queued on a 3000ns die
+        // out-waits 4 queued on a 1000ns die.
+        let loads = vec![weighted(1, 2, 3000), weighted(1, 4, 1000)];
+        let mut idx = RouterIndex::new(ShardPolicy::LeastLoaded, loads);
+        idx.set_busy(0, true);
+        idx.set_busy(1, true);
+        assert_eq!(idx.max_donor(), Some(0));
+        // Drop device 0's queue: device 1 takes over.
+        idx.set_counts(0, 1, 0);
+        assert_eq!(idx.max_donor(), Some(1));
+    }
+
+    #[test]
     fn index_backpressure_and_reopen() {
-        let full = DeviceLoad { resident: 1, queued: 1, capacity: 1, max_queue: 1 };
+        let full = DeviceLoad { resident: 1, queued: 1, capacity: 1, max_queue: 1, drain_ns: 1 };
         let mut idx = RouterIndex::new(ShardPolicy::LeastLoaded, vec![full; 2]);
         assert_eq!(idx.route(SamplerKind::Ddpm), None, "all-full must shed");
         // A completion reopens the fleet.
@@ -529,10 +613,18 @@ mod tests {
     }
 
     #[test]
-    fn policy_parse_round_trips() {
-        for p in [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity] {
+    fn policy_parse_round_trips_case_insensitively() {
+        for p in ShardPolicy::ALL {
             assert_eq!(ShardPolicy::parse(p.name()), Some(p));
+            assert_eq!(ShardPolicy::parse(&p.name().to_uppercase()), Some(p));
         }
+        assert_eq!(ShardPolicy::parse("RR"), Some(ShardPolicy::RoundRobin));
+        assert_eq!(ShardPolicy::parse("Ll"), Some(ShardPolicy::LeastLoaded));
         assert_eq!(ShardPolicy::parse("bogus"), None);
+        // The CLI error-message listing names every policy.
+        let names = ShardPolicy::names();
+        for p in ShardPolicy::ALL {
+            assert!(names.contains(p.name()), "{names:?} missing {}", p.name());
+        }
     }
 }

@@ -55,7 +55,7 @@ use crate::util::fxhash::FxMap;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
-use super::device::{Device, DeviceId, ReuseSchedule};
+use super::device::{Device, DeviceId};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::router::{DeviceLoad, RouterIndex};
 use super::ClusterConfig;
@@ -302,7 +302,9 @@ pub struct StepScheduler {
     pool: ThreadPool,
     schedule: NoiseSchedule,
     elems: usize,
-    bit_width: u32,
+    /// Weight router loads by per-device drain cost (see
+    /// [`ClusterConfig::cost_aware`]).
+    cost_aware: bool,
     resident: Vec<Vec<Slot>>,
     queued: Vec<VecDeque<Slot>>,
     /// Fleet-level deferral queue (bounded by `max_backlog`): requests
@@ -337,37 +339,35 @@ pub struct StepScheduler {
 }
 
 impl StepScheduler {
-    /// Build a fleet of identical devices priced at `step_cost` for one
-    /// single-sample denoise step.
+    /// Build the fleet from `config`'s spec: one device per `(profile,
+    /// count)` entry expansion, each priced at its group's `step_costs`
+    /// entry for one single-sample denoise step ([`ClusterConfig`]
+    /// callers get those from [`super::profile_step_costs`]; tests and
+    /// benches pass synthetic costs).
     pub fn new(
         config: &ClusterConfig,
-        step_cost: crate::arch::cost::Cost,
+        step_costs: &[crate::arch::cost::Cost],
         schedule: NoiseSchedule,
         elems: usize,
-        bit_width: u32,
     ) -> Self {
-        assert!(config.devices >= 1, "cluster needs at least one device");
-        let reuse = ReuseSchedule::every(
-            config.reuse_interval.max(1),
-            config.reuse_shallow_frac,
+        assert_eq!(
+            step_costs.len(),
+            config.fleet.len(),
+            "need one step cost per fleet profile group"
         );
-        let devices: Vec<Device> = (0..config.devices)
-            .map(|i| {
-                Device::new(
-                    i,
-                    step_cost,
-                    config.capacity,
-                    config.max_queue,
-                    config.batch_marginal,
-                    reuse,
-                )
-            })
+        assert!(config.device_count() >= 1, "cluster needs at least one device");
+        let devices: Vec<Device> = config
+            .device_profiles()
+            .enumerate()
+            .map(|(i, (pi, profile))| Device::from_profile(i, pi, profile, step_costs[pi]))
             .collect();
-        let index = RouterIndex::new(config.policy, blank_loads(&devices));
+        let index =
+            RouterIndex::new(config.policy, blank_loads(&devices, config.cost_aware));
         Self {
             resident: vec![Vec::new(); devices.len()],
             queued: vec![VecDeque::new(); devices.len()],
             idle_empty: (0..devices.len()).collect(),
+            cost_aware: config.cost_aware,
             devices,
             index,
             // Row fan-out is a host-side workload: size the pool to the
@@ -375,7 +375,6 @@ impl StepScheduler {
             pool: ThreadPool::default_size(),
             schedule,
             elems,
-            bit_width,
             backlog: VecDeque::new(),
             max_backlog: config.max_backlog,
             sampler_cache: FxMap::default(),
@@ -416,7 +415,8 @@ impl StepScheduler {
         self.idle_empty = (0..self.devices.len()).collect();
         // Occupancy resets per window; the round-robin cursor and the
         // affinity home map persist (the stateless router does too).
-        self.index.reset_occupancy(blank_loads(&self.devices));
+        self.index
+            .reset_occupancy(blank_loads(&self.devices, self.cost_aware));
         self.events_processed = 0;
 
         let mut pending = requests.into_iter().peekable();
@@ -463,7 +463,7 @@ impl StepScheduler {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
             makespan_s: (last_finish_s - first_arrival_s).max(0.0),
             rejected: rejected.len() as u64,
-            bit_width: self.bit_width,
+            bit_width: self.devices.first().map_or(8, |d| d.bit_width),
             sched_events: self.events_processed,
             ..Default::default()
         };
@@ -748,7 +748,8 @@ impl StepScheduler {
 }
 
 /// Fresh (empty) occupancy snapshots for a fleet, for index (re)builds.
-pub(super) fn blank_loads(devices: &[Device]) -> Vec<DeviceLoad> {
+/// With `cost_aware` off every weight is 1 — the occupancy-only ranking.
+pub(super) fn blank_loads(devices: &[Device], cost_aware: bool) -> Vec<DeviceLoad> {
     devices
         .iter()
         .map(|d| DeviceLoad {
@@ -756,6 +757,7 @@ pub(super) fn blank_loads(devices: &[Device]) -> Vec<DeviceLoad> {
             queued: 0,
             capacity: d.capacity,
             max_queue: d.max_queue,
+            drain_ns: if cost_aware { d.drain_ns() } else { 1 },
         })
         .collect()
 }
@@ -766,25 +768,26 @@ mod tests {
     use crate::arch::cost::Cost;
     use crate::cluster::reference::ReferenceScheduler;
     use crate::cluster::router::ShardPolicy;
+    use crate::cluster::DeviceProfile;
+
+    fn test_cost() -> Cost {
+        Cost::new(1e-3, 2e-3, 1_000_000, 4)
+    }
 
     fn config(devices: usize) -> ClusterConfig {
-        ClusterConfig {
-            devices,
-            capacity: 4,
-            max_queue: 64,
-            policy: ShardPolicy::LeastLoaded,
-            ..ClusterConfig::default()
-        }
+        ClusterConfig::with_devices(devices)
+            .capacity(4)
+            .max_queue(64)
+            .policy(ShardPolicy::LeastLoaded)
+    }
+
+    fn scheduler_with(config: ClusterConfig) -> StepScheduler {
+        let costs = vec![test_cost(); config.fleet.len()];
+        StepScheduler::new(&config, &costs, NoiseSchedule::linear(100), 16)
     }
 
     fn scheduler(devices: usize) -> StepScheduler {
-        StepScheduler::new(
-            &config(devices),
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
-            NoiseSchedule::linear(100),
-            16,
-            8,
-        )
+        scheduler_with(config(devices))
     }
 
     fn workload(n: usize, steps: usize) -> Vec<ClusterRequest> {
@@ -839,16 +842,10 @@ mod tests {
 
     #[test]
     fn late_arrival_interleaves_into_running_batch() {
-        // One device, capacity 4: a full batch starts at t=0 on a long
+        // One device, capacity 8: a full batch starts at t=0 on a long
         // generation; a request arriving mid-flight must start stepping
         // before the first batch finishes.
-        let mut s = StepScheduler::new(
-            &ClusterConfig { devices: 1, capacity: 8, ..ClusterConfig::default() },
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
-            NoiseSchedule::linear(100),
-            16,
-            8,
-        );
+        let mut s = scheduler_with(ClusterConfig::with_devices(1).capacity(8));
         let mut reqs = workload(4, 50);
         reqs.push(ClusterRequest::new(99, 7, SamplerKind::Ddim { steps: 50 }, 5e-3));
         let out = s.serve(reqs, &mut SimExecutor).unwrap();
@@ -870,18 +867,7 @@ mod tests {
 
     #[test]
     fn admission_control_sheds_overload() {
-        let mut s = StepScheduler::new(
-            &ClusterConfig {
-                devices: 1,
-                capacity: 2,
-                max_queue: 2,
-                ..ClusterConfig::default()
-            },
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
-            NoiseSchedule::linear(100),
-            16,
-            8,
-        );
+        let mut s = scheduler_with(ClusterConfig::with_devices(1).capacity(2).max_queue(2));
         let out = s.serve(workload(10, 4), &mut SimExecutor).unwrap();
         assert_eq!(out.results.len() + out.rejected.len(), 10);
         assert!(
@@ -896,18 +882,8 @@ mod tests {
         // Tiny fleet, big burst: with a backlog bound, overload waits at
         // the fleet level and is re-routed as step boundaries free slots
         // — nothing is dropped, everything is served exactly once.
-        let mut s = StepScheduler::new(
-            &ClusterConfig {
-                devices: 2,
-                capacity: 1,
-                max_queue: 0,
-                max_backlog: 64,
-                ..ClusterConfig::default()
-            },
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
-            NoiseSchedule::linear(100),
-            16,
-            8,
+        let mut s = scheduler_with(
+            ClusterConfig::with_devices(2).capacity(1).max_queue(0).backlog(64),
         );
         let out = s.serve(workload(9, 3), &mut SimExecutor).unwrap();
         assert!(out.rejected.is_empty(), "backlog must absorb the burst");
@@ -916,6 +892,62 @@ mod tests {
         assert_eq!(ids, (0..9).collect::<Vec<_>>());
         // Solo capacity ⇒ every sample ran at occupancy exactly 1.
         assert!(out.results.iter().all(|r| (r.mean_batch - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn backlog_rerouting_preserves_admission_order_and_overflow_sheds() {
+        // ISSUE 4 satellite: dedicated coverage for the max_backlog
+        // deferral path. One device with capacity 1 and no queue: a
+        // 6-request burst admits one, defers exactly `max_backlog` = 2,
+        // and sheds the remaining 3 (in arrival order). The deferred
+        // requests must be re-routed at step boundaries in admission
+        // order — FIFO, so their first steps are ordered by id.
+        let mut s = scheduler_with(
+            ClusterConfig::with_devices(1).capacity(1).max_queue(0).backlog(2),
+        );
+        let out = s.serve(workload(6, 3), &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 3, "1 admitted + 2 deferred");
+        assert_eq!(
+            out.rejected,
+            vec![RequestId(3), RequestId(4), RequestId(5)],
+            "overflow beyond the backlog bound sheds in arrival order"
+        );
+        let mut by_id = out.results.clone();
+        by_id.sort_by_key(|r| r.id);
+        // Request 0 starts immediately; the deferred pair only enter at
+        // later step boundaries, in admission order.
+        assert_eq!(by_id[0].first_step_s, 0.0);
+        assert!(
+            by_id[1].first_step_s > 0.0,
+            "deferred request must wait for a step boundary"
+        );
+        assert!(
+            by_id[1].first_step_s <= by_id[2].first_step_s,
+            "backlog re-routing must preserve admission order ({} vs {})",
+            by_id[1].first_step_s,
+            by_id[2].first_step_s
+        );
+        // Deferral order equals service order on a single device.
+        assert!(by_id[1].finish_s <= by_id[2].finish_s);
+    }
+
+    #[test]
+    fn backlog_rerouting_matches_reference_under_contention() {
+        // The deferral path must agree between the two scheduler cores
+        // even when the backlog drains across multiple boundaries.
+        let cfg = ClusterConfig::with_devices(2)
+            .capacity(1)
+            .max_queue(1)
+            .backlog(3);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(60), 16);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(60), 16);
+        let reqs = workload(10, 4);
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+        let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.metrics, b.metrics);
+        assert!(!a.rejected.is_empty(), "10 requests must overflow 2+2+3 slots");
     }
 
     #[test]
@@ -933,27 +965,13 @@ mod tests {
         assert!((out.results[0].mean_batch - 1.0).abs() < 1e-12);
     }
 
-    fn scheduler_with(config: ClusterConfig) -> StepScheduler {
-        StepScheduler::new(
-            &config,
-            Cost::new(1e-3, 2e-3, 1_000_000, 4),
-            NoiseSchedule::linear(100),
-            16,
-            8,
-        )
-    }
-
     #[test]
     fn reuse_interval_one_reproduces_no_reuse_exactly() {
         // K=1 must be the pre-reuse scheduler bit-for-bit: the shallow
         // fraction is never exercised, every step is a full UNet step,
         // and all timings/metrics match the default (no-reuse) config.
         let base = config(2);
-        let k1 = ClusterConfig {
-            reuse_interval: 1,
-            reuse_shallow_frac: 0.125, // must be irrelevant at K=1
-            ..config(2)
-        };
+        let k1 = config(2).with_reuse(1).shallow_frac(0.125); // frac irrelevant at K=1
         let out_a = scheduler_with(base).serve(workload(10, 8), &mut SimExecutor).unwrap();
         let out_b = scheduler_with(k1).serve(workload(10, 8), &mut SimExecutor).unwrap();
         assert_eq!(out_a.results.len(), out_b.results.len());
@@ -971,8 +989,9 @@ mod tests {
     #[test]
     fn reuse_speeds_up_fleet_and_counts_hits() {
         let serve = |k: usize| {
-            let cfg = ClusterConfig { reuse_interval: k, ..config(2) };
-            scheduler_with(cfg).serve(workload(16, 12), &mut SimExecutor).unwrap()
+            scheduler_with(config(2).with_reuse(k))
+                .serve(workload(16, 12), &mut SimExecutor)
+                .unwrap()
         };
         let (k1, k3) = (serve(1), serve(3));
         // Reuse is a pure cost-model knob: samples stay bit-identical.
@@ -1004,13 +1023,12 @@ mod tests {
         // 40-step generations) land on device 0, odd ids (2-step) on
         // device 1. Device 1 drains quickly and must then steal device
         // 0's queued work instead of idling.
-        let cfg = |stealing: bool| ClusterConfig {
-            devices: 2,
-            capacity: 1,
-            max_queue: 16,
-            policy: ShardPolicy::LeastLoaded,
-            work_stealing: stealing,
-            ..ClusterConfig::default()
+        let cfg = |stealing: bool| {
+            ClusterConfig::with_devices(2)
+                .capacity(1)
+                .max_queue(16)
+                .policy(ShardPolicy::LeastLoaded)
+                .stealing(stealing)
         };
         let reqs = || -> Vec<ClusterRequest> {
             (0..8)
@@ -1076,13 +1094,131 @@ mod tests {
     }
 
     #[test]
+    fn all_zero_step_workload_reports_zero_metrics() {
+        // ISSUE 4 satellite: a workload of only Ddim { steps: 0 }
+        // requests completes entirely at admission — no device steps, a
+        // zero makespan (same-instant burst) — and every fleet metric
+        // must come out 0.0 rather than NaN or a panic.
+        let mut s = scheduler(2);
+        let reqs: Vec<ClusterRequest> = (0..5)
+            .map(|i| ClusterRequest::new(i, 900 + i, SamplerKind::Ddim { steps: 0 }, 0.0))
+            .collect();
+        let out = s.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 5);
+        let m = &out.metrics;
+        assert_eq!(m.makespan_s, 0.0);
+        assert_eq!(m.throughput_samples_per_s(), 0.0);
+        assert_eq!(m.latency_p50_s(), 0.0);
+        assert_eq!(m.latency_p99_s(), 0.0);
+        assert_eq!(m.fleet_epb(), 0.0);
+        assert_eq!(m.fleet_gops(), 0.0);
+        for d in &m.devices {
+            assert_eq!(d.utilization(m.makespan_s), 0.0);
+            assert_eq!(d.epb(), 0.0);
+        }
+        for g in m.per_profile() {
+            assert_eq!(g.throughput_samples_per_s(m.makespan_s), 0.0);
+            assert_eq!(g.utilization(m.makespan_s), 0.0);
+        }
+        let text = m.to_json().to_string_pretty();
+        assert!(!text.to_ascii_lowercase().contains("nan"));
+    }
+
+    // --- heterogeneous fleets -----------------------------------------
+
+    /// A deterministic 2-profile fleet: fast dies vs 4x-slower dies,
+    /// with asymmetric capacity/queue shapes.
+    fn hetero_profiles() -> (DeviceProfile, DeviceProfile) {
+        let fast = DeviceProfile {
+            capacity: 4,
+            max_queue: 8,
+            ..DeviceProfile::default()
+        };
+        let slow = DeviceProfile {
+            capacity: 2,
+            max_queue: 4,
+            ..DeviceProfile::default()
+        };
+        (fast, slow)
+    }
+
+    #[test]
+    fn cost_aware_routing_favors_fast_devices() {
+        // 1 fast + 1 slow (4x latency) device, cost-aware least-loaded:
+        // the burst must land mostly on the fast die, and the makespan
+        // must beat the occupancy-only split.
+        let (fast, slow) = hetero_profiles();
+        let cfg = |aware: bool| {
+            ClusterConfig::heterogeneous(vec![(fast, 1), (slow, 1)])
+                .max_queue(64)
+                .stealing(false)
+                .cost_aware(aware)
+        };
+        let costs = [test_cost(), Cost::new(4e-3, 8e-3, 1_000_000, 4)];
+        let serve = |aware: bool| {
+            let mut s = StepScheduler::new(&cfg(aware), &costs, NoiseSchedule::linear(100), 16);
+            s.serve(workload(24, 6), &mut SimExecutor).unwrap()
+        };
+        let aware = serve(true);
+        let blind = serve(false);
+        assert_eq!(aware.results.len(), 24);
+        assert_eq!(blind.results.len(), 24);
+        let on_fast = |out: &ClusterOutcome| {
+            out.results.iter().filter(|r| r.device == DeviceId(0)).count()
+        };
+        assert!(
+            on_fast(&aware) > on_fast(&blind),
+            "cost-aware routing must shift load to the fast die ({} vs {})",
+            on_fast(&aware),
+            on_fast(&blind)
+        );
+        assert!(
+            aware.metrics.makespan_s < blind.metrics.makespan_s,
+            "cost-aware routing must shorten the makespan ({} vs {})",
+            aware.metrics.makespan_s,
+            blind.metrics.makespan_s
+        );
+        // Routing moves placement, never sample content.
+        for ra in &aware.results {
+            let rb = blind.results.iter().find(|r| r.id == ra.id).unwrap();
+            assert_eq!(ra.sample, rb.sample);
+        }
+    }
+
+    #[test]
+    fn single_profile_fleet_is_invariant_to_cost_awareness() {
+        // On a homogeneous fleet every drain weight is equal, so
+        // cost-aware and occupancy-only ranking must be bit-identical —
+        // the "one-profile special case reproduces today's results"
+        // acceptance gate, asserted across policies and stealing modes.
+        for policy in ShardPolicy::ALL {
+            for stealing in [true, false] {
+                let serve = |aware: bool| {
+                    let cfg = config(3).policy(policy).stealing(stealing).cost_aware(aware);
+                    scheduler_with(cfg).serve(workload(14, 7), &mut SimExecutor).unwrap()
+                };
+                let a = serve(true);
+                let b = serve(false);
+                assert_eq!(a.metrics, b.metrics, "{} diverged", policy.name());
+                for (ra, rb) in a.results.iter().zip(&b.results) {
+                    assert_eq!(ra.id, rb.id);
+                    assert_eq!(ra.device, rb.device);
+                    assert_eq!(ra.sample, rb.sample);
+                    assert_eq!(ra.finish_s, rb.finish_s);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn heap_core_bit_identical_to_reference_loop() {
-        // The acceptance gate: across devices∈{1,2,4,8}, reuse K∈{1,3},
-        // stealing on/off, randomized workloads (mixed samplers, random
-        // arrivals, zero-step riders, all three policies, random
-        // capacities/queues/backlogs) must produce bit-identical
-        // results, timings and metrics on both scheduler cores.
-        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+        // The homogeneous acceptance gate: across devices∈{1,2,4,8},
+        // reuse K∈{1,3}, stealing on/off, randomized workloads (mixed
+        // samplers, random arrivals, zero-step riders, all three
+        // policies, random capacities/queues/backlogs) must produce
+        // bit-identical results, timings and metrics on both scheduler
+        // cores.
+        let cost = test_cost();
         for devices in [1usize, 2, 4, 8] {
             for reuse_k in [1usize, 3] {
                 for stealing in [true, false] {
@@ -1090,20 +1226,13 @@ mod tests {
                         "heap = reference (d={devices}, k={reuse_k}, steal={stealing})"
                     );
                     crate::util::prop::forall(&name, 2, |g| {
-                        let cfg = ClusterConfig {
-                            devices,
-                            capacity: g.usize_in(1, 4),
-                            max_queue: g.usize_in(0, 6),
-                            max_backlog: *g.choose(&[0usize, 4, usize::MAX]),
-                            policy: *g.choose(&[
-                                ShardPolicy::RoundRobin,
-                                ShardPolicy::LeastLoaded,
-                                ShardPolicy::Affinity,
-                            ]),
-                            reuse_interval: reuse_k,
-                            work_stealing: stealing,
-                            ..ClusterConfig::default()
-                        };
+                        let cfg = ClusterConfig::with_devices(devices)
+                            .capacity(g.usize_in(1, 4))
+                            .max_queue(g.usize_in(0, 6))
+                            .backlog(*g.choose(&[0usize, 4, usize::MAX]))
+                            .policy(*g.choose(&ShardPolicy::ALL))
+                            .with_reuse(reuse_k)
+                            .stealing(stealing);
                         let n = g.usize_in(1, 20);
                         let mut at = 0.0f64;
                         let reqs: Vec<ClusterRequest> = (0..n)
@@ -1121,10 +1250,11 @@ mod tests {
                             })
                             .collect();
                         let schedule = NoiseSchedule::linear(40);
+                        let costs = vec![cost; cfg.fleet.len()];
                         let mut heap =
-                            StepScheduler::new(&cfg, cost, schedule.clone(), 16, 8);
+                            StepScheduler::new(&cfg, &costs, schedule.clone(), 16);
                         let mut reference =
-                            ReferenceScheduler::new(&cfg, cost, schedule, 16, 8);
+                            ReferenceScheduler::new(&cfg, &costs, schedule, 16);
                         let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
                         let b = reference.serve(reqs, &mut SimExecutor).unwrap();
                         assert_eq!(a.rejected, b.rejected, "shed set diverged");
@@ -1151,20 +1281,115 @@ mod tests {
     }
 
     #[test]
+    fn heap_core_bit_identical_to_reference_on_heterogeneous_fleets() {
+        // The heterogeneous acceptance gate: randomized 2-profile and
+        // 3-profile fleets — per-profile capacities, queue depths,
+        // step costs, batch marginals and reuse cycles all differ —
+        // with randomized policies, stealing, backlog bounds and
+        // cost-aware on/off, must stay bit-identical across both
+        // scheduler cores (results, placements, timings, metrics).
+        for profiles in [2usize, 3] {
+            let name = format!("hetero heap = reference ({profiles} profiles)");
+            crate::util::prop::forall(&name, 6, |g| {
+                let mut fleet = Vec::new();
+                let mut costs = Vec::new();
+                for _ in 0..profiles {
+                    fleet.push((
+                        DeviceProfile {
+                            capacity: g.usize_in(1, 4),
+                            max_queue: g.usize_in(0, 6),
+                            batch_marginal: *g.choose(&[0.0, 0.25, 0.5]),
+                            reuse_interval: *g.choose(&[1usize, 2, 3]),
+                            reuse_shallow_frac: 0.25,
+                            ..DeviceProfile::default()
+                        },
+                        g.usize_in(1, 3),
+                    ));
+                    costs.push(Cost::new(
+                        g.f64_in(0.5e-3, 4e-3),
+                        2e-3,
+                        1_000_000,
+                        4,
+                    ));
+                }
+                let cfg = ClusterConfig::heterogeneous(fleet)
+                    .policy(*g.choose(&ShardPolicy::ALL))
+                    .backlog(*g.choose(&[0usize, 4, usize::MAX]))
+                    .stealing(g.bool())
+                    .cost_aware(g.bool());
+                let n = g.usize_in(4, 24);
+                let mut at = 0.0f64;
+                let reqs: Vec<ClusterRequest> = (0..n)
+                    .map(|i| {
+                        let sampler = match g.usize_in(0, 5) {
+                            0 => SamplerKind::Ddpm,
+                            1 => SamplerKind::Ddim { steps: 0 },
+                            _ => SamplerKind::Ddim { steps: g.usize_in(1, 12) },
+                        };
+                        if g.usize_in(0, 2) > 0 {
+                            at += g.f64_in(0.0, 2e-3);
+                        }
+                        ClusterRequest::new(i as u64, 4000 + i as u64, sampler, at)
+                    })
+                    .collect();
+                let schedule = NoiseSchedule::linear(40);
+                let mut heap = StepScheduler::new(&cfg, &costs, schedule.clone(), 16);
+                let mut reference = ReferenceScheduler::new(&cfg, &costs, schedule, 16);
+                let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+                let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+                assert_eq!(a.rejected, b.rejected, "shed set diverged");
+                assert_eq!(a.results.len(), b.results.len());
+                for (ra, rb) in a.results.iter().zip(&b.results) {
+                    assert_eq!(ra.id, rb.id, "completion order diverged");
+                    assert_eq!(ra.device, rb.device, "placement diverged");
+                    assert_eq!(ra.sample, rb.sample, "samples diverged");
+                    assert!(
+                        ra.finish_s == rb.finish_s && ra.first_step_s == rb.first_step_s,
+                        "timings diverged (req {:?})",
+                        ra.id
+                    );
+                }
+                assert_eq!(a.metrics, b.metrics, "metrics diverged");
+            });
+        }
+    }
+
+    #[test]
+    fn hetero_capacity_asymmetry_respected_by_stealing() {
+        // A capacity-1 thief next to a capacity-4 donor: stealing must
+        // stop at the thief's own capacity, never the donor's.
+        let small = DeviceProfile { capacity: 1, max_queue: 0, ..DeviceProfile::default() };
+        let big = DeviceProfile { capacity: 4, max_queue: 16, ..DeviceProfile::default() };
+        let cfg = ClusterConfig::heterogeneous(vec![(big, 1), (small, 1)])
+            .policy(ShardPolicy::LeastLoaded)
+            .stealing(true);
+        // Same cost both profiles: only the queue shapes differ.
+        let costs = [test_cost(), test_cost()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let out = s.serve(workload(12, 6), &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len() + out.rejected.len(), 12);
+        // The capacity-1 device can never fuse more than one sample.
+        for r in out.results.iter().filter(|r| r.device == DeviceId(1)) {
+            assert!(
+                r.mean_batch <= 1.0 + 1e-12,
+                "capacity-1 thief ran occupancy {}",
+                r.mean_batch
+            );
+        }
+    }
+
+    #[test]
     fn round_robin_cursor_persists_across_serve_windows() {
         // The stateless router's rotation survives serve() windows; the
         // index must too (occupancy resets, the cursor does not).
-        let cfg = ClusterConfig {
-            devices: 3,
-            capacity: 1,
-            max_queue: 4,
-            policy: ShardPolicy::RoundRobin,
-            ..ClusterConfig::default()
-        };
-        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
-        let mut heap = StepScheduler::new(&cfg, cost, NoiseSchedule::linear(50), 16, 8);
+        let cfg = ClusterConfig::with_devices(3)
+            .capacity(1)
+            .max_queue(4)
+            .policy(ShardPolicy::RoundRobin);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(50), 16);
         let mut reference =
-            ReferenceScheduler::new(&cfg, cost, NoiseSchedule::linear(50), 16, 8);
+            ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(50), 16);
         // 5 requests over 3 devices leave the rotation mid-fleet.
         for window in 0..2u64 {
             let reqs: Vec<ClusterRequest> = (0..5)
@@ -1186,21 +1411,16 @@ mod tests {
         // Large samples push k·elems past PARALLEL_ROWS_MIN_ELEMS, so
         // this exercises the pooled chunked fan-out path (the other
         // tests run the inline path) — still bit-identical.
-        let cfg = ClusterConfig {
-            devices: 2,
-            capacity: 8,
-            max_queue: 32,
-            ..ClusterConfig::default()
-        };
-        let cost = Cost::new(1e-3, 2e-3, 1_000_000, 4);
+        let cfg = ClusterConfig::with_devices(2).capacity(8).max_queue(32);
+        let costs = vec![test_cost(); cfg.fleet.len()];
         let elems = 1024;
         assert!(5 * elems >= PARALLEL_ROWS_MIN_ELEMS, "test must hit the pooled path");
         let reqs: Vec<ClusterRequest> = (0..10)
             .map(|i| ClusterRequest::new(i, 500 + i, SamplerKind::Ddim { steps: 5 }, 0.0))
             .collect();
-        let mut heap = StepScheduler::new(&cfg, cost, NoiseSchedule::linear(100), elems, 8);
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), elems);
         let mut reference =
-            ReferenceScheduler::new(&cfg, cost, NoiseSchedule::linear(100), elems, 8);
+            ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), elems);
         let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
         let b = reference.serve(reqs, &mut SimExecutor).unwrap();
         assert_eq!(a.metrics, b.metrics);
@@ -1208,6 +1428,29 @@ mod tests {
             assert_eq!(ra.id, rb.id);
             assert_eq!(ra.sample, rb.sample);
             assert!(ra.finish_s == rb.finish_s);
+        }
+    }
+
+    #[test]
+    fn hetero_bit_widths_roll_up_per_device() {
+        // Two profiles at different datapath widths: per-device metrics
+        // carry their own width, and the fleet EPB weights each die's
+        // bits correctly.
+        let w8 = DeviceProfile::default();
+        let w4 = DeviceProfile { bit_width: 4, ..DeviceProfile::default() };
+        let cfg = ClusterConfig::heterogeneous(vec![(w8, 1), (w4, 1)]);
+        let costs = [test_cost(), test_cost()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let out = s.serve(workload(8, 4), &mut SimExecutor).unwrap();
+        let m = &out.metrics;
+        assert_eq!(m.devices[0].bit_width, 8);
+        assert_eq!(m.devices[1].bit_width, 4);
+        assert_eq!(m.bit_width, 8, "fleet-level width is the first device's");
+        if m.devices.iter().all(|d| d.ops > 0) {
+            assert!(
+                m.devices[1].epb() > m.devices[0].epb(),
+                "same energy over fewer bits must raise EPB"
+            );
         }
     }
 

@@ -3,15 +3,16 @@
 //!
 //! Two serving tiers share this front door:
 //!
-//! * **Single device** (`cluster.devices == 1`) — the original
+//! * **Single device** (a one-device fleet spec) — the original
 //!   run-to-completion loop: form a batch, denoise it across all
 //!   timesteps, emit, repeat.
-//! * **Fleet** (`cluster.devices > 1`, or `cluster.reuse_interval > 1`
-//!   on a single device) — requests are handed to the [`crate::cluster`]
-//!   step-level scheduler, which shards them across N simulated
-//!   DiffLight devices with continuous batching and DeepCache step
-//!   reuse; the PJRT runtime stays the compute substrate via
-//!   [`StepExecutor`].
+//! * **Fleet** (`cluster.device_count() > 1`, a heterogeneous
+//!   multi-profile spec, or DeepCache reuse on a single device) —
+//!   requests are handed to the [`crate::cluster`] step-level
+//!   scheduler, which shards them across N simulated DiffLight devices
+//!   (each priced from its own [`crate::cluster::DeviceProfile`]) with
+//!   continuous batching and DeepCache step reuse; the PJRT runtime
+//!   stays the compute substrate via [`StepExecutor`].
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -101,10 +102,12 @@ impl Coordinator {
 
     /// Serve until the queue is empty; returns all finished generations.
     pub fn run_until_drained(&mut self) -> crate::Result<Vec<GenerationResult>> {
-        // The cluster scheduler owns both sharding and DeepCache step
-        // reuse, so either a multi-device fleet *or* a reuse interval
-        // routes through it (a 1-device cluster is the reuse-only case).
-        if self.config.cluster.devices > 1 || self.config.cluster.reuse_interval > 1 {
+        // The cluster scheduler owns sharding, DeepCache step reuse and
+        // per-profile pricing, so a multi-device fleet, a reuse
+        // interval, *or* a custom device profile (arch/opts/bit-width —
+        // meaningless outside the simulated device clocks) routes
+        // through it.
+        if self.config.cluster.needs_fleet_scheduler() {
             return self.run_cluster_drained();
         }
         let mut out = Vec::new();
@@ -144,9 +147,9 @@ impl Coordinator {
             .collect();
         // Drained mode is offline: there is no client to push back on, so
         // overload defers to the fleet backlog instead of shedding.
-        let mut cluster_config = self.config.cluster;
+        let mut cluster_config = self.config.cluster.clone();
         cluster_config.max_backlog = usize::MAX;
-        let mut cluster = Cluster::new(cluster_config, schedule, elems);
+        let mut cluster = Cluster::new(cluster_config, schedule, elems)?;
         let mut executor =
             PjrtStepExecutor { runtime: &mut self.runtime, quantized: self.config.quantized };
         let outcome = cluster.serve(requests, &mut executor)?;

@@ -12,8 +12,9 @@
 //!   max-size/max-wait policy.
 //! * [`sampler`] — DDPM/DDIM ancestral samplers over the AOT schedule.
 //! * [`engine`] — the serving loop tying them together, with metrics.
-//!   With `EngineConfig::cluster.devices > 1` the engine hands the queue
-//!   to the [`crate::cluster`] step-level fleet scheduler instead of the
+//!   When `EngineConfig::cluster` names more than one device (or any
+//!   profile runs DeepCache reuse) the engine hands the queue to the
+//!   [`crate::cluster`] step-level fleet scheduler instead of the
 //!   single-device run-to-completion loop.
 
 pub mod batcher;

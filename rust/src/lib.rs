@@ -32,10 +32,13 @@
 //!   (HLO text → compile → execute); Python never runs at serve time.
 //! * [`coordinator`] — the serving layer: request router, dynamic
 //!   batcher and denoise-step scheduler driving [`runtime`].
-//! * [`cluster`] — multi-accelerator sharded serving: a fleet of N
-//!   simulated DiffLight devices behind a step-level continuous-batching
-//!   scheduler, with round-robin / least-loaded / sampler-affinity shard
-//!   routing, admission control, and per-device + fleet metric roll-ups.
+//! * [`cluster`] — multi-accelerator sharded serving: a fleet of
+//!   simulated DiffLight devices — homogeneous or heterogeneous, each
+//!   priced from its own per-device `[Y,N,K,H,L,M]@λ` profile — behind
+//!   a step-level continuous-batching scheduler, with round-robin /
+//!   cost-aware least-loaded / sampler-affinity shard routing,
+//!   admission control, and per-device + per-profile + fleet metric
+//!   roll-ups.
 //! * [`util`] — infrastructure hand-rolled for the offline build: CLI
 //!   parsing, deterministic PRNG, JSON writer, thread pool, and a small
 //!   property-testing harness.

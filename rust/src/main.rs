@@ -9,21 +9,30 @@
 //! * `dse [--threads N]` — design-space exploration (reports the top
 //!   configurations and the paper config's rank).
 //! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
-//!   [--fp32] [--devices N] [--reuse-interval K]` — serve synthetic
-//!   generation requests through the AOT UNet via PJRT (sharded across
-//!   an N-device fleet when `--devices > 1`, with DeepCache step reuse
-//!   when `K > 1`) and print latency/throughput metrics.
+//!   [--fp32] [--devices N] [--reuse-interval K] [--policy P]
+//!   [--fleet SPEC | --fleet-file PATH]` — serve synthetic generation
+//!   requests through the AOT UNet via PJRT (sharded across a device
+//!   fleet when more than one device is specified, with DeepCache step
+//!   reuse when `K > 1`) and print latency/throughput metrics.
 //! * `cluster [--devices N] [--requests R] [--steps S] [--capacity C]
 //!   [--policy rr|ll|affinity] [--gap-us G] [--reuse-interval K]
-//!   [--shallow-frac F] [--no-steal]` — pure-simulation fleet serving
-//!   (no artifacts needed): continuous step-level batching over N
-//!   simulated DiffLight devices with work stealing and DeepCache-style
-//!   step reuse, with a fleet JSON report.
+//!   [--shallow-frac F] [--no-steal] [--occupancy-only]
+//!   [--fleet SPEC | --fleet-file PATH]` — pure-simulation fleet
+//!   serving (no artifacts needed): continuous step-level batching over
+//!   simulated DiffLight devices — homogeneous (`--devices`) or
+//!   heterogeneous (`--fleet "Y8N12K3H8L6M3:cap4x2,Y2N12K3H3L6M3x6"`,
+//!   per-device `[Y,N,K,H,L,M]@λ` profiles priced independently) —
+//!   with cost-aware routing, work stealing and DeepCache-style step
+//!   reuse, plus a fleet JSON report with per-profile roll-ups. The
+//!   `--fleet` grammar is documented in `rust/src/cluster/README.md`.
 //! * `devices` — print the Table II device parameter set in use.
 
 use difflight::arch::cost::OptFlags;
 use difflight::baselines::all_baselines;
-use difflight::cluster::{synthetic_workload, Cluster, ClusterConfig, ShardPolicy, SimExecutor};
+use difflight::cluster::{
+    parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster, ClusterConfig,
+    DeviceProfile, ShardPolicy, SimExecutor,
+};
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
 use difflight::devices::DeviceParams;
@@ -60,7 +69,63 @@ fn print_help(program: &str) {
     println!("  serve --requests 8 --steps 25       serve via PJRT artifacts");
     println!("  cluster --devices 4 --requests 32   simulated fleet serving");
     println!("          --reuse-interval 3          DeepCache step reuse (1 = off)");
+    println!("          --fleet \"Y8N12K3H8L6M3:cap4x2,Y2N12K3H3L6M3x6\"");
+    println!("                                      heterogeneous per-device profiles");
+    println!("          --fleet-file fleet.json     fleet spec as JSON");
+    println!("          --occupancy-only            disable cost-aware routing");
     println!("  devices                             Table II constants");
+}
+
+/// Build the fleet part of a [`ClusterConfig`] from `--fleet` /
+/// `--fleet-file`, or from the homogeneous `--devices`-style flags.
+/// The two forms are mutually exclusive: per-device knobs belong in the
+/// spec (`:cap4:q64:reuse3`) when a fleet is given, so combining them
+/// with the homogeneous flags is an error rather than a silent drop.
+/// Errors (bad grammar, design-rule violations, unreadable file) come
+/// back to the caller for a clean non-zero exit.
+fn fleet_from_args(args: &Args, default_devices: usize) -> difflight::Result<ClusterConfig> {
+    let explicit_fleet = args.get("fleet").is_some() || args.get("fleet-file").is_some();
+    if explicit_fleet {
+        anyhow::ensure!(
+            args.get("fleet").is_none() || args.get("fleet-file").is_none(),
+            "--fleet and --fleet-file are mutually exclusive"
+        );
+        for flag in ["devices", "capacity", "max-queue", "reuse-interval", "shallow-frac"] {
+            anyhow::ensure!(
+                args.get(flag).is_none(),
+                "--{flag} conflicts with --fleet/--fleet-file; put per-device knobs in \
+                 the fleet spec instead (e.g. \":cap4:q64:reuse3\" — see \
+                 rust/src/cluster/README.md)"
+            );
+        }
+    }
+    let mut config = if let Some(spec) = args.get("fleet") {
+        ClusterConfig::heterogeneous(parse_fleet_spec(spec)?)
+    } else if let Some(path) = args.get("fleet-file") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--fleet-file {path}: {e}"))?;
+        ClusterConfig::heterogeneous(parse_fleet_json(&text)?)
+    } else {
+        let profile = DeviceProfile {
+            capacity: args.get_parsed("capacity", 4usize),
+            max_queue: args.get_parsed("max-queue", 64usize),
+            reuse_interval: args.get_parsed("reuse-interval", 1usize).max(1),
+            reuse_shallow_frac: args.get_parsed("shallow-frac", 0.25f64).clamp(0.01, 1.0),
+            ..DeviceProfile::default()
+        };
+        ClusterConfig::homogeneous(profile, args.get_parsed("devices", default_devices))
+    };
+    config.work_stealing = !args.flag("no-steal");
+    config.cost_aware = !args.flag("occupancy-only");
+    Ok(config)
+}
+
+/// Parse `--policy`, or exit-worthy error text listing the valid names.
+fn policy_from_args(args: &Args) -> Result<ShardPolicy, String> {
+    let raw = args.get_or("policy", "least-loaded");
+    ShardPolicy::parse(&raw).ok_or_else(|| {
+        format!("unknown --policy {raw:?}; valid policies: {}", ShardPolicy::names())
+    })
 }
 
 fn parse_opts(args: &Args) -> OptFlags {
@@ -186,9 +251,51 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut config = EngineConfig::new(artifacts);
     config.quantized = !args.flag("fp32");
     config.policy.max_batch = args.get_parsed("batch", 4usize);
-    config.cluster.devices = args.get_parsed("devices", 1usize);
-    config.cluster.capacity = config.policy.max_batch;
-    config.cluster.reuse_interval = args.get_parsed("reuse-interval", 1usize);
+    let fleet = match fleet_from_args(args, 1) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let policy = match policy_from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    // With no explicit fleet (and no explicit --capacity) the device
+    // capacity tracks the batch knob, as it always has on this
+    // subcommand; an explicit --capacity wins over that aliasing.
+    let explicit_fleet = args.get("fleet").is_some() || args.get("fleet-file").is_some();
+    let alias_capacity = !explicit_fleet && args.get("capacity").is_none();
+    config.cluster = if alias_capacity {
+        fleet.capacity(config.policy.max_batch)
+    } else {
+        fleet
+    }
+    .policy(policy);
+    // The single-device run-to-completion loop ignores the cluster
+    // profile entirely (it batches via --batch), so fleet-path-only
+    // knobs that would be silently dropped there are loud errors.
+    if !config.cluster.needs_fleet_scheduler() {
+        if explicit_fleet {
+            eprintln!(
+                "error: this fleet spec resolves to a single default-profile device, which \
+                 runs the single-device loop and would ignore the spec's queue shape; add \
+                 more devices, reuse, or a custom arch — or drop --fleet/--fleet-file"
+            );
+            return 2;
+        }
+        if args.get("capacity").is_some() || args.get("max-queue").is_some() {
+            eprintln!(
+                "error: --capacity/--max-queue only apply to the fleet path; use --batch \
+                 for the single-device loop, or add --devices N / --fleet"
+            );
+            return 2;
+        }
+    }
     let mut coord = match Coordinator::open(config) {
         Ok(c) => c,
         Err(e) => {
@@ -224,21 +331,19 @@ fn cmd_serve(args: &Args) -> i32 {
 }
 
 fn cmd_cluster(args: &Args) -> i32 {
-    let config = ClusterConfig {
-        devices: args.get_parsed("devices", 4usize),
-        capacity: args.get_parsed("capacity", 4usize),
-        max_queue: args.get_parsed("max-queue", 64usize),
-        policy: ShardPolicy::parse(&args.get_or("policy", "least-loaded"))
-            .unwrap_or_else(|| {
-                eprintln!("unknown --policy (want rr|least-loaded|affinity); using least-loaded");
-                ShardPolicy::LeastLoaded
-            }),
-        reuse_interval: args.get_parsed("reuse-interval", 1usize).max(1),
-        reuse_shallow_frac: args
-            .get_parsed("shallow-frac", 0.25f64)
-            .clamp(0.01, 1.0),
-        work_stealing: !args.flag("no-steal"),
-        ..ClusterConfig::default()
+    let config = match fleet_from_args(args, 4) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let config = match policy_from_args(args) {
+        Ok(p) => config.policy(p),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
     let requests = args.get_parsed("requests", 32usize);
     let steps = args.get_parsed("steps", 25usize);
@@ -248,7 +353,14 @@ fn cmd_cluster(args: &Args) -> i32 {
     let gap_s = args.get_parsed("gap-us", 0.0f64) * 1e-6;
     let seed = args.get_parsed("seed", 1u64);
 
-    let mut cluster = Cluster::simulated(config);
+    let mut cluster = match Cluster::simulated(config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: invalid fleet: {e:#}");
+            return 2;
+        }
+    };
+    let config = cluster.config.clone();
     let workload = synthetic_workload(requests, seed, SamplerKind::Ddim { steps }, gap_s);
     let host_t0 = std::time::Instant::now();
     let outcome = match cluster.serve(workload, &mut SimExecutor) {
@@ -262,26 +374,47 @@ fn cmd_cluster(args: &Args) -> i32 {
 
     let m = &outcome.metrics;
     println!(
-        "{} devices ({} policy): served {}/{} requests, {} rejected",
-        config.devices,
+        "{} devices, {} profile(s) ({} policy, {} routing): served {}/{} requests, {} rejected",
+        config.device_count(),
+        config.fleet.len(),
         config.policy.name(),
+        if config.cost_aware { "cost-aware" } else { "occupancy-only" },
         outcome.results.len(),
         requests,
         outcome.rejected.len()
     );
-    let mut table = Table::new(&["device", "steps", "samples", "busy", "util", "GOPS", "EPB"]);
+    if config.fleet.len() > 1 {
+        for (pi, (profile, count)) in config.fleet.iter().enumerate() {
+            println!("  profile {pi}: {profile} x{count}");
+        }
+    }
+    let mut table =
+        Table::new(&["device", "prof", "steps", "samples", "busy", "util", "GOPS", "EPB"]);
     for d in &m.devices {
         table.row(&[
             d.id.to_string(),
+            d.profile.to_string(),
             d.steps_executed.to_string(),
             d.samples_completed.to_string(),
             fmt_si(d.busy_s, "s"),
             format!("{:.0}%", 100.0 * d.utilization(m.makespan_s)),
             format!("{:.1}", d.gops()),
-            fmt_si(d.epb(m.bit_width), "J/bit"),
+            fmt_si(d.epb(), "J/bit"),
         ]);
     }
     print!("{}", table.render());
+    if config.fleet.len() > 1 {
+        for g in m.per_profile() {
+            println!(
+                "profile {}: {} devices, {:.1} samples/s, util {:.0}%, EPB {}",
+                g.profile,
+                g.devices,
+                g.throughput_samples_per_s(m.makespan_s),
+                100.0 * g.utilization(m.makespan_s),
+                fmt_si(g.epb(), "J/bit"),
+            );
+        }
+    }
     println!(
         "fleet: {:.1} samples/s (simulated), p50 {} p99 {}, {:.1} GOPS, EPB {}",
         m.throughput_samples_per_s(),
@@ -296,10 +429,9 @@ fn cmd_cluster(args: &Args) -> i32 {
         fmt_si(host_s, "s"),
         if host_s > 0.0 { m.sched_events as f64 / host_s } else { 0.0 },
     );
-    if config.reuse_interval > 1 {
+    if config.any_reuse() {
         println!(
-            "reuse: K={} — {} cache-hit / {} full sample-steps ({:.0}% hit rate)",
-            config.reuse_interval,
+            "reuse: {} cache-hit / {} full sample-steps ({:.0}% hit rate)",
             m.reuse_hits(),
             m.reuse_misses(),
             100.0 * m.reuse_hit_rate(),

@@ -183,13 +183,10 @@ fn reproducible_generation_per_seed() {
 // ---------------------------------------------------------------------
 
 fn cluster_config(devices: usize) -> ClusterConfig {
-    ClusterConfig {
-        devices,
-        capacity: 4,
-        max_queue: 64,
-        policy: ShardPolicy::LeastLoaded,
-        ..ClusterConfig::default()
-    }
+    ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(64)
+        .policy(ShardPolicy::LeastLoaded)
 }
 
 fn burst(n: usize, steps: usize) -> Vec<ClusterRequest> {
@@ -200,7 +197,7 @@ fn burst(n: usize, steps: usize) -> Vec<ClusterRequest> {
 
 /// Simulated fleet throughput for a 16-request burst at a device count.
 fn fleet_throughput(devices: usize) -> f64 {
-    let mut c = Cluster::simulated(cluster_config(devices));
+    let mut c = Cluster::simulated(cluster_config(devices)).expect("valid fleet");
     let out = c.serve(burst(16, 8), &mut SimExecutor).unwrap();
     assert_eq!(out.results.len(), 16, "all requests must be served");
     out.metrics.throughput_samples_per_s()
@@ -221,11 +218,8 @@ fn n_device_throughput_scales() {
 
 #[test]
 fn every_policy_serves_everything() {
-    for policy in [ShardPolicy::RoundRobin, ShardPolicy::LeastLoaded, ShardPolicy::Affinity] {
-        let mut c = Cluster::simulated(ClusterConfig {
-            policy,
-            ..cluster_config(3)
-        });
+    for policy in ShardPolicy::ALL {
+        let mut c = Cluster::simulated(cluster_config(3).policy(policy)).expect("valid fleet");
         let out = c.serve(burst(12, 5), &mut SimExecutor).unwrap();
         assert_eq!(out.results.len(), 12, "{} dropped requests", policy.name());
         assert!(out.rejected.is_empty());
@@ -239,11 +233,8 @@ fn every_policy_serves_everything() {
 fn late_request_starts_before_earlier_batch_finishes() {
     // e2e interleave proof: one device already denoising a full batch of
     // long generations admits a late request at the next step boundary.
-    let mut c = Cluster::simulated(ClusterConfig {
-        devices: 1,
-        capacity: 8,
-        ..ClusterConfig::default()
-    });
+    let mut c = Cluster::simulated(ClusterConfig::with_devices(1).capacity(8))
+        .expect("valid fleet");
     let mut reqs = burst(4, 40);
     // A tiny positive offset lands mid-generation: the burst starts at
     // t=0 and 40 accelerator steps take far longer than a microsecond.
@@ -334,13 +325,55 @@ fn coordinator_cluster_serves_16_requests_on_4_devices() {
         cluster_config(1),
         manifest.schedule.clone(),
         manifest.sample_elems(),
-    );
+    )
+    .expect("valid fleet");
     let single_out = single.serve(burst(16, 6), &mut SimExecutor).unwrap();
     let t1 = single_out.metrics.throughput_samples_per_s();
     let t4 = fleet.throughput_samples_per_s();
     assert!(
         t4 >= 3.0 * t1,
         "coordinator fleet throughput {t4:.1} < 3x single-device {t1:.1}"
+    );
+}
+
+#[test]
+fn coordinator_heterogeneous_fleet_serves() {
+    // A 2-profile fleet (one big die, two small dies) through the full
+    // Coordinator stack: per-profile pricing, cost-aware routing and the
+    // per-profile metric roll-up all compose with the PJRT substrate.
+    use difflight::arch::ArchConfig;
+    use difflight::cluster::DeviceProfile;
+
+    let dir = synth_artifacts("hetero");
+    let big = DeviceProfile {
+        arch: ArchConfig::from_vector([8, 12, 3, 8, 6, 3], 36),
+        ..DeviceProfile::default()
+    };
+    let small = DeviceProfile {
+        arch: ArchConfig::from_vector([2, 12, 3, 3, 6, 3], 36),
+        capacity: 2,
+        ..DeviceProfile::default()
+    };
+    let config = EngineConfig::new(&dir)
+        .with_cluster(ClusterConfig::heterogeneous(vec![(big, 1), (small, 2)]));
+    let mut coord = Coordinator::open(config).unwrap();
+    for i in 0..12u64 {
+        coord.submit(7000 + i, SamplerKind::Ddim { steps: 5 });
+    }
+    let results = coord.run_until_drained().unwrap();
+    assert_eq!(results.len(), 12);
+    let fleet = coord.fleet_metrics.as_ref().expect("fleet metrics recorded");
+    assert_eq!(fleet.devices.len(), 3);
+    let rollup = fleet.per_profile();
+    assert_eq!(rollup.len(), 2);
+    assert_eq!((rollup[0].devices, rollup[1].devices), (1, 2));
+    // Cost-aware routing on a burst must favor the fast profile: the
+    // big die serves at least its device-count share of the work.
+    assert!(
+        rollup[0].samples_completed >= rollup[1].samples_completed / 2,
+        "big die underused: {} vs {}",
+        rollup[0].samples_completed,
+        rollup[1].samples_completed
     );
 }
 

@@ -1,18 +1,24 @@
 #!/usr/bin/env bash
 # Perf-trajectory harness: times the paper DSE sweep (memoized vs the
 # uncached reference), a 10k-request fleet drain (DeepCache reuse on
-# vs off), and the fleet-scale scheduler sweep (heap event core vs the
-# O(N) reference loop), asserting the ISSUE targets (>=5x DSE, >=1.5x
-# fleet throughput at K=3, >=5x scheduler events/sec at 256 devices)
+# vs off), the fleet-scale scheduler sweep (heap event core vs the
+# O(N) reference loop), and the heterogeneous big/small fleet drain
+# (cost-aware vs occupancy-only routing), asserting the ISSUE targets
+# (>=5x DSE, >=1.5x fleet throughput at K=3, >=5x scheduler events/sec
+# at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet)
 # and writing BENCH_sim.json at the repo root.
 #
-# Usage: scripts/bench.sh [--smoke] [--devices-sweep]
+# Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
-#                    gating the 64-device scheduler point) so the
-#                    harness stays cheap enough for CI.
+#                    gating the 64-device scheduler point and the
+#                    2-profile heap-vs-reference parity) so the harness
+#                    stays cheap enough for CI.
 #   --devices-sweep  additionally run benches/cluster_scale.rs with its
 #                    full devices in {1,4,16,64,256} scheduler-scaling
 #                    sweep (artifacts/cluster_scale.json).
+#   --hetero         force the full-size fleet_hetero section (512
+#                    requests) even together with --smoke; the section
+#                    itself always runs and lands in BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

@@ -13,10 +13,14 @@ cargo test -q
 
 echo "== bench smoke (sim_hot_path --smoke) =="
 # 1-iteration miniature of the perf harness so it cannot bit-rot; also
-# re-checks cached-vs-uncached bit-identity, the K=3 reuse speedup, and
-# the fleet-scale sweep up to the 64-device point (heap event core must
+# re-checks cached-vs-uncached bit-identity, the K=3 reuse speedup, the
+# fleet-scale sweep up to the 64-device point (heap event core must
 # beat the O(N) reference loop there, so scheduler-scaling regressions
-# fail this gate).
+# fail this gate), and the heterogeneous-fleet gates: a 2-profile fleet
+# must be bit-identical between the heap core and ReferenceScheduler
+# (metrics included), and cost-aware routing must beat occupancy-only
+# routing >= 1.2x on the mixed big/small fleet (both simulated-time
+# results, deterministic under host load).
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== cargo fmt --check =="
