@@ -8,12 +8,17 @@
 //! `artifacts/serve_report.json` and are recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example serve_denoise -- [--requests 12]
-//!       [--steps 20] [--batch 4] [--seed 1] [--fp32] [--devices 1]`
+//!       [--steps 20] [--batch 4] [--seed 1] [--fp32] [--devices 1]
+//!       [--slo-ms MS[,MS...]] [--shed-late]`
 //!
 //! With `--devices N > 1` the coordinator shards the workload across an
 //! N-device simulated fleet (step-level continuous batching) and writes
 //! the fleet roll-up to `artifacts/cluster_report.json` next to the
-//! serving report.
+//! serving report. `--slo-ms` attaches per-class latency deadlines on
+//! the fleet path (goodput/attainment land in the fleet roll-up);
+//! `--shed-late` additionally sheds requests that cannot meet their
+//! deadline at admission — shed requests return no result and are
+//! reported instead of failing the drained-serve invariant.
 
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -33,6 +38,25 @@ fn main() -> difflight::Result<()> {
     config.quantized = !args.flag("fp32");
     config.policy.max_batch = batch;
     config.cluster = difflight::cluster::ClusterConfig::with_devices(devices).capacity(batch);
+    // SLO tier (fleet path only): per-class deadlines in ms, optional
+    // deadline-aware shedding.
+    config.slo_ms = match args.get("slo-ms") {
+        Some(spec) => difflight::cluster::load::parse_slo_spec(spec)?
+            .into_iter()
+            .map(|s| s * 1e3)
+            .collect(),
+        None => Vec::new(),
+    };
+    config.shed_late = args.flag("shed-late");
+    anyhow::ensure!(
+        !config.shed_late || !config.slo_ms.is_empty(),
+        "--shed-late needs deadlines to shed against; add --slo-ms MS[,MS...]"
+    );
+    anyhow::ensure!(
+        config.slo_ms.is_empty() || config.cluster.needs_fleet_scheduler(),
+        "--slo-ms/--shed-late only apply to the fleet path; add --devices N > 1"
+    );
+    let shed_late = config.shed_late;
     let mut coord = Coordinator::open(config)?;
     println!(
         "serving {requests} requests, {steps} DDIM steps, max_batch {batch}, \
@@ -67,11 +91,12 @@ fn main() -> difflight::Result<()> {
             all_ok = false;
         }
     }
-    let first = &results[0].sample;
-    let distinct = results.iter().skip(1).any(|r| r.sample != *first);
-    if results.len() > 1 && !distinct {
-        println!("BAD: all samples identical across seeds");
-        all_ok = false;
+    if results.len() > 1 {
+        let first = &results[0].sample;
+        if !results.iter().skip(1).any(|r| r.sample != *first) {
+            println!("BAD: all samples identical across seeds");
+            all_ok = false;
+        }
     }
 
     let latencies: Vec<f64> = results.iter().map(|r| r.latency_s()).collect();
@@ -98,16 +123,32 @@ fn main() -> difflight::Result<()> {
     }
     std::fs::write("artifacts/serve_report.json", report.to_string_pretty())?;
     println!("wrote artifacts/serve_report.json");
+    let mut shed = 0u64;
     if let Some(fleet) = &coord.fleet_metrics {
         println!(
             "fleet: {:.1} samples/s over {} devices (simulated)",
             fleet.throughput_samples_per_s(),
             fleet.devices.len()
         );
+        if fleet.any_slo_tracked() {
+            println!(
+                "slo: goodput {:.1} samples/s, attainment {:.1}% of offered, {} shed",
+                fleet.goodput_samples_per_s(),
+                100.0 * fleet.slo_attainment(),
+                fleet.rejected,
+            );
+        }
+        shed = fleet.rejected;
         std::fs::write("artifacts/cluster_report.json", fleet.to_json().to_string_pretty())?;
         println!("wrote artifacts/cluster_report.json");
     }
     anyhow::ensure!(all_ok, "quality sanity check failed");
-    anyhow::ensure!(results.len() == requests, "dropped requests");
+    // Deadline-aware shedding is the only sanctioned way to drop work.
+    anyhow::ensure!(shed == 0 || shed_late, "shed without --shed-late");
+    anyhow::ensure!(
+        results.len() + shed as usize == requests,
+        "dropped requests ({} served + {shed} shed != {requests})",
+        results.len()
+    );
     Ok(())
 }

@@ -1,4 +1,6 @@
 //! Scale-out sweep: fleet serving throughput for devices ∈ {1, 2, 4, 8},
+//! a closed-loop client concurrency sweep (interactive clients with
+//! think time and per-request SLOs — goodput/attainment vs concurrency),
 //! a heterogeneous big/small fleet sweep (cost-aware vs occupancy-only
 //! routing vs an equal-device-count homogeneous fleet), plus the
 //! scheduler-scaling sweep (devices ∈ {1, 4, 16, 64, 256}) comparing
@@ -20,7 +22,7 @@
 mod harness;
 
 use difflight::cluster::{
-    synthetic_workload, Cluster, ClusterConfig, ShardPolicy, SimExecutor,
+    synthetic_workload, Cluster, ClusterConfig, RequestSource, ShardPolicy, SimExecutor,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::util::json::Json;
@@ -114,6 +116,64 @@ fn main() {
             Json::obj()
                 .set("reuse_interval", k)
                 .set("speedup_vs_k1", tput / base_reuse_tput)
+                .set("report", m.to_json()),
+        );
+    }
+
+    // ---- closed-loop clients: concurrency sweep on the SLO fleet ----
+    // N interactive clients (one request in flight each, exponential
+    // think time of half a fused generation) against the 4-die paper
+    // fleet with per-request SLOs: throughput rises with concurrency
+    // until the fleet saturates, then attainment falls — the classic
+    // closed-loop saturation curve.
+    let (_, slo_s) = harness::slo_workload_params();
+    harness::section(&format!(
+        "closed-loop clients: {} paper dies, {} DDIM steps, slo {:.2} ms, think {:.2} ms",
+        harness::SLO_DEVICES,
+        harness::SLO_STEPS,
+        slo_s * 1e3,
+        slo_s * 1e3 / 6.0,
+    ));
+    let mut closed_sweep = Vec::new();
+    println!(
+        "{:>8} {:>16} {:>12} {:>12} {:>12}",
+        "clients", "samples/s (sim)", "goodput", "attainment", "p99"
+    );
+    for clients in [4usize, 16, 64] {
+        let mut cluster = Cluster::simulated(
+            ClusterConfig::with_devices(harness::SLO_DEVICES)
+                .capacity(harness::SLO_CAPACITY)
+                .max_queue(harness::SLO_MAX_QUEUE)
+                .policy(ShardPolicy::LeastLoaded),
+        )
+        .expect("paper fleet");
+        let source = RequestSource::closed_loop(
+            clients,
+            slo_s / 6.0,
+            clients * 8,
+            19,
+            SamplerKind::Ddim { steps: harness::SLO_STEPS },
+        )
+        .with_slos(vec![slo_s]);
+        let out = cluster.serve_source(source, &mut SimExecutor).expect("closed-loop serve");
+        let m = &out.metrics;
+        assert_eq!(
+            out.results.len() + out.rejected.len(),
+            clients * 8,
+            "every budgeted submission completes or sheds"
+        );
+        println!(
+            "{:>8} {:>16.2} {:>12.2} {:>11.0}% {:>12}",
+            clients,
+            m.throughput_samples_per_s(),
+            m.goodput_samples_per_s(),
+            100.0 * m.slo_attainment(),
+            fmt_si(m.latency_p99_s(), "s"),
+        );
+        closed_sweep.push(
+            Json::obj()
+                .set("clients", clients)
+                .set("submissions", clients * 8)
                 .set("report", m.to_json()),
         );
     }
@@ -217,6 +277,7 @@ fn main() {
         .set("steps", STEPS)
         .set("sweep", Json::Arr(sweep))
         .set("reuse_sweep", Json::Arr(reuse_sweep))
+        .set("closed_loop_sweep", Json::Arr(closed_sweep))
         .set("hetero_sweep", Json::Arr(hetero_sweep))
         .set("scheduler_scaling", Json::Arr(scale_sweep));
     if std::fs::create_dir_all("artifacts").is_ok() {

@@ -195,3 +195,61 @@ pub fn hetero_drain(
     assert_eq!(out.results.len(), requests, "offline drain must serve everything");
     (out, host_s)
 }
+
+// ---------------------------------------------------------------------
+// SLO-knee workload, shared by `sim_hot_path` and `cluster_scale`: the
+// paper fleet (4 paper-optimal dies) under open-loop Poisson load where
+// every request carries a latency deadline. Sweeping the arrival rate
+// traces SLO attainment from ~1 down through the knee; at overload,
+// deadline-aware shedding (shed doomed work at admission) is compared
+// against shed-on-full admission on goodput. All results are simulated
+// time, deterministic under host load — safe to gate in CI smoke runs.
+// ---------------------------------------------------------------------
+
+pub const SLO_DEVICES: usize = 4;
+pub const SLO_CAPACITY: usize = 4;
+pub const SLO_MAX_QUEUE: usize = 32;
+pub const SLO_STEPS: usize = 8;
+
+/// `(fleet service rate in samples/s, SLO in seconds)` for the knee
+/// workload. The rate is the paper fleet's fully-fused throughput
+/// ceiling — `devices × capacity` samples per fused generation — and
+/// the SLO allows three fused generations of end-to-end latency (own
+/// service plus modest queueing).
+pub fn slo_workload_params() -> (f64, f64) {
+    use difflight::cluster::{profile_step_costs, ClusterConfig, DeviceProfile};
+
+    let cfg = ClusterConfig::with_devices(SLO_DEVICES).capacity(SLO_CAPACITY);
+    let step_s = profile_step_costs(&cfg).expect("paper fleet prices")[0].latency_s;
+    let marginal = DeviceProfile::default().batch_marginal;
+    let fused_gen_s =
+        SLO_STEPS as f64 * step_s * (1.0 + marginal * (SLO_CAPACITY - 1) as f64);
+    let fleet_rate = (SLO_DEVICES * SLO_CAPACITY) as f64 / fused_gen_s;
+    (fleet_rate, 3.0 * fused_gen_s)
+}
+
+/// Serve `requests` Poisson arrivals at `rate_rps`, every request
+/// carrying `slo_s`, through the paper fleet — with deadline-aware
+/// admission (`shed_late`) or plain shed-on-full.
+pub fn slo_drain(
+    rate_rps: f64,
+    requests: usize,
+    slo_s: f64,
+    shed_late: bool,
+) -> difflight::cluster::ClusterOutcome {
+    use difflight::cluster::{
+        Cluster, ClusterConfig, RequestSource, ShardPolicy, SimExecutor,
+    };
+    use difflight::coordinator::request::SamplerKind;
+
+    let cfg = ClusterConfig::with_devices(SLO_DEVICES)
+        .capacity(SLO_CAPACITY)
+        .max_queue(SLO_MAX_QUEUE)
+        .policy(ShardPolicy::LeastLoaded)
+        .shed_late(shed_late);
+    let mut cluster = Cluster::simulated(cfg).expect("paper fleet");
+    let source =
+        RequestSource::poisson(requests, 29, SamplerKind::Ddim { steps: SLO_STEPS }, rate_rps)
+            .with_slos(vec![slo_s]);
+    cluster.serve_source(source, &mut SimExecutor).expect("slo drain")
+}

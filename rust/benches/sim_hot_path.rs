@@ -26,6 +26,16 @@
 //!    (the `scripts/verify.sh` hetero parity gate) and (b) cost-aware
 //!    routing lifts mixed-fleet throughput ≥1.2x — both deterministic
 //!    simulated-time results, so they gate in smoke mode too.
+//! 5. **SLO knee** — the paper fleet under open-loop Poisson load where
+//!    every request carries a latency deadline (3 fused generations):
+//!    sweeps the arrival rate to find the maximum rate sustaining ≥99%
+//!    SLO attainment over *offered* load (sheds count as misses), then
+//!    compares deadline-aware admission (`shed_late`) against
+//!    shed-on-full at an overload rate. Asserts (a) a closed-loop
+//!    client source is bit-identical between the heap core and the
+//!    reference loop (the `scripts/verify.sh` closed-loop parity gate)
+//!    and (b) deadline-aware shedding lifts goodput ≥1.2x at overload —
+//!    simulated-time results, gated in smoke mode too.
 //!
 //! `--smoke` runs a miniature of everything (tiny design space, 200
 //! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
@@ -33,7 +43,8 @@
 //! assertions still run in smoke mode (the smoke fleet-scale gate is
 //! the 64-device point at min-of-2 timing, so scheduler-scaling
 //! regressions fail CI without load-spike flakiness). `--hetero` forces
-//! the full-size hetero sweep (`scripts/bench.sh --hetero`).
+//! the full-size hetero sweep (`scripts/bench.sh --hetero`); `--slo`
+//! forces the full-size knee sweep (`scripts/bench.sh --slo`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -63,7 +74,16 @@
 //!     "mixed_mrs": N, "homogeneous_mrs": N,
 //!     "cost_aware": {...}, "occupancy_only": {...},
 //!     "homogeneous_equal_area": {...},
-//!     "routing_gain": t_aware / t_blind, "parity_bit_identical": true }
+//!     "routing_gain": t_aware / t_blind, "parity_bit_identical": true },
+//!   "slo_knee": { "devices": N, "capacity": N, "max_queue": N,
+//!     "steps": N, "requests": N, "slo_ms": x, "fleet_rate_rps": x,
+//!     "sweep": [ { "rate_rps": x, "offered": N, "completed": N,
+//!                  "shed": N, "attainment": x,
+//!                  "goodput_samples_per_s": x } ],
+//!     "knee_rate_rps": x,
+//!     "overload": { "rate_rps": x, "shed_late": {...},
+//!                   "shed_on_full": {...}, "goodput_gain": x },
+//!     "closed_loop_parity_bit_identical": true }
 //! }
 //! ```
 
@@ -76,7 +96,7 @@ use std::time::Instant;
 use difflight::arch::ArchConfig;
 use difflight::cluster::{
     profile_step_costs, synthetic_workload, Cluster, ClusterConfig, ClusterOutcome,
-    ReferenceScheduler, ShardPolicy, SimExecutor, StepScheduler,
+    ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor, StepScheduler,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
@@ -364,6 +384,132 @@ fn main() {
          over occupancy-only (got {routing_gain:.2}x)"
     );
 
+    // ---- (e) SLO knee: arrival-rate sweep + deadline-aware shedding ----
+    // The closed-loop client tier and SLO-aware admission (ISSUE 5).
+    // Smoke runs a miniature but still asserts both gates — parity and
+    // the goodput gain are simulated-time results, deterministic under
+    // host load. `--slo` forces the full-size sweep (scripts/bench.sh
+    // --slo).
+    let slo_full = !smoke || std::env::args().any(|a| a == "--slo");
+    let knee_requests = if slo_full { 480 } else { 120 };
+    let (fleet_rate, slo_s) = harness::slo_workload_params();
+    harness::section(&format!(
+        "slo knee ({}): {} paper dies (cap {}, q {}), {knee_requests} Poisson requests x {} \
+         DDIM steps, slo {:.2} ms, fleet rate {:.0} rps",
+        if slo_full { "full" } else { "smoke" },
+        harness::SLO_DEVICES,
+        harness::SLO_CAPACITY,
+        harness::SLO_MAX_QUEUE,
+        harness::SLO_STEPS,
+        slo_s * 1e3,
+        fleet_rate,
+    ));
+
+    // Closed-loop parity gate (runs in smoke too — scripts/verify.sh
+    // relies on it): a closed-loop client source, whose arrivals depend
+    // on completion feedback, must be bit-identical between the heap
+    // event core and the ReferenceScheduler, metrics included.
+    {
+        let cfg = ClusterConfig::with_devices(4).capacity(2).max_queue(4).shed_late(true);
+        let costs = profile_step_costs(&cfg).expect("paper fleet must price");
+        let schedule = NoiseSchedule::linear(1000);
+        let src = RequestSource::closed_loop(
+            6,
+            slo_s * 0.1,
+            96,
+            41,
+            SamplerKind::Ddim { steps: 8 },
+        )
+        .with_slos(vec![slo_s, 4.0 * slo_s]);
+        let mut heap = StepScheduler::new(&cfg, &costs, schedule.clone(), 256);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, schedule, 256);
+        let a = heap.serve_source(src.clone(), &mut SimExecutor).expect("heap serve");
+        let b = reference.serve_source(src, &mut SimExecutor).expect("reference serve");
+        assert_eq!(a.rejected, b.rejected, "closed-loop parity: shed set diverged");
+        assert_eq!(a.metrics, b.metrics, "closed-loop parity: metrics diverged");
+        assert_eq!(a.results.len(), b.results.len());
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device), "closed-loop parity: placement");
+            assert_eq!(ra.sample, rb.sample, "closed-loop parity: samples");
+            assert!(
+                ra.finish_s == rb.finish_s && ra.arrival_s == rb.arrival_s,
+                "closed-loop parity: timings"
+            );
+        }
+        println!(
+            "closed-loop parity gate: heap == reference over 6 clients x 96 submissions \
+             ({} events, bit-identical)",
+            a.metrics.sched_events
+        );
+    }
+
+    // Arrival-rate sweep under deadline-aware admission: attainment over
+    // offered load (sheds count as misses) traces the knee.
+    let rate_mults: &[f64] = if slo_full {
+        &[0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0]
+    } else {
+        &[0.25, 1.0, 3.0]
+    };
+    let mut knee_sweep = Vec::new();
+    let mut knee_rate = 0.0f64;
+    for &mult in rate_mults {
+        let rate = mult * fleet_rate;
+        let out = harness::slo_drain(rate, knee_requests, slo_s, true);
+        let m = &out.metrics;
+        let attainment = m.slo_attainment();
+        let offered = out.results.len() + out.rejected.len();
+        assert_eq!(offered, knee_requests, "every offered request completes or sheds");
+        if attainment >= 0.99 && rate > knee_rate {
+            knee_rate = rate;
+        }
+        println!(
+            "rate {:>7.0} rps ({mult:.1}x): attainment {:>5.1}%, goodput {:>7.1} samples/s, \
+             {} shed",
+            rate,
+            100.0 * attainment,
+            m.goodput_samples_per_s(),
+            out.shed(),
+        );
+        knee_sweep.push(
+            Json::obj()
+                .set("rate_rps", rate)
+                .set("offered", offered)
+                .set("completed", out.results.len())
+                .set("shed", out.shed())
+                .set("attainment", attainment)
+                .set("goodput_samples_per_s", m.goodput_samples_per_s()),
+        );
+    }
+    assert!(
+        knee_rate > 0.0,
+        "the paper fleet must sustain >= 99% SLO attainment at some swept rate"
+    );
+    println!("max sustainable rate at 99% attainment: {knee_rate:.0} rps");
+
+    // Overload gate: deadline-aware shedding vs shed-on-full admission.
+    // Doomed requests camping on queues drag every later request past
+    // the deadline; shedding them at admission keeps the fleet serving
+    // work that can still meet its SLO.
+    let overload_rate = 3.0 * fleet_rate;
+    let kept = harness::slo_drain(overload_rate, knee_requests, slo_s, true);
+    let full = harness::slo_drain(overload_rate, knee_requests, slo_s, false);
+    let goodput_gain =
+        kept.metrics.goodput_samples_per_s() / full.metrics.goodput_samples_per_s();
+    println!(
+        "overload {:.0} rps: shed-late goodput {:.1} ({} shed), shed-on-full goodput {:.1} \
+         ({} shed) -> {goodput_gain:.2}x",
+        overload_rate,
+        kept.metrics.goodput_samples_per_s(),
+        kept.shed(),
+        full.metrics.goodput_samples_per_s(),
+        full.shed(),
+    );
+    assert!(
+        goodput_gain >= 1.2,
+        "deadline-aware shedding must lift goodput >= 1.2x over shed-on-full admission \
+         at overload (got {goodput_gain:.2}x)"
+    );
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -431,6 +577,40 @@ fn main() {
                 .set("homogeneous_equal_area", cluster_json(&homog, homog_host))
                 .set("routing_gain", routing_gain)
                 .set("parity_bit_identical", true),
+        )
+        .set(
+            "slo_knee",
+            Json::obj()
+                .set("devices", harness::SLO_DEVICES)
+                .set("capacity", harness::SLO_CAPACITY)
+                .set("max_queue", harness::SLO_MAX_QUEUE)
+                .set("steps", harness::SLO_STEPS)
+                .set("requests", knee_requests)
+                .set("slo_ms", slo_s * 1e3)
+                .set("fleet_rate_rps", fleet_rate)
+                .set("sweep", Json::Arr(knee_sweep))
+                .set("knee_rate_rps", knee_rate)
+                .set(
+                    "overload",
+                    Json::obj()
+                        .set("rate_rps", overload_rate)
+                        .set(
+                            "shed_late",
+                            Json::obj()
+                                .set("goodput_samples_per_s", kept.metrics.goodput_samples_per_s())
+                                .set("attainment", kept.metrics.slo_attainment())
+                                .set("shed", kept.shed()),
+                        )
+                        .set(
+                            "shed_on_full",
+                            Json::obj()
+                                .set("goodput_samples_per_s", full.metrics.goodput_samples_per_s())
+                                .set("attainment", full.metrics.slo_attainment())
+                                .set("shed", full.shed()),
+                        )
+                        .set("goodput_gain", goodput_gain),
+                )
+                .set("closed_loop_parity_bit_identical", true),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

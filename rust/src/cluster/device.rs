@@ -109,6 +109,11 @@ pub struct Device {
     pub reuse_hits: u64,
     /// Sample-steps that ran the full UNet.
     pub reuse_misses: u64,
+    /// Requests shed by admission control and attributed to this device:
+    /// deadline sheds count against the device the router picked, full-
+    /// fleet sheds against the device closest to draining (see
+    /// [`crate::cluster::router::min_drain_device`]).
+    pub shed: u64,
 }
 
 impl Device {
@@ -156,6 +161,7 @@ impl Device {
             fused_steps: 0,
             reuse_hits: 0,
             reuse_misses: 0,
+            shed: 0,
         }
     }
 
@@ -197,6 +203,26 @@ impl Device {
             self.step_base.latency_s
         };
         ((eff * 1e9).ceil() as u64).max(1)
+    }
+
+    /// SLO admission estimate: simulated seconds until a request of
+    /// `steps` denoise steps, landing behind `occupants_ahead` samples
+    /// already resident or queued on this device, would complete.
+    ///
+    /// Built on the router's time-to-drain weight ([`Device::drain_ns`],
+    /// the reuse-cycle-averaged single-sample step latency), amortized
+    /// over a full fused batch — a capacity-`C` device retires up to `C`
+    /// sample-steps per fused step of `1 + marginal·(C-1)` single-step
+    /// latencies — and scaled by the generation length, since every
+    /// occupant needs a whole generation, not one step. Deliberately a
+    /// *drain-rate* estimate (everyone ahead is assumed to need my own
+    /// step count): cheap, O(1), and conservative enough that requests
+    /// admitted under it tend to meet their deadline.
+    pub fn admission_estimate_s(&self, occupants_ahead: usize, steps: usize) -> f64 {
+        let fused_per_sample_step =
+            (1.0 + self.batch_marginal * (self.capacity - 1) as f64) / self.capacity as f64;
+        let per_step_s = self.drain_ns() as f64 * 1e-9 * fused_per_sample_step;
+        (occupants_ahead + 1) as f64 * steps as f64 * per_step_s
     }
 
     /// Will the next fused step run the full UNet? `force_full` is set by
@@ -270,6 +296,7 @@ impl Device {
         self.fused_steps = 0;
         self.reuse_hits = 0;
         self.reuse_misses = 0;
+        self.shed = 0;
         self.cycle_pos = 0;
     }
 
@@ -461,6 +488,22 @@ mod tests {
         let d = reuse_dev(4, 0.25);
         assert_eq!(d.drain_ns(), 437_500);
         assert!(d.drain_ns() < no_reuse.drain_ns());
+    }
+
+    #[test]
+    fn admission_estimate_scales_with_queue_and_steps() {
+        // Capacity 4, marginal 0.25 ⇒ a fused sample-step costs
+        // (1 + 0.75)/4 = 0.4375 of the 1 ms single-sample step.
+        let d = dev();
+        let per_step = 1e-3 * 0.4375;
+        let e0 = d.admission_estimate_s(0, 8);
+        assert!((e0 - 8.0 * per_step).abs() < 1e-12, "empty device: own service only ({e0})");
+        let e9 = d.admission_estimate_s(9, 8);
+        assert!((e9 - 10.0 * 8.0 * per_step).abs() < 1e-12);
+        assert!(d.admission_estimate_s(9, 16) > e9, "longer generations estimate later");
+        // Reuse lowers the per-step drain weight and thus the estimate.
+        let r = reuse_dev(4, 0.25);
+        assert!(r.admission_estimate_s(9, 8) < e9);
     }
 
     #[test]

@@ -35,6 +35,11 @@ pub struct DeviceMetrics {
     pub reuse_hits: u64,
     /// Sample-steps that ran the full UNet.
     pub reuse_misses: u64,
+    /// Requests shed by admission control, attributed to this device
+    /// (deadline sheds: the device the router picked; full-fleet sheds:
+    /// the device closest to draining). Sums across the fleet to the
+    /// total shed count.
+    pub shed: u64,
 }
 
 impl DeviceMetrics {
@@ -51,6 +56,7 @@ impl DeviceMetrics {
             fused_steps: d.fused_steps,
             reuse_hits: d.reuse_hits,
             reuse_misses: d.reuse_misses,
+            shed: d.shed,
         }
     }
 
@@ -96,6 +102,7 @@ impl DeviceMetrics {
             .set("fused_steps", self.fused_steps)
             .set("reuse_hits", self.reuse_hits)
             .set("reuse_misses", self.reuse_misses)
+            .set("shed", self.shed)
     }
 }
 
@@ -113,6 +120,9 @@ pub struct ProfileMetrics {
     pub ops: u64,
     pub reuse_hits: u64,
     pub reuse_misses: u64,
+    /// Requests shed by admission control, attributed to this group's
+    /// devices; the groups' counts sum to the fleet total.
+    pub shed: u64,
 }
 
 impl ProfileMetrics {
@@ -169,6 +179,67 @@ impl ProfileMetrics {
             .set("epb_j_per_bit", self.epb())
             .set("reuse_hits", self.reuse_hits)
             .set("reuse_misses", self.reuse_misses)
+            .set("shed", self.shed)
+    }
+}
+
+/// Roll-up of one request service class (SLO tier): completions, their
+/// latency distribution, and SLO attainment over the *offered* load —
+/// a shed request with a deadline counts as an SLO miss, so admission
+/// control cannot inflate attainment by dropping work.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassMetrics {
+    pub class: u8,
+    /// End-to-end simulated latency of every completion in this class.
+    pub latencies_s: Vec<f64>,
+    /// Completions that carried a deadline.
+    pub tracked: u64,
+    /// Completions that carried a deadline and met it.
+    pub attained: u64,
+    /// Requests of this class shed by admission control.
+    pub shed: u64,
+    /// Shed requests that carried a deadline (count as SLO misses).
+    pub shed_tracked: u64,
+}
+
+impl ClassMetrics {
+    pub fn completed(&self) -> u64 {
+        self.latencies_s.len() as u64
+    }
+
+    /// SLO attainment over offered deadline-carrying requests: attained
+    /// over (tracked completions + tracked sheds); 0.0 when nothing in
+    /// this class carried a deadline (never NaN).
+    pub fn attainment(&self) -> f64 {
+        let offered = self.tracked + self.shed_tracked;
+        if offered == 0 {
+            0.0
+        } else {
+            self.attained as f64 / offered as f64
+        }
+    }
+
+    /// p50 latency of this class's completions; 0.0 when none (and the
+    /// single-completion run degenerates to that completion's latency).
+    pub fn latency_p50_s(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 50.0)
+    }
+
+    /// p99 latency of this class's completions; 0.0 when none.
+    pub fn latency_p99_s(&self) -> f64 {
+        stats::percentile(&self.latencies_s, 99.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("class", self.class)
+            .set("samples", self.completed())
+            .set("tracked", self.tracked)
+            .set("attained", self.attained)
+            .set("shed", self.shed)
+            .set("attainment", self.attainment())
+            .set("latency_p50_s", self.latency_p50_s())
+            .set("latency_p99_s", self.latency_p99_s())
     }
 }
 
@@ -193,13 +264,60 @@ pub struct FleetMetrics {
     /// (arrival bursts + step completions) — the denominator for the
     /// scheduler-throughput (events/sec) benches.
     pub sched_events: u64,
+    /// Per-service-class roll-ups (SLO tier), ascending class order.
+    pub classes: Vec<ClassMetrics>,
+    /// Completions that met their deadline, plus completions that never
+    /// carried one (no SLO ⇒ nothing to violate) — the goodput
+    /// numerator.
+    pub good_completions: u64,
 }
 
 impl FleetMetrics {
-    pub fn record_completion(&mut self, latency_s: f64, queue_s: f64) {
+    fn class_entry(&mut self, class: u8) -> &mut ClassMetrics {
+        let idx = match self.classes.iter().position(|c| c.class == class) {
+            Some(i) => i,
+            None => {
+                let i = self
+                    .classes
+                    .iter()
+                    .position(|c| c.class > class)
+                    .unwrap_or(self.classes.len());
+                self.classes.insert(i, ClassMetrics { class, ..Default::default() });
+                i
+            }
+        };
+        &mut self.classes[idx]
+    }
+
+    /// Record a completion. `deadline_met` is `None` for requests with
+    /// no deadline, `Some(met)` otherwise.
+    pub fn record_completion(
+        &mut self,
+        latency_s: f64,
+        queue_s: f64,
+        class: u8,
+        deadline_met: Option<bool>,
+    ) {
         self.latencies_s.push(latency_s);
         self.queue_s.push(queue_s);
         self.samples_completed += 1;
+        if deadline_met != Some(false) {
+            self.good_completions += 1;
+        }
+        let entry = self.class_entry(class);
+        entry.latencies_s.push(latency_s);
+        if let Some(met) = deadline_met {
+            entry.tracked += 1;
+            entry.attained += met as u64;
+        }
+    }
+
+    /// Record an admission-control shed. `tracked` marks a request that
+    /// carried a deadline (it counts as an SLO miss for its class).
+    pub fn record_shed(&mut self, class: u8, tracked: bool) {
+        let entry = self.class_entry(class);
+        entry.shed += 1;
+        entry.shed_tracked += tracked as u64;
     }
 
     /// Aggregate simulated throughput, samples/s; 0.0 for zero makespan.
@@ -209,6 +327,34 @@ impl FleetMetrics {
         } else {
             self.samples_completed as f64 / self.makespan_s
         }
+    }
+
+    /// Goodput: SLO-attained throughput, samples/s. Completions that
+    /// met their deadline (or carried none) over the makespan; 0.0 for a
+    /// zero makespan — a shed-everything run reports 0.0, never NaN.
+    pub fn goodput_samples_per_s(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            0.0
+        } else {
+            self.good_completions as f64 / self.makespan_s
+        }
+    }
+
+    /// Fleet SLO attainment over offered deadline-carrying requests
+    /// (sheds count as misses); 0.0 when no request carried a deadline.
+    pub fn slo_attainment(&self) -> f64 {
+        let attained: u64 = self.classes.iter().map(|c| c.attained).sum();
+        let offered: u64 = self.classes.iter().map(|c| c.tracked + c.shed_tracked).sum();
+        if offered == 0 {
+            0.0
+        } else {
+            attained as f64 / offered as f64
+        }
+    }
+
+    /// Did any request in this window carry an SLO deadline?
+    pub fn any_slo_tracked(&self) -> bool {
+        self.classes.iter().any(|c| c.tracked + c.shed_tracked > 0)
     }
 
     /// p50 end-to-end latency; 0.0 when nothing completed.
@@ -287,6 +433,7 @@ impl FleetMetrics {
                         ops: 0,
                         reuse_hits: 0,
                         reuse_misses: 0,
+                        shed: 0,
                     });
                     groups.last_mut().expect("just pushed")
                 }
@@ -299,6 +446,7 @@ impl FleetMetrics {
             group.ops += d.ops;
             group.reuse_hits += d.reuse_hits;
             group.reuse_misses += d.reuse_misses;
+            group.shed += d.shed;
         }
         groups.sort_by_key(|g| g.profile);
         groups
@@ -314,6 +462,8 @@ impl FleetMetrics {
             .set("makespan_s", self.makespan_s)
             .set("sched_events", self.sched_events)
             .set("throughput_samples_per_s", self.throughput_samples_per_s())
+            .set("goodput_samples_per_s", self.goodput_samples_per_s())
+            .set("slo_attainment", self.slo_attainment())
             .set("latency_p50_s", self.latency_p50_s())
             .set("latency_p99_s", self.latency_p99_s())
             .set("queue_mean_s", stats::mean(&self.queue_s))
@@ -322,6 +472,10 @@ impl FleetMetrics {
             .set("reuse_hits", self.reuse_hits())
             .set("reuse_misses", self.reuse_misses())
             .set("reuse_hit_rate", self.reuse_hit_rate())
+            .set(
+                "per_class",
+                Json::Arr(self.classes.iter().map(ClassMetrics::to_json).collect()),
+            )
             .set(
                 "per_profile",
                 Json::Arr(
@@ -360,6 +514,7 @@ mod tests {
             fused_steps: 10,
             reuse_hits: 6,
             reuse_misses: 4,
+            shed: 0,
         }
     }
 
@@ -370,8 +525,8 @@ mod tests {
             bit_width: 8,
             ..Default::default()
         };
-        m.record_completion(1.0, 0.25);
-        m.record_completion(3.0, 0.75);
+        m.record_completion(1.0, 0.25, 0, None);
+        m.record_completion(3.0, 0.75, 0, None);
         m
     }
 
@@ -379,6 +534,11 @@ mod tests {
     fn roll_ups() {
         let m = fleet();
         assert!((m.throughput_samples_per_s() - 0.5).abs() < 1e-12);
+        // No deadlines anywhere: goodput degrades to throughput and
+        // attainment reports 0.0 (nothing tracked), never NaN.
+        assert!((m.goodput_samples_per_s() - 0.5).abs() < 1e-12);
+        assert_eq!(m.slo_attainment(), 0.0);
+        assert!(!m.any_slo_tracked());
         assert!((m.latency_p50_s() - 2.0).abs() < 1e-12);
         // 4 Gops over 4 s makespan → 1 GOPS aggregate.
         assert!((m.fleet_gops() - 1.0).abs() < 1e-12);
@@ -424,6 +584,10 @@ mod tests {
         assert_eq!(j.get("reuse_hits").and_then(Json::as_f64), Some(12.0));
         assert_eq!(j.get("reuse_misses").and_then(Json::as_f64), Some(8.0));
         assert_eq!(j.get("reuse_hit_rate").and_then(Json::as_f64), Some(0.6));
+        // SLO tier rides along: goodput, attainment, per-class array.
+        assert!(j.get("goodput_samples_per_s").is_some());
+        assert!(j.get("slo_attainment").is_some());
+        assert_eq!(j.get("per_class").and_then(Json::as_arr).map(|a| a.len()), Some(1));
         // Round-trips through the writer/parser.
         assert!(Json::parse(&j.to_string_pretty()).is_ok());
     }
@@ -489,5 +653,75 @@ mod tests {
         let text = j.to_string_pretty();
         assert!(!text.contains("NaN") && !text.contains("nan"), "JSON must not carry NaN");
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn single_completion_percentiles_degenerate_to_that_latency() {
+        // ISSUE 5 satellite: a one-result run (reachable when admission
+        // control sheds everything but one request) must report p50 ==
+        // p99 == that request's latency, fleet-wide and per-class.
+        let mut m = FleetMetrics { makespan_s: 2.0, ..Default::default() };
+        m.record_completion(0.125, 0.0, 3, Some(true));
+        assert_eq!(m.latency_p50_s(), 0.125);
+        assert_eq!(m.latency_p99_s(), 0.125);
+        assert_eq!(m.classes.len(), 1);
+        assert_eq!(m.classes[0].class, 3);
+        assert_eq!(m.classes[0].latency_p50_s(), 0.125);
+        assert_eq!(m.classes[0].latency_p99_s(), 0.125);
+        assert_eq!(m.classes[0].attainment(), 1.0);
+        assert_eq!(m.slo_attainment(), 1.0);
+        assert!((m.goodput_samples_per_s() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_everything_run_reports_zeros_not_nans() {
+        // ISSUE 5 satellite: every offered request shed, nothing
+        // completed — goodput and attainment must be 0.0 (never NaN),
+        // percentiles 0.0, and the JSON must stay clean.
+        let mut m = FleetMetrics { makespan_s: 0.0, ..Default::default() };
+        for i in 0..5u8 {
+            m.record_shed(i % 2, true);
+        }
+        m.rejected = 5;
+        assert_eq!(m.samples_completed, 0);
+        assert_eq!(m.goodput_samples_per_s(), 0.0);
+        assert_eq!(m.slo_attainment(), 0.0);
+        assert!(m.any_slo_tracked(), "tracked sheds count as offered SLO load");
+        assert_eq!(m.latency_p50_s(), 0.0);
+        for c in &m.classes {
+            assert_eq!(c.attainment(), 0.0);
+            assert_eq!(c.latency_p50_s(), 0.0);
+            assert_eq!(c.latency_p99_s(), 0.0);
+            assert_eq!(c.completed(), 0);
+        }
+        assert_eq!(m.classes.iter().map(|c| c.shed).sum::<u64>(), 5);
+        let text = m.to_json().to_string_pretty();
+        assert!(!text.to_ascii_lowercase().contains("nan"));
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn per_class_attainment_counts_sheds_as_misses() {
+        let mut m = FleetMetrics { makespan_s: 10.0, ..Default::default() };
+        // Class 0: two met, one missed, one tracked shed → 2/4.
+        m.record_completion(1.0, 0.0, 0, Some(true));
+        m.record_completion(1.5, 0.0, 0, Some(true));
+        m.record_completion(9.0, 0.0, 0, Some(false));
+        m.record_shed(0, true);
+        // Class 1: one met → 1/1. An untracked shed changes nothing.
+        m.record_completion(2.0, 0.0, 1, Some(true));
+        m.record_shed(1, false);
+        assert_eq!(m.classes.len(), 2);
+        assert_eq!(m.classes[0].attainment(), 0.5);
+        assert_eq!(m.classes[1].attainment(), 1.0);
+        // Fleet: 3 attained over 5 offered-with-deadline.
+        assert!((m.slo_attainment() - 0.6).abs() < 1e-12);
+        // Goodput counts only the three deadline-meeting completions.
+        assert!((m.goodput_samples_per_s() - 0.3).abs() < 1e-12);
+        // Classes insert sorted regardless of first-seen order.
+        m.record_completion(1.0, 0.0, 5, None);
+        m.record_shed(2, true);
+        let order: Vec<u8> = m.classes.iter().map(|c| c.class).collect();
+        assert_eq!(order, [0, 1, 2, 5]);
     }
 }

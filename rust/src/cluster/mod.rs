@@ -16,6 +16,10 @@
 //! layers). The homogeneous fleet is the one-profile special case and
 //! reproduces the pre-heterogeneous scheduler bit-for-bit.
 //!
+//! * [`load`] — live arrival streams: [`RequestSource`] (replay,
+//!   open-loop Poisson/burst, closed-loop clients) and the SLO
+//!   decoration helpers; both scheduler cores pull requests from a
+//!   source during the event loop.
 //! * [`profile`] — [`DeviceProfile`] and the `--fleet` spec grammar.
 //! * [`device`] — device handle: batch-slot capacity, simulated clock,
 //!   per-step cost from [`crate::arch::cost`].
@@ -34,6 +38,7 @@
 //!   EPB and GOPS roll-ups reusing [`crate::util::stats`].
 
 pub mod device;
+pub mod load;
 pub mod metrics;
 pub mod profile;
 pub mod reference;
@@ -41,7 +46,8 @@ pub mod router;
 pub mod scheduler;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
-pub use metrics::{DeviceMetrics, FleetMetrics, ProfileMetrics};
+pub use load::{apply_slos, synthetic_workload, RequestSource};
+pub use metrics::{ClassMetrics, DeviceMetrics, FleetMetrics, ProfileMetrics};
 pub use profile::{parse_fleet_json, parse_fleet_spec, DeviceProfile};
 pub use reference::ReferenceScheduler;
 pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
@@ -53,11 +59,9 @@ use std::sync::Arc;
 
 use crate::arch::cost::{Cost, OptFlags};
 use crate::arch::units::Accelerator;
-use crate::coordinator::request::SamplerKind;
 use crate::devices::DeviceParams;
 use crate::runtime::manifest::NoiseSchedule;
 use crate::sim::{CostCache, Simulator};
-use crate::util::rng::XorShift;
 use crate::workload::ModelId;
 
 /// Fleet shape and policy: a spec of `(profile, count)` device groups
@@ -86,6 +90,15 @@ pub struct ClusterConfig {
     /// Let idle, empty devices steal queued requests from the
     /// most-loaded busy device at step boundaries.
     pub work_stealing: bool,
+    /// SLO-aware admission: shed requests whose estimated completion
+    /// (occupancy × drain weight on the routed device, scaled to the
+    /// generation length) already misses their deadline, instead of
+    /// letting doomed work occupy batch slots. Applied at first
+    /// admission and again at backlog re-route (time spent deferred
+    /// counts against the deadline, so an unbounded backlog cannot
+    /// bypass the check). Only affects requests that carry a deadline;
+    /// `false` keeps shed-on-full-only admission.
+    pub shed_late: bool,
 }
 
 impl Default for ClusterConfig {
@@ -97,6 +110,7 @@ impl Default for ClusterConfig {
             model: ModelId::DdpmCifar10,
             cost_aware: true,
             work_stealing: true,
+            shed_late: false,
         }
     }
 }
@@ -224,6 +238,12 @@ impl ClusterConfig {
         self.cost_aware = on;
         self
     }
+
+    /// Enable deadline-aware admission shedding (the SLO tier).
+    pub fn shed_late(mut self, on: bool) -> Self {
+        self.shed_late = on;
+        self
+    }
 }
 
 /// Process-wide per-bit-width cost caches for non-paper datapaths (a
@@ -312,7 +332,7 @@ impl Cluster {
         Self::new(config, NoiseSchedule::linear(1000), 256)
     }
 
-    /// Serve a workload to completion through `executor`.
+    /// Serve a materialized workload to completion through `executor`.
     pub fn serve(
         &mut self,
         requests: Vec<ClusterRequest>,
@@ -321,35 +341,27 @@ impl Cluster {
         self.scheduler.serve(requests, executor)
     }
 
+    /// Serve a live arrival stream ([`RequestSource`]) to completion —
+    /// open-loop Poisson/burst processes, closed-loop clients, or a
+    /// replayed vector.
+    pub fn serve_source(
+        &mut self,
+        source: RequestSource,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
+        self.scheduler.serve_source(source, executor)
+    }
+
     pub fn device_count(&self) -> usize {
         self.scheduler.device_count()
     }
-}
-
-/// Synthetic open-loop workload: `n` requests with exponential
-/// inter-arrival gaps (mean `mean_gap_s`), deterministic in `seed`.
-pub fn synthetic_workload(
-    n: usize,
-    seed: u64,
-    sampler: SamplerKind,
-    mean_gap_s: f64,
-) -> Vec<ClusterRequest> {
-    let mut rng = XorShift::new(seed);
-    let mut at = 0.0f64;
-    (0..n)
-        .map(|i| {
-            let req = ClusterRequest::new(i as u64, seed.wrapping_mul(1000) + i as u64, sampler, at);
-            // Exponential gap; max(1e-12) guards ln(0).
-            at += -mean_gap_s * (1.0 - rng.next_f64()).max(1e-12).ln();
-            req
-        })
-        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;
+    use crate::coordinator::request::SamplerKind;
 
     #[test]
     fn simulated_cluster_serves() {
@@ -479,6 +491,20 @@ mod tests {
         assert!(ClusterConfig::homogeneous(custom, 1).needs_fleet_scheduler());
         let w4 = DeviceProfile { bit_width: 4, ..DeviceProfile::default() };
         assert!(ClusterConfig::homogeneous(w4, 1).needs_fleet_scheduler());
+    }
+
+    #[test]
+    fn cluster_serves_closed_loop_source_with_slos() {
+        // Facade-level smoke for the live-arrival path: closed-loop
+        // clients with a per-class SLO drive a real fleet end to end.
+        let mut c = Cluster::simulated(ClusterConfig::with_devices(2)).unwrap();
+        let source = RequestSource::closed_loop(3, 0.0, 9, 11, SamplerKind::Ddim { steps: 4 })
+            .with_slos(vec![10.0, 30.0]);
+        let out = c.serve_source(source, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len() + out.rejected.len(), 9);
+        assert!(out.metrics.any_slo_tracked());
+        assert!(out.metrics.goodput_samples_per_s() <= out.metrics.throughput_samples_per_s() + 1e-9);
+        assert!(out.results.iter().all(|r| r.deadline_s.is_some()));
     }
 
     #[test]

@@ -24,8 +24,9 @@ use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId};
+use super::load::RequestSource;
 use super::metrics::{DeviceMetrics, FleetMetrics};
-use super::router::{DeviceLoad, Router};
+use super::router::{min_drain_device, DeviceLoad, Router};
 use super::scheduler::{
     zero_step_result, ClusterOutcome, ClusterRequest, ClusterResult, Slot, SlotSampler,
     StepExecutor,
@@ -47,6 +48,10 @@ pub struct ReferenceScheduler {
     /// Linear-scan sampler cache (the retired pre-keyed-map form).
     sampler_cache: Vec<(SamplerKind, SlotSampler)>,
     work_stealing: bool,
+    /// SLO admission control (mirrors the heap core's semantics).
+    shed_late: bool,
+    /// `(class, carried a deadline)` per shed request this window.
+    shed_log: Vec<(u8, bool)>,
     /// Per-device router weight: the device's drain cost in ns, or 1 for
     /// every device when cost-aware routing is off (occupancy-only).
     drain_ns: Vec<u64>,
@@ -87,6 +92,8 @@ impl ReferenceScheduler {
             max_backlog: config.max_backlog,
             sampler_cache: Vec::new(),
             work_stealing: config.work_stealing,
+            shed_late: config.shed_late,
+            shed_log: Vec::new(),
             drain_ns,
             events_processed: 0,
         }
@@ -112,32 +119,45 @@ impl ReferenceScheduler {
             .collect()
     }
 
-    /// Serve a workload to completion (reference semantics).
+    /// Serve a materialized workload to completion (reference
+    /// semantics): a thin wrapper over [`Self::serve_source`] with a
+    /// replay source, exactly like the heap core.
     pub fn serve(
         &mut self,
-        mut requests: Vec<ClusterRequest>,
+        requests: Vec<ClusterRequest>,
         executor: &mut dyn StepExecutor,
     ) -> crate::Result<ClusterOutcome> {
-        requests.sort_by(|a, b| {
-            a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
-        });
-        let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
+        self.serve_source(RequestSource::replay(requests), executor)
+    }
+
+    /// Serve a live arrival stream (reference semantics): the loop still
+    /// scans every device for the next completion, but arrivals are
+    /// pulled from the source one instant at a time — same protocol, and
+    /// the same deterministic call order, as the heap core.
+    pub fn serve_source(
+        &mut self,
+        mut source: RequestSource,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
         for d in &mut self.devices {
             d.reset_accounting();
         }
         self.events_processed = 0;
-        let mut pending = requests.into_iter().peekable();
+        self.shed_log.clear();
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();
+        let mut first_arrival_s: Option<f64> = None;
 
         loop {
-            let next_arrival = pending.peek().map(|r| r.arrival_s);
+            let next_arrival = source.peek();
             let next_completion = self
                 .devices
                 .iter()
                 .filter_map(|d| d.busy_until().map(|t| (t, d.id.0)))
                 .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
+            // Arrivals win ties (a request landing exactly on a step
+            // boundary is admissible in the very next step).
             let take_arrival = match (next_arrival, next_completion) {
                 (None, None) => break,
                 (Some(_), None) => true,
@@ -146,20 +166,25 @@ impl ReferenceScheduler {
             };
             if take_arrival {
                 let at = next_arrival.expect("arrival selected");
-                while pending.peek().is_some_and(|r| r.arrival_s == at) {
-                    let req = pending.next().expect("peeked");
-                    self.admit(req, &mut rejected, &mut results);
+                first_arrival_s.get_or_insert(at);
+                while source.peek() == Some(at) {
+                    let req = source.pop();
+                    self.admit(req, &mut source, &mut rejected, &mut results);
                 }
                 self.kick_idle(at, executor)?;
             } else {
                 let (ct, di) = next_completion.expect("completion selected");
-                self.complete(di, ct, executor, &mut results)?;
+                self.complete(di, ct, executor, &mut source, &mut results, &mut rejected)?;
             }
             self.events_processed += 1;
         }
 
-        rejected.extend(self.backlog.drain(..).map(|s| s.req.id));
+        while let Some(slot) = self.backlog.pop_front() {
+            self.attribute_shed(None, &slot.req);
+            rejected.push(slot.req.id);
+        }
 
+        let first_arrival_s = first_arrival_s.unwrap_or(0.0);
         let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
         let mut metrics = FleetMetrics {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
@@ -171,32 +196,63 @@ impl ReferenceScheduler {
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
         for r in &results {
-            metrics.record_completion(r.latency_s(), r.queue_s());
+            metrics.record_completion(r.latency_s(), r.queue_s(), r.class, r.deadline_met());
+        }
+        for &(class, tracked) in &self.shed_log {
+            metrics.record_shed(class, tracked);
         }
         Ok(ClusterOutcome { results, rejected, metrics })
+    }
+
+    /// Shed attribution by full scan (mirrors the heap core's rule:
+    /// deadline sheds → the routed device, full-fleet sheds → the device
+    /// closest to draining).
+    fn attribute_shed(&mut self, routed: Option<usize>, req: &ClusterRequest) {
+        let di = routed.or_else(|| min_drain_device(&self.loads())).unwrap_or(0);
+        self.devices[di].shed += 1;
+        self.shed_log.push((req.class, req.deadline_s.is_some()));
     }
 
     fn admit(
         &mut self,
         req: ClusterRequest,
+        source: &mut RequestSource,
         rejected: &mut Vec<RequestId>,
         results: &mut Vec<ClusterResult>,
     ) {
         if req.is_zero_step() {
-            results.push(zero_step_result(&req, self.elems));
+            let r = zero_step_result(&req, self.elems);
+            source.on_done(r.id, r.finish_s);
+            results.push(r);
             return;
         }
         let loads = self.loads();
         match self.router.route(req.sampler, &loads) {
             Some(did) => {
                 let slot = self.make_slot(req);
+                let doomed = self.shed_late
+                    && slot.req.deadline_s.is_some_and(|deadline_s| {
+                        self.devices[did.0]
+                            .admission_estimate_s(loads[did.0].total(), slot.timesteps.len())
+                            > deadline_s
+                    });
+                if doomed {
+                    self.attribute_shed(Some(did.0), &slot.req);
+                    source.on_done(slot.req.id, slot.req.arrival_s);
+                    rejected.push(slot.req.id);
+                    return;
+                }
                 self.queued[did.0].push_back(slot);
             }
             None if self.backlog.len() < self.max_backlog => {
                 let slot = self.make_slot(req);
                 self.backlog.push_back(slot);
             }
-            None => rejected.push(req.id),
+            None => {
+                self.attribute_shed(None, &req);
+                source.on_done(req.id, req.arrival_s);
+                rejected.push(req.id);
+            }
         }
     }
 
@@ -214,12 +270,34 @@ impl ReferenceScheduler {
         s
     }
 
-    fn drain_backlog(&mut self) {
+    /// Backlog re-route with the same deadline-aware shedding rule as
+    /// the heap core: deferred time counts against the deadline.
+    fn drain_backlog(
+        &mut self,
+        now_s: f64,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
         while let Some(slot) = self.backlog.front() {
             let loads = self.loads();
             match self.router.route(slot.req.sampler, &loads) {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
+                    let doomed = self.shed_late
+                        && slot.req.deadline_s.is_some_and(|deadline_s| {
+                            (now_s - slot.req.arrival_s)
+                                + self.devices[did.0].admission_estimate_s(
+                                    loads[did.0].total(),
+                                    slot.timesteps.len(),
+                                )
+                                > deadline_s
+                        });
+                    if doomed {
+                        self.attribute_shed(Some(did.0), &slot.req);
+                        source.on_done(slot.req.id, now_s);
+                        rejected.push(slot.req.id);
+                        continue;
+                    }
                     self.queued[did.0].push_back(slot);
                 }
                 None => break,
@@ -271,7 +349,9 @@ impl ReferenceScheduler {
         di: usize,
         now_s: f64,
         executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
         results: &mut Vec<ClusterResult>,
+        rejected: &mut Vec<RequestId>,
     ) -> crate::Result<()> {
         self.devices[di].finish_step();
         let mut still_resident = Vec::with_capacity(self.resident[di].len());
@@ -279,6 +359,7 @@ impl ReferenceScheduler {
             if slot.step_index >= slot.timesteps.len() {
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
+                source.on_done(slot.req.id, now_s);
                 results.push(ClusterResult {
                     id: slot.req.id,
                     device: DeviceId(di),
@@ -289,13 +370,15 @@ impl ReferenceScheduler {
                     finish_s: now_s,
                     mean_batch: slot.occupancy_sum as f64 / steps.max(1) as f64,
                     full_steps: slot.full_steps as usize,
+                    class: slot.req.class,
+                    deadline_s: slot.req.deadline_s,
                 });
             } else {
                 still_resident.push(slot);
             }
         }
         self.resident[di] = still_resident;
-        self.drain_backlog();
+        self.drain_backlog(now_s, source, rejected);
         self.kick_idle(now_s, executor)
     }
 

@@ -196,6 +196,20 @@ fn least_loaded(loads: &[DeviceLoad]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Index of the device with the lowest time-to-drain over **all**
+/// devices, full ones included (ties → lowest id). This is where a shed
+/// request gets *attributed*: when every device is full, the one closest
+/// to draining is the one that would have taken it, so its profile owns
+/// the shed in the per-profile roll-ups. O(N), but only the shed path
+/// pays it — shedding already means the fleet is saturated.
+pub fn min_drain_device(loads: &[DeviceLoad]) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, l)| (l.drain_cost(), *i))
+        .map(|(i, _)| i)
+}
+
 /// Incrementally maintained routing index over the fleet: the scheduler
 /// reports every occupancy/busy transition through [`RouterIndex::set_counts`]
 /// / [`RouterIndex::set_busy`], and routing, backlog drain and donor
@@ -584,6 +598,18 @@ mod tests {
                 assert_eq!(index.max_donor(), donor_scan, "donor pick diverged");
             }
         });
+    }
+
+    #[test]
+    fn min_drain_device_ranks_all_devices() {
+        // Shed attribution ignores fullness: the full-but-fast device 1
+        // is closer to draining than the half-empty slow device 0.
+        let loads = vec![weighted(2, 0, 10_000), weighted(4, 4, 1000)];
+        assert_eq!(min_drain_device(&loads), Some(1));
+        // Ties break toward the lowest id; empty fleets yield None.
+        let tied = vec![weighted(2, 0, 1000), weighted(1, 1, 1000)];
+        assert_eq!(min_drain_device(&tied), Some(0));
+        assert_eq!(min_drain_device(&[]), None);
     }
 
     #[test]

@@ -11,14 +11,35 @@
 //! denoising as soon as the in-flight step completes — it never waits
 //! for the whole earlier batch to finish its generation.
 //!
+//! Requests are pulled from a live [`RequestSource`] *during* the event
+//! loop — open-loop Poisson/burst processes and closed-loop clients
+//! (whose next arrival depends on when their previous request left the
+//! system) plug in exactly where the old pre-materialized `Vec` did;
+//! [`RequestSource::replay`] reproduces that vector path bit-for-bit.
+//!
 //! ## Event core
 //!
 //! The per-event cost is O(log N) in the device count:
 //!
-//! * **Completion events** live in a [`BinaryHeap`] keyed by
-//!   `(time, device)` (deterministic tie-breaking), so "which device
-//!   finishes next" is a heap peek instead of a scan over every
-//!   device's `busy_until`.
+//! * **Events** live in a [`BinaryHeap`] keyed by `(time, kind,
+//!   device)`: step completions, plus one [`EventKind::Arrival`] for
+//!   the source's next scheduled arrival. Arrivals order *before*
+//!   completions at the same instant (a request landing exactly on a
+//!   step boundary is admissible in the very next step), completions
+//!   tie-break by device id — deterministic, matching the reference
+//!   loop's scan.
+//!
+//! ## SLO-aware admission
+//!
+//! A [`ClusterRequest`] may carry a service class and a latency
+//! deadline. With [`super::ClusterConfig::shed_late`] set, admission
+//! control estimates time-to-completion on the routed device —
+//! occupancy × the router's [`super::device::Device::drain_ns`] weight,
+//! fused-batch amortized and scaled by the generation length
+//! ([`super::device::Device::admission_estimate_s`]) — and sheds
+//! requests that cannot meet their deadline *at admission*, instead of
+//! letting doomed work occupy batch slots. Sheds are attributed to a
+//! device (and so to a fleet profile) for the metric roll-ups.
 //! * **Routing** goes through [`RouterIndex`]: occupancy-ordered sets
 //!   maintained incrementally on admit/promote/complete, so least-loaded
 //!   picks, round-robin rotation, affinity spill, backlog drain and
@@ -56,11 +77,13 @@ use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId};
+use super::load::RequestSource;
 use super::metrics::{DeviceMetrics, FleetMetrics};
-use super::router::{DeviceLoad, RouterIndex};
+use super::router::{min_drain_device, DeviceLoad, RouterIndex};
 use super::ClusterConfig;
 
-/// A generation request with a simulated arrival time.
+/// A generation request with a simulated arrival time and (optionally)
+/// a service class and latency deadline for the SLO tier.
 #[derive(Debug, Clone)]
 pub struct ClusterRequest {
     pub id: RequestId,
@@ -68,11 +91,28 @@ pub struct ClusterRequest {
     pub sampler: SamplerKind,
     /// Simulated arrival time, seconds.
     pub arrival_s: f64,
+    /// Latency deadline, seconds after arrival; `None` is best-effort
+    /// (never deadline-shed, always counts toward goodput).
+    pub deadline_s: Option<f64>,
+    /// Service class for per-class SLOs and metric roll-ups.
+    pub class: u8,
 }
 
 impl ClusterRequest {
     pub fn new(id: u64, seed: u64, sampler: SamplerKind, arrival_s: f64) -> Self {
-        Self { id: RequestId(id), seed, sampler, arrival_s }
+        Self { id: RequestId(id), seed, sampler, arrival_s, deadline_s: None, class: 0 }
+    }
+
+    /// Attach a latency deadline (seconds after arrival).
+    pub fn with_deadline(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Assign a service class.
+    pub fn with_class(mut self, class: u8) -> Self {
+        self.class = class;
+        self
     }
 
     /// A request with no denoise work at all (`Ddim { steps: 0 }`): it
@@ -100,6 +140,10 @@ pub struct ClusterResult {
     /// Denoise steps that ran the full UNet (the rest were DeepCache
     /// shallow cache-hit steps; equals `steps` when reuse is off).
     pub full_steps: usize,
+    /// Service class the request carried.
+    pub class: u8,
+    /// Latency deadline the request carried, if any.
+    pub deadline_s: Option<f64>,
 }
 
 impl ClusterResult {
@@ -109,6 +153,12 @@ impl ClusterResult {
 
     pub fn queue_s(&self) -> f64 {
         self.first_step_s - self.arrival_s
+    }
+
+    /// Did this completion meet its deadline? `None` when it carried
+    /// none.
+    pub fn deadline_met(&self) -> Option<bool> {
+        self.deadline_s.map(|d| self.latency_s() <= d)
     }
 }
 
@@ -125,6 +175,8 @@ pub(super) fn zero_step_result(req: &ClusterRequest, elems: usize) -> ClusterRes
         finish_s: req.arrival_s,
         mean_batch: 0.0,
         full_steps: 0,
+        class: req.class,
+        deadline_s: req.deadline_s,
     }
 }
 
@@ -132,9 +184,19 @@ pub(super) fn zero_step_result(req: &ClusterRequest, elems: usize) -> ClusterRes
 #[derive(Debug, Clone)]
 pub struct ClusterOutcome {
     pub results: Vec<ClusterResult>,
-    /// Requests shed by admission control (every device full).
+    /// Requests shed by admission control — every device full, or (with
+    /// [`super::ClusterConfig::shed_late`]) unable to meet their
+    /// deadline at admission.
     pub rejected: Vec<RequestId>,
     pub metrics: FleetMetrics,
+}
+
+impl ClusterOutcome {
+    /// Total requests shed by admission control. The per-device /
+    /// per-profile `shed` roll-ups in [`FleetMetrics`] sum to this.
+    pub fn shed(&self) -> u64 {
+        self.rejected.len() as u64
+    }
 }
 
 /// Concrete sampler per slot, behind `Arc` so the per-row clones handed
@@ -261,32 +323,55 @@ impl StepExecutor for SimExecutor {
     }
 }
 
-/// A device step-completion event, min-ordered by `(time, device)` so
-/// simultaneous completions process in device-id order (deterministic,
-/// matching the reference loop's scan).
-#[derive(Debug, Clone, Copy)]
-struct CompletionEvent {
-    time_s: f64,
-    device: usize,
+/// What a scheduler event is: the source's next request arrival, or a
+/// device step completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// The next arrival scheduled from the request source. Orders
+    /// *before* completions at the same instant — a request landing
+    /// exactly on a step boundary is admissible in the very next step
+    /// (the tie rule the pre-refactor peek loop implemented).
+    Arrival,
+    /// Device `device` finishes its in-flight fused step.
+    Completion { device: usize },
 }
 
-impl PartialEq for CompletionEvent {
+impl EventKind {
+    /// `(kind rank, device)` — arrivals first, then completions in
+    /// device-id order (deterministic, matching the reference loop's
+    /// scan).
+    fn rank(self) -> (u8, usize) {
+        match self {
+            EventKind::Arrival => (0, 0),
+            EventKind::Completion { device } => (1, device),
+        }
+    }
+}
+
+/// A discrete event, min-ordered by `(time, kind, device)`.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time_s: f64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
         self.cmp(other) == std::cmp::Ordering::Equal
     }
 }
 
-impl Eq for CompletionEvent {}
+impl Eq for Event {}
 
-impl PartialOrd for CompletionEvent {
+impl PartialOrd for Event {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for CompletionEvent {
+impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time_s.total_cmp(&other.time_s).then(self.device.cmp(&other.device))
+        self.time_s.total_cmp(&other.time_s).then(self.kind.rank().cmp(&other.kind.rank()))
     }
 }
 
@@ -317,9 +402,20 @@ pub struct StepScheduler {
     /// Work stealing: an idle, empty device pulls queued requests from
     /// the most-loaded busy device at step boundaries.
     work_stealing: bool,
+    /// SLO admission control: shed requests whose estimated completion
+    /// misses their deadline instead of enqueueing doomed work.
+    shed_late: bool,
+    /// `(class, carried a deadline)` per shed request this window, in
+    /// shed order — folded into the per-class metrics at the end.
+    shed_log: Vec<(u8, bool)>,
     // --- discrete-event core ---
-    /// Pending step-completion events, min-first.
-    events: BinaryHeap<Reverse<CompletionEvent>>,
+    /// Pending events (arrival + step completions), min-first.
+    events: BinaryHeap<Reverse<Event>>,
+    /// Time of the live arrival event in the heap, if any. A source may
+    /// schedule an *earlier* arrival after a completion (closed-loop
+    /// feedback); the superseded event stays in the heap and is skipped
+    /// when popped (lazy deletion keyed on this time).
+    arrival_scheduled: Option<f64>,
     /// Devices whose occupancy/busy state changed since the last kick.
     dirty: BTreeSet<usize>,
     /// Idle devices with nothing resident or queued — the only possible
@@ -379,7 +475,10 @@ impl StepScheduler {
             max_backlog: config.max_backlog,
             sampler_cache: FxMap::default(),
             work_stealing: config.work_stealing,
+            shed_late: config.shed_late,
+            shed_log: Vec::new(),
             events: BinaryHeap::new(),
+            arrival_scheduled: None,
             dirty: BTreeSet::new(),
             kick_scratch: Vec::new(),
             events_processed: 0,
@@ -394,23 +493,34 @@ impl StepScheduler {
         self.devices.len()
     }
 
-    /// Serve a workload to completion. Requests may arrive in any order;
-    /// the loop processes them by simulated arrival time.
+    /// Serve a materialized workload to completion. Requests may arrive
+    /// in any order; they replay by simulated arrival time. Thin wrapper
+    /// over [`StepScheduler::serve_source`] with a replay source —
+    /// bit-identical to the pre-live-arrival scheduler.
     pub fn serve(
         &mut self,
-        mut requests: Vec<ClusterRequest>,
+        requests: Vec<ClusterRequest>,
         executor: &mut dyn StepExecutor,
     ) -> crate::Result<ClusterOutcome> {
-        requests.sort_by(|a, b| {
-            a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id))
-        });
-        let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
+        self.serve_source(RequestSource::replay(requests), executor)
+    }
+
+    /// Serve a live arrival stream to completion: the event loop pulls
+    /// arrivals from `source` as simulated time advances and reports
+    /// completions/sheds back to it (closed-loop clients schedule their
+    /// next submission from that feedback).
+    pub fn serve_source(
+        &mut self,
+        mut source: RequestSource,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
         // Each serve call is one accounting window; reset the event core
         // too (a drained fleet leaves it empty, but be defensive).
         for d in &mut self.devices {
             d.reset_accounting();
         }
         self.events.clear();
+        self.arrival_scheduled = None;
         self.dirty.clear();
         self.idle_empty = (0..self.devices.len()).collect();
         // Occupancy resets per window; the round-robin cursor and the
@@ -418,46 +528,68 @@ impl StepScheduler {
         self.index
             .reset_occupancy(blank_loads(&self.devices, self.cost_aware));
         self.events_processed = 0;
+        self.shed_log.clear();
 
-        let mut pending = requests.into_iter().peekable();
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();
+        let mut first_arrival_s: Option<f64> = None;
 
-        loop {
-            let next_arrival = pending.peek().map(|r| r.arrival_s);
-            let next_completion =
-                self.events.peek().map(|Reverse(ev)| (ev.time_s, ev.device));
-
-            // Arrivals win ties so a request landing exactly on a step
-            // boundary is admissible in the very next step.
-            let take_arrival = match (next_arrival, next_completion) {
-                (None, None) => break,
-                (Some(_), None) => true,
-                (None, Some(_)) => false,
-                (Some(at), Some((ct, _))) => at <= ct,
-            };
-            if take_arrival {
-                // Drain the whole same-instant burst before starting any
-                // device, so simultaneous requests can share a first step.
-                let at = next_arrival.expect("arrival selected");
-                while pending.peek().is_some_and(|r| r.arrival_s == at) {
-                    let req = pending.next().expect("peeked");
-                    self.admit(req, &mut rejected, &mut results);
+        self.schedule_arrival(&source);
+        while let Some(Reverse(ev)) = self.events.peek().copied() {
+            match ev.kind {
+                EventKind::Arrival => {
+                    self.events.pop();
+                    // Lazy deletion: only the currently scheduled arrival
+                    // is live; a source that moved its next arrival
+                    // earlier (closed-loop feedback) left this one stale.
+                    if source.peek() != Some(ev.time_s) {
+                        continue;
+                    }
+                    let at = ev.time_s;
+                    first_arrival_s.get_or_insert(at);
+                    // Drain the whole same-instant burst before starting
+                    // any device, so simultaneous requests can share a
+                    // first step. A zero-think closed-loop client whose
+                    // request completes (or sheds) at admission re-enters
+                    // this same burst.
+                    while source.peek() == Some(at) {
+                        let req = source.pop();
+                        self.admit(req, &mut source, &mut rejected, &mut results);
+                    }
+                    self.arrival_scheduled = None;
+                    self.schedule_arrival(&source);
+                    self.kick(at, executor)?;
+                    self.events_processed += 1;
                 }
-                self.kick(at, executor)?;
-            } else {
-                let Reverse(ev) = self.events.pop().expect("completion selected");
-                self.complete(ev.device, ev.time_s, executor, &mut results)?;
+                EventKind::Completion { device } => {
+                    self.events.pop();
+                    self.complete(
+                        device,
+                        ev.time_s,
+                        executor,
+                        &mut source,
+                        &mut results,
+                        &mut rejected,
+                    )?;
+                    self.events_processed += 1;
+                    // Completion feedback may have scheduled an arrival
+                    // earlier than the one in the heap.
+                    self.schedule_arrival(&source);
+                }
             }
-            self.events_processed += 1;
         }
 
         // Anything still deferred when all devices drained is undeliverable
         // (can only happen with a backlog bound tighter than the fleet).
-        rejected.extend(self.backlog.drain(..).map(|s| s.req.id));
+        // The serving window is over, so no completion feedback fires.
+        while let Some(slot) = self.backlog.pop_front() {
+            self.attribute_shed(None, &slot.req);
+            rejected.push(slot.req.id);
+        }
 
         // Makespan spans the active serving window (first arrival → last
         // completion), not absolute simulated time zero.
+        let first_arrival_s = first_arrival_s.unwrap_or(0.0);
         let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
         let mut metrics = FleetMetrics {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
@@ -469,36 +601,100 @@ impl StepScheduler {
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
         for r in &results {
-            metrics.record_completion(r.latency_s(), r.queue_s());
+            metrics.record_completion(r.latency_s(), r.queue_s(), r.class, r.deadline_met());
+        }
+        for &(class, tracked) in &self.shed_log {
+            metrics.record_shed(class, tracked);
         }
         Ok(ClusterOutcome { results, rejected, metrics })
+    }
+
+    /// Keep exactly one live arrival event in the heap: (re)schedule
+    /// whenever the source's next arrival is earlier than the scheduled
+    /// one (or none is scheduled). Superseded events die by lazy
+    /// deletion in the event loop.
+    fn schedule_arrival(&mut self, source: &RequestSource) {
+        if let Some(at) = source.peek() {
+            if self.arrival_scheduled.map_or(true, |t| at < t) {
+                self.events.push(Reverse(Event { time_s: at, kind: EventKind::Arrival }));
+                self.arrival_scheduled = Some(at);
+            }
+        }
+    }
+
+    /// Attribute one shed to a device (for the per-device / per-profile
+    /// roll-ups) and log its class. `routed` is the device the router
+    /// picked for a deadline shed; `None` (every device full, or the
+    /// end-of-window backlog drain) attributes to the device closest to
+    /// draining — the one that would have taken the request next.
+    fn attribute_shed(&mut self, routed: Option<usize>, req: &ClusterRequest) {
+        let di = routed
+            .or_else(|| min_drain_device(self.index.loads()))
+            .unwrap_or(0);
+        self.devices[di].shed += 1;
+        self.shed_log.push((req.class, req.deadline_s.is_some()));
     }
 
     /// Route one arriving request into a device queue, defer it to the
     /// fleet backlog, or shed it. Zero-step requests (`Ddim { steps: 0 }`)
     /// have no denoise work and complete immediately instead of reaching
-    /// `start_step` with an empty timestep list.
+    /// `start_step` with an empty timestep list. Every request that
+    /// leaves the system here (zero-step completion or shed) is reported
+    /// back to the source so closed-loop clients keep cycling.
     fn admit(
         &mut self,
         req: ClusterRequest,
+        source: &mut RequestSource,
         rejected: &mut Vec<RequestId>,
         results: &mut Vec<ClusterResult>,
     ) {
         if req.is_zero_step() {
-            results.push(zero_step_result(&req, self.elems));
+            let r = zero_step_result(&req, self.elems);
+            source.on_done(r.id, r.finish_s);
+            results.push(r);
             return;
         }
         match self.index.route(req.sampler) {
             Some(did) => {
                 let slot = self.make_slot(req);
+                // SLO admission control: shed a request whose estimated
+                // completion on the routed device misses its deadline,
+                // instead of burning batch slots on doomed work.
+                if self.shed_late && self.doomed_at(did.0, &slot, slot.req.arrival_s) {
+                    self.attribute_shed(Some(did.0), &slot.req);
+                    source.on_done(slot.req.id, slot.req.arrival_s);
+                    rejected.push(slot.req.id);
+                    return;
+                }
                 self.enqueue(did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
                 let slot = self.make_slot(req);
                 self.backlog.push_back(slot);
             }
-            None => rejected.push(req.id),
+            None => {
+                self.attribute_shed(None, &req);
+                source.on_done(req.id, req.arrival_s);
+                rejected.push(req.id);
+            }
         }
+    }
+
+    /// Would this request miss its deadline even if admitted to device
+    /// `di` at time `now_s`? Wait already served (`now_s - arrival`)
+    /// plus the routed device's occupancy behind the request times its
+    /// drain weight, fused-amortized and scaled to the request's own
+    /// generation length (see [`Device::admission_estimate_s`]). At
+    /// first admission `now_s == arrival_s` and the elapsed term is
+    /// zero; backlog re-routes pass the boundary time, so a request
+    /// that went doomed *while deferred* is shed then. Requests without
+    /// a deadline are never doomed.
+    fn doomed_at(&self, di: usize, slot: &Slot, now_s: f64) -> bool {
+        let Some(deadline_s) = slot.req.deadline_s else { return false };
+        let ahead = self.index.load(di).total();
+        (now_s - slot.req.arrival_s)
+            + self.devices[di].admission_estimate_s(ahead, slot.timesteps.len())
+            > deadline_s
     }
 
     fn make_slot(&mut self, req: ClusterRequest) -> Slot {
@@ -526,11 +722,27 @@ impl StepScheduler {
 
     /// Re-route deferred requests once device queues have space (called
     /// at every step boundary, FIFO so deferral preserves arrival order).
-    fn drain_backlog(&mut self) {
+    /// Deadline-aware admission applies here too: time spent deferred
+    /// counts against the deadline, so a request that went doomed while
+    /// waiting in the backlog is shed at re-route instead of occupying a
+    /// batch slot — without this, an unbounded backlog (the engine's
+    /// drained mode) would bypass `shed_late` entirely.
+    fn drain_backlog(
+        &mut self,
+        now_s: f64,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
         while let Some(slot) = self.backlog.front() {
             match self.index.route(slot.req.sampler) {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
+                    if self.shed_late && self.doomed_at(did.0, &slot, now_s) {
+                        self.attribute_shed(Some(did.0), &slot.req);
+                        source.on_done(slot.req.id, now_s);
+                        rejected.push(slot.req.id);
+                        continue;
+                    }
                     self.enqueue(did.0, slot);
                 }
                 None => break,
@@ -599,14 +811,17 @@ impl StepScheduler {
         }
     }
 
-    /// Handle a device's step-completion event: retire finished samples,
-    /// promote queued requests into the freed slots, start the next step.
+    /// Handle a device's step-completion event: retire finished samples
+    /// (reporting each back to the source), promote queued requests into
+    /// the freed slots, start the next step.
     fn complete(
         &mut self,
         di: usize,
         now_s: f64,
         executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
         results: &mut Vec<ClusterResult>,
+        rejected: &mut Vec<RequestId>,
     ) -> crate::Result<()> {
         self.devices[di].finish_step();
         self.index.set_busy(di, false);
@@ -615,6 +830,7 @@ impl StepScheduler {
             if slot.step_index >= slot.timesteps.len() {
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
+                source.on_done(slot.req.id, now_s);
                 results.push(ClusterResult {
                     id: slot.req.id,
                     device: DeviceId(di),
@@ -625,6 +841,8 @@ impl StepScheduler {
                     finish_s: now_s,
                     mean_batch: slot.occupancy_sum as f64 / steps.max(1) as f64,
                     full_steps: slot.full_steps as usize,
+                    class: slot.req.class,
+                    deadline_s: slot.req.deadline_s,
                 });
             } else {
                 still_resident.push(slot);
@@ -636,7 +854,7 @@ impl StepScheduler {
         self.dirty.insert(di);
         // Freed slots (and queue space) may unblock deferred requests —
         // possibly onto other, currently idle devices.
-        self.drain_backlog();
+        self.drain_backlog(now_s, source, rejected);
         self.kick(now_s, executor)
     }
 
@@ -742,7 +960,8 @@ impl StepScheduler {
         }
         let done_s = self.devices[di].begin_step(now_s, k, full);
         self.index.set_busy(di, true);
-        self.events.push(Reverse(CompletionEvent { time_s: done_s, device: di }));
+        self.events
+            .push(Reverse(Event { time_s: done_s, kind: EventKind::Completion { device: di } }));
         Ok(())
     }
 }
@@ -1214,10 +1433,10 @@ mod tests {
     fn heap_core_bit_identical_to_reference_loop() {
         // The homogeneous acceptance gate: across devices∈{1,2,4,8},
         // reuse K∈{1,3}, stealing on/off, randomized workloads (mixed
-        // samplers, random arrivals, zero-step riders, all three
-        // policies, random capacities/queues/backlogs) must produce
-        // bit-identical results, timings and metrics on both scheduler
-        // cores.
+        // samplers, random arrivals, zero-step riders, random per-class
+        // deadlines with shed-late on/off, all three policies, random
+        // capacities/queues/backlogs) must produce bit-identical
+        // results, timings and metrics on both scheduler cores.
         let cost = test_cost();
         for devices in [1usize, 2, 4, 8] {
             for reuse_k in [1usize, 3] {
@@ -1232,7 +1451,8 @@ mod tests {
                             .backlog(*g.choose(&[0usize, 4, usize::MAX]))
                             .policy(*g.choose(&ShardPolicy::ALL))
                             .with_reuse(reuse_k)
-                            .stealing(stealing);
+                            .stealing(stealing)
+                            .shed_late(g.bool());
                         let n = g.usize_in(1, 20);
                         let mut at = 0.0f64;
                         let reqs: Vec<ClusterRequest> = (0..n)
@@ -1246,7 +1466,19 @@ mod tests {
                                 if g.usize_in(0, 2) > 0 {
                                     at += g.f64_in(0.0, 2e-3);
                                 }
-                                ClusterRequest::new(i as u64, 1000 + i as u64, sampler, at)
+                                let mut req = ClusterRequest::new(
+                                    i as u64,
+                                    1000 + i as u64,
+                                    sampler,
+                                    at,
+                                )
+                                .with_class(g.usize_in(0, 2) as u8);
+                                // Some requests carry deadlines (a mix of
+                                // met, missed and deadline-shed).
+                                if g.bool() {
+                                    req = req.with_deadline(g.f64_in(1e-3, 0.1));
+                                }
+                                req
                             })
                             .collect();
                         let schedule = NoiseSchedule::linear(40);
@@ -1316,7 +1548,8 @@ mod tests {
                     .policy(*g.choose(&ShardPolicy::ALL))
                     .backlog(*g.choose(&[0usize, 4, usize::MAX]))
                     .stealing(g.bool())
-                    .cost_aware(g.bool());
+                    .cost_aware(g.bool())
+                    .shed_late(g.bool());
                 let n = g.usize_in(4, 24);
                 let mut at = 0.0f64;
                 let reqs: Vec<ClusterRequest> = (0..n)
@@ -1329,7 +1562,13 @@ mod tests {
                         if g.usize_in(0, 2) > 0 {
                             at += g.f64_in(0.0, 2e-3);
                         }
-                        ClusterRequest::new(i as u64, 4000 + i as u64, sampler, at)
+                        let mut req =
+                            ClusterRequest::new(i as u64, 4000 + i as u64, sampler, at)
+                                .with_class(g.usize_in(0, 2) as u8);
+                        if g.bool() {
+                            req = req.with_deadline(g.f64_in(1e-3, 0.1));
+                        }
+                        req
                     })
                     .collect();
                 let schedule = NoiseSchedule::linear(40);
@@ -1452,6 +1691,328 @@ mod tests {
                 "same energy over fewer bits must raise EPB"
             );
         }
+    }
+
+    // --- live arrival streams and the SLO tier ------------------------
+
+    #[test]
+    fn serve_source_replay_is_bit_identical_to_serve() {
+        // The Replay acceptance gate at the API seam: serve(vec) is the
+        // serve_source(replay) path, and a shuffled vector produces the
+        // same outcome as the sorted one (replay sorts like serve did).
+        let reqs: Vec<ClusterRequest> = (0..12)
+            .map(|i| {
+                ClusterRequest::new(i, 700 + i, SamplerKind::Ddim { steps: 5 }, (i % 3) as f64 * 1e-3)
+            })
+            .collect();
+        let mut shuffled = reqs.clone();
+        shuffled.reverse();
+        let a = scheduler(2).serve(reqs, &mut SimExecutor).unwrap();
+        let b = scheduler(2)
+            .serve_source(RequestSource::replay(shuffled), &mut SimExecutor)
+            .unwrap();
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.results.len(), b.results.len());
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device));
+            assert_eq!(ra.sample, rb.sample);
+            assert!(ra.finish_s == rb.finish_s && ra.first_step_s == rb.first_step_s);
+        }
+    }
+
+    #[test]
+    fn closed_loop_clients_cycle_through_completions() {
+        // 2 zero-think clients over one solo device: each client keeps
+        // exactly one request in flight, so every arrival after the
+        // first burst lands exactly on some earlier completion instant.
+        let mut s = scheduler_with(ClusterConfig::with_devices(1).capacity(1).max_queue(4));
+        let source = RequestSource::closed_loop(2, 0.0, 8, 31, SamplerKind::Ddim { steps: 3 });
+        let out = s.serve_source(source, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 8, "all 8 budgeted submissions must serve");
+        assert!(out.rejected.is_empty());
+        let mut by_id = out.results.clone();
+        by_id.sort_by_key(|r| r.id);
+        assert_eq!(by_id[0].arrival_s, 0.0);
+        assert_eq!(by_id[1].arrival_s, 0.0);
+        let finishes: Vec<f64> = out.results.iter().map(|r| r.finish_s).collect();
+        for r in by_id.iter().skip(2) {
+            assert!(
+                finishes.iter().any(|f| *f == r.arrival_s),
+                "closed-loop arrival {} must coincide with a completion",
+                r.arrival_s
+            );
+        }
+        // Never more than `clients` requests concurrently in the system.
+        for r in &by_id {
+            let in_flight = by_id
+                .iter()
+                .filter(|o| o.arrival_s <= r.arrival_s && o.finish_s > r.arrival_s)
+                .count();
+            assert!(in_flight <= 2, "{in_flight} in flight at {}", r.arrival_s);
+        }
+        // Deterministic across runs.
+        let mut s2 = scheduler_with(ClusterConfig::with_devices(1).capacity(1).max_queue(4));
+        let source = RequestSource::closed_loop(2, 0.0, 8, 31, SamplerKind::Ddim { steps: 3 });
+        let again = s2.serve_source(source, &mut SimExecutor).unwrap();
+        assert_eq!(out.metrics, again.metrics);
+    }
+
+    #[test]
+    fn closed_loop_clients_resubmit_after_sheds() {
+        // A shed must feed back to the client like a completion, or the
+        // client would hang and the serve loop would end early. Solo
+        // device with no queue and two zero-think clients: contention
+        // sheds some submissions, but the full budget is always issued.
+        let mut s = scheduler_with(ClusterConfig::with_devices(1).capacity(1).max_queue(0));
+        let source = RequestSource::closed_loop(2, 0.0, 10, 5, SamplerKind::Ddim { steps: 2 });
+        let out = s.serve_source(source, &mut SimExecutor).unwrap();
+        assert_eq!(
+            out.results.len() + out.rejected.len(),
+            10,
+            "every budgeted submission completes or sheds"
+        );
+        assert!(!out.rejected.is_empty(), "two clients cannot fit one slot at the same instant");
+        assert!(!out.results.is_empty());
+        assert_eq!(out.metrics.rejected, out.shed());
+    }
+
+    #[test]
+    fn open_loop_sources_match_heap_and_reference() {
+        // Poisson and burst sources must be bit-identical across the two
+        // scheduler cores, and a Poisson source must reproduce the
+        // materialized synthetic_workload replay exactly.
+        let rate = 2_000.0;
+        let mk = || super::super::load::synthetic_workload(
+            30,
+            13,
+            SamplerKind::Ddim { steps: 6 },
+            1.0 / rate,
+        );
+        let mut heap = scheduler(3);
+        let a = heap
+            .serve_source(
+                RequestSource::poisson(30, 13, SamplerKind::Ddim { steps: 6 }, rate),
+                &mut SimExecutor,
+            )
+            .unwrap();
+        let b = scheduler(3).serve(mk(), &mut SimExecutor).unwrap();
+        assert_eq!(a.metrics, b.metrics, "poisson == materialized synthetic workload");
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device));
+            assert_eq!(ra.sample, rb.sample);
+        }
+        for duty in [1.0, 0.25] {
+            let cfg = config(3);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let src = RequestSource::burst(24, 17, SamplerKind::Ddim { steps: 4 }, rate, duty)
+                .with_slos(vec![5e-3, 50e-3]);
+            let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let mut reference =
+                ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let a = heap.serve_source(src.clone(), &mut SimExecutor).unwrap();
+            let b = reference.serve_source(src, &mut SimExecutor).unwrap();
+            assert_eq!(a.rejected, b.rejected);
+            assert_eq!(a.metrics, b.metrics, "burst duty {duty} diverged");
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!((ra.id, ra.device), (rb.id, rb.device));
+                assert_eq!(ra.sample, rb.sample);
+                assert!(ra.finish_s == rb.finish_s);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_heap_bit_identical_to_reference() {
+        // The closed-loop acceptance gate: randomized client counts,
+        // think times, budgets, fleet shapes, SLOs and shed-late must
+        // stay bit-identical across both scheduler cores — the arrival
+        // feedback loop (completions and sheds scheduling the next
+        // submission) is driven in the same order by both.
+        crate::util::prop::forall("closed-loop heap = reference", 24, |g| {
+            let cfg = ClusterConfig::with_devices(g.usize_in(1, 4))
+                .capacity(g.usize_in(1, 3))
+                .max_queue(g.usize_in(0, 4))
+                .backlog(*g.choose(&[0usize, 4]))
+                .policy(*g.choose(&ShardPolicy::ALL))
+                .stealing(g.bool())
+                .shed_late(g.bool());
+            let clients = g.usize_in(1, 6);
+            let think_s = *g.choose(&[0.0, 1e-4, 5e-3]);
+            let max_requests = g.usize_in(1, 24);
+            let steps = g.usize_in(0, 8);
+            let mut src = RequestSource::closed_loop(
+                clients,
+                think_s,
+                max_requests,
+                9000 + clients as u64,
+                SamplerKind::Ddim { steps },
+            );
+            if g.bool() {
+                src = src.with_slos(vec![g.f64_in(1e-3, 0.05), g.f64_in(1e-3, 0.05)]);
+            }
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            let mut reference =
+                ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            let a = heap.serve_source(src.clone(), &mut SimExecutor).unwrap();
+            let b = reference.serve_source(src, &mut SimExecutor).unwrap();
+            assert_eq!(a.rejected, b.rejected, "shed set diverged");
+            assert_eq!(a.results.len(), b.results.len());
+            assert_eq!(
+                a.results.len() + a.rejected.len(),
+                max_requests,
+                "closed loop must drive the full budget through the fleet"
+            );
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!(ra.id, rb.id, "completion order diverged");
+                assert_eq!(ra.device, rb.device, "placement diverged");
+                assert_eq!(ra.sample, rb.sample, "samples diverged");
+                assert!(
+                    ra.finish_s == rb.finish_s
+                        && ra.first_step_s == rb.first_step_s
+                        && ra.arrival_s == rb.arrival_s,
+                    "timings diverged (req {:?})",
+                    ra.id
+                );
+            }
+            assert_eq!(a.metrics, b.metrics, "metrics diverged");
+        });
+    }
+
+    #[test]
+    fn shed_late_drops_doomed_work_and_lifts_goodput() {
+        // One capacity-2 device, a 12-request simultaneous burst with a
+        // deadline only ~2.4 generations long: deadline-aware admission
+        // sheds the doomed tail at arrival, the kept head all meets its
+        // SLO, and goodput beats the shed-on-full baseline that lets
+        // doomed work camp on the queue.
+        let deadline = 6e-3;
+        let serve = |shed_late: bool| {
+            let cfg = ClusterConfig::with_devices(1)
+                .capacity(2)
+                .max_queue(16)
+                .shed_late(shed_late);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let reqs: Vec<ClusterRequest> = (0..12)
+                .map(|i| {
+                    ClusterRequest::new(i, 40 + i, SamplerKind::Ddim { steps: 4 }, 0.0)
+                        .with_deadline(deadline)
+                })
+                .collect();
+            s.serve(reqs, &mut SimExecutor).unwrap()
+        };
+        let kept = serve(true);
+        let full = serve(false);
+        assert!(!kept.rejected.is_empty(), "overload must deadline-shed");
+        assert!(full.rejected.is_empty(), "12 requests fit capacity 2 + queue 16");
+        assert!(
+            kept.results.iter().all(|r| r.deadline_met() == Some(true)),
+            "every admitted request must meet its deadline under shed-late"
+        );
+        assert_eq!(kept.metrics.slo_attainment(), kept.results.len() as f64 / 12.0);
+        assert!(
+            full.results.iter().any(|r| r.deadline_met() == Some(false)),
+            "without shedding, queued work must blow the deadline"
+        );
+        assert!(
+            kept.metrics.goodput_samples_per_s() > full.metrics.goodput_samples_per_s(),
+            "shedding doomed work must lift goodput ({} vs {})",
+            kept.metrics.goodput_samples_per_s(),
+            full.metrics.goodput_samples_per_s()
+        );
+        // Shed-late only ever touches deadline-carrying requests.
+        let cfg = ClusterConfig::with_devices(1).capacity(2).max_queue(16).shed_late(true);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let out = s.serve(workload(12, 4), &mut SimExecutor).unwrap();
+        assert!(out.rejected.is_empty(), "no deadline, no deadline shed");
+    }
+
+    #[test]
+    fn backlogged_requests_are_deadline_checked_at_reroute() {
+        // Regression (review finding): time spent deferred in the fleet
+        // backlog counts against the deadline. One solo device (capacity
+        // 1, no queue) with a deep backlog and a 2.5-generation SLO over
+        // 5 simultaneous requests: the head serves, the first deferred
+        // request still fits, and the rest go doomed *while waiting* —
+        // they must shed at re-route instead of serving hopelessly late.
+        // (Generation = 4 steps x 1 ms; estimate per occupant = 4 ms at
+        // capacity 1.)
+        let deadline = 10e-3;
+        let serve = |shed_late: bool| {
+            let cfg = ClusterConfig::with_devices(1)
+                .capacity(1)
+                .max_queue(0)
+                .backlog(8)
+                .shed_late(shed_late);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let reqs: Vec<ClusterRequest> = (0..5)
+                .map(|i| {
+                    ClusterRequest::new(i, 80 + i, SamplerKind::Ddim { steps: 4 }, 0.0)
+                        .with_deadline(deadline)
+                })
+                .collect();
+            s.serve(reqs, &mut SimExecutor).unwrap()
+        };
+        let kept = serve(true);
+        assert_eq!(
+            kept.rejected,
+            vec![RequestId(2), RequestId(3), RequestId(4)],
+            "requests that went doomed in the backlog must shed at re-route"
+        );
+        assert_eq!(kept.results.len(), 2);
+        assert!(kept.results.iter().all(|r| r.deadline_met() == Some(true)));
+        // Without deadline-aware admission the backlog serves everything,
+        // and the tail blows its SLO.
+        let full = serve(false);
+        assert!(full.rejected.is_empty());
+        assert_eq!(full.results.len(), 5);
+        assert!(full.results.iter().any(|r| r.deadline_met() == Some(false)));
+        assert!(
+            kept.metrics.goodput_samples_per_s() > full.metrics.goodput_samples_per_s(),
+            "shedding the doomed backlog tail must lift goodput"
+        );
+    }
+
+    #[test]
+    fn shed_attribution_sums_to_total_shed() {
+        // Per-device / per-profile shed counts must sum to the outcome's
+        // total, across both shed causes (deadline and fleet-full).
+        let (fast, slow) = hetero_profiles();
+        let cfg = ClusterConfig::heterogeneous(vec![(fast, 1), (slow, 2)])
+            .capacity(1)
+            .max_queue(1)
+            .shed_late(true);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let reqs: Vec<ClusterRequest> = (0..16)
+            .map(|i| {
+                let mut r = ClusterRequest::new(i, 60 + i, SamplerKind::Ddim { steps: 6 }, 0.0)
+                    .with_class((i % 2) as u8);
+                if i % 2 == 0 {
+                    // Half the load carries an unmeetable deadline.
+                    r = r.with_deadline(1e-9);
+                }
+                r
+            })
+            .collect();
+        let out = s.serve(reqs, &mut SimExecutor).unwrap();
+        assert!(!out.rejected.is_empty());
+        let m = &out.metrics;
+        let device_shed: u64 = m.devices.iter().map(|d| d.shed).sum();
+        let profile_shed: u64 = m.per_profile().iter().map(|g| g.shed).sum();
+        let class_shed: u64 = m.classes.iter().map(|c| c.shed).sum();
+        assert_eq!(device_shed, out.shed(), "device attribution must sum to the total");
+        assert_eq!(profile_shed, out.shed(), "profile attribution must sum to the total");
+        assert_eq!(class_shed, out.shed(), "class attribution must sum to the total");
+        assert_eq!(m.rejected, out.shed());
+        // The unmeetable class never completes; the best-effort class
+        // may still shed on full, but anything it completed is good.
+        let tight = m.classes.iter().find(|c| c.class == 0).expect("class 0 present");
+        assert_eq!(tight.attained, 0);
+        assert_eq!(tight.attainment(), 0.0);
     }
 
     #[test]

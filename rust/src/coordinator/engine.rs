@@ -37,6 +37,14 @@ pub struct EngineConfig {
     pub quantized: bool,
     /// Fleet shape; `devices: 1` keeps the single-device loop.
     pub cluster: ClusterConfig,
+    /// Per-class latency SLOs in milliseconds (simulated device clocks),
+    /// assigned round-robin by request id; empty disables the SLO tier.
+    /// Fleet path only — the single-device loop has no deadline model.
+    pub slo_ms: Vec<f64>,
+    /// Shed requests that cannot meet their deadline at admission
+    /// (requires `slo_ms`); shed requests return no result and count in
+    /// `fleet_metrics.rejected`.
+    pub shed_late: bool,
 }
 
 impl EngineConfig {
@@ -46,12 +54,21 @@ impl EngineConfig {
             policy: BatchPolicy::default(),
             quantized: true,
             cluster: ClusterConfig::default(),
+            slo_ms: Vec::new(),
+            shed_late: false,
         }
     }
 
     /// Serve through an N-device fleet instead of the single-device loop.
     pub fn with_cluster(mut self, cluster: ClusterConfig) -> Self {
         self.cluster = cluster;
+        self
+    }
+
+    /// Attach per-class latency SLOs (milliseconds, simulated clocks).
+    pub fn with_slos(mut self, slo_ms: Vec<f64>, shed_late: bool) -> Self {
+        self.slo_ms = slo_ms;
+        self.shed_late = shed_late;
         self
     }
 }
@@ -133,28 +150,37 @@ impl Coordinator {
         let elems = self.sample_elems();
         let schedule = self.runtime.manifest.schedule.clone();
         let session_start = self.session_start;
-        let requests: Vec<ClusterRequest> = self
+        let mut requests: Vec<ClusterRequest> = self
             .batcher
             .drain()
             .into_iter()
-            .map(|r| ClusterRequest {
-                id: r.id,
-                seed: r.seed,
-                sampler: r.sampler,
-                // Real admission offsets become simulated arrival times.
-                arrival_s: r.admitted.duration_since(session_start).as_secs_f64(),
+            .map(|r| {
+                ClusterRequest::new(
+                    r.id.0,
+                    r.seed,
+                    r.sampler,
+                    // Real admission offsets become simulated arrivals.
+                    r.admitted.duration_since(session_start).as_secs_f64(),
+                )
             })
             .collect();
+        // SLO tier: per-class deadlines ride on the requests themselves.
+        let slos_s: Vec<f64> = self.config.slo_ms.iter().map(|ms| ms * 1e-3).collect();
+        crate::cluster::apply_slos(&mut requests, &slos_s);
         // Drained mode is offline: there is no client to push back on, so
-        // overload defers to the fleet backlog instead of shedding.
+        // overload defers to the fleet backlog instead of shedding —
+        // unless deadline-aware shedding is explicitly on, in which case
+        // doomed requests are dropped and reported.
         let mut cluster_config = self.config.cluster.clone();
         cluster_config.max_backlog = usize::MAX;
+        cluster_config.shed_late = self.config.shed_late && !slos_s.is_empty();
+        let shed_late = cluster_config.shed_late;
         let mut cluster = Cluster::new(cluster_config, schedule, elems)?;
         let mut executor =
             PjrtStepExecutor { runtime: &mut self.runtime, quantized: self.config.quantized };
         let outcome = cluster.serve(requests, &mut executor)?;
         anyhow::ensure!(
-            outcome.rejected.is_empty(),
+            shed_late || outcome.rejected.is_empty(),
             "unbounded backlog must never shed ({} dropped)",
             outcome.rejected.len()
         );

@@ -10,28 +10,39 @@
 //!   configurations and the paper config's rank).
 //! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
 //!   [--fp32] [--devices N] [--reuse-interval K] [--policy P]
-//!   [--fleet SPEC | --fleet-file PATH]` — serve synthetic generation
-//!   requests through the AOT UNet via PJRT (sharded across a device
-//!   fleet when more than one device is specified, with DeepCache step
-//!   reuse when `K > 1`) and print latency/throughput metrics.
+//!   [--fleet SPEC | --fleet-file PATH] [--slo-ms MS[,MS...]]
+//!   [--shed-late]` — serve synthetic generation requests through the
+//!   AOT UNet via PJRT (sharded across a device fleet when more than
+//!   one device is specified, with DeepCache step reuse when `K > 1`)
+//!   and print latency/throughput metrics. `--slo-ms` attaches
+//!   per-class latency deadlines on the fleet path; `--shed-late`
+//!   drops requests that cannot meet them at admission.
 //! * `cluster [--devices N] [--requests R] [--steps S] [--capacity C]
 //!   [--policy rr|ll|affinity] [--gap-us G] [--reuse-interval K]
 //!   [--shallow-frac F] [--no-steal] [--occupancy-only]
-//!   [--fleet SPEC | --fleet-file PATH]` — pure-simulation fleet
-//!   serving (no artifacts needed): continuous step-level batching over
-//!   simulated DiffLight devices — homogeneous (`--devices`) or
-//!   heterogeneous (`--fleet "Y8N12K3H8L6M3:cap4x2,Y2N12K3H3L6M3x6"`,
-//!   per-device `[Y,N,K,H,L,M]@λ` profiles priced independently) —
-//!   with cost-aware routing, work stealing and DeepCache-style step
-//!   reuse, plus a fleet JSON report with per-profile roll-ups. The
-//!   `--fleet` grammar is documented in `rust/src/cluster/README.md`.
+//!   [--fleet SPEC | --fleet-file PATH]
+//!   [--arrival poisson:RATE|burst:RATE:DUTY | --clients N:THINK_MS]
+//!   [--slo-ms MS[,MS...]] [--shed-late] [--backlog B]` —
+//!   pure-simulation fleet serving (no artifacts needed): continuous
+//!   step-level batching over simulated DiffLight devices — homogeneous
+//!   (`--devices`) or heterogeneous
+//!   (`--fleet "Y8N12K3H8L6M3:cap4x2,Y2N12K3H3L6M3x6"`, per-device
+//!   `[Y,N,K,H,L,M]@λ` profiles priced independently) — with cost-aware
+//!   routing, work stealing and DeepCache-style step reuse, plus a
+//!   fleet JSON report with per-profile roll-ups. Load is a live
+//!   arrival stream: the default replayed synthetic workload, an
+//!   open-loop Poisson/burst process (`--arrival`), or closed-loop
+//!   clients (`--clients`); `--slo-ms`/`--shed-late` add the SLO tier
+//!   (goodput, attainment, deadline-aware admission). Grammars are
+//!   documented in `rust/src/cluster/README.md`.
 //! * `devices` — print the Table II device parameter set in use.
 
 use difflight::arch::cost::OptFlags;
 use difflight::baselines::all_baselines;
+use difflight::cluster::load::{parse_arrival_spec, parse_clients_spec, parse_slo_spec};
 use difflight::cluster::{
     parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster, ClusterConfig,
-    DeviceProfile, ShardPolicy, SimExecutor,
+    DeviceProfile, RequestSource, ShardPolicy, SimExecutor,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -73,6 +84,11 @@ fn print_help(program: &str) {
     println!("                                      heterogeneous per-device profiles");
     println!("          --fleet-file fleet.json     fleet spec as JSON");
     println!("          --occupancy-only            disable cost-aware routing");
+    println!("          --arrival poisson:2000      open-loop arrivals (or burst:RATE:DUTY)");
+    println!("          --clients 8:50              closed-loop clients (think time in ms)");
+    println!("          --slo-ms 30,100             per-class latency SLOs");
+    println!("          --shed-late                 deadline-aware admission shedding");
+    println!("          --backlog 64                fleet-level deferral queue (0 = shed)");
     println!("  devices                             Table II constants");
 }
 
@@ -118,6 +134,63 @@ fn fleet_from_args(args: &Args, default_devices: usize) -> difflight::Result<Clu
     config.work_stealing = !args.flag("no-steal");
     config.cost_aware = !args.flag("occupancy-only");
     Ok(config)
+}
+
+/// The valid load-model flag combinations, for conflict error messages.
+/// `--slo-ms`/`--shed-late` decorate whatever source is selected, so
+/// they compose with every row.
+const LOAD_COMBOS: &str = "valid combinations (each composes with \
+     [--slo-ms MS[,MS...]] [--shed-late]):\n  \
+     replay (default): --requests N [--gap-us G] [--seed S]\n  \
+     open loop:        --arrival poisson:RATE|burst:RATE:DUTY --requests N\n  \
+     closed loop:      --clients N[:THINK_MS] --requests N";
+
+/// Build the request source for the `cluster` subcommand from the load
+/// flags (`--arrival` / `--clients` / `--slo-ms` / `--shed-late` /
+/// `--gap-us`), with strict conflict checking: the arrival-model flags
+/// replace the replayed synthetic generator, so combining them with
+/// each other or with the replay-style `--gap-us` is an error listing
+/// the valid combinations (matching the `--fleet` conflict rules).
+/// Returns the source and the parsed SLOs.
+fn request_source_from_args(
+    args: &Args,
+    requests: usize,
+    seed: u64,
+    sampler: difflight::coordinator::request::SamplerKind,
+) -> difflight::Result<(RequestSource, Vec<f64>)> {
+    let arrival = args.get("arrival");
+    let clients = args.get("clients");
+    anyhow::ensure!(
+        arrival.is_none() || clients.is_none(),
+        "--arrival (open loop) and --clients (closed loop) are mutually exclusive; {LOAD_COMBOS}"
+    );
+    if args.get("gap-us").is_some() {
+        for (flag, given) in [("arrival", arrival.is_some()), ("clients", clients.is_some())] {
+            anyhow::ensure!(
+                !given,
+                "--gap-us configures the replayed synthetic workload and conflicts with \
+                 --{flag}; {LOAD_COMBOS}\n(--gap-us G is --arrival poisson:RATE with \
+                 RATE = 1e6/G)"
+            );
+        }
+    }
+    let slos_s = match args.get("slo-ms") {
+        Some(spec) => parse_slo_spec(spec)?,
+        None => Vec::new(),
+    };
+    anyhow::ensure!(
+        !args.flag("shed-late") || !slos_s.is_empty(),
+        "--shed-late needs deadlines to shed against; add --slo-ms MS[,MS...]"
+    );
+    let source = if let Some(spec) = arrival {
+        parse_arrival_spec(spec, requests, seed, sampler)?
+    } else if let Some(spec) = clients {
+        parse_clients_spec(spec, requests, seed, sampler)?
+    } else {
+        let gap_s = args.get_parsed("gap-us", 0.0f64) * 1e-6;
+        RequestSource::replay(synthetic_workload(requests, seed, sampler, gap_s))
+    };
+    Ok((source.with_slos(slos_s.clone()), slos_s))
 }
 
 /// Parse `--policy`, or exit-worthy error text listing the valid names.
@@ -265,6 +338,36 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    // Load-model flags: serve's requests come from the admission queue
+    // (and drained mode defers with an unbounded backlog), so the
+    // arrival-process and backlog knobs belong to the `cluster`
+    // subcommand — accepting them here would silently do nothing.
+    for flag in ["arrival", "clients", "gap-us", "backlog"] {
+        if args.get(flag).is_some() {
+            eprintln!(
+                "error: --{flag} only applies to the artifact-free `cluster` subcommand; \
+                 serve's requests come from the admission queue and drained mode always \
+                 defers overload to an unbounded backlog"
+            );
+            return 2;
+        }
+    }
+    config.slo_ms = match args.get("slo-ms") {
+        Some(spec) => match parse_slo_spec(spec) {
+            // EngineConfig carries milliseconds; the parser returns s.
+            Ok(slos_s) => slos_s.into_iter().map(|s| s * 1e3).collect(),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        },
+        None => Vec::new(),
+    };
+    config.shed_late = args.flag("shed-late");
+    if config.shed_late && config.slo_ms.is_empty() {
+        eprintln!("error: --shed-late needs deadlines to shed against; add --slo-ms MS[,MS...]");
+        return 2;
+    }
     // With no explicit fleet (and no explicit --capacity) the device
     // capacity tracks the batch knob, as it always has on this
     // subcommand; an explicit --capacity wins over that aliasing.
@@ -292,6 +395,13 @@ fn cmd_serve(args: &Args) -> i32 {
             eprintln!(
                 "error: --capacity/--max-queue only apply to the fleet path; use --batch \
                  for the single-device loop, or add --devices N / --fleet"
+            );
+            return 2;
+        }
+        if !config.slo_ms.is_empty() {
+            eprintln!(
+                "error: --slo-ms/--shed-late only apply to the fleet path (the \
+                 single-device loop has no deadline model); add --devices N / --fleet"
             );
             return 2;
         }
@@ -345,13 +455,23 @@ fn cmd_cluster(args: &Args) -> i32 {
             return 2;
         }
     };
+    let config = config
+        .backlog(args.get_parsed("backlog", 0usize))
+        .shed_late(args.flag("shed-late"));
     let requests = args.get_parsed("requests", 32usize);
     let steps = args.get_parsed("steps", 25usize);
     if steps > 1000 {
         eprintln!("--steps {steps} exceeds the T=1000 schedule; generations run 1000 steps");
     }
-    let gap_s = args.get_parsed("gap-us", 0.0f64) * 1e-6;
     let seed = args.get_parsed("seed", 1u64);
+    let (source, slos_s) =
+        match request_source_from_args(args, requests, seed, SamplerKind::Ddim { steps }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
 
     let mut cluster = match Cluster::simulated(config) {
         Ok(c) => c,
@@ -361,9 +481,8 @@ fn cmd_cluster(args: &Args) -> i32 {
         }
     };
     let config = cluster.config.clone();
-    let workload = synthetic_workload(requests, seed, SamplerKind::Ddim { steps }, gap_s);
     let host_t0 = std::time::Instant::now();
-    let outcome = match cluster.serve(workload, &mut SimExecutor) {
+    let outcome = match cluster.serve_source(source, &mut SimExecutor) {
         Ok(o) => o,
         Err(e) => {
             eprintln!("cluster serving failed: {e:#}");
@@ -423,6 +542,27 @@ fn cmd_cluster(args: &Args) -> i32 {
         m.fleet_gops(),
         fmt_si(m.fleet_epb(), "J/bit"),
     );
+    if !slos_s.is_empty() {
+        println!(
+            "slo: goodput {:.1} samples/s, attainment {:.1}% of offered, {} shed{}",
+            m.goodput_samples_per_s(),
+            100.0 * m.slo_attainment(),
+            m.rejected,
+            if config.shed_late { " (deadline-aware)" } else { "" },
+        );
+        for c in &m.classes {
+            println!(
+                "  class {} (slo {}): {} served, {} shed, attainment {:.1}%, p50 {} p99 {}",
+                c.class,
+                fmt_si(slos_s.get(c.class as usize).copied().unwrap_or(0.0), "s"),
+                c.completed(),
+                c.shed,
+                100.0 * c.attainment(),
+                fmt_si(c.latency_p50_s(), "s"),
+                fmt_si(c.latency_p99_s(), "s"),
+            );
+        }
+    }
     println!(
         "scheduler: {} events in {} host time ({:.0} events/s)",
         m.sched_events,

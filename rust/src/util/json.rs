@@ -200,6 +200,16 @@ impl From<u64> for Json {
         Json::Num(v as f64)
     }
 }
+impl From<u32> for Json {
+    fn from(v: u32) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<u8> for Json {
+    fn from(v: u8) -> Self {
+        Json::Num(v as f64)
+    }
+}
 impl From<i64> for Json {
     fn from(v: i64) -> Self {
         Json::Num(v as f64)

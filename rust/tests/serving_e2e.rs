@@ -13,7 +13,7 @@
 //! directory for the full `Coordinator` stack.
 
 use difflight::cluster::{
-    Cluster, ClusterConfig, ClusterRequest, ShardPolicy, SimExecutor,
+    Cluster, ClusterConfig, ClusterRequest, RequestSource, ShardPolicy, SimExecutor,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -253,6 +253,82 @@ fn late_request_starts_before_earlier_batch_finishes() {
         late.first_step_s,
         earliest_finish
     );
+}
+
+#[test]
+fn closed_loop_clients_saturate_the_fleet() {
+    // e2e closed-loop proof: interactive clients (one request in flight
+    // each, zero think) drive a 2-device fleet to completion; doubling
+    // the client count must not lower throughput, and the full
+    // submission budget is always either served or shed.
+    let serve = |clients: usize| {
+        let mut c = Cluster::simulated(cluster_config(2)).expect("valid fleet");
+        let source = RequestSource::closed_loop(
+            clients,
+            0.0,
+            clients * 4,
+            23,
+            SamplerKind::Ddim { steps: 6 },
+        );
+        let out = c.serve_source(source, &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len() + out.rejected.len(), clients * 4);
+        out
+    };
+    let few = serve(2);
+    let many = serve(8);
+    assert!(few.rejected.is_empty(), "2 clients cannot overrun capacity 4 x 2");
+    assert!(
+        many.metrics.throughput_samples_per_s() >= few.metrics.throughput_samples_per_s(),
+        "more concurrency must not lower closed-loop throughput ({} vs {})",
+        many.metrics.throughput_samples_per_s(),
+        few.metrics.throughput_samples_per_s()
+    );
+}
+
+#[test]
+fn slo_tier_sheds_doomed_load_and_reports_goodput() {
+    // e2e SLO proof on the sim fleet: an overload burst with a tight
+    // deadline under deadline-aware admission sheds the doomed tail,
+    // every survivor meets its SLO, and the roll-ups stay consistent
+    // (per-profile shed == total shed, goodput <= throughput).
+    let mut c = Cluster::simulated(
+        ClusterConfig::with_devices(2).capacity(2).max_queue(8).shed_late(true),
+    )
+    .expect("valid fleet");
+    // Price one generation on the paper die to set a ~3.2-generation
+    // deadline (deterministic: simulated clocks). The margin over 3
+    // full fused generations keeps the boundary-admitted request (3
+    // generations of actual latency, estimated slightly under) safely
+    // on the met side.
+    let step_s = difflight::cluster::profile_step_costs(&ClusterConfig::with_devices(2))
+        .expect("paper die prices")[0]
+        .latency_s;
+    let deadline_s = 3.2 * 6.0 * step_s * (1.0 + 0.25);
+    let mut reqs = burst(24, 6);
+    difflight::cluster::apply_slos(&mut reqs, &[deadline_s]);
+    let out = c.serve(reqs, &mut SimExecutor).unwrap();
+    assert!(!out.rejected.is_empty(), "24 simultaneous tight-SLO requests must shed");
+    assert!(!out.results.is_empty(), "the head of the burst must be admitted");
+    for r in &out.results {
+        assert_eq!(
+            r.deadline_met(),
+            Some(true),
+            "admitted request {:?} missed its deadline (latency {})",
+            r.id,
+            r.latency_s()
+        );
+    }
+    let m = &out.metrics;
+    assert_eq!(m.rejected, out.shed());
+    assert_eq!(m.devices.iter().map(|d| d.shed).sum::<u64>(), out.shed());
+    assert_eq!(m.per_profile().iter().map(|g| g.shed).sum::<u64>(), out.shed());
+    assert!(m.goodput_samples_per_s() <= m.throughput_samples_per_s() + 1e-9);
+    assert!(m.slo_attainment() > 0.0 && m.slo_attainment() < 1.0);
+    // The JSON report carries the SLO tier and stays parseable.
+    let j = m.to_json();
+    assert!(j.get("goodput_samples_per_s").is_some());
+    assert!(j.get("per_class").is_some());
+    assert!(Json::parse(&j.to_string_pretty()).is_ok());
 }
 
 // (Fleet-report JSON round-tripping is covered by the cluster::metrics

@@ -2,23 +2,31 @@
 # Perf-trajectory harness: times the paper DSE sweep (memoized vs the
 # uncached reference), a 10k-request fleet drain (DeepCache reuse on
 # vs off), the fleet-scale scheduler sweep (heap event core vs the
-# O(N) reference loop), and the heterogeneous big/small fleet drain
-# (cost-aware vs occupancy-only routing), asserting the ISSUE targets
+# O(N) reference loop), the heterogeneous big/small fleet drain
+# (cost-aware vs occupancy-only routing), and the SLO knee sweep
+# (arrival rate vs SLO attainment on the paper fleet, deadline-aware
+# shedding vs shed-on-full at overload), asserting the ISSUE targets
 # (>=5x DSE, >=1.5x fleet throughput at K=3, >=5x scheduler events/sec
-# at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet)
-# and writing BENCH_sim.json at the repo root.
+# at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet,
+# >=1.2x goodput from deadline-aware shedding at overload) and writing
+# BENCH_sim.json at the repo root.
 #
-# Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero]
+# Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
-#                    gating the 64-device scheduler point and the
-#                    2-profile heap-vs-reference parity) so the harness
-#                    stays cheap enough for CI.
+#                    gating the 64-device scheduler point, the 2-profile
+#                    and closed-loop heap-vs-reference parities, and a
+#                    tiny slo_knee point) so the harness stays cheap
+#                    enough for CI.
 #   --devices-sweep  additionally run benches/cluster_scale.rs with its
 #                    full devices in {1,4,16,64,256} scheduler-scaling
 #                    sweep (artifacts/cluster_scale.json).
 #   --hetero         force the full-size fleet_hetero section (512
 #                    requests) even together with --smoke; the section
 #                    itself always runs and lands in BENCH_sim.json.
+#   --slo            force the full-size slo_knee section (480 requests,
+#                    7 swept arrival rates) even together with --smoke;
+#                    the section itself always runs and lands in
+#                    BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

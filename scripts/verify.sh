@@ -16,11 +16,15 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # re-checks cached-vs-uncached bit-identity, the K=3 reuse speedup, the
 # fleet-scale sweep up to the 64-device point (heap event core must
 # beat the O(N) reference loop there, so scheduler-scaling regressions
-# fail this gate), and the heterogeneous-fleet gates: a 2-profile fleet
-# must be bit-identical between the heap core and ReferenceScheduler
-# (metrics included), and cost-aware routing must beat occupancy-only
-# routing >= 1.2x on the mixed big/small fleet (both simulated-time
-# results, deterministic under host load).
+# fail this gate), the heterogeneous-fleet gates (a 2-profile fleet
+# must be bit-identical between the heap core and ReferenceScheduler,
+# metrics included, and cost-aware routing must beat occupancy-only
+# routing >= 1.2x on the mixed big/small fleet), and the SLO tier gates:
+# a closed-loop client source must be heap-vs-reference bit-identical
+# (arrival feedback included), and a tiny slo_knee point must show
+# deadline-aware shedding lifting goodput >= 1.2x over shed-on-full
+# admission at overload (all simulated-time results, deterministic
+# under host load).
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== cargo fmt --check =="
