@@ -96,10 +96,24 @@ pub const FLEET_SCALE_REQS_PER_DEVICE: usize = 32;
 /// than the mean: this ratio gates CI (`scripts/verify.sh` smoke-runs
 /// the 64-device point), so it must shrug off transient host load.
 pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (u64, f64, f64) {
+    fleet_scale_time_core_traced(devices, iters, reference, false)
+}
+
+/// [`fleet_scale_time_core`] with an optional flight-recorder sink
+/// attached for every serve — the `traced=true` arm is what the `obs`
+/// bench section compares against `traced=false` to gate recorder
+/// overhead (events are buffered as `Copy` structs during the loop;
+/// JSON formatting happens outside the timed window).
+pub fn fleet_scale_time_core_traced(
+    devices: usize,
+    iters: usize,
+    reference: bool,
+    traced: bool,
+) -> (u64, f64, f64) {
     use difflight::arch::cost::Cost;
     use difflight::cluster::{
         synthetic_workload, ClusterConfig, ReferenceScheduler, ShardPolicy, SimExecutor,
-        StepScheduler,
+        StepScheduler, TraceSink,
     };
     use difflight::coordinator::request::SamplerKind;
     use difflight::runtime::manifest::NoiseSchedule;
@@ -119,12 +133,16 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
     );
     let mut events = 0u64;
     let name = format!(
-        "{}({devices} dev).serve({} reqs)",
+        "{}({devices} dev).serve({} reqs){}",
         if reference { "reference" } else { "heap" },
-        workload.len()
+        workload.len(),
+        if traced { " traced" } else { "" }
     );
     let timing = if reference {
         let mut s = ReferenceScheduler::new(&cfg, &costs, schedule, FLEET_SCALE_ELEMS);
+        if traced {
+            s.set_trace(TraceSink::new());
+        }
         bench(&name, iters, || {
             let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
             events = out.metrics.sched_events;
@@ -132,6 +150,9 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
         })
     } else {
         let mut s = StepScheduler::new(&cfg, &costs, schedule, FLEET_SCALE_ELEMS);
+        if traced {
+            s.set_trace(TraceSink::new());
+        }
         bench(&name, iters, || {
             let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
             events = out.metrics.sched_events;
@@ -139,6 +160,33 @@ pub fn fleet_scale_time_core(devices: usize, iters: usize, reference: bool) -> (
         })
     };
     (events, timing.min_s, events as f64 / timing.min_s)
+}
+
+/// One untimed heap-core serve of the fleet-scale workload, returning
+/// the outcome — the `obs` bench section checks the streamed histogram
+/// quantiles against the exact per-request latency vector on it.
+pub fn fleet_scale_outcome(devices: usize) -> difflight::cluster::ClusterOutcome {
+    use difflight::arch::cost::Cost;
+    use difflight::cluster::{
+        synthetic_workload, ClusterConfig, ShardPolicy, SimExecutor, StepScheduler,
+    };
+    use difflight::coordinator::request::SamplerKind;
+    use difflight::runtime::manifest::NoiseSchedule;
+
+    let cfg = ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(16)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded);
+    let costs = vec![Cost::new(1e-3, 2e-3, 1_000_000, 4); cfg.fleet.len()];
+    let workload = synthetic_workload(
+        devices * FLEET_SCALE_REQS_PER_DEVICE,
+        13,
+        SamplerKind::Ddim { steps: FLEET_SCALE_STEPS },
+        1e-5,
+    );
+    let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), FLEET_SCALE_ELEMS);
+    s.serve(workload, &mut SimExecutor).expect("serve")
 }
 
 // ---------------------------------------------------------------------

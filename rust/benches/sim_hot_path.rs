@@ -36,6 +36,16 @@
 //!    reference loop (the `scripts/verify.sh` closed-loop parity gate)
 //!    and (b) deadline-aware shedding lifts goodput ≥1.2x at overload —
 //!    simulated-time results, gated in smoke mode too.
+//! 6. **Obs** — the streaming-observability tier (ISSUE 6). Asserts
+//!    (a) the fixed-size `LogHistogram` reports p50/p99 within 1% of
+//!    the exact-vector percentiles on both the slo_knee and the
+//!    fleet-scale workloads, (b) the flight recorder costs ≤5%
+//!    events/sec at 64 devices (min-of-N, trace on vs off), (c)
+//!    metrics memory is O(buckets) not O(requests) — the serialized
+//!    latency histogram grows ≤2x (and stays under the 8 bytes/sample
+//!    a raw vector would need) while the request count grows 10x —
+//!    and (d) a recorded trace round-trips through JSON lines and
+//!    replays to metrics that match the live report bit-for-bit.
 //!
 //! `--smoke` runs a miniature of everything (tiny design space, 200
 //! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
@@ -44,7 +54,9 @@
 //! the 64-device point at min-of-2 timing, so scheduler-scaling
 //! regressions fail CI without load-spike flakiness). `--hetero` forces
 //! the full-size hetero sweep (`scripts/bench.sh --hetero`); `--slo`
-//! forces the full-size knee sweep (`scripts/bench.sh --slo`).
+//! forces the full-size knee sweep (`scripts/bench.sh --slo`); `--obs`
+//! forces the full-size observability section (`scripts/bench.sh
+//! --obs`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -83,7 +95,17 @@
 //!     "knee_rate_rps": x,
 //!     "overload": { "rate_rps": x, "shed_late": {...},
 //!                   "shed_on_full": {...}, "goodput_gain": x },
-//!     "closed_loop_parity_bit_identical": true }
+//!     "closed_loop_parity_bit_identical": true },
+//!   "obs": { "quantiles": [ { "workload": "slo_knee|fleet_scale",
+//!              "samples": N, "p50_exact_s": x, "p50_hist_s": x,
+//!              "p50_rel_err": x, "p99_exact_s": x, "p99_hist_s": x,
+//!              "p99_rel_err": x } ],
+//!     "recorder": { "devices": N, "events": N,
+//!       "plain_events_per_s": x, "traced_events_per_s": x,
+//!       "overhead_frac": 1 - traced/plain },
+//!     "memory": { "samples_1x": N, "hist_bytes_1x": N,
+//!       "samples_10x": N, "hist_bytes_10x": N, "growth": x },
+//!     "replay": { "events": N, "bit_identical": true } }
 //! }
 //! ```
 
@@ -94,9 +116,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use difflight::arch::ArchConfig;
+use difflight::cluster::trace::{check_against_report, parse_jsonl, replay};
 use difflight::cluster::{
     profile_step_costs, synthetic_workload, Cluster, ClusterConfig, ClusterOutcome,
-    ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor, StepScheduler,
+    ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor, StepScheduler, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
@@ -104,6 +127,7 @@ use difflight::runtime::manifest::NoiseSchedule;
 use difflight::dse::{explore, explore_uncached, explore_with, DesignSpace};
 use difflight::sim::CostCache;
 use difflight::util::json::Json;
+use difflight::util::stats;
 
 fn smoke_space() -> DesignSpace {
     DesignSpace {
@@ -510,6 +534,141 @@ fn main() {
          at overload (got {goodput_gain:.2}x)"
     );
 
+    // ---- (f) obs: streaming histograms + flight recorder ----
+    // The observability tier (ISSUE 6). Everything except the recorder
+    // overhead ratio is a deterministic simulated-time result, so the
+    // accuracy/memory/replay gates run in smoke mode too; the overhead
+    // gate is min-of-N host timing at 64 devices (matching the
+    // fleet-scale CI gate's flake resistance). `--obs` forces the
+    // full-size runs (`scripts/bench.sh --obs`).
+    let obs_full = !smoke || std::env::args().any(|a| a == "--obs");
+    harness::section(&format!("obs ({})", if obs_full { "full" } else { "smoke" }));
+
+    // Gate (a): histogram p50/p99 within 1% of the exact-vector
+    // percentiles — the live metrics keep only O(buckets) state, so
+    // the exact vector is rebuilt here from the per-request results.
+    let obs_scale_devices = if obs_full { 64 } else { 16 };
+    let fleet_scale_out = harness::fleet_scale_outcome(obs_scale_devices);
+    let mut obs_quantiles = Vec::new();
+    for (workload, out) in [("slo_knee", &kept), ("fleet_scale", &fleet_scale_out)] {
+        let exact: Vec<f64> = out.results.iter().map(|r| r.latency_s()).collect();
+        assert_eq!(exact.len() as u64, out.metrics.latency.count());
+        let mut entry = Json::obj().set("workload", workload).set("samples", exact.len());
+        for (p, label) in [(50.0, "p50"), (99.0, "p99")] {
+            let exact_v = stats::percentile(&exact, p);
+            let hist_v = out.metrics.latency.quantile(p);
+            let rel_err = if exact_v != 0.0 {
+                ((hist_v - exact_v) / exact_v).abs()
+            } else {
+                hist_v.abs()
+            };
+            println!(
+                "{workload} {label}: exact {exact_v:.6e}s, hist {hist_v:.6e}s \
+                 ({:.3}% rel err)",
+                100.0 * rel_err
+            );
+            assert!(
+                rel_err <= 0.01,
+                "{workload} {label}: histogram quantile must be within 1% of the \
+                 exact-vector percentile (got {:.3}%)",
+                100.0 * rel_err
+            );
+            entry = entry
+                .set(&format!("{label}_exact_s"), exact_v)
+                .set(&format!("{label}_hist_s"), hist_v)
+                .set(&format!("{label}_rel_err"), rel_err);
+        }
+        obs_quantiles.push(entry);
+    }
+
+    // Gate (b): flight-recorder overhead <= 5% events/sec at 64
+    // devices. The sink buffers Copy structs during the serve loop and
+    // formats nothing, so trace-on must stay within 5% of trace-off.
+    let obs_iters = if obs_full { 3 } else { 2 };
+    let (rec_events, _, plain_eps) =
+        harness::fleet_scale_time_core_traced(64, obs_iters, false, false);
+    let (traced_events, _, traced_eps) =
+        harness::fleet_scale_time_core_traced(64, obs_iters, false, true);
+    assert_eq!(rec_events, traced_events, "tracing must not change the schedule");
+    let overhead = 1.0 - traced_eps / plain_eps;
+    println!(
+        "recorder overhead at 64 devices: plain {plain_eps:.0} ev/s, traced \
+         {traced_eps:.0} ev/s ({:.1}%)",
+        100.0 * overhead
+    );
+    assert!(
+        overhead <= 0.05,
+        "flight recorder must cost <= 5% events/sec at 64 devices (got {:.1}%)",
+        100.0 * overhead
+    );
+
+    // Gate (c): metrics memory is O(buckets), not O(requests). A
+    // stationary workload 10x longer must not grow the serialized
+    // histogram materially (new samples land in occupied buckets), and
+    // the histogram must undercut the 8 bytes/sample a raw f64 vector
+    // would need.
+    let mem_requests = if obs_full { 400 } else { 200 };
+    let mem_rate = 0.6 * fleet_rate;
+    let mem_1x = harness::slo_drain(mem_rate, mem_requests, slo_s, false);
+    let mem_10x = harness::slo_drain(mem_rate, 10 * mem_requests, slo_s, false);
+    let bytes_1x = mem_1x.metrics.latency.to_json().to_string_compact().len();
+    let bytes_10x = mem_10x.metrics.latency.to_json().to_string_compact().len();
+    let growth = bytes_10x as f64 / bytes_1x as f64;
+    println!(
+        "metrics memory: {} samples -> {bytes_1x} hist bytes, {} samples -> \
+         {bytes_10x} hist bytes ({growth:.2}x for 10x the requests)",
+        mem_1x.results.len(),
+        mem_10x.results.len(),
+    );
+    assert!(
+        growth <= 2.0,
+        "histogram JSON must stay O(buckets): 10x the requests grew it {growth:.2}x"
+    );
+    assert!(
+        bytes_10x < mem_10x.results.len() * 8,
+        "histogram ({bytes_10x} bytes) must undercut a raw sample vector \
+         ({} samples x 8 bytes)",
+        mem_10x.results.len()
+    );
+
+    // Gate (d): trace replay round-trips bit-identically. A contended
+    // run (tight queues, deadline shedding, stealing) is traced,
+    // formatted as JSON lines, parsed back, and replayed; the
+    // reconstructed histograms and counters must match the live
+    // report's exported values exactly.
+    let replay_events = {
+        let cfg = ClusterConfig::with_devices(8)
+            .capacity(2)
+            .max_queue(4)
+            .policy(ShardPolicy::LeastLoaded)
+            .shed_late(true);
+        let costs = profile_step_costs(&cfg).expect("paper fleet must price");
+        let src = RequestSource::poisson(
+            if obs_full { 256 } else { 96 },
+            31,
+            SamplerKind::Ddim { steps: harness::SLO_STEPS },
+            2.0 * fleet_rate,
+        )
+        .with_slos(vec![slo_s, 4.0 * slo_s]);
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(1000), 256);
+        s.set_trace(TraceSink::new());
+        let live = s.serve_source(src, &mut SimExecutor).expect("traced serve");
+        let sink = s.take_trace().expect("sink survives the serve");
+        let parsed = parse_jsonl(&sink.to_jsonl()).expect("recorder output must parse");
+        assert_eq!(parsed, *sink.events(), "JSON-lines round trip must be lossless");
+        let rep = replay(&parsed);
+        let bad = check_against_report(&rep, &live.metrics.to_json());
+        assert!(bad.is_empty(), "trace replay diverged from the live report on {bad:?}");
+        println!(
+            "trace replay: {} events round-tripped, replayed metrics bit-identical \
+             ({} completions, {} shed)",
+            parsed.len(),
+            live.results.len(),
+            live.rejected.len(),
+        );
+        parsed.len()
+    };
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -611,6 +770,33 @@ fn main() {
                         .set("goodput_gain", goodput_gain),
                 )
                 .set("closed_loop_parity_bit_identical", true),
+        )
+        .set(
+            "obs",
+            Json::obj()
+                .set("quantiles", Json::Arr(obs_quantiles))
+                .set(
+                    "recorder",
+                    Json::obj()
+                        .set("devices", 64usize)
+                        .set("events", rec_events)
+                        .set("plain_events_per_s", plain_eps)
+                        .set("traced_events_per_s", traced_eps)
+                        .set("overhead_frac", overhead),
+                )
+                .set(
+                    "memory",
+                    Json::obj()
+                        .set("samples_1x", mem_1x.results.len())
+                        .set("hist_bytes_1x", bytes_1x)
+                        .set("samples_10x", mem_10x.results.len())
+                        .set("hist_bytes_10x", bytes_10x)
+                        .set("growth", growth),
+                )
+                .set(
+                    "replay",
+                    Json::obj().set("events", replay_events).set("bit_identical", true),
+                ),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

@@ -26,6 +26,7 @@
 //! zero hits, identical timings.
 
 use crate::arch::cost::Cost;
+use crate::util::histogram::LogHistogram;
 
 /// Identifier of a device within a cluster (dense, 0-based).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -114,6 +115,10 @@ pub struct Device {
     /// fleet sheds against the device closest to draining (see
     /// [`crate::cluster::router::min_drain_device`]).
     pub shed: u64,
+    /// Admission estimates quoted each time the router placed a request
+    /// on this device (fixed-size histogram; snapshotted into
+    /// [`crate::cluster::metrics::DeviceMetrics`]).
+    pub admission_est: LogHistogram,
 }
 
 impl Device {
@@ -162,6 +167,7 @@ impl Device {
             reuse_hits: 0,
             reuse_misses: 0,
             shed: 0,
+            admission_est: LogHistogram::new(),
         }
     }
 
@@ -223,6 +229,13 @@ impl Device {
             (1.0 + self.batch_marginal * (self.capacity - 1) as f64) / self.capacity as f64;
         let per_step_s = self.drain_ns() as f64 * 1e-9 * fused_per_sample_step;
         (occupants_ahead + 1) as f64 * steps as f64 * per_step_s
+    }
+
+    /// Record the admission estimate quoted when a request was placed
+    /// on this device (called by both scheduler cores at every
+    /// placement, so heap and reference histograms stay bit-identical).
+    pub fn record_admission_estimate(&mut self, est_s: f64) {
+        self.admission_est.record(est_s);
     }
 
     /// Will the next fused step run the full UNet? `force_full` is set by
@@ -297,6 +310,7 @@ impl Device {
         self.reuse_hits = 0;
         self.reuse_misses = 0;
         self.shed = 0;
+        self.admission_est = LogHistogram::new();
         self.cycle_pos = 0;
     }
 

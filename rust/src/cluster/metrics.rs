@@ -3,20 +3,27 @@
 //!
 //! All times are **simulated** seconds (the cluster's device clocks), so
 //! throughput/latency here compose with the `sim::report` numbers rather
-//! than with host wall-clock. Percentiles reuse [`crate::util::stats`].
+//! than with host wall-clock.
+//!
+//! Latency, queue-wait, and admission-estimate distributions live in
+//! fixed-size [`LogHistogram`]s rather than per-request vectors, so a
+//! serving window's metrics cost O(buckets) memory no matter how many
+//! requests flow through, and per-device → per-profile → fleet roll-ups
+//! are plain associative `merge`s (see `util::histogram` for the bucket
+//! layout and error bound).
 //!
 //! Every derived rate guards its denominator: a degenerate run (zero
 //! makespan, no completions, no ops — reachable via an all-zero-step
 //! workload that completes at admission) reports `0.0`, never NaN and
 //! never a panic.
 
+use crate::util::histogram::LogHistogram;
 use crate::util::json::Json;
-use crate::util::stats;
 
 use super::device::Device;
 
 /// Per-device accounting snapshot.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DeviceMetrics {
     pub id: usize,
     /// Index of the fleet profile group this device belongs to.
@@ -40,6 +47,13 @@ pub struct DeviceMetrics {
     /// the device closest to draining). Sums across the fleet to the
     /// total shed count.
     pub shed: u64,
+    /// End-to-end latency of completions retired by this device.
+    pub latency: LogHistogram,
+    /// Queue wait (arrival → first step) of those completions.
+    pub queue: LogHistogram,
+    /// Admission estimates quoted each time a request was placed on
+    /// this device (copied from the live device counter).
+    pub admission_est: LogHistogram,
 }
 
 impl DeviceMetrics {
@@ -57,6 +71,9 @@ impl DeviceMetrics {
             reuse_hits: d.reuse_hits,
             reuse_misses: d.reuse_misses,
             shed: d.shed,
+            latency: LogHistogram::new(),
+            queue: LogHistogram::new(),
+            admission_est: d.admission_est.clone(),
         }
     }
 
@@ -123,6 +140,10 @@ pub struct ProfileMetrics {
     /// Requests shed by admission control, attributed to this group's
     /// devices; the groups' counts sum to the fleet total.
     pub shed: u64,
+    /// Latency distribution of the group's completions — the merge of
+    /// its devices' histograms (roll-ups are associative, so this is
+    /// identical whatever order the devices fold in).
+    pub latency: LogHistogram,
 }
 
 impl ProfileMetrics {
@@ -180,6 +201,8 @@ impl ProfileMetrics {
             .set("reuse_hits", self.reuse_hits)
             .set("reuse_misses", self.reuse_misses)
             .set("shed", self.shed)
+            .set("latency_p50_s", self.latency.quantile(50.0))
+            .set("latency_p99_s", self.latency.quantile(99.0))
     }
 }
 
@@ -189,9 +212,14 @@ impl ProfileMetrics {
 /// control cannot inflate attainment by dropping work.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ClassMetrics {
+    /// Interned class id. Service classes are u8 SLO-tier indices end
+    /// to end — no string key is ever built on the completion hot path
+    /// (see `per_class_json_is_keyed_by_interned_ids` for the
+    /// regression test pinning the JSON output).
     pub class: u8,
-    /// End-to-end simulated latency of every completion in this class.
-    pub latencies_s: Vec<f64>,
+    /// End-to-end simulated latency distribution of this class's
+    /// completions (fixed-size, mergeable).
+    pub latency: LogHistogram,
     /// Completions that carried a deadline.
     pub tracked: u64,
     /// Completions that carried a deadline and met it.
@@ -204,7 +232,7 @@ pub struct ClassMetrics {
 
 impl ClassMetrics {
     pub fn completed(&self) -> u64 {
-        self.latencies_s.len() as u64
+        self.latency.count()
     }
 
     /// SLO attainment over offered deadline-carrying requests: attained
@@ -222,12 +250,12 @@ impl ClassMetrics {
     /// p50 latency of this class's completions; 0.0 when none (and the
     /// single-completion run degenerates to that completion's latency).
     pub fn latency_p50_s(&self) -> f64 {
-        stats::percentile(&self.latencies_s, 50.0)
+        self.latency.quantile(50.0)
     }
 
     /// p99 latency of this class's completions; 0.0 when none.
     pub fn latency_p99_s(&self) -> f64 {
-        stats::percentile(&self.latencies_s, 99.0)
+        self.latency.quantile(99.0)
     }
 
     pub fn to_json(&self) -> Json {
@@ -248,10 +276,10 @@ impl ClassMetrics {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetMetrics {
     pub devices: Vec<DeviceMetrics>,
-    /// End-to-end simulated latency per completed request.
-    pub latencies_s: Vec<f64>,
+    /// End-to-end simulated latency distribution across all completions.
+    pub latency: LogHistogram,
     /// Simulated queueing delay (arrival → first denoise step).
-    pub queue_s: Vec<f64>,
+    pub queue: LogHistogram,
     /// Simulated makespan of the active serving window (first arrival →
     /// last completion).
     pub makespan_s: f64,
@@ -273,15 +301,13 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
+    /// Class roll-ups are keyed by the interned u8 tier id (sorted,
+    /// binary-searched) — no string key is ever allocated per
+    /// completion on the hot path.
     fn class_entry(&mut self, class: u8) -> &mut ClassMetrics {
-        let idx = match self.classes.iter().position(|c| c.class == class) {
-            Some(i) => i,
-            None => {
-                let i = self
-                    .classes
-                    .iter()
-                    .position(|c| c.class > class)
-                    .unwrap_or(self.classes.len());
+        let idx = match self.classes.binary_search_by_key(&class, |c| c.class) {
+            Ok(i) => i,
+            Err(i) => {
                 self.classes.insert(i, ClassMetrics { class, ..Default::default() });
                 i
             }
@@ -290,22 +316,29 @@ impl FleetMetrics {
     }
 
     /// Record a completion. `deadline_met` is `None` for requests with
-    /// no deadline, `Some(met)` otherwise.
+    /// no deadline, `Some(met)` otherwise; `device` is the device that
+    /// retired the request (ignored when out of range, e.g. in
+    /// device-less unit fixtures).
     pub fn record_completion(
         &mut self,
         latency_s: f64,
         queue_s: f64,
         class: u8,
         deadline_met: Option<bool>,
+        device: usize,
     ) {
-        self.latencies_s.push(latency_s);
-        self.queue_s.push(queue_s);
+        self.latency.record(latency_s);
+        self.queue.record(queue_s);
+        if let Some(d) = self.devices.get_mut(device) {
+            d.latency.record(latency_s);
+            d.queue.record(queue_s);
+        }
         self.samples_completed += 1;
         if deadline_met != Some(false) {
             self.good_completions += 1;
         }
         let entry = self.class_entry(class);
-        entry.latencies_s.push(latency_s);
+        entry.latency.record(latency_s);
         if let Some(met) = deadline_met {
             entry.tracked += 1;
             entry.attained += met as u64;
@@ -359,12 +392,17 @@ impl FleetMetrics {
 
     /// p50 end-to-end latency; 0.0 when nothing completed.
     pub fn latency_p50_s(&self) -> f64 {
-        stats::percentile(&self.latencies_s, 50.0)
+        self.latency.quantile(50.0)
     }
 
     /// p99 end-to-end latency; 0.0 when nothing completed.
     pub fn latency_p99_s(&self) -> f64 {
-        stats::percentile(&self.latencies_s, 99.0)
+        self.latency.quantile(99.0)
+    }
+
+    /// Mean queueing delay; 0.0 when nothing completed.
+    pub fn queue_mean_s(&self) -> f64 {
+        self.queue.mean()
     }
 
     /// Fleet energy per bit: total energy over total data bits moved
@@ -434,6 +472,7 @@ impl FleetMetrics {
                         reuse_hits: 0,
                         reuse_misses: 0,
                         shed: 0,
+                        latency: LogHistogram::new(),
                     });
                     groups.last_mut().expect("just pushed")
                 }
@@ -447,9 +486,24 @@ impl FleetMetrics {
             group.reuse_hits += d.reuse_hits;
             group.reuse_misses += d.reuse_misses;
             group.shed += d.shed;
+            group.latency.merge(&d.latency);
         }
         groups.sort_by_key(|g| g.profile);
         groups
+    }
+
+    /// The fleet latency distribution rebuilt purely from per-device
+    /// histograms (per-device → per-profile → fleet). Because `merge`
+    /// is associative and quantiles read only bucket counts, this
+    /// agrees with `self.latency` bucket-for-bucket whenever every
+    /// completion was attributed to a device — the property the future
+    /// sharded core relies on.
+    pub fn rolled_up_latency(&self) -> LogHistogram {
+        let mut total = LogHistogram::new();
+        for g in self.per_profile() {
+            total.merge(&g.latency);
+        }
+        total
     }
 
     /// JSON report, exported alongside the `sim::report` output so bench
@@ -466,7 +520,9 @@ impl FleetMetrics {
             .set("slo_attainment", self.slo_attainment())
             .set("latency_p50_s", self.latency_p50_s())
             .set("latency_p99_s", self.latency_p99_s())
-            .set("queue_mean_s", stats::mean(&self.queue_s))
+            .set("queue_mean_s", self.queue_mean_s())
+            .set("latency_hist", self.latency.to_json())
+            .set("queue_hist", self.queue.to_json())
             .set("fleet_gops", self.fleet_gops())
             .set("fleet_epb_j_per_bit", self.fleet_epb())
             .set("reuse_hits", self.reuse_hits())
@@ -515,6 +571,7 @@ mod tests {
             reuse_hits: 6,
             reuse_misses: 4,
             shed: 0,
+            ..Default::default()
         }
     }
 
@@ -525,8 +582,8 @@ mod tests {
             bit_width: 8,
             ..Default::default()
         };
-        m.record_completion(1.0, 0.25, 0, None);
-        m.record_completion(3.0, 0.75, 0, None);
+        m.record_completion(1.0, 0.25, 0, None, 0);
+        m.record_completion(3.0, 0.75, 0, None, 1);
         m
     }
 
@@ -539,7 +596,10 @@ mod tests {
         assert!((m.goodput_samples_per_s() - 0.5).abs() < 1e-12);
         assert_eq!(m.slo_attainment(), 0.0);
         assert!(!m.any_slo_tracked());
-        assert!((m.latency_p50_s() - 2.0).abs() < 1e-12);
+        // p50 of [1.0, 3.0] interpolates to 2.0; the histogram answers
+        // from bucket midpoints, within its 1% error bound.
+        assert!((m.latency_p50_s() - 2.0).abs() <= 0.02);
+        assert!((m.queue_mean_s() - 0.5).abs() < 1e-12);
         // 4 Gops over 4 s makespan → 1 GOPS aggregate.
         assert!((m.fleet_gops() - 1.0).abs() < 1e-12);
         // 16 J over 4e9 ops * 8 bits.
@@ -661,7 +721,7 @@ mod tests {
         // control sheds everything but one request) must report p50 ==
         // p99 == that request's latency, fleet-wide and per-class.
         let mut m = FleetMetrics { makespan_s: 2.0, ..Default::default() };
-        m.record_completion(0.125, 0.0, 3, Some(true));
+        m.record_completion(0.125, 0.0, 3, Some(true), 0);
         assert_eq!(m.latency_p50_s(), 0.125);
         assert_eq!(m.latency_p99_s(), 0.125);
         assert_eq!(m.classes.len(), 1);
@@ -704,12 +764,12 @@ mod tests {
     fn per_class_attainment_counts_sheds_as_misses() {
         let mut m = FleetMetrics { makespan_s: 10.0, ..Default::default() };
         // Class 0: two met, one missed, one tracked shed → 2/4.
-        m.record_completion(1.0, 0.0, 0, Some(true));
-        m.record_completion(1.5, 0.0, 0, Some(true));
-        m.record_completion(9.0, 0.0, 0, Some(false));
+        m.record_completion(1.0, 0.0, 0, Some(true), 0);
+        m.record_completion(1.5, 0.0, 0, Some(true), 0);
+        m.record_completion(9.0, 0.0, 0, Some(false), 0);
         m.record_shed(0, true);
         // Class 1: one met → 1/1. An untracked shed changes nothing.
-        m.record_completion(2.0, 0.0, 1, Some(true));
+        m.record_completion(2.0, 0.0, 1, Some(true), 0);
         m.record_shed(1, false);
         assert_eq!(m.classes.len(), 2);
         assert_eq!(m.classes[0].attainment(), 0.5);
@@ -719,9 +779,50 @@ mod tests {
         // Goodput counts only the three deadline-meeting completions.
         assert!((m.goodput_samples_per_s() - 0.3).abs() < 1e-12);
         // Classes insert sorted regardless of first-seen order.
-        m.record_completion(1.0, 0.0, 5, None);
+        m.record_completion(1.0, 0.0, 5, None, 0);
         m.record_shed(2, true);
         let order: Vec<u8> = m.classes.iter().map(|c| c.class).collect();
         assert_eq!(order, [0, 1, 2, 5]);
+    }
+
+    #[test]
+    fn per_class_json_is_keyed_by_interned_ids() {
+        // ISSUE 6 satellite regression: class attribution works on
+        // interned u8 tier ids (no per-completion string keys), and the
+        // per-class JSON output is exactly what it was with vectors —
+        // same keys, same order, numeric class ids, exact counts.
+        let mut m = FleetMetrics { makespan_s: 4.0, ..Default::default() };
+        m.record_completion(0.5, 0.0, 2, Some(true), 0);
+        m.record_completion(0.5, 0.0, 2, Some(false), 0);
+        m.record_shed(0, true);
+        let per_class = m.to_json().get("per_class").cloned().expect("per_class");
+        let arr = per_class.as_arr().expect("array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[0].to_string_compact(),
+            r#"{"class":0,"samples":0,"tracked":0,"attained":0,"shed":1,"attainment":0,"latency_p50_s":0,"latency_p99_s":0}"#
+        );
+        assert_eq!(arr[1].get("class").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(arr[1].get("samples").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(arr[1].get("attainment").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(arr[1].get("latency_p50_s").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn device_roll_up_matches_fleet_histogram() {
+        // Per-device → per-profile → fleet merges must rebuild exactly
+        // the fleet-wide distribution (same buckets, same counts, same
+        // quantiles) when every completion is device-attributed.
+        let mut m = fleet();
+        m.devices[1].profile = 1;
+        m.record_completion(0.75, 0.1, 1, None, 0);
+        m.record_completion(2.25, 0.2, 1, None, 1);
+        let rolled = m.rolled_up_latency();
+        assert_eq!(rolled.count(), m.latency.count());
+        assert_eq!(rolled.min(), m.latency.min());
+        assert_eq!(rolled.max(), m.latency.max());
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(rolled.quantile(p), m.latency.quantile(p));
+        }
     }
 }

@@ -44,6 +44,7 @@ pub mod profile;
 pub mod reference;
 pub mod router;
 pub mod scheduler;
+pub mod trace;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
 pub use load::{apply_slos, synthetic_workload, RequestSource};
@@ -54,6 +55,7 @@ pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
 pub use scheduler::{
     ClusterOutcome, ClusterRequest, ClusterResult, SimExecutor, StepExecutor, StepScheduler,
 };
+pub use trace::{TraceEvent, TraceSink};
 
 use std::sync::Arc;
 
@@ -354,6 +356,17 @@ impl Cluster {
 
     pub fn device_count(&self) -> usize {
         self.scheduler.device_count()
+    }
+
+    /// Install a flight recorder for subsequent serve windows (see
+    /// [`trace::TraceSink`]); recording is cleared at each window start.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.scheduler.set_trace(sink);
+    }
+
+    /// Detach the flight recorder (with everything it captured).
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.scheduler.take_trace()
     }
 }
 

@@ -31,6 +31,7 @@ use super::scheduler::{
     zero_step_result, ClusterOutcome, ClusterRequest, ClusterResult, Slot, SlotSampler,
     StepExecutor,
 };
+use super::trace::{emit, TraceEvent, TraceSink};
 use super::ClusterConfig;
 
 /// The reference fleet scheduler: devices + stateless router + O(N)
@@ -56,6 +57,9 @@ pub struct ReferenceScheduler {
     /// every device when cost-aware routing is off (occupancy-only).
     drain_ns: Vec<u64>,
     events_processed: u64,
+    /// Opt-in flight recorder (mirrors the heap core: same events, same
+    /// order, so parity suites can assert trace bit-identity too).
+    trace: Option<TraceSink>,
 }
 
 impl ReferenceScheduler {
@@ -96,11 +100,23 @@ impl ReferenceScheduler {
             shed_log: Vec::new(),
             drain_ns,
             events_processed: 0,
+            trace: None,
         }
     }
 
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Install a flight recorder; subsequent serve windows record into
+    /// it (cleared at each window start).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// Detach the flight recorder (with everything it captured).
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.trace.take()
     }
 
     /// Occupancy snapshot for the router — rebuilt (and reallocated) on
@@ -144,6 +160,9 @@ impl ReferenceScheduler {
         }
         self.events_processed = 0;
         self.shed_log.clear();
+        if let Some(sink) = &mut self.trace {
+            sink.clear();
+        }
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();
         let mut first_arrival_s: Option<f64> = None;
@@ -180,7 +199,7 @@ impl ReferenceScheduler {
         }
 
         while let Some(slot) = self.backlog.pop_front() {
-            self.attribute_shed(None, &slot.req);
+            self.attribute_shed(slot.req.arrival_s, None, &slot.req);
             rejected.push(slot.req.id);
         }
 
@@ -196,7 +215,13 @@ impl ReferenceScheduler {
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
         for r in &results {
-            metrics.record_completion(r.latency_s(), r.queue_s(), r.class, r.deadline_met());
+            metrics.record_completion(
+                r.latency_s(),
+                r.queue_s(),
+                r.class,
+                r.deadline_met(),
+                r.device.0,
+            );
         }
         for &(class, tracked) in &self.shed_log {
             metrics.record_shed(class, tracked);
@@ -207,10 +232,20 @@ impl ReferenceScheduler {
     /// Shed attribution by full scan (mirrors the heap core's rule:
     /// deadline sheds → the routed device, full-fleet sheds → the device
     /// closest to draining).
-    fn attribute_shed(&mut self, routed: Option<usize>, req: &ClusterRequest) {
+    fn attribute_shed(&mut self, now_s: f64, routed: Option<usize>, req: &ClusterRequest) {
         let di = routed.or_else(|| min_drain_device(&self.loads())).unwrap_or(0);
         self.devices[di].shed += 1;
         self.shed_log.push((req.class, req.deadline_s.is_some()));
+        emit(
+            &mut self.trace,
+            TraceEvent::Shed {
+                t: now_s,
+                id: req.id.0,
+                class: req.class,
+                device: di,
+                tracked: req.deadline_s.is_some(),
+            },
+        );
     }
 
     fn admit(
@@ -220,9 +255,25 @@ impl ReferenceScheduler {
         rejected: &mut Vec<RequestId>,
         results: &mut Vec<ClusterResult>,
     ) {
+        emit(
+            &mut self.trace,
+            TraceEvent::Admit { t: req.arrival_s, id: req.id.0, class: req.class },
+        );
         if req.is_zero_step() {
             let r = zero_step_result(&req, self.elems);
             source.on_done(r.id, r.finish_s);
+            emit(
+                &mut self.trace,
+                TraceEvent::Complete {
+                    t: r.finish_s,
+                    id: r.id.0,
+                    class: r.class,
+                    device: -1,
+                    latency_s: r.latency_s(),
+                    queue_s: r.queue_s(),
+                    deadline_met: r.deadline_met(),
+                },
+            );
             results.push(r);
             return;
         }
@@ -237,23 +288,53 @@ impl ReferenceScheduler {
                             > deadline_s
                     });
                 if doomed {
-                    self.attribute_shed(Some(did.0), &slot.req);
+                    self.attribute_shed(slot.req.arrival_s, Some(did.0), &slot.req);
                     source.on_done(slot.req.id, slot.req.arrival_s);
                     rejected.push(slot.req.id);
                     return;
                 }
-                self.queued[did.0].push_back(slot);
+                self.enqueue(slot.req.arrival_s, did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
                 let slot = self.make_slot(req);
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Requeue {
+                        t: slot.req.arrival_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                    },
+                );
                 self.backlog.push_back(slot);
             }
             None => {
-                self.attribute_shed(None, &req);
+                self.attribute_shed(req.arrival_s, None, &req);
                 source.on_done(req.id, req.arrival_s);
                 rejected.push(req.id);
             }
         }
+    }
+
+    /// Queue a slot on a device, quoting the same admission-time
+    /// completion estimate the heap core quotes (pre-insert occupancy ×
+    /// drain weight, generation-scaled) into the device's
+    /// `admission_est` histogram — the histograms must stay
+    /// bit-identical between the two cores.
+    fn enqueue(&mut self, now_s: f64, di: usize, slot: Slot) {
+        let ahead = self.resident[di].len() + self.queued[di].len();
+        let est_s = self.devices[di].admission_estimate_s(ahead, slot.timesteps.len());
+        self.devices[di].record_admission_estimate(est_s);
+        emit(
+            &mut self.trace,
+            TraceEvent::Route {
+                t: now_s,
+                id: slot.req.id.0,
+                class: slot.req.class,
+                device: di,
+                est_s,
+            },
+        );
+        self.queued[di].push_back(slot);
     }
 
     fn make_slot(&mut self, req: ClusterRequest) -> Slot {
@@ -293,12 +374,12 @@ impl ReferenceScheduler {
                                 > deadline_s
                         });
                     if doomed {
-                        self.attribute_shed(Some(did.0), &slot.req);
+                        self.attribute_shed(now_s, Some(did.0), &slot.req);
                         source.on_done(slot.req.id, now_s);
                         rejected.push(slot.req.id);
                         continue;
                     }
-                    self.queued[did.0].push_back(slot);
+                    self.enqueue(now_s, did.0, slot);
                 }
                 None => break,
             }
@@ -315,7 +396,7 @@ impl ReferenceScheduler {
                 && self.queued[di].is_empty()
                 && self.resident[di].is_empty()
             {
-                self.steal_into(di);
+                self.steal_into(now_s, di);
             }
             if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
                 self.start_step(di, now_s, executor)?;
@@ -328,7 +409,7 @@ impl ReferenceScheduler {
     /// represents the most drain time (queued × per-device weight), ties
     /// toward the lowest donor id. The thief fills up to its *own*
     /// capacity, so capacity-asymmetric fleets steal correctly.
-    fn steal_into(&mut self, di: usize) {
+    fn steal_into(&mut self, now_s: f64, di: usize) {
         while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
             let donor = (0..self.devices.len())
                 .filter(|&j| j != di && !self.devices[j].is_idle() && !self.queued[j].is_empty())
@@ -340,6 +421,16 @@ impl ReferenceScheduler {
                 });
             let Some(j) = donor else { break };
             let slot = self.queued[j].pop_front().expect("donor queue non-empty");
+            emit(
+                &mut self.trace,
+                TraceEvent::Steal {
+                    t: now_s,
+                    id: slot.req.id.0,
+                    class: slot.req.class,
+                    device: di,
+                    from: j,
+                },
+            );
             self.queued[di].push_back(slot);
         }
     }
@@ -360,7 +451,7 @@ impl ReferenceScheduler {
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
                 source.on_done(slot.req.id, now_s);
-                results.push(ClusterResult {
+                let r = ClusterResult {
                     id: slot.req.id,
                     device: DeviceId(di),
                     sample: slot.x,
@@ -372,7 +463,20 @@ impl ReferenceScheduler {
                     full_steps: slot.full_steps as usize,
                     class: slot.req.class,
                     deadline_s: slot.req.deadline_s,
-                });
+                };
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Complete {
+                        t: now_s,
+                        id: r.id.0,
+                        class: r.class,
+                        device: di as i64,
+                        latency_s: r.latency_s(),
+                        queue_s: r.queue_s(),
+                        deadline_met: r.deadline_met(),
+                    },
+                );
+                results.push(r);
             } else {
                 still_resident.push(slot);
             }
@@ -400,6 +504,20 @@ impl ReferenceScheduler {
 
         let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
         let full = self.devices[di].next_step_full(force_full);
+        if self.trace.is_some() {
+            for slot in &self.resident[di] {
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Step {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        full,
+                    },
+                );
+            }
+        }
 
         // Fresh x/t/eps allocations every fused step (the cost the
         // zero-alloc path removes).

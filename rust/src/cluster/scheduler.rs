@@ -80,6 +80,7 @@ use super::device::{Device, DeviceId};
 use super::load::RequestSource;
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::router::{min_drain_device, DeviceLoad, RouterIndex};
+use super::trace::{emit, TraceEvent, TraceSink};
 use super::ClusterConfig;
 
 /// A generation request with a simulated arrival time and (optionally)
@@ -432,6 +433,10 @@ pub struct StepScheduler {
     t_buf: Vec<f32>,
     eps_buf: Vec<f32>,
     retire_scratch: Vec<Slot>,
+    /// Opt-in flight recorder: when installed, every lifecycle decision
+    /// is buffered as a [`TraceEvent`] (a plain `Vec` push — JSON-lines
+    /// formatting happens post-serve, off the hot path).
+    trace: Option<TraceSink>,
 }
 
 impl StepScheduler {
@@ -486,11 +491,23 @@ impl StepScheduler {
             t_buf: Vec::new(),
             eps_buf: Vec::new(),
             retire_scratch: Vec::new(),
+            trace: None,
         }
     }
 
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Install a flight recorder; subsequent serve windows record into
+    /// it (cleared at each window start).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// Detach the flight recorder (with everything it captured).
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.trace.take()
     }
 
     /// Serve a materialized workload to completion. Requests may arrive
@@ -529,6 +546,9 @@ impl StepScheduler {
             .reset_occupancy(blank_loads(&self.devices, self.cost_aware));
         self.events_processed = 0;
         self.shed_log.clear();
+        if let Some(sink) = &mut self.trace {
+            sink.clear();
+        }
 
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();
@@ -583,7 +603,7 @@ impl StepScheduler {
         // (can only happen with a backlog bound tighter than the fleet).
         // The serving window is over, so no completion feedback fires.
         while let Some(slot) = self.backlog.pop_front() {
-            self.attribute_shed(None, &slot.req);
+            self.attribute_shed(slot.req.arrival_s, None, &slot.req);
             rejected.push(slot.req.id);
         }
 
@@ -601,7 +621,13 @@ impl StepScheduler {
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
         for r in &results {
-            metrics.record_completion(r.latency_s(), r.queue_s(), r.class, r.deadline_met());
+            metrics.record_completion(
+                r.latency_s(),
+                r.queue_s(),
+                r.class,
+                r.deadline_met(),
+                r.device.0,
+            );
         }
         for &(class, tracked) in &self.shed_log {
             metrics.record_shed(class, tracked);
@@ -627,12 +653,22 @@ impl StepScheduler {
     /// picked for a deadline shed; `None` (every device full, or the
     /// end-of-window backlog drain) attributes to the device closest to
     /// draining — the one that would have taken the request next.
-    fn attribute_shed(&mut self, routed: Option<usize>, req: &ClusterRequest) {
+    fn attribute_shed(&mut self, now_s: f64, routed: Option<usize>, req: &ClusterRequest) {
         let di = routed
             .or_else(|| min_drain_device(self.index.loads()))
             .unwrap_or(0);
         self.devices[di].shed += 1;
         self.shed_log.push((req.class, req.deadline_s.is_some()));
+        emit(
+            &mut self.trace,
+            TraceEvent::Shed {
+                t: now_s,
+                id: req.id.0,
+                class: req.class,
+                device: di,
+                tracked: req.deadline_s.is_some(),
+            },
+        );
     }
 
     /// Route one arriving request into a device queue, defer it to the
@@ -648,9 +684,25 @@ impl StepScheduler {
         rejected: &mut Vec<RequestId>,
         results: &mut Vec<ClusterResult>,
     ) {
+        emit(
+            &mut self.trace,
+            TraceEvent::Admit { t: req.arrival_s, id: req.id.0, class: req.class },
+        );
         if req.is_zero_step() {
             let r = zero_step_result(&req, self.elems);
             source.on_done(r.id, r.finish_s);
+            emit(
+                &mut self.trace,
+                TraceEvent::Complete {
+                    t: r.finish_s,
+                    id: r.id.0,
+                    class: r.class,
+                    device: -1,
+                    latency_s: r.latency_s(),
+                    queue_s: r.queue_s(),
+                    deadline_met: r.deadline_met(),
+                },
+            );
             results.push(r);
             return;
         }
@@ -661,19 +713,27 @@ impl StepScheduler {
                 // completion on the routed device misses its deadline,
                 // instead of burning batch slots on doomed work.
                 if self.shed_late && self.doomed_at(did.0, &slot, slot.req.arrival_s) {
-                    self.attribute_shed(Some(did.0), &slot.req);
+                    self.attribute_shed(slot.req.arrival_s, Some(did.0), &slot.req);
                     source.on_done(slot.req.id, slot.req.arrival_s);
                     rejected.push(slot.req.id);
                     return;
                 }
-                self.enqueue(did.0, slot);
+                self.enqueue(slot.req.arrival_s, did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
                 let slot = self.make_slot(req);
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Requeue {
+                        t: slot.req.arrival_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                    },
+                );
                 self.backlog.push_back(slot);
             }
             None => {
-                self.attribute_shed(None, &req);
+                self.attribute_shed(req.arrival_s, None, &req);
                 source.on_done(req.id, req.arrival_s);
                 rejected.push(req.id);
             }
@@ -713,8 +773,25 @@ impl StepScheduler {
     }
 
     /// Push a slot onto a device's admission queue, syncing the router
-    /// index and marking the device for the next kick.
-    fn enqueue(&mut self, di: usize, slot: Slot) {
+    /// index and marking the device for the next kick. Every placement
+    /// quotes an admission-time completion estimate (occupancy ahead ×
+    /// drain weight, generation-scaled) into the device's
+    /// `admission_est` histogram — the same estimate `shed_late`
+    /// admission control thresholds against.
+    fn enqueue(&mut self, now_s: f64, di: usize, slot: Slot) {
+        let ahead = self.index.load(di).total();
+        let est_s = self.devices[di].admission_estimate_s(ahead, slot.timesteps.len());
+        self.devices[di].record_admission_estimate(est_s);
+        emit(
+            &mut self.trace,
+            TraceEvent::Route {
+                t: now_s,
+                id: slot.req.id.0,
+                class: slot.req.class,
+                device: di,
+                est_s,
+            },
+        );
         self.queued[di].push_back(slot);
         self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
         self.dirty.insert(di);
@@ -738,12 +815,12 @@ impl StepScheduler {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
                     if self.shed_late && self.doomed_at(did.0, &slot, now_s) {
-                        self.attribute_shed(Some(did.0), &slot.req);
+                        self.attribute_shed(now_s, Some(did.0), &slot.req);
                         source.on_done(slot.req.id, now_s);
                         rejected.push(slot.req.id);
                         continue;
                     }
-                    self.enqueue(did.0, slot);
+                    self.enqueue(now_s, did.0, slot);
                 }
                 None => break,
             }
@@ -773,7 +850,7 @@ impl StepScheduler {
                     && self.queued[di].is_empty()
                     && self.resident[di].is_empty()
                 {
-                    self.steal_into(di);
+                    self.steal_into(now_s, di);
                 }
                 if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
                     self.start_step(di, now_s, executor)?;
@@ -800,12 +877,22 @@ impl StepScheduler {
     /// full step; an idle donor starts its own work this same boundary).
     /// Deterministic: ties break toward the lowest donor id. The donor
     /// is an O(log N) index query, not a fleet scan.
-    fn steal_into(&mut self, di: usize) {
+    fn steal_into(&mut self, now_s: f64, di: usize) {
         while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
             // `di` is idle, so it can never be its own donor.
             let Some(j) = self.index.max_donor() else { break };
             let slot = self.queued[j].pop_front().expect("donor queue non-empty");
             self.index.set_counts(j, self.resident[j].len(), self.queued[j].len());
+            emit(
+                &mut self.trace,
+                TraceEvent::Steal {
+                    t: now_s,
+                    id: slot.req.id.0,
+                    class: slot.req.class,
+                    device: di,
+                    from: j,
+                },
+            );
             self.queued[di].push_back(slot);
             self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
         }
@@ -831,7 +918,7 @@ impl StepScheduler {
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
                 source.on_done(slot.req.id, now_s);
-                results.push(ClusterResult {
+                let r = ClusterResult {
                     id: slot.req.id,
                     device: DeviceId(di),
                     sample: slot.x,
@@ -843,7 +930,20 @@ impl StepScheduler {
                     full_steps: slot.full_steps as usize,
                     class: slot.req.class,
                     deadline_s: slot.req.deadline_s,
-                });
+                };
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Complete {
+                        t: now_s,
+                        id: r.id.0,
+                        class: r.class,
+                        device: di as i64,
+                        latency_s: r.latency_s(),
+                        queue_s: r.queue_s(),
+                        deadline_met: r.deadline_met(),
+                    },
+                );
+                results.push(r);
             } else {
                 still_resident.push(slot);
             }
@@ -891,6 +991,20 @@ impl StepScheduler {
         // results stay bit-identical across reuse intervals.
         let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
         let full = self.devices[di].next_step_full(force_full);
+        if self.trace.is_some() {
+            for slot in &self.resident[di] {
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Step {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        full,
+                    },
+                );
+            }
+        }
 
         // Fused UNet call over the reusable batch buffers: one t per row
         // (rows may sit at different denoise depths — that is the whole
@@ -1487,6 +1601,8 @@ mod tests {
                             StepScheduler::new(&cfg, &costs, schedule.clone(), 16);
                         let mut reference =
                             ReferenceScheduler::new(&cfg, &costs, schedule, 16);
+                        heap.set_trace(TraceSink::new());
+                        reference.set_trace(TraceSink::new());
                         let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
                         let b = reference.serve(reqs, &mut SimExecutor).unwrap();
                         assert_eq!(a.rejected, b.rejected, "shed set diverged");
@@ -1506,6 +1622,44 @@ mod tests {
                             );
                         }
                         assert_eq!(a.metrics, b.metrics, "metrics diverged");
+                        // ISSUE 6 satellite: assert histogram
+                        // bit-identity explicitly (same buckets, same
+                        // counts), not just via the parent PartialEq.
+                        assert_eq!(a.metrics.latency.to_json(), b.metrics.latency.to_json());
+                        assert_eq!(a.metrics.queue.to_json(), b.metrics.queue.to_json());
+                        for (da, db) in a.metrics.devices.iter().zip(&b.metrics.devices) {
+                            assert_eq!(da.latency.to_json(), db.latency.to_json());
+                            assert_eq!(da.queue.to_json(), db.queue.to_json());
+                            assert_eq!(
+                                da.admission_est.to_json(),
+                                db.admission_est.to_json(),
+                                "admission-estimate histograms diverged"
+                            );
+                        }
+                        for (ca, cb) in a.metrics.classes.iter().zip(&b.metrics.classes) {
+                            assert_eq!(ca.latency.to_json(), cb.latency.to_json());
+                        }
+                        // Flight recorder: both cores must log the same
+                        // lifecycle decisions in the same order.
+                        let ta = heap.take_trace().expect("heap trace");
+                        let tb = reference.take_trace().expect("reference trace");
+                        assert_eq!(ta.events(), tb.events(), "traces diverged");
+                        // And a trace alone must replay the run's
+                        // distributional metrics bit-identically.
+                        let rep = crate::cluster::trace::replay(ta.events());
+                        assert_eq!(rep.metrics.latency, a.metrics.latency);
+                        assert_eq!(rep.metrics.queue, a.metrics.queue);
+                        assert_eq!(rep.metrics.classes, a.metrics.classes);
+                        assert_eq!(rep.metrics.samples_completed, a.metrics.samples_completed);
+                        assert_eq!(rep.metrics.rejected, a.metrics.rejected);
+                        assert_eq!(rep.metrics.makespan_s, a.metrics.makespan_s);
+                        for (dr, dl) in rep.metrics.devices.iter().zip(&a.metrics.devices) {
+                            assert_eq!(dr.latency, dl.latency);
+                            assert_eq!(dr.queue, dl.queue);
+                            assert_eq!(dr.admission_est, dl.admission_est);
+                            assert_eq!(dr.shed, dl.shed);
+                            assert_eq!(dr.samples_completed, dl.samples_completed);
+                        }
                     });
                 }
             }
@@ -1589,6 +1743,16 @@ mod tests {
                     );
                 }
                 assert_eq!(a.metrics, b.metrics, "metrics diverged");
+                // Histogram bit-identity across the two cores, profile
+                // roll-ups included (merge order must not matter).
+                assert_eq!(a.metrics.latency.to_json(), b.metrics.latency.to_json());
+                assert_eq!(a.metrics.queue.to_json(), b.metrics.queue.to_json());
+                for (ga, gb) in a.metrics.per_profile().iter().zip(&b.metrics.per_profile()) {
+                    assert_eq!(ga.latency.to_json(), gb.latency.to_json());
+                }
+                for (da, db) in a.metrics.devices.iter().zip(&b.metrics.devices) {
+                    assert_eq!(da.admission_est.to_json(), db.admission_est.to_json());
+                }
             });
         }
     }
@@ -1876,7 +2040,57 @@ mod tests {
                 );
             }
             assert_eq!(a.metrics, b.metrics, "metrics diverged");
+            // Histogram bit-identity: same buckets, same counts, in the
+            // closed loop too — the arrival feedback loop must not skew
+            // either core's distributions.
+            assert_eq!(a.metrics.latency.to_json(), b.metrics.latency.to_json());
+            assert_eq!(a.metrics.queue.to_json(), b.metrics.queue.to_json());
+            for (da, db) in a.metrics.devices.iter().zip(&b.metrics.devices) {
+                assert_eq!(da.latency.to_json(), db.latency.to_json());
+                assert_eq!(da.admission_est.to_json(), db.admission_est.to_json());
+            }
         });
+    }
+
+    #[test]
+    fn trace_jsonl_round_trip_replays_live_metrics() {
+        // Flight-recorder round trip: serve with a sink attached, format
+        // the buffer as JSON lines, parse it back, replay it, and the
+        // reconstructed histograms/counters must equal the live run
+        // bit-for-bit (f64s survive via shortest-round-trip formatting).
+        use crate::cluster::trace::{parse_jsonl, replay};
+        let cfg = ClusterConfig::with_devices(3)
+            .capacity(2)
+            .max_queue(2)
+            .backlog(4)
+            .stealing(true)
+            .shed_late(true);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let src = RequestSource::burst(40, 99, SamplerKind::Ddim { steps: 6 }, 2500.0, 0.5)
+            .with_slos(vec![4e-3, 60e-3]);
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        s.set_trace(TraceSink::new());
+        let out = s.serve_source(src, &mut SimExecutor).unwrap();
+        let sink = s.take_trace().expect("sink survives the serve window");
+        assert!(!sink.is_empty(), "a contended burst must emit events");
+        let text = sink.to_jsonl();
+        let parsed = parse_jsonl(&text).expect("recorder output must parse");
+        assert_eq!(parsed, *sink.events(), "JSON lines round trip");
+        let rep = replay(&parsed);
+        assert_eq!(rep.metrics.samples_completed, out.metrics.samples_completed);
+        assert_eq!(rep.metrics.rejected, out.metrics.rejected);
+        assert!(rep.metrics.makespan_s == out.metrics.makespan_s);
+        assert_eq!(rep.metrics.latency.to_json(), out.metrics.latency.to_json());
+        assert_eq!(rep.metrics.queue.to_json(), out.metrics.queue.to_json());
+        for (rd, od) in rep.metrics.devices.iter().zip(&out.metrics.devices) {
+            assert_eq!(rd.latency.to_json(), od.latency.to_json());
+            assert_eq!(rd.admission_est.to_json(), od.admission_est.to_json());
+            assert_eq!(rd.shed, od.shed);
+        }
+        for (rc, oc) in rep.metrics.classes.iter().zip(&out.metrics.classes) {
+            assert_eq!(rc.latency.to_json(), oc.latency.to_json());
+            assert_eq!((rc.tracked, rc.attained, rc.shed), (oc.tracked, oc.attained, oc.shed));
+        }
     }
 
     #[test]

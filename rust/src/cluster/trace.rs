@@ -1,0 +1,554 @@
+//! Opt-in per-request flight recorder for the fleet schedulers.
+//!
+//! A [`TraceSink`] threaded through [`super::StepScheduler`] and
+//! [`super::ReferenceScheduler`] captures every request lifecycle
+//! decision — `admit` / `route` / `steal` / `requeue` / `shed` /
+//! `step` / `complete` — stamped with simulated time, device, request
+//! id and service class. Recording is a plain `Vec` push of a `Copy`
+//! struct (no formatting, no I/O) so the recorder stays within the
+//! ≤5% events/sec overhead gate on the 64-device bench; JSON-lines
+//! serialization happens once, after the serve window, via
+//! [`TraceSink::write_jsonl`].
+//!
+//! [`replay`] reconstructs a run's [`FleetMetrics`] distributions from
+//! a trace alone: `complete` events carry exactly the tuple the live
+//! metrics fold consumes (latency, queue wait, class, deadline
+//! verdict, device), and the fold order is normalized the same way the
+//! live scheduler normalizes it (completions sorted by `(t, id)`), so
+//! the replayed histograms are **bit-identical** to the live run's —
+//! same buckets, same counts, same quantiles. [`diff`] compares two
+//! traces: first divergent event plus per-device routing deltas.
+
+use std::io::Write;
+
+use crate::util::histogram::LogHistogram;
+use crate::util::json::Json;
+
+use super::metrics::{DeviceMetrics, FleetMetrics};
+
+/// One scheduler decision, stamped with simulated time `t`, request
+/// `id` and service `class`. `Copy` so recording is a buffer push.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A request entered admission control.
+    Admit { t: f64, id: u64, class: u8 },
+    /// The router placed the request on `device`'s admission queue;
+    /// `est_s` is the admission-time completion estimate quoted for
+    /// that placement (occupancy × drain weight, generation-scaled).
+    Route { t: f64, id: u64, class: u8, device: usize, est_s: f64 },
+    /// Work stealing moved the queued request from donor `from` to
+    /// thief `device` at a step boundary.
+    Steal { t: f64, id: u64, class: u8, device: usize, from: usize },
+    /// Every device was full; the request was deferred to the
+    /// fleet-level backlog for re-routing at the next step boundary.
+    Requeue { t: f64, id: u64, class: u8 },
+    /// Admission control dropped the request, attributed to `device`;
+    /// `tracked` marks a request that carried a deadline (an SLO miss).
+    Shed { t: f64, id: u64, class: u8, device: usize, tracked: bool },
+    /// The request participated in a fused denoise step on `device`
+    /// (`full` distinguishes full-UNet from DeepCache shallow steps).
+    Step { t: f64, id: u64, class: u8, device: usize, full: bool },
+    /// The request finished. `device` is `-1` for zero-step requests,
+    /// which complete at admission without touching a device. Carries
+    /// the full tuple the metrics fold consumes, so a trace alone can
+    /// rebuild the run's latency/queue distributions bit-identically.
+    Complete {
+        t: f64,
+        id: u64,
+        class: u8,
+        device: i64,
+        latency_s: f64,
+        queue_s: f64,
+        deadline_met: Option<bool>,
+    },
+}
+
+impl TraceEvent {
+    /// The event-kind tag used in the JSON-lines encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::Route { .. } => "route",
+            TraceEvent::Steal { .. } => "steal",
+            TraceEvent::Requeue { .. } => "requeue",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::Step { .. } => "step",
+            TraceEvent::Complete { .. } => "complete",
+        }
+    }
+
+    /// Simulated timestamp of the event.
+    pub fn time_s(&self) -> f64 {
+        match *self {
+            TraceEvent::Admit { t, .. }
+            | TraceEvent::Route { t, .. }
+            | TraceEvent::Steal { t, .. }
+            | TraceEvent::Requeue { t, .. }
+            | TraceEvent::Shed { t, .. }
+            | TraceEvent::Step { t, .. }
+            | TraceEvent::Complete { t, .. } => t,
+        }
+    }
+
+    /// One JSON object per event (`{"ev":...,"t":...,"id":...,
+    /// "class":...}` plus kind-specific fields). `f64`s go through the
+    /// shortest-round-trip formatter, so parsing recovers the exact
+    /// bits — the foundation of replay bit-identity.
+    pub fn to_json(&self) -> Json {
+        let (t, id, class) = match *self {
+            TraceEvent::Admit { t, id, class }
+            | TraceEvent::Route { t, id, class, .. }
+            | TraceEvent::Steal { t, id, class, .. }
+            | TraceEvent::Requeue { t, id, class }
+            | TraceEvent::Shed { t, id, class, .. }
+            | TraceEvent::Step { t, id, class, .. }
+            | TraceEvent::Complete { t, id, class, .. } => (t, id, class),
+        };
+        let j = Json::obj().set("ev", self.kind()).set("t", t).set("id", id).set("class", class);
+        match *self {
+            TraceEvent::Admit { .. } | TraceEvent::Requeue { .. } => j,
+            TraceEvent::Route { device, est_s, .. } => j.set("dev", device).set("est", est_s),
+            TraceEvent::Steal { device, from, .. } => j.set("dev", device).set("from", from),
+            TraceEvent::Shed { device, tracked, .. } => {
+                j.set("dev", device).set("tracked", tracked)
+            }
+            TraceEvent::Step { device, full, .. } => j.set("dev", device).set("full", full),
+            TraceEvent::Complete { device, latency_s, queue_s, deadline_met, .. } => j
+                .set("dev", device)
+                .set("latency_s", latency_s)
+                .set("queue_s", queue_s)
+                .set(
+                    "deadline_met",
+                    deadline_met.map_or(Json::Null, Json::Bool),
+                ),
+        }
+    }
+
+    /// Decode one parsed JSON-lines object back into an event.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let num = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{k}'"))
+        };
+        let t = num("t")?;
+        let id = num("id")? as u64;
+        let class = num("class")? as u8;
+        let dev = || num("dev").map(|d| d as usize);
+        match j.get("ev").and_then(Json::as_str).ok_or("missing 'ev' tag")? {
+            "admit" => Ok(TraceEvent::Admit { t, id, class }),
+            "requeue" => Ok(TraceEvent::Requeue { t, id, class }),
+            "route" => Ok(TraceEvent::Route { t, id, class, device: dev()?, est_s: num("est")? }),
+            "steal" => Ok(TraceEvent::Steal {
+                t,
+                id,
+                class,
+                device: dev()?,
+                from: num("from")? as usize,
+            }),
+            "shed" => {
+                let tracked = matches!(j.get("tracked"), Some(Json::Bool(true)));
+                Ok(TraceEvent::Shed { t, id, class, device: dev()?, tracked })
+            }
+            "step" => {
+                let full = matches!(j.get("full"), Some(Json::Bool(true)));
+                Ok(TraceEvent::Step { t, id, class, device: dev()?, full })
+            }
+            "complete" => Ok(TraceEvent::Complete {
+                t,
+                id,
+                class,
+                device: num("dev")? as i64,
+                latency_s: num("latency_s")?,
+                queue_s: num("queue_s")?,
+                deadline_met: match j.get("deadline_met") {
+                    Some(Json::Bool(b)) => Some(*b),
+                    _ => None,
+                },
+            }),
+            other => Err(format!("unknown event kind '{other}'")),
+        }
+    }
+}
+
+/// The flight recorder: an in-memory event buffer owned by a scheduler
+/// for the duration of a serve window. Recording never formats or
+/// writes — serialization is a separate, post-serve pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSink {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// The JSON-lines encoding: one compact object per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Stream the JSON-lines encoding to a writer.
+    pub fn write_jsonl(&self, out: &mut dyn Write) -> std::io::Result<()> {
+        for ev in &self.events {
+            writeln!(out, "{}", ev.to_json().to_string_compact())?;
+        }
+        Ok(())
+    }
+}
+
+/// Record into an optional sink. A free function (not a scheduler
+/// method) so call sites inside field-borrowing loops — e.g. the
+/// retire loop draining `self.resident[di]` — can split-borrow just
+/// the trace field.
+#[inline]
+pub(super) fn emit(trace: &mut Option<TraceSink>, ev: TraceEvent) {
+    if let Some(sink) = trace {
+        sink.record(ev);
+    }
+}
+
+/// Parse a JSON-lines trace document (blank lines ignored).
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>, String> {
+    text.lines()
+        .enumerate()
+        .filter(|(_, line)| !line.trim().is_empty())
+        .map(|(n, line)| {
+            let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", n + 1))?;
+            TraceEvent::from_json(&j).map_err(|e| format!("trace line {}: {e}", n + 1))
+        })
+        .collect()
+}
+
+/// A run reconstructed from its trace alone.
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    /// Distributional metrics recomputed from the trace: latency and
+    /// queue histograms (fleet, per-class, per-device), admission
+    /// estimates, shed attribution, makespan, completion/shed counts.
+    /// Bit-identical to the live run's wherever the trace carries the
+    /// inputs; purely device-side accounting (busy time, energy, ops)
+    /// is not in the trace and stays zero.
+    pub metrics: FleetMetrics,
+    /// Routing decisions per device (admission placements, not steals).
+    pub route_counts: Vec<u64>,
+}
+
+/// Rebuild a run's distributional metrics from its trace.
+///
+/// The fold mirrors the live schedulers exactly: completions sorted by
+/// `(t, id)` (the live result sort), then sheds in recorded order —
+/// so every histogram receives the same values in the same order and
+/// ends up bit-identical, `sum` included.
+pub fn replay(events: &[TraceEvent]) -> TraceReplay {
+    let mut ndev = 0usize;
+    for ev in events {
+        let d = match *ev {
+            TraceEvent::Route { device, .. }
+            | TraceEvent::Shed { device, .. }
+            | TraceEvent::Step { device, .. } => device as i64,
+            TraceEvent::Steal { device, from, .. } => device.max(from) as i64,
+            TraceEvent::Complete { device, .. } => device,
+            _ => -1,
+        };
+        if d >= 0 {
+            ndev = ndev.max(d as usize + 1);
+        }
+    }
+    let mut metrics = FleetMetrics {
+        devices: (0..ndev).map(|i| DeviceMetrics { id: i, ..Default::default() }).collect(),
+        ..Default::default()
+    };
+    let mut route_counts = vec![0u64; ndev];
+
+    let mut first_arrival_s = f64::INFINITY;
+    let mut last_finish_s = 0.0f64;
+    let mut completes: Vec<(f64, u64, u8, i64, f64, f64, Option<bool>)> = Vec::new();
+    for ev in events {
+        match *ev {
+            TraceEvent::Admit { t, .. } => first_arrival_s = first_arrival_s.min(t),
+            TraceEvent::Route { device, est_s, .. } => {
+                metrics.devices[device].admission_est.record(est_s);
+                route_counts[device] += 1;
+            }
+            TraceEvent::Complete { t, id, class, device, latency_s, queue_s, deadline_met } => {
+                last_finish_s = last_finish_s.max(t);
+                completes.push((t, id, class, device, latency_s, queue_s, deadline_met));
+            }
+            _ => {}
+        }
+    }
+    completes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for &(_, _, class, device, latency_s, queue_s, deadline_met) in &completes {
+        let di = if device >= 0 { device as usize } else { usize::MAX };
+        metrics.record_completion(latency_s, queue_s, class, deadline_met, di);
+        if let Some(d) = metrics.devices.get_mut(di) {
+            d.samples_completed += 1;
+        }
+    }
+    // Sheds fold after completions, in recorded order — exactly the
+    // live `shed_log` pass.
+    for ev in events {
+        if let TraceEvent::Shed { class, device, tracked, .. } = *ev {
+            metrics.record_shed(class, tracked);
+            metrics.rejected += 1;
+            metrics.devices[device].shed += 1;
+        }
+    }
+    if first_arrival_s.is_finite() {
+        metrics.makespan_s = (last_finish_s - first_arrival_s).max(0.0);
+    }
+    TraceReplay { metrics, route_counts }
+}
+
+/// Where two traces disagree.
+#[derive(Debug, Clone)]
+pub struct TraceDiff {
+    /// First index at which the traces diverge, with both events
+    /// rendered as JSON lines (`<end of trace>` for the shorter one);
+    /// `None` when the traces are identical.
+    pub first_divergence: Option<(usize, String, String)>,
+    /// Devices whose admission-routing counts differ: `(device,
+    /// routes_a, routes_b)`.
+    pub route_deltas: Vec<(usize, u64, u64)>,
+}
+
+impl TraceDiff {
+    pub fn identical(&self) -> bool {
+        self.first_divergence.is_none()
+    }
+}
+
+/// Compare two traces' scheduler decisions: the first divergent event
+/// plus per-device routing deltas.
+pub fn diff(a: &[TraceEvent], b: &[TraceEvent]) -> TraceDiff {
+    let render = |ev: Option<&TraceEvent>| {
+        ev.map_or_else(|| "<end of trace>".to_string(), |e| e.to_json().to_string_compact())
+    };
+    let mut first_divergence = None;
+    for i in 0..a.len().max(b.len()) {
+        if a.get(i) != b.get(i) {
+            first_divergence = Some((i, render(a.get(i)), render(b.get(i))));
+            break;
+        }
+    }
+    let (ra, rb) = (replay(a), replay(b));
+    let mut route_deltas = Vec::new();
+    for d in 0..ra.route_counts.len().max(rb.route_counts.len()) {
+        let ca = ra.route_counts.get(d).copied().unwrap_or(0);
+        let cb = rb.route_counts.get(d).copied().unwrap_or(0);
+        if ca != cb {
+            route_deltas.push((d, ca, cb));
+        }
+    }
+    TraceDiff { first_divergence, route_deltas }
+}
+
+/// Convenience: the latency/queue quantile summary the `trace replay`
+/// CLI prints and the verify gate compares against a live report.
+pub fn replay_summary(r: &TraceReplay) -> Json {
+    Json::obj()
+        .set("samples", r.metrics.samples_completed)
+        .set("rejected", r.metrics.rejected)
+        .set("makespan_s", r.metrics.makespan_s)
+        .set("latency_p50_s", r.metrics.latency_p50_s())
+        .set("latency_p99_s", r.metrics.latency_p99_s())
+        .set("queue_mean_s", r.metrics.queue_mean_s())
+        .set("latency_hist", r.metrics.latency.to_json())
+        .set("queue_hist", r.metrics.queue.to_json())
+}
+
+/// A replay must agree with the live run on every distributional
+/// field the report exports. Compares exact values (the JSON round
+/// trip is shortest-round-trip, so equality is bit-equality) and the
+/// full histogram encodings; returns the mismatched keys.
+pub fn check_against_report(r: &TraceReplay, report: &Json) -> Vec<String> {
+    let summary = replay_summary(r);
+    let mut bad = Vec::new();
+    for key in
+        ["samples", "rejected", "makespan_s", "latency_p50_s", "latency_p99_s", "queue_mean_s"]
+    {
+        if report.get(key).and_then(Json::as_f64) != summary.get(key).and_then(Json::as_f64) {
+            bad.push(key.to_string());
+        }
+    }
+    for key in ["latency_hist", "queue_hist"] {
+        if report.get(key) != summary.get(key) {
+            bad.push(key.to_string());
+        }
+    }
+    bad
+}
+
+/// Replayed latency histogram straight from a trace (helper for tests
+/// and the bench gates).
+pub fn replay_latency_hist(events: &[TraceEvent]) -> LogHistogram {
+    replay(events).metrics.latency.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Admit { t: 0.0, id: 1, class: 0 },
+            TraceEvent::Route { t: 0.0, id: 1, class: 0, device: 0, est_s: 0.25 },
+            TraceEvent::Admit { t: 0.5, id: 2, class: 1 },
+            TraceEvent::Requeue { t: 0.5, id: 2, class: 1 },
+            TraceEvent::Steal { t: 1.0, id: 2, class: 1, device: 1, from: 0 },
+            TraceEvent::Step { t: 1.0, id: 1, class: 0, device: 0, full: true },
+            TraceEvent::Shed { t: 1.5, id: 3, class: 2, device: 1, tracked: true },
+            TraceEvent::Complete {
+                t: 2.0,
+                id: 1,
+                class: 0,
+                device: 0,
+                latency_s: 2.0,
+                queue_s: 0.125,
+                deadline_met: Some(true),
+            },
+            TraceEvent::Complete {
+                t: 2.5,
+                id: 2,
+                class: 1,
+                device: 1,
+                latency_s: 2.0,
+                queue_s: 0.5,
+                deadline_met: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event_kind() {
+        let mut sink = TraceSink::new();
+        for ev in sample_events() {
+            sink.record(ev);
+        }
+        let text = sink.to_jsonl();
+        assert_eq!(text.lines().count(), sink.len());
+        let parsed = parse_jsonl(&text).expect("parse");
+        assert_eq!(parsed, sink.events());
+        // write_jsonl produces the same bytes as to_jsonl.
+        let mut buf = Vec::new();
+        sink.write_jsonl(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), text);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_unknown_kinds() {
+        assert!(parse_jsonl("not json\n").is_err());
+        assert!(parse_jsonl("{\"ev\":\"warp\",\"t\":0,\"id\":1,\"class\":0}\n").is_err());
+        assert!(parse_jsonl("{\"t\":0,\"id\":1,\"class\":0}\n").is_err());
+        // Blank lines are fine.
+        assert_eq!(parse_jsonl("\n\n").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn replay_rebuilds_counts_and_distributions() {
+        let r = replay(&sample_events());
+        assert_eq!(r.metrics.samples_completed, 2);
+        assert_eq!(r.metrics.rejected, 1);
+        // Makespan: first admit at t=0, last complete at t=2.5.
+        assert_eq!(r.metrics.makespan_s, 2.5);
+        // Both completions had latency 2.0 exactly.
+        assert_eq!(r.metrics.latency.count(), 2);
+        assert_eq!(r.metrics.latency_p50_s(), 2.0);
+        // Admission estimate went to device 0; shed to device 1.
+        assert_eq!(r.route_counts, vec![1, 0]);
+        assert_eq!(r.metrics.devices[0].admission_est.count(), 1);
+        assert_eq!(r.metrics.devices[1].shed, 1);
+        assert_eq!(r.metrics.devices[0].samples_completed, 1);
+        // Class roll-ups: class 2's shed was deadline-tracked.
+        let c2 = r.metrics.classes.iter().find(|c| c.class == 2).expect("class 2");
+        assert_eq!((c2.shed, c2.shed_tracked), (1, 1));
+    }
+
+    #[test]
+    fn replay_of_empty_trace_is_all_zeros() {
+        let r = replay(&[]);
+        assert_eq!(r.metrics.samples_completed, 0);
+        assert_eq!(r.metrics.makespan_s, 0.0);
+        assert_eq!(r.metrics.latency_p50_s(), 0.0);
+        assert!(r.route_counts.is_empty());
+    }
+
+    #[test]
+    fn zero_step_complete_without_device_replays() {
+        // device = -1 (completed at admission): fleet-wide histograms
+        // record it; no per-device attribution.
+        let events = [
+            TraceEvent::Admit { t: 1.0, id: 7, class: 0 },
+            TraceEvent::Complete {
+                t: 1.0,
+                id: 7,
+                class: 0,
+                device: -1,
+                latency_s: 0.0,
+                queue_s: 0.0,
+                deadline_met: None,
+            },
+        ];
+        let r = replay(&events);
+        assert_eq!(r.metrics.samples_completed, 1);
+        assert_eq!(r.metrics.latency_p50_s(), 0.0);
+        assert_eq!(r.metrics.makespan_s, 0.0);
+        assert!(r.metrics.devices.is_empty());
+    }
+
+    #[test]
+    fn diff_reports_first_divergence_and_route_deltas() {
+        let a = sample_events();
+        let mut b = a.clone();
+        assert!(diff(&a, &b).identical());
+        // Change one routing decision.
+        b[1] = TraceEvent::Route { t: 0.0, id: 1, class: 0, device: 1, est_s: 0.25 };
+        let d = diff(&a, &b);
+        let (idx, la, lb) = d.first_divergence.expect("diverged");
+        assert_eq!(idx, 1);
+        assert!(la.contains("\"dev\":0") && lb.contains("\"dev\":1"));
+        // Device 0 lost a route, device 1 gained one.
+        assert_eq!(d.route_deltas, vec![(0, 1, 0), (1, 0, 1)]);
+        // A truncated trace diverges at the missing tail.
+        let shorter = &a[..a.len() - 1];
+        let d = diff(&a, shorter);
+        let (idx, _, lb) = d.first_divergence.expect("diverged");
+        assert_eq!(idx, a.len() - 1);
+        assert_eq!(lb, "<end of trace>");
+    }
+
+    #[test]
+    fn replay_matches_check_against_its_own_summary() {
+        let r = replay(&sample_events());
+        let report = replay_summary(&r);
+        assert!(check_against_report(&r, &report).is_empty());
+        let tampered = report.set("latency_p99_s", 123.0);
+        assert_eq!(check_against_report(&r, &tampered), vec!["latency_p99_s".to_string()]);
+    }
+}

@@ -1,15 +1,20 @@
 //! Serving metrics: latency distribution, throughput, batch occupancy.
+//!
+//! Distributions live in fixed-size [`LogHistogram`]s, so a serving
+//! session's metrics footprint is O(buckets), not O(requests): the
+//! report stays the same size whether the engine completed a hundred
+//! samples or a hundred million.
 
+use crate::util::histogram::LogHistogram;
 use crate::util::json::Json;
-use crate::util::stats;
 
 /// Rolling metrics for a serving session.
 #[derive(Debug, Default, Clone)]
 pub struct ServingMetrics {
-    pub latencies_s: Vec<f64>,
-    pub queue_s: Vec<f64>,
-    pub compute_s: Vec<f64>,
-    pub batch_sizes: Vec<usize>,
+    pub latency: LogHistogram,
+    pub queue: LogHistogram,
+    pub compute: LogHistogram,
+    pub batch: LogHistogram,
     pub steps_executed: u64,
     pub samples_completed: u64,
     /// Wall-clock of the whole session (set at report time).
@@ -18,12 +23,24 @@ pub struct ServingMetrics {
 
 impl ServingMetrics {
     pub fn record(&mut self, latency_s: f64, queue_s: f64, compute_s: f64, batch: usize, steps: usize) {
-        self.latencies_s.push(latency_s);
-        self.queue_s.push(queue_s);
-        self.compute_s.push(compute_s);
-        self.batch_sizes.push(batch);
+        self.latency.record(latency_s);
+        self.queue.record(queue_s);
+        self.compute.record(compute_s);
+        self.batch.record(batch as f64);
         self.steps_executed += steps as u64;
         self.samples_completed += 1;
+    }
+
+    /// Fold another session's metrics into this one (histograms merge
+    /// associatively, so shard-level recorders roll up exactly).
+    pub fn merge(&mut self, other: &Self) {
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
+        self.compute.merge(&other.compute);
+        self.batch.merge(&other.batch);
+        self.steps_executed += other.steps_executed;
+        self.samples_completed += other.samples_completed;
+        self.wall_s = self.wall_s.max(other.wall_s);
     }
 
     pub fn throughput_samples_per_s(&self) -> f64 {
@@ -43,11 +60,7 @@ impl ServingMetrics {
     }
 
     pub fn mean_batch_occupancy(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
-            0.0
-        } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
-        }
+        self.batch.mean()
     }
 
     pub fn to_json(&self) -> Json {
@@ -57,11 +70,11 @@ impl ServingMetrics {
             .set("wall_s", self.wall_s)
             .set("throughput_samples_per_s", self.throughput_samples_per_s())
             .set("steps_per_s", self.steps_per_s())
-            .set("latency_p50_s", stats::percentile(&self.latencies_s, 50.0))
-            .set("latency_p95_s", stats::percentile(&self.latencies_s, 95.0))
-            .set("latency_p99_s", stats::percentile(&self.latencies_s, 99.0))
-            .set("queue_mean_s", stats::mean(&self.queue_s))
-            .set("compute_mean_s", stats::mean(&self.compute_s))
+            .set("latency_p50_s", self.latency.quantile(50.0))
+            .set("latency_p95_s", self.latency.quantile(95.0))
+            .set("latency_p99_s", self.latency.quantile(99.0))
+            .set("queue_mean_s", self.queue.mean())
+            .set("compute_mean_s", self.compute.mean())
             .set("mean_batch_occupancy", self.mean_batch_occupancy())
     }
 }
@@ -100,5 +113,46 @@ mod tests {
         let m = ServingMetrics::default();
         assert_eq!(m.throughput_samples_per_s(), 0.0);
         assert_eq!(m.mean_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_single_recorder() {
+        // Two shard recorders merged must report the same JSON as one
+        // recorder that saw every request — the roll-up contract.
+        let mut one = ServingMetrics::default();
+        let mut a = ServingMetrics::default();
+        let mut b = ServingMetrics::default();
+        // Dyadic values: partial f64 sums are exact, so the split
+        // recorders' merged sum matches the sequential sum bit-for-bit.
+        for i in 0..60 {
+            let (l, q, c) = (0.5 * (i + 1) as f64, 0.25 * i as f64, 0.125 * (i + 1) as f64);
+            one.record(l, q, c, i % 5 + 1, 20);
+            if i % 2 == 0 {
+                a.record(l, q, c, i % 5 + 1, 20);
+            } else {
+                b.record(l, q, c, i % 5 + 1, 20);
+            }
+        }
+        one.wall_s = 3.0;
+        a.wall_s = 3.0;
+        b.wall_s = 2.5;
+        a.merge(&b);
+        assert_eq!(a.to_json().to_string_compact(), one.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn footprint_is_constant_across_request_counts() {
+        // O(buckets), not O(requests): 10x the samples from the same
+        // distribution must not grow the serialized histogram.
+        let fill = |n: usize| {
+            let mut m = ServingMetrics::default();
+            for i in 0..n {
+                m.record(0.01 + (i % 37) as f64 * 1e-3, 1e-4, 0.009, 4, 20);
+            }
+            m.latency.to_json().to_string_compact().len()
+        };
+        let small = fill(1_000);
+        let big = fill(10_000);
+        assert_eq!(small, big, "histogram JSON must not scale with samples");
     }
 }

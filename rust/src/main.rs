@@ -33,16 +33,25 @@
 //!   arrival stream: the default replayed synthetic workload, an
 //!   open-loop Poisson/burst process (`--arrival`), or closed-loop
 //!   clients (`--clients`); `--slo-ms`/`--shed-late` add the SLO tier
-//!   (goodput, attainment, deadline-aware admission). Grammars are
-//!   documented in `rust/src/cluster/README.md`.
+//!   (goodput, attainment, deadline-aware admission). `--trace FILE`
+//!   attaches the flight recorder and writes per-request lifecycle
+//!   events as JSON lines. Grammars are documented in
+//!   `rust/src/cluster/README.md`.
+//! * `trace replay FILE [FILE2] [--expect report.json]` — reconstruct a
+//!   run from a flight-recorder trace: recompute the latency/queue
+//!   histograms and counters from the events alone and print the
+//!   summary. With `--expect`, verify the replay matches a live
+//!   `cluster_report.json` bit-for-bit; with a second FILE, diff two
+//!   traces (first divergent event + per-device routing deltas).
 //! * `devices` — print the Table II device parameter set in use.
 
 use difflight::arch::cost::OptFlags;
 use difflight::baselines::all_baselines;
 use difflight::cluster::load::{parse_arrival_spec, parse_clients_spec, parse_slo_spec};
+use difflight::cluster::trace::{check_against_report, diff, parse_jsonl, replay, replay_summary};
 use difflight::cluster::{
     parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster, ClusterConfig,
-    DeviceProfile, RequestSource, ShardPolicy, SimExecutor,
+    DeviceProfile, RequestSource, ShardPolicy, SimExecutor, TraceEvent, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -50,6 +59,7 @@ use difflight::devices::DeviceParams;
 use difflight::dse::{explore, DesignSpace};
 use difflight::sim::Simulator;
 use difflight::util::cli::Args;
+use difflight::util::json::Json;
 use difflight::util::table::{fmt_ratio, fmt_si, Table};
 use difflight::workload::{ModelId, ModelSpec};
 
@@ -62,6 +72,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
+        "trace" => cmd_trace(&args),
         "devices" => cmd_devices(),
         _ => {
             print_help(args.program());
@@ -73,7 +84,7 @@ fn main() {
 
 fn print_help(program: &str) {
     println!("DiffLight — silicon-photonics accelerator for diffusion models");
-    println!("usage: {program} <simulate|compare|dse|serve|cluster|devices> [options]");
+    println!("usage: {program} <simulate|compare|dse|serve|cluster|trace|devices> [options]");
     println!("  simulate --model all --all-opts     simulator GOPS/EPB");
     println!("  compare                             Figure 9/10 comparison");
     println!("  dse --threads 8                     design-space exploration");
@@ -89,6 +100,11 @@ fn print_help(program: &str) {
     println!("          --slo-ms 30,100             per-class latency SLOs");
     println!("          --shed-late                 deadline-aware admission shedding");
     println!("          --backlog 64                fleet-level deferral queue (0 = shed)");
+    println!("          --trace trace.jsonl         flight recorder: per-request events as JSON lines");
+    println!("  trace replay FILE                   rebuild metrics from a recorded trace");
+    println!("        replay FILE --expect artifacts/cluster_report.json");
+    println!("                                      verify replay matches the live report exactly");
+    println!("        replay FILE FILE2             diff two traces (first divergence, route deltas)");
     println!("  devices                             Table II constants");
 }
 
@@ -473,6 +489,10 @@ fn cmd_cluster(args: &Args) -> i32 {
             }
         };
 
+    // Pricing (per-profile accelerator cost models built by
+    // `Cluster::simulated`) and the serve loop are timed separately so
+    // events/s reflects only the scheduler hot path.
+    let pricing_t0 = std::time::Instant::now();
     let mut cluster = match Cluster::simulated(config) {
         Ok(c) => c,
         Err(e) => {
@@ -480,6 +500,11 @@ fn cmd_cluster(args: &Args) -> i32 {
             return 2;
         }
     };
+    let pricing_s = pricing_t0.elapsed().as_secs_f64();
+    let trace_path = args.get("trace").map(str::to_string);
+    if trace_path.is_some() {
+        cluster.set_trace(TraceSink::new());
+    }
     let config = cluster.config.clone();
     let host_t0 = std::time::Instant::now();
     let outcome = match cluster.serve_source(source, &mut SimExecutor) {
@@ -564,11 +589,23 @@ fn cmd_cluster(args: &Args) -> i32 {
         }
     }
     println!(
-        "scheduler: {} events in {} host time ({:.0} events/s)",
+        "scheduler: {} events in {} serving host time ({:.0} events/s; pricing {})",
         m.sched_events,
         fmt_si(host_s, "s"),
         if host_s > 0.0 { m.sched_events as f64 / host_s } else { 0.0 },
+        fmt_si(pricing_s, "s"),
     );
+    if let Some(path) = &trace_path {
+        let sink = cluster.take_trace().expect("trace sink was attached above");
+        let write = std::fs::File::create(path).and_then(|mut f| sink.write_jsonl(&mut f));
+        match write {
+            Ok(()) => println!("wrote {} trace events to {path}", sink.len()),
+            Err(e) => {
+                eprintln!("error: --trace {path}: {e}");
+                return 1;
+            }
+        }
+    }
     if config.any_reuse() {
         println!(
             "reuse: {} cache-hit / {} full sample-steps ({:.0}% hit rate)",
@@ -581,6 +618,83 @@ fn cmd_cluster(args: &Args) -> i32 {
         && std::fs::write("artifacts/cluster_report.json", m.to_json().to_string_pretty()).is_ok()
     {
         println!("wrote artifacts/cluster_report.json");
+    }
+    0
+}
+
+/// `trace replay FILE [FILE2] [--expect report.json]`: rebuild a run
+/// from its flight-recorder trace. One file prints the replayed
+/// summary (and, with `--expect`, verifies it against a live fleet
+/// report bit-for-bit); two files diff the scheduler decisions.
+fn cmd_trace(args: &Args) -> i32 {
+    const USAGE: &str = "usage: trace replay FILE [FILE2] [--expect report.json]";
+    if args.positional(1) != Some("replay") {
+        eprintln!("{USAGE}");
+        return 2;
+    }
+    let Some(path) = args.positional(2) else {
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    let read_trace = |p: &str| -> Result<Vec<TraceEvent>, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        parse_jsonl(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let a = match read_trace(path) {
+        Ok(events) => events,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    if let Some(path_b) = args.positional(3) {
+        let b = match read_trace(path_b) {
+            Ok(events) => events,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        let d = diff(&a, &b);
+        if d.identical() {
+            println!("traces identical: {} events", a.len());
+            return 0;
+        }
+        if let Some((i, ea, eb)) = &d.first_divergence {
+            println!("first divergence at event {i}:");
+            println!("  {path}: {ea}");
+            println!("  {path_b}: {eb}");
+        }
+        if d.route_deltas.is_empty() {
+            println!("routing: per-device admission counts agree");
+        } else {
+            for (dev, ra, rb) in &d.route_deltas {
+                println!("routing: device {dev} admitted {ra} vs {rb}");
+            }
+        }
+        return 1;
+    }
+    let rep = replay(&a);
+    println!("replayed {} events from {path}", a.len());
+    println!("{}", replay_summary(&rep).to_string_pretty());
+    if let Some(expect) = args.get("expect") {
+        let report = match std::fs::read_to_string(expect)
+            .map_err(|e| format!("{expect}: {e}"))
+            .and_then(|text| Json::parse(&text).map_err(|e| format!("{expect}: {e}")))
+        {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("error: --expect {e}");
+                return 2;
+            }
+        };
+        let bad = check_against_report(&rep, &report);
+        if bad.is_empty() {
+            println!("replay matches {expect} exactly");
+        } else {
+            eprintln!("replay diverges from {expect} on: {}", bad.join(", "));
+            return 1;
+        }
     }
     0
 }

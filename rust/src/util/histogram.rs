@@ -1,0 +1,454 @@
+//! Fixed-size log-bucketed (HDR-style) histogram for latency-scale
+//! samples.
+//!
+//! Replaces the unbounded per-request `Vec<f64>` sample vectors in the
+//! metrics tier: memory is O(buckets) — a constant — no matter how many
+//! samples are recorded, and two histograms recorded on different
+//! shards `merge` into exactly the histogram a single recorder would
+//! have produced (bucket counts, count, min and max are associative and
+//! commutative; only the running `sum` is subject to float reassociation,
+//! and quantiles never read it).
+//!
+//! ## Bucket layout
+//!
+//! Bucket 0 holds zero, negative, and sub-resolution values (below
+//! 2⁻³⁰ s ≈ 0.93 ns). Above that, each power-of-two octave from 2⁻³⁰
+//! through 2¹³ is split into 128 linear sub-buckets taken straight from
+//! the top 7 mantissa bits of the IEEE-754 representation, so bucketing
+//! is exact integer bit arithmetic — no `log2` rounding hazards. Values
+//! at or above 2¹⁴ s clamp into the top bucket. A bucket's reported
+//! representative is its midpoint, so the worst-case relative error of
+//! any reported quantile is half a sub-bucket width: 1/256 ≈ 0.4 %,
+//! comfortably inside the 1 % gate in `BENCH_sim.json`'s `obs` section.
+//!
+//! ## Quantile semantics
+//!
+//! `quantile(p)` mirrors [`crate::util::stats::percentile`] applied to
+//! the sorted array of bucket representatives: rank `p/100·(n-1)` with
+//! linear interpolation between the two straddling ranks, clamped into
+//! the exact `[min, max]` observed. Consequences the metrics tests rely
+//! on: an empty histogram reports 0.0 (never NaN), and a single-sample
+//! histogram reports that sample *exactly* (the clamp collapses to it).
+
+use crate::util::json::Json;
+
+/// Sub-buckets per power-of-two octave (top 7 mantissa bits).
+const SUB_BUCKET_BITS: u32 = 7;
+const SUB_BUCKETS: usize = 1 << SUB_BUCKET_BITS;
+/// Smallest resolved exponent: 2^-30 s ≈ 0.93 ns.
+const MIN_EXP: i32 = -30;
+/// Largest resolved exponent: the octave [2^13, 2^14) s; above clamps.
+const MAX_EXP: i32 = 13;
+const OCTAVES: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+/// Total bucket count (bucket 0 is the zero/underflow bucket).
+pub const NUM_BUCKETS: usize = 1 + OCTAVES * SUB_BUCKETS;
+/// Smallest value resolved into a log bucket (exactly 2^-30).
+const MIN_VALUE: f64 = 9.313225746154785e-10;
+
+/// Fixed-size log-bucketed histogram with exact min/max tracking.
+///
+/// `Default` is an empty histogram with no bucket storage; the bucket
+/// array (`NUM_BUCKETS` u64s) is allocated on the first `record` or
+/// `merge`, so idle histograms (e.g. per-device admission histograms on
+/// devices that never admit) cost nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    /// Either empty (nothing recorded) or exactly `NUM_BUCKETS` long.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn index_of(v: f64) -> usize {
+        if !(v >= MIN_VALUE) {
+            return 0; // zero, negative, sub-resolution (NaN can't reach here)
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if e > MAX_EXP {
+            return NUM_BUCKETS - 1;
+        }
+        let sub = ((bits >> (52 - SUB_BUCKET_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+        1 + (e - MIN_EXP) as usize * SUB_BUCKETS + sub
+    }
+
+    /// Midpoint representative of a bucket (0.0 for the zero bucket;
+    /// quantiles clamp it back into `[min, max]`).
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            return 0.0;
+        }
+        let j = i - 1;
+        let e = MIN_EXP + (j / SUB_BUCKETS) as i32;
+        let sub = (j % SUB_BUCKETS) as f64;
+        let base = f64::from_bits(((1023 + e) as u64) << 52);
+        base * (1.0 + (sub + 0.5) / SUB_BUCKETS as f64)
+    }
+
+    /// Record one sample. Non-finite values are ignored (latencies and
+    /// queue waits are always finite; this keeps `sum` finite too).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NUM_BUCKETS];
+        }
+        self.buckets[Self::index_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Fold another histogram into this one. Bucket counts, `count`,
+    /// `min` and `max` merge associatively and commutatively, so
+    /// per-device → per-profile → fleet roll-ups can combine in any
+    /// grouping and still agree bucket-for-bucket.
+    pub fn merge(&mut self, other: &Self) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; NUM_BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded samples (order-dependent at the f64 bit
+    /// level; identical record order ⇒ identical bits).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of recorded samples; 0.0 when empty (never NaN).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample; 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded sample; 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Representative of the sample at sorted rank `r` ∈ [0, count).
+    fn value_at_rank(&self, r: u64) -> f64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > r {
+                return Self::representative(i);
+            }
+        }
+        self.max
+    }
+
+    /// Quantile estimate, `p` in [0, 100]. Empty ⇒ 0.0; one sample ⇒
+    /// that sample exactly; otherwise within ~0.4 % relative error of
+    /// the exact-vector percentile (see module docs). Reads only bucket
+    /// counts and min/max, so merged roll-ups report identical
+    /// quantiles to a single recorder.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.count == 1 {
+            return self.max;
+        }
+        let rank = p / 100.0 * (self.count - 1) as f64;
+        let lo = rank.floor() as u64;
+        let hi = rank.ceil() as u64;
+        let lo_v = self.value_at_rank(lo);
+        let v = if hi == lo {
+            lo_v
+        } else {
+            let hi_v = self.value_at_rank(hi);
+            lo_v + (hi_v - lo_v) * (rank - lo as f64)
+        };
+        v.clamp(self.min, self.max)
+    }
+
+    /// Number of non-empty buckets (the size driver of `to_json`).
+    pub fn occupied_buckets(&self) -> usize {
+        self.buckets.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Compact JSON: summary scalars plus a sparse `[index, count]`
+    /// bucket list — size is O(occupied buckets), bounded by
+    /// `NUM_BUCKETS` regardless of how many samples were recorded.
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                buckets.push(Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]));
+            }
+        }
+        Json::obj()
+            .set("count", self.count)
+            .set("min", self.min())
+            .set("max", self.max())
+            .set("sum", if self.count == 0 { 0.0 } else { self.sum })
+            .set("buckets", Json::Arr(buckets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::stats;
+
+    fn hist_of(xs: &[f64]) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for &x in xs {
+            h.record(x);
+        }
+        h
+    }
+
+    /// Structural identity for the law tests: buckets, count, min, max
+    /// (everything quantiles read). `sum` is checked separately to a
+    /// tolerance because float addition is not associative.
+    fn assert_same_shape(a: &LogHistogram, b: &LogHistogram) {
+        assert_eq!(a.buckets, b.buckets);
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        let scale = a.sum().abs().max(1.0);
+        assert!((a.sum() - b.sum()).abs() <= 1e-9 * scale);
+    }
+
+    #[test]
+    fn empty_reports_zeros_not_nans() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.quantile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let text = h.to_json().to_string_compact();
+        assert!(!text.to_ascii_lowercase().contains("nan"));
+    }
+
+    #[test]
+    fn single_sample_is_exact() {
+        for v in [0.0, 1e-12, 0.125, 3.5, 9.0e3, 1.0e6] {
+            let h = hist_of(&[v]);
+            assert_eq!(h.quantile(0.0), v);
+            assert_eq!(h.quantile(50.0), v);
+            assert_eq!(h.quantile(99.0), v);
+            assert_eq!(h.quantile(100.0), v);
+            assert_eq!(h.mean(), v);
+        }
+    }
+
+    #[test]
+    fn zero_heavy_distribution_reports_exact_zero_quantiles() {
+        // Queue-wait histograms are mostly zeros on an idle fleet; the
+        // zero bucket plus the min clamp must report 0.0 exactly.
+        let mut xs = vec![0.0; 99];
+        xs.push(1.0);
+        let h = hist_of(&xs);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.quantile(90.0), 0.0);
+        assert_eq!(h.quantile(100.0), 1.0);
+    }
+
+    #[test]
+    fn quantiles_track_exact_percentiles_within_one_percent() {
+        forall("hist_accuracy", 24, |g| {
+            let n = g.usize_in(64, 512);
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Log-uniform over ~7 decades, the latency range the
+                // cluster produces.
+                let e = g.f64_in(-4.0, 3.0);
+                xs.push(10f64.powf(e));
+            }
+            let h = hist_of(&xs);
+            for p in [1.0, 25.0, 50.0, 90.0, 99.0] {
+                let exact = stats::percentile(&xs, p);
+                let est = h.quantile(p);
+                assert!(
+                    (est - exact).abs() <= 0.01 * exact.abs(),
+                    "p{p}: est {est} vs exact {exact} over {n} samples"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_p() {
+        forall("hist_monotone", 16, |g| {
+            let n = g.usize_in(1, 200);
+            let mut h = LogHistogram::new();
+            for _ in 0..n {
+                h.record(g.f64_in(0.0, 50.0));
+            }
+            let mut prev = f64::NEG_INFINITY;
+            for p in 0..=100 {
+                let q = h.quantile(p as f64);
+                assert!(q >= prev, "quantile must be monotone: p{p} {q} < {prev}");
+                prev = q;
+            }
+        });
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        forall("hist_merge_laws", 24, |g| {
+            let n = g.usize_in(0, 300);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 2000.0)).collect();
+            let cut1 = g.usize_in(0, n);
+            let cut2 = g.usize_in(cut1, n);
+            let a = hist_of(&xs[..cut1]);
+            let b = hist_of(&xs[cut1..cut2]);
+            let c = hist_of(&xs[cut2..]);
+
+            // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_same_shape(&left, &right);
+
+            // a ⊕ b == b ⊕ a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_same_shape(&ab, &ba);
+
+            // Either grouping matches recording everything in one pass,
+            // and quantiles (which never read `sum`) agree exactly.
+            let whole = hist_of(&xs);
+            assert_same_shape(&left, &whole);
+            for p in [0.0, 50.0, 99.0, 100.0] {
+                assert_eq!(left.quantile(p), whole.quantile(p));
+            }
+        });
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = hist_of(&[0.5, 1.5, 2.5]);
+        let mut merged = a.clone();
+        merged.merge(&LogHistogram::new());
+        assert_eq!(merged, a);
+        let mut from_empty = LogHistogram::new();
+        from_empty.merge(&a);
+        assert_same_shape(&from_empty, &a);
+        assert_eq!(from_empty.sum(), a.sum());
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_into_edge_buckets() {
+        // Sub-resolution and negative values land in the zero bucket;
+        // values beyond 2^14 s land in the top bucket. Quantiles stay
+        // inside the exact observed [min, max].
+        let h = hist_of(&[-3.0, 1e-15, 1e9]);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), -3.0);
+        assert_eq!(h.max(), 1e9);
+        for p in [0.0, 50.0, 100.0] {
+            let q = h.quantile(p);
+            assert!((-3.0..=1e9).contains(&q));
+        }
+        assert_eq!(h.quantile(100.0), 1e9);
+    }
+
+    #[test]
+    fn json_is_sparse_and_constant_size_in_samples() {
+        let mut small = LogHistogram::new();
+        let mut big = LogHistogram::new();
+        for i in 0..100 {
+            small.record(1.0 + (i % 10) as f64);
+        }
+        for i in 0..100_000 {
+            big.record(1.0 + (i % 10) as f64);
+        }
+        // Same value support ⇒ same occupied buckets ⇒ near-identical
+        // JSON size despite 1000x the samples (only digit counts grow).
+        assert_eq!(small.occupied_buckets(), big.occupied_buckets());
+        let s = small.to_json().to_string_compact();
+        let b = big.to_json().to_string_compact();
+        assert!(b.len() < s.len() + 64, "JSON must be O(buckets): {} vs {}", b.len(), s.len());
+        assert!(crate::util::json::Json::parse(&b).is_ok());
+    }
+
+    #[test]
+    fn bucket_index_is_exact_bit_arithmetic() {
+        // Octave boundaries land in the first sub-bucket of their
+        // octave, never the previous one (no log2 rounding).
+        for e in MIN_EXP..=MAX_EXP {
+            let v = f64::from_bits(((1023 + e) as u64) << 52);
+            let idx = LogHistogram::index_of(v);
+            assert_eq!(idx, 1 + (e - MIN_EXP) as usize * SUB_BUCKETS, "2^{e}");
+            // The representative of that bucket is within half a
+            // sub-bucket of the boundary value.
+            let rep = LogHistogram::representative(idx);
+            assert!((rep - v).abs() <= v / SUB_BUCKETS as f64);
+        }
+        assert_eq!(LogHistogram::index_of(0.0), 0);
+        assert_eq!(LogHistogram::index_of(1e30), NUM_BUCKETS - 1);
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod cli;
 pub mod fxhash;
+pub mod histogram;
 pub mod json;
 pub mod prop;
 pub mod rng;

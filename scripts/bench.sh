@@ -5,13 +5,19 @@
 # O(N) reference loop), the heterogeneous big/small fleet drain
 # (cost-aware vs occupancy-only routing), and the SLO knee sweep
 # (arrival rate vs SLO attainment on the paper fleet, deadline-aware
-# shedding vs shed-on-full at overload), asserting the ISSUE targets
+# shedding vs shed-on-full at overload), and the observability tier
+# (histogram quantile accuracy vs exact-vector percentiles, flight-
+# recorder overhead, constant-size metrics memory, trace-replay
+# round trip), asserting the ISSUE targets
 # (>=5x DSE, >=1.5x fleet throughput at K=3, >=5x scheduler events/sec
 # at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet,
-# >=1.2x goodput from deadline-aware shedding at overload) and writing
+# >=1.2x goodput from deadline-aware shedding at overload, histogram
+# p50/p99 within 1% of exact percentiles, recorder overhead <= 5%,
+# O(buckets) metrics memory, bit-identical trace replay) and writing
 # BENCH_sim.json at the repo root.
 #
 # Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
+#                         [--obs]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
 #                    gating the 64-device scheduler point, the 2-profile
 #                    and closed-loop heap-vs-reference parities, and a
@@ -27,6 +33,10 @@
 #                    7 swept arrival rates) even together with --smoke;
 #                    the section itself always runs and lands in
 #                    BENCH_sim.json.
+#   --obs            force the full-size obs section (full-scale
+#                    quantile-accuracy and 64-device recorder-overhead
+#                    runs) even together with --smoke; the section
+#                    itself always runs and lands in BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

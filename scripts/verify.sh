@@ -24,8 +24,27 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # (arrival feedback included), and a tiny slo_knee point must show
 # deadline-aware shedding lifting goodput >= 1.2x over shed-on-full
 # admission at overload (all simulated-time results, deterministic
-# under host load).
+# under host load). The obs section gates the streaming-metrics tier:
+# histogram quantiles within 1% of exact-vector percentiles, recorder
+# overhead <= 5%, constant-size histogram JSON across 10x request
+# counts, and trace-replay bit-identity.
 cargo bench --bench sim_hot_path -- --smoke
+
+echo "== obs smoke (flight recorder round trip) =="
+# End-to-end CLI gate for the observability tier: trace a 16-device
+# run to a temp file, then replay the trace and require the replayed
+# histograms/counters to match the live report exactly (exit 1 on any
+# divergent key).
+obs_tmp="$(mktemp -d)"
+trap 'rm -rf "$obs_tmp"' EXIT
+(
+    cd "$obs_tmp"
+    "$OLDPWD/target/release/difflight" cluster --devices 16 --requests 128 \
+        --steps 8 --slo-ms 30,100 --trace trace.jsonl >/dev/null
+    "$OLDPWD/target/release/difflight" trace replay trace.jsonl \
+        --expect artifacts/cluster_report.json >/dev/null
+)
+echo "obs smoke: replayed quantiles match the live report"
 
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
