@@ -301,3 +301,44 @@ pub fn slo_drain(
             .with_slos(vec![slo_s]);
     cluster.serve_source(source, &mut SimExecutor).expect("slo drain")
 }
+
+// ---------------------------------------------------------------------
+// Resilience workload, shared with the `resilience` section of
+// `sim_hot_path`: the fleet-scale synthetic workload drained under a
+// fault plan. Offline semantics (unbounded backlog, no deadlines), so
+// any request loss is fault loss, never admission shedding — which is
+// what makes "zero lost with migration" a structural gate rather than a
+// tuning-dependent one.
+// ---------------------------------------------------------------------
+
+/// Drain the fleet-scale workload through `devices` dies under `plan`,
+/// with step-boundary checkpoint/migrate recovery on or off.
+pub fn churn_drain(
+    devices: usize,
+    plan: difflight::cluster::FaultPlan,
+    migration: bool,
+) -> difflight::cluster::ClusterOutcome {
+    use difflight::arch::cost::Cost;
+    use difflight::cluster::{
+        synthetic_workload, ClusterConfig, ShardPolicy, SimExecutor, StepScheduler,
+    };
+    use difflight::coordinator::request::SamplerKind;
+    use difflight::runtime::manifest::NoiseSchedule;
+
+    let cfg = ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(16)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded)
+        .faults(plan)
+        .migration(migration);
+    let costs = vec![Cost::new(1e-3, 2e-3, 1_000_000, 4); cfg.fleet.len()];
+    let workload = synthetic_workload(
+        devices * FLEET_SCALE_REQS_PER_DEVICE,
+        13,
+        SamplerKind::Ddim { steps: FLEET_SCALE_STEPS },
+        1e-5,
+    );
+    let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), FLEET_SCALE_ELEMS);
+    s.serve(workload, &mut SimExecutor).expect("churn drain")
+}

@@ -46,6 +46,16 @@
 //!    a raw vector would need) while the request count grows 10x —
 //!    and (d) a recorded trace round-trips through JSON lines and
 //!    replays to metrics that match the live report bit-for-bit.
+//! 7. **Resilience** — device churn under fault injection (ISSUE 7).
+//!    Asserts (a) crashing 10% of a fleet mid-drain keeps goodput
+//!    ≥ 0.8x the zero-fault baseline, (b) step-boundary
+//!    checkpoint/migrate recovery loses zero requests (and the
+//!    `--no-migration` ablation loses the victims, proving the
+//!    mechanism is what saves them), (c) a seeded mixed fault plan
+//!    (crash + outage + straggler + random recal churn) is
+//!    bit-identical between the heap event core and the
+//!    `ReferenceScheduler`, and records (d) an MTBF × fleet-size
+//!    recalibration sweep as goodput-degradation curves.
 //!
 //! `--smoke` runs a miniature of everything (tiny design space, 200
 //! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
@@ -56,7 +66,8 @@
 //! the full-size hetero sweep (`scripts/bench.sh --hetero`); `--slo`
 //! forces the full-size knee sweep (`scripts/bench.sh --slo`); `--obs`
 //! forces the full-size observability section (`scripts/bench.sh
-//! --obs`).
+//! --obs`); `--faults` forces the full-size resilience section
+//! (`scripts/bench.sh --faults`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -105,7 +116,15 @@
 //!       "overhead_frac": 1 - traced/plain },
 //!     "memory": { "samples_1x": N, "hist_bytes_1x": N,
 //!       "samples_10x": N, "hist_bytes_10x": N, "growth": x },
-//!     "replay": { "events": N, "bit_identical": true } }
+//!     "replay": { "events": N, "bit_identical": true } },
+//!   "resilience": { "devices": N, "requests": N, "crashed": N,
+//!     "baseline_goodput_samples_per_s": x,
+//!     "degraded": { "goodput_ratio": x, "interrupted": N,
+//!       "migrated": N, "retried": N, "lost": 0, "downtime_s": x },
+//!     "ablation_lost": N, "parity_bit_identical": true,
+//!     "sweep": [ { "devices": N, "mtbf_over_makespan": x,
+//!                  "outages": N, "downtime_s": x,
+//!                  "goodput_ratio": x } ] }
 //! }
 //! ```
 
@@ -118,8 +137,9 @@ use std::time::Instant;
 use difflight::arch::ArchConfig;
 use difflight::cluster::trace::{check_against_report, parse_jsonl, replay};
 use difflight::cluster::{
-    profile_step_costs, synthetic_workload, Cluster, ClusterConfig, ClusterOutcome,
-    ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor, StepScheduler, TraceSink,
+    default_recal_mttr_s, profile_step_costs, synthetic_workload, Cluster, ClusterConfig,
+    ClusterOutcome, FaultPlan, ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor,
+    StepScheduler, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
@@ -669,6 +689,156 @@ fn main() {
         parsed.len()
     };
 
+    // ---- (g) resilience: device churn and degradation curves ----
+    // Fault injection + step-boundary migration (ISSUE 7). Every gate
+    // here is a deterministic simulated-time result, so all of them run
+    // in smoke mode too; `--faults` forces the full-size fleet and the
+    // full MTBF sweep (`scripts/bench.sh --faults`).
+    let faults_full = !smoke || std::env::args().any(|a| a == "--faults");
+    let res_devices = if faults_full { 20 } else { 10 };
+    let res_requests = res_devices * harness::FLEET_SCALE_REQS_PER_DEVICE;
+    harness::section(&format!(
+        "resilience ({}): {res_devices} devices x {} reqs/device, crash 10% mid-drain",
+        if faults_full { "full" } else { "smoke" },
+        harness::FLEET_SCALE_REQS_PER_DEVICE,
+    ));
+
+    // Gates (a)+(b): crash 10% of the fleet a quarter of the way into
+    // the zero-fault makespan. Migration must rescue every in-flight
+    // and queued victim (offline semantics: nothing else can drop
+    // work), and goodput must hold >= 0.8x the zero-fault baseline.
+    let res_baseline = harness::churn_drain(res_devices, FaultPlan::default(), true);
+    assert_eq!(res_baseline.results.len(), res_requests, "zero-fault drain serves everything");
+    let res_m0 = res_baseline.metrics.makespan_s;
+    let crash_n = res_devices / 10;
+    let mut crash_plan = FaultPlan::new();
+    for d in 0..crash_n {
+        crash_plan = crash_plan.crash_at(0.25 * res_m0, d);
+    }
+    let degraded = harness::churn_drain(res_devices, crash_plan.clone(), true);
+    let baseline_goodput = res_baseline.metrics.goodput_samples_per_s();
+    let goodput_ratio = degraded.metrics.goodput_samples_per_s() / baseline_goodput;
+    println!(
+        "crash {crash_n}/{res_devices} at 0.25x makespan: {} interrupted, {} migrated, \
+         {} requeued, {} lost, downtime {:.1} ms, goodput {goodput_ratio:.3}x baseline",
+        degraded.metrics.interrupted(),
+        degraded.metrics.migrated(),
+        degraded.metrics.retried(),
+        degraded.metrics.lost(),
+        1e3 * degraded.metrics.downtime_s(),
+    );
+    assert_eq!(
+        degraded.results.len(),
+        res_requests,
+        "step-boundary migration must rescue every fault victim"
+    );
+    assert_eq!(degraded.metrics.lost(), 0, "no request may be lost with migration enabled");
+    assert!(
+        degraded.metrics.interrupted() > 0,
+        "a mid-drain crash must interrupt in-flight work (else the gate tests nothing)"
+    );
+    assert!(
+        goodput_ratio >= 0.8,
+        "10% device loss must keep goodput >= 0.8x the zero-fault baseline \
+         (got {goodput_ratio:.3}x)"
+    );
+    // Ablation: with migration off the same crashes lose the victims,
+    // so the rescue above is attributable to the mechanism.
+    let ablation = harness::churn_drain(res_devices, crash_plan, false);
+    let ablation_lost = ablation.metrics.lost();
+    println!(
+        "--no-migration ablation: {} served, {ablation_lost} lost",
+        ablation.results.len()
+    );
+    assert!(ablation_lost > 0, "the ablation must lose victims, else migration is untested");
+
+    // Gate (c): heap core == reference loop under a seeded mixed plan
+    // (crash + recal outage + straggler + random recal churn), metrics,
+    // placements, samples and timings all bit-identical.
+    {
+        let base_cfg = ClusterConfig::with_devices(8)
+            .capacity(2)
+            .max_queue(8)
+            .backlog(usize::MAX)
+            .policy(ShardPolicy::LeastLoaded);
+        let costs = profile_step_costs(&base_cfg).expect("paper fleet must price");
+        let schedule = NoiseSchedule::linear(1000);
+        let reqs = synthetic_workload(96, 37, SamplerKind::Ddim { steps: 8 }, 1e-5);
+        // Probe the fault-free makespan so the plan lands mid-drain
+        // regardless of the priced step time.
+        let mut probe = StepScheduler::new(&base_cfg, &costs, schedule.clone(), 256);
+        let mp = probe
+            .serve(reqs.clone(), &mut SimExecutor)
+            .expect("probe serve")
+            .metrics
+            .makespan_s;
+        let mut plan = FaultPlan::new()
+            .crash_at(0.2 * mp, 1)
+            .outage_at(0.35 * mp, 3, 0.15 * mp)
+            .slow_at(0.1 * mp, 5, 2.5);
+        plan.extend(&FaultPlan::recal(8, mp, 0.05 * mp, mp, 9));
+        let cfg = base_cfg.faults(plan);
+        let mut heap = StepScheduler::new(&cfg, &costs, schedule.clone(), 256);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, schedule, 256);
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).expect("heap serve");
+        let b = reference.serve(reqs, &mut SimExecutor).expect("reference serve");
+        assert_eq!(a.metrics, b.metrics, "churn parity: metrics diverged");
+        assert_eq!(a.rejected, b.rejected, "churn parity: rejection set diverged");
+        assert_eq!(a.results.len(), b.results.len());
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device), "churn parity: placement");
+            assert_eq!(ra.sample, rb.sample, "churn parity: samples");
+            assert!(ra.finish_s == rb.finish_s, "churn parity: timings");
+        }
+        println!(
+            "churn parity gate: heap == reference under {} fault events \
+             ({} sched events, bit-identical)",
+            cfg.faults.len(),
+            a.metrics.sched_events
+        );
+    }
+
+    // Curve (d): MTBF x fleet-size recalibration sweep. Each point
+    // drains the fleet-scale workload under seeded recal churn with the
+    // default full-array-relock MTTR and reports goodput relative to
+    // that fleet's zero-fault baseline.
+    let (sweep_sizes, mtbf_mults): (&[usize], &[f64]) = if faults_full {
+        (&[8, 16, 32], &[0.5, 1.0, 2.0, 4.0])
+    } else {
+        (&[4, 8], &[1.0, 4.0])
+    };
+    let mut res_sweep = Vec::new();
+    for &d in sweep_sizes {
+        let base = harness::churn_drain(d, FaultPlan::default(), true);
+        let g0 = base.metrics.goodput_samples_per_s();
+        for &mult in mtbf_mults {
+            let plan = FaultPlan::recal(
+                d,
+                mult * base.metrics.makespan_s,
+                default_recal_mttr_s(),
+                base.metrics.makespan_s,
+                9,
+            );
+            let outages = plan.len();
+            let out = harness::churn_drain(d, plan, true);
+            assert_eq!(out.metrics.lost(), 0, "recal churn with migration must lose nothing");
+            let ratio = out.metrics.goodput_samples_per_s() / g0;
+            println!(
+                "{d:>3} devices, mtbf {mult:.1}x makespan: {outages:>3} outages, \
+                 downtime {:>7.1} ms, goodput {ratio:.3}x",
+                1e3 * out.metrics.downtime_s(),
+            );
+            res_sweep.push(
+                Json::obj()
+                    .set("devices", d)
+                    .set("mtbf_over_makespan", mult)
+                    .set("outages", outages)
+                    .set("downtime_s", out.metrics.downtime_s())
+                    .set("goodput_ratio", ratio),
+            );
+        }
+    }
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -797,6 +967,27 @@ fn main() {
                     "replay",
                     Json::obj().set("events", replay_events).set("bit_identical", true),
                 ),
+        )
+        .set(
+            "resilience",
+            Json::obj()
+                .set("devices", res_devices)
+                .set("requests", res_requests)
+                .set("crashed", crash_n)
+                .set("baseline_goodput_samples_per_s", baseline_goodput)
+                .set(
+                    "degraded",
+                    Json::obj()
+                        .set("goodput_ratio", goodput_ratio)
+                        .set("interrupted", degraded.metrics.interrupted())
+                        .set("migrated", degraded.metrics.migrated())
+                        .set("retried", degraded.metrics.retried())
+                        .set("lost", degraded.metrics.lost())
+                        .set("downtime_s", degraded.metrics.downtime_s()),
+                )
+                .set("ablation_lost", ablation_lost)
+                .set("parity_bit_identical", true)
+                .set("sweep", Json::Arr(res_sweep)),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

@@ -98,6 +98,16 @@ pub struct Device {
     /// Position within the reuse cycle; `0` ⇒ the next fused step runs
     /// the full UNet.
     cycle_pos: usize,
+    /// Straggler multiplier on step latency and drain weight (1.0 =
+    /// nominal; compounds across `Slow` fault events).
+    slowdown: f64,
+    /// Down (crashed or recalibrating): excluded from routing, stealing
+    /// and shed attribution until recovery.
+    down: bool,
+    /// Down permanently — no recovery event is pending.
+    crashed: bool,
+    /// When the current down window started (valid while `down`).
+    down_since_s: f64,
     // --- accounting ---
     pub steps_executed: u64,
     pub samples_completed: u64,
@@ -119,6 +129,21 @@ pub struct Device {
     /// on this device (fixed-size histogram; snapshotted into
     /// [`crate::cluster::metrics::DeviceMetrics`]).
     pub admission_est: LogHistogram,
+    /// Simulated seconds this device spent down (crashed or
+    /// recalibrating) inside the serving window.
+    pub downtime_s: f64,
+    /// Resident (mid-generation) samples interrupted on this device by
+    /// its faults; each was checkpointed at the step boundary and
+    /// re-admitted elsewhere (or lost).
+    pub interrupted: u64,
+    /// Fault victims (resident or queued here) re-routed straight onto
+    /// another device.
+    pub migrated: u64,
+    /// Fault victims deferred to the fleet backlog for a later re-route.
+    pub retried: u64,
+    /// Fault victims shed because migration was off, the fleet was
+    /// full, or the re-admission deadline check failed.
+    pub lost: u64,
 }
 
 impl Device {
@@ -158,6 +183,10 @@ impl Device {
             batch_marginal,
             busy_until_s: None,
             cycle_pos: 0,
+            slowdown: 1.0,
+            down: false,
+            crashed: false,
+            down_since_s: 0.0,
             steps_executed: 0,
             samples_completed: 0,
             busy_s: 0.0,
@@ -168,6 +197,11 @@ impl Device {
             reuse_misses: 0,
             shed: 0,
             admission_est: LogHistogram::new(),
+            downtime_s: 0.0,
+            interrupted: 0,
+            migrated: 0,
+            retried: 0,
+            lost: 0,
         }
     }
 
@@ -208,7 +242,7 @@ impl Device {
         } else {
             self.step_base.latency_s
         };
-        ((eff * 1e9).ceil() as u64).max(1)
+        ((eff * self.slowdown * 1e9).ceil() as u64).max(1)
     }
 
     /// SLO admission estimate: simulated seconds until a request of
@@ -250,7 +284,7 @@ impl Device {
     pub fn step_latency_s(&self, k: usize, full: bool) -> f64 {
         assert!(k >= 1);
         let base = if full { &self.step_base } else { &self.step_shallow };
-        base.latency_s * (1.0 + self.batch_marginal * (k - 1) as f64)
+        base.latency_s * self.slowdown * (1.0 + self.batch_marginal * (k - 1) as f64)
     }
 
     /// Simulated completion time of the in-flight step, if stepping.
@@ -260,6 +294,59 @@ impl Device {
 
     pub fn is_idle(&self) -> bool {
         self.busy_until_s.is_none()
+    }
+
+    /// Down (crashed or recalibrating) — unroutable, unstealable.
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    /// Down with no recovery pending.
+    pub fn is_crashed(&self) -> bool {
+        self.crashed
+    }
+
+    /// Current straggler multiplier (1.0 = nominal).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
+    }
+
+    /// Straggler onset: compound `factor` into the latency multiplier.
+    /// Applies immediately (the in-flight step, if any, keeps its
+    /// already-scheduled completion; subsequent steps are slower).
+    pub fn apply_slowdown(&mut self, factor: f64) {
+        assert!(factor >= 1.0 && factor.is_finite(), "slowdown factor must be >= 1");
+        self.slowdown *= factor;
+    }
+
+    /// Take the device down at `now_s` (step boundary — never mid-step).
+    /// `permanent` marks a crash; an outage expects a later
+    /// [`Device::set_recovered`].
+    pub fn set_down(&mut self, now_s: f64, permanent: bool) {
+        assert!(self.busy_until_s.is_none(), "device {} went down mid-step", self.id.0);
+        assert!(!self.down, "device {} already down", self.id.0);
+        self.down = true;
+        self.crashed = permanent;
+        self.down_since_s = now_s;
+    }
+
+    /// Recalibration finished at `now_s`: account the downtime and
+    /// rejoin the routable fleet.
+    pub fn set_recovered(&mut self, now_s: f64) {
+        assert!(self.down && !self.crashed, "recovery on a device that is not recalibrating");
+        self.downtime_s += (now_s - self.down_since_s).max(0.0);
+        self.down = false;
+    }
+
+    /// Close the accounting window at `end_s`: a device still down adds
+    /// the tail of its down window (clamped to ≥ 0 — a fault scheduled
+    /// past the last completion costs nothing). Called by both
+    /// scheduler cores just before metrics snapshot.
+    pub fn finalize_downtime(&mut self, end_s: f64) {
+        if self.down {
+            self.downtime_s += (end_s - self.down_since_s).max(0.0);
+            self.down_since_s = end_s;
+        }
     }
 
     /// Begin one fused step over `k` samples at simulated time `now_s`;
@@ -312,6 +399,15 @@ impl Device {
         self.shed = 0;
         self.admission_est = LogHistogram::new();
         self.cycle_pos = 0;
+        self.slowdown = 1.0;
+        self.down = false;
+        self.crashed = false;
+        self.down_since_s = 0.0;
+        self.downtime_s = 0.0;
+        self.interrupted = 0;
+        self.migrated = 0;
+        self.retried = 0;
+        self.lost = 0;
     }
 
 }
@@ -526,5 +622,54 @@ mod tests {
         let mut d = dev();
         d.begin_step(0.0, 1, true);
         d.begin_step(0.1, 1, true);
+    }
+
+    #[test]
+    fn slowdown_scales_latency_and_drain_weight() {
+        let mut d = dev();
+        let (l0, w0) = (d.step_latency_s(2, true), d.drain_ns());
+        d.apply_slowdown(2.0);
+        assert!((d.step_latency_s(2, true) - 2.0 * l0).abs() < 1e-15);
+        assert_eq!(d.drain_ns(), 2 * w0);
+        // Factors compound.
+        d.apply_slowdown(1.5);
+        assert_eq!(d.drain_ns(), 3 * w0);
+        assert!((d.slowdown() - 3.0).abs() < 1e-12);
+        // Reset rewinds the straggler to nominal.
+        d.reset_accounting();
+        assert_eq!(d.drain_ns(), w0);
+    }
+
+    #[test]
+    fn down_windows_account_downtime() {
+        let mut d = dev();
+        assert!(!d.is_down());
+        d.set_down(1.0, false);
+        assert!(d.is_down() && !d.is_crashed());
+        d.set_recovered(1.5);
+        assert!(!d.is_down());
+        assert!((d.downtime_s - 0.5).abs() < 1e-12);
+        // A crash never recovers; the window close accounts its tail.
+        d.set_down(2.0, true);
+        assert!(d.is_crashed());
+        d.finalize_downtime(3.25);
+        assert!((d.downtime_s - 1.75).abs() < 1e-12);
+        // A fault scheduled past the window end clamps to zero tail.
+        let mut late = dev();
+        late.set_down(5.0, true);
+        late.finalize_downtime(1.0);
+        assert_eq!(late.downtime_s, 0.0);
+        // Reset clears every fault field.
+        d.reset_accounting();
+        assert!(!d.is_down() && !d.is_crashed());
+        assert_eq!(d.downtime_s, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "went down mid-step")]
+    fn down_mid_step_panics() {
+        let mut d = dev();
+        d.begin_step(0.0, 1, true);
+        d.set_down(0.5, false);
     }
 }

@@ -1,0 +1,322 @@
+//! Deterministic fault injection for the fleet schedulers.
+//!
+//! A [`FaultPlan`] is a seeded, fully materialized schedule of device
+//! events — the churn a production photonic fleet actually sees:
+//!
+//! * **Crash** — permanent die loss for the rest of the serving window.
+//! * **Outage** — a thermal-recalibration window: the MR banks drift far
+//!   enough that the die drops out for `mttr_s` of TO retuning, then
+//!   rejoins (see [`crate::devices::tuning`]; the default MTTR prices a
+//!   full-array TO relock at the paper's 4 µs per-ring time constant).
+//! * **Slow** — straggler onset: every subsequent step on the device is
+//!   `factor`× slower (multiplies `drain_ns`, the cost-aware router
+//!   weight, so routing re-balances around the degraded die).
+//!
+//! Plans are plain data, ordered by `(time, insertion)`; both scheduler
+//! cores inject them as first-class events, which is what keeps the
+//! heap-vs-reference parity oracle valid under churn. Faults apply at
+//! **step boundaries**: a die that is mid-step when its fault fires
+//! finishes that step first (latents are only consistent between UNet
+//! calls), then goes down and its resident/queued samples migrate.
+//!
+//! Grammar-wise there are two surfaces: the compact CLI spec (parsed in
+//! [`crate::cluster::load::parse_fault_spec`], next to the other CLI
+//! grammars) and the strict-keyed JSON form parsed here by
+//! [`parse_faults_json`] (mirroring `profile::parse_fleet_json`).
+
+use crate::devices::DeviceParams;
+use crate::util::json::Json;
+use crate::util::rng::XorShift;
+
+/// MR rings that must relock after a thermal excursion — the full
+/// weight-bank array of the paper die (64×64).
+const RECAL_RINGS: f64 = 4096.0;
+
+/// Default thermal-recalibration outage duration: a full-array TO
+/// relock at the paper's per-ring TO tuning latency (4 µs × 4096 rings
+/// ≈ 16.4 ms). Grounded in [`DeviceParams::paper`] rather than a magic
+/// number so a re-parameterized device re-prices its own churn.
+pub fn default_recal_mttr_s() -> f64 {
+    DeviceParams::paper().to_tuning_latency_s * RECAL_RINGS
+}
+
+/// What happens to a device at a fault instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Permanent loss: the device never serves again this window.
+    Crash,
+    /// Down for `mttr_s` (measured from the step-boundary apply time),
+    /// then the device rejoins the routable fleet.
+    Outage { mttr_s: f64 },
+    /// Straggler onset: step latency and drain weight multiplied by
+    /// `factor` from now on (factors compound if repeated).
+    Slow { factor: f64 },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time at which the fault fires.
+    pub time_s: f64,
+    /// Target device id; events aimed beyond the fleet are ignored.
+    pub device: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule. Construction order breaks time ties
+/// (stable sort), so a plan is reproducible bit-for-bit from its spec.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Crash `device` permanently at `time_s`.
+    pub fn crash_at(mut self, time_s: f64, device: usize) -> Self {
+        self.push(FaultEvent { time_s, device, kind: FaultKind::Crash });
+        self
+    }
+
+    /// Take `device` down at `time_s` for `mttr_s` of recalibration.
+    pub fn outage_at(mut self, time_s: f64, device: usize, mttr_s: f64) -> Self {
+        self.push(FaultEvent { time_s, device, kind: FaultKind::Outage { mttr_s } });
+        self
+    }
+
+    /// Slow `device` down by `factor`× from `time_s` on.
+    pub fn slow_at(mut self, time_s: f64, device: usize, factor: f64) -> Self {
+        self.push(FaultEvent { time_s, device, kind: FaultKind::Slow { factor } });
+        self
+    }
+
+    pub fn push(&mut self, ev: FaultEvent) {
+        assert!(ev.time_s >= 0.0 && ev.time_s.is_finite(), "fault time must be finite and >= 0");
+        if let FaultKind::Outage { mttr_s } = ev.kind {
+            assert!(mttr_s > 0.0 && mttr_s.is_finite(), "outage mttr must be > 0");
+        }
+        if let FaultKind::Slow { factor } = ev.kind {
+            assert!(factor >= 1.0 && factor.is_finite(), "slowdown factor must be >= 1");
+        }
+        self.events.push(ev);
+    }
+
+    /// Merge another plan's events into this one.
+    pub fn extend(&mut self, other: &FaultPlan) {
+        self.events.extend_from_slice(&other.events);
+    }
+
+    /// The schedule in injection order: stably sorted by time, ties
+    /// resolved by construction order. Both scheduler cores consume
+    /// exactly this sequence, which is what makes churn deterministic.
+    pub fn sorted(&self) -> Vec<FaultEvent> {
+        let mut evs = self.events.clone();
+        evs.sort_by(|a, b| a.time_s.total_cmp(&b.time_s));
+        evs
+    }
+
+    /// Seeded recalibration churn: every device in `0..devices` suffers
+    /// outages with exponential inter-fault gaps of mean `mtbf_s`, each
+    /// lasting `mttr_s`, until `until_s`. Per-device independent RNG
+    /// streams (like the closed-loop clients), so one device's history
+    /// never perturbs another's draws and the plan is stable under
+    /// fleet resizing.
+    pub fn recal(devices: usize, mtbf_s: f64, mttr_s: f64, until_s: f64, seed: u64) -> Self {
+        assert!(mtbf_s > 0.0 && mtbf_s.is_finite(), "recal mtbf must be > 0");
+        assert!(mttr_s > 0.0 && mttr_s.is_finite(), "recal mttr must be > 0");
+        assert!(until_s >= 0.0 && until_s.is_finite(), "recal horizon must be finite and >= 0");
+        let mut plan = Self::new();
+        for d in 0..devices {
+            let mut rng = XorShift::new(seed ^ (d as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut t = 0.0f64;
+            loop {
+                // Exponential gap; max(1e-12) guards ln(0).
+                t += -mtbf_s * (1.0 - rng.next_f64()).max(1e-12).ln();
+                if t >= until_s {
+                    break;
+                }
+                plan.push(FaultEvent {
+                    time_s: t,
+                    device: d,
+                    kind: FaultKind::Outage { mttr_s },
+                });
+            }
+        }
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON form (`--faults-file`). Strict: unknown keys are errors, so a
+// typo'd field can never be silently ignored.
+// ---------------------------------------------------------------------
+
+fn float_field(obj: &Json, key: &str, what: &str) -> crate::Result<f64> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("{what}: missing or non-numeric {key:?}"))
+}
+
+fn uint_field(obj: &Json, key: &str, what: &str) -> crate::Result<usize> {
+    let v = float_field(obj, key, what)?;
+    anyhow::ensure!(v >= 0.0 && v.fract() == 0.0, "{what}: {key:?} must be a non-negative integer");
+    Ok(v as usize)
+}
+
+/// Parse the `--faults-file` JSON form:
+///
+/// ```json
+/// { "events": [
+///   { "kind": "crash",  "t": 0.002, "device": 3 },
+///   { "kind": "outage", "t": 0.001, "device": 7, "mttr": 0.016 },
+///   { "kind": "slow",   "t": 0.004, "device": 1, "factor": 2.5 }
+/// ] }
+/// ```
+///
+/// Unknown kinds and unknown keys are loud errors naming the offending
+/// event index.
+pub fn parse_faults_json(text: &str) -> crate::Result<FaultPlan> {
+    let root = Json::parse(text).map_err(|e| anyhow::anyhow!("faults file: {e}"))?;
+    let events = root
+        .get("events")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("faults file: missing \"events\" array"))?;
+    if let Json::Obj(pairs) = &root {
+        for (k, _) in pairs {
+            anyhow::ensure!(k == "events", "faults file: unknown key {k:?}");
+        }
+    }
+    let mut plan = FaultPlan::new();
+    for (i, ev) in events.iter().enumerate() {
+        let what = format!("faults file event {i}");
+        let kind = ev
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing \"kind\""))?;
+        let (fault, extra_key) = match kind {
+            "crash" => (FaultKind::Crash, None),
+            "outage" => {
+                let mttr = float_field(ev, "mttr", &what)?;
+                anyhow::ensure!(mttr > 0.0 && mttr.is_finite(), "{what}: mttr must be > 0");
+                (FaultKind::Outage { mttr_s: mttr }, Some("mttr"))
+            }
+            "slow" => {
+                let factor = float_field(ev, "factor", &what)?;
+                anyhow::ensure!(
+                    factor >= 1.0 && factor.is_finite(),
+                    "{what}: factor must be >= 1"
+                );
+                (FaultKind::Slow { factor }, Some("factor"))
+            }
+            other => anyhow::bail!("{what}: unknown kind {other:?} (crash | outage | slow)"),
+        };
+        let t = float_field(ev, "t", &what)?;
+        anyhow::ensure!(t >= 0.0 && t.is_finite(), "{what}: t must be finite and >= 0");
+        let device = uint_field(ev, "device", &what)?;
+        if let Json::Obj(pairs) = ev {
+            for (k, _) in pairs {
+                let known = k == "kind" || k == "t" || k == "device" || Some(k.as_str()) == extra_key;
+                anyhow::ensure!(known, "{what}: unknown key {k:?}");
+            }
+        }
+        plan.push(FaultEvent { time_s: t, device, kind: fault });
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_sorts_stably_by_time() {
+        let plan = FaultPlan::new()
+            .outage_at(2e-3, 1, 1e-3)
+            .crash_at(1e-3, 0)
+            .slow_at(1e-3, 2, 2.0);
+        let evs = plan.sorted();
+        assert_eq!(evs.len(), 3);
+        // Time order first; the 1e-3 tie keeps construction order
+        // (crash on 0 was pushed before slow on 2).
+        assert_eq!(evs[0].device, 0);
+        assert_eq!(evs[0].kind, FaultKind::Crash);
+        assert_eq!(evs[1].device, 2);
+        assert_eq!(evs[2].device, 1);
+        assert_eq!(evs[2].kind, FaultKind::Outage { mttr_s: 1e-3 });
+    }
+
+    #[test]
+    fn recal_is_deterministic_and_per_device_independent() {
+        let a = FaultPlan::recal(4, 1e-3, 2e-4, 5e-3, 7);
+        let b = FaultPlan::recal(4, 1e-3, 2e-4, 5e-3, 7);
+        assert_eq!(a, b, "same seed must reproduce the same plan");
+        assert!(!a.is_empty(), "5 MTBFs of horizon must draw some outages");
+        for ev in a.sorted() {
+            assert!(ev.time_s < 5e-3);
+            assert!(matches!(ev.kind, FaultKind::Outage { .. }));
+        }
+        // Growing the fleet only appends new devices' events: device 0's
+        // stream is untouched (independent per-device RNGs).
+        let wide = FaultPlan::recal(8, 1e-3, 2e-4, 5e-3, 7);
+        let d0 = |p: &FaultPlan| -> Vec<u64> {
+            p.sorted()
+                .into_iter()
+                .filter(|e| e.device == 0)
+                .map(|e| e.time_s.to_bits())
+                .collect()
+        };
+        assert_eq!(d0(&a), d0(&wide));
+        // A different seed draws a different schedule.
+        assert_ne!(a, FaultPlan::recal(4, 1e-3, 2e-4, 5e-3, 8));
+    }
+
+    #[test]
+    fn default_mttr_is_a_full_array_to_relock() {
+        // 4096 rings × 4 µs per-ring TO latency.
+        assert!((default_recal_mttr_s() - 4096.0 * 4e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_form_round_trips_and_rejects() {
+        let plan = parse_faults_json(
+            r#"{"events":[
+                {"kind":"crash","t":0.002,"device":3},
+                {"kind":"outage","t":0.001,"device":7,"mttr":0.016},
+                {"kind":"slow","t":0.004,"device":1,"factor":2.5}
+            ]}"#,
+        )
+        .unwrap();
+        let evs = plan.sorted();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, FaultKind::Outage { mttr_s: 0.016 });
+        assert_eq!(evs[1].kind, FaultKind::Crash);
+        assert_eq!(evs[2].kind, FaultKind::Slow { factor: 2.5 });
+        for (bad, needle) in [
+            (r#"{}"#, "events"),
+            (r#"{"events":[{"kind":"melt","t":0,"device":0}]}"#, "unknown kind"),
+            (r#"{"events":[{"kind":"crash","t":0}]}"#, "device"),
+            (r#"{"events":[{"kind":"outage","t":0,"device":0}]}"#, "mttr"),
+            (r#"{"events":[{"kind":"slow","t":0,"device":0,"factor":0.5}]}"#, "factor"),
+            (r#"{"events":[{"kind":"crash","t":-1,"device":0}]}"#, "t must"),
+            (r#"{"events":[{"kind":"crash","t":0,"device":0,"typo":1}]}"#, "unknown key"),
+            (r#"{"events":[],"typo":1}"#, "unknown key"),
+        ] {
+            let err = parse_faults_json(bad).expect_err(bad);
+            assert!(
+                format!("{err}").contains(needle),
+                "error for {bad} must mention {needle:?}: {err}"
+            );
+        }
+    }
+}

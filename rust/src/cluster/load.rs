@@ -45,6 +45,7 @@ use crate::coordinator::request::{RequestId, SamplerKind};
 use crate::util::fxhash::FxMap;
 use crate::util::rng::XorShift;
 
+use super::faults::{default_recal_mttr_s, FaultPlan};
 use super::scheduler::ClusterRequest;
 
 /// Expected arrivals per burst cycle: a `burst:RATE:DUTY` source packs
@@ -444,6 +445,109 @@ pub fn parse_slo_spec(spec: &str) -> crate::Result<Vec<f64>> {
     Ok(slos)
 }
 
+/// Parse `--faults` — comma-separated fault clauses — into a
+/// [`FaultPlan`] for a fleet of `devices` dies. Clauses:
+///
+/// * `crash@t=T[:dev=N]` — permanent die loss at T seconds.
+/// * `down@t=T[:dev=N][:mttr=S]` — thermal-recalibration outage at T,
+///   rejoining after `mttr` seconds (default: a full-array TO relock,
+///   [`default_recal_mttr_s`]).
+/// * `slow@t=T[:dev=N]:factor=F` — straggler onset, steps ×F slower.
+/// * `recal:mtbf=S[:mttr=S][:seed=N][:until=S]` — seeded random outages
+///   on every device (exponential MTBF, horizon `until`, default 1 s).
+///
+/// `dev` defaults to 0. The strict-keyed JSON `--faults-file` form is
+/// parsed by [`crate::cluster::faults::parse_faults_json`] instead.
+pub fn parse_fault_spec(spec: &str, devices: usize) -> crate::Result<FaultPlan> {
+    let usage = "--faults takes comma-separated clauses: crash@t=T[:dev=N] | \
+                 down@t=T[:dev=N][:mttr=S] | slow@t=T[:dev=N]:factor=F | \
+                 recal:mtbf=S[:mttr=S][:seed=N][:until=S] \
+                 (times in seconds; dev defaults to 0)";
+    let fnum = |key: &str, v: &str| -> crate::Result<f64> {
+        let x: f64 = v.parse().map_err(|_| anyhow::anyhow!("bad {key} value {v:?}; {usage}"))?;
+        anyhow::ensure!(x.is_finite(), "{key} must be finite; {usage}");
+        Ok(x)
+    };
+    let mut plan = FaultPlan::new();
+    for clause in spec.split(',') {
+        let clause = clause.trim();
+        anyhow::ensure!(!clause.is_empty(), "empty fault clause; {usage}");
+        let mut segs = clause.split(':');
+        let head = segs.next().expect("split yields at least one segment");
+        let (kind, at) = match head.split_once('@') {
+            Some((k, t_field)) => {
+                let t_val = t_field
+                    .strip_prefix("t=")
+                    .ok_or_else(|| anyhow::anyhow!("{k} needs @t=T, got {t_field:?}; {usage}"))?;
+                let t = fnum("t", t_val)?;
+                anyhow::ensure!(t >= 0.0, "t must be >= 0; {usage}");
+                (k, Some(t))
+            }
+            None => (head, None),
+        };
+        // Remaining segments are key=value fields; which keys are legal
+        // depends on the clause kind (unknown keys are loud errors).
+        let (mut dev, mut mttr, mut factor) = (None, None, None);
+        let (mut mtbf, mut seed, mut until) = (None, None, None);
+        for seg in segs {
+            let (k, v) = seg
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad field {seg:?} in {clause:?}; {usage}"))?;
+            match k {
+                "dev" if kind != "recal" => {
+                    dev = Some(v.parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!("bad dev value {v:?} in {clause:?}; {usage}")
+                    })?);
+                }
+                "mttr" if kind == "down" || kind == "recal" => mttr = Some(fnum("mttr", v)?),
+                "factor" if kind == "slow" => factor = Some(fnum("factor", v)?),
+                "mtbf" if kind == "recal" => mtbf = Some(fnum("mtbf", v)?),
+                "until" if kind == "recal" => until = Some(fnum("until", v)?),
+                "seed" if kind == "recal" => {
+                    seed = Some(v.parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!("bad seed value {v:?} in {clause:?}; {usage}")
+                    })?);
+                }
+                _ => anyhow::bail!("unknown field {k:?} in {clause:?}; {usage}"),
+            }
+        }
+        match kind {
+            "crash" | "down" | "slow" => {
+                let t = at
+                    .ok_or_else(|| anyhow::anyhow!("{kind} needs @t=T in {clause:?}; {usage}"))?;
+                match kind {
+                    "crash" => plan = plan.crash_at(t, dev.unwrap_or(0)),
+                    "down" => {
+                        let m = mttr.unwrap_or_else(default_recal_mttr_s);
+                        anyhow::ensure!(m > 0.0, "mttr must be > 0; {usage}");
+                        plan = plan.outage_at(t, dev.unwrap_or(0), m);
+                    }
+                    _ => {
+                        let f = factor.ok_or_else(|| {
+                            anyhow::anyhow!("slow needs factor=F in {clause:?}; {usage}")
+                        })?;
+                        anyhow::ensure!(f >= 1.0, "factor must be >= 1; {usage}");
+                        plan = plan.slow_at(t, dev.unwrap_or(0), f);
+                    }
+                }
+            }
+            "recal" => {
+                anyhow::ensure!(at.is_none(), "recal takes no @t; {usage}");
+                let mtbf = mtbf
+                    .ok_or_else(|| anyhow::anyhow!("recal needs mtbf=S in {clause:?}; {usage}"))?;
+                anyhow::ensure!(mtbf > 0.0, "mtbf must be > 0; {usage}");
+                let m = mttr.unwrap_or_else(default_recal_mttr_s);
+                anyhow::ensure!(m > 0.0, "mttr must be > 0; {usage}");
+                let horizon = until.unwrap_or(1.0);
+                anyhow::ensure!(horizon >= 0.0, "until must be >= 0; {usage}");
+                plan.extend(&FaultPlan::recal(devices, mtbf, m, horizon, seed.unwrap_or(0)));
+            }
+            other => anyhow::bail!("unknown fault kind {other:?} in {clause:?}; {usage}"),
+        }
+    }
+    Ok(plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -668,6 +772,40 @@ mod tests {
             let err = parse_slo_spec(bad).expect_err(&format!("{bad:?} must be rejected"));
             assert!(
                 format!("{err}").contains("--slo-ms"),
+                "error for {bad:?} must name the flag: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_grammar_parses_and_rejects() {
+        use super::super::faults::FaultKind;
+        let plan = parse_fault_spec(
+            "crash@t=0.002:dev=3, down@t=0.001:dev=7:mttr=0.016, slow@t=0.004:factor=2.5",
+            16,
+        )
+        .unwrap();
+        let evs = plan.sorted();
+        assert_eq!(evs.len(), 3);
+        assert_eq!((evs[0].device, evs[0].kind), (7, FaultKind::Outage { mttr_s: 0.016 }));
+        assert_eq!((evs[1].device, evs[1].kind), (3, FaultKind::Crash));
+        assert_eq!((evs[2].device, evs[2].kind), (0, FaultKind::Slow { factor: 2.5 }));
+        // Omitted mttr prices a full-array TO relock; omitted dev is 0.
+        let d = parse_fault_spec("down@t=0", 4).unwrap().sorted();
+        assert_eq!(d[0].device, 0);
+        assert_eq!(d[0].kind, FaultKind::Outage { mttr_s: default_recal_mttr_s() });
+        // recal expands to the seeded plan for the whole fleet.
+        let r = parse_fault_spec("recal:mtbf=0.001:mttr=0.0002:seed=7:until=0.005", 4).unwrap();
+        assert_eq!(r, FaultPlan::recal(4, 1e-3, 2e-4, 5e-3, 7));
+        for bad in [
+            "", "crash", "crash@0.5", "crash@t=x", "crash@t=-1", "crash@t=0:dev=x",
+            "crash@t=0:mttr=1", "down@t=0:mttr=0", "slow@t=0", "slow@t=0:factor=0.5",
+            "recal", "recal@t=0:mtbf=1", "recal:mtbf=0", "recal:mtbf=1:typo=2",
+            "recal:mtbf=1:dev=0", "melt@t=0", "crash@t=0,,down@t=0",
+        ] {
+            let err = parse_fault_spec(bad, 4).expect_err(&format!("{bad:?} must be rejected"));
+            assert!(
+                format!("{err}").contains("--faults"),
                 "error for {bad:?} must name the flag: {err}"
             );
         }

@@ -45,8 +45,22 @@ pub struct DeviceMetrics {
     /// Requests shed by admission control, attributed to this device
     /// (deadline sheds: the device the router picked; full-fleet sheds:
     /// the device closest to draining). Sums across the fleet to the
-    /// total shed count.
+    /// total shed count *minus* the unattributed total-outage bucket
+    /// ([`FleetMetrics::shed_unattributed`]).
     pub shed: u64,
+    /// Simulated seconds this device spent down (crashed or in a
+    /// recalibration outage), clamped to the serving window.
+    pub downtime_s: f64,
+    /// In-flight samples interrupted at a step boundary when this
+    /// device went down.
+    pub interrupted: u64,
+    /// Fault victims re-routed straight onto another device.
+    pub migrated: u64,
+    /// Fault victims deferred to the fleet backlog for later re-entry.
+    pub retried: u64,
+    /// Fault victims dropped: migration disabled, no capacity anywhere,
+    /// or doomed under their deadline given remaining work.
+    pub lost: u64,
     /// End-to-end latency of completions retired by this device.
     pub latency: LogHistogram,
     /// Queue wait (arrival → first step) of those completions.
@@ -71,6 +85,11 @@ impl DeviceMetrics {
             reuse_hits: d.reuse_hits,
             reuse_misses: d.reuse_misses,
             shed: d.shed,
+            downtime_s: d.downtime_s,
+            interrupted: d.interrupted,
+            migrated: d.migrated,
+            retried: d.retried,
+            lost: d.lost,
             latency: LogHistogram::new(),
             queue: LogHistogram::new(),
             admission_est: d.admission_est.clone(),
@@ -120,6 +139,35 @@ impl DeviceMetrics {
             .set("reuse_hits", self.reuse_hits)
             .set("reuse_misses", self.reuse_misses)
             .set("shed", self.shed)
+            .set("downtime_s", self.downtime_s)
+            .set("interrupted", self.interrupted)
+            .set("migrated", self.migrated)
+            .set("retried", self.retried)
+            .set("lost", self.lost)
+    }
+}
+
+/// What became of one fault victim (see [`FleetMetrics::record_migration`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrateOutcome {
+    /// Re-routed straight onto an up device.
+    Migrated,
+    /// Deferred to the fleet backlog for re-entry at a step boundary.
+    Retried,
+    /// Dropped — no capacity, doomed under its deadline, or migration
+    /// disabled.
+    Lost,
+}
+
+impl MigrateOutcome {
+    /// Decode from the trace encoding of a migrate target: a device id
+    /// `>= 0`, `-1` for the backlog, `-2` for a loss.
+    pub fn from_target(to: i64) -> Self {
+        match to {
+            t if t >= 0 => MigrateOutcome::Migrated,
+            -1 => MigrateOutcome::Retried,
+            _ => MigrateOutcome::Lost,
+        }
     }
 }
 
@@ -228,6 +276,14 @@ pub struct ClassMetrics {
     pub shed: u64,
     /// Shed requests that carried a deadline (count as SLO misses).
     pub shed_tracked: u64,
+    /// In-flight samples of this class interrupted by a device fault.
+    pub interrupted: u64,
+    /// Fault victims of this class re-routed onto another device.
+    pub migrated: u64,
+    /// Fault victims of this class deferred to the fleet backlog.
+    pub retried: u64,
+    /// Fault victims of this class dropped outright.
+    pub lost: u64,
 }
 
 impl ClassMetrics {
@@ -268,6 +324,10 @@ impl ClassMetrics {
             .set("attainment", self.attainment())
             .set("latency_p50_s", self.latency_p50_s())
             .set("latency_p99_s", self.latency_p99_s())
+            .set("interrupted", self.interrupted)
+            .set("migrated", self.migrated)
+            .set("retried", self.retried)
+            .set("lost", self.lost)
     }
 }
 
@@ -298,6 +358,10 @@ pub struct FleetMetrics {
     /// carried one (no SLO ⇒ nothing to violate) — the goodput
     /// numerator.
     pub good_completions: u64,
+    /// Sheds that happened while *every* device was down (total
+    /// outage): there is no device to charge, so they land in this
+    /// fleet-wide bucket instead of a per-device `shed` counter.
+    pub shed_unattributed: u64,
 }
 
 impl FleetMetrics {
@@ -351,6 +415,45 @@ impl FleetMetrics {
         let entry = self.class_entry(class);
         entry.shed += 1;
         entry.shed_tracked += tracked as u64;
+    }
+
+    /// Record the fate of one fault victim in its class roll-up
+    /// (per-device churn counters live on [`DeviceMetrics`]).
+    /// `resident` marks an in-flight sample interrupted at a step
+    /// boundary, as opposed to one still queued on the failed device.
+    pub fn record_migration(&mut self, class: u8, resident: bool, outcome: MigrateOutcome) {
+        let entry = self.class_entry(class);
+        entry.interrupted += resident as u64;
+        match outcome {
+            MigrateOutcome::Migrated => entry.migrated += 1,
+            MigrateOutcome::Retried => entry.retried += 1,
+            MigrateOutcome::Lost => entry.lost += 1,
+        }
+    }
+
+    /// Total in-flight samples interrupted by device faults.
+    pub fn interrupted(&self) -> u64 {
+        self.devices.iter().map(|d| d.interrupted).sum()
+    }
+
+    /// Total fault victims re-routed onto another device.
+    pub fn migrated(&self) -> u64 {
+        self.devices.iter().map(|d| d.migrated).sum()
+    }
+
+    /// Total fault victims deferred to the fleet backlog.
+    pub fn retried(&self) -> u64 {
+        self.devices.iter().map(|d| d.retried).sum()
+    }
+
+    /// Total fault victims dropped outright.
+    pub fn lost(&self) -> u64 {
+        self.devices.iter().map(|d| d.lost).sum()
+    }
+
+    /// Total simulated device downtime across the fleet.
+    pub fn downtime_s(&self) -> f64 {
+        self.devices.iter().map(|d| d.downtime_s).sum()
     }
 
     /// Aggregate simulated throughput, samples/s; 0.0 for zero makespan.
@@ -528,6 +631,12 @@ impl FleetMetrics {
             .set("reuse_hits", self.reuse_hits())
             .set("reuse_misses", self.reuse_misses())
             .set("reuse_hit_rate", self.reuse_hit_rate())
+            .set("shed_unattributed", self.shed_unattributed)
+            .set("interrupted", self.interrupted())
+            .set("migrated", self.migrated())
+            .set("retried", self.retried())
+            .set("lost", self.lost())
+            .set("downtime_s", self.downtime_s())
             .set(
                 "per_class",
                 Json::Arr(self.classes.iter().map(ClassMetrics::to_json).collect()),
@@ -800,12 +909,52 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(
             arr[0].to_string_compact(),
-            r#"{"class":0,"samples":0,"tracked":0,"attained":0,"shed":1,"attainment":0,"latency_p50_s":0,"latency_p99_s":0}"#
+            r#"{"class":0,"samples":0,"tracked":0,"attained":0,"shed":1,"attainment":0,"latency_p50_s":0,"latency_p99_s":0,"interrupted":0,"migrated":0,"retried":0,"lost":0}"#
         );
         assert_eq!(arr[1].get("class").and_then(Json::as_f64), Some(2.0));
         assert_eq!(arr[1].get("samples").and_then(Json::as_f64), Some(2.0));
         assert_eq!(arr[1].get("attainment").and_then(Json::as_f64), Some(0.5));
         assert_eq!(arr[1].get("latency_p50_s").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn churn_counters_roll_up_per_device_and_per_class() {
+        let mut m = fleet();
+        m.devices[0].downtime_s = 0.5;
+        m.devices[0].interrupted = 2;
+        m.devices[0].migrated = 1;
+        m.devices[0].retried = 1;
+        m.devices[1].downtime_s = 1.5;
+        m.devices[1].lost = 1;
+        m.shed_unattributed = 3;
+        m.record_migration(0, true, MigrateOutcome::Migrated);
+        m.record_migration(0, true, MigrateOutcome::Retried);
+        m.record_migration(1, false, MigrateOutcome::Lost);
+        assert_eq!(m.interrupted(), 2);
+        assert_eq!(m.migrated(), 1);
+        assert_eq!(m.retried(), 1);
+        assert_eq!(m.lost(), 1);
+        assert_eq!(m.downtime_s(), 2.0);
+        let c0 = m.classes.iter().find(|c| c.class == 0).expect("class 0");
+        assert_eq!(
+            (c0.interrupted, c0.migrated, c0.retried, c0.lost),
+            (2, 1, 1, 0)
+        );
+        let c1 = m.classes.iter().find(|c| c.class == 1).expect("class 1");
+        assert_eq!((c1.interrupted, c1.lost), (0, 1));
+        // Outcome decoding from the trace target encoding.
+        assert_eq!(MigrateOutcome::from_target(3), MigrateOutcome::Migrated);
+        assert_eq!(MigrateOutcome::from_target(-1), MigrateOutcome::Retried);
+        assert_eq!(MigrateOutcome::from_target(-2), MigrateOutcome::Lost);
+        // The fleet export carries the resilience keys and stays clean.
+        let j = m.to_json();
+        assert_eq!(j.get("shed_unattributed").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("interrupted").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("downtime_s").and_then(Json::as_f64), Some(2.0));
+        let dev0 = &j.get("per_device").and_then(Json::as_arr).expect("per_device")[0];
+        assert_eq!(dev0.get("downtime_s").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(dev0.get("interrupted").and_then(Json::as_f64), Some(2.0));
+        assert!(Json::parse(&j.to_string_pretty()).is_ok());
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //!   open-loop Poisson/burst, closed-loop clients) and the SLO
 //!   decoration helpers; both scheduler cores pull requests from a
 //!   source during the event loop.
+//! * [`faults`] — deterministic device-churn schedules ([`FaultPlan`]):
+//!   crashes, thermal-recalibration outages (MTTR grounded in
+//!   [`crate::devices::tuning`] timescales) and straggler onset,
+//!   injected as first-class events into both scheduler cores with
+//!   step-boundary checkpoint/migrate recovery.
 //! * [`profile`] — [`DeviceProfile`] and the `--fleet` spec grammar.
 //! * [`device`] — device handle: batch-slot capacity, simulated clock,
 //!   per-step cost from [`crate::arch::cost`].
@@ -38,6 +43,7 @@
 //!   EPB and GOPS roll-ups reusing [`crate::util::stats`].
 
 pub mod device;
+pub mod faults;
 pub mod load;
 pub mod metrics;
 pub mod profile;
@@ -47,8 +53,9 @@ pub mod scheduler;
 pub mod trace;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
+pub use faults::{default_recal_mttr_s, parse_faults_json, FaultEvent, FaultKind, FaultPlan};
 pub use load::{apply_slos, synthetic_workload, RequestSource};
-pub use metrics::{ClassMetrics, DeviceMetrics, FleetMetrics, ProfileMetrics};
+pub use metrics::{ClassMetrics, DeviceMetrics, FleetMetrics, MigrateOutcome, ProfileMetrics};
 pub use profile::{parse_fleet_json, parse_fleet_spec, DeviceProfile};
 pub use reference::ReferenceScheduler;
 pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
@@ -101,6 +108,16 @@ pub struct ClusterConfig {
     /// bypass the check). Only affects requests that carry a deadline;
     /// `false` keeps shed-on-full-only admission.
     pub shed_late: bool,
+    /// Deterministic device-churn schedule (crashes, recalibration
+    /// outages, straggler onset) injected into both scheduler cores.
+    /// Empty (the default) reproduces the fault-free engine bit-for-bit.
+    pub faults: faults::FaultPlan,
+    /// Step-boundary migration: when a device goes down, checkpoint its
+    /// in-flight samples (latents are explicit `x`/`t` state between
+    /// UNet calls) and re-admit them — deadline-checked against their
+    /// *remaining* steps — on surviving devices. `false` loses every
+    /// victim (the ablation baseline for the resilience benches).
+    pub migration: bool,
 }
 
 impl Default for ClusterConfig {
@@ -113,6 +130,8 @@ impl Default for ClusterConfig {
             cost_aware: true,
             work_stealing: true,
             shed_late: false,
+            faults: faults::FaultPlan::default(),
+            migration: true,
         }
     }
 }
@@ -244,6 +263,19 @@ impl ClusterConfig {
     /// Enable deadline-aware admission shedding (the SLO tier).
     pub fn shed_late(mut self, on: bool) -> Self {
         self.shed_late = on;
+        self
+    }
+
+    /// Install a deterministic device-churn schedule.
+    pub fn faults(mut self, plan: faults::FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Toggle step-boundary migration of fault victims (`true` by
+    /// default; `false` loses every interrupted sample).
+    pub fn migration(mut self, on: bool) -> Self {
+        self.migration = on;
         self
     }
 }

@@ -24,14 +24,15 @@ use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId};
+use super::faults::{FaultEvent, FaultKind};
 use super::load::RequestSource;
-use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
 use super::router::{min_drain_device, DeviceLoad, Router};
 use super::scheduler::{
     zero_step_result, ClusterOutcome, ClusterRequest, ClusterResult, Slot, SlotSampler,
     StepExecutor,
 };
-use super::trace::{emit, TraceEvent, TraceSink};
+use super::trace::{emit, TraceEvent, TraceFault, TraceSink};
 use super::ClusterConfig;
 
 /// The reference fleet scheduler: devices + stateless router + O(N)
@@ -56,6 +57,27 @@ pub struct ReferenceScheduler {
     /// Per-device router weight: the device's drain cost in ns, or 1 for
     /// every device when cost-aware routing is off (occupancy-only).
     drain_ns: Vec<u64>,
+    /// Straggler onset re-prices `drain_ns` only under cost-aware
+    /// routing (mirrors the heap core's `set_drain` gating).
+    cost_aware: bool,
+    /// Step-boundary migration of fault victims (mirrors the heap core).
+    migration: bool,
+    /// The sorted, in-range fault plan — the *same* pre-filtered list
+    /// the heap core consumes, so both cores fire identical events.
+    faults: Vec<FaultEvent>,
+    /// Plan cursor for the current serve window (the O(N) analogue of
+    /// the heap's injected `EventKind::Fault { seq }` events).
+    fault_cursor: usize,
+    /// Crash/outage that struck a busy device, deferred to its next
+    /// step boundary (latents checkpoint between UNet calls).
+    pending_down: Vec<Option<FaultKind>>,
+    /// Scheduled recovery instant per device in recalibration outage
+    /// (the O(N) analogue of the heap's `EventKind::Recover` events).
+    pending_recover: Vec<Option<f64>>,
+    /// `(class, was resident, outcome)` per fault victim this window.
+    migrate_log: Vec<(u8, bool, MigrateOutcome)>,
+    /// Sheds during a total outage: no up device exists to charge.
+    shed_unattributed: u64,
     events_processed: u64,
     /// Opt-in flight recorder (mirrors the heap core: same events, same
     /// order, so parity suites can assert trace bit-identity too).
@@ -84,9 +106,19 @@ impl ReferenceScheduler {
             .iter()
             .map(|d| if config.cost_aware { d.drain_ns() } else { 1 })
             .collect();
+        // Same pre-filter and sort as the heap core: both cores must
+        // consume the identical event list for `sched_events` parity.
+        let faults: Vec<FaultEvent> = config
+            .faults
+            .sorted()
+            .into_iter()
+            .filter(|f| f.device < devices.len())
+            .collect();
         Self {
             resident: vec![Vec::new(); devices.len()],
             queued: vec![VecDeque::new(); devices.len()],
+            pending_down: vec![None; devices.len()],
+            pending_recover: vec![None; devices.len()],
             devices,
             router: Router::new(config.policy),
             pool: ThreadPool::default_size(),
@@ -99,6 +131,12 @@ impl ReferenceScheduler {
             shed_late: config.shed_late,
             shed_log: Vec::new(),
             drain_ns,
+            cost_aware: config.cost_aware,
+            migration: config.migration,
+            faults,
+            fault_cursor: 0,
+            migrate_log: Vec::new(),
+            shed_unattributed: 0,
             events_processed: 0,
             trace: None,
         }
@@ -131,6 +169,7 @@ impl ReferenceScheduler {
                 capacity: d.capacity,
                 max_queue: d.max_queue,
                 drain_ns: self.drain_ns[i],
+                excluded: d.is_down(),
             })
             .collect()
     }
@@ -160,6 +199,13 @@ impl ReferenceScheduler {
         }
         self.events_processed = 0;
         self.shed_log.clear();
+        self.migrate_log.clear();
+        self.shed_unattributed = 0;
+        // The fault plan replays every window (`reset_accounting` healed
+        // the fleet), exactly like the heap core's re-injection.
+        self.fault_cursor = 0;
+        self.pending_down.iter_mut().for_each(|p| *p = None);
+        self.pending_recover.iter_mut().for_each(|p| *p = None);
         if let Some(sink) = &mut self.trace {
             sink.clear();
         }
@@ -168,6 +214,19 @@ impl ReferenceScheduler {
         let mut first_arrival_s: Option<f64> = None;
 
         loop {
+            // Candidate next events, ranked exactly like the heap core's
+            // `EventKind::rank()`: faults fire first at an instant (a
+            // device crashing exactly when a request lands is already
+            // unroutable), then recoveries (a request landing at the
+            // recovery instant may route onto the recovered die), then
+            // arrivals, then completions.
+            let next_fault = self.faults.get(self.fault_cursor).map(|f| f.time_s);
+            let next_recover = self
+                .pending_recover
+                .iter()
+                .enumerate()
+                .filter_map(|(d, t)| t.map(|t| (t, d)))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             let next_arrival = source.peek();
             let next_completion = self
                 .devices
@@ -175,25 +234,45 @@ impl ReferenceScheduler {
                 .filter_map(|d| d.busy_until().map(|t| (t, d.id.0)))
                 .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
-            // Arrivals win ties (a request landing exactly on a step
-            // boundary is admissible in the very next step).
-            let take_arrival = match (next_arrival, next_completion) {
-                (None, None) => break,
-                (Some(_), None) => true,
-                (None, Some(_)) => false,
-                (Some(at), Some((ct, _))) => at <= ct,
+            let candidates = [
+                next_fault.map(|t| (t, 0u8)),
+                next_recover.map(|(t, _)| (t, 1u8)),
+                next_arrival.map(|t| (t, 2u8)),
+                next_completion.map(|(t, _)| (t, 3u8)),
+            ];
+            let Some((_, rank)) = candidates
+                .iter()
+                .flatten()
+                .copied()
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+            else {
+                break;
             };
-            if take_arrival {
-                let at = next_arrival.expect("arrival selected");
-                first_arrival_s.get_or_insert(at);
-                while source.peek() == Some(at) {
-                    let req = source.pop();
-                    self.admit(req, &mut source, &mut rejected, &mut results);
+            match rank {
+                0 => {
+                    let seq = self.fault_cursor;
+                    self.fault_cursor += 1;
+                    let t = self.faults[seq].time_s;
+                    self.handle_fault(seq, t, executor, &mut source, &mut rejected)?;
                 }
-                self.kick_idle(at, executor)?;
-            } else {
-                let (ct, di) = next_completion.expect("completion selected");
-                self.complete(di, ct, executor, &mut source, &mut results, &mut rejected)?;
+                1 => {
+                    let (t, di) = next_recover.expect("recover selected");
+                    self.pending_recover[di] = None;
+                    self.handle_recover(di, t, executor, &mut source, &mut rejected)?;
+                }
+                2 => {
+                    let at = next_arrival.expect("arrival selected");
+                    first_arrival_s.get_or_insert(at);
+                    while source.peek() == Some(at) {
+                        let req = source.pop();
+                        self.admit(req, &mut source, &mut rejected, &mut results);
+                    }
+                    self.kick_idle(at, executor)?;
+                }
+                _ => {
+                    let (ct, di) = next_completion.expect("completion selected");
+                    self.complete(di, ct, executor, &mut source, &mut results, &mut rejected)?;
+                }
             }
             self.events_processed += 1;
         }
@@ -205,12 +284,18 @@ impl ReferenceScheduler {
 
         let first_arrival_s = first_arrival_s.unwrap_or(0.0);
         let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        // Devices still down accrue downtime to the end of the window
+        // (before the snapshot copies the counters).
+        for d in &mut self.devices {
+            d.finalize_downtime(last_finish_s);
+        }
         let mut metrics = FleetMetrics {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
             makespan_s: (last_finish_s - first_arrival_s).max(0.0),
             rejected: rejected.len() as u64,
             bit_width: self.devices.first().map_or(8, |d| d.bit_width),
             sched_events: self.events_processed,
+            shed_unattributed: self.shed_unattributed,
             ..Default::default()
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
@@ -226,15 +311,22 @@ impl ReferenceScheduler {
         for &(class, tracked) in &self.shed_log {
             metrics.record_shed(class, tracked);
         }
+        for &(class, resident, outcome) in &self.migrate_log {
+            metrics.record_migration(class, resident, outcome);
+        }
         Ok(ClusterOutcome { results, rejected, metrics })
     }
 
     /// Shed attribution by full scan (mirrors the heap core's rule:
-    /// deadline sheds → the routed device, full-fleet sheds → the device
-    /// closest to draining).
+    /// deadline sheds → the routed device, full-fleet sheds → the *up*
+    /// device closest to draining; a total outage leaves no such device
+    /// and the shed lands in the unattributed bucket).
     fn attribute_shed(&mut self, now_s: f64, routed: Option<usize>, req: &ClusterRequest) {
-        let di = routed.or_else(|| min_drain_device(&self.loads())).unwrap_or(0);
-        self.devices[di].shed += 1;
+        let di = routed.or_else(|| min_drain_device(&self.loads()));
+        match di {
+            Some(d) => self.devices[d].shed += 1,
+            None => self.shed_unattributed += 1,
+        }
         self.shed_log.push((req.class, req.deadline_s.is_some()));
         emit(
             &mut self.trace,
@@ -242,10 +334,193 @@ impl ReferenceScheduler {
                 t: now_s,
                 id: req.id.0,
                 class: req.class,
-                device: di,
+                device: di.map_or(-1, |d| d as i64),
                 tracked: req.deadline_s.is_some(),
             },
         );
+    }
+
+    /// Fire planned fault `seq` (mirrors the heap core's
+    /// `handle_fault`): slowdowns apply immediately, crashes/outages on
+    /// a busy device defer to its step boundary, faults on an
+    /// already-down device are ignored.
+    fn handle_fault(
+        &mut self,
+        seq: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        let FaultEvent { device: di, kind, .. } = self.faults[seq];
+        match kind {
+            FaultKind::Slow { factor } => {
+                self.devices[di].apply_slowdown(factor);
+                if self.cost_aware {
+                    self.drain_ns[di] = self.devices[di].drain_ns();
+                }
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Slow { factor } },
+                );
+            }
+            FaultKind::Crash | FaultKind::Outage { .. } => {
+                if self.devices[di].is_down() {
+                    return Ok(());
+                }
+                if self.devices[di].busy_until().is_some() {
+                    self.pending_down[di] = match (self.pending_down[di], kind) {
+                        (_, FaultKind::Crash) => Some(FaultKind::Crash),
+                        (None, k) => Some(k),
+                        (prev, _) => prev,
+                    };
+                } else {
+                    self.apply_down(di, now_s, kind, source, rejected);
+                    self.drain_backlog(now_s, source, rejected);
+                    self.kick_idle(now_s, executor)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Take device `di` down now (mirrors the heap core's `apply_down`):
+    /// mark down first so every subsequent `loads()` snapshot excludes
+    /// it, emit the trace event, schedule recovery (outages), then
+    /// migrate checkpointed victims — residents first, then the queue.
+    fn apply_down(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        kind: FaultKind,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        self.devices[di].set_down(now_s, matches!(kind, FaultKind::Crash));
+        match kind {
+            FaultKind::Crash => emit(
+                &mut self.trace,
+                TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Crash },
+            ),
+            FaultKind::Outage { mttr_s } => {
+                let until_s = now_s + mttr_s;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault {
+                        t: now_s,
+                        device: di,
+                        fault: TraceFault::Outage { until_s },
+                    },
+                );
+                self.pending_recover[di] = Some(until_s);
+            }
+            FaultKind::Slow { .. } => unreachable!("slowdowns never take a device down"),
+        }
+        let mut victims: Vec<(Slot, bool)> = Vec::new();
+        for slot in self.resident[di].drain(..) {
+            self.devices[di].interrupted += 1;
+            victims.push((slot, true));
+        }
+        while let Some(slot) = self.queued[di].pop_front() {
+            victims.push((slot, false));
+        }
+        for (slot, resident) in victims {
+            self.migrate_victim(di, now_s, slot, resident, source, rejected);
+        }
+    }
+
+    /// Re-admit one fault victim (mirrors the heap core's
+    /// `migrate_victim`): re-route deadline-checked against *remaining*
+    /// steps, defer to the backlog, or lose it.
+    fn migrate_victim(
+        &mut self,
+        from: usize,
+        now_s: f64,
+        slot: Slot,
+        resident: bool,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        let (id, class) = (slot.req.id, slot.req.class);
+        if self.migration {
+            let loads = self.loads();
+            match self.router.route(slot.req.sampler, &loads) {
+                Some(did) => {
+                    let remaining = slot.timesteps.len() - slot.step_index;
+                    let doomed = self.shed_late
+                        && slot.req.deadline_s.is_some_and(|deadline_s| {
+                            (now_s - slot.req.arrival_s)
+                                + self.devices[did.0]
+                                    .admission_estimate_s(loads[did.0].total(), remaining)
+                                > deadline_s
+                        });
+                    if !doomed {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate {
+                                t: now_s,
+                                id: id.0,
+                                class,
+                                from,
+                                to: did.0 as i64,
+                                resident,
+                            },
+                        );
+                        self.devices[from].migrated += 1;
+                        self.migrate_log.push((class, resident, MigrateOutcome::Migrated));
+                        self.enqueue(now_s, did.0, slot);
+                        return;
+                    }
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+                    );
+                    self.devices[from].lost += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+                    self.attribute_shed(now_s, Some(did.0), &slot.req);
+                    source.on_done(id, now_s);
+                    rejected.push(id);
+                    return;
+                }
+                None if self.backlog.len() < self.max_backlog => {
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -1, resident },
+                    );
+                    self.devices[from].retried += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Retried));
+                    emit(&mut self.trace, TraceEvent::Requeue { t: now_s, id: id.0, class });
+                    self.backlog.push_back(slot);
+                    return;
+                }
+                None => {}
+            }
+        }
+        emit(
+            &mut self.trace,
+            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+        );
+        self.devices[from].lost += 1;
+        self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+        self.attribute_shed(now_s, None, &slot.req);
+        source.on_done(id, now_s);
+        rejected.push(id);
+    }
+
+    /// End of a recalibration outage (mirrors the heap core's
+    /// `handle_recover`): rejoin the fleet, pull deferred work.
+    fn handle_recover(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        self.devices[di].set_recovered(now_s);
+        emit(&mut self.trace, TraceEvent::Recover { t: now_s, device: di });
+        self.drain_backlog(now_s, source, rejected);
+        self.kick_idle(now_s, executor)
     }
 
     fn admit(
@@ -281,10 +556,11 @@ impl ReferenceScheduler {
         match self.router.route(req.sampler, &loads) {
             Some(did) => {
                 let slot = self.make_slot(req);
+                let remaining = slot.timesteps.len() - slot.step_index;
                 let doomed = self.shed_late
                     && slot.req.deadline_s.is_some_and(|deadline_s| {
                         self.devices[did.0]
-                            .admission_estimate_s(loads[did.0].total(), slot.timesteps.len())
+                            .admission_estimate_s(loads[did.0].total(), remaining)
                             > deadline_s
                     });
                 if doomed {
@@ -322,7 +598,8 @@ impl ReferenceScheduler {
     /// bit-identical between the two cores.
     fn enqueue(&mut self, now_s: f64, di: usize, slot: Slot) {
         let ahead = self.resident[di].len() + self.queued[di].len();
-        let est_s = self.devices[di].admission_estimate_s(ahead, slot.timesteps.len());
+        let remaining = slot.timesteps.len() - slot.step_index;
+        let est_s = self.devices[di].admission_estimate_s(ahead, remaining);
         self.devices[di].record_admission_estimate(est_s);
         emit(
             &mut self.trace,
@@ -364,13 +641,14 @@ impl ReferenceScheduler {
             match self.router.route(slot.req.sampler, &loads) {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
+                    // Remaining steps, not the full generation: retried
+                    // fault victims re-enter here with their checkpoint.
+                    let remaining = slot.timesteps.len() - slot.step_index;
                     let doomed = self.shed_late
                         && slot.req.deadline_s.is_some_and(|deadline_s| {
                             (now_s - slot.req.arrival_s)
-                                + self.devices[did.0].admission_estimate_s(
-                                    loads[did.0].total(),
-                                    slot.timesteps.len(),
-                                )
+                                + self.devices[did.0]
+                                    .admission_estimate_s(loads[did.0].total(), remaining)
                                 > deadline_s
                         });
                     if doomed {
@@ -389,6 +667,11 @@ impl ReferenceScheduler {
     /// Full-fleet sweep at every boundary (the O(N) kick).
     fn kick_idle(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
         for di in 0..self.devices.len() {
+            // A down device is idle-with-empty-queues but must neither
+            // steal nor start work.
+            if self.devices[di].is_down() {
+                continue;
+            }
             if !self.devices[di].is_idle() {
                 continue;
             }
@@ -482,6 +765,11 @@ impl ReferenceScheduler {
             }
         }
         self.resident[di] = still_resident;
+        // A crash/outage that struck mid-step applies here, at the step
+        // boundary — mirrors the heap core's `pending_down` semantics.
+        if let Some(kind) = self.pending_down[di].take() {
+            self.apply_down(di, now_s, kind, source, rejected);
+        }
         self.drain_backlog(now_s, source, rejected);
         self.kick_idle(now_s, executor)
     }
@@ -494,7 +782,9 @@ impl ReferenceScheduler {
     ) -> crate::Result<()> {
         while self.resident[di].len() < self.devices[di].capacity {
             let Some(mut slot) = self.queued[di].pop_front() else { break };
-            slot.first_step_s = Some(now_s);
+            // Keep the original first-step instant for fault-migrated
+            // victims (they already ran on the failed device).
+            slot.first_step_s.get_or_insert(now_s);
             self.resident[di].push(slot);
         }
         let k = self.resident[di].len();

@@ -94,6 +94,9 @@ pub struct DeviceLoad {
     /// every device ⇒ occupancy-only ranking — exactly the
     /// pre-heterogeneous router.
     pub drain_ns: u64,
+    /// Down (crashed or recalibrating): never routed to, never stolen
+    /// from, never charged a shed. Counts as full for every query.
+    pub excluded: bool,
 }
 
 impl DeviceLoad {
@@ -102,7 +105,7 @@ impl DeviceLoad {
     }
 
     pub fn is_full(&self) -> bool {
-        self.total() >= self.capacity + self.max_queue
+        self.excluded || self.total() >= self.capacity + self.max_queue
     }
 
     /// Estimated time-to-drain: occupancy × per-occupant step latency.
@@ -174,7 +177,7 @@ impl Router {
                 // homogeneous workload would serialize the whole fleet
                 // onto one device.
                 let home = (sampler_signature(sampler) % loads.len() as u64) as usize;
-                if loads[home].total() < loads[home].capacity {
+                if !loads[home].excluded && loads[home].total() < loads[home].capacity {
                     home
                 } else {
                     least_loaded(loads)?
@@ -196,16 +199,21 @@ fn least_loaded(loads: &[DeviceLoad]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
-/// Index of the device with the lowest time-to-drain over **all**
+/// Index of the device with the lowest time-to-drain over all **up**
 /// devices, full ones included (ties → lowest id). This is where a shed
 /// request gets *attributed*: when every device is full, the one closest
 /// to draining is the one that would have taken it, so its profile owns
-/// the shed in the per-profile roll-ups. O(N), but only the shed path
-/// pays it — shedding already means the fleet is saturated.
+/// the shed in the per-profile roll-ups. Excluded (down) devices could
+/// never have taken the request, so they are skipped — `None` during a
+/// total outage, and the caller falls back to the `DeviceId::NONE`
+/// sentinel bucket rather than charging a dead die (or panicking).
+/// O(N), but only the shed path pays it — shedding already means the
+/// fleet is saturated.
 pub fn min_drain_device(loads: &[DeviceLoad]) -> Option<usize> {
     loads
         .iter()
         .enumerate()
+        .filter(|(_, l)| !l.excluded)
         .min_by_key(|(i, l)| (l.drain_cost(), *i))
         .map(|(i, _)| i)
 }
@@ -309,9 +317,58 @@ impl RouterIndex {
         }
         if self.busy[device] {
             self.donors.remove(&(old.queued_cost(), Reverse(device)));
-            if new.queued > 0 {
+            if new.queued > 0 && !new.excluded {
                 self.donors.insert((new.queued_cost(), Reverse(device)));
             }
+        }
+        self.loads[device] = new;
+    }
+
+    /// Mark a device down (`true`: crashed or recalibrating) or back up
+    /// (`false`). An excluded device counts as full for every query —
+    /// routing, round-robin rotation, least-loaded, affinity, stealing
+    /// and shed attribution all skip it. O(log N).
+    pub fn set_excluded(&mut self, device: usize, excluded: bool) {
+        let old = self.loads[device];
+        if old.excluded == excluded {
+            return;
+        }
+        let new = DeviceLoad { excluded, ..old };
+        if !old.is_full() {
+            self.by_load.remove(&(old.drain_cost(), device));
+            self.nonfull.remove(&device);
+        }
+        if !new.is_full() {
+            self.by_load.insert((new.drain_cost(), device));
+            self.nonfull.insert(device);
+        }
+        // A down device is never a donor (faults apply at step
+        // boundaries, after its queue drained — defensive remove).
+        if excluded {
+            self.donors.remove(&(old.queued_cost(), Reverse(device)));
+        } else if self.busy[device] && new.queued > 0 {
+            self.donors.insert((new.queued_cost(), Reverse(device)));
+        }
+        self.loads[device] = new;
+    }
+
+    /// Re-key a device after its drain weight changed (straggler onset:
+    /// `Device::drain_ns` grew under a `Slow` fault). Only the
+    /// cost-aware scheduler calls this — occupancy-only fleets keep
+    /// every weight at 1. O(log N).
+    pub fn set_drain(&mut self, device: usize, drain_ns: u64) {
+        let old = self.loads[device];
+        if old.drain_ns == drain_ns {
+            return;
+        }
+        let new = DeviceLoad { drain_ns, ..old };
+        if !old.is_full() {
+            self.by_load.remove(&(old.drain_cost(), device));
+            self.by_load.insert((new.drain_cost(), device));
+        }
+        if self.busy[device] && old.queued > 0 {
+            self.donors.remove(&(old.queued_cost(), Reverse(device)));
+            self.donors.insert((new.queued_cost(), Reverse(device)));
         }
         self.loads[device] = new;
     }
@@ -322,7 +379,7 @@ impl RouterIndex {
     pub fn set_busy(&mut self, device: usize, busy: bool) {
         let l = self.loads[device];
         if busy && !self.busy[device] {
-            if l.queued > 0 {
+            if l.queued > 0 && !l.excluded {
                 self.donors.insert((l.queued_cost(), Reverse(device)));
             }
         } else if !busy && self.busy[device] {
@@ -367,8 +424,10 @@ impl RouterIndex {
                     .or_insert_with(|| (sampler_signature(sampler) % n as u64) as usize);
                 // Stay home while the home device has free batch slots;
                 // spill to least-loaded once they're saturated (same rule
-                // as the stateless router).
-                if self.loads[home].total() < self.loads[home].capacity {
+                // as the stateless router). A down home spills too.
+                if !self.loads[home].excluded
+                    && self.loads[home].total() < self.loads[home].capacity
+                {
                     home
                 } else {
                     self.by_load.iter().next().expect("nonfull checked non-empty").1
@@ -384,11 +443,11 @@ mod tests {
     use super::*;
 
     fn load(resident: usize, queued: usize) -> DeviceLoad {
-        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns: 1 }
+        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns: 1, excluded: false }
     }
 
     fn weighted(resident: usize, queued: usize, drain_ns: u64) -> DeviceLoad {
-        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns }
+        DeviceLoad { resident, queued, capacity: 4, max_queue: 4, drain_ns, excluded: false }
     }
 
     #[test]
@@ -500,6 +559,7 @@ mod tests {
                     capacity: 4,
                     max_queue: 4,
                     drain_ns: g.usize_in(1, 5_000_000) as u64,
+                    excluded: false,
                 })
                 .collect();
             let sampler = if g.bool() {
@@ -542,6 +602,7 @@ mod tests {
                     capacity,
                     max_queue,
                     drain_ns: if uniform { 1 } else { g.usize_in(1, 4_000_000) as u64 },
+                    excluded: false,
                 })
                 .collect();
             let mut index = RouterIndex::new(policy, blanks.clone());
@@ -556,7 +617,7 @@ mod tests {
                 } else {
                     SamplerKind::Ddim { steps: g.usize_in(1, 50) }
                 };
-                match g.usize_in(0, 3) {
+                match g.usize_in(0, 5) {
                     // Admit: route through both, compare, apply.
                     0 => {
                         let want = router.route(sampler, &shadow);
@@ -585,15 +646,28 @@ mod tests {
                         }
                     }
                     // Busy transition (step begin/finish).
-                    _ => {
+                    3 => {
                         let d = g.usize_in(0, n - 1);
                         busy[d] = !busy[d];
                         index.set_busy(d, busy[d]);
                     }
+                    // Fault churn: a device goes down or comes back.
+                    4 => {
+                        let d = g.usize_in(0, n - 1);
+                        shadow[d].excluded = !shadow[d].excluded;
+                        index.set_excluded(d, shadow[d].excluded);
+                    }
+                    // Straggler onset: a device's drain weight grows.
+                    _ => {
+                        let d = g.usize_in(0, n - 1);
+                        let w = shadow[d].drain_ns.saturating_mul(g.usize_in(1, 4) as u64);
+                        shadow[d].drain_ns = w;
+                        index.set_drain(d, w);
+                    }
                 }
                 assert_eq!(index.loads(), &shadow[..], "occupancy mirror diverged");
                 let donor_scan = (0..n)
-                    .filter(|&j| busy[j] && shadow[j].queued > 0)
+                    .filter(|&j| busy[j] && shadow[j].queued > 0 && !shadow[j].excluded)
                     .max_by_key(|&j| (shadow[j].queued_cost(), std::cmp::Reverse(j)));
                 assert_eq!(index.max_donor(), donor_scan, "donor pick diverged");
             }
@@ -610,6 +684,71 @@ mod tests {
         let tied = vec![weighted(2, 0, 1000), weighted(1, 1, 1000)];
         assert_eq!(min_drain_device(&tied), Some(0));
         assert_eq!(min_drain_device(&[]), None);
+    }
+
+    #[test]
+    fn min_drain_device_skips_excluded_and_yields_none_on_total_outage() {
+        // A down die can never own a shed, however empty it looks.
+        let mut loads = vec![weighted(0, 0, 1000), weighted(3, 2, 1000)];
+        loads[0].excluded = true;
+        assert_eq!(min_drain_device(&loads), Some(1));
+        // Total outage: no attribution target at all (the schedulers
+        // fall back to the DeviceId::NONE sentinel bucket).
+        loads[1].excluded = true;
+        assert_eq!(min_drain_device(&loads), None);
+    }
+
+    #[test]
+    fn excluded_devices_are_unroutable_everywhere() {
+        // Every policy must skip a down device, even an empty one.
+        let mut loads = vec![load(0, 0), load(2, 0)];
+        loads[0].excluded = true;
+        for policy in ShardPolicy::ALL {
+            let pick = Router::new(policy).route(SamplerKind::Ddpm, &loads);
+            assert_eq!(pick, Some(DeviceId(1)), "{} routed to a down die", policy.name());
+            let mut idx = RouterIndex::new(policy, loads.clone());
+            assert_eq!(idx.route(SamplerKind::Ddpm), Some(DeviceId(1)));
+        }
+        // Affinity: a down home device spills instead of staying.
+        let s = SamplerKind::Ddim { steps: 25 };
+        let open = vec![load(0, 0); 4];
+        let home = Router::new(ShardPolicy::Affinity).route(s, &open).unwrap().0;
+        let mut down_home = open.clone();
+        down_home[home].excluded = true;
+        let spilled = Router::new(ShardPolicy::Affinity).route(s, &down_home).unwrap().0;
+        assert_ne!(spilled, home);
+        // Total exclusion sheds.
+        let all_down: Vec<DeviceLoad> =
+            open.iter().map(|l| DeviceLoad { excluded: true, ..*l }).collect();
+        for policy in ShardPolicy::ALL {
+            assert_eq!(Router::new(policy).route(SamplerKind::Ddpm, &all_down), None);
+            assert_eq!(RouterIndex::new(policy, all_down.clone()).route(SamplerKind::Ddpm), None);
+        }
+    }
+
+    #[test]
+    fn index_exclusion_round_trips_and_rekeys_drain() {
+        let mut idx =
+            RouterIndex::new(ShardPolicy::LeastLoaded, vec![weighted(0, 0, 1000); 2]);
+        idx.set_excluded(0, true);
+        assert_eq!(idx.route(SamplerKind::Ddpm), Some(DeviceId(1)));
+        // Recovery makes the die routable again (and it wins ties by id).
+        idx.set_excluded(0, false);
+        idx.set_excluded(0, false); // idempotent
+        assert_eq!(idx.route(SamplerKind::Ddpm), Some(DeviceId(0)));
+        // Straggler re-key: device 0 now 10x slower per occupant, so one
+        // sample there out-costs five on device 1.
+        idx.set_counts(0, 1, 0);
+        idx.set_counts(1, 2, 0);
+        idx.set_drain(0, 10_000);
+        assert_eq!(idx.route(SamplerKind::Ddpm), Some(DeviceId(1)));
+        // A donor that goes down mid-window leaves the donor set.
+        let mut didx =
+            RouterIndex::new(ShardPolicy::LeastLoaded, vec![weighted(1, 2, 1000); 2]);
+        didx.set_busy(0, true);
+        assert_eq!(didx.max_donor(), Some(0));
+        didx.set_excluded(0, true);
+        assert_eq!(didx.max_donor(), None);
     }
 
     #[test]

@@ -77,10 +77,11 @@ use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId};
+use super::faults::{FaultEvent, FaultKind};
 use super::load::RequestSource;
-use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
 use super::router::{min_drain_device, DeviceLoad, RouterIndex};
-use super::trace::{emit, TraceEvent, TraceSink};
+use super::trace::{emit, TraceEvent, TraceFault, TraceSink};
 use super::ClusterConfig;
 
 /// A generation request with a simulated arrival time and (optionally)
@@ -324,10 +325,20 @@ impl StepExecutor for SimExecutor {
     }
 }
 
-/// What a scheduler event is: the source's next request arrival, or a
-/// device step completion.
+/// What a scheduler event is: a planned device fault, an outage
+/// recovery, the source's next request arrival, or a device step
+/// completion.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum EventKind {
+    /// Planned fault `seq` (index into the sorted fault plan) fires.
+    /// Orders before everything else at the same instant: a device
+    /// that crashes at exactly an arrival's timestamp is already
+    /// unroutable for that arrival.
+    Fault { seq: usize },
+    /// Device `device` finishes its recalibration outage and rejoins
+    /// the fleet — before arrivals at the same instant, so a request
+    /// landing exactly at recovery can route onto the recovered die.
+    Recover { device: usize },
     /// The next arrival scheduled from the request source. Orders
     /// *before* completions at the same instant — a request landing
     /// exactly on a step boundary is admissible in the very next step
@@ -338,13 +349,15 @@ enum EventKind {
 }
 
 impl EventKind {
-    /// `(kind rank, device)` — arrivals first, then completions in
-    /// device-id order (deterministic, matching the reference loop's
-    /// scan).
+    /// `(kind rank, tiebreak)` — faults (in plan order), then
+    /// recoveries and completions in device-id order, arrivals in
+    /// between (deterministic, matching the reference loop's scan).
     fn rank(self) -> (u8, usize) {
         match self {
-            EventKind::Arrival => (0, 0),
-            EventKind::Completion { device } => (1, device),
+            EventKind::Fault { seq } => (0, seq),
+            EventKind::Recover { device } => (1, device),
+            EventKind::Arrival => (2, 0),
+            EventKind::Completion { device } => (3, device),
         }
     }
 }
@@ -409,6 +422,22 @@ pub struct StepScheduler {
     /// `(class, carried a deadline)` per shed request this window, in
     /// shed order — folded into the per-class metrics at the end.
     shed_log: Vec<(u8, bool)>,
+    /// Re-admit fault victims (step-boundary checkpoint + re-route);
+    /// off, every victim of a down device is lost.
+    migration: bool,
+    /// The seeded fault plan, sorted by time and pre-filtered to
+    /// devices this fleet actually has (both cores consume the same
+    /// filtered list, so event counts stay in lockstep).
+    faults: Vec<FaultEvent>,
+    /// A crash/outage that fired while the device was mid-step: latents
+    /// are only checkpointable between UNet calls, so the fault takes
+    /// effect at the step boundary (inside `complete`).
+    pending_down: Vec<Option<FaultKind>>,
+    /// `(class, was in flight, outcome)` per fault victim this window,
+    /// in migration order — folded into per-class metrics at the end.
+    migrate_log: Vec<(u8, bool, MigrateOutcome)>,
+    /// Sheds with no up device to charge (total outage) this window.
+    shed_unattributed: u64,
     // --- discrete-event core ---
     /// Pending events (arrival + step completions), min-first.
     events: BinaryHeap<Reverse<Event>>,
@@ -464,11 +493,20 @@ impl StepScheduler {
             .collect();
         let index =
             RouterIndex::new(config.policy, blank_loads(&devices, config.cost_aware));
+        let faults: Vec<FaultEvent> = config
+            .faults
+            .sorted()
+            .into_iter()
+            .filter(|f| f.device < devices.len())
+            .collect();
         Self {
             resident: vec![Vec::new(); devices.len()],
             queued: vec![VecDeque::new(); devices.len()],
             idle_empty: (0..devices.len()).collect(),
             cost_aware: config.cost_aware,
+            migration: config.migration,
+            pending_down: vec![None; devices.len()],
+            faults,
             devices,
             index,
             // Row fan-out is a host-side workload: size the pool to the
@@ -482,6 +520,8 @@ impl StepScheduler {
             work_stealing: config.work_stealing,
             shed_late: config.shed_late,
             shed_log: Vec::new(),
+            migrate_log: Vec::new(),
+            shed_unattributed: 0,
             events: BinaryHeap::new(),
             arrival_scheduled: None,
             dirty: BTreeSet::new(),
@@ -546,8 +586,17 @@ impl StepScheduler {
             .reset_occupancy(blank_loads(&self.devices, self.cost_aware));
         self.events_processed = 0;
         self.shed_log.clear();
+        self.migrate_log.clear();
+        self.shed_unattributed = 0;
+        self.pending_down.iter_mut().for_each(|p| *p = None);
         if let Some(sink) = &mut self.trace {
             sink.clear();
+        }
+        // The fault plan re-injects every window: `reset_accounting`
+        // healed the fleet, so each serve sees the same churn.
+        for (seq, f) in self.faults.iter().enumerate() {
+            self.events
+                .push(Reverse(Event { time_s: f.time_s, kind: EventKind::Fault { seq } }));
         }
 
         let mut results: Vec<ClusterResult> = Vec::new();
@@ -596,6 +645,21 @@ impl StepScheduler {
                     // earlier than the one in the heap.
                     self.schedule_arrival(&source);
                 }
+                EventKind::Fault { seq } => {
+                    self.events.pop();
+                    self.handle_fault(seq, ev.time_s, executor, &mut source, &mut rejected)?;
+                    self.events_processed += 1;
+                    // A lost victim feeds back to closed-loop clients
+                    // like a shed: the next submission may be earlier
+                    // than the scheduled arrival.
+                    self.schedule_arrival(&source);
+                }
+                EventKind::Recover { device } => {
+                    self.events.pop();
+                    self.handle_recover(device, ev.time_s, executor, &mut source, &mut rejected)?;
+                    self.events_processed += 1;
+                    self.schedule_arrival(&source);
+                }
             }
         }
 
@@ -611,12 +675,18 @@ impl StepScheduler {
         // completion), not absolute simulated time zero.
         let first_arrival_s = first_arrival_s.unwrap_or(0.0);
         let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        // Devices still down accrue downtime to the end of the window
+        // (before the snapshot copies the counters).
+        for d in &mut self.devices {
+            d.finalize_downtime(last_finish_s);
+        }
         let mut metrics = FleetMetrics {
             devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
             makespan_s: (last_finish_s - first_arrival_s).max(0.0),
             rejected: rejected.len() as u64,
             bit_width: self.devices.first().map_or(8, |d| d.bit_width),
             sched_events: self.events_processed,
+            shed_unattributed: self.shed_unattributed,
             ..Default::default()
         };
         results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
@@ -631,6 +701,9 @@ impl StepScheduler {
         }
         for &(class, tracked) in &self.shed_log {
             metrics.record_shed(class, tracked);
+        }
+        for &(class, resident, outcome) in &self.migrate_log {
+            metrics.record_migration(class, resident, outcome);
         }
         Ok(ClusterOutcome { results, rejected, metrics })
     }
@@ -651,13 +724,18 @@ impl StepScheduler {
     /// Attribute one shed to a device (for the per-device / per-profile
     /// roll-ups) and log its class. `routed` is the device the router
     /// picked for a deadline shed; `None` (every device full, or the
-    /// end-of-window backlog drain) attributes to the device closest to
-    /// draining — the one that would have taken the request next.
+    /// end-of-window backlog drain) attributes to the *up* device
+    /// closest to draining — the one that would have taken the request
+    /// next. During a total outage there is no such device: the shed
+    /// lands in the fleet-wide unattributed bucket ([`DeviceId::NONE`]
+    /// sentinel, `dev = -1` in the trace) instead of panicking or
+    /// mis-charging a dead die.
     fn attribute_shed(&mut self, now_s: f64, routed: Option<usize>, req: &ClusterRequest) {
-        let di = routed
-            .or_else(|| min_drain_device(self.index.loads()))
-            .unwrap_or(0);
-        self.devices[di].shed += 1;
+        let di = routed.or_else(|| min_drain_device(self.index.loads()));
+        match di {
+            Some(d) => self.devices[d].shed += 1,
+            None => self.shed_unattributed += 1,
+        }
         self.shed_log.push((req.class, req.deadline_s.is_some()));
         emit(
             &mut self.trace,
@@ -665,10 +743,210 @@ impl StepScheduler {
                 t: now_s,
                 id: req.id.0,
                 class: req.class,
-                device: di,
+                device: di.map_or(-1, |d| d as i64),
                 tracked: req.deadline_s.is_some(),
             },
         );
+    }
+
+    /// Fire planned fault `seq` at simulated time `now_s`. Slowdowns
+    /// apply immediately (an in-flight step keeps its already-priced
+    /// completion; subsequent steps run slower). Crashes and outages on
+    /// an idle device apply immediately; on a busy device they defer to
+    /// the step boundary (`pending_down`) — latents are only
+    /// checkpointable between UNet calls. A fault on an already-down
+    /// device is ignored outright.
+    fn handle_fault(
+        &mut self,
+        seq: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        let FaultEvent { device: di, kind, .. } = self.faults[seq];
+        match kind {
+            FaultKind::Slow { factor } => {
+                self.devices[di].apply_slowdown(factor);
+                if self.cost_aware {
+                    self.index.set_drain(di, self.devices[di].drain_ns());
+                }
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Slow { factor } },
+                );
+            }
+            FaultKind::Crash | FaultKind::Outage { .. } => {
+                if self.devices[di].is_down() {
+                    return Ok(());
+                }
+                if self.devices[di].busy_until().is_some() {
+                    // A crash supersedes a pending outage; a second
+                    // outage keeps the first (its MTTR clock).
+                    self.pending_down[di] = match (self.pending_down[di], kind) {
+                        (_, FaultKind::Crash) => Some(FaultKind::Crash),
+                        (None, k) => Some(k),
+                        (prev, _) => prev,
+                    };
+                } else {
+                    self.apply_down(di, now_s, kind, source, rejected);
+                    // Victims may have landed on idle devices (or in
+                    // the backlog behind freed queue space elsewhere).
+                    self.drain_backlog(now_s, source, rejected);
+                    self.kick(now_s, executor)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Take device `di` down *now* (it is guaranteed idle): exclude it
+    /// from every router query, mark it down, emit the trace event,
+    /// schedule recovery (outages only), and migrate its checkpointed
+    /// victims — in-flight samples first (each counts as interrupted),
+    /// then its admission queue, in order.
+    fn apply_down(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        kind: FaultKind,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        // Exclude first: nothing below (migration routing, shed
+        // attribution, stealing) may ever pick the dying device.
+        self.index.set_excluded(di, true);
+        self.devices[di].set_down(now_s, matches!(kind, FaultKind::Crash));
+        self.idle_empty.remove(&di);
+        match kind {
+            FaultKind::Crash => emit(
+                &mut self.trace,
+                TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Crash },
+            ),
+            FaultKind::Outage { mttr_s } => {
+                let until_s = now_s + mttr_s;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault {
+                        t: now_s,
+                        device: di,
+                        fault: TraceFault::Outage { until_s },
+                    },
+                );
+                self.events.push(Reverse(Event {
+                    time_s: until_s,
+                    kind: EventKind::Recover { device: di },
+                }));
+            }
+            FaultKind::Slow { .. } => unreachable!("slowdowns never take a device down"),
+        }
+        let mut victims: Vec<(Slot, bool)> = Vec::new();
+        for slot in self.resident[di].drain(..) {
+            self.devices[di].interrupted += 1;
+            victims.push((slot, true));
+        }
+        while let Some(slot) = self.queued[di].pop_front() {
+            victims.push((slot, false));
+        }
+        self.index.set_counts(di, 0, 0);
+        for (slot, resident) in victims {
+            self.migrate_victim(di, now_s, slot, resident, source, rejected);
+        }
+    }
+
+    /// Re-admit one victim of a fault on `from`. With migration on, the
+    /// victim re-routes through normal admission — deadline-aware
+    /// against its *remaining* steps (the checkpoint kept its progress)
+    /// — or defers to the fleet backlog; otherwise (or when no capacity
+    /// exists and the backlog is full, or the deadline is unmeetable)
+    /// it is lost: shed, reported to the source, and counted.
+    fn migrate_victim(
+        &mut self,
+        from: usize,
+        now_s: f64,
+        slot: Slot,
+        resident: bool,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        let (id, class) = (slot.req.id, slot.req.class);
+        if self.migration {
+            match self.index.route(slot.req.sampler) {
+                Some(did) => {
+                    if !(self.shed_late && self.doomed_at(did.0, &slot, now_s)) {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate {
+                                t: now_s,
+                                id: id.0,
+                                class,
+                                from,
+                                to: did.0 as i64,
+                                resident,
+                            },
+                        );
+                        self.devices[from].migrated += 1;
+                        self.migrate_log.push((class, resident, MigrateOutcome::Migrated));
+                        self.enqueue(now_s, did.0, slot);
+                        return;
+                    }
+                    // Doomed under its remaining work: lost, charged to
+                    // the device it would have landed on (as at admit).
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+                    );
+                    self.devices[from].lost += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+                    self.attribute_shed(now_s, Some(did.0), &slot.req);
+                    source.on_done(id, now_s);
+                    rejected.push(id);
+                    return;
+                }
+                None if self.backlog.len() < self.max_backlog => {
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -1, resident },
+                    );
+                    self.devices[from].retried += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Retried));
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Requeue { t: now_s, id: id.0, class },
+                    );
+                    self.backlog.push_back(slot);
+                    return;
+                }
+                None => {}
+            }
+        }
+        emit(
+            &mut self.trace,
+            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+        );
+        self.devices[from].lost += 1;
+        self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+        self.attribute_shed(now_s, None, &slot.req);
+        source.on_done(id, now_s);
+        rejected.push(id);
+    }
+
+    /// Device `di` finishes its recalibration outage: rejoin the
+    /// routable fleet and immediately pull deferred work.
+    fn handle_recover(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        self.devices[di].set_recovered(now_s);
+        self.index.set_excluded(di, false);
+        emit(&mut self.trace, TraceEvent::Recover { t: now_s, device: di });
+        self.dirty.insert(di);
+        self.drain_backlog(now_s, source, rejected);
+        self.kick(now_s, executor)
     }
 
     /// Route one arriving request into a device queue, defer it to the
@@ -748,12 +1026,16 @@ impl StepScheduler {
     /// first admission `now_s == arrival_s` and the elapsed term is
     /// zero; backlog re-routes pass the boundary time, so a request
     /// that went doomed *while deferred* is shed then. Requests without
-    /// a deadline are never doomed.
+    /// a deadline are never doomed. The estimate covers the slot's
+    /// *remaining* steps — identical to the full generation at first
+    /// admission, shorter for a fault-migrated checkpoint whose earlier
+    /// steps already ran on the failed device.
     fn doomed_at(&self, di: usize, slot: &Slot, now_s: f64) -> bool {
         let Some(deadline_s) = slot.req.deadline_s else { return false };
         let ahead = self.index.load(di).total();
+        let remaining = slot.timesteps.len() - slot.step_index;
         (now_s - slot.req.arrival_s)
-            + self.devices[di].admission_estimate_s(ahead, slot.timesteps.len())
+            + self.devices[di].admission_estimate_s(ahead, remaining)
             > deadline_s
     }
 
@@ -780,7 +1062,8 @@ impl StepScheduler {
     /// admission control thresholds against.
     fn enqueue(&mut self, now_s: f64, di: usize, slot: Slot) {
         let ahead = self.index.load(di).total();
-        let est_s = self.devices[di].admission_estimate_s(ahead, slot.timesteps.len());
+        let remaining = slot.timesteps.len() - slot.step_index;
+        let est_s = self.devices[di].admission_estimate_s(ahead, remaining);
         self.devices[di].record_admission_estimate(est_s);
         emit(
             &mut self.trace,
@@ -845,6 +1128,10 @@ impl StepScheduler {
         }
         self.dirty.clear();
         for &di in &visits {
+            if self.devices[di].is_down() {
+                self.idle_empty.remove(&di);
+                continue;
+            }
             if self.devices[di].is_idle() {
                 if self.work_stealing
                     && self.queued[di].is_empty()
@@ -952,6 +1239,13 @@ impl StepScheduler {
         self.retire_scratch = still_resident;
         self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
         self.dirty.insert(di);
+        // A crash or outage that struck mid-step lands here, at the step
+        // boundary — the checkpointable instant (latents are explicit
+        // `x`/`t` state between UNet calls). Survivors that just retired
+        // kept their completions; the rest migrate off the device.
+        if let Some(kind) = self.pending_down[di].take() {
+            self.apply_down(di, now_s, kind, source, rejected);
+        }
         // Freed slots (and queue space) may unblock deferred requests —
         // possibly onto other, currently idle devices.
         self.drain_backlog(now_s, source, rejected);
@@ -969,7 +1263,9 @@ impl StepScheduler {
         let mut promoted = false;
         while self.resident[di].len() < self.devices[di].capacity {
             let Some(mut slot) = self.queued[di].pop_front() else { break };
-            slot.first_step_s = Some(now_s);
+            // Keep the original first-step instant for fault-migrated
+            // victims (they already ran on the failed device).
+            slot.first_step_s.get_or_insert(now_s);
             self.resident[di].push(slot);
             promoted = true;
         }
@@ -1091,6 +1387,7 @@ pub(super) fn blank_loads(devices: &[Device], cost_aware: bool) -> Vec<DeviceLoa
             capacity: d.capacity,
             max_queue: d.max_queue,
             drain_ns: if cost_aware { d.drain_ns() } else { 1 },
+            excluded: false,
         })
         .collect()
 }
@@ -1099,6 +1396,7 @@ pub(super) fn blank_loads(devices: &[Device], cost_aware: bool) -> Vec<DeviceLoa
 mod tests {
     use super::*;
     use crate::arch::cost::Cost;
+    use crate::cluster::faults::FaultPlan;
     use crate::cluster::reference::ReferenceScheduler;
     use crate::cluster::router::ShardPolicy;
     use crate::cluster::DeviceProfile;
@@ -2246,5 +2544,269 @@ mod tests {
         }
         let mut s = scheduler(2);
         assert!(s.serve(workload(4, 4), &mut Broken).is_err());
+    }
+
+    // ----- device churn: fault injection, migration, recovery -----
+
+    #[test]
+    fn churn_parity_heap_matches_reference() {
+        // The churn acceptance gate: seeded fault plans (crashes,
+        // recalibration outages, straggler onset) × policies × stealing
+        // × shed-late × migration on/off × backlog bounds must keep both
+        // scheduler cores bit-identical — results, placements, timings,
+        // metrics, churn counters and traces — and the trace alone must
+        // reconstruct the churn accounting.
+        for devices in [2usize, 4] {
+            let name = format!("churn heap = reference (d={devices})");
+            crate::util::prop::forall(&name, 8, |g| {
+                let mut plan = FaultPlan::new();
+                for _ in 0..g.usize_in(1, 4) {
+                    let dev = g.usize_in(0, devices - 1);
+                    let t = g.f64_in(0.0, 0.03);
+                    plan = match g.usize_in(0, 2) {
+                        0 => plan.crash_at(t, dev),
+                        1 => plan.outage_at(t, dev, g.f64_in(1e-3, 0.02)),
+                        _ => plan.slow_at(t, dev, g.f64_in(1.25, 3.0)),
+                    };
+                }
+                let cfg = config(devices)
+                    .capacity(g.usize_in(1, 3))
+                    .max_queue(g.usize_in(0, 4))
+                    .backlog(*g.choose(&[0usize, 4, usize::MAX]))
+                    .policy(*g.choose(&ShardPolicy::ALL))
+                    .stealing(g.bool())
+                    .shed_late(g.bool())
+                    .migration(g.bool())
+                    .faults(plan);
+                let n = g.usize_in(4, 20);
+                let mut at = 0.0f64;
+                let reqs: Vec<ClusterRequest> = (0..n)
+                    .map(|i| {
+                        if g.usize_in(0, 2) > 0 {
+                            at += g.f64_in(0.0, 3e-3);
+                        }
+                        let mut req = ClusterRequest::new(
+                            i as u64,
+                            7000 + i as u64,
+                            SamplerKind::Ddim { steps: g.usize_in(1, 10) },
+                            at,
+                        )
+                        .with_class(g.usize_in(0, 2) as u8);
+                        if g.bool() {
+                            req = req.with_deadline(g.f64_in(1e-3, 0.1));
+                        }
+                        req
+                    })
+                    .collect();
+                let costs = vec![test_cost(); cfg.fleet.len()];
+                let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+                let mut reference =
+                    ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+                heap.set_trace(TraceSink::new());
+                reference.set_trace(TraceSink::new());
+                let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+                let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+                assert_eq!(a.rejected, b.rejected, "shed/lost set diverged");
+                assert_eq!(a.results.len(), b.results.len());
+                for (ra, rb) in a.results.iter().zip(&b.results) {
+                    assert_eq!(ra.id, rb.id, "completion order diverged");
+                    assert_eq!(ra.device, rb.device, "placement diverged");
+                    assert_eq!(ra.sample, rb.sample, "samples diverged");
+                    assert!(
+                        ra.finish_s == rb.finish_s && ra.first_step_s == rb.first_step_s,
+                        "timings diverged (req {:?})",
+                        ra.id
+                    );
+                }
+                assert_eq!(a.metrics, b.metrics, "metrics diverged under churn");
+                let ta = heap.take_trace().expect("heap trace");
+                let tb = reference.take_trace().expect("reference trace");
+                assert_eq!(ta.events(), tb.events(), "churn traces diverged");
+                // The trace alone must reconstruct the churn accounting
+                // — downtime, per-device victim counters, the
+                // unattributed shed bucket.
+                let rep = crate::cluster::trace::replay(ta.events());
+                assert_eq!(rep.metrics.rejected, a.metrics.rejected);
+                assert_eq!(rep.metrics.shed_unattributed, a.metrics.shed_unattributed);
+                for (dr, dl) in rep.metrics.devices.iter().zip(&a.metrics.devices) {
+                    assert_eq!(dr.downtime_s, dl.downtime_s, "downtime reconstruction");
+                    assert_eq!(
+                        (dr.interrupted, dr.migrated, dr.retried, dr.lost),
+                        (dl.interrupted, dl.migrated, dl.retried, dl.lost),
+                        "churn counter reconstruction"
+                    );
+                    assert_eq!(dr.shed, dl.shed);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn churn_parity_holds_with_closed_loop_sources() {
+        // Churn under live arrival feedback: a lost victim feeds back to
+        // its closed-loop client exactly like a shed, and both cores
+        // must drive that feedback in the same order.
+        crate::util::prop::forall("closed-loop churn heap = reference", 12, |g| {
+            let devices = g.usize_in(2, 4);
+            let mut plan = FaultPlan::new();
+            for _ in 0..g.usize_in(1, 3) {
+                let dev = g.usize_in(0, devices - 1);
+                let t = g.f64_in(0.0, 0.02);
+                plan = match g.usize_in(0, 2) {
+                    0 => plan.crash_at(t, dev),
+                    1 => plan.outage_at(t, dev, g.f64_in(1e-3, 0.01)),
+                    _ => plan.slow_at(t, dev, g.f64_in(1.25, 2.5)),
+                };
+            }
+            let cfg = ClusterConfig::with_devices(devices)
+                .capacity(g.usize_in(1, 3))
+                .max_queue(g.usize_in(0, 4))
+                .backlog(*g.choose(&[0usize, 4]))
+                .policy(*g.choose(&ShardPolicy::ALL))
+                .stealing(g.bool())
+                .shed_late(g.bool())
+                .migration(g.bool())
+                .faults(plan);
+            let mut src = RequestSource::closed_loop(
+                g.usize_in(1, 5),
+                *g.choose(&[0.0, 1e-4, 2e-3]),
+                g.usize_in(1, 20),
+                7700,
+                SamplerKind::Ddim { steps: g.usize_in(1, 6) },
+            );
+            if g.bool() {
+                src = src.with_slos(vec![g.f64_in(1e-3, 0.05)]);
+            }
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            let mut reference =
+                ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            let a = heap.serve_source(src.clone(), &mut SimExecutor).unwrap();
+            let b = reference.serve_source(src, &mut SimExecutor).unwrap();
+            assert_eq!(a.rejected, b.rejected, "shed/lost set diverged");
+            assert_eq!(a.results.len(), b.results.len());
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!((ra.id, ra.device), (rb.id, rb.device));
+                assert!(
+                    ra.finish_s == rb.finish_s && ra.arrival_s == rb.arrival_s,
+                    "timings diverged (req {:?})",
+                    ra.id
+                );
+            }
+            assert_eq!(a.metrics, b.metrics, "closed-loop churn metrics diverged");
+        });
+    }
+
+    #[test]
+    fn total_outage_sheds_unattributed_and_never_panics() {
+        // Shed-everything-during-total-outage: every device crashes
+        // before the burst arrives; with no backlog every request sheds
+        // with no up device to charge. The fleet-wide unattributed
+        // bucket takes them (`dev = -1` in the trace), the report JSON
+        // stays finite, and both cores plus the trace replay agree.
+        let plan = FaultPlan::new().crash_at(0.0, 0).crash_at(0.0, 1);
+        let cfg = config(2).max_queue(0).faults(plan);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let reqs: Vec<ClusterRequest> = (0..5)
+            .map(|i| ClusterRequest::new(i, 300 + i, SamplerKind::Ddim { steps: 4 }, 1e-3))
+            .collect();
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        heap.set_trace(TraceSink::new());
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+        let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(a.rejected.len(), 5, "everything sheds during a total outage");
+        assert!(a.results.is_empty());
+        assert_eq!(a.metrics.shed_unattributed, 5);
+        assert_eq!(a.metrics.devices.iter().map(|d| d.shed).sum::<u64>(), 0);
+        assert_eq!(a.metrics, b.metrics);
+        let json = a.metrics.to_json().to_string_pretty();
+        assert!(json.contains("shed_unattributed"));
+        assert!(!json.to_lowercase().contains("nan"), "total outage must not NaN: {json}");
+        let sink = heap.take_trace().expect("trace");
+        let rep = crate::cluster::trace::replay(sink.events());
+        assert_eq!(rep.metrics.shed_unattributed, 5);
+    }
+
+    #[test]
+    fn migration_rescues_inflight_work_and_ablation_loses_it() {
+        // One die crashes mid-run. With step-boundary migration every
+        // checkpointed sample finishes on the survivor (zero lost); with
+        // the ablation the victims on the dead die are lost, reported to
+        // the source and counted.
+        let serve = |migration: bool| {
+            let plan = FaultPlan::new().crash_at(2.5e-3, 0);
+            let cfg = config(2).backlog(usize::MAX).migration(migration).faults(plan);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            s.serve(workload(8, 6), &mut SimExecutor).unwrap()
+        };
+        let rescued = serve(true);
+        assert_eq!(rescued.results.len(), 8, "migration must finish every sample");
+        assert!(rescued.rejected.is_empty());
+        let m = &rescued.metrics;
+        assert!(m.devices[0].interrupted > 0, "the crash must interrupt in-flight work");
+        assert_eq!(m.lost(), 0, "zero lost requests with migration on");
+        assert!(m.migrated() + m.retried() > 0);
+        assert!(m.devices[0].downtime_s > 0.0, "a crashed die accrues downtime to window end");
+        let lost = serve(false);
+        assert!(lost.results.len() < 8, "the ablation loses the victims");
+        assert!(lost.metrics.lost() > 0);
+        assert_eq!(lost.metrics.migrated() + lost.metrics.retried(), 0);
+        assert_eq!(
+            lost.results.len() + lost.rejected.len(),
+            8,
+            "every request still accounted for"
+        );
+    }
+
+    #[test]
+    fn outage_recovery_rejoins_the_fleet_and_accrues_downtime() {
+        // A recalibration outage mid-run: victims migrate off, the die
+        // rejoins after its MTTR (downtime == MTTR when the window
+        // outlives the recovery) and serves again via work stealing.
+        let mttr = 4e-3;
+        let plan = FaultPlan::new().outage_at(1.5e-3, 0, mttr);
+        let cfg = config(2).backlog(usize::MAX).faults(plan);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let out = s.serve(workload(12, 8), &mut SimExecutor).unwrap();
+        assert_eq!(out.results.len(), 12, "an outage must not lose work");
+        let m = &out.metrics;
+        assert!(m.devices[0].interrupted > 0);
+        assert_eq!(m.lost(), 0);
+        assert!(
+            (m.devices[0].downtime_s - mttr).abs() < 1e-9,
+            "downtime {} must equal the MTTR {}",
+            m.devices[0].downtime_s,
+            mttr
+        );
+        assert!(
+            m.devices[0].samples_completed > 0,
+            "the recovered die must serve again"
+        );
+    }
+
+    #[test]
+    fn straggler_slowdown_rebalances_cost_aware_routing() {
+        // Straggler onset: device 0 runs 4x slow from the start. Under
+        // cost-aware routing the fleet shifts placements toward the
+        // healthy die; everything still completes, but slower overall.
+        let serve = |plan: FaultPlan| {
+            let cfg = config(2).faults(plan);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            s.serve(workload(16, 6), &mut SimExecutor).unwrap()
+        };
+        let degraded = serve(FaultPlan::new().slow_at(0.0, 0, 4.0));
+        let healthy = serve(FaultPlan::new());
+        assert_eq!(degraded.results.len(), 16);
+        let slow_share = degraded.metrics.devices[0].samples_completed;
+        let fair_share = healthy.metrics.devices[0].samples_completed;
+        assert!(
+            slow_share < fair_share,
+            "routing must shift work off the straggler ({slow_share} !< {fair_share})"
+        );
+        assert!(degraded.metrics.makespan_s > healthy.metrics.makespan_s);
     }
 }

@@ -3,8 +3,9 @@
 //! A [`TraceSink`] threaded through [`super::StepScheduler`] and
 //! [`super::ReferenceScheduler`] captures every request lifecycle
 //! decision — `admit` / `route` / `steal` / `requeue` / `shed` /
-//! `step` / `complete` — stamped with simulated time, device, request
-//! id and service class. Recording is a plain `Vec` push of a `Copy`
+//! `step` / `complete` — plus fleet churn — `fault` / `recover` /
+//! `migrate` — stamped with simulated time, device, request id and
+//! service class (churn events carry only the fields they have). Recording is a plain `Vec` push of a `Copy`
 //! struct (no formatting, no I/O) so the recorder stays within the
 //! ≤5% events/sec overhead gate on the 64-device bench; JSON-lines
 //! serialization happens once, after the serve window, via
@@ -24,7 +25,7 @@ use std::io::Write;
 use crate::util::histogram::LogHistogram;
 use crate::util::json::Json;
 
-use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
 
 /// One scheduler decision, stamped with simulated time `t`, request
 /// `id` and service `class`. `Copy` so recording is a buffer push.
@@ -42,9 +43,11 @@ pub enum TraceEvent {
     /// Every device was full; the request was deferred to the
     /// fleet-level backlog for re-routing at the next step boundary.
     Requeue { t: f64, id: u64, class: u8 },
-    /// Admission control dropped the request, attributed to `device`;
+    /// Admission control dropped the request, attributed to `device`
+    /// (`-1` when no up device existed to attribute it to — a total
+    /// outage; counted in the fleet `shed_unattributed` bucket);
     /// `tracked` marks a request that carried a deadline (an SLO miss).
-    Shed { t: f64, id: u64, class: u8, device: usize, tracked: bool },
+    Shed { t: f64, id: u64, class: u8, device: i64, tracked: bool },
     /// The request participated in a fused denoise step on `device`
     /// (`full` distinguishes full-UNet from DeepCache shallow steps).
     Step { t: f64, id: u64, class: u8, device: usize, full: bool },
@@ -61,6 +64,31 @@ pub enum TraceEvent {
         queue_s: f64,
         deadline_met: Option<bool>,
     },
+    /// A fault fired on `device` (a fleet event — no request id/class).
+    /// Recorded at the simulated instant the fault *takes effect*: for
+    /// a busy device that is the step boundary where its in-flight
+    /// work retires, not the instant the plan scheduled it.
+    Fault { t: f64, device: usize, fault: TraceFault },
+    /// `device` came back up after a recalibration outage and rejoined
+    /// the routable fleet.
+    Recover { t: f64, device: usize },
+    /// A victim of a fault on `from` was re-admitted. `to` is the new
+    /// device (`-1`: deferred to the fleet backlog, `-2`: lost — no
+    /// capacity or doomed under its deadline). `resident` marks an
+    /// interrupted in-flight sample (vs one still queued on `from`).
+    Migrate { t: f64, id: u64, class: u8, from: usize, to: i64, resident: bool },
+}
+
+/// What happened to the device in a [`TraceEvent::Fault`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceFault {
+    /// Permanent loss: the die never rejoins the fleet.
+    Crash,
+    /// Thermal-recalibration outage: down until `until_s`.
+    Outage { until_s: f64 },
+    /// Straggler onset: all subsequent steps (and the drain weight)
+    /// are slowed by `factor`.
+    Slow { factor: f64 },
 }
 
 impl TraceEvent {
@@ -74,6 +102,9 @@ impl TraceEvent {
             TraceEvent::Shed { .. } => "shed",
             TraceEvent::Step { .. } => "step",
             TraceEvent::Complete { .. } => "complete",
+            TraceEvent::Fault { .. } => "fault",
+            TraceEvent::Recover { .. } => "recover",
+            TraceEvent::Migrate { .. } => "migrate",
         }
     }
 
@@ -86,25 +117,46 @@ impl TraceEvent {
             | TraceEvent::Requeue { t, .. }
             | TraceEvent::Shed { t, .. }
             | TraceEvent::Step { t, .. }
-            | TraceEvent::Complete { t, .. } => t,
+            | TraceEvent::Complete { t, .. }
+            | TraceEvent::Fault { t, .. }
+            | TraceEvent::Recover { t, .. }
+            | TraceEvent::Migrate { t, .. } => t,
         }
     }
 
-    /// One JSON object per event (`{"ev":...,"t":...,"id":...,
-    /// "class":...}` plus kind-specific fields). `f64`s go through the
-    /// shortest-round-trip formatter, so parsing recovers the exact
-    /// bits — the foundation of replay bit-identity.
+    /// One JSON object per event (`{"ev":...,"t":...}` plus `id` /
+    /// `class` for request-lifecycle events and kind-specific fields).
+    /// `f64`s go through the shortest-round-trip formatter, so parsing
+    /// recovers the exact bits — the foundation of replay bit-identity.
     pub fn to_json(&self) -> Json {
-        let (t, id, class) = match *self {
-            TraceEvent::Admit { t, id, class }
-            | TraceEvent::Route { t, id, class, .. }
-            | TraceEvent::Steal { t, id, class, .. }
-            | TraceEvent::Requeue { t, id, class }
-            | TraceEvent::Shed { t, id, class, .. }
-            | TraceEvent::Step { t, id, class, .. }
-            | TraceEvent::Complete { t, id, class, .. } => (t, id, class),
+        let base = Json::obj().set("ev", self.kind()).set("t", self.time_s());
+        // Fleet churn events carry no request id/class.
+        match *self {
+            TraceEvent::Fault { device, fault, .. } => {
+                let j = base.set("dev", device);
+                return match fault {
+                    TraceFault::Crash => j.set("kind", "crash"),
+                    TraceFault::Outage { until_s } => {
+                        j.set("kind", "outage").set("until", until_s)
+                    }
+                    TraceFault::Slow { factor } => j.set("kind", "slow").set("factor", factor),
+                };
+            }
+            TraceEvent::Recover { device, .. } => return base.set("dev", device),
+            _ => {}
+        }
+        let (id, class) = match *self {
+            TraceEvent::Admit { id, class, .. }
+            | TraceEvent::Route { id, class, .. }
+            | TraceEvent::Steal { id, class, .. }
+            | TraceEvent::Requeue { id, class, .. }
+            | TraceEvent::Shed { id, class, .. }
+            | TraceEvent::Step { id, class, .. }
+            | TraceEvent::Complete { id, class, .. }
+            | TraceEvent::Migrate { id, class, .. } => (id, class),
+            TraceEvent::Fault { .. } | TraceEvent::Recover { .. } => unreachable!(),
         };
-        let j = Json::obj().set("ev", self.kind()).set("t", t).set("id", id).set("class", class);
+        let j = base.set("id", id).set("class", class);
         match *self {
             TraceEvent::Admit { .. } | TraceEvent::Requeue { .. } => j,
             TraceEvent::Route { device, est_s, .. } => j.set("dev", device).set("est", est_s),
@@ -121,6 +173,10 @@ impl TraceEvent {
                     "deadline_met",
                     deadline_met.map_or(Json::Null, Json::Bool),
                 ),
+            TraceEvent::Migrate { from, to, resident, .. } => {
+                j.set("from", from).set("to", to).set("resident", resident)
+            }
+            TraceEvent::Fault { .. } | TraceEvent::Recover { .. } => unreachable!(),
         }
     }
 
@@ -130,9 +186,26 @@ impl TraceEvent {
             j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number '{k}'"))
         };
         let t = num("t")?;
+        let dev = || num("dev").map(|d| d as usize);
+        // Churn events carry no request id/class — decode them before
+        // the request-lifecycle kinds demand those fields.
+        match j.get("ev").and_then(Json::as_str).ok_or("missing 'ev' tag")? {
+            "fault" => {
+                let device = dev()?;
+                let fault = match j.get("kind").and_then(Json::as_str) {
+                    Some("crash") => TraceFault::Crash,
+                    Some("outage") => TraceFault::Outage { until_s: num("until")? },
+                    Some("slow") => TraceFault::Slow { factor: num("factor")? },
+                    Some(other) => return Err(format!("unknown fault kind '{other}'")),
+                    None => return Err("fault event missing 'kind'".to_string()),
+                };
+                return Ok(TraceEvent::Fault { t, device, fault });
+            }
+            "recover" => return Ok(TraceEvent::Recover { t, device: dev()? }),
+            _ => {}
+        }
         let id = num("id")? as u64;
         let class = num("class")? as u8;
-        let dev = || num("dev").map(|d| d as usize);
         match j.get("ev").and_then(Json::as_str).ok_or("missing 'ev' tag")? {
             "admit" => Ok(TraceEvent::Admit { t, id, class }),
             "requeue" => Ok(TraceEvent::Requeue { t, id, class }),
@@ -146,7 +219,7 @@ impl TraceEvent {
             }),
             "shed" => {
                 let tracked = matches!(j.get("tracked"), Some(Json::Bool(true)));
-                Ok(TraceEvent::Shed { t, id, class, device: dev()?, tracked })
+                Ok(TraceEvent::Shed { t, id, class, device: num("dev")? as i64, tracked })
             }
             "step" => {
                 let full = matches!(j.get("full"), Some(Json::Bool(true)));
@@ -163,6 +236,14 @@ impl TraceEvent {
                     Some(Json::Bool(b)) => Some(*b),
                     _ => None,
                 },
+            }),
+            "migrate" => Ok(TraceEvent::Migrate {
+                t,
+                id,
+                class,
+                from: num("from")? as usize,
+                to: num("to")? as i64,
+                resident: matches!(j.get("resident"), Some(Json::Bool(true))),
             }),
             other => Err(format!("unknown event kind '{other}'")),
         }
@@ -270,10 +351,12 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
     for ev in events {
         let d = match *ev {
             TraceEvent::Route { device, .. }
-            | TraceEvent::Shed { device, .. }
-            | TraceEvent::Step { device, .. } => device as i64,
+            | TraceEvent::Step { device, .. }
+            | TraceEvent::Fault { device, .. }
+            | TraceEvent::Recover { device, .. } => device as i64,
             TraceEvent::Steal { device, from, .. } => device.max(from) as i64,
-            TraceEvent::Complete { device, .. } => device,
+            TraceEvent::Shed { device, .. } | TraceEvent::Complete { device, .. } => device,
+            TraceEvent::Migrate { from, to, .. } => (from as i64).max(to),
             _ => -1,
         };
         if d >= 0 {
@@ -289,6 +372,7 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
     let mut first_arrival_s = f64::INFINITY;
     let mut last_finish_s = 0.0f64;
     let mut completes: Vec<(f64, u64, u8, i64, f64, f64, Option<bool>)> = Vec::new();
+    let mut down_since: Vec<Option<f64>> = vec![None; ndev];
     for ev in events {
         match *ev {
             TraceEvent::Admit { t, .. } => first_arrival_s = first_arrival_s.min(t),
@@ -300,7 +384,24 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
                 last_finish_s = last_finish_s.max(t);
                 completes.push((t, id, class, device, latency_s, queue_s, deadline_met));
             }
+            TraceEvent::Fault { t, device, fault } => match fault {
+                TraceFault::Crash | TraceFault::Outage { .. } => down_since[device] = Some(t),
+                TraceFault::Slow { .. } => {}
+            },
+            TraceEvent::Recover { t, device } => {
+                if let Some(since) = down_since[device].take() {
+                    metrics.devices[device].downtime_s += (t - since).max(0.0);
+                }
+            }
             _ => {}
+        }
+    }
+    // Devices still down at the end of the window accrue downtime up
+    // to the last completion — the live `finalize_downtime` pass folds
+    // over the same `(finish_s, base 0.0)` maximum.
+    for (di, since) in down_since.iter().enumerate() {
+        if let Some(since) = since {
+            metrics.devices[di].downtime_s += (last_finish_s - since).max(0.0);
         }
     }
     completes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
@@ -312,12 +413,34 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
         }
     }
     // Sheds fold after completions, in recorded order — exactly the
-    // live `shed_log` pass.
+    // live `shed_log` pass. `dev = -1` is the total-outage sentinel:
+    // no device to charge, counted in the fleet-wide bucket.
     for ev in events {
         if let TraceEvent::Shed { class, device, tracked, .. } = *ev {
             metrics.record_shed(class, tracked);
             metrics.rejected += 1;
-            metrics.devices[device].shed += 1;
+            if device >= 0 {
+                metrics.devices[device as usize].shed += 1;
+            } else {
+                metrics.shed_unattributed += 1;
+            }
+        }
+    }
+    // Migrations fold last, in recorded order — the live `migrate_log`
+    // pass. The `from` device owns the churn accounting.
+    for ev in events {
+        if let TraceEvent::Migrate { class, from, to, resident, .. } = *ev {
+            let outcome = MigrateOutcome::from_target(to);
+            metrics.record_migration(class, resident, outcome);
+            let d = &mut metrics.devices[from];
+            if resident {
+                d.interrupted += 1;
+            }
+            match outcome {
+                MigrateOutcome::Migrated => d.migrated += 1,
+                MigrateOutcome::Retried => d.retried += 1,
+                MigrateOutcome::Lost => d.lost += 1,
+            }
         }
     }
     if first_arrival_s.is_finite() {
@@ -468,6 +591,105 @@ mod tests {
         assert!(parse_jsonl("{\"t\":0,\"id\":1,\"class\":0}\n").is_err());
         // Blank lines are fine.
         assert_eq!(parse_jsonl("\n\n").unwrap(), Vec::new());
+    }
+
+    /// Regression: an unknown event kind must be a loud `Err` naming
+    /// the kind and the 1-based line number — a replayer that predates
+    /// a trace's event vocabulary must refuse the file, not silently
+    /// drop lines. The bad line here is a plausible future fault kind.
+    #[test]
+    fn unknown_kinds_fail_loudly_with_kind_and_line_number() {
+        let doc = concat!(
+            "{\"ev\":\"admit\",\"t\":0,\"id\":1,\"class\":0}\n",
+            "{\"ev\":\"brownout\",\"t\":1,\"dev\":3}\n",
+        );
+        let err = parse_jsonl(doc).expect_err("unknown kind must not parse");
+        assert!(err.contains("trace line 2"), "missing line number: {err}");
+        assert!(err.contains("unknown event kind 'brownout'"), "missing kind: {err}");
+        // Same contract for an unknown *fault* sub-kind.
+        let doc = "{\"ev\":\"fault\",\"t\":0,\"dev\":1,\"kind\":\"meltdown\"}\n";
+        let err = parse_jsonl(doc).expect_err("unknown fault kind must not parse");
+        assert!(err.contains("trace line 1"), "missing line number: {err}");
+        assert!(err.contains("unknown fault kind 'meltdown'"), "missing kind: {err}");
+    }
+
+    #[test]
+    fn churn_events_round_trip_jsonl() {
+        let mut sink = TraceSink::new();
+        for ev in [
+            TraceEvent::Fault { t: 0.5, device: 2, fault: TraceFault::Crash },
+            TraceEvent::Fault { t: 0.75, device: 1, fault: TraceFault::Outage { until_s: 0.9 } },
+            TraceEvent::Fault { t: 1.0, device: 0, fault: TraceFault::Slow { factor: 1.5 } },
+            TraceEvent::Recover { t: 0.9, device: 1 },
+            TraceEvent::Migrate { t: 0.5, id: 4, class: 1, from: 2, to: 0, resident: true },
+            TraceEvent::Migrate { t: 0.5, id: 5, class: 0, from: 2, to: -1, resident: false },
+            TraceEvent::Migrate { t: 0.5, id: 6, class: 2, from: 2, to: -2, resident: true },
+        ] {
+            sink.record(ev);
+        }
+        let text = sink.to_jsonl();
+        // Churn events carry no request id/class.
+        for line in text.lines().take(4) {
+            assert!(!line.contains("\"id\""), "churn line leaked an id: {line}");
+        }
+        assert_eq!(parse_jsonl(&text).expect("parse"), sink.events());
+    }
+
+    #[test]
+    fn replay_reconstructs_churn_accounting() {
+        let events = [
+            TraceEvent::Admit { t: 0.0, id: 1, class: 0 },
+            TraceEvent::Route { t: 0.0, id: 1, class: 0, device: 2, est_s: 0.25 },
+            // Device 1: outage from t=1 to t=2 (downtime 1.0).
+            TraceEvent::Fault { t: 1.0, device: 1, fault: TraceFault::Outage { until_s: 2.0 } },
+            TraceEvent::Recover { t: 2.0, device: 1 },
+            // Device 2: crash at t=3, down through the last finish at
+            // t=5 (downtime 2.0). Its two victims: one in-flight
+            // sample migrated, one queued request lost.
+            TraceEvent::Fault { t: 3.0, device: 2, fault: TraceFault::Crash },
+            TraceEvent::Migrate { t: 3.0, id: 1, class: 0, from: 2, to: 0, resident: true },
+            TraceEvent::Migrate { t: 3.0, id: 9, class: 1, from: 2, to: -2, resident: false },
+            TraceEvent::Complete {
+                t: 5.0,
+                id: 1,
+                class: 0,
+                device: 0,
+                latency_s: 5.0,
+                queue_s: 0.5,
+                deadline_met: None,
+            },
+        ];
+        let r = replay(&events);
+        assert_eq!(r.metrics.devices[1].downtime_s, 1.0);
+        assert_eq!(r.metrics.devices[2].downtime_s, 2.0);
+        assert_eq!(r.metrics.devices[0].downtime_s, 0.0);
+        assert_eq!(r.metrics.devices[2].interrupted, 1);
+        assert_eq!(r.metrics.devices[2].migrated, 1);
+        assert_eq!(r.metrics.devices[2].lost, 1);
+        assert_eq!(r.metrics.devices[2].retried, 0);
+        let c0 = r.metrics.classes.iter().find(|c| c.class == 0).expect("class 0");
+        assert_eq!((c0.interrupted, c0.migrated), (1, 1));
+        let c1 = r.metrics.classes.iter().find(|c| c.class == 1).expect("class 1");
+        assert_eq!((c1.lost, c1.interrupted), (1, 0));
+        // Churn events never move the makespan: admit t=0 → finish t=5.
+        assert_eq!(r.metrics.makespan_s, 5.0);
+    }
+
+    #[test]
+    fn sentinel_shed_replays_into_unattributed_bucket() {
+        // A total-outage shed carries dev=-1: no per-device charge, no
+        // panic, counted fleet-wide.
+        let events = [
+            TraceEvent::Admit { t: 0.0, id: 1, class: 0 },
+            TraceEvent::Shed { t: 0.0, id: 1, class: 0, device: -1, tracked: true },
+            TraceEvent::Shed { t: 0.1, id: 2, class: 0, device: 0, tracked: false },
+        ];
+        let r = replay(&events);
+        assert_eq!(r.metrics.rejected, 2);
+        assert_eq!(r.metrics.shed_unattributed, 1);
+        assert_eq!(r.metrics.devices[0].shed, 1);
+        let text: String = events.iter().map(|e| e.to_json().to_string_compact() + "\n").collect();
+        assert_eq!(parse_jsonl(&text).expect("parse"), events);
     }
 
     #[test]

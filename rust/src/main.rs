@@ -22,7 +22,8 @@
 //!   [--shallow-frac F] [--no-steal] [--occupancy-only]
 //!   [--fleet SPEC | --fleet-file PATH]
 //!   [--arrival poisson:RATE|burst:RATE:DUTY | --clients N:THINK_MS]
-//!   [--slo-ms MS[,MS...]] [--shed-late] [--backlog B]` —
+//!   [--slo-ms MS[,MS...]] [--shed-late] [--backlog B]
+//!   [--faults SPEC | --faults-file PATH] [--no-migration]` —
 //!   pure-simulation fleet serving (no artifacts needed): continuous
 //!   step-level batching over simulated DiffLight devices — homogeneous
 //!   (`--devices`) or heterogeneous
@@ -33,9 +34,14 @@
 //!   arrival stream: the default replayed synthetic workload, an
 //!   open-loop Poisson/burst process (`--arrival`), or closed-loop
 //!   clients (`--clients`); `--slo-ms`/`--shed-late` add the SLO tier
-//!   (goodput, attainment, deadline-aware admission). `--trace FILE`
-//!   attaches the flight recorder and writes per-request lifecycle
-//!   events as JSON lines. Grammars are documented in
+//!   (goodput, attainment, deadline-aware admission).
+//!   `--faults "crash@t=T:dev=N,down@t=T:mttr=S,recal:mtbf=S:mttr=S"`
+//!   (or `--faults-file faults.json`) injects deterministic device
+//!   churn — crashes, thermal-recalibration outages, straggler onset —
+//!   with step-boundary checkpoint/migrate recovery of victim requests
+//!   (`--no-migration` ablates it so victims are lost instead).
+//!   `--trace FILE` attaches the flight recorder and writes per-request
+//!   lifecycle events as JSON lines. Grammars are documented in
 //!   `rust/src/cluster/README.md`.
 //! * `trace replay FILE [FILE2] [--expect report.json]` — reconstruct a
 //!   run from a flight-recorder trace: recompute the latency/queue
@@ -47,11 +53,14 @@
 
 use difflight::arch::cost::OptFlags;
 use difflight::baselines::all_baselines;
-use difflight::cluster::load::{parse_arrival_spec, parse_clients_spec, parse_slo_spec};
+use difflight::cluster::load::{
+    parse_arrival_spec, parse_clients_spec, parse_fault_spec, parse_slo_spec,
+};
 use difflight::cluster::trace::{check_against_report, diff, parse_jsonl, replay, replay_summary};
 use difflight::cluster::{
-    parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster, ClusterConfig,
-    DeviceProfile, RequestSource, ShardPolicy, SimExecutor, TraceEvent, TraceSink,
+    parse_faults_json, parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster,
+    ClusterConfig, DeviceProfile, FaultPlan, RequestSource, ShardPolicy, SimExecutor, TraceEvent,
+    TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -100,6 +109,10 @@ fn print_help(program: &str) {
     println!("          --slo-ms 30,100             per-class latency SLOs");
     println!("          --shed-late                 deadline-aware admission shedding");
     println!("          --backlog 64                fleet-level deferral queue (0 = shed)");
+    println!("          --faults \"crash@t=0.002:dev=3,down@t=0.001:mttr=0.016\"");
+    println!("                                      deterministic device churn (also recal:mtbf=S:mttr=S, slow@t=T:factor=F)");
+    println!("          --faults-file faults.json   fault plan as JSON");
+    println!("          --no-migration              lose fault victims instead of checkpoint/migrate");
     println!("          --trace trace.jsonl         flight recorder: per-request events as JSON lines");
     println!("  trace replay FILE                   rebuild metrics from a recorded trace");
     println!("        replay FILE --expect artifacts/cluster_report.json");
@@ -358,7 +371,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // (and drained mode defers with an unbounded backlog), so the
     // arrival-process and backlog knobs belong to the `cluster`
     // subcommand — accepting them here would silently do nothing.
-    for flag in ["arrival", "clients", "gap-us", "backlog"] {
+    for flag in ["arrival", "clients", "gap-us", "backlog", "faults", "faults-file"] {
         if args.get(flag).is_some() {
             eprintln!(
                 "error: --{flag} only applies to the artifact-free `cluster` subcommand; \
@@ -474,6 +487,36 @@ fn cmd_cluster(args: &Args) -> i32 {
     let config = config
         .backlog(args.get_parsed("backlog", 0usize))
         .shed_late(args.flag("shed-late"));
+    let faults_spec = args.get("faults");
+    let faults_file = args.get("faults-file");
+    if faults_spec.is_some() && faults_file.is_some() {
+        eprintln!("error: --faults and --faults-file are mutually exclusive");
+        return 2;
+    }
+    let plan = match (faults_spec, faults_file) {
+        (Some(spec), None) => match parse_fault_spec(spec, config.device_count()) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        },
+        (None, Some(path)) => {
+            let parsed = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--faults-file {path}: {e}"))
+                .and_then(|text| parse_faults_json(&text));
+            match parsed {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    return 2;
+                }
+            }
+        }
+        _ => FaultPlan::default(),
+    };
+    let churn = !plan.is_empty();
+    let config = config.faults(plan).migration(!args.flag("no-migration"));
     let requests = args.get_parsed("requests", 32usize);
     let steps = args.get_parsed("steps", 25usize);
     if steps > 1000 {
@@ -587,6 +630,17 @@ fn cmd_cluster(args: &Args) -> i32 {
                 fmt_si(c.latency_p99_s(), "s"),
             );
         }
+    }
+    if churn {
+        println!(
+            "resilience: {} interrupted, {} migrated, {} requeued, {} lost, downtime {}{}",
+            m.interrupted(),
+            m.migrated(),
+            m.retried(),
+            m.lost(),
+            fmt_si(m.downtime_s(), "s"),
+            if config.migration { "" } else { " (migration disabled)" },
+        );
     }
     println!(
         "scheduler: {} events in {} serving host time ({:.0} events/s; pricing {})",

@@ -5,19 +5,23 @@
 # O(N) reference loop), the heterogeneous big/small fleet drain
 # (cost-aware vs occupancy-only routing), and the SLO knee sweep
 # (arrival rate vs SLO attainment on the paper fleet, deadline-aware
-# shedding vs shed-on-full at overload), and the observability tier
+# shedding vs shed-on-full at overload), the observability tier
 # (histogram quantile accuracy vs exact-vector percentiles, flight-
 # recorder overhead, constant-size metrics memory, trace-replay
-# round trip), asserting the ISSUE targets
+# round trip), and the resilience tier (device churn under fault
+# injection: crash/outage/straggler plans, step-boundary migration,
+# MTBF x fleet-size degradation curves), asserting the ISSUE targets
 # (>=5x DSE, >=1.5x fleet throughput at K=3, >=5x scheduler events/sec
 # at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet,
 # >=1.2x goodput from deadline-aware shedding at overload, histogram
 # p50/p99 within 1% of exact percentiles, recorder overhead <= 5%,
-# O(buckets) metrics memory, bit-identical trace replay) and writing
-# BENCH_sim.json at the repo root.
+# O(buckets) metrics memory, bit-identical trace replay, >=0.8x
+# goodput at 10% device loss, zero lost requests with migration,
+# heap-vs-reference bit-identity under a seeded fault plan) and
+# writing BENCH_sim.json at the repo root.
 #
 # Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
-#                         [--obs]
+#                         [--obs] [--faults]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
 #                    gating the 64-device scheduler point, the 2-profile
 #                    and closed-loop heap-vs-reference parities, and a
@@ -37,6 +41,12 @@
 #                    quantile-accuracy and 64-device recorder-overhead
 #                    runs) even together with --smoke; the section
 #                    itself always runs and lands in BENCH_sim.json.
+#   --faults         force the full-size resilience section (20-device
+#                    crash gate plus the full MTBF x fleet-size recal
+#                    sweep, writing the goodput-degradation curves to
+#                    the "resilience" key of BENCH_sim.json) even
+#                    together with --smoke; the section itself always
+#                    runs and lands in BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

@@ -27,7 +27,11 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # under host load). The obs section gates the streaming-metrics tier:
 # histogram quantiles within 1% of exact-vector percentiles, recorder
 # overhead <= 5%, constant-size histogram JSON across 10x request
-# counts, and trace-replay bit-identity.
+# counts, and trace-replay bit-identity. The resilience section gates
+# the fault-injection tier: 10% device loss keeps goodput >= 0.8x the
+# zero-fault baseline, step-boundary migration loses zero requests
+# (and the no-migration ablation loses the victims), and a seeded
+# mixed fault plan stays heap-vs-reference bit-identical.
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== obs smoke (flight recorder round trip) =="
@@ -45,6 +49,28 @@ trap 'rm -rf "$obs_tmp"' EXIT
         --expect artifacts/cluster_report.json >/dev/null
 )
 echo "obs smoke: replayed quantiles match the live report"
+
+echo "== churn smoke (fault injection + migration round trip) =="
+# End-to-end CLI gate for the resilience tier: drain a 16-device run
+# through a crash plus a recalibration outage with step-boundary
+# migration, trace it, then replay the trace and require the
+# reconstructed report (fault counters and downtime included) to match
+# the live one exactly (exit 1 on any divergent key).
+churn_tmp="$(mktemp -d)"
+trap 'rm -rf "$obs_tmp" "$churn_tmp"' EXIT
+(
+    cd "$churn_tmp"
+    # --gap-us spreads the arrivals over ~13 ms of simulated time, so
+    # the 2/3 ms fault instants land mid-stream whatever the priced
+    # step time is.
+    "$OLDPWD/target/release/difflight" cluster --devices 16 --requests 128 \
+        --steps 8 --gap-us 100 --backlog 256 \
+        --faults "crash@t=0.002:dev=3,down@t=0.003:dev=7:mttr=0.004" \
+        --trace churn.jsonl >/dev/null
+    "$OLDPWD/target/release/difflight" trace replay churn.jsonl \
+        --expect artifacts/cluster_report.json >/dev/null
+)
+echo "churn smoke: replayed fault accounting matches the live report"
 
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
