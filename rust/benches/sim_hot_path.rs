@@ -67,7 +67,8 @@
 //! forces the full-size knee sweep (`scripts/bench.sh --slo`); `--obs`
 //! forces the full-size observability section (`scripts/bench.sh
 //! --obs`); `--faults` forces the full-size resilience section
-//! (`scripts/bench.sh --faults`).
+//! (`scripts/bench.sh --faults`); `--brownout` forces the full-size
+//! brownout/hedge/retry section (`scripts/bench.sh --brownout`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -124,7 +125,18 @@
 //!     "ablation_lost": N, "parity_bit_identical": true,
 //!     "sweep": [ { "devices": N, "mtbf_over_makespan": x,
 //!                  "outages": N, "downtime_s": x,
-//!                  "goodput_ratio": x } ] }
+//!                  "goodput_ratio": x } ] },
+//!   "brownout": { "devices": N, "requests": N, "gen_s": x,
+//!     "capacity_samples_per_s": x, "overload_rate_rps": x,
+//!     "degraded_tiers": { "goodput_samples_per_s": x,
+//!       "shed_only_goodput_samples_per_s": x, "goodput_gain": x,
+//!       "degraded_admissions": N, "top_class_attainment": x },
+//!     "hedge": { "requests": N, "p99_clean_s": x, "p99_straggler_s": x,
+//!       "p99_hedged_s": x, "regression_recovered": x, "hedged": N,
+//!       "cancelled": N, "duplicate_work_frac": x },
+//!     "retry": { "requests": N, "ablation_lost": N, "retries": N,
+//!       "lost": 0, "served": N },
+//!     "parity_bit_identical": true }
 //! }
 //! ```
 
@@ -135,11 +147,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use difflight::arch::ArchConfig;
-use difflight::cluster::trace::{check_against_report, parse_jsonl, replay};
+use difflight::cluster::trace::{check_against_report, parse_jsonl, parse_jsonl_versioned, replay};
 use difflight::cluster::{
-    default_recal_mttr_s, profile_step_costs, synthetic_workload, Cluster, ClusterConfig,
-    ClusterOutcome, FaultPlan, ReferenceScheduler, RequestSource, ShardPolicy, SimExecutor,
-    StepScheduler, TraceSink,
+    default_recal_mttr_s, profile_step_costs, synthetic_workload, BrownoutConfig, Cluster,
+    ClusterConfig, ClusterOutcome, FaultPlan, HedgePolicy, ReferenceScheduler, RequestSource,
+    RetryPolicy, ShardPolicy, SimExecutor, StepScheduler, TraceEvent, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
@@ -839,6 +851,293 @@ fn main() {
         }
     }
 
+    // ---- (h) brownout, hedged requests, and retry budgets ----
+    // The client-side resilience tier (ISSUE 8). Three gates plus a
+    // parity check, all deterministic simulated-time results so they
+    // run in smoke mode too; `--brownout` forces the full-size runs
+    // (`scripts/bench.sh --brownout`).
+    let brownout_full = !smoke || std::env::args().any(|a| a == "--brownout");
+    harness::section(&format!(
+        "brownout / hedge / retry ({})",
+        if brownout_full { "full" } else { "smoke" },
+    ));
+    let bo_steps = 8usize;
+
+    // Gate (1): brownout beats shed-only overload control. Class 0 is
+    // the protected top tier (1 request in 4, generous SLO); classes
+    // 1-3 are degradable bulk traffic on a tight SLO. At 2x the
+    // fleet's measured capacity the controller must find a degraded
+    // operating point that serves >= 1.2x the shed-only goodput while
+    // the undegraded top class stays >= 99% attained.
+    //
+    // Scale the overload and the SLO ladder from measured times, not
+    // hard-coded seconds: a solo request prices one generation, a
+    // saturated drain prices fleet capacity.
+    let bo_devices = if brownout_full { 8 } else { 4 };
+    let bo_requests = if brownout_full { 800 } else { 400 };
+    let solo_cfg = ClusterConfig::with_devices(1).capacity(2).max_queue(4);
+    let solo_costs = profile_step_costs(&solo_cfg).expect("solo fleet must price");
+    let mut solo = StepScheduler::new(&solo_cfg, &solo_costs, NoiseSchedule::linear(1000), 256);
+    let gen_s = solo
+        .serve(synthetic_workload(1, 3, SamplerKind::Ddim { steps: bo_steps }, 0.0), &mut SimExecutor)
+        .expect("solo probe")
+        .results[0]
+        .latency_s();
+    let bo_cfg = ClusterConfig::with_devices(bo_devices)
+        .capacity(2)
+        .max_queue(64)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded)
+        .shed_late(true);
+    let bo_costs = profile_step_costs(&bo_cfg).expect("brownout fleet must price");
+    let bo_cap_rate = {
+        let cfg = bo_cfg.clone().shed_late(false);
+        let mut s = StepScheduler::new(&cfg, &bo_costs, NoiseSchedule::linear(1000), 256);
+        s.serve(
+            synthetic_workload(bo_devices * 24, 7, SamplerKind::Ddim { steps: bo_steps }, 0.0),
+            &mut SimExecutor,
+        )
+        .expect("capacity probe")
+        .metrics
+        .throughput_samples_per_s()
+    };
+    let bo_rate = 2.0 * bo_cap_rate;
+    let bo_slos = vec![30.0 * gen_s, 6.0 * gen_s, 6.0 * gen_s, 6.0 * gen_s];
+    let bo_serve = |brownout: Option<BrownoutConfig>| {
+        let mut cfg = bo_cfg.clone();
+        if let Some(b) = brownout {
+            cfg = cfg.brownout(b);
+        }
+        let mut s = StepScheduler::new(&cfg, &bo_costs, NoiseSchedule::linear(1000), 256);
+        let src =
+            RequestSource::poisson(bo_requests, 23, SamplerKind::Ddim { steps: bo_steps }, bo_rate)
+                .with_slos(bo_slos.clone());
+        s.serve_source(src, &mut SimExecutor).expect("overload serve")
+    };
+    let bo_shed_only = bo_serve(None);
+    let bo_browned = bo_serve(Some(BrownoutConfig::new(0.95, 32, 2, 0.5)));
+    let bo_g_shed = bo_shed_only.metrics.goodput_samples_per_s();
+    let bo_g_deg = bo_browned.metrics.goodput_samples_per_s();
+    let bo_gain = bo_g_deg / bo_g_shed;
+    let bo_top = bo_browned.metrics.classes[0].attainment();
+    println!(
+        "brownout gate: 2.0x overload ({bo_rate:.0} rps), shed-only {bo_g_shed:.1} -> \
+         degraded-tier {bo_g_deg:.1} samples/s ({bo_gain:.2}x), {} degraded admissions, \
+         top-class attainment {:.4}",
+        bo_browned.metrics.degraded(),
+        bo_top,
+    );
+    assert!(
+        bo_browned.metrics.degraded() > 0,
+        "the overload must actually engage the brownout controller"
+    );
+    assert!(
+        bo_gain >= 1.2,
+        "degraded-tier serving must beat shed-only goodput by >= 1.2x (got {bo_gain:.3}x)"
+    );
+    assert!(
+        bo_top >= 0.99,
+        "brownout must hold >= 99% attainment on the undegraded top class (got {bo_top:.4})"
+    );
+
+    // Gate (2): hedged requests rescue straggler residents. Two dies
+    // turn 40x slow mid-drain; work stealing already drains their
+    // queues, so the tail is exactly the work *running* there. Hedging
+    // at a fixed threshold (the clean run's p99) must claw back >= 90%
+    // of the straggler-induced p99 regression for <= 10% duplicated
+    // denoise steps.
+    let hg_devices = 8;
+    let hg_requests = if brownout_full { 480 } else { 320 };
+    let hg_cfg = ClusterConfig::with_devices(hg_devices)
+        .capacity(4)
+        .max_queue(64)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded);
+    let hg_costs = profile_step_costs(&hg_cfg).expect("hedge fleet must price");
+    let hg_reqs = synthetic_workload(hg_requests, 29, SamplerKind::Ddim { steps: bo_steps }, 0.0);
+    let hg_serve = |plan: FaultPlan, hedge: Option<HedgePolicy>, trace: bool| {
+        let mut cfg = hg_cfg.clone().faults(plan);
+        if let Some(h) = hedge {
+            cfg = cfg.hedge(h);
+        }
+        let mut s = StepScheduler::new(&cfg, &hg_costs, NoiseSchedule::linear(1000), 256);
+        if trace {
+            s.set_trace(TraceSink::new());
+        }
+        let out = s.serve(hg_reqs.clone(), &mut SimExecutor).expect("hedge serve");
+        let sink = if trace { s.take_trace() } else { None };
+        (out, sink)
+    };
+    let (hg_clean, _) = hg_serve(FaultPlan::new(), None, false);
+    let hg_p99_clean = hg_clean.metrics.latency_p99_s();
+    let hg_mp = hg_clean.metrics.makespan_s;
+    let hg_plan = || {
+        FaultPlan::new().slow_at(0.25 * hg_mp, 0, 40.0).slow_at(0.25 * hg_mp, 1, 40.0)
+    };
+    let (hg_unhedged, _) = hg_serve(hg_plan(), None, false);
+    let hg_p99_slow = hg_unhedged.metrics.latency_p99_s();
+    let (hg_hedged, hg_trace) = hg_serve(hg_plan(), Some(HedgePolicy::fixed(hg_p99_clean)), true);
+    let hg_p99_hedged = hg_hedged.metrics.latency_p99_s();
+    assert_eq!(hg_unhedged.results.len(), hg_requests, "stragglers alone must not lose work");
+    assert_eq!(
+        hg_hedged.results.len(),
+        hg_requests,
+        "hedging must neither lose nor double-serve a request"
+    );
+    assert!(
+        hg_p99_slow > 1.25 * hg_p99_clean,
+        "the seeded stragglers must damage the unhedged p99, else the gate tests nothing"
+    );
+    assert!(hg_hedged.metrics.hedged() > 0, "the stragglers must trip the hedge threshold");
+    let hg_recovery = (hg_p99_slow - hg_p99_hedged) / (hg_p99_slow - hg_p99_clean);
+    // Every step a cancelled loser executed is a step the fleet spent
+    // twice; sum the duplicate cost straight off the flight recorder.
+    let hg_dup_steps: u64 = hg_trace
+        .as_ref()
+        .expect("trace attached")
+        .events()
+        .iter()
+        .map(|ev| match *ev {
+            TraceEvent::Cancel { steps, .. } => steps,
+            _ => 0,
+        })
+        .sum();
+    let hg_total_steps: u64 = hg_hedged.metrics.devices.iter().map(|d| d.steps_executed).sum();
+    let hg_dup_frac = hg_dup_steps as f64 / hg_total_steps as f64;
+    println!(
+        "hedge gate: p99 clean {:.2} ms, straggler {:.2} ms, hedged {:.2} ms \
+         (recovered {:.0}% of the regression); {} hedged, {} cancelled, \
+         duplicate work {:.2}%",
+        1e3 * hg_p99_clean,
+        1e3 * hg_p99_slow,
+        1e3 * hg_p99_hedged,
+        100.0 * hg_recovery,
+        hg_hedged.metrics.hedged(),
+        hg_hedged.metrics.cancelled(),
+        100.0 * hg_dup_frac,
+    );
+    assert!(
+        hg_recovery >= 0.9,
+        "hedging must recover >= 0.9x of the straggler p99 regression (got {hg_recovery:.3})"
+    );
+    assert!(
+        hg_dup_frac <= 0.10,
+        "hedge duplicates must cost <= 10% extra denoise steps (got {hg_dup_frac:.3})"
+    );
+
+    // Gate (3): retry budgets turn fault losses into served requests.
+    // Crash two dies mid-drain with migration off — the in-fleet rescue
+    // path is gone, so without retries the victims are lost; with a
+    // retry budget every loss re-enters the arrival stream after
+    // jittered exponential backoff and completes. Zero lost.
+    let rt_devices = 10;
+    let rt_requests = rt_devices * 24;
+    let rt_cfg = ClusterConfig::with_devices(rt_devices)
+        .capacity(2)
+        .max_queue(8)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded)
+        .migration(false);
+    let rt_costs = profile_step_costs(&rt_cfg).expect("retry fleet must price");
+    let rt_reqs = synthetic_workload(rt_requests, 31, SamplerKind::Ddim { steps: bo_steps }, 0.0);
+    let rt_mp = {
+        let mut s = StepScheduler::new(&rt_cfg, &rt_costs, NoiseSchedule::linear(1000), 256);
+        s.serve(rt_reqs.clone(), &mut SimExecutor).expect("retry probe").metrics.makespan_s
+    };
+    let rt_plan = FaultPlan::new().crash_at(0.25 * rt_mp, 0).crash_at(0.25 * rt_mp, 1);
+    let rt_serve = |retry: Option<RetryPolicy>| {
+        let cfg = rt_cfg.clone().faults(rt_plan.clone());
+        let mut s = StepScheduler::new(&cfg, &rt_costs, NoiseSchedule::linear(1000), 256);
+        let mut src = RequestSource::replay(rt_reqs.clone());
+        if let Some(p) = retry {
+            src = src.with_retry(p, 3);
+        }
+        s.serve_source(src, &mut SimExecutor).expect("retry serve")
+    };
+    let rt_without = rt_serve(None);
+    assert!(
+        rt_without.metrics.lost() > 0,
+        "the no-retry ablation must lose the crash victims, else retries are untested"
+    );
+    let rt_with = rt_serve(Some(RetryPolicy::new(5, 0.05 * rt_mp, 1.0)));
+    println!(
+        "retry gate: {} lost without retries; with them {} retries, {} lost, {}/{} served",
+        rt_without.metrics.lost(),
+        rt_with.metrics.retries(),
+        rt_with.metrics.lost(),
+        rt_with.results.len(),
+        rt_requests,
+    );
+    assert!(rt_with.metrics.retries() > 0, "the crash must actually trigger retries");
+    assert_eq!(rt_with.metrics.lost(), 0, "retry budgets must add zero lost requests");
+    assert_eq!(rt_with.results.len(), rt_requests, "every victim must resubmit and finish");
+    assert!(rt_with.rejected.is_empty(), "nothing may be shed on an unconstrained backlog");
+
+    // Parity: all three mechanisms at once on a churning fleet — heap
+    // core == reference loop on results, metrics, and the full flight
+    // recorder, and the strict-versioned trace round-trips through
+    // `replay` reconstructing every resilience counter.
+    {
+        let base = ClusterConfig::with_devices(8)
+            .capacity(2)
+            .max_queue(8)
+            .backlog(64)
+            .policy(ShardPolicy::LeastLoaded)
+            .shed_late(true)
+            .hedge(HedgePolicy::quantile(0.95))
+            .brownout(BrownoutConfig::new(0.9, 24, 2, 0.5));
+        let costs = profile_step_costs(&base).expect("parity fleet must price");
+        let schedule = NoiseSchedule::linear(1000);
+        let reqs = synthetic_workload(96, 37, SamplerKind::Ddim { steps: 8 }, 1e-5);
+        let mut probe = StepScheduler::new(&base, &costs, schedule.clone(), 256);
+        let mp = probe
+            .serve(reqs.clone(), &mut SimExecutor)
+            .expect("parity probe")
+            .metrics
+            .makespan_s;
+        let plan = FaultPlan::new()
+            .crash_at(0.2 * mp, 1)
+            .outage_at(0.35 * mp, 3, 0.15 * mp)
+            .slow_at(0.1 * mp, 5, 2.5);
+        let cfg = base.faults(plan);
+        let src = || {
+            RequestSource::replay(reqs.clone())
+                .with_slos(vec![0.5 * mp, 0.1 * mp])
+                .with_retry(RetryPolicy::new(3, 0.02 * mp, 1.0), 11)
+        };
+        let mut heap = StepScheduler::new(&cfg, &costs, schedule.clone(), 256);
+        heap.set_trace(TraceSink::new());
+        let a = heap.serve_source(src(), &mut SimExecutor).expect("heap serve");
+        let ta = heap.take_trace().expect("heap trace");
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, schedule, 256);
+        reference.set_trace(TraceSink::new());
+        let b = reference.serve_source(src(), &mut SimExecutor).expect("reference serve");
+        let tb = reference.take_trace().expect("reference trace");
+        assert_eq!(a.metrics, b.metrics, "resilience parity: metrics diverged");
+        assert_eq!(a.rejected, b.rejected, "resilience parity: rejection set diverged");
+        assert_eq!(a.results.len(), b.results.len());
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!((ra.id, ra.device), (rb.id, rb.device), "resilience parity: placement");
+            assert_eq!(ra.sample, rb.sample, "resilience parity: samples");
+            assert!(ra.finish_s == rb.finish_s, "resilience parity: timings");
+        }
+        assert_eq!(ta.to_jsonl(), tb.to_jsonl(), "resilience parity: traces diverged");
+        let parsed =
+            parse_jsonl_versioned(&ta.to_jsonl()).expect("versioned trace must round-trip");
+        let rep = replay(&parsed);
+        assert_eq!(rep.metrics.rejected, a.metrics.rejected, "replay: rejected");
+        assert_eq!(rep.metrics.hedged(), a.metrics.hedged(), "replay: hedged");
+        assert_eq!(rep.metrics.cancelled(), a.metrics.cancelled(), "replay: cancelled");
+        assert_eq!(rep.metrics.retries(), a.metrics.retries(), "replay: retries");
+        assert_eq!(rep.metrics.degraded(), a.metrics.degraded(), "replay: degraded");
+        assert_eq!(rep.metrics.lost(), a.metrics.lost(), "replay: lost");
+        println!(
+            "resilience parity gate: heap == reference with retry+hedge+brownout enabled \
+             ({} trace events, bit-identical; replay rebuilds every counter)",
+            parsed.len()
+        );
+    }
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -988,6 +1287,46 @@ fn main() {
                 .set("ablation_lost", ablation_lost)
                 .set("parity_bit_identical", true)
                 .set("sweep", Json::Arr(res_sweep)),
+        )
+        .set(
+            "brownout",
+            Json::obj()
+                .set("devices", bo_devices)
+                .set("requests", bo_requests)
+                .set("gen_s", gen_s)
+                .set("capacity_samples_per_s", bo_cap_rate)
+                .set("overload_rate_rps", bo_rate)
+                .set(
+                    "degraded_tiers",
+                    Json::obj()
+                        .set("goodput_samples_per_s", bo_g_deg)
+                        .set("shed_only_goodput_samples_per_s", bo_g_shed)
+                        .set("goodput_gain", bo_gain)
+                        .set("degraded_admissions", bo_browned.metrics.degraded())
+                        .set("top_class_attainment", bo_top),
+                )
+                .set(
+                    "hedge",
+                    Json::obj()
+                        .set("requests", hg_requests)
+                        .set("p99_clean_s", hg_p99_clean)
+                        .set("p99_straggler_s", hg_p99_slow)
+                        .set("p99_hedged_s", hg_p99_hedged)
+                        .set("regression_recovered", hg_recovery)
+                        .set("hedged", hg_hedged.metrics.hedged())
+                        .set("cancelled", hg_hedged.metrics.cancelled())
+                        .set("duplicate_work_frac", hg_dup_frac),
+                )
+                .set(
+                    "retry",
+                    Json::obj()
+                        .set("requests", rt_requests)
+                        .set("ablation_lost", rt_without.metrics.lost())
+                        .set("retries", rt_with.metrics.retries())
+                        .set("lost", rt_with.metrics.lost())
+                        .set("served", rt_with.results.len()),
+                )
+                .set("parity_bit_identical", true),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

@@ -144,6 +144,12 @@ pub struct Device {
     /// Fault victims shed because migration was off, the fleet was
     /// full, or the re-admission deadline check failed.
     pub lost: u64,
+    /// Hedges issued against this device's residents (a request running
+    /// here was slow enough that a duplicate went to another device).
+    pub hedged: u64,
+    /// Slots cancelled here at a step boundary because the other copy
+    /// of a hedged request retired first.
+    pub cancelled: u64,
 }
 
 impl Device {
@@ -202,6 +208,8 @@ impl Device {
             migrated: 0,
             retried: 0,
             lost: 0,
+            hedged: 0,
+            cancelled: 0,
         }
     }
 
@@ -408,6 +416,8 @@ impl Device {
         self.migrated = 0;
         self.retried = 0;
         self.lost = 0;
+        self.hedged = 0;
+        self.cancelled = 0;
     }
 
 }

@@ -37,6 +37,14 @@
 //! SLO decoration: [`RequestSource::with_slos`] (or [`apply_slos`] for
 //! raw vectors) assigns each request a service class — round-robin by
 //! id over the per-class SLO list — and the class's deadline.
+//!
+//! Retry decoration: [`RequestSource::with_retry`] arms a client
+//! [`RetryPolicy`]. Requests that leave the system *without*
+//! completing (admission shed, or lost to a fault) can be offered back
+//! via [`RequestSource::try_retry`]; accepted ones re-enter the
+//! arrival stream as deterministic seeded retry events after a
+//! jittered exponential backoff, throttled by a per-class token
+//! budget so retries can never amplify an overload.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -245,6 +253,138 @@ impl ClosedLoop {
     }
 }
 
+// ---------------------------------------------------------------------
+// Retry tier: shed and fault-lost requests re-enter the arrival stream
+// as deterministic seeded retry events.
+// ---------------------------------------------------------------------
+
+/// Client retry policy: capped attempts with jittered exponential
+/// backoff, throttled by a per-class token budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total submissions allowed per request, the first included
+    /// (`max_attempts = 3` is the original try plus two retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per retry, jittered
+    /// uniformly over `[0.5x, 1x)`.
+    pub backoff_s: f64,
+    /// Retry tokens earned per *fresh* arrival of a class; every retry
+    /// spends one. At `budget < 1` retries cannot amplify an overload:
+    /// per class, retries <= budget x fresh arrivals, always.
+    pub budget: f64,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, backoff_s: f64, budget: f64) -> Self {
+        assert!(max_attempts >= 2, "max_attempts counts the first try; >= 2 to ever retry");
+        assert!(backoff_s >= 0.0 && backoff_s.is_finite(), "backoff must be finite and >= 0");
+        assert!(budget > 0.0 && budget.is_finite(), "retry budget must be finite and > 0");
+        Self { max_attempts, backoff_s, budget }
+    }
+}
+
+/// A scheduled resubmission, min `(fire time, issue order)` first.
+#[derive(Debug, Clone)]
+struct RetryEntry {
+    at: OrdTime,
+    seq: u64,
+    req: ClusterRequest,
+}
+
+impl PartialEq for RetryEntry {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+
+impl Eq for RetryEntry {}
+
+impl PartialOrd for RetryEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RetryEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct RetryState {
+    policy: RetryPolicy,
+    seed: u64,
+    /// Scheduled resubmissions, earliest first.
+    pending: BinaryHeap<Reverse<RetryEntry>>,
+    /// Request id → retries issued so far.
+    attempts: FxMap<u64, u32>,
+    /// Class → retry tokens currently banked.
+    tokens: FxMap<u8, f64>,
+    /// Issue-order tie-break for same-instant retries.
+    seq: u64,
+}
+
+impl RetryState {
+    fn new(policy: RetryPolicy, seed: u64) -> Self {
+        Self {
+            policy,
+            seed,
+            pending: BinaryHeap::new(),
+            attempts: FxMap::default(),
+            tokens: FxMap::default(),
+            seq: 0,
+        }
+    }
+
+    fn peek(&self) -> Option<f64> {
+        self.pending.peek().map(|Reverse(e)| e.at.0)
+    }
+
+    fn pop(&mut self) -> ClusterRequest {
+        let Reverse(e) = self.pending.pop().expect("pop on an empty retry queue");
+        e.req
+    }
+
+    fn earn(&mut self, class: u8) {
+        *self.tokens.entry(class).or_insert(0.0) += self.policy.budget;
+    }
+
+    fn try_retry(&mut self, req: &ClusterRequest, now_s: f64) -> Option<(u32, f64)> {
+        let retries = self.attempts.get(&req.id.0).copied().unwrap_or(0);
+        if retries + 1 >= self.policy.max_attempts {
+            return None;
+        }
+        let tokens = self.tokens.entry(req.class).or_insert(0.0);
+        if *tokens < 1.0 {
+            return None;
+        }
+        *tokens -= 1.0;
+        let attempt = retries + 1;
+        self.attempts.insert(req.id.0, attempt);
+        // One independent jitter stream per (request, attempt): the draw
+        // never depends on interleaving with other requests' retries, so
+        // both scheduler cores observe identical fire times.
+        let mut rng = XorShift::new(
+            self.seed
+                ^ req.id.0.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xA5A5_5A5A_DEAD_BEEF),
+        );
+        let delay = self.policy.backoff_s
+            * (1u64 << (attempt - 1).min(32)) as f64
+            * (0.5 + 0.5 * rng.next_f64());
+        let at = now_s + delay;
+        // The resubmission is the same logical request (id, seed, class,
+        // sampler, relative deadline) with a fresh arrival instant: the
+        // SLO clock restarts per attempt, like a real client resubmit.
+        let mut again = req.clone();
+        again.arrival_s = at;
+        self.pending.push(Reverse(RetryEntry { at: OrdTime(at), seq: self.seq, req: again }));
+        self.seq += 1;
+        Some((attempt, at))
+    }
+}
+
 #[derive(Debug, Clone)]
 enum SourceKind {
     Replay(VecDeque<ClusterRequest>),
@@ -257,6 +397,7 @@ enum SourceKind {
 #[derive(Debug, Clone)]
 pub struct RequestSource {
     kind: SourceKind,
+    retry: Option<RetryState>,
 }
 
 impl RequestSource {
@@ -264,7 +405,7 @@ impl RequestSource {
     /// exactly like the pre-refactor schedulers sorted it).
     pub fn replay(mut requests: Vec<ClusterRequest>) -> Self {
         requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
-        Self { kind: SourceKind::Replay(requests.into()) }
+        Self { kind: SourceKind::Replay(requests.into()), retry: None }
     }
 
     /// Open-loop Poisson arrivals: `n` requests at `rate_per_s`.
@@ -285,6 +426,7 @@ impl RequestSource {
                 on_time_s: 0.0,
                 slos_s: Vec::new(),
             }),
+            retry: None,
         }
     }
 
@@ -307,6 +449,7 @@ impl RequestSource {
                 on_time_s: 0.0,
                 slos_s: Vec::new(),
             }),
+            retry: None,
         }
     }
 
@@ -319,7 +462,10 @@ impl RequestSource {
         seed: u64,
         sampler: SamplerKind,
     ) -> Self {
-        Self { kind: SourceKind::Closed(ClosedLoop::new(clients, think_s, max_requests, seed, sampler)) }
+        Self {
+            kind: SourceKind::Closed(ClosedLoop::new(clients, think_s, max_requests, seed, sampler)),
+            retry: None,
+        }
     }
 
     /// Attach per-class SLOs (seconds): every request this source emits
@@ -341,10 +487,31 @@ impl RequestSource {
         self
     }
 
-    /// Simulated time of the next arrival, if one is scheduled. A
-    /// closed-loop source may return `None` here and still produce
-    /// arrivals later (after an [`RequestSource::on_done`]).
-    pub fn peek(&self) -> Option<f64> {
+    /// Arm a client [`RetryPolicy`]: failed requests offered back via
+    /// [`RequestSource::try_retry`] re-enter the stream after a seeded
+    /// jittered exponential backoff. Deterministic in `seed`.
+    pub fn with_retry(mut self, policy: RetryPolicy, seed: u64) -> Self {
+        self.retry = Some(RetryState::new(policy, seed));
+        self
+    }
+
+    /// Whether a retry policy is armed ([`RequestSource::with_retry`]).
+    pub fn retries_enabled(&self) -> bool {
+        self.retry.is_some()
+    }
+
+    /// Offer a failed (shed, or fault-lost) request back to the
+    /// source. Returns `(attempt, fire time)` when a resubmission was
+    /// scheduled — the caller must then *not* treat the outcome as
+    /// terminal (no shed accounting, no `on_done`). Returns `None`
+    /// when the failure is final: no policy armed, the attempt cap is
+    /// reached, or the class is out of retry budget.
+    pub fn try_retry(&mut self, req: &ClusterRequest, now_s: f64) -> Option<(u32, f64)> {
+        self.retry.as_mut().and_then(|r| r.try_retry(req, now_s))
+    }
+
+    /// Next arrival of the underlying process, ignoring retries.
+    fn kind_peek(&self) -> Option<f64> {
         match &self.kind {
             SourceKind::Replay(q) => q.front().map(|r| r.arrival_s),
             SourceKind::Open(o) => o.next_at(),
@@ -352,18 +519,47 @@ impl RequestSource {
         }
     }
 
-    /// Materialize the next arrival. Panics if [`RequestSource::peek`]
-    /// is `None`.
-    pub fn pop(&mut self) -> ClusterRequest {
-        match &mut self.kind {
-            SourceKind::Replay(q) => q.pop_front().expect("pop on an exhausted replay source"),
-            SourceKind::Open(o) => o.pop(),
-            SourceKind::Closed(c) => c.pop(),
+    /// Simulated time of the next arrival (fresh, or a scheduled
+    /// retry), if one is scheduled. A closed-loop source may return
+    /// `None` here and still produce arrivals later (after an
+    /// [`RequestSource::on_done`] or [`RequestSource::try_retry`]).
+    pub fn peek(&self) -> Option<f64> {
+        let natural = self.kind_peek();
+        let retry = self.retry.as_ref().and_then(|r| r.peek());
+        match (natural, retry) {
+            (Some(n), Some(r)) if r < n => Some(r),
+            (Some(n), _) => Some(n),
+            (None, r) => r,
         }
     }
 
-    /// A previously popped request left the system at `now_s` —
-    /// completed, or shed by admission control. Closed-loop sources
+    /// Materialize the next arrival. Panics if [`RequestSource::peek`]
+    /// is `None`. Same-instant ties resolve toward the fresh stream;
+    /// fresh arrivals bank retry tokens for their class.
+    pub fn pop(&mut self) -> ClusterRequest {
+        let natural = self.kind_peek();
+        let take_retry = match (natural, self.retry.as_ref().and_then(|r| r.peek())) {
+            (Some(n), Some(r)) => r < n,
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        if take_retry {
+            return self.retry.as_mut().expect("retry peeked above").pop();
+        }
+        let req = match &mut self.kind {
+            SourceKind::Replay(q) => q.pop_front().expect("pop on an exhausted replay source"),
+            SourceKind::Open(o) => o.pop(),
+            SourceKind::Closed(c) => c.pop(),
+        };
+        if let Some(r) = &mut self.retry {
+            r.earn(req.class);
+        }
+        req
+    }
+
+    /// A previously popped request left the system at `now_s` for good
+    /// — completed, or terminally shed/lost (a failure that
+    /// [`RequestSource::try_retry`] declined). Closed-loop sources
     /// schedule the owning client's next submission; open-loop and
     /// replay sources ignore it.
     pub fn on_done(&mut self, id: RequestId, now_s: f64) {
@@ -443,6 +639,135 @@ pub fn parse_slo_spec(spec: &str) -> crate::Result<Vec<f64>> {
     }
     anyhow::ensure!(!slos.is_empty(), "{usage}");
     Ok(slos)
+}
+
+/// Brownout controller configuration: a feedback loop over windowed
+/// SLO attainment that, under pressure, degrades best-effort
+/// admissions (fewer denoise steps, a fully shallow DeepCache reuse
+/// cycle) before the fleet starts shedding. Class 0 — the top tier —
+/// is never degraded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BrownoutConfig {
+    /// Windowed SLO attainment below this degrades one more level; at
+    /// or above it, one level is restored.
+    pub target: f64,
+    /// Tracked terminal outcomes per controller window.
+    pub window: u64,
+    /// Deepest degradation level.
+    pub max_level: u32,
+    /// Per-level timestep multiplier: level L serves
+    /// `round(steps x factor^L)` denoise steps (at least one).
+    pub factor: f64,
+}
+
+impl BrownoutConfig {
+    pub fn new(target: f64, window: u64, max_level: u32, factor: f64) -> Self {
+        assert!(target > 0.0 && target <= 1.0, "brownout target must be in (0, 1]");
+        assert!(window >= 1, "brownout window must be >= 1 outcomes");
+        assert!(max_level >= 1, "brownout max level must be >= 1");
+        assert!(factor > 0.0 && factor < 1.0, "brownout factor must be in (0, 1)");
+        Self { target, window, max_level, factor }
+    }
+
+    /// Degraded denoise-step count for a `steps`-step generation at
+    /// `level`. Level 0 — and degenerate zero/one-step generations —
+    /// serve the full request.
+    pub fn degraded_steps(&self, steps: usize, level: u32) -> usize {
+        if level == 0 || steps <= 1 {
+            return steps;
+        }
+        let scaled = steps as f64 * self.factor.powi(level.min(self.max_level) as i32);
+        (scaled.round() as usize).max(1)
+    }
+}
+
+/// Parse `--retry max=N:base-ms=MS[:budget=B]` into a [`RetryPolicy`]:
+/// N total attempts (first try included), first-retry backoff of MS
+/// milliseconds (doubling per retry, jittered over `[0.5x, 1x)`), and
+/// B retry tokens banked per fresh arrival of a class (default 1).
+pub fn parse_retry_spec(spec: &str) -> crate::Result<RetryPolicy> {
+    let usage = "--retry takes max=N:base-ms=MS[:budget=B] (N >= 2 total attempts \
+                 counting the first try, first-retry backoff in ms, B > 0 retry \
+                 tokens earned per fresh arrival; budget defaults to 1)";
+    let (mut max, mut base_ms, mut budget) = (None, None, None);
+    for seg in spec.split(':') {
+        let (k, v) = seg
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad field {seg:?}; {usage}"))?;
+        match k {
+            "max" => {
+                max = Some(v.parse::<u32>().map_err(|_| {
+                    anyhow::anyhow!("bad max value {v:?}; {usage}")
+                })?);
+            }
+            "base-ms" => {
+                let ms: f64 =
+                    v.parse().map_err(|_| anyhow::anyhow!("bad base-ms value {v:?}; {usage}"))?;
+                anyhow::ensure!(ms >= 0.0 && ms.is_finite(), "base-ms must be >= 0; {usage}");
+                base_ms = Some(ms);
+            }
+            "budget" => {
+                let b: f64 =
+                    v.parse().map_err(|_| anyhow::anyhow!("bad budget value {v:?}; {usage}"))?;
+                anyhow::ensure!(b > 0.0 && b.is_finite(), "budget must be > 0; {usage}");
+                budget = Some(b);
+            }
+            _ => anyhow::bail!("unknown field {k:?}; {usage}"),
+        }
+    }
+    let max = max.ok_or_else(|| anyhow::anyhow!("missing max=N; {usage}"))?;
+    anyhow::ensure!(max >= 2, "max counts the first try, so it must be >= 2; {usage}");
+    let base_ms = base_ms.ok_or_else(|| anyhow::anyhow!("missing base-ms=MS; {usage}"))?;
+    Ok(RetryPolicy::new(max, base_ms * 1e-3, budget.unwrap_or(1.0)))
+}
+
+/// Parse `--brownout target=T:window=N[:max=L][:factor=F]` into a
+/// [`BrownoutConfig`]: hold windowed attainment at T over windows of N
+/// tracked outcomes, degrading up to L levels (default 3) with a
+/// per-level timestep multiplier F (default 0.5).
+pub fn parse_brownout_spec(spec: &str) -> crate::Result<BrownoutConfig> {
+    let usage = "--brownout takes target=T:window=N[:max=L][:factor=F] (T in (0, 1] \
+                 windowed attainment, N >= 1 tracked outcomes per window, L >= 1 \
+                 deepest level, default 3, F in (0, 1) per-level timestep \
+                 multiplier, default 0.5)";
+    let (mut target, mut window, mut max_level, mut factor) = (None, None, None, None);
+    for seg in spec.split(':') {
+        let (k, v) = seg
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad field {seg:?}; {usage}"))?;
+        match k {
+            "target" => {
+                let t: f64 =
+                    v.parse().map_err(|_| anyhow::anyhow!("bad target value {v:?}; {usage}"))?;
+                anyhow::ensure!(t > 0.0 && t <= 1.0, "target must be in (0, 1]; {usage}");
+                target = Some(t);
+            }
+            "window" => {
+                let w = v.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("bad window value {v:?}; {usage}")
+                })?;
+                anyhow::ensure!(w >= 1, "window must be >= 1; {usage}");
+                window = Some(w);
+            }
+            "max" => {
+                let m = v.parse::<u32>().map_err(|_| {
+                    anyhow::anyhow!("bad max value {v:?}; {usage}")
+                })?;
+                anyhow::ensure!(m >= 1, "max level must be >= 1; {usage}");
+                max_level = Some(m);
+            }
+            "factor" => {
+                let f: f64 =
+                    v.parse().map_err(|_| anyhow::anyhow!("bad factor value {v:?}; {usage}"))?;
+                anyhow::ensure!(f > 0.0 && f < 1.0, "factor must be in (0, 1); {usage}");
+                factor = Some(f);
+            }
+            _ => anyhow::bail!("unknown field {k:?}; {usage}"),
+        }
+    }
+    let target = target.ok_or_else(|| anyhow::anyhow!("missing target=T; {usage}"))?;
+    let window = window.ok_or_else(|| anyhow::anyhow!("missing window=N; {usage}"))?;
+    Ok(BrownoutConfig::new(target, window, max_level.unwrap_or(3), factor.unwrap_or(0.5)))
 }
 
 /// Parse `--faults` — comma-separated fault clauses — into a
@@ -731,6 +1056,132 @@ mod tests {
         let mut w2 = synthetic_workload(3, 1, SamplerKind::Ddpm, 0.0);
         apply_slos(&mut w2, &[]);
         assert!(w2.iter().all(|r| r.deadline_s.is_none() && r.class == 0));
+    }
+
+    #[test]
+    fn retry_budget_caps_attempts_and_backoff_is_deterministic() {
+        let policy = RetryPolicy::new(3, 0.010, 1.0);
+        let mut src =
+            RequestSource::poisson(2, 11, SamplerKind::Ddpm, 1e3).with_retry(policy, 11);
+        assert!(src.retries_enabled());
+        let a = src.pop();
+        let b = src.pop();
+        assert_eq!(src.peek(), None);
+        // First retry: spends one banked token, fires after a jittered
+        // backoff in [0.5, 1) x base.
+        let (attempt, at) = src.try_retry(&a, 1.0).expect("two tokens banked");
+        assert_eq!(attempt, 1);
+        assert!(at >= 1.0 + 0.005 && at < 1.0 + 0.010, "first backoff out of range: {at}");
+        assert_eq!(src.peek(), Some(at));
+        let again = src.pop();
+        assert_eq!(again.id, a.id);
+        assert_eq!(again.seed, a.seed);
+        assert_eq!(again.arrival_s, at, "retry restarts the SLO clock at the fire time");
+        // Second retry doubles the base backoff.
+        let (attempt2, at2) = src.try_retry(&again, at).expect("one token left");
+        assert_eq!(attempt2, 2);
+        assert!(at2 - at >= 0.010 && at2 - at < 0.020, "second backoff out of range: {at2}");
+        let again2 = src.pop();
+        assert_eq!(src.peek(), None);
+        // max=3 total submissions: the third failure is terminal.
+        assert_eq!(src.try_retry(&again2, at2), None);
+        // Tokens exhausted: b's failure is terminal too.
+        assert_eq!(src.try_retry(&b, 5.0), None);
+        // Determinism: a twin replays the identical schedule.
+        let mut twin =
+            RequestSource::poisson(2, 11, SamplerKind::Ddpm, 1e3).with_retry(policy, 11);
+        let ta = twin.pop();
+        twin.pop();
+        assert_eq!(
+            twin.try_retry(&ta, 1.0).map(|(n, t)| (n, t.to_bits())),
+            Some((1, at.to_bits()))
+        );
+    }
+
+    #[test]
+    fn retries_interleave_with_the_fresh_stream() {
+        // Two fresh arrivals at t = 0 and t = 5; a zero-backoff retry
+        // scheduled for exactly t = 5 loses the tie to the fresh one.
+        let reqs = vec![
+            ClusterRequest::new(0, 10, SamplerKind::Ddpm, 0.0),
+            ClusterRequest::new(1, 11, SamplerKind::Ddpm, 5.0),
+        ];
+        let mut src = RequestSource::replay(reqs).with_retry(RetryPolicy::new(2, 0.0, 1.0), 3);
+        let first = src.pop();
+        let (_, at) = src.try_retry(&first, 5.0).expect("banked token");
+        assert_eq!(at, 5.0, "zero backoff fires at the offer instant");
+        assert_eq!(src.peek(), Some(5.0));
+        assert_eq!(src.pop().id.0, 1, "fresh stream wins same-instant ties");
+        assert_eq!(src.pop().id.0, 0, "then the retry fires");
+        assert_eq!(src.peek(), None);
+    }
+
+    #[test]
+    fn retry_tokens_are_banked_per_class() {
+        // Classes alternate 0/1 by id; budget 1 per fresh arrival. One
+        // fresh class-1 arrival banks exactly one class-1 retry.
+        let mut src = RequestSource::poisson(2, 5, SamplerKind::Ddpm, 1e3)
+            .with_slos(vec![0.030, 0.100])
+            .with_retry(RetryPolicy::new(4, 1e-3, 1.0), 5);
+        let a = src.pop(); // class 0
+        let b = src.pop(); // class 1
+        assert_eq!((a.class, b.class), (0, 1));
+        assert!(src.try_retry(&b, 1.0).is_some());
+        let b_again = src.pop();
+        assert_eq!(b_again.class, 1, "retries keep their class");
+        assert_eq!(src.try_retry(&b_again, 2.0), None, "class-1 tokens exhausted");
+        assert!(src.try_retry(&a, 2.0).is_some(), "class-0 bank is independent");
+    }
+
+    #[test]
+    fn brownout_degrades_steps_geometrically() {
+        let b = BrownoutConfig::new(0.95, 32, 3, 0.5);
+        assert_eq!(b.degraded_steps(8, 0), 8);
+        assert_eq!(b.degraded_steps(8, 1), 4);
+        assert_eq!(b.degraded_steps(8, 2), 2);
+        assert_eq!(b.degraded_steps(8, 3), 1);
+        // Levels clamp at max; step counts never hit zero.
+        assert_eq!(b.degraded_steps(8, 9), 1);
+        assert_eq!(b.degraded_steps(1, 3), 1);
+        assert_eq!(b.degraded_steps(0, 3), 0, "zero-step requests stay zero-step");
+    }
+
+    #[test]
+    fn retry_grammar_parses_and_rejects() {
+        let p = parse_retry_spec("max=3:base-ms=10").unwrap();
+        assert_eq!(p, RetryPolicy::new(3, 0.010, 1.0));
+        let p = parse_retry_spec("max=2:base-ms=0.5:budget=0.25").unwrap();
+        assert_eq!(p, RetryPolicy::new(2, 0.0005, 0.25));
+        for bad in [
+            "", "max=3", "base-ms=10", "max=1:base-ms=10", "max=x:base-ms=10",
+            "max=3:base-ms=-1", "max=3:base-ms=10:budget=0", "max=3:base-ms=10:typo=1",
+            "max=3:base-ms",
+        ] {
+            let err = parse_retry_spec(bad).expect_err(&format!("{bad:?} must be rejected"));
+            assert!(
+                format!("{err}").contains("--retry"),
+                "error for {bad:?} must name the flag: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn brownout_grammar_parses_and_rejects() {
+        let b = parse_brownout_spec("target=0.95:window=64").unwrap();
+        assert_eq!(b, BrownoutConfig::new(0.95, 64, 3, 0.5));
+        let b = parse_brownout_spec("target=0.9:window=16:max=2:factor=0.25").unwrap();
+        assert_eq!(b, BrownoutConfig::new(0.9, 16, 2, 0.25));
+        for bad in [
+            "", "target=0.95", "window=64", "target=0:window=64", "target=1.5:window=64",
+            "target=0.9:window=0", "target=0.9:window=x", "target=0.9:window=8:max=0",
+            "target=0.9:window=8:factor=1", "target=0.9:window=8:typo=1", "target",
+        ] {
+            let err = parse_brownout_spec(bad).expect_err(&format!("{bad:?} must be rejected"));
+            assert!(
+                format!("{err}").contains("--brownout"),
+                "error for {bad:?} must name the flag: {err}"
+            );
+        }
     }
 
     #[test]

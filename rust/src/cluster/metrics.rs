@@ -61,6 +61,13 @@ pub struct DeviceMetrics {
     /// Fault victims dropped: migration disabled, no capacity anywhere,
     /// or doomed under their deadline given remaining work.
     pub lost: u64,
+    /// Hedges issued against this device's residents (straggler
+    /// countermeasure: a request running here was slow enough that a
+    /// duplicate was placed on another device).
+    pub hedged: u64,
+    /// Slots cancelled on this device at a step boundary because the
+    /// other copy of a hedged request finished first.
+    pub cancelled: u64,
     /// End-to-end latency of completions retired by this device.
     pub latency: LogHistogram,
     /// Queue wait (arrival → first step) of those completions.
@@ -90,6 +97,8 @@ impl DeviceMetrics {
             migrated: d.migrated,
             retried: d.retried,
             lost: d.lost,
+            hedged: d.hedged,
+            cancelled: d.cancelled,
             latency: LogHistogram::new(),
             queue: LogHistogram::new(),
             admission_est: d.admission_est.clone(),
@@ -144,6 +153,8 @@ impl DeviceMetrics {
             .set("migrated", self.migrated)
             .set("retried", self.retried)
             .set("lost", self.lost)
+            .set("hedged", self.hedged)
+            .set("cancelled", self.cancelled)
     }
 }
 
@@ -157,15 +168,20 @@ pub enum MigrateOutcome {
     /// Dropped — no capacity, doomed under its deadline, or migration
     /// disabled.
     Lost,
+    /// Handed back to the client retry tier: the victim would have been
+    /// lost, but the source accepted it as a backoff retry event.
+    Resubmitted,
 }
 
 impl MigrateOutcome {
     /// Decode from the trace encoding of a migrate target: a device id
-    /// `>= 0`, `-1` for the backlog, `-2` for a loss.
+    /// `>= 0`, `-1` for the backlog, `-2` for a loss, `-3` for a
+    /// client-tier resubmission.
     pub fn from_target(to: i64) -> Self {
         match to {
             t if t >= 0 => MigrateOutcome::Migrated,
             -1 => MigrateOutcome::Retried,
+            -3 => MigrateOutcome::Resubmitted,
             _ => MigrateOutcome::Lost,
         }
     }
@@ -284,6 +300,12 @@ pub struct ClassMetrics {
     pub retried: u64,
     /// Fault victims of this class dropped outright.
     pub lost: u64,
+    /// Client-tier retries of this class: failures (sheds or fault
+    /// losses) resubmitted by the retry budget as backoff arrivals.
+    pub retries: u64,
+    /// Requests of this class admitted at a brownout-degraded quality
+    /// tier (reduced timestep count).
+    pub degraded: u64,
 }
 
 impl ClassMetrics {
@@ -328,6 +350,8 @@ impl ClassMetrics {
             .set("migrated", self.migrated)
             .set("retried", self.retried)
             .set("lost", self.lost)
+            .set("retries", self.retries)
+            .set("degraded", self.degraded)
     }
 }
 
@@ -428,7 +452,21 @@ impl FleetMetrics {
             MigrateOutcome::Migrated => entry.migrated += 1,
             MigrateOutcome::Retried => entry.retried += 1,
             MigrateOutcome::Lost => entry.lost += 1,
+            // Resubmitted victims are accounted by the paired `retry`
+            // event (record_retry), so only the interruption lands here.
+            MigrateOutcome::Resubmitted => {}
         }
+    }
+
+    /// Record a client-tier retry: a failed request of this class
+    /// resubmitted by the retry budget as a backoff arrival.
+    pub fn record_retry(&mut self, class: u8) {
+        self.class_entry(class).retries += 1;
+    }
+
+    /// Record a brownout-degraded admission of this class.
+    pub fn record_degrade(&mut self, class: u8) {
+        self.class_entry(class).degraded += 1;
     }
 
     /// Total in-flight samples interrupted by device faults.
@@ -449,6 +487,26 @@ impl FleetMetrics {
     /// Total fault victims dropped outright.
     pub fn lost(&self) -> u64 {
         self.devices.iter().map(|d| d.lost).sum()
+    }
+
+    /// Total hedges issued across the fleet.
+    pub fn hedged(&self) -> u64 {
+        self.devices.iter().map(|d| d.hedged).sum()
+    }
+
+    /// Total hedge losers cancelled at a step boundary.
+    pub fn cancelled(&self) -> u64 {
+        self.devices.iter().map(|d| d.cancelled).sum()
+    }
+
+    /// Total client-tier retries across all classes.
+    pub fn retries(&self) -> u64 {
+        self.classes.iter().map(|c| c.retries).sum()
+    }
+
+    /// Total brownout-degraded admissions across all classes.
+    pub fn degraded(&self) -> u64 {
+        self.classes.iter().map(|c| c.degraded).sum()
     }
 
     /// Total simulated device downtime across the fleet.
@@ -636,6 +694,10 @@ impl FleetMetrics {
             .set("migrated", self.migrated())
             .set("retried", self.retried())
             .set("lost", self.lost())
+            .set("hedged", self.hedged())
+            .set("cancelled", self.cancelled())
+            .set("retries", self.retries())
+            .set("degraded", self.degraded())
             .set("downtime_s", self.downtime_s())
             .set(
                 "per_class",
@@ -909,7 +971,7 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(
             arr[0].to_string_compact(),
-            r#"{"class":0,"samples":0,"tracked":0,"attained":0,"shed":1,"attainment":0,"latency_p50_s":0,"latency_p99_s":0,"interrupted":0,"migrated":0,"retried":0,"lost":0}"#
+            r#"{"class":0,"samples":0,"tracked":0,"attained":0,"shed":1,"attainment":0,"latency_p50_s":0,"latency_p99_s":0,"interrupted":0,"migrated":0,"retried":0,"lost":0,"retries":0,"degraded":0}"#
         );
         assert_eq!(arr[1].get("class").and_then(Json::as_f64), Some(2.0));
         assert_eq!(arr[1].get("samples").and_then(Json::as_f64), Some(2.0));
@@ -927,25 +989,38 @@ mod tests {
         m.devices[1].downtime_s = 1.5;
         m.devices[1].lost = 1;
         m.shed_unattributed = 3;
+        m.devices[1].hedged = 2;
+        m.devices[1].cancelled = 1;
         m.record_migration(0, true, MigrateOutcome::Migrated);
         m.record_migration(0, true, MigrateOutcome::Retried);
         m.record_migration(1, false, MigrateOutcome::Lost);
+        // A resubmitted victim counts the interruption only; its retry
+        // lands via record_retry (the paired `retry` trace event).
+        m.record_migration(1, true, MigrateOutcome::Resubmitted);
+        m.record_retry(1);
+        m.record_degrade(0);
         assert_eq!(m.interrupted(), 2);
         assert_eq!(m.migrated(), 1);
         assert_eq!(m.retried(), 1);
         assert_eq!(m.lost(), 1);
+        assert_eq!(m.hedged(), 2);
+        assert_eq!(m.cancelled(), 1);
+        assert_eq!(m.retries(), 1);
+        assert_eq!(m.degraded(), 1);
         assert_eq!(m.downtime_s(), 2.0);
         let c0 = m.classes.iter().find(|c| c.class == 0).expect("class 0");
         assert_eq!(
             (c0.interrupted, c0.migrated, c0.retried, c0.lost),
             (2, 1, 1, 0)
         );
+        assert_eq!(c0.degraded, 1);
         let c1 = m.classes.iter().find(|c| c.class == 1).expect("class 1");
-        assert_eq!((c1.interrupted, c1.lost), (0, 1));
+        assert_eq!((c1.interrupted, c1.lost, c1.retries), (1, 1, 1));
         // Outcome decoding from the trace target encoding.
         assert_eq!(MigrateOutcome::from_target(3), MigrateOutcome::Migrated);
         assert_eq!(MigrateOutcome::from_target(-1), MigrateOutcome::Retried);
         assert_eq!(MigrateOutcome::from_target(-2), MigrateOutcome::Lost);
+        assert_eq!(MigrateOutcome::from_target(-3), MigrateOutcome::Resubmitted);
         // The fleet export carries the resilience keys and stays clean.
         let j = m.to_json();
         assert_eq!(j.get("shed_unattributed").and_then(Json::as_f64), Some(3.0));

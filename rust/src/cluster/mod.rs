@@ -54,7 +54,10 @@ pub mod trace;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
 pub use faults::{default_recal_mttr_s, parse_faults_json, FaultEvent, FaultKind, FaultPlan};
-pub use load::{apply_slos, synthetic_workload, RequestSource};
+pub use load::{
+    apply_slos, parse_brownout_spec, parse_retry_spec, synthetic_workload, BrownoutConfig,
+    RequestSource, RetryPolicy,
+};
 pub use metrics::{ClassMetrics, DeviceMetrics, FleetMetrics, MigrateOutcome, ProfileMetrics};
 pub use profile::{parse_fleet_json, parse_fleet_spec, DeviceProfile};
 pub use reference::ReferenceScheduler;
@@ -72,6 +75,39 @@ use crate::devices::DeviceParams;
 use crate::runtime::manifest::NoiseSchedule;
 use crate::sim::{CostCache, Simulator};
 use crate::workload::ModelId;
+
+/// Completed-request latency samples a quantile-triggered
+/// [`HedgePolicy`] needs before it activates (below this the fleet has
+/// no usable latency distribution, so nothing is hedged).
+pub const HEDGE_MIN_SAMPLES: u64 = 32;
+
+/// When to hedge a straggling request: once its elapsed time crosses
+/// the threshold, a duplicate is issued to a *different* device and
+/// whichever copy retires first wins (the loser is cancelled at its
+/// next step boundary).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HedgePolicy {
+    /// Hedge once elapsed time exceeds a fixed threshold (seconds).
+    Fixed { threshold_s: f64 },
+    /// Hedge once elapsed time exceeds the `q`-quantile of the
+    /// completed-request latency distribution observed so far (arms
+    /// after [`HEDGE_MIN_SAMPLES`] completions).
+    Quantile { q: f64 },
+}
+
+impl HedgePolicy {
+    /// Fixed-threshold policy (`--hedge-ms`).
+    pub fn fixed(threshold_s: f64) -> Self {
+        assert!(threshold_s > 0.0 && threshold_s.is_finite(), "hedge threshold must be > 0");
+        HedgePolicy::Fixed { threshold_s }
+    }
+
+    /// Quantile-derived policy (`--hedge-q`).
+    pub fn quantile(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "hedge quantile must be in (0, 1)");
+        HedgePolicy::Quantile { q }
+    }
+}
 
 /// Fleet shape and policy: a spec of `(profile, count)` device groups
 /// plus the fleet-level scheduling knobs. Devices are numbered densely
@@ -118,6 +154,17 @@ pub struct ClusterConfig {
     /// *remaining* steps — on surviving devices. `false` loses every
     /// victim (the ablation baseline for the resilience benches).
     pub migration: bool,
+    /// Hedged requests against stragglers: duplicate a request to a
+    /// second device once its elapsed time crosses the policy
+    /// threshold; the first copy to retire wins and the loser is
+    /// cancelled at its next step boundary. `None` (the default) never
+    /// hedges.
+    pub hedge: Option<HedgePolicy>,
+    /// Brownout controller: a feedback loop over windowed SLO
+    /// attainment that degrades best-effort admissions (fewer denoise
+    /// steps, fully shallow reuse) before the fleet sheds. `None` (the
+    /// default) never degrades.
+    pub brownout: Option<load::BrownoutConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -132,6 +179,8 @@ impl Default for ClusterConfig {
             shed_late: false,
             faults: faults::FaultPlan::default(),
             migration: true,
+            hedge: None,
+            brownout: None,
         }
     }
 }
@@ -276,6 +325,18 @@ impl ClusterConfig {
     /// default; `false` loses every interrupted sample).
     pub fn migration(mut self, on: bool) -> Self {
         self.migration = on;
+        self
+    }
+
+    /// Arm straggler hedging with `policy`.
+    pub fn hedge(mut self, policy: HedgePolicy) -> Self {
+        self.hedge = Some(policy);
+        self
+    }
+
+    /// Arm the brownout controller.
+    pub fn brownout(mut self, config: load::BrownoutConfig) -> Self {
+        self.brownout = Some(config);
         self
     }
 }

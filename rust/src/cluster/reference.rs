@@ -20,6 +20,8 @@ use std::collections::VecDeque;
 
 use crate::coordinator::request::{RequestId, SamplerKind};
 use crate::runtime::manifest::NoiseSchedule;
+use crate::util::fxhash::FxMap;
+use crate::util::histogram::LogHistogram;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
@@ -29,11 +31,11 @@ use super::load::RequestSource;
 use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
 use super::router::{min_drain_device, DeviceLoad, Router};
 use super::scheduler::{
-    zero_step_result, ClusterOutcome, ClusterRequest, ClusterResult, Slot, SlotSampler,
-    StepExecutor,
+    effective_kind, zero_step_result, BrownoutCtl, ClusterOutcome, ClusterRequest,
+    ClusterResult, HedgeTwin, Slot, SlotSampler, StepExecutor,
 };
 use super::trace::{emit, TraceEvent, TraceFault, TraceSink};
-use super::ClusterConfig;
+use super::{ClusterConfig, HedgePolicy, HEDGE_MIN_SAMPLES};
 
 /// The reference fleet scheduler: devices + stateless router + O(N)
 /// event loop. Same public surface as [`super::StepScheduler`].
@@ -78,6 +80,19 @@ pub struct ReferenceScheduler {
     migrate_log: Vec<(u8, bool, MigrateOutcome)>,
     /// Sheds during a total outage: no up device exists to charge.
     shed_unattributed: u64,
+    /// Hedged-request policy (mirrors the heap core's resilience tier).
+    hedge: Option<HedgePolicy>,
+    /// Live hedge book-keeping, keyed by request id.
+    hedges: FxMap<u64, HedgeTwin>,
+    /// Completion latencies this window, feeding the quantile-derived
+    /// hedge threshold.
+    hedge_latency: LogHistogram,
+    /// Brownout controller; `None` = admission never degrades.
+    brownout: Option<BrownoutCtl>,
+    /// Class per client-tier retry this window, in resubmission order.
+    retry_log: Vec<u8>,
+    /// Class per degraded admission this window, in admission order.
+    degrade_log: Vec<u8>,
     events_processed: u64,
     /// Opt-in flight recorder (mirrors the heap core: same events, same
     /// order, so parity suites can assert trace bit-identity too).
@@ -137,6 +152,12 @@ impl ReferenceScheduler {
             fault_cursor: 0,
             migrate_log: Vec::new(),
             shed_unattributed: 0,
+            hedge: config.hedge,
+            hedges: FxMap::default(),
+            hedge_latency: LogHistogram::new(),
+            brownout: config.brownout.map(BrownoutCtl::new),
+            retry_log: Vec::new(),
+            degrade_log: Vec::new(),
             events_processed: 0,
             trace: None,
         }
@@ -201,6 +222,13 @@ impl ReferenceScheduler {
         self.shed_log.clear();
         self.migrate_log.clear();
         self.shed_unattributed = 0;
+        self.retry_log.clear();
+        self.degrade_log.clear();
+        self.hedges.clear();
+        self.hedge_latency = LogHistogram::new();
+        if let Some(b) = &mut self.brownout {
+            b.reset();
+        }
         // The fault plan replays every window (`reset_accounting` healed
         // the fleet), exactly like the heap core's re-injection.
         self.fault_cursor = 0;
@@ -277,8 +305,12 @@ impl ReferenceScheduler {
             self.events_processed += 1;
         }
 
+        // Undeliverable leftovers are still terminal outcomes:
+        // closed-loop clients get their completion feedback (without it
+        // they wedge), but the window is over so no retry fires.
         while let Some(slot) = self.backlog.pop_front() {
             self.attribute_shed(slot.req.arrival_s, None, &slot.req);
+            source.on_done(slot.req.id, slot.req.arrival_s);
             rejected.push(slot.req.id);
         }
 
@@ -314,6 +346,12 @@ impl ReferenceScheduler {
         for &(class, resident, outcome) in &self.migrate_log {
             metrics.record_migration(class, resident, outcome);
         }
+        for &class in &self.retry_log {
+            metrics.record_retry(class);
+        }
+        for &class in &self.degrade_log {
+            metrics.record_degrade(class);
+        }
         Ok(ClusterOutcome { results, rejected, metrics })
     }
 
@@ -338,6 +376,48 @@ impl ReferenceScheduler {
                 tracked: req.deadline_s.is_some(),
             },
         );
+        // A tracked shed is a missed SLO — feed the brownout controller
+        // (mirrors the heap core).
+        if req.deadline_s.is_some() {
+            if let Some(b) = &mut self.brownout {
+                b.on_tracked(false);
+            }
+        }
+    }
+
+    /// Terminal-failure path with the client retry tier in front
+    /// (mirrors the heap core's `shed_or_retry`).
+    fn shed_or_retry(
+        &mut self,
+        now_s: f64,
+        routed: Option<usize>,
+        req: &ClusterRequest,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        self.forget_hedge(req.id.0);
+        if let Some((attempt, at_s)) = source.try_retry(req, now_s) {
+            self.retry_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: req.id.0, class: req.class, attempt, at_s },
+            );
+            return;
+        }
+        self.attribute_shed(now_s, routed, req);
+        source.on_done(req.id, now_s);
+        rejected.push(req.id);
+    }
+
+    /// Drop the hedge book-keeping for one copy of `id` (mirrors the
+    /// heap core's `forget_hedge`).
+    fn forget_hedge(&mut self, id: u64) {
+        if let Some(tw) = self.hedges.get_mut(&id) {
+            tw.live = tw.live.saturating_sub(1);
+            if tw.live == 0 {
+                self.hedges.remove(&id);
+            }
+        }
     }
 
     /// Fire planned fault `seq` (mirrors the heap core's
@@ -418,7 +498,6 @@ impl ReferenceScheduler {
         }
         let mut victims: Vec<(Slot, bool)> = Vec::new();
         for slot in self.resident[di].drain(..) {
-            self.devices[di].interrupted += 1;
             victims.push((slot, true));
         }
         while let Some(slot) = self.queued[di].pop_front() {
@@ -442,6 +521,32 @@ impl ReferenceScheduler {
         rejected: &mut Vec<RequestId>,
     ) {
         let (id, class) = (slot.req.id, slot.req.class);
+        // A victim with a live hedge twin (or whose twin already won)
+        // cancels instead of migrating (mirrors the heap core).
+        if self.hedges.get(&id.0).is_some_and(|tw| tw.live >= 2 || tw.done) {
+            let tw = self.hedges.get_mut(&id.0).expect("checked above");
+            tw.live -= 1;
+            if tw.live == 0 {
+                self.hedges.remove(&id.0);
+            }
+            self.devices[from].cancelled += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Cancel {
+                    t: now_s,
+                    id: id.0,
+                    class,
+                    device: from,
+                    steps: slot.step_index as u64,
+                },
+            );
+            return;
+        }
+        // Interrupted accounting lands here, after the hedge-cancel arm
+        // — replay reconstructs `interrupted` from Migrate events alone.
+        if resident {
+            self.devices[from].interrupted += 1;
+        }
         if self.migration {
             let loads = self.loads();
             match self.router.route(slot.req.sampler, &loads) {
@@ -471,6 +576,23 @@ impl ReferenceScheduler {
                         self.enqueue(now_s, did.0, slot);
                         return;
                     }
+                    // Doomed on the target: the retry tier is the last
+                    // line before the victim is lost (mirrors the heap
+                    // core's resubmit path).
+                    self.forget_hedge(id.0);
+                    if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+                        );
+                        self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+                        self.retry_log.push(class);
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+                        );
+                        return;
+                    }
                     emit(
                         &mut self.trace,
                         TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
@@ -495,6 +617,21 @@ impl ReferenceScheduler {
                 }
                 None => {}
             }
+        }
+        // No capacity (or migration off): retry tier, then lost.
+        self.forget_hedge(id.0);
+        if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+            emit(
+                &mut self.trace,
+                TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+            );
+            self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+            self.retry_log.push(class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+            );
+            return;
         }
         emit(
             &mut self.trace,
@@ -537,6 +674,14 @@ impl ReferenceScheduler {
         if req.is_zero_step() {
             let r = zero_step_result(&req, self.elems);
             source.on_done(r.id, r.finish_s);
+            if self.hedge.is_some() {
+                self.hedge_latency.record(r.latency_s());
+            }
+            if let Some(met) = r.deadline_met() {
+                if let Some(b) = &mut self.brownout {
+                    b.on_tracked(met);
+                }
+            }
             emit(
                 &mut self.trace,
                 TraceEvent::Complete {
@@ -552,10 +697,37 @@ impl ReferenceScheduler {
             results.push(r);
             return;
         }
+        // Brownout degrade, before routing (mirrors the heap core:
+        // class 0 never degrades, the request keeps its original
+        // signature, only the slot serves fewer steps).
+        let mut degrade: Option<(u32, usize)> = None;
+        if let (Some(b), SamplerKind::Ddim { steps }) = (&self.brownout, req.sampler) {
+            if b.level() > 0 && req.class > 0 {
+                let target = b.degraded_steps(steps);
+                if target < steps {
+                    degrade = Some((b.level(), target));
+                }
+            }
+        }
+        if let Some((level, steps)) = degrade {
+            self.degrade_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Degrade {
+                    t: req.arrival_s,
+                    id: req.id.0,
+                    class: req.class,
+                    level,
+                    steps: steps as u64,
+                },
+            );
+        }
+        let slot_kind = degrade.map_or(req.sampler, |(_, s)| SamplerKind::Ddim { steps: s });
         let loads = self.loads();
         match self.router.route(req.sampler, &loads) {
             Some(did) => {
-                let slot = self.make_slot(req);
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
                 let remaining = slot.timesteps.len() - slot.step_index;
                 let doomed = self.shed_late
                     && slot.req.deadline_s.is_some_and(|deadline_s| {
@@ -564,15 +736,20 @@ impl ReferenceScheduler {
                             > deadline_s
                     });
                 if doomed {
-                    self.attribute_shed(slot.req.arrival_s, Some(did.0), &slot.req);
-                    source.on_done(slot.req.id, slot.req.arrival_s);
-                    rejected.push(slot.req.id);
+                    self.shed_or_retry(
+                        slot.req.arrival_s,
+                        Some(did.0),
+                        &slot.req,
+                        source,
+                        rejected,
+                    );
                     return;
                 }
                 self.enqueue(slot.req.arrival_s, did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
-                let slot = self.make_slot(req);
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
                 emit(
                     &mut self.trace,
                     TraceEvent::Requeue {
@@ -584,9 +761,7 @@ impl ReferenceScheduler {
                 self.backlog.push_back(slot);
             }
             None => {
-                self.attribute_shed(req.arrival_s, None, &req);
-                source.on_done(req.id, req.arrival_s);
-                rejected.push(req.id);
+                self.shed_or_retry(req.arrival_s, None, &req, source, rejected);
             }
         }
     }
@@ -614,8 +789,10 @@ impl ReferenceScheduler {
         self.queued[di].push_back(slot);
     }
 
-    fn make_slot(&mut self, req: ClusterRequest) -> Slot {
-        let sampler = self.sampler_for(req.sampler);
+    /// Build a slot serving `kind` — the request's own signature, or a
+    /// brownout-degraded one (mirrors the heap core's `make_slot_with`).
+    fn make_slot_with(&mut self, req: ClusterRequest, kind: SamplerKind) -> Slot {
+        let sampler = self.sampler_for(kind);
         Slot::new(req, sampler, self.elems)
     }
 
@@ -652,9 +829,7 @@ impl ReferenceScheduler {
                                 > deadline_s
                         });
                     if doomed {
-                        self.attribute_shed(now_s, Some(did.0), &slot.req);
-                        source.on_done(slot.req.id, now_s);
-                        rejected.push(slot.req.id);
+                        self.shed_or_retry(now_s, Some(did.0), &slot.req, source, rejected);
                         continue;
                     }
                     self.enqueue(now_s, did.0, slot);
@@ -730,7 +905,37 @@ impl ReferenceScheduler {
         self.devices[di].finish_step();
         let mut still_resident = Vec::with_capacity(self.resident[di].len());
         for slot in self.resident[di].drain(..) {
+            let id64 = slot.req.id.0;
+            // A hedge loser leaves at the step boundary (mirrors the
+            // heap core's cancel arm).
+            if self.hedges.get(&id64).is_some_and(|tw| tw.done) {
+                let tw = self.hedges.get_mut(&id64).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&id64);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: id64,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                continue;
+            }
             if slot.step_index >= slot.timesteps.len() {
+                // First copy home wins (mirrors the heap core).
+                if let Some(tw) = self.hedges.get_mut(&id64) {
+                    tw.done = true;
+                    tw.live -= 1;
+                    if tw.live == 0 {
+                        self.hedges.remove(&id64);
+                    }
+                }
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
                 source.on_done(slot.req.id, now_s);
@@ -747,6 +952,14 @@ impl ReferenceScheduler {
                     class: slot.req.class,
                     deadline_s: slot.req.deadline_s,
                 };
+                if self.hedge.is_some() {
+                    self.hedge_latency.record(r.latency_s());
+                }
+                if let Some(met) = r.deadline_met() {
+                    if let Some(b) = &mut self.brownout {
+                        b.on_tracked(met);
+                    }
+                }
                 emit(
                     &mut self.trace,
                     TraceEvent::Complete {
@@ -770,8 +983,59 @@ impl ReferenceScheduler {
         if let Some(kind) = self.pending_down[di].take() {
             self.apply_down(di, now_s, kind, source, rejected);
         }
+        // Hedge stragglers at every step boundary (mirrors the heap
+        // core's `hedge_scan` call order: after pending faults, before
+        // the backlog drain).
+        if self.hedge.is_some() {
+            self.hedge_scan(now_s);
+        }
         self.drain_backlog(now_s, source, rejected);
         self.kick_idle(now_s, executor)
+    }
+
+    /// Hedge duplicates for straggling residents (mirrors the heap
+    /// core's `hedge_scan`: same threshold rule, same scan order, same
+    /// one-hedge-per-lifecycle map — only the routing goes through a
+    /// `loads()` snapshot with the straggler's device masked out).
+    fn hedge_scan(&mut self, now_s: f64) {
+        let Some(policy) = self.hedge else { return };
+        let threshold_s = match policy {
+            HedgePolicy::Fixed { threshold_s } => threshold_s,
+            HedgePolicy::Quantile { q } => {
+                if self.hedge_latency.count() < HEDGE_MIN_SAMPLES {
+                    return;
+                }
+                self.hedge_latency.quantile(q * 100.0)
+            }
+        };
+        let mut due: Vec<(usize, ClusterRequest, SamplerKind, bool)> = Vec::new();
+        for di in 0..self.devices.len() {
+            for slot in &self.resident[di] {
+                if now_s - slot.req.arrival_s > threshold_s
+                    && !self.hedges.contains_key(&slot.req.id.0)
+                {
+                    due.push((di, slot.req.clone(), effective_kind(slot), slot.degraded));
+                }
+            }
+        }
+        for (from, req, kind, degraded) in due {
+            let mut loads = self.loads();
+            loads[from].excluded = true;
+            let Some(did) = self.router.route(req.sampler, &loads) else { continue };
+            let id64 = req.id.0;
+            let class = req.class;
+            let mut dup = self.make_slot_with(req, kind);
+            dup.degraded = degraded;
+            self.hedges.insert(id64, HedgeTwin { live: 2, done: false });
+            self.devices[from].hedged += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Hedge { t: now_s, id: id64, class, from, to: did.0 },
+            );
+            // Straight to the destination queue: no admission estimate,
+            // no Route event (mirrors the heap core).
+            self.queued[did.0].push_back(dup);
+        }
     }
 
     fn start_step(
@@ -782,6 +1046,28 @@ impl ReferenceScheduler {
     ) -> crate::Result<()> {
         while self.resident[di].len() < self.devices[di].capacity {
             let Some(mut slot) = self.queued[di].pop_front() else { break };
+            // A queued copy whose hedge twin already finished cancels
+            // here instead of burning a batch slot (mirrors the heap
+            // core's promotion arm).
+            if self.hedges.get(&slot.req.id.0).is_some_and(|tw| tw.done) {
+                let tw = self.hedges.get_mut(&slot.req.id.0).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&slot.req.id.0);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                continue;
+            }
             // Keep the original first-step instant for fault-migrated
             // victims (they already ran on the failed device).
             slot.first_step_s.get_or_insert(now_s);
@@ -792,7 +1078,9 @@ impl ReferenceScheduler {
             return Ok(());
         }
 
-        let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
+        // Degraded admissions never force a full step (mirrors the heap
+        // core's brownout reuse-cycle rule).
+        let force_full = self.resident[di].iter().any(|s| s.step_index == 0 && !s.degraded);
         let full = self.devices[di].next_step_full(force_full);
         if self.trace.is_some() {
             for slot in &self.resident[di] {

@@ -73,16 +73,17 @@ use crate::coordinator::request::{RequestId, SamplerKind};
 use crate::coordinator::sampler::{initial_noise, DdimSampler, DdpmSampler, Sampler};
 use crate::runtime::manifest::NoiseSchedule;
 use crate::util::fxhash::FxMap;
+use crate::util::histogram::LogHistogram;
 use crate::util::rng::XorShift;
 use crate::util::threadpool::ThreadPool;
 
 use super::device::{Device, DeviceId};
 use super::faults::{FaultEvent, FaultKind};
-use super::load::RequestSource;
+use super::load::{BrownoutConfig, RequestSource};
 use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
 use super::router::{min_drain_device, DeviceLoad, RouterIndex};
 use super::trace::{emit, TraceEvent, TraceFault, TraceSink};
-use super::ClusterConfig;
+use super::{ClusterConfig, HedgePolicy, HEDGE_MIN_SAMPLES};
 
 /// A generation request with a simulated arrival time and (optionally)
 /// a service class and latency deadline for the SLO tier.
@@ -250,6 +251,11 @@ pub(super) struct Slot {
     pub(super) occupancy_sum: u64,
     /// Steps that ran the full UNet (vs DeepCache shallow steps).
     pub(super) full_steps: u64,
+    /// Admitted at a brownout-degraded quality tier: the slot serves
+    /// fewer denoise steps than the request asked for, and it never
+    /// forces the DeepCache cycle back to a full step (degraded samples
+    /// ride whatever reuse phase the batch is in).
+    pub(super) degraded: bool,
 }
 
 impl Slot {
@@ -264,7 +270,88 @@ impl Slot {
             first_step_s: None,
             occupancy_sum: 0,
             full_steps: 0,
+            degraded: false,
             req,
+        }
+    }
+}
+
+/// The sampler signature a slot's work actually has: the request's own
+/// kind, except that a brownout-degraded `Ddim` slot reports its
+/// reduced step count. A hedge duplicate is built from this so both
+/// copies run the identical generation.
+pub(super) fn effective_kind(slot: &Slot) -> SamplerKind {
+    match slot.req.sampler {
+        SamplerKind::Ddpm => SamplerKind::Ddpm,
+        SamplerKind::Ddim { .. } => SamplerKind::Ddim { steps: slot.timesteps.len() },
+    }
+}
+
+/// Book-keeping for one hedged request: how many copies are still in
+/// the system (resident or queued, anywhere) and whether one already
+/// finished. The map entry lives from the instant the duplicate is
+/// issued until the last copy leaves; the finishing winner flips
+/// `done`, so every surviving copy cancels at its next step boundary
+/// instead of completing twice.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct HedgeTwin {
+    /// Copies still resident or queued somewhere in the fleet.
+    pub(super) live: u8,
+    /// One copy already produced the result; the rest are losers.
+    pub(super) done: bool,
+}
+
+/// Brownout feedback controller: watches windowed SLO attainment over
+/// tracked terminal outcomes (completions and sheds of
+/// deadline-carrying requests) and raises or lowers a degradation
+/// level. Admission consults the level to serve lower classes at
+/// reduced quality — fewer denoise steps, no forced-full DeepCache
+/// restarts — *before* the fleet has to shed.
+#[derive(Debug, Clone)]
+pub(super) struct BrownoutCtl {
+    config: BrownoutConfig,
+    level: u32,
+    seen: u64,
+    attained: u64,
+}
+
+impl BrownoutCtl {
+    pub(super) fn new(config: BrownoutConfig) -> Self {
+        Self { config, level: 0, seen: 0, attained: 0 }
+    }
+
+    pub(super) fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Degraded denoise-step count for a `steps`-step generation at the
+    /// current level ([`BrownoutConfig::degraded_steps`]).
+    pub(super) fn degraded_steps(&self, steps: usize) -> usize {
+        self.config.degraded_steps(steps, self.level)
+    }
+
+    /// Back to pristine (level 0, window empty) at window start.
+    pub(super) fn reset(&mut self) {
+        self.level = 0;
+        self.seen = 0;
+        self.attained = 0;
+    }
+
+    /// Feed one tracked terminal outcome. Each time the window fills,
+    /// degrade one level when attainment fell below target, restore one
+    /// level when it held.
+    pub(super) fn on_tracked(&mut self, met: bool) {
+        self.seen += 1;
+        self.attained += met as u64;
+        if self.seen >= self.config.window {
+            let attainment = self.attained as f64 / self.seen as f64;
+            self.level = if attainment < self.config.target {
+                (self.level + 1).min(self.config.max_level)
+            } else {
+                self.level.saturating_sub(1)
+            };
+            self.seen = 0;
+            self.attained = 0;
         }
     }
 }
@@ -438,6 +525,21 @@ pub struct StepScheduler {
     migrate_log: Vec<(u8, bool, MigrateOutcome)>,
     /// Sheds with no up device to charge (total outage) this window.
     shed_unattributed: u64,
+    // --- resilience tier ---
+    /// Hedged-request policy ([`ClusterConfig::hedge`]); `None` = off.
+    hedge: Option<HedgePolicy>,
+    /// Live hedge book-keeping, keyed by request id.
+    hedges: FxMap<u64, HedgeTwin>,
+    /// Completion latencies this window, feeding the quantile-derived
+    /// hedge threshold ([`HedgePolicy::Quantile`]).
+    hedge_latency: LogHistogram,
+    /// Brownout controller; `None` = admission never degrades.
+    brownout: Option<BrownoutCtl>,
+    /// Class per client-tier retry this window, in resubmission order —
+    /// folded into per-class metrics at the end.
+    retry_log: Vec<u8>,
+    /// Class per degraded admission this window, in admission order.
+    degrade_log: Vec<u8>,
     // --- discrete-event core ---
     /// Pending events (arrival + step completions), min-first.
     events: BinaryHeap<Reverse<Event>>,
@@ -522,6 +624,12 @@ impl StepScheduler {
             shed_log: Vec::new(),
             migrate_log: Vec::new(),
             shed_unattributed: 0,
+            hedge: config.hedge,
+            hedges: FxMap::default(),
+            hedge_latency: LogHistogram::new(),
+            brownout: config.brownout.map(BrownoutCtl::new),
+            retry_log: Vec::new(),
+            degrade_log: Vec::new(),
             events: BinaryHeap::new(),
             arrival_scheduled: None,
             dirty: BTreeSet::new(),
@@ -588,6 +696,13 @@ impl StepScheduler {
         self.shed_log.clear();
         self.migrate_log.clear();
         self.shed_unattributed = 0;
+        self.retry_log.clear();
+        self.degrade_log.clear();
+        self.hedges.clear();
+        self.hedge_latency = LogHistogram::new();
+        if let Some(b) = &mut self.brownout {
+            b.reset();
+        }
         self.pending_down.iter_mut().for_each(|p| *p = None);
         if let Some(sink) = &mut self.trace {
             sink.clear();
@@ -665,9 +780,13 @@ impl StepScheduler {
 
         // Anything still deferred when all devices drained is undeliverable
         // (can only happen with a backlog bound tighter than the fleet).
-        // The serving window is over, so no completion feedback fires.
+        // Still a terminal outcome: closed-loop clients get their
+        // completion feedback — without it they wedge, waiting forever
+        // on a request that already left the system — but the window is
+        // over, so no retry fires and nothing re-enters the loop.
         while let Some(slot) = self.backlog.pop_front() {
             self.attribute_shed(slot.req.arrival_s, None, &slot.req);
+            source.on_done(slot.req.id, slot.req.arrival_s);
             rejected.push(slot.req.id);
         }
 
@@ -704,6 +823,12 @@ impl StepScheduler {
         }
         for &(class, resident, outcome) in &self.migrate_log {
             metrics.record_migration(class, resident, outcome);
+        }
+        for &class in &self.retry_log {
+            metrics.record_retry(class);
+        }
+        for &class in &self.degrade_log {
+            metrics.record_degrade(class);
         }
         Ok(ClusterOutcome { results, rejected, metrics })
     }
@@ -747,6 +872,53 @@ impl StepScheduler {
                 tracked: req.deadline_s.is_some(),
             },
         );
+        // A tracked shed is a missed SLO: feed the brownout controller
+        // so sustained shedding drives the degradation level up.
+        if req.deadline_s.is_some() {
+            if let Some(b) = &mut self.brownout {
+                b.on_tracked(false);
+            }
+        }
+    }
+
+    /// Terminal-failure path with the client retry tier in front: offer
+    /// the failed request back to the source first
+    /// ([`RequestSource::try_retry`]); only when the retry budget
+    /// declines does the shed become final (attributed, fed back,
+    /// rejected). Any hedge book-keeping for the id is dropped either
+    /// way — a resubmission starts a fresh lifecycle.
+    fn shed_or_retry(
+        &mut self,
+        now_s: f64,
+        routed: Option<usize>,
+        req: &ClusterRequest,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        self.forget_hedge(req.id.0);
+        if let Some((attempt, at_s)) = source.try_retry(req, now_s) {
+            self.retry_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: req.id.0, class: req.class, attempt, at_s },
+            );
+            return;
+        }
+        self.attribute_shed(now_s, routed, req);
+        source.on_done(req.id, now_s);
+        rejected.push(req.id);
+    }
+
+    /// Drop the hedge book-keeping for one copy of `id` (no-op when the
+    /// id was never hedged), so a later retry of the same id starts
+    /// clean instead of inheriting a stale twin.
+    fn forget_hedge(&mut self, id: u64) {
+        if let Some(tw) = self.hedges.get_mut(&id) {
+            tw.live = tw.live.saturating_sub(1);
+            if tw.live == 0 {
+                self.hedges.remove(&id);
+            }
+        }
     }
 
     /// Fire planned fault `seq` at simulated time `now_s`. Slowdowns
@@ -842,7 +1014,6 @@ impl StepScheduler {
         }
         let mut victims: Vec<(Slot, bool)> = Vec::new();
         for slot in self.resident[di].drain(..) {
-            self.devices[di].interrupted += 1;
             victims.push((slot, true));
         }
         while let Some(slot) = self.queued[di].pop_front() {
@@ -870,6 +1041,35 @@ impl StepScheduler {
         rejected: &mut Vec<RequestId>,
     ) {
         let (id, class) = (slot.req.id, slot.req.class);
+        // A victim with a live hedge twin (or whose twin already won)
+        // does not migrate: the other copy carries the request, so this
+        // one just cancels — no interruption, no loss.
+        if self.hedges.get(&id.0).map_or(false, |tw| tw.live >= 2 || tw.done) {
+            let tw = self.hedges.get_mut(&id.0).expect("checked above");
+            tw.live -= 1;
+            if tw.live == 0 {
+                self.hedges.remove(&id.0);
+            }
+            self.devices[from].cancelled += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Cancel {
+                    t: now_s,
+                    id: id.0,
+                    class,
+                    device: from,
+                    steps: slot.step_index as u64,
+                },
+            );
+            return;
+        }
+        // Interrupted-in-flight accounting lands here, not in
+        // `apply_down`: replay reconstructs `interrupted` from Migrate
+        // events alone, and a hedge-cancelled victim (above) emits a
+        // Cancel instead — it was never interrupted, its twin lives on.
+        if resident {
+            self.devices[from].interrupted += 1;
+        }
         if self.migration {
             match self.index.route(slot.req.sampler) {
                 Some(did) => {
@@ -890,8 +1090,23 @@ impl StepScheduler {
                         self.enqueue(now_s, did.0, slot);
                         return;
                     }
-                    // Doomed under its remaining work: lost, charged to
-                    // the device it would have landed on (as at admit).
+                    // Doomed under its remaining work: hand it to the
+                    // client retry tier, else lost — charged to the
+                    // device it would have landed on (as at admit).
+                    self.forget_hedge(id.0);
+                    if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+                        );
+                        self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+                        self.retry_log.push(class);
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+                        );
+                        return;
+                    }
                     emit(
                         &mut self.trace,
                         TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
@@ -919,6 +1134,22 @@ impl StepScheduler {
                 }
                 None => {}
             }
+        }
+        // No capacity (or migration off): the retry tier is the last
+        // line before the victim is lost outright.
+        self.forget_hedge(id.0);
+        if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+            emit(
+                &mut self.trace,
+                TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+            );
+            self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+            self.retry_log.push(class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+            );
+            return;
         }
         emit(
             &mut self.trace,
@@ -969,6 +1200,14 @@ impl StepScheduler {
         if req.is_zero_step() {
             let r = zero_step_result(&req, self.elems);
             source.on_done(r.id, r.finish_s);
+            if self.hedge.is_some() {
+                self.hedge_latency.record(r.latency_s());
+            }
+            if let Some(met) = r.deadline_met() {
+                if let Some(b) = &mut self.brownout {
+                    b.on_tracked(met);
+                }
+            }
             emit(
                 &mut self.trace,
                 TraceEvent::Complete {
@@ -984,22 +1223,57 @@ impl StepScheduler {
             results.push(r);
             return;
         }
+        // Brownout: at a degraded level, lower classes are admitted at
+        // reduced quality (fewer denoise steps) instead of — eventually
+        // — being shed. Class 0, the top tier, is never degraded, and
+        // the request keeps its original sampler signature: a retry
+        // resubmits at full quality, and routing stays keyed on what
+        // the client asked for.
+        let mut degrade: Option<(u32, usize)> = None;
+        if let (Some(b), SamplerKind::Ddim { steps }) = (&self.brownout, req.sampler) {
+            if b.level() > 0 && req.class > 0 {
+                let target = b.degraded_steps(steps);
+                if target < steps {
+                    degrade = Some((b.level(), target));
+                }
+            }
+        }
+        if let Some((level, steps)) = degrade {
+            self.degrade_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Degrade {
+                    t: req.arrival_s,
+                    id: req.id.0,
+                    class: req.class,
+                    level,
+                    steps: steps as u64,
+                },
+            );
+        }
+        let slot_kind = degrade.map_or(req.sampler, |(_, s)| SamplerKind::Ddim { steps: s });
         match self.index.route(req.sampler) {
             Some(did) => {
-                let slot = self.make_slot(req);
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
                 // SLO admission control: shed a request whose estimated
                 // completion on the routed device misses its deadline,
                 // instead of burning batch slots on doomed work.
                 if self.shed_late && self.doomed_at(did.0, &slot, slot.req.arrival_s) {
-                    self.attribute_shed(slot.req.arrival_s, Some(did.0), &slot.req);
-                    source.on_done(slot.req.id, slot.req.arrival_s);
-                    rejected.push(slot.req.id);
+                    self.shed_or_retry(
+                        slot.req.arrival_s,
+                        Some(did.0),
+                        &slot.req,
+                        source,
+                        rejected,
+                    );
                     return;
                 }
                 self.enqueue(slot.req.arrival_s, did.0, slot);
             }
             None if self.backlog.len() < self.max_backlog => {
-                let slot = self.make_slot(req);
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
                 emit(
                     &mut self.trace,
                     TraceEvent::Requeue {
@@ -1011,9 +1285,7 @@ impl StepScheduler {
                 self.backlog.push_back(slot);
             }
             None => {
-                self.attribute_shed(req.arrival_s, None, &req);
-                source.on_done(req.id, req.arrival_s);
-                rejected.push(req.id);
+                self.shed_or_retry(req.arrival_s, None, &req, source, rejected);
             }
         }
     }
@@ -1039,8 +1311,11 @@ impl StepScheduler {
             > deadline_s
     }
 
-    fn make_slot(&mut self, req: ClusterRequest) -> Slot {
-        let sampler = self.sampler_for(req.sampler);
+    /// Build a slot serving `kind` — the request's own signature, or a
+    /// brownout-degraded one. The request inside keeps its original
+    /// sampler either way (see `admit`).
+    fn make_slot_with(&mut self, req: ClusterRequest, kind: SamplerKind) -> Slot {
+        let sampler = self.sampler_for(kind);
         Slot::new(req, sampler, self.elems)
     }
 
@@ -1098,9 +1373,7 @@ impl StepScheduler {
                 Some(did) => {
                     let slot = self.backlog.pop_front().expect("peeked");
                     if self.shed_late && self.doomed_at(did.0, &slot, now_s) {
-                        self.attribute_shed(now_s, Some(did.0), &slot.req);
-                        source.on_done(slot.req.id, now_s);
-                        rejected.push(slot.req.id);
+                        self.shed_or_retry(now_s, Some(did.0), &slot.req, source, rejected);
                         continue;
                     }
                     self.enqueue(now_s, did.0, slot);
@@ -1201,7 +1474,39 @@ impl StepScheduler {
         self.index.set_busy(di, false);
         let mut still_resident = std::mem::take(&mut self.retire_scratch);
         for slot in self.resident[di].drain(..) {
+            let id64 = slot.req.id.0;
+            // The other copy of a hedged request already finished: this
+            // loser leaves at the step boundary without completing.
+            if self.hedges.get(&id64).map_or(false, |tw| tw.done) {
+                let tw = self.hedges.get_mut(&id64).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&id64);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: id64,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                continue;
+            }
             if slot.step_index >= slot.timesteps.len() {
+                // First copy home wins; any surviving twin cancels at
+                // its own next boundary (completion ties break by
+                // device id, so the winner is deterministic).
+                if let Some(tw) = self.hedges.get_mut(&id64) {
+                    tw.done = true;
+                    tw.live -= 1;
+                    if tw.live == 0 {
+                        self.hedges.remove(&id64);
+                    }
+                }
                 self.devices[di].samples_completed += 1;
                 let steps = slot.timesteps.len();
                 source.on_done(slot.req.id, now_s);
@@ -1218,6 +1523,14 @@ impl StepScheduler {
                     class: slot.req.class,
                     deadline_s: slot.req.deadline_s,
                 };
+                if self.hedge.is_some() {
+                    self.hedge_latency.record(r.latency_s());
+                }
+                if let Some(met) = r.deadline_met() {
+                    if let Some(b) = &mut self.brownout {
+                        b.on_tracked(met);
+                    }
+                }
                 emit(
                     &mut self.trace,
                     TraceEvent::Complete {
@@ -1246,10 +1559,84 @@ impl StepScheduler {
         if let Some(kind) = self.pending_down[di].take() {
             self.apply_down(di, now_s, kind, source, rejected);
         }
+        // Hedge stragglers: at every step boundary, any resident sample
+        // past the hedge threshold gets a duplicate on another device.
+        if self.hedge.is_some() {
+            self.hedge_scan(now_s);
+        }
         // Freed slots (and queue space) may unblock deferred requests —
         // possibly onto other, currently idle devices.
         self.drain_backlog(now_s, source, rejected);
         self.kick(now_s, executor)
+    }
+
+    /// Issue hedge duplicates for straggling residents: any in-flight
+    /// sample whose elapsed time since arrival crossed the policy
+    /// threshold — a fixed latency, or a live quantile of this window's
+    /// completion latencies — gets a clone on a *different* device.
+    /// Whichever copy finishes first wins; the loser cancels at its
+    /// next step boundary. At most one hedge per request lifecycle. The
+    /// duplicate inherits the original's (possibly degraded) generation
+    /// length and RNG seed, so either copy yields the bit-identical
+    /// sample — hedging trades duplicate step work for tail latency,
+    /// never for a different result.
+    fn hedge_scan(&mut self, now_s: f64) {
+        let Some(policy) = self.hedge else { return };
+        let threshold_s = match policy {
+            HedgePolicy::Fixed { threshold_s } => threshold_s,
+            HedgePolicy::Quantile { q } => {
+                // The quantile needs a base of completions before it
+                // means anything; until then, never hedge.
+                if self.hedge_latency.count() < HEDGE_MIN_SAMPLES {
+                    return;
+                }
+                self.hedge_latency.quantile(q * 100.0)
+            }
+        };
+        // Collect first (ascending device id, resident order — the
+        // order the reference sweep sees), then route: issuing a
+        // duplicate perturbs the router index, which must not change
+        // which stragglers this boundary considers.
+        let mut due: Vec<(usize, ClusterRequest, SamplerKind, bool)> = Vec::new();
+        for di in 0..self.devices.len() {
+            for slot in &self.resident[di] {
+                if now_s - slot.req.arrival_s > threshold_s
+                    && !self.hedges.contains_key(&slot.req.id.0)
+                {
+                    due.push((di, slot.req.clone(), effective_kind(slot), slot.degraded));
+                }
+            }
+        }
+        for (from, req, kind, degraded) in due {
+            // Route with the straggler's device masked out — a hedge on
+            // the same die would wait behind the very step it is meant
+            // to beat. `from` holds a resident, so it is up, and the
+            // mask is restored immediately after the query.
+            self.index.set_excluded(from, true);
+            let dest = self.index.route(req.sampler);
+            self.index.set_excluded(from, false);
+            // No second device has room: skip. The straggler stays
+            // unhedged and may qualify again at a later boundary.
+            let Some(did) = dest else { continue };
+            let id64 = req.id.0;
+            let class = req.class;
+            let mut dup = self.make_slot_with(req, kind);
+            dup.degraded = degraded;
+            self.hedges.insert(id64, HedgeTwin { live: 2, done: false });
+            // `hedged` charges the straggler's device — the one whose
+            // slowness the duplicate is hedging against.
+            self.devices[from].hedged += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Hedge { t: now_s, id: id64, class, from, to: did.0 },
+            );
+            // Straight to the destination queue: no admission estimate,
+            // no Route event — a hedge is a scheduler decision, not a
+            // client arrival.
+            self.queued[did.0].push_back(dup);
+            self.index.set_counts(did.0, self.resident[did.0].len(), self.queued[did.0].len());
+            self.dirty.insert(did.0);
+        }
     }
 
     /// Promote queued requests into free slots and launch the next fused
@@ -1263,6 +1650,29 @@ impl StepScheduler {
         let mut promoted = false;
         while self.resident[di].len() < self.devices[di].capacity {
             let Some(mut slot) = self.queued[di].pop_front() else { break };
+            // A queued copy whose hedge twin already finished is dead
+            // weight: cancel it here instead of burning a batch slot.
+            if self.hedges.get(&slot.req.id.0).map_or(false, |tw| tw.done) {
+                let tw = self.hedges.get_mut(&slot.req.id.0).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&slot.req.id.0);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                // The queue shrank: resync the index below.
+                promoted = true;
+                continue;
+            }
             // Keep the original first-step instant for fault-migrated
             // victims (they already ran on the failed device).
             slot.first_step_s.get_or_insert(now_s);
@@ -1284,8 +1694,10 @@ impl StepScheduler {
         // always agrees on the step class). In simulation the executor
         // still runs every step — reuse changes the *priced* cost, not
         // the sample trajectory, so `K` is a pure performance knob and
-        // results stay bit-identical across reuse intervals.
-        let force_full = self.resident[di].iter().any(|s| s.step_index == 0);
+        // results stay bit-identical across reuse intervals. Degraded
+        // admissions never force a full step: riding the running reuse
+        // phase is part of the brownout quality reduction.
+        let force_full = self.resident[di].iter().any(|s| s.step_index == 0 && !s.degraded);
         let full = self.devices[di].next_step_full(force_full);
         if self.trace.is_some() {
             for slot in &self.resident[di] {
@@ -2808,5 +3220,349 @@ mod tests {
             "routing must shift work off the straggler ({slow_share} !< {fair_share})"
         );
         assert!(degraded.metrics.makespan_s > healthy.metrics.makespan_s);
+    }
+
+    // --- the resilience tier: retries, hedging, brownout --------------
+
+    use crate::cluster::load::{BrownoutConfig, RetryPolicy};
+    use crate::cluster::HedgePolicy;
+
+    #[test]
+    fn closed_loop_feedback_fires_for_every_terminal_outcome() {
+        // ISSUE 8 satellite: a fault-lost request must feed back to its
+        // closed-loop client exactly like a completion or a shed —
+        // otherwise the client waits forever on its in-flight request
+        // and the rest of its budget never submits (the wedge this
+        // guards against). Device 0 crashes mid-run with migration
+        // disabled, so in-flight submissions are lost; the clients must
+        // still drive their full budget through the fleet.
+        let plan = FaultPlan::new().crash_at(2.5e-3, 0);
+        let cfg = config(2).migration(false).faults(plan);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let src = RequestSource::closed_loop(3, 0.0, 18, 41, SamplerKind::Ddim { steps: 6 });
+        let out = s.serve_source(src, &mut SimExecutor).unwrap();
+        assert!(out.metrics.lost() > 0, "the crash must lose in-flight work");
+        assert_eq!(
+            out.results.len() + out.rejected.len(),
+            18,
+            "lost requests must release their clients: the full budget flows"
+        );
+        let mut ids: Vec<u64> = out.results.iter().map(|r| r.id.0).collect();
+        ids.extend(out.rejected.iter().map(|r| r.0));
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 18, "every submission gets exactly one terminal outcome");
+        // The end-of-window backlog drain is a terminal outcome too:
+        // kill the whole fleet so the backlog can never drain, and the
+        // stranded requests must still be fed back and accounted
+        // exactly once — identically in both cores.
+        let plan = FaultPlan::new().crash_at(1e-3, 0).crash_at(1e-3, 1);
+        let cfg = config(2).backlog(usize::MAX).migration(false).faults(plan);
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let mk = || RequestSource::closed_loop(4, 0.0, 16, 43, SamplerKind::Ddim { steps: 6 });
+        let a = heap.serve_source(mk(), &mut SimExecutor).unwrap();
+        let b = reference.serve_source(mk(), &mut SimExecutor).unwrap();
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.metrics, b.metrics);
+        assert!(!a.rejected.is_empty(), "a dead fleet must shed its stranded backlog");
+        let mut ids: Vec<u64> = a.results.iter().map(|r| r.id.0).collect();
+        ids.extend(a.rejected.iter().map(|r| r.0));
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "drained requests must terminate exactly once");
+    }
+
+    #[test]
+    fn retries_resubmit_fault_losses_with_zero_lost() {
+        // Retry budgets turn fault losses into deterministic seeded
+        // resubmissions: a crash with migration disabled loses its
+        // victims without retries, and loses *nothing* with them — the
+        // victims re-enter the arrival stream after a jittered backoff
+        // and finish on the survivor.
+        let serve = |retry: Option<RetryPolicy>| {
+            let plan = FaultPlan::new().crash_at(2.5e-3, 0);
+            let cfg = config(2).backlog(usize::MAX).migration(false).faults(plan);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let mut src = RequestSource::replay(workload(8, 6));
+            if let Some(p) = retry {
+                src = src.with_retry(p, 5);
+            }
+            s.serve_source(src, &mut SimExecutor).unwrap()
+        };
+        let without = serve(None);
+        assert!(without.metrics.lost() > 0, "the ablation must lose the victims");
+        let with = serve(Some(RetryPolicy::new(4, 2e-3, 1.0)));
+        assert_eq!(with.metrics.lost(), 0, "retries must resubmit every fault loss");
+        assert_eq!(with.results.len(), 8, "everything completes after resubmission");
+        assert!(with.rejected.is_empty());
+        assert!(with.metrics.retries() > 0, "resubmissions must land in the retry counters");
+        let mut ids: Vec<u64> = with.results.iter().map(|r| r.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8, "a retried request still completes exactly once");
+    }
+
+    #[test]
+    fn retries_absorb_transient_overload() {
+        // A burst that overflows a tiny queue sheds without retries;
+        // with capped-attempt exponential backoff the shed tail
+        // re-enters once the burst drains and everything is served.
+        let serve = |retry: Option<RetryPolicy>| {
+            let cfg = ClusterConfig::with_devices(1).capacity(2).max_queue(2);
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            let mut src = RequestSource::replay(workload(10, 4));
+            if let Some(p) = retry {
+                src = src.with_retry(p, 9);
+            }
+            s.serve_source(src, &mut SimExecutor).unwrap()
+        };
+        let shed_only = serve(None);
+        assert!(!shed_only.rejected.is_empty(), "10 simultaneous requests must overflow 2+2");
+        let retried = serve(Some(RetryPolicy::new(6, 2e-3, 1.0)));
+        assert!(
+            retried.results.len() > shed_only.results.len(),
+            "backoff must recover shed work ({} !> {})",
+            retried.results.len(),
+            shed_only.results.len()
+        );
+        assert!(retried.metrics.retries() > 0);
+        assert_eq!(retried.results.len() + retried.rejected.len(), 10);
+    }
+
+    #[test]
+    fn hedging_rescues_stragglers_and_cancels_the_loser() {
+        // An 8x straggler from t=0: a fixed-threshold hedge must
+        // duplicate its slow residents onto the healthy die, the copy
+        // that retires first wins, and the loser is cancelled at its
+        // next step boundary — exactly one result per request, and the
+        // straggler's tail latency recovers.
+        let serve = |hedge: Option<HedgePolicy>, plan: FaultPlan| {
+            let mut cfg = config(2).backlog(usize::MAX).faults(plan);
+            if let Some(h) = hedge {
+                cfg = cfg.hedge(h);
+            }
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+            s.serve(workload(16, 6), &mut SimExecutor).unwrap()
+        };
+        let worst = |out: &ClusterOutcome| {
+            out.results.iter().map(|r| r.latency_s()).fold(0.0f64, f64::max)
+        };
+        let clean = serve(None, FaultPlan::new());
+        let threshold_s = 1.05 * worst(&clean);
+        let slow = || FaultPlan::new().slow_at(0.0, 0, 8.0);
+        let unhedged = serve(None, slow());
+        let hedged = serve(Some(HedgePolicy::fixed(threshold_s)), slow());
+        let m = &hedged.metrics;
+        assert!(m.hedged() > 0, "an 8x straggler must trip the hedge threshold");
+        assert_eq!(m.cancelled(), m.hedged(), "every hedge retires exactly one loser");
+        assert_eq!(hedged.results.len(), 16, "hedging must not lose or duplicate work");
+        let mut ids: Vec<u64> = hedged.results.iter().map(|r| r.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 16, "one result per hedged request");
+        assert!(
+            worst(&hedged) < worst(&unhedged),
+            "the duplicate must beat the straggler's tail ({} !< {})",
+            worst(&hedged),
+            worst(&unhedged)
+        );
+    }
+
+    #[test]
+    fn brownout_controller_follows_windowed_attainment() {
+        let mut b = BrownoutCtl::new(BrownoutConfig::new(0.75, 4, 2, 0.5));
+        assert_eq!(b.level(), 0);
+        // A window at 50% attainment (< 75%) degrades one level.
+        for met in [true, false, true, false] {
+            b.on_tracked(met);
+        }
+        assert_eq!(b.level(), 1);
+        for _ in 0..4 {
+            b.on_tracked(false);
+        }
+        assert_eq!(b.level(), 2);
+        for _ in 0..4 {
+            b.on_tracked(false);
+        }
+        assert_eq!(b.level(), 2, "degradation clamps at max_level");
+        // Healthy windows restore one level at a time.
+        for _ in 0..4 {
+            b.on_tracked(true);
+        }
+        assert_eq!(b.level(), 1);
+        for _ in 0..4 {
+            b.on_tracked(true);
+        }
+        assert_eq!(b.level(), 0);
+        // Partial windows never move the level.
+        b.on_tracked(false);
+        assert_eq!(b.level(), 0);
+        assert_eq!(b.degraded_steps(8), 8, "level 0 serves full quality");
+    }
+
+    #[test]
+    fn brownout_degrades_lower_tiers_and_spares_class_zero() {
+        // Sustained 2x+ overload on one die: once windowed attainment
+        // slips below target, class-1 admissions drop to a reduced
+        // timestep tier while class 0 keeps full quality — and the two
+        // cores agree bit-for-bit on who was degraded.
+        let cfg = ClusterConfig::with_devices(1)
+            .capacity(2)
+            .max_queue(2)
+            .brownout(BrownoutConfig::new(0.9, 4, 3, 0.5));
+        let costs = vec![test_cost(); cfg.fleet.len()];
+        let reqs: Vec<ClusterRequest> = (0..30)
+            .map(|i| {
+                ClusterRequest::new(
+                    i,
+                    500 + i,
+                    SamplerKind::Ddim { steps: 8 },
+                    i as f64 * 2e-4,
+                )
+                .with_class((i % 2) as u8)
+                .with_deadline(3e-3)
+            })
+            .collect();
+        let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let mut reference = ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), 16);
+        let a = heap.serve(reqs.clone(), &mut SimExecutor).unwrap();
+        let b = reference.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(a.metrics, b.metrics, "brownout accounting diverged");
+        assert!(a.metrics.degraded() > 0, "overload must push the controller past level 0");
+        for r in &a.results {
+            let class = (r.id.0 % 2) as u8;
+            if class == 0 {
+                assert_eq!(r.steps, 8, "class 0 must keep its full-quality tier");
+            }
+        }
+        assert!(
+            a.results.iter().any(|r| r.id.0 % 2 == 1 && r.steps < 8),
+            "some class-1 request must serve at a degraded tier"
+        );
+        for r in &a.results {
+            assert!(r.sample.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn resilience_parity_heap_matches_reference() {
+        // ISSUE 8 acceptance gate: retries × hedging × brownout ×
+        // seeded fault plans × closed-loop sources × shed-late must
+        // keep the two scheduler cores bit-identical — shed/lost sets,
+        // results, placements, timings, degraded tiers, metrics
+        // (histogram buckets included) and full traces — and the
+        // strict versioned replay of that trace must reconstruct the
+        // resilience accounting.
+        crate::util::prop::forall("resilience heap = reference", 12, |g| {
+            let devices = g.usize_in(2, 4);
+            let mut plan = FaultPlan::new();
+            for _ in 0..g.usize_in(0, 3) {
+                let dev = g.usize_in(0, devices - 1);
+                let t = g.f64_in(0.0, 0.02);
+                plan = match g.usize_in(0, 2) {
+                    0 => plan.crash_at(t, dev),
+                    1 => plan.outage_at(t, dev, g.f64_in(1e-3, 0.01)),
+                    _ => plan.slow_at(t, dev, g.f64_in(1.5, 4.0)),
+                };
+            }
+            let mut cfg = ClusterConfig::with_devices(devices)
+                .capacity(g.usize_in(1, 3))
+                .max_queue(g.usize_in(0, 3))
+                .backlog(*g.choose(&[0usize, 4]))
+                .policy(*g.choose(&ShardPolicy::ALL))
+                .stealing(g.bool())
+                .shed_late(g.bool())
+                .migration(g.bool())
+                .faults(plan);
+            if g.bool() {
+                cfg = cfg.hedge(match g.usize_in(0, 2) {
+                    0 => HedgePolicy::fixed(g.f64_in(1e-3, 8e-3)),
+                    1 => HedgePolicy::quantile(0.9),
+                    _ => HedgePolicy::quantile(0.5),
+                });
+            }
+            if g.bool() {
+                cfg = cfg.brownout(BrownoutConfig::new(
+                    g.f64_in(0.7, 1.0),
+                    g.usize_in(2, 8) as u64,
+                    g.usize_in(1, 3) as u32,
+                    g.f64_in(0.25, 0.75),
+                ));
+            }
+            let mut src = RequestSource::closed_loop(
+                g.usize_in(1, 5),
+                *g.choose(&[0.0, 1e-4, 2e-3]),
+                g.usize_in(4, 24),
+                8800 + devices as u64,
+                SamplerKind::Ddim { steps: g.usize_in(1, 8) },
+            )
+            .with_slos(vec![g.f64_in(1e-3, 0.03), g.f64_in(2e-3, 0.06)]);
+            if g.bool() {
+                src = src.with_retry(
+                    RetryPolicy::new(
+                        g.usize_in(2, 4) as u32,
+                        g.f64_in(5e-4, 4e-3),
+                        g.f64_in(0.25, 1.5),
+                    ),
+                    177,
+                );
+            }
+            let costs = vec![test_cost(); cfg.fleet.len()];
+            let mut heap = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            let mut reference =
+                ReferenceScheduler::new(&cfg, &costs, NoiseSchedule::linear(40), 16);
+            heap.set_trace(TraceSink::new());
+            reference.set_trace(TraceSink::new());
+            let a = heap.serve_source(src.clone(), &mut SimExecutor).unwrap();
+            let b = reference.serve_source(src, &mut SimExecutor).unwrap();
+            assert_eq!(a.rejected, b.rejected, "shed/lost set diverged");
+            assert_eq!(a.results.len(), b.results.len());
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!(ra.id, rb.id, "completion order diverged");
+                assert_eq!(ra.device, rb.device, "placement diverged");
+                assert_eq!(ra.sample, rb.sample, "samples diverged");
+                assert_eq!(ra.steps, rb.steps, "degraded tiers diverged");
+                assert!(
+                    ra.finish_s == rb.finish_s && ra.first_step_s == rb.first_step_s,
+                    "timings diverged (req {:?})",
+                    ra.id
+                );
+            }
+            assert_eq!(a.metrics, b.metrics, "resilience metrics diverged");
+            assert_eq!(a.metrics.latency.to_json(), b.metrics.latency.to_json());
+            let ta = heap.take_trace().expect("heap trace");
+            let tb = reference.take_trace().expect("reference trace");
+            assert_eq!(ta.events(), tb.events(), "resilience traces diverged");
+            // Round trip through the strict versioned parser, then
+            // replay: retry/hedge/cancel/degrade accounting must
+            // reconstruct from the trace alone.
+            let parsed = crate::cluster::trace::parse_jsonl_versioned(&ta.to_jsonl())
+                .expect("versioned trace must parse");
+            assert_eq!(parsed, *ta.events());
+            let rep = crate::cluster::trace::replay(&parsed);
+            assert_eq!(rep.metrics.rejected, a.metrics.rejected);
+            assert_eq!(rep.metrics.shed_unattributed, a.metrics.shed_unattributed);
+            for (dr, dl) in rep.metrics.devices.iter().zip(&a.metrics.devices) {
+                assert_eq!(
+                    (dr.hedged, dr.cancelled, dr.interrupted, dr.lost),
+                    (dl.hedged, dl.cancelled, dl.interrupted, dl.lost),
+                    "resilience counter reconstruction"
+                );
+            }
+            for (cr, cl) in rep.metrics.classes.iter().zip(&a.metrics.classes) {
+                assert_eq!(
+                    (cr.retries, cr.degraded),
+                    (cl.retries, cl.degraded),
+                    "per-class retry/degrade reconstruction"
+                );
+            }
+        });
     }
 }

@@ -4,8 +4,10 @@
 //! [`super::ReferenceScheduler`] captures every request lifecycle
 //! decision — `admit` / `route` / `steal` / `requeue` / `shed` /
 //! `step` / `complete` — plus fleet churn — `fault` / `recover` /
-//! `migrate` — stamped with simulated time, device, request id and
-//! service class (churn events carry only the fields they have). Recording is a plain `Vec` push of a `Copy`
+//! `migrate` — plus the resilience tier — `retry` / `hedge` /
+//! `cancel` / `degrade` — stamped with simulated time, device, request
+//! id and service class (churn events carry only the fields they
+//! have). Recording is a plain `Vec` push of a `Copy`
 //! struct (no formatting, no I/O) so the recorder stays within the
 //! ≤5% events/sec overhead gate on the 64-device bench; JSON-lines
 //! serialization happens once, after the serve window, via
@@ -74,9 +76,25 @@ pub enum TraceEvent {
     Recover { t: f64, device: usize },
     /// A victim of a fault on `from` was re-admitted. `to` is the new
     /// device (`-1`: deferred to the fleet backlog, `-2`: lost — no
-    /// capacity or doomed under its deadline). `resident` marks an
+    /// capacity or doomed under its deadline, `-3`: handed back to the
+    /// client retry tier for resubmission). `resident` marks an
     /// interrupted in-flight sample (vs one still queued on `from`).
     Migrate { t: f64, id: u64, class: u8, from: usize, to: i64, resident: bool },
+    /// A failed (shed or fault-lost) request was accepted by the client
+    /// retry tier: resubmission `attempt` (1 = first retry) re-enters
+    /// the arrival stream at `at_s` after its jittered backoff.
+    Retry { t: f64, id: u64, class: u8, attempt: u32, at_s: f64 },
+    /// The request straggled past the hedge threshold on `from`; a
+    /// duplicate copy was issued to `to`. First copy to retire wins.
+    Hedge { t: f64, id: u64, class: u8, from: usize, to: usize },
+    /// The losing copy of a hedged request was cancelled on `device`
+    /// at its next step boundary, after `steps` duplicated denoise
+    /// steps (the duplicate-work cost of the hedge).
+    Cancel { t: f64, id: u64, class: u8, device: usize, steps: u64 },
+    /// The brownout controller admitted the request degraded: served
+    /// with `steps` denoise steps (down from its requested count) at
+    /// degradation `level`.
+    Degrade { t: f64, id: u64, class: u8, level: u32, steps: u64 },
 }
 
 /// What happened to the device in a [`TraceEvent::Fault`].
@@ -105,6 +123,10 @@ impl TraceEvent {
             TraceEvent::Fault { .. } => "fault",
             TraceEvent::Recover { .. } => "recover",
             TraceEvent::Migrate { .. } => "migrate",
+            TraceEvent::Retry { .. } => "retry",
+            TraceEvent::Hedge { .. } => "hedge",
+            TraceEvent::Cancel { .. } => "cancel",
+            TraceEvent::Degrade { .. } => "degrade",
         }
     }
 
@@ -120,7 +142,11 @@ impl TraceEvent {
             | TraceEvent::Complete { t, .. }
             | TraceEvent::Fault { t, .. }
             | TraceEvent::Recover { t, .. }
-            | TraceEvent::Migrate { t, .. } => t,
+            | TraceEvent::Migrate { t, .. }
+            | TraceEvent::Retry { t, .. }
+            | TraceEvent::Hedge { t, .. }
+            | TraceEvent::Cancel { t, .. }
+            | TraceEvent::Degrade { t, .. } => t,
         }
     }
 
@@ -153,7 +179,11 @@ impl TraceEvent {
             | TraceEvent::Shed { id, class, .. }
             | TraceEvent::Step { id, class, .. }
             | TraceEvent::Complete { id, class, .. }
-            | TraceEvent::Migrate { id, class, .. } => (id, class),
+            | TraceEvent::Migrate { id, class, .. }
+            | TraceEvent::Retry { id, class, .. }
+            | TraceEvent::Hedge { id, class, .. }
+            | TraceEvent::Cancel { id, class, .. }
+            | TraceEvent::Degrade { id, class, .. } => (id, class),
             TraceEvent::Fault { .. } | TraceEvent::Recover { .. } => unreachable!(),
         };
         let j = base.set("id", id).set("class", class);
@@ -175,6 +205,16 @@ impl TraceEvent {
                 ),
             TraceEvent::Migrate { from, to, resident, .. } => {
                 j.set("from", from).set("to", to).set("resident", resident)
+            }
+            TraceEvent::Retry { attempt, at_s, .. } => {
+                j.set("attempt", attempt).set("at", at_s)
+            }
+            TraceEvent::Hedge { from, to, .. } => j.set("from", from).set("to", to),
+            TraceEvent::Cancel { device, steps, .. } => {
+                j.set("dev", device).set("steps", steps)
+            }
+            TraceEvent::Degrade { level, steps, .. } => {
+                j.set("level", level).set("steps", steps)
             }
             TraceEvent::Fault { .. } | TraceEvent::Recover { .. } => unreachable!(),
         }
@@ -245,6 +285,34 @@ impl TraceEvent {
                 to: num("to")? as i64,
                 resident: matches!(j.get("resident"), Some(Json::Bool(true))),
             }),
+            "retry" => Ok(TraceEvent::Retry {
+                t,
+                id,
+                class,
+                attempt: num("attempt")? as u32,
+                at_s: num("at")?,
+            }),
+            "hedge" => Ok(TraceEvent::Hedge {
+                t,
+                id,
+                class,
+                from: num("from")? as usize,
+                to: num("to")? as usize,
+            }),
+            "cancel" => Ok(TraceEvent::Cancel {
+                t,
+                id,
+                class,
+                device: dev()?,
+                steps: num("steps")? as u64,
+            }),
+            "degrade" => Ok(TraceEvent::Degrade {
+                t,
+                id,
+                class,
+                level: num("level")? as u32,
+                steps: num("steps")? as u64,
+            }),
             other => Err(format!("unknown event kind '{other}'")),
         }
     }
@@ -284,9 +352,11 @@ impl TraceSink {
         self.events.clear();
     }
 
-    /// The JSON-lines encoding: one compact object per line.
+    /// The JSON-lines encoding: the versioned header line, then one
+    /// compact object per event.
     pub fn to_jsonl(&self) -> String {
-        let mut out = String::new();
+        let mut out = header_line();
+        out.push('\n');
         for ev in &self.events {
             out.push_str(&ev.to_json().to_string_compact());
             out.push('\n');
@@ -294,8 +364,9 @@ impl TraceSink {
         out
     }
 
-    /// Stream the JSON-lines encoding to a writer.
+    /// Stream the JSON-lines encoding (header included) to a writer.
     pub fn write_jsonl(&self, out: &mut dyn Write) -> std::io::Result<()> {
+        writeln!(out, "{}", header_line())?;
         for ev in &self.events {
             writeln!(out, "{}", ev.to_json().to_string_compact())?;
         }
@@ -314,16 +385,75 @@ pub(super) fn emit(trace: &mut Option<TraceSink>, ev: TraceEvent) {
     }
 }
 
-/// Parse a JSON-lines trace document (blank lines ignored).
+/// Trace schema version stamped in the header line of every trace
+/// this build writes. Bumped whenever the event vocabulary or field
+/// layout changes, so a replayer never silently misreads an
+/// old-schema file. Version 2 added the resilience-tier events
+/// (`retry` / `hedge` / `cancel` / `degrade`) and the header itself.
+pub const TRACE_VERSION: u64 = 2;
+
+/// The header line [`TraceSink::to_jsonl`] writes.
+fn header_line() -> String {
+    format!("{{\"trace\":\"difflight\",\"version\":{TRACE_VERSION}}}")
+}
+
+/// Validate a parsed header object against [`TRACE_VERSION`].
+fn check_header(j: &Json) -> Result<(), String> {
+    if j.get("trace").and_then(Json::as_str) != Some("difflight") {
+        return Err("bad trace header: expected \"trace\":\"difflight\"".to_string());
+    }
+    match j.get("version").and_then(Json::as_f64) {
+        Some(v) if v == TRACE_VERSION as f64 => Ok(()),
+        Some(v) => Err(format!(
+            "unsupported trace version {v} (this build reads version {TRACE_VERSION}); \
+             re-record the trace"
+        )),
+        None => Err("trace header missing 'version'".to_string()),
+    }
+}
+
+/// Parse a JSON-lines trace document (blank lines ignored). A leading
+/// `{"trace":"difflight","version":N}` header is validated and
+/// skipped when present; headerless event streams still parse, so
+/// in-memory round trips and hand-built fixtures stay cheap. The
+/// `trace replay` CLI uses the strict [`parse_jsonl_versioned`]
+/// instead, which *requires* the header.
 pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>, String> {
-    text.lines()
-        .enumerate()
-        .filter(|(_, line)| !line.trim().is_empty())
-        .map(|(n, line)| {
-            let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", n + 1))?;
-            TraceEvent::from_json(&j).map_err(|e| format!("trace line {}: {e}", n + 1))
-        })
-        .collect()
+    let mut events = Vec::new();
+    let mut first = true;
+    for (n, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", n + 1))?;
+        if std::mem::take(&mut first) && j.get("trace").is_some() {
+            check_header(&j).map_err(|e| format!("trace line {}: {e}", n + 1))?;
+            continue;
+        }
+        events.push(TraceEvent::from_json(&j).map_err(|e| format!("trace line {}: {e}", n + 1))?);
+    }
+    Ok(events)
+}
+
+/// Parse a JSON-lines trace document, *requiring* the versioned
+/// header [`TraceSink::to_jsonl`] writes. Headerless files — traces
+/// recorded before the schema carried a version — are rejected
+/// loudly, so `trace replay` can never misinterpret an old-schema
+/// file as a current one.
+pub fn parse_jsonl_versioned(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let has_header = text
+        .lines()
+        .find(|l| !l.trim().is_empty())
+        .and_then(|l| Json::parse(l).ok())
+        .map_or(false, |j| j.get("trace").is_some());
+    if !has_header {
+        return Err(format!(
+            "missing versioned trace header (expected {} on line 1) — this file predates \
+             the trace schema version stamp; re-record it with this build",
+            header_line()
+        ));
+    }
+    parse_jsonl(text)
 }
 
 /// A run reconstructed from its trace alone.
@@ -357,6 +487,8 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
             TraceEvent::Steal { device, from, .. } => device.max(from) as i64,
             TraceEvent::Shed { device, .. } | TraceEvent::Complete { device, .. } => device,
             TraceEvent::Migrate { from, to, .. } => (from as i64).max(to),
+            TraceEvent::Hedge { from, to, .. } => from.max(to) as i64,
+            TraceEvent::Cancel { device, .. } => device as i64,
             _ => -1,
         };
         if d >= 0 {
@@ -426,8 +558,11 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
             }
         }
     }
-    // Migrations fold last, in recorded order — the live `migrate_log`
-    // pass. The `from` device owns the churn accounting.
+    // Migrations fold next, in recorded order — the live `migrate_log`
+    // pass. The `from` device owns the churn accounting. A Resubmitted
+    // victim left the fleet through the client retry tier: it counts
+    // as interrupted, but its class retry is folded from the paired
+    // `retry` event below, never here.
     for ev in events {
         if let TraceEvent::Migrate { class, from, to, resident, .. } = *ev {
             let outcome = MigrateOutcome::from_target(to);
@@ -440,7 +575,19 @@ pub fn replay(events: &[TraceEvent]) -> TraceReplay {
                 MigrateOutcome::Migrated => d.migrated += 1,
                 MigrateOutcome::Retried => d.retried += 1,
                 MigrateOutcome::Lost => d.lost += 1,
+                MigrateOutcome::Resubmitted => {}
             }
+        }
+    }
+    // Resilience-tier folds, in recorded order — the live `retry_log` /
+    // `degrade_log` passes plus the direct hedge/cancel device counters.
+    for ev in events {
+        match *ev {
+            TraceEvent::Retry { class, .. } => metrics.record_retry(class),
+            TraceEvent::Degrade { class, .. } => metrics.record_degrade(class),
+            TraceEvent::Hedge { from, .. } => metrics.devices[from].hedged += 1,
+            TraceEvent::Cancel { device, .. } => metrics.devices[device].cancelled += 1,
+            _ => {}
         }
     }
     if first_arrival_s.is_finite() {
@@ -575,13 +722,85 @@ mod tests {
             sink.record(ev);
         }
         let text = sink.to_jsonl();
-        assert_eq!(text.lines().count(), sink.len());
+        // One versioned header line, then one line per event.
+        assert_eq!(text.lines().count(), sink.len() + 1);
+        assert_eq!(text.lines().next(), Some(header_line().as_str()));
         let parsed = parse_jsonl(&text).expect("parse");
         assert_eq!(parsed, sink.events());
+        // The strict parser accepts the headered document too.
+        assert_eq!(parse_jsonl_versioned(&text).expect("parse"), sink.events());
         // write_jsonl produces the same bytes as to_jsonl.
         let mut buf = Vec::new();
         sink.write_jsonl(&mut buf).unwrap();
         assert_eq!(String::from_utf8(buf).unwrap(), text);
+    }
+
+    #[test]
+    fn version_header_gates_strict_parsing() {
+        // A headerless event stream: lenient parse accepts, strict
+        // parse rejects with a loud re-record message.
+        let doc = "{\"ev\":\"admit\",\"t\":0,\"id\":1,\"class\":0}\n";
+        assert_eq!(parse_jsonl(doc).expect("lenient").len(), 1);
+        let err = parse_jsonl_versioned(doc).expect_err("headerless must be rejected");
+        assert!(err.contains("missing versioned trace header"), "{err}");
+        assert!(err.contains("version"), "{err}");
+        // A stale version is rejected by both parsers, naming both
+        // versions, on line 1.
+        let stale = format!("{{\"trace\":\"difflight\",\"version\":1}}\n{doc}");
+        for result in [parse_jsonl(&stale), parse_jsonl_versioned(&stale)] {
+            let err = result.expect_err("version 1 must be rejected");
+            assert!(err.contains("trace line 1"), "{err}");
+            assert!(err.contains("unsupported trace version 1"), "{err}");
+            assert!(err.contains(&TRACE_VERSION.to_string()), "{err}");
+        }
+        // A mangled header (wrong magic, missing version) is loud too.
+        let bad = format!("{{\"trace\":\"other\",\"version\":{TRACE_VERSION}}}\n");
+        assert!(parse_jsonl(&bad).is_err());
+        assert!(parse_jsonl("{\"trace\":\"difflight\"}\n").is_err());
+        // Blank lines before the header are fine.
+        let padded = format!("\n{}\n{doc}", header_line());
+        assert_eq!(parse_jsonl_versioned(&padded).expect("padded").len(), 1);
+    }
+
+    #[test]
+    fn resilience_events_round_trip_and_replay() {
+        let mut sink = TraceSink::new();
+        for ev in [
+            TraceEvent::Admit { t: 0.0, id: 1, class: 1 },
+            TraceEvent::Degrade { t: 0.0, id: 1, class: 1, level: 2, steps: 2 },
+            TraceEvent::Route { t: 0.0, id: 1, class: 1, device: 0, est_s: 0.25 },
+            // Request 1 straggles on device 0; its hedge goes to 1 and
+            // wins, so the original copy is cancelled after 3 wasted
+            // steps.
+            TraceEvent::Hedge { t: 1.0, id: 1, class: 1, from: 0, to: 1 },
+            TraceEvent::Cancel { t: 2.0, id: 1, class: 1, device: 0, steps: 3 },
+            // Request 2 is shed and accepted for a second attempt.
+            TraceEvent::Shed { t: 1.5, id: 2, class: 0, device: 1, tracked: false },
+            TraceEvent::Retry { t: 1.5, id: 2, class: 0, attempt: 1, at_s: 1.75 },
+            // A fault victim resubmitted through the retry tier.
+            TraceEvent::Migrate { t: 2.5, id: 3, class: 1, from: 1, to: -3, resident: true },
+            TraceEvent::Retry { t: 2.5, id: 3, class: 1, attempt: 2, at_s: 2.9 },
+        ] {
+            sink.record(ev);
+        }
+        let text = sink.to_jsonl();
+        assert_eq!(parse_jsonl(&text).expect("parse"), sink.events());
+        let r = replay(sink.events());
+        assert_eq!(r.metrics.devices[0].hedged, 1);
+        assert_eq!(r.metrics.devices[0].cancelled, 1);
+        assert_eq!(r.metrics.devices[1].cancelled, 0);
+        // The resubmitted victim is interrupted but neither migrated
+        // nor lost — the retry tier owns it now.
+        assert_eq!(r.metrics.devices[1].interrupted, 1);
+        assert_eq!(r.metrics.devices[1].lost, 0);
+        assert_eq!(r.metrics.devices[1].migrated, 0);
+        let c0 = r.metrics.classes.iter().find(|c| c.class == 0).expect("class 0");
+        assert_eq!(c0.retries, 1);
+        let c1 = r.metrics.classes.iter().find(|c| c.class == 1).expect("class 1");
+        assert_eq!((c1.retries, c1.degraded, c1.interrupted), (1, 1, 1));
+        // (Live cores emit Shed xor Retry for one failure — this
+        // fixture pairs them only to exercise both folds at once.)
+        assert_eq!(r.metrics.rejected, 1);
     }
 
     #[test]
@@ -628,8 +847,8 @@ mod tests {
             sink.record(ev);
         }
         let text = sink.to_jsonl();
-        // Churn events carry no request id/class.
-        for line in text.lines().take(4) {
+        // Churn events carry no request id/class (line 1 is the header).
+        for line in text.lines().skip(1).take(4) {
             assert!(!line.contains("\"id\""), "churn line leaked an id: {line}");
         }
         assert_eq!(parse_jsonl(&text).expect("parse"), sink.events());

@@ -56,11 +56,13 @@ use difflight::baselines::all_baselines;
 use difflight::cluster::load::{
     parse_arrival_spec, parse_clients_spec, parse_fault_spec, parse_slo_spec,
 };
-use difflight::cluster::trace::{check_against_report, diff, parse_jsonl, replay, replay_summary};
+use difflight::cluster::trace::{
+    check_against_report, diff, parse_jsonl_versioned, replay, replay_summary,
+};
 use difflight::cluster::{
-    parse_faults_json, parse_fleet_json, parse_fleet_spec, synthetic_workload, Cluster,
-    ClusterConfig, DeviceProfile, FaultPlan, RequestSource, ShardPolicy, SimExecutor, TraceEvent,
-    TraceSink,
+    parse_brownout_spec, parse_faults_json, parse_fleet_json, parse_fleet_spec, parse_retry_spec,
+    synthetic_workload, Cluster, ClusterConfig, DeviceProfile, FaultPlan, HedgePolicy,
+    RequestSource, ShardPolicy, SimExecutor, TraceEvent, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -113,6 +115,11 @@ fn print_help(program: &str) {
     println!("                                      deterministic device churn (also recal:mtbf=S:mttr=S, slow@t=T:factor=F)");
     println!("          --faults-file faults.json   fault plan as JSON");
     println!("          --no-migration              lose fault victims instead of checkpoint/migrate");
+    println!("          --retry \"max=3:base-ms=5\"   re-admit shed/lost requests with exponential backoff (:budget=B)");
+    println!("          --hedge-ms 40               duplicate stragglers past a fixed latency threshold");
+    println!("          --hedge-q 0.95              ...or past a quantile of observed completion latency");
+    println!("          --brownout \"target=0.99:window=64\"");
+    println!("                                      degrade timestep tiers before shedding (also :max=L:factor=F)");
     println!("          --trace trace.jsonl         flight recorder: per-request events as JSON lines");
     println!("  trace replay FILE                   rebuild metrics from a recorded trace");
     println!("        replay FILE --expect artifacts/cluster_report.json");
@@ -515,8 +522,59 @@ fn cmd_cluster(args: &Args) -> i32 {
         }
         _ => FaultPlan::default(),
     };
-    let churn = !plan.is_empty();
-    let config = config.faults(plan).migration(!args.flag("no-migration"));
+    if args.flag("no-migration") && faults_spec.is_none() && faults_file.is_none() {
+        eprintln!(
+            "error: --no-migration only changes behaviour under device churn; \
+             add --faults/--faults-file"
+        );
+        return 2;
+    }
+    // The `resilience:` summary reports fault handling, so it only
+    // prints when the plan actually touches a device in this fleet
+    // (events aimed beyond the fleet are ignored by both cores).
+    let churn = plan.sorted().iter().any(|e| e.device < config.device_count());
+    let mut config = config.faults(plan).migration(!args.flag("no-migration"));
+    let hedge = match (args.get("hedge-ms"), args.get("hedge-q")) {
+        (Some(_), Some(_)) => {
+            eprintln!("error: --hedge-ms and --hedge-q are mutually exclusive");
+            return 2;
+        }
+        (Some(ms), None) => match ms.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => Some(HedgePolicy::fixed(v * 1e-3)),
+            _ => {
+                eprintln!("error: --hedge-ms {ms}: expected a finite threshold > 0 (milliseconds)");
+                return 2;
+            }
+        },
+        (None, Some(q)) => match q.parse::<f64>() {
+            Ok(v) if v > 0.0 && v < 1.0 => Some(HedgePolicy::quantile(v)),
+            _ => {
+                eprintln!("error: --hedge-q {q}: expected a quantile in (0, 1)");
+                return 2;
+            }
+        },
+        (None, None) => None,
+    };
+    let brownout = match args.get("brownout").map(parse_brownout_spec).transpose() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: --brownout {e:#}");
+            return 2;
+        }
+    };
+    let retry = match args.get("retry").map(parse_retry_spec).transpose() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: --retry {e:#}");
+            return 2;
+        }
+    };
+    if let Some(policy) = hedge {
+        config = config.hedge(policy);
+    }
+    if let Some(b) = brownout {
+        config = config.brownout(b);
+    }
     let requests = args.get_parsed("requests", 32usize);
     let steps = args.get_parsed("steps", 25usize);
     if steps > 1000 {
@@ -531,6 +589,14 @@ fn cmd_cluster(args: &Args) -> i32 {
                 return 2;
             }
         };
+    if brownout.is_some() && slos_s.is_empty() {
+        eprintln!("error: --brownout adapts to SLO attainment; add --slo-ms MS[,MS...]");
+        return 2;
+    }
+    let source = match retry {
+        Some(policy) => source.with_retry(policy, seed),
+        None => source,
+    };
 
     // Pricing (per-profile accelerator cost models built by
     // `Cluster::simulated`) and the serve loop are timed separately so
@@ -642,6 +708,15 @@ fn cmd_cluster(args: &Args) -> i32 {
             if config.migration { "" } else { " (migration disabled)" },
         );
     }
+    if retry.is_some() || hedge.is_some() || brownout.is_some() {
+        println!(
+            "recovery: {} retried, {} hedged, {} cancelled, {} degraded admissions",
+            m.retries(),
+            m.hedged(),
+            m.cancelled(),
+            m.degraded(),
+        );
+    }
     println!(
         "scheduler: {} events in {} serving host time ({:.0} events/s; pricing {})",
         m.sched_events,
@@ -692,7 +767,7 @@ fn cmd_trace(args: &Args) -> i32 {
     };
     let read_trace = |p: &str| -> Result<Vec<TraceEvent>, String> {
         let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
-        parse_jsonl(&text).map_err(|e| format!("{p}: {e}"))
+        parse_jsonl_versioned(&text).map_err(|e| format!("{p}: {e}"))
     };
     let a = match read_trace(path) {
         Ok(events) => events,

@@ -10,18 +10,26 @@
 # recorder overhead, constant-size metrics memory, trace-replay
 # round trip), and the resilience tier (device churn under fault
 # injection: crash/outage/straggler plans, step-boundary migration,
-# MTBF x fleet-size degradation curves), asserting the ISSUE targets
+# MTBF x fleet-size degradation curves), and the client-side
+# resilience tier (brownout tier degradation vs shed-only overload
+# control, hedged requests vs seeded stragglers, retry budgets vs
+# fault losses), asserting the ISSUE targets
 # (>=5x DSE, >=1.5x fleet throughput at K=3, >=5x scheduler events/sec
 # at 256 devices, >=1.2x cost-aware routing gain on the mixed fleet,
 # >=1.2x goodput from deadline-aware shedding at overload, histogram
 # p50/p99 within 1% of exact percentiles, recorder overhead <= 5%,
 # O(buckets) metrics memory, bit-identical trace replay, >=0.8x
 # goodput at 10% device loss, zero lost requests with migration,
-# heap-vs-reference bit-identity under a seeded fault plan) and
-# writing BENCH_sim.json at the repo root.
+# heap-vs-reference bit-identity under a seeded fault plan, >=1.2x
+# goodput from degraded-tier serving over shed-only at 2x overload
+# with >=99% attainment on the undegraded top class, >=0.9x recovery
+# of the straggler p99 regression from hedging at <=10% duplicate
+# work, zero lost requests with retry budgets, and heap-vs-reference
+# bit-identity with retry+hedge+brownout all enabled) and writing
+# BENCH_sim.json at the repo root.
 #
 # Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
-#                         [--obs] [--faults]
+#                         [--obs] [--faults] [--brownout]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
 #                    gating the 64-device scheduler point, the 2-profile
 #                    and closed-loop heap-vs-reference parities, and a
@@ -47,6 +55,12 @@
 #                    the "resilience" key of BENCH_sim.json) even
 #                    together with --smoke; the section itself always
 #                    runs and lands in BENCH_sim.json.
+#   --brownout       force the full-size brownout/hedge/retry section
+#                    (8-device 2x-overload brownout gate, 480-request
+#                    hedge gate, writing the "brownout" key of
+#                    BENCH_sim.json) even together with --smoke; the
+#                    section itself always runs and lands in
+#                    BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

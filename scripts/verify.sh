@@ -31,7 +31,14 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # the fault-injection tier: 10% device loss keeps goodput >= 0.8x the
 # zero-fault baseline, step-boundary migration loses zero requests
 # (and the no-migration ablation loses the victims), and a seeded
-# mixed fault plan stays heap-vs-reference bit-identical.
+# mixed fault plan stays heap-vs-reference bit-identical. The brownout
+# section gates the client-side resilience tier: degraded-tier serving
+# beats shed-only goodput >= 1.2x at 2x overload while the undegraded
+# top class stays >= 99% attained, hedging recovers >= 0.9x of the
+# straggler p99 regression for <= 10% duplicate work, retry budgets
+# lose zero requests where the no-retry ablation loses the crash
+# victims, and retry+hedge+brownout together stay heap-vs-reference
+# bit-identical (traces included).
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== obs smoke (flight recorder round trip) =="
@@ -71,6 +78,27 @@ trap 'rm -rf "$obs_tmp" "$churn_tmp"' EXIT
         --expect artifacts/cluster_report.json >/dev/null
 )
 echo "churn smoke: replayed fault accounting matches the live report"
+
+echo "== brownout smoke (retry + brownout + hedge round trip) =="
+# End-to-end CLI gate for the client-side resilience tier: overload a
+# 16-device run (arrivals land ~5x faster than the fleet drains them)
+# with retry budgets, quantile hedging and the brownout controller all
+# enabled, trace it, then replay the trace and require the
+# reconstructed report (retry/hedge/cancel/degrade counters included)
+# to match the live one exactly (exit 1 on any divergent key).
+resil_tmp="$(mktemp -d)"
+trap 'rm -rf "$obs_tmp" "$churn_tmp" "$resil_tmp"' EXIT
+(
+    cd "$resil_tmp"
+    "$OLDPWD/target/release/difflight" cluster --devices 16 --requests 192 \
+        --steps 8 --gap-us 20 --backlog 256 --slo-ms 50,8 --shed-late \
+        --retry "max=3:base-ms=2" --hedge-q 0.9 \
+        --brownout "target=0.95:window=24:max=2:factor=0.5" \
+        --trace resil.jsonl >/dev/null
+    "$OLDPWD/target/release/difflight" trace replay resil.jsonl \
+        --expect artifacts/cluster_report.json >/dev/null
+)
+echo "brownout smoke: replayed resilience accounting matches the live report"
 
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
