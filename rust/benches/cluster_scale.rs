@@ -2,10 +2,12 @@
 //! a closed-loop client concurrency sweep (interactive clients with
 //! think time and per-request SLOs — goodput/attainment vs concurrency),
 //! a heterogeneous big/small fleet sweep (cost-aware vs occupancy-only
-//! routing vs an equal-device-count homogeneous fleet), plus the
+//! routing vs an equal-device-count homogeneous fleet), the
 //! scheduler-scaling sweep (devices ∈ {1, 4, 16, 64, 256}) comparing
 //! the heap/index event core against the retained O(N) reference loop
-//! in host-side scheduler events/sec.
+//! in host-side scheduler events/sec, plus a sharded-event-core sweep
+//! (shards ∈ {1, 4, 8} on the compute-dominated drain) showing the
+//! parallel-flush speedup at a fixed fleet size.
 //!
 //! Serves the same synthetic burst through each fleet size and reports
 //! simulated aggregate throughput, latency percentiles, utilization and
@@ -271,6 +273,41 @@ fn main() {
         );
     }
 
+    // ---- sharded event core: shards sub-sweep ----
+    // The compute-dominated shard-sweep workload (shared with
+    // `sim_hot_path`'s gated version): events/sec vs shard count at one
+    // fleet size, bit-identical across shard counts by construction.
+    let shard_devices = if full_sweep { 256 } else { 64 };
+    harness::section(&format!(
+        "sharded event core: {shard_devices} devices, shards in [1, 4, 8], \
+         {} reqs/device x {} DDIM steps x {} elems",
+        harness::SHARD_SWEEP_REQS_PER_DEVICE,
+        harness::SHARD_SWEEP_STEPS,
+        harness::SHARD_SWEEP_ELEMS,
+    ));
+    let mut shards_sweep = Vec::new();
+    let mut shard_base_eps = 0.0f64;
+    let mut shard_base_events = 0u64;
+    println!("{:>8} {:>10} {:>18} {:>9}", "shards", "events", "ev/s", "speedup");
+    for shards in [1usize, 4, 8] {
+        let (events, min_s, eps) = harness::shard_sweep_time(shard_devices, shards, 2);
+        if shards == 1 {
+            shard_base_eps = eps;
+            shard_base_events = events;
+        }
+        assert_eq!(events, shard_base_events, "shard count must not change the schedule");
+        let speedup = eps / shard_base_eps;
+        println!("{shards:>8} {events:>10} {eps:>18.0} {speedup:>8.2}x");
+        shards_sweep.push(
+            Json::obj()
+                .set("shards", shards)
+                .set("events", events)
+                .set("min_s", min_s)
+                .set("events_per_s", eps)
+                .set("speedup_vs_1_shard", speedup),
+        );
+    }
+
     let report = Json::obj()
         .set("bench", "cluster_scale")
         .set("requests", REQUESTS)
@@ -279,7 +316,11 @@ fn main() {
         .set("reuse_sweep", Json::Arr(reuse_sweep))
         .set("closed_loop_sweep", Json::Arr(closed_sweep))
         .set("hetero_sweep", Json::Arr(hetero_sweep))
-        .set("scheduler_scaling", Json::Arr(scale_sweep));
+        .set("scheduler_scaling", Json::Arr(scale_sweep))
+        .set(
+            "shards_sweep",
+            Json::obj().set("devices", shard_devices).set("sweep", Json::Arr(shards_sweep)),
+        );
     if std::fs::create_dir_all("artifacts").is_ok() {
         let path = "artifacts/cluster_scale.json";
         std::fs::write(path, report.to_string_pretty()).expect("write sweep report");

@@ -162,6 +162,91 @@ pub fn fleet_scale_time_core_traced(
     (events, timing.min_s, events as f64 / timing.min_s)
 }
 
+/// Time the frozen pre-shard baseline (`LegacyStepScheduler`) on the
+/// same scaling workload — the denominator of the arena/4-ary layout
+/// gate, so "faster" is measured against the real predecessor core.
+pub fn fleet_scale_time_legacy(devices: usize, iters: usize) -> (u64, f64, f64) {
+    use difflight::arch::cost::Cost;
+    use difflight::cluster::{
+        synthetic_workload, ClusterConfig, LegacyStepScheduler, ShardPolicy, SimExecutor,
+    };
+    use difflight::coordinator::request::SamplerKind;
+    use difflight::runtime::manifest::NoiseSchedule;
+
+    let cfg = ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(16)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded);
+    let costs = vec![Cost::new(1e-3, 2e-3, 1_000_000, 4); cfg.fleet.len()];
+    let workload = synthetic_workload(
+        devices * FLEET_SCALE_REQS_PER_DEVICE,
+        13,
+        SamplerKind::Ddim { steps: FLEET_SCALE_STEPS },
+        1e-5,
+    );
+    let mut s =
+        LegacyStepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), FLEET_SCALE_ELEMS);
+    let mut events = 0u64;
+    let timing = bench(&format!("legacy({devices} dev).serve({} reqs)", workload.len()), iters, || {
+        let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
+        events = out.metrics.sched_events;
+        black_box(out);
+    });
+    (events, timing.min_s, events as f64 / timing.min_s)
+}
+
+// ---------------------------------------------------------------------
+// Shard-sweep workload: unlike the fleet-scale workload above (tiny
+// samples, scheduler-dominated), this one makes the *numeric step work*
+// dominate — large samples, a gap-0 burst so every device steps in
+// lockstep epochs — which is exactly what the sharded event core fans
+// out across workers at the deferred-flush boundary. Events/sec here
+// measures end-to-end serve speed on a compute-heavy drain, so the
+// shards ∈ {1, 4, 8} sweep exposes the parallel speedup while staying
+// bit-identical across shard counts.
+// ---------------------------------------------------------------------
+
+pub const SHARD_SWEEP_ELEMS: usize = 1024;
+pub const SHARD_SWEEP_STEPS: usize = 6;
+pub const SHARD_SWEEP_REQS_PER_DEVICE: usize = 2;
+
+/// Time the sharded core at a `(devices, shards)` point on the
+/// compute-dominated shard-sweep workload; returns `(events, min host
+/// seconds, events/sec at the min)`. Min-of-N for the same reason as
+/// [`fleet_scale_time_core`]: the ratios gate CI.
+pub fn shard_sweep_time(devices: usize, shards: usize, iters: usize) -> (u64, f64, f64) {
+    use difflight::arch::cost::Cost;
+    use difflight::cluster::{
+        synthetic_workload, ClusterConfig, ShardPolicy, SimExecutor, StepScheduler,
+    };
+    use difflight::coordinator::request::SamplerKind;
+    use difflight::runtime::manifest::NoiseSchedule;
+
+    let cfg = ClusterConfig::with_devices(devices)
+        .capacity(4)
+        .max_queue(16)
+        .backlog(usize::MAX)
+        .policy(ShardPolicy::LeastLoaded)
+        .with_shards(shards);
+    let costs = vec![Cost::new(1e-3, 2e-3, 1_000_000, 4); cfg.fleet.len()];
+    let workload = synthetic_workload(
+        devices * SHARD_SWEEP_REQS_PER_DEVICE,
+        13,
+        SamplerKind::Ddim { steps: SHARD_SWEEP_STEPS },
+        0.0,
+    );
+    let mut s = StepScheduler::new(&cfg, &costs, NoiseSchedule::linear(100), SHARD_SWEEP_ELEMS);
+    let mut events = 0u64;
+    let name = format!("sharded({devices} dev, {shards} shard).serve({} reqs)", workload.len());
+    let timing = bench(&name, iters, || {
+        let out = s.serve(workload.clone(), &mut SimExecutor).expect("serve");
+        events = out.metrics.sched_events;
+        black_box(out);
+    });
+    (events, timing.min_s, events as f64 / timing.min_s)
+}
+
 /// One untimed heap-core serve of the fleet-scale workload, returning
 /// the outcome — the `obs` bench section checks the streamed histogram
 /// quantiles against the exact per-request latency vector on it.

@@ -17,7 +17,14 @@
 //!    core vs the retained O(events × devices) reference loop across
 //!    devices ∈ {1, 4, 16, 64, 256}. Asserts the heap core beats the
 //!    reference ≥5x at the 256-device point (≥1.2x at 64 devices in
-//!    smoke mode, which sweeps {1, 16, 64}).
+//!    smoke mode, which sweeps {1, 16, 64}). The sharded event core
+//!    (ISSUE 9) adds two more gates: the arena/4-ary data layout alone
+//!    (1 shard) must beat the frozen pre-shard `LegacyStepScheduler`
+//!    ≥1.2x at 256 devices, and a compute-dominated shard sweep
+//!    (devices ∈ {256, 1024, 4096} × shards ∈ {1, 4, 8}) must reach
+//!    ≥3x events/sec at the 4096-device 8-shard point vs 1 shard
+//!    (asserted only on hosts with ≥8 workers; `--shards` forces the
+//!    full sweep in smoke mode).
 //! 4. **Fleet hetero** — a mixed big/small fleet (2 + 6 dies from the
 //!    DSE family, per-profile priced) drained with cost-aware routing
 //!    vs occupancy-only routing, plus an equal-device-count homogeneous
@@ -68,7 +75,9 @@
 //! forces the full-size observability section (`scripts/bench.sh
 //! --obs`); `--faults` forces the full-size resilience section
 //! (`scripts/bench.sh --faults`); `--brownout` forces the full-size
-//! brownout/hedge/retry section (`scripts/bench.sh --brownout`).
+//! brownout/hedge/retry section (`scripts/bench.sh --brownout`);
+//! `--shards` forces the full-size sharded-core layout gate and shard
+//! sweep (`scripts/bench.sh --shards`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -91,7 +100,14 @@
 //!     "sweep": [ { "devices": N, "requests": N, "events": N,
 //!                  "heap_events_per_s": x, "reference_events_per_s": x,
 //!                  "speedup": x } ],
-//!     "top_devices": N, "speedup_at_top": x },
+//!     "top_devices": N, "speedup_at_top": x,
+//!     "layout": { "devices": N, "legacy_events_per_s": x,
+//!                 "arena_events_per_s": x, "speedup": x },
+//!     "shard_sweep": { "elems": N, "steps": N, "reqs_per_device": N,
+//!       "sweep": [ { "devices": N, "shards": N, "events": N,
+//!                    "events_per_s": x, "speedup_vs_1_shard": x } ],
+//!       "top_devices": N, "top_shards": N, "speedup_at_top": x,
+//!       "workers": N, "gate_enforced": bool } },
 //!   "fleet_hetero": { "requests": N, "steps": N, "work_stealing": false,
 //!     "big": {"arch": "[Y,N,K,H,L,M]", "count": N},
 //!     "small": {"arch": "[Y,N,K,H,L,M]", "count": N},
@@ -347,6 +363,98 @@ fn main() {
             top_speedup >= 5.0,
             "heap core must beat the reference loop >= 5x at {top_devices} devices \
              (got {top_speedup:.2}x)"
+        );
+    }
+
+    // ---- (c') sharded event core: layout gate + shard sweep ----
+    // Two separable claims from the sharding PR, gated separately:
+    //
+    // 1. **Layout gate** — the arena/4-ary data layout alone (1 shard,
+    //    no parallel flush) must beat the frozen pre-shard core
+    //    (`LegacyStepScheduler`) >= 1.2x events/sec at 256 devices on
+    //    the scheduler-dominated fleet-scale workload.
+    // 2. **Shard sweep** — events/sec at devices in {256, 1024, 4096}
+    //    x shards in {1, 4, 8} on the compute-dominated shard-sweep
+    //    workload, asserting >= 3x at the 4096-device 8-shard point vs
+    //    1 shard (skipped, with a note, on hosts with < 8 workers —
+    //    the speedup comes from real parallel step execution).
+    //
+    // `--shards` forces the full-size sweep even in smoke mode
+    // (`scripts/bench.sh --shards`); smoke otherwise runs a miniature
+    // (64 devices, shards {1, 4}, layout point at 64) without the
+    // ratio asserts, which need the full-size points to be meaningful.
+    let shards_full = !smoke || std::env::args().any(|a| a == "--shards");
+    harness::section(&format!(
+        "sharded event core ({}): layout gate + shards sweep",
+        if shards_full { "full" } else { "smoke" }
+    ));
+    let layout_devices = if shards_full { 256 } else { 64 };
+    let layout_iters = if shards_full { 3 } else { 2 };
+    let (lg_events, _, legacy_eps) =
+        harness::fleet_scale_time_legacy(layout_devices, layout_iters);
+    let (ar_events, _, arena_eps) =
+        harness::fleet_scale_time_core(layout_devices, layout_iters, false);
+    assert_eq!(lg_events, ar_events, "the layout rewrite must not change the schedule");
+    let layout_speedup = arena_eps / legacy_eps;
+    println!(
+        "layout gate at {layout_devices} devices: legacy {legacy_eps:.0} ev/s, \
+         arena/4-ary {arena_eps:.0} ev/s ({layout_speedup:.2}x)"
+    );
+    if shards_full {
+        assert!(
+            layout_speedup >= 1.2,
+            "the arena/4-ary layout alone (1 shard) must beat the pre-shard core \
+             >= 1.2x at {layout_devices} devices (got {layout_speedup:.2}x)"
+        );
+    }
+    let (shard_devices, shard_counts): (Vec<usize>, Vec<usize>) = if shards_full {
+        (vec![256, 1024, 4096], vec![1, 4, 8])
+    } else {
+        (vec![64], vec![1, 4])
+    };
+    let top_shard_devices = *shard_devices.last().expect("non-empty sweep");
+    let top_shard_count = *shard_counts.last().expect("non-empty sweep");
+    let mut shard_sweep = Vec::new();
+    let mut top_shard_speedup = 0.0f64;
+    for &devices in &shard_devices {
+        let mut base_eps = 0.0f64;
+        let mut base_events = 0u64;
+        for &shards in &shard_counts {
+            let (events, _, eps) = harness::shard_sweep_time(devices, shards, 2);
+            if shards == 1 {
+                base_eps = eps;
+                base_events = events;
+            }
+            assert_eq!(events, base_events, "shard count must not change the schedule");
+            let speedup = eps / base_eps;
+            if devices == top_shard_devices && shards == top_shard_count {
+                top_shard_speedup = speedup;
+            }
+            println!(
+                "{devices:>5} devices x {shards} shard(s): {eps:>12.0} ev/s ({speedup:.2}x vs 1 shard)"
+            );
+            shard_sweep.push(
+                Json::obj()
+                    .set("devices", devices)
+                    .set("shards", shards)
+                    .set("events", events)
+                    .set("events_per_s", eps)
+                    .set("speedup_vs_1_shard", speedup),
+            );
+        }
+    }
+    let workers = difflight::util::threadpool::ThreadPool::default_workers();
+    let shard_gate_enforced = shards_full && workers >= 8;
+    if shard_gate_enforced {
+        assert!(
+            top_shard_speedup >= 3.0,
+            "{top_shard_count} shards must serve >= 3x the 1-shard events/sec at \
+             {top_shard_devices} devices (got {top_shard_speedup:.2}x)"
+        );
+    } else if shards_full {
+        println!(
+            "{top_shard_count}-shard >= 3x gate skipped: only {workers} workers on this host \
+             (needs >= 8 for the parallel flush to express the speedup)"
         );
     }
 
@@ -1178,7 +1286,28 @@ fn main() {
                 .set("reqs_per_device", harness::FLEET_SCALE_REQS_PER_DEVICE)
                 .set("sweep", Json::Arr(scale_sweep))
                 .set("top_devices", top_devices)
-                .set("speedup_at_top", top_speedup),
+                .set("speedup_at_top", top_speedup)
+                .set(
+                    "layout",
+                    Json::obj()
+                        .set("devices", layout_devices)
+                        .set("legacy_events_per_s", legacy_eps)
+                        .set("arena_events_per_s", arena_eps)
+                        .set("speedup", layout_speedup),
+                )
+                .set(
+                    "shard_sweep",
+                    Json::obj()
+                        .set("elems", harness::SHARD_SWEEP_ELEMS)
+                        .set("steps", harness::SHARD_SWEEP_STEPS)
+                        .set("reqs_per_device", harness::SHARD_SWEEP_REQS_PER_DEVICE)
+                        .set("sweep", Json::Arr(shard_sweep))
+                        .set("top_devices", top_shard_devices)
+                        .set("top_shards", top_shard_count)
+                        .set("speedup_at_top", top_shard_speedup)
+                        .set("workers", workers)
+                        .set("gate_enforced", shard_gate_enforced),
+                ),
         )
         .set(
             "fleet_hetero",

@@ -469,6 +469,48 @@ impl FleetMetrics {
         self.class_entry(class).degraded += 1;
     }
 
+    /// Fold another partial roll-up into this one. The sharded
+    /// scheduler builds one `FleetMetrics` partial per shard (that
+    /// shard's device snapshots and event counts) plus a fleet-level
+    /// root partial (global-order histogram folds, makespan, classes),
+    /// then merges root ← shard 0 ← shard 1 ← … — device vectors
+    /// concatenate in shard order (= device-id order, since shards own
+    /// contiguous ascending ranges), histograms and counters merge
+    /// associatively, so the result is identical for every shard count.
+    ///
+    /// `bit_width` and `makespan_s` are window-level values, not sums:
+    /// the first non-zero width wins and makespans take the max, so a
+    /// device-only partial (width 0, makespan 0.0) never clobbers the
+    /// root's.
+    pub fn merge(&mut self, other: FleetMetrics) {
+        self.devices.extend(other.devices);
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
+        self.makespan_s = self.makespan_s.max(other.makespan_s);
+        self.samples_completed += other.samples_completed;
+        self.rejected += other.rejected;
+        if self.bit_width == 0 {
+            self.bit_width = other.bit_width;
+        }
+        self.sched_events += other.sched_events;
+        self.good_completions += other.good_completions;
+        self.shed_unattributed += other.shed_unattributed;
+        for c in other.classes {
+            let entry = self.class_entry(c.class);
+            entry.latency.merge(&c.latency);
+            entry.tracked += c.tracked;
+            entry.attained += c.attained;
+            entry.shed += c.shed;
+            entry.shed_tracked += c.shed_tracked;
+            entry.interrupted += c.interrupted;
+            entry.migrated += c.migrated;
+            entry.retried += c.retried;
+            entry.lost += c.lost;
+            entry.retries += c.retries;
+            entry.degraded += c.degraded;
+        }
+    }
+
     /// Total in-flight samples interrupted by device faults.
     pub fn interrupted(&self) -> u64 {
         self.devices.iter().map(|d| d.interrupted).sum()
@@ -756,6 +798,75 @@ mod tests {
         m.record_completion(1.0, 0.25, 0, None, 0);
         m.record_completion(3.0, 0.75, 0, None, 1);
         m
+    }
+
+    #[test]
+    fn merge_reassembles_sharded_partials_bit_identically() {
+        // Build the monolithic roll-up, then the same run split the way
+        // the sharded scheduler splits it: a fleet-level root partial
+        // (empty device vec, all global-order folds) plus one
+        // device-slice partial per shard. Merging in shard order must
+        // reproduce the monolith exactly (PartialEq covers every
+        // histogram bucket and counter).
+        let completions: [(f64, f64, u8, Option<bool>, usize); 4] = [
+            (1.0, 0.25, 0, None, 0),
+            (3.0, 0.75, 1, Some(true), 1),
+            (0.5, 0.1, 0, Some(false), 0),
+            (2.0, 0.5, 1, None, 1),
+        ];
+        let mut whole = FleetMetrics {
+            devices: vec![dm(0, 1.0, 8.0, 1_000_000_000), dm(1, 3.0, 8.0, 3_000_000_000)],
+            makespan_s: 4.0,
+            bit_width: 8,
+            rejected: 3,
+            sched_events: 40,
+            shed_unattributed: 1,
+            ..Default::default()
+        };
+        for &(lat, q, class, met, dev) in &completions {
+            whole.record_completion(lat, q, class, met, dev);
+        }
+        whole.record_shed(1, true);
+        whole.record_retry(0);
+        whole.record_degrade(1);
+
+        let mut root = FleetMetrics {
+            makespan_s: 4.0,
+            bit_width: 8,
+            rejected: 3,
+            sched_events: 30, // global events; shard partials carry the rest
+            shed_unattributed: 1,
+            ..Default::default()
+        };
+        for &(lat, q, class, met, dev) in &completions {
+            // Out-of-range device on the empty vec: fleet-level fold only.
+            root.record_completion(lat, q, class, met, dev);
+        }
+        root.record_shed(1, true);
+        root.record_retry(0);
+        root.record_degrade(1);
+        let mut shards = [
+            FleetMetrics {
+                devices: vec![dm(0, 1.0, 8.0, 1_000_000_000)],
+                sched_events: 6,
+                ..Default::default()
+            },
+            FleetMetrics {
+                devices: vec![dm(1, 3.0, 8.0, 3_000_000_000)],
+                sched_events: 4,
+                ..Default::default()
+            },
+        ];
+        for &(lat, q, _, _, dev) in &completions {
+            let d = &mut shards[dev].devices[0];
+            d.latency.record(lat);
+            d.queue.record(q);
+        }
+        let [s0, s1] = shards;
+        root.merge(s0);
+        root.merge(s1);
+        assert_eq!(root, whole, "sharded merge must be bit-identical");
+        assert_eq!(root.to_json().to_string_compact(), whole.to_json().to_string_compact());
     }
 
     #[test]

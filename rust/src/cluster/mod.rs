@@ -34,14 +34,22 @@
 //!   ranks by estimated **time-to-drain** (occupancy × per-device step
 //!   latency), so a mixed big/small fleet loads dies in proportion to
 //!   their speed.
-//! * [`scheduler`] — the heap-based discrete-event core (O(log N) per
-//!   event: completion heap, router index, dirty-set kicks, zero-alloc
-//!   fused-step buffers) over [`crate::util::threadpool`].
+//! * [`scheduler`] — the sharded discrete-event core (O(log N) per
+//!   event: per-shard 4-ary completion heaps, router index, dirty-set
+//!   kicks, arena slot storage, deferred parallel step flush) over
+//!   [`crate::util::threadpool`].
+//! * [`shard`] — the fleet partition ([`ShardMap`]) and the 4-ary event
+//!   heap; [`arena`] — generation-checked slab storage for in-flight
+//!   request slots.
 //! * [`reference`] — the retained O(events × devices) loop, the
-//!   bit-identity oracle and scaling baseline for the event core.
+//!   bit-identity oracle and scaling baseline for the event core;
+//!   [`scheduler_legacy`] — the frozen pre-shard heap core
+//!   ([`LegacyStepScheduler`]), the bit-identity witness and perf
+//!   baseline the shard benches compare against.
 //! * [`metrics`] — per-device, per-profile and fleet p50/p99 latency,
 //!   EPB and GOPS roll-ups reusing [`crate::util::stats`].
 
+pub mod arena;
 pub mod device;
 pub mod faults;
 pub mod load;
@@ -50,6 +58,8 @@ pub mod profile;
 pub mod reference;
 pub mod router;
 pub mod scheduler;
+pub mod scheduler_legacy;
+pub mod shard;
 pub mod trace;
 
 pub use device::{Device, DeviceId, ReuseSchedule};
@@ -65,6 +75,8 @@ pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
 pub use scheduler::{
     ClusterOutcome, ClusterRequest, ClusterResult, SimExecutor, StepExecutor, StepScheduler,
 };
+pub use scheduler_legacy::LegacyStepScheduler;
+pub use shard::ShardMap;
 pub use trace::{TraceEvent, TraceSink};
 
 use std::sync::Arc;
@@ -165,6 +177,13 @@ pub struct ClusterConfig {
     /// steps, fully shallow reuse) before the fleet sheds. `None` (the
     /// default) never degrades.
     pub brownout: Option<load::BrownoutConfig>,
+    /// Event-core shards ([`ShardMap`]): contiguous device ranges, each
+    /// with its own completion heap, metrics partial and parallel
+    /// step-flush worker. Results are bit-identical at every shard
+    /// count; `1` (the default) is the single-threaded pre-shard core.
+    /// Must be `1..=device_count()` — [`Cluster::new`] errors loudly on
+    /// a split that would leave a shard empty.
+    pub shards: usize,
 }
 
 impl Default for ClusterConfig {
@@ -181,6 +200,7 @@ impl Default for ClusterConfig {
             migration: true,
             hedge: None,
             brownout: None,
+            shards: 1,
         }
     }
 }
@@ -339,6 +359,14 @@ impl ClusterConfig {
         self.brownout = Some(config);
         self
     }
+
+    /// Partition the event core into `shards` (see
+    /// [`ClusterConfig::shards`]). Validated against the device count
+    /// at fleet construction.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
 }
 
 /// Process-wide per-bit-width cost caches for non-paper datapaths (a
@@ -412,6 +440,10 @@ impl Cluster {
         elems: usize,
     ) -> crate::Result<Self> {
         let step_costs = profile_step_costs(&config)?;
+        // Validate the shard split here (Result), not in the scheduler
+        // constructor (panic): `--shards 9` on an 8-device fleet must be
+        // a loud CLI error, never an empty shard.
+        ShardMap::new(config.device_count(), config.shards)?;
         Ok(Self {
             scheduler: StepScheduler::new(&config, &step_costs, schedule, elems),
             config,

@@ -236,6 +236,11 @@ impl ReferenceScheduler {
         self.pending_recover.iter_mut().for_each(|p| *p = None);
         if let Some(sink) = &mut self.trace {
             sink.clear();
+            // The oracle is the 1-shard layout: every event serializes
+            // with shard 0, byte-identical to the sharded core's
+            // single-shard assignment.
+            let devices = self.devices.len();
+            sink.set_shard_map(vec![0; devices]);
         }
         let mut results: Vec<ClusterResult> = Vec::new();
         let mut rejected: Vec<RequestId> = Vec::new();

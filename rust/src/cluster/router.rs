@@ -227,9 +227,20 @@ pub fn min_drain_device(loads: &[DeviceLoad]) -> Option<usize> {
 pub struct RouterIndex {
     policy: ShardPolicy,
     rr_next: usize,
-    /// Per-device occupancy (the authoritative mirror of the scheduler's
-    /// `resident`/`queued` lengths).
-    loads: Vec<DeviceLoad>,
+    // Per-device occupancy mirror (authoritative copy of the
+    // scheduler's `resident`/`queued` lengths), stored
+    // structure-of-arrays: the O(N) passes over this state — the
+    // shed-attribution `min_drain` scan and the blank-snapshot rebuild
+    // — touch one or two fields per device, so column vectors keep
+    // them on a handful of cache lines instead of striding through
+    // ~50-byte `DeviceLoad` rows. Point lookups reassemble a
+    // [`DeviceLoad`] value via `load`.
+    resident: Vec<usize>,
+    queued: Vec<usize>,
+    capacity: Vec<usize>,
+    max_queue: Vec<usize>,
+    drain_ns: Vec<u64>,
+    excluded: Vec<bool>,
     busy: Vec<bool>,
     /// `(drain cost, id)` over **non-full** devices; `first()` is the
     /// least-loaded pick (ties → lowest id, matching [`least_loaded`]).
@@ -253,20 +264,19 @@ impl RouterIndex {
         let mut idx = Self {
             policy,
             rr_next: 0,
+            resident: Vec::new(),
+            queued: Vec::new(),
+            capacity: Vec::new(),
+            max_queue: Vec::new(),
+            drain_ns: Vec::new(),
+            excluded: Vec::new(),
             busy: vec![false; loads.len()],
             by_load: BTreeSet::new(),
             nonfull: BTreeSet::new(),
             donors: BTreeSet::new(),
             home: FxMap::default(),
-            loads,
         };
-        for d in 0..idx.loads.len() {
-            let l = idx.loads[d];
-            if !l.is_full() {
-                idx.by_load.insert((l.drain_cost(), d));
-                idx.nonfull.insert(d);
-            }
-        }
+        idx.fill_columns(&loads);
         idx
     }
 
@@ -279,13 +289,21 @@ impl RouterIndex {
     /// cursor and the affinity home map) — matching the stateless
     /// [`Router`], whose rotation persists across windows.
     pub fn reset_occupancy(&mut self, loads: Vec<DeviceLoad>) {
-        self.loads = loads;
-        self.busy = vec![false; self.loads.len()];
+        self.busy = vec![false; loads.len()];
         self.by_load.clear();
         self.nonfull.clear();
         self.donors.clear();
-        for d in 0..self.loads.len() {
-            let l = self.loads[d];
+        self.fill_columns(&loads);
+    }
+
+    fn fill_columns(&mut self, loads: &[DeviceLoad]) {
+        self.resident = loads.iter().map(|l| l.resident).collect();
+        self.queued = loads.iter().map(|l| l.queued).collect();
+        self.capacity = loads.iter().map(|l| l.capacity).collect();
+        self.max_queue = loads.iter().map(|l| l.max_queue).collect();
+        self.drain_ns = loads.iter().map(|l| l.drain_ns).collect();
+        self.excluded = loads.iter().map(|l| l.excluded).collect();
+        for (d, l) in loads.iter().enumerate() {
             if !l.is_full() {
                 self.by_load.insert((l.drain_cost(), d));
                 self.nonfull.insert(d);
@@ -293,19 +311,62 @@ impl RouterIndex {
         }
     }
 
-    /// Current occupancy of one device.
-    pub fn load(&self, device: usize) -> DeviceLoad {
-        self.loads[device]
+    fn device_count(&self) -> usize {
+        self.resident.len()
     }
 
-    /// The full occupancy mirror (what a from-scratch snapshot would be).
-    pub fn loads(&self) -> &[DeviceLoad] {
-        &self.loads
+    /// Write one device's row back into the columns.
+    fn store(&mut self, device: usize, l: DeviceLoad) {
+        self.resident[device] = l.resident;
+        self.queued[device] = l.queued;
+        self.capacity[device] = l.capacity;
+        self.max_queue[device] = l.max_queue;
+        self.drain_ns[device] = l.drain_ns;
+        self.excluded[device] = l.excluded;
+    }
+
+    /// Current occupancy of one device, reassembled from the columns.
+    pub fn load(&self, device: usize) -> DeviceLoad {
+        DeviceLoad {
+            resident: self.resident[device],
+            queued: self.queued[device],
+            capacity: self.capacity[device],
+            max_queue: self.max_queue[device],
+            drain_ns: self.drain_ns[device],
+            excluded: self.excluded[device],
+        }
+    }
+
+    /// A from-scratch row-major snapshot of the occupancy mirror.
+    /// O(N) assembly — for tests and cold paths; hot paths use
+    /// [`RouterIndex::load`] or the column scans directly.
+    pub fn snapshot(&self) -> Vec<DeviceLoad> {
+        (0..self.device_count()).map(|d| self.load(d)).collect()
+    }
+
+    /// The device closest to draining over all **up** devices, full ones
+    /// included (ties → lowest id) — shed attribution, column-scan
+    /// equivalent of [`min_drain_device`] over a snapshot. The scan
+    /// touches three columns (occupancy, weight, excluded flag) instead
+    /// of full `DeviceLoad` rows.
+    pub fn min_drain(&self) -> Option<usize> {
+        let mut best: Option<(u128, usize)> = None;
+        for d in 0..self.device_count() {
+            if self.excluded[d] {
+                continue;
+            }
+            let cost = (self.resident[d] + self.queued[d]) as u128
+                * self.drain_ns[d].max(1) as u128;
+            if best.map_or(true, |b| (cost, d) < b) {
+                best = Some((cost, d));
+            }
+        }
+        best.map(|(_, d)| d)
     }
 
     /// Report a device's new `resident`/`queued` occupancy. O(log N).
     pub fn set_counts(&mut self, device: usize, resident: usize, queued: usize) {
-        let old = self.loads[device];
+        let old = self.load(device);
         let new = DeviceLoad { resident, queued, ..old };
         if !old.is_full() {
             self.by_load.remove(&(old.drain_cost(), device));
@@ -321,7 +382,7 @@ impl RouterIndex {
                 self.donors.insert((new.queued_cost(), Reverse(device)));
             }
         }
-        self.loads[device] = new;
+        self.store(device, new);
     }
 
     /// Mark a device down (`true`: crashed or recalibrating) or back up
@@ -329,7 +390,7 @@ impl RouterIndex {
     /// routing, round-robin rotation, least-loaded, affinity, stealing
     /// and shed attribution all skip it. O(log N).
     pub fn set_excluded(&mut self, device: usize, excluded: bool) {
-        let old = self.loads[device];
+        let old = self.load(device);
         if old.excluded == excluded {
             return;
         }
@@ -349,7 +410,7 @@ impl RouterIndex {
         } else if self.busy[device] && new.queued > 0 {
             self.donors.insert((new.queued_cost(), Reverse(device)));
         }
-        self.loads[device] = new;
+        self.store(device, new);
     }
 
     /// Re-key a device after its drain weight changed (straggler onset:
@@ -357,7 +418,7 @@ impl RouterIndex {
     /// cost-aware scheduler calls this — occupancy-only fleets keep
     /// every weight at 1. O(log N).
     pub fn set_drain(&mut self, device: usize, drain_ns: u64) {
-        let old = self.loads[device];
+        let old = self.load(device);
         if old.drain_ns == drain_ns {
             return;
         }
@@ -370,14 +431,14 @@ impl RouterIndex {
             self.donors.remove(&(old.queued_cost(), Reverse(device)));
             self.donors.insert((new.queued_cost(), Reverse(device)));
         }
-        self.loads[device] = new;
+        self.store(device, new);
     }
 
     /// Report a device starting (`true`) or finishing (`false`) a fused
     /// step. Only busy devices are eligible work-stealing donors (their
     /// queued work is guaranteed to wait at least one full step).
     pub fn set_busy(&mut self, device: usize, busy: bool) {
-        let l = self.loads[device];
+        let l = self.load(device);
         if busy && !self.busy[device] {
             if l.queued > 0 && !l.excluded {
                 self.donors.insert((l.queued_cost(), Reverse(device)));
@@ -410,14 +471,14 @@ impl RouterIndex {
                     .or_else(|| self.nonfull.iter().next())
                     .copied()
                     .expect("nonfull checked non-empty");
-                self.rr_next = (i + 1) % self.loads.len();
+                self.rr_next = (i + 1) % self.device_count();
                 i
             }
             ShardPolicy::LeastLoaded => {
                 self.by_load.iter().next().expect("nonfull checked non-empty").1
             }
             ShardPolicy::Affinity => {
-                let n = self.loads.len();
+                let n = self.device_count();
                 let home = *self
                     .home
                     .entry(sampler)
@@ -425,8 +486,8 @@ impl RouterIndex {
                 // Stay home while the home device has free batch slots;
                 // spill to least-loaded once they're saturated (same rule
                 // as the stateless router). A down home spills too.
-                if !self.loads[home].excluded
-                    && self.loads[home].total() < self.loads[home].capacity
+                if !self.excluded[home]
+                    && self.resident[home] + self.queued[home] < self.capacity[home]
                 {
                     home
                 } else {
@@ -665,7 +726,8 @@ mod tests {
                         index.set_drain(d, w);
                     }
                 }
-                assert_eq!(index.loads(), &shadow[..], "occupancy mirror diverged");
+                assert_eq!(index.snapshot(), shadow, "occupancy mirror diverged");
+                assert_eq!(index.min_drain(), min_drain_device(&shadow), "min-drain scan diverged");
                 let donor_scan = (0..n)
                     .filter(|&j| busy[j] && shadow[j].queued > 0 && !shadow[j].excluded)
                     .max_by_key(|&j| (shadow[j].queued_cost(), std::cmp::Reverse(j)));
@@ -767,7 +829,14 @@ mod tests {
 
     #[test]
     fn index_backpressure_and_reopen() {
-        let full = DeviceLoad { resident: 1, queued: 1, capacity: 1, max_queue: 1, drain_ns: 1 };
+        let full = DeviceLoad {
+            resident: 1,
+            queued: 1,
+            capacity: 1,
+            max_queue: 1,
+            drain_ns: 1,
+            excluded: false,
+        };
         let mut idx = RouterIndex::new(ShardPolicy::LeastLoaded, vec![full; 2]);
         assert_eq!(idx.route(SamplerKind::Ddpm), None, "all-full must shed");
         // A completion reopens the fleet.

@@ -1,0 +1,1429 @@
+//! Retained pre-shard `StepScheduler` baseline (frozen copy).
+//!
+//! This is the single-heap, row-major (`Vec<Slot>`-queue) event core
+//! exactly as it stood before the sharded event core and arena data
+//! layout landed in [`super::scheduler`]: one global `BinaryHeap` of
+//! events, per-device `Vec<Slot>` residency and `VecDeque<Slot>`
+//! admission queues that move whole slots, and a fully synchronous
+//! fused-step path on the caller thread (chunked pool fan-out for large
+//! batches only).
+//!
+//! It exists for two jobs:
+//!
+//! * **Bit-identity witness.** Randomized parity suites run identical
+//!   workloads through this baseline and the current core (at every
+//!   shard count) and assert identical outcomes, metrics JSON and
+//!   traces — the strongest possible regression oracle for the layout
+//!   and sharding rewrite.
+//! * **Performance baseline.** The `fleet_scale` bench times this core
+//!   against the arena/4-ary rewrite to enforce the layout speedup
+//!   floor, so "faster" is measured against the real predecessor, not
+//!   a remembered number.
+//!
+//! Shared vocabulary types ([`ClusterRequest`], [`Slot`],
+//! [`StepExecutor`], ...) are imported from [`super::scheduler`] — only
+//! the scheduling core itself is duplicated here. Do not evolve this
+//! file except to keep it compiling against shared-type changes.
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
+use std::sync::Arc;
+
+use crate::coordinator::request::{RequestId, SamplerKind};
+use crate::runtime::manifest::NoiseSchedule;
+use crate::util::fxhash::FxMap;
+use crate::util::histogram::LogHistogram;
+use crate::util::rng::XorShift;
+use crate::util::threadpool::ThreadPool;
+
+use super::device::{Device, DeviceId};
+use super::faults::{FaultEvent, FaultKind};
+use super::load::RequestSource;
+use super::metrics::{DeviceMetrics, FleetMetrics, MigrateOutcome};
+use super::router::RouterIndex;
+use super::trace::{emit, TraceEvent, TraceFault, TraceSink};
+use super::{ClusterConfig, HedgePolicy, HEDGE_MIN_SAMPLES};
+
+use super::scheduler::{
+    blank_loads, effective_kind, zero_step_result, BrownoutCtl, ClusterOutcome, ClusterRequest,
+    ClusterResult, HedgeTwin, Slot, SlotSampler, StepExecutor,
+};
+
+/// What a scheduler event is: a planned device fault, an outage
+/// recovery, the source's next request arrival, or a device step
+/// completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// Planned fault `seq` (index into the sorted fault plan) fires.
+    /// Orders before everything else at the same instant: a device
+    /// that crashes at exactly an arrival's timestamp is already
+    /// unroutable for that arrival.
+    Fault { seq: usize },
+    /// Device `device` finishes its recalibration outage and rejoins
+    /// the fleet — before arrivals at the same instant, so a request
+    /// landing exactly at recovery can route onto the recovered die.
+    Recover { device: usize },
+    /// The next arrival scheduled from the request source. Orders
+    /// *before* completions at the same instant — a request landing
+    /// exactly on a step boundary is admissible in the very next step
+    /// (the tie rule the pre-refactor peek loop implemented).
+    Arrival,
+    /// Device `device` finishes its in-flight fused step.
+    Completion { device: usize },
+}
+
+impl EventKind {
+    /// `(kind rank, tiebreak)` — faults (in plan order), then
+    /// recoveries and completions in device-id order, arrivals in
+    /// between (deterministic, matching the reference loop's scan).
+    fn rank(self) -> (u8, usize) {
+        match self {
+            EventKind::Fault { seq } => (0, seq),
+            EventKind::Recover { device } => (1, device),
+            EventKind::Arrival => (2, 0),
+            EventKind::Completion { device } => (3, device),
+        }
+    }
+}
+
+/// A discrete event, min-ordered by `(time, kind, device)`.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time_s: f64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_s.total_cmp(&other.time_s).then(self.kind.rank().cmp(&other.kind.rank()))
+    }
+}
+
+/// Fused batches at least this large (in total f32 elements) fan their
+/// per-row sampler updates out over the thread pool; smaller ones run
+/// inline — the pooled path's queue/wakeup overhead would dominate.
+const PARALLEL_ROWS_MIN_ELEMS: usize = 4096;
+
+/// The fleet scheduler: devices + router index + discrete-event state.
+pub struct LegacyStepScheduler {
+    devices: Vec<Device>,
+    index: RouterIndex,
+    pool: ThreadPool,
+    schedule: NoiseSchedule,
+    elems: usize,
+    /// Weight router loads by per-device drain cost (see
+    /// [`ClusterConfig::cost_aware`]).
+    cost_aware: bool,
+    resident: Vec<Vec<Slot>>,
+    queued: Vec<VecDeque<Slot>>,
+    /// Fleet-level deferral queue (bounded by `max_backlog`): requests
+    /// that found every device full, re-routed at step boundaries.
+    backlog: VecDeque<Slot>,
+    max_backlog: usize,
+    /// One shared sampler per signature seen, so admission clones an
+    /// `Arc` instead of deep-copying the T-length schedule tables.
+    sampler_cache: FxMap<SamplerKind, SlotSampler>,
+    /// Work stealing: an idle, empty device pulls queued requests from
+    /// the most-loaded busy device at step boundaries.
+    work_stealing: bool,
+    /// SLO admission control: shed requests whose estimated completion
+    /// misses their deadline instead of enqueueing doomed work.
+    shed_late: bool,
+    /// `(class, carried a deadline)` per shed request this window, in
+    /// shed order — folded into the per-class metrics at the end.
+    shed_log: Vec<(u8, bool)>,
+    /// Re-admit fault victims (step-boundary checkpoint + re-route);
+    /// off, every victim of a down device is lost.
+    migration: bool,
+    /// The seeded fault plan, sorted by time and pre-filtered to
+    /// devices this fleet actually has (both cores consume the same
+    /// filtered list, so event counts stay in lockstep).
+    faults: Vec<FaultEvent>,
+    /// A crash/outage that fired while the device was mid-step: latents
+    /// are only checkpointable between UNet calls, so the fault takes
+    /// effect at the step boundary (inside `complete`).
+    pending_down: Vec<Option<FaultKind>>,
+    /// `(class, was in flight, outcome)` per fault victim this window,
+    /// in migration order — folded into per-class metrics at the end.
+    migrate_log: Vec<(u8, bool, MigrateOutcome)>,
+    /// Sheds with no up device to charge (total outage) this window.
+    shed_unattributed: u64,
+    // --- resilience tier ---
+    /// Hedged-request policy ([`ClusterConfig::hedge`]); `None` = off.
+    hedge: Option<HedgePolicy>,
+    /// Live hedge book-keeping, keyed by request id.
+    hedges: FxMap<u64, HedgeTwin>,
+    /// Completion latencies this window, feeding the quantile-derived
+    /// hedge threshold ([`HedgePolicy::Quantile`]).
+    hedge_latency: LogHistogram,
+    /// Brownout controller; `None` = admission never degrades.
+    brownout: Option<BrownoutCtl>,
+    /// Class per client-tier retry this window, in resubmission order —
+    /// folded into per-class metrics at the end.
+    retry_log: Vec<u8>,
+    /// Class per degraded admission this window, in admission order.
+    degrade_log: Vec<u8>,
+    // --- discrete-event core ---
+    /// Pending events (arrival + step completions), min-first.
+    events: BinaryHeap<Reverse<Event>>,
+    /// Time of the live arrival event in the heap, if any. A source may
+    /// schedule an *earlier* arrival after a completion (closed-loop
+    /// feedback); the superseded event stays in the heap and is skipped
+    /// when popped (lazy deletion keyed on this time).
+    arrival_scheduled: Option<f64>,
+    /// Devices whose occupancy/busy state changed since the last kick.
+    dirty: BTreeSet<usize>,
+    /// Idle devices with nothing resident or queued — the only possible
+    /// work-stealing thieves, visited at every kick when stealing is on.
+    idle_empty: BTreeSet<usize>,
+    /// Scratch for the kick sweep's visit list (reused across events).
+    kick_scratch: Vec<usize>,
+    /// Events processed in the current serve window (arrival bursts +
+    /// step completions), for the scheduler-throughput benches.
+    events_processed: u64,
+    // --- reusable fused-step buffers (the event loop is single-threaded,
+    // so one set serves every device) ---
+    x_buf: Vec<f32>,
+    t_buf: Vec<f32>,
+    eps_buf: Vec<f32>,
+    retire_scratch: Vec<Slot>,
+    /// Opt-in flight recorder: when installed, every lifecycle decision
+    /// is buffered as a [`TraceEvent`] (a plain `Vec` push — JSON-lines
+    /// formatting happens post-serve, off the hot path).
+    trace: Option<TraceSink>,
+}
+
+impl LegacyStepScheduler {
+    /// Build the fleet from `config`'s spec: one device per `(profile,
+    /// count)` entry expansion, each priced at its group's `step_costs`
+    /// entry for one single-sample denoise step ([`ClusterConfig`]
+    /// callers get those from [`super::profile_step_costs`]; tests and
+    /// benches pass synthetic costs).
+    pub fn new(
+        config: &ClusterConfig,
+        step_costs: &[crate::arch::cost::Cost],
+        schedule: NoiseSchedule,
+        elems: usize,
+    ) -> Self {
+        assert_eq!(
+            step_costs.len(),
+            config.fleet.len(),
+            "need one step cost per fleet profile group"
+        );
+        assert!(config.device_count() >= 1, "cluster needs at least one device");
+        let devices: Vec<Device> = config
+            .device_profiles()
+            .enumerate()
+            .map(|(i, (pi, profile))| Device::from_profile(i, pi, profile, step_costs[pi]))
+            .collect();
+        let index =
+            RouterIndex::new(config.policy, blank_loads(&devices, config.cost_aware));
+        let faults: Vec<FaultEvent> = config
+            .faults
+            .sorted()
+            .into_iter()
+            .filter(|f| f.device < devices.len())
+            .collect();
+        Self {
+            resident: vec![Vec::new(); devices.len()],
+            queued: vec![VecDeque::new(); devices.len()],
+            idle_empty: (0..devices.len()).collect(),
+            cost_aware: config.cost_aware,
+            migration: config.migration,
+            pending_down: vec![None; devices.len()],
+            faults,
+            devices,
+            index,
+            // Row fan-out is a host-side workload: size the pool to the
+            // machine, not to the simulated device count.
+            pool: ThreadPool::default_size(),
+            schedule,
+            elems,
+            backlog: VecDeque::new(),
+            max_backlog: config.max_backlog,
+            sampler_cache: FxMap::default(),
+            work_stealing: config.work_stealing,
+            shed_late: config.shed_late,
+            shed_log: Vec::new(),
+            migrate_log: Vec::new(),
+            shed_unattributed: 0,
+            hedge: config.hedge,
+            hedges: FxMap::default(),
+            hedge_latency: LogHistogram::new(),
+            brownout: config.brownout.map(BrownoutCtl::new),
+            retry_log: Vec::new(),
+            degrade_log: Vec::new(),
+            events: BinaryHeap::new(),
+            arrival_scheduled: None,
+            dirty: BTreeSet::new(),
+            kick_scratch: Vec::new(),
+            events_processed: 0,
+            x_buf: Vec::new(),
+            t_buf: Vec::new(),
+            eps_buf: Vec::new(),
+            retire_scratch: Vec::new(),
+            trace: None,
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Install a flight recorder; subsequent serve windows record into
+    /// it (cleared at each window start).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
+
+    /// Detach the flight recorder (with everything it captured).
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.trace.take()
+    }
+
+    /// Serve a materialized workload to completion. Requests may arrive
+    /// in any order; they replay by simulated arrival time. Thin wrapper
+    /// over [`LegacyStepScheduler::serve_source`] with a replay source —
+    /// bit-identical to the pre-live-arrival scheduler.
+    pub fn serve(
+        &mut self,
+        requests: Vec<ClusterRequest>,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
+        self.serve_source(RequestSource::replay(requests), executor)
+    }
+
+    /// Serve a live arrival stream to completion: the event loop pulls
+    /// arrivals from `source` as simulated time advances and reports
+    /// completions/sheds back to it (closed-loop clients schedule their
+    /// next submission from that feedback).
+    pub fn serve_source(
+        &mut self,
+        mut source: RequestSource,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<ClusterOutcome> {
+        // Each serve call is one accounting window; reset the event core
+        // too (a drained fleet leaves it empty, but be defensive).
+        for d in &mut self.devices {
+            d.reset_accounting();
+        }
+        self.events.clear();
+        self.arrival_scheduled = None;
+        self.dirty.clear();
+        self.idle_empty = (0..self.devices.len()).collect();
+        // Occupancy resets per window; the round-robin cursor and the
+        // affinity home map persist (the stateless router does too).
+        self.index
+            .reset_occupancy(blank_loads(&self.devices, self.cost_aware));
+        self.events_processed = 0;
+        self.shed_log.clear();
+        self.migrate_log.clear();
+        self.shed_unattributed = 0;
+        self.retry_log.clear();
+        self.degrade_log.clear();
+        self.hedges.clear();
+        self.hedge_latency = LogHistogram::new();
+        if let Some(b) = &mut self.brownout {
+            b.reset();
+        }
+        self.pending_down.iter_mut().for_each(|p| *p = None);
+        if let Some(sink) = &mut self.trace {
+            sink.clear();
+            // Pre-shard layout = one shard: serialize every event with
+            // shard 0, byte-identical to the sharded core at 1 shard.
+            let devices = self.devices.len();
+            sink.set_shard_map(vec![0; devices]);
+        }
+        // The fault plan re-injects every window: `reset_accounting`
+        // healed the fleet, so each serve sees the same churn.
+        for (seq, f) in self.faults.iter().enumerate() {
+            self.events
+                .push(Reverse(Event { time_s: f.time_s, kind: EventKind::Fault { seq } }));
+        }
+
+        let mut results: Vec<ClusterResult> = Vec::new();
+        let mut rejected: Vec<RequestId> = Vec::new();
+        let mut first_arrival_s: Option<f64> = None;
+
+        self.schedule_arrival(&source);
+        while let Some(Reverse(ev)) = self.events.peek().copied() {
+            match ev.kind {
+                EventKind::Arrival => {
+                    self.events.pop();
+                    // Lazy deletion: only the currently scheduled arrival
+                    // is live; a source that moved its next arrival
+                    // earlier (closed-loop feedback) left this one stale.
+                    if source.peek() != Some(ev.time_s) {
+                        continue;
+                    }
+                    let at = ev.time_s;
+                    first_arrival_s.get_or_insert(at);
+                    // Drain the whole same-instant burst before starting
+                    // any device, so simultaneous requests can share a
+                    // first step. A zero-think closed-loop client whose
+                    // request completes (or sheds) at admission re-enters
+                    // this same burst.
+                    while source.peek() == Some(at) {
+                        let req = source.pop();
+                        self.admit(req, &mut source, &mut rejected, &mut results);
+                    }
+                    self.arrival_scheduled = None;
+                    self.schedule_arrival(&source);
+                    self.kick(at, executor)?;
+                    self.events_processed += 1;
+                }
+                EventKind::Completion { device } => {
+                    self.events.pop();
+                    self.complete(
+                        device,
+                        ev.time_s,
+                        executor,
+                        &mut source,
+                        &mut results,
+                        &mut rejected,
+                    )?;
+                    self.events_processed += 1;
+                    // Completion feedback may have scheduled an arrival
+                    // earlier than the one in the heap.
+                    self.schedule_arrival(&source);
+                }
+                EventKind::Fault { seq } => {
+                    self.events.pop();
+                    self.handle_fault(seq, ev.time_s, executor, &mut source, &mut rejected)?;
+                    self.events_processed += 1;
+                    // A lost victim feeds back to closed-loop clients
+                    // like a shed: the next submission may be earlier
+                    // than the scheduled arrival.
+                    self.schedule_arrival(&source);
+                }
+                EventKind::Recover { device } => {
+                    self.events.pop();
+                    self.handle_recover(device, ev.time_s, executor, &mut source, &mut rejected)?;
+                    self.events_processed += 1;
+                    self.schedule_arrival(&source);
+                }
+            }
+        }
+
+        // Anything still deferred when all devices drained is undeliverable
+        // (can only happen with a backlog bound tighter than the fleet).
+        // Still a terminal outcome: closed-loop clients get their
+        // completion feedback — without it they wedge, waiting forever
+        // on a request that already left the system — but the window is
+        // over, so no retry fires and nothing re-enters the loop.
+        while let Some(slot) = self.backlog.pop_front() {
+            self.attribute_shed(slot.req.arrival_s, None, &slot.req);
+            source.on_done(slot.req.id, slot.req.arrival_s);
+            rejected.push(slot.req.id);
+        }
+
+        // Makespan spans the active serving window (first arrival → last
+        // completion), not absolute simulated time zero.
+        let first_arrival_s = first_arrival_s.unwrap_or(0.0);
+        let last_finish_s = results.iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        // Devices still down accrue downtime to the end of the window
+        // (before the snapshot copies the counters).
+        for d in &mut self.devices {
+            d.finalize_downtime(last_finish_s);
+        }
+        let mut metrics = FleetMetrics {
+            devices: self.devices.iter().map(DeviceMetrics::snapshot).collect(),
+            makespan_s: (last_finish_s - first_arrival_s).max(0.0),
+            rejected: rejected.len() as u64,
+            bit_width: self.devices.first().map_or(8, |d| d.bit_width),
+            sched_events: self.events_processed,
+            shed_unattributed: self.shed_unattributed,
+            ..Default::default()
+        };
+        results.sort_by(|a, b| a.finish_s.total_cmp(&b.finish_s).then(a.id.cmp(&b.id)));
+        for r in &results {
+            metrics.record_completion(
+                r.latency_s(),
+                r.queue_s(),
+                r.class,
+                r.deadline_met(),
+                r.device.0,
+            );
+        }
+        for &(class, tracked) in &self.shed_log {
+            metrics.record_shed(class, tracked);
+        }
+        for &(class, resident, outcome) in &self.migrate_log {
+            metrics.record_migration(class, resident, outcome);
+        }
+        for &class in &self.retry_log {
+            metrics.record_retry(class);
+        }
+        for &class in &self.degrade_log {
+            metrics.record_degrade(class);
+        }
+        Ok(ClusterOutcome { results, rejected, metrics })
+    }
+
+    /// Keep exactly one live arrival event in the heap: (re)schedule
+    /// whenever the source's next arrival is earlier than the scheduled
+    /// one (or none is scheduled). Superseded events die by lazy
+    /// deletion in the event loop.
+    fn schedule_arrival(&mut self, source: &RequestSource) {
+        if let Some(at) = source.peek() {
+            if self.arrival_scheduled.map_or(true, |t| at < t) {
+                self.events.push(Reverse(Event { time_s: at, kind: EventKind::Arrival }));
+                self.arrival_scheduled = Some(at);
+            }
+        }
+    }
+
+    /// Attribute one shed to a device (for the per-device / per-profile
+    /// roll-ups) and log its class. `routed` is the device the router
+    /// picked for a deadline shed; `None` (every device full, or the
+    /// end-of-window backlog drain) attributes to the *up* device
+    /// closest to draining — the one that would have taken the request
+    /// next. During a total outage there is no such device: the shed
+    /// lands in the fleet-wide unattributed bucket ([`DeviceId::NONE`]
+    /// sentinel, `dev = -1` in the trace) instead of panicking or
+    /// mis-charging a dead die.
+    fn attribute_shed(&mut self, now_s: f64, routed: Option<usize>, req: &ClusterRequest) {
+        let di = routed.or_else(|| self.index.min_drain());
+        match di {
+            Some(d) => self.devices[d].shed += 1,
+            None => self.shed_unattributed += 1,
+        }
+        self.shed_log.push((req.class, req.deadline_s.is_some()));
+        emit(
+            &mut self.trace,
+            TraceEvent::Shed {
+                t: now_s,
+                id: req.id.0,
+                class: req.class,
+                device: di.map_or(-1, |d| d as i64),
+                tracked: req.deadline_s.is_some(),
+            },
+        );
+        // A tracked shed is a missed SLO: feed the brownout controller
+        // so sustained shedding drives the degradation level up.
+        if req.deadline_s.is_some() {
+            if let Some(b) = &mut self.brownout {
+                b.on_tracked(false);
+            }
+        }
+    }
+
+    /// Terminal-failure path with the client retry tier in front: offer
+    /// the failed request back to the source first
+    /// ([`RequestSource::try_retry`]); only when the retry budget
+    /// declines does the shed become final (attributed, fed back,
+    /// rejected). Any hedge book-keeping for the id is dropped either
+    /// way — a resubmission starts a fresh lifecycle.
+    fn shed_or_retry(
+        &mut self,
+        now_s: f64,
+        routed: Option<usize>,
+        req: &ClusterRequest,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        self.forget_hedge(req.id.0);
+        if let Some((attempt, at_s)) = source.try_retry(req, now_s) {
+            self.retry_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: req.id.0, class: req.class, attempt, at_s },
+            );
+            return;
+        }
+        self.attribute_shed(now_s, routed, req);
+        source.on_done(req.id, now_s);
+        rejected.push(req.id);
+    }
+
+    /// Drop the hedge book-keeping for one copy of `id` (no-op when the
+    /// id was never hedged), so a later retry of the same id starts
+    /// clean instead of inheriting a stale twin.
+    fn forget_hedge(&mut self, id: u64) {
+        if let Some(tw) = self.hedges.get_mut(&id) {
+            tw.live = tw.live.saturating_sub(1);
+            if tw.live == 0 {
+                self.hedges.remove(&id);
+            }
+        }
+    }
+
+    /// Fire planned fault `seq` at simulated time `now_s`. Slowdowns
+    /// apply immediately (an in-flight step keeps its already-priced
+    /// completion; subsequent steps run slower). Crashes and outages on
+    /// an idle device apply immediately; on a busy device they defer to
+    /// the step boundary (`pending_down`) — latents are only
+    /// checkpointable between UNet calls. A fault on an already-down
+    /// device is ignored outright.
+    fn handle_fault(
+        &mut self,
+        seq: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        let FaultEvent { device: di, kind, .. } = self.faults[seq];
+        match kind {
+            FaultKind::Slow { factor } => {
+                self.devices[di].apply_slowdown(factor);
+                if self.cost_aware {
+                    self.index.set_drain(di, self.devices[di].drain_ns());
+                }
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Slow { factor } },
+                );
+            }
+            FaultKind::Crash | FaultKind::Outage { .. } => {
+                if self.devices[di].is_down() {
+                    return Ok(());
+                }
+                if self.devices[di].busy_until().is_some() {
+                    // A crash supersedes a pending outage; a second
+                    // outage keeps the first (its MTTR clock).
+                    self.pending_down[di] = match (self.pending_down[di], kind) {
+                        (_, FaultKind::Crash) => Some(FaultKind::Crash),
+                        (None, k) => Some(k),
+                        (prev, _) => prev,
+                    };
+                } else {
+                    self.apply_down(di, now_s, kind, source, rejected);
+                    // Victims may have landed on idle devices (or in
+                    // the backlog behind freed queue space elsewhere).
+                    self.drain_backlog(now_s, source, rejected);
+                    self.kick(now_s, executor)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Take device `di` down *now* (it is guaranteed idle): exclude it
+    /// from every router query, mark it down, emit the trace event,
+    /// schedule recovery (outages only), and migrate its checkpointed
+    /// victims — in-flight samples first (each counts as interrupted),
+    /// then its admission queue, in order.
+    fn apply_down(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        kind: FaultKind,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        // Exclude first: nothing below (migration routing, shed
+        // attribution, stealing) may ever pick the dying device.
+        self.index.set_excluded(di, true);
+        self.devices[di].set_down(now_s, matches!(kind, FaultKind::Crash));
+        self.idle_empty.remove(&di);
+        match kind {
+            FaultKind::Crash => emit(
+                &mut self.trace,
+                TraceEvent::Fault { t: now_s, device: di, fault: TraceFault::Crash },
+            ),
+            FaultKind::Outage { mttr_s } => {
+                let until_s = now_s + mttr_s;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Fault {
+                        t: now_s,
+                        device: di,
+                        fault: TraceFault::Outage { until_s },
+                    },
+                );
+                self.events.push(Reverse(Event {
+                    time_s: until_s,
+                    kind: EventKind::Recover { device: di },
+                }));
+            }
+            FaultKind::Slow { .. } => unreachable!("slowdowns never take a device down"),
+        }
+        let mut victims: Vec<(Slot, bool)> = Vec::new();
+        for slot in self.resident[di].drain(..) {
+            victims.push((slot, true));
+        }
+        while let Some(slot) = self.queued[di].pop_front() {
+            victims.push((slot, false));
+        }
+        self.index.set_counts(di, 0, 0);
+        for (slot, resident) in victims {
+            self.migrate_victim(di, now_s, slot, resident, source, rejected);
+        }
+    }
+
+    /// Re-admit one victim of a fault on `from`. With migration on, the
+    /// victim re-routes through normal admission — deadline-aware
+    /// against its *remaining* steps (the checkpoint kept its progress)
+    /// — or defers to the fleet backlog; otherwise (or when no capacity
+    /// exists and the backlog is full, or the deadline is unmeetable)
+    /// it is lost: shed, reported to the source, and counted.
+    fn migrate_victim(
+        &mut self,
+        from: usize,
+        now_s: f64,
+        slot: Slot,
+        resident: bool,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        let (id, class) = (slot.req.id, slot.req.class);
+        // A victim with a live hedge twin (or whose twin already won)
+        // does not migrate: the other copy carries the request, so this
+        // one just cancels — no interruption, no loss.
+        if self.hedges.get(&id.0).map_or(false, |tw| tw.live >= 2 || tw.done) {
+            let tw = self.hedges.get_mut(&id.0).expect("checked above");
+            tw.live -= 1;
+            if tw.live == 0 {
+                self.hedges.remove(&id.0);
+            }
+            self.devices[from].cancelled += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Cancel {
+                    t: now_s,
+                    id: id.0,
+                    class,
+                    device: from,
+                    steps: slot.step_index as u64,
+                },
+            );
+            return;
+        }
+        // Interrupted-in-flight accounting lands here, not in
+        // `apply_down`: replay reconstructs `interrupted` from Migrate
+        // events alone, and a hedge-cancelled victim (above) emits a
+        // Cancel instead — it was never interrupted, its twin lives on.
+        if resident {
+            self.devices[from].interrupted += 1;
+        }
+        if self.migration {
+            match self.index.route(slot.req.sampler) {
+                Some(did) => {
+                    if !(self.shed_late && self.doomed_at(did.0, &slot, now_s)) {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate {
+                                t: now_s,
+                                id: id.0,
+                                class,
+                                from,
+                                to: did.0 as i64,
+                                resident,
+                            },
+                        );
+                        self.devices[from].migrated += 1;
+                        self.migrate_log.push((class, resident, MigrateOutcome::Migrated));
+                        self.enqueue(now_s, did.0, slot);
+                        return;
+                    }
+                    // Doomed under its remaining work: hand it to the
+                    // client retry tier, else lost — charged to the
+                    // device it would have landed on (as at admit).
+                    self.forget_hedge(id.0);
+                    if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+                        );
+                        self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+                        self.retry_log.push(class);
+                        emit(
+                            &mut self.trace,
+                            TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+                        );
+                        return;
+                    }
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+                    );
+                    self.devices[from].lost += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+                    self.attribute_shed(now_s, Some(did.0), &slot.req);
+                    source.on_done(id, now_s);
+                    rejected.push(id);
+                    return;
+                }
+                None if self.backlog.len() < self.max_backlog => {
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -1, resident },
+                    );
+                    self.devices[from].retried += 1;
+                    self.migrate_log.push((class, resident, MigrateOutcome::Retried));
+                    emit(
+                        &mut self.trace,
+                        TraceEvent::Requeue { t: now_s, id: id.0, class },
+                    );
+                    self.backlog.push_back(slot);
+                    return;
+                }
+                None => {}
+            }
+        }
+        // No capacity (or migration off): the retry tier is the last
+        // line before the victim is lost outright.
+        self.forget_hedge(id.0);
+        if let Some((attempt, at_s)) = source.try_retry(&slot.req, now_s) {
+            emit(
+                &mut self.trace,
+                TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -3, resident },
+            );
+            self.migrate_log.push((class, resident, MigrateOutcome::Resubmitted));
+            self.retry_log.push(class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Retry { t: now_s, id: id.0, class, attempt, at_s },
+            );
+            return;
+        }
+        emit(
+            &mut self.trace,
+            TraceEvent::Migrate { t: now_s, id: id.0, class, from, to: -2, resident },
+        );
+        self.devices[from].lost += 1;
+        self.migrate_log.push((class, resident, MigrateOutcome::Lost));
+        self.attribute_shed(now_s, None, &slot.req);
+        source.on_done(id, now_s);
+        rejected.push(id);
+    }
+
+    /// Device `di` finishes its recalibration outage: rejoin the
+    /// routable fleet and immediately pull deferred work.
+    fn handle_recover(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        self.devices[di].set_recovered(now_s);
+        self.index.set_excluded(di, false);
+        emit(&mut self.trace, TraceEvent::Recover { t: now_s, device: di });
+        self.dirty.insert(di);
+        self.drain_backlog(now_s, source, rejected);
+        self.kick(now_s, executor)
+    }
+
+    /// Route one arriving request into a device queue, defer it to the
+    /// fleet backlog, or shed it. Zero-step requests (`Ddim { steps: 0 }`)
+    /// have no denoise work and complete immediately instead of reaching
+    /// `start_step` with an empty timestep list. Every request that
+    /// leaves the system here (zero-step completion or shed) is reported
+    /// back to the source so closed-loop clients keep cycling.
+    fn admit(
+        &mut self,
+        req: ClusterRequest,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+        results: &mut Vec<ClusterResult>,
+    ) {
+        emit(
+            &mut self.trace,
+            TraceEvent::Admit { t: req.arrival_s, id: req.id.0, class: req.class },
+        );
+        if req.is_zero_step() {
+            let r = zero_step_result(&req, self.elems);
+            source.on_done(r.id, r.finish_s);
+            if self.hedge.is_some() {
+                self.hedge_latency.record(r.latency_s());
+            }
+            if let Some(met) = r.deadline_met() {
+                if let Some(b) = &mut self.brownout {
+                    b.on_tracked(met);
+                }
+            }
+            emit(
+                &mut self.trace,
+                TraceEvent::Complete {
+                    t: r.finish_s,
+                    id: r.id.0,
+                    class: r.class,
+                    device: -1,
+                    latency_s: r.latency_s(),
+                    queue_s: r.queue_s(),
+                    deadline_met: r.deadline_met(),
+                },
+            );
+            results.push(r);
+            return;
+        }
+        // Brownout: at a degraded level, lower classes are admitted at
+        // reduced quality (fewer denoise steps) instead of — eventually
+        // — being shed. Class 0, the top tier, is never degraded, and
+        // the request keeps its original sampler signature: a retry
+        // resubmits at full quality, and routing stays keyed on what
+        // the client asked for.
+        let mut degrade: Option<(u32, usize)> = None;
+        if let (Some(b), SamplerKind::Ddim { steps }) = (&self.brownout, req.sampler) {
+            if b.level() > 0 && req.class > 0 {
+                let target = b.degraded_steps(steps);
+                if target < steps {
+                    degrade = Some((b.level(), target));
+                }
+            }
+        }
+        if let Some((level, steps)) = degrade {
+            self.degrade_log.push(req.class);
+            emit(
+                &mut self.trace,
+                TraceEvent::Degrade {
+                    t: req.arrival_s,
+                    id: req.id.0,
+                    class: req.class,
+                    level,
+                    steps: steps as u64,
+                },
+            );
+        }
+        let slot_kind = degrade.map_or(req.sampler, |(_, s)| SamplerKind::Ddim { steps: s });
+        match self.index.route(req.sampler) {
+            Some(did) => {
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
+                // SLO admission control: shed a request whose estimated
+                // completion on the routed device misses its deadline,
+                // instead of burning batch slots on doomed work.
+                if self.shed_late && self.doomed_at(did.0, &slot, slot.req.arrival_s) {
+                    self.shed_or_retry(
+                        slot.req.arrival_s,
+                        Some(did.0),
+                        &slot.req,
+                        source,
+                        rejected,
+                    );
+                    return;
+                }
+                self.enqueue(slot.req.arrival_s, did.0, slot);
+            }
+            None if self.backlog.len() < self.max_backlog => {
+                let mut slot = self.make_slot_with(req, slot_kind);
+                slot.degraded = degrade.is_some();
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Requeue {
+                        t: slot.req.arrival_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                    },
+                );
+                self.backlog.push_back(slot);
+            }
+            None => {
+                self.shed_or_retry(req.arrival_s, None, &req, source, rejected);
+            }
+        }
+    }
+
+    /// Would this request miss its deadline even if admitted to device
+    /// `di` at time `now_s`? Wait already served (`now_s - arrival`)
+    /// plus the routed device's occupancy behind the request times its
+    /// drain weight, fused-amortized and scaled to the request's own
+    /// generation length (see [`Device::admission_estimate_s`]). At
+    /// first admission `now_s == arrival_s` and the elapsed term is
+    /// zero; backlog re-routes pass the boundary time, so a request
+    /// that went doomed *while deferred* is shed then. Requests without
+    /// a deadline are never doomed. The estimate covers the slot's
+    /// *remaining* steps — identical to the full generation at first
+    /// admission, shorter for a fault-migrated checkpoint whose earlier
+    /// steps already ran on the failed device.
+    fn doomed_at(&self, di: usize, slot: &Slot, now_s: f64) -> bool {
+        let Some(deadline_s) = slot.req.deadline_s else { return false };
+        let ahead = self.index.load(di).total();
+        let remaining = slot.timesteps.len() - slot.step_index;
+        (now_s - slot.req.arrival_s)
+            + self.devices[di].admission_estimate_s(ahead, remaining)
+            > deadline_s
+    }
+
+    /// Build a slot serving `kind` — the request's own signature, or a
+    /// brownout-degraded one. The request inside keeps its original
+    /// sampler either way (see `admit`).
+    fn make_slot_with(&mut self, req: ClusterRequest, kind: SamplerKind) -> Slot {
+        let sampler = self.sampler_for(kind);
+        Slot::new(req, sampler, self.elems)
+    }
+
+    /// Shared sampler for a signature (built once, then `Arc`-cloned).
+    fn sampler_for(&mut self, kind: SamplerKind) -> SlotSampler {
+        if let Some(s) = self.sampler_cache.get(&kind) {
+            return s.clone();
+        }
+        let s = SlotSampler::build(kind, &self.schedule);
+        self.sampler_cache.insert(kind, s.clone());
+        s
+    }
+
+    /// Push a slot onto a device's admission queue, syncing the router
+    /// index and marking the device for the next kick. Every placement
+    /// quotes an admission-time completion estimate (occupancy ahead ×
+    /// drain weight, generation-scaled) into the device's
+    /// `admission_est` histogram — the same estimate `shed_late`
+    /// admission control thresholds against.
+    fn enqueue(&mut self, now_s: f64, di: usize, slot: Slot) {
+        let ahead = self.index.load(di).total();
+        let remaining = slot.timesteps.len() - slot.step_index;
+        let est_s = self.devices[di].admission_estimate_s(ahead, remaining);
+        self.devices[di].record_admission_estimate(est_s);
+        emit(
+            &mut self.trace,
+            TraceEvent::Route {
+                t: now_s,
+                id: slot.req.id.0,
+                class: slot.req.class,
+                device: di,
+                est_s,
+            },
+        );
+        self.queued[di].push_back(slot);
+        self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        self.dirty.insert(di);
+    }
+
+    /// Re-route deferred requests once device queues have space (called
+    /// at every step boundary, FIFO so deferral preserves arrival order).
+    /// Deadline-aware admission applies here too: time spent deferred
+    /// counts against the deadline, so a request that went doomed while
+    /// waiting in the backlog is shed at re-route instead of occupying a
+    /// batch slot — without this, an unbounded backlog (the engine's
+    /// drained mode) would bypass `shed_late` entirely.
+    fn drain_backlog(
+        &mut self,
+        now_s: f64,
+        source: &mut RequestSource,
+        rejected: &mut Vec<RequestId>,
+    ) {
+        while let Some(slot) = self.backlog.front() {
+            match self.index.route(slot.req.sampler) {
+                Some(did) => {
+                    let slot = self.backlog.pop_front().expect("peeked");
+                    if self.shed_late && self.doomed_at(did.0, &slot, now_s) {
+                        self.shed_or_retry(now_s, Some(did.0), &slot.req, source, rejected);
+                        continue;
+                    }
+                    self.enqueue(now_s, did.0, slot);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Start a step on every device that may have become startable since
+    /// the last boundary: the dirty set (occupancy/busy changes) plus,
+    /// under work stealing, the idle-empty steal candidates. Devices are
+    /// visited in ascending id order — the same order the reference
+    /// loop's full-fleet sweep uses, so steal interactions (an earlier
+    /// device starting a step can make it a donor for a later thief)
+    /// resolve identically.
+    fn kick(&mut self, now_s: f64, executor: &mut dyn StepExecutor) -> crate::Result<()> {
+        let mut visits = std::mem::take(&mut self.kick_scratch);
+        visits.clear();
+        visits.extend(self.dirty.iter().copied());
+        if self.work_stealing {
+            visits.extend(self.idle_empty.iter().copied());
+            visits.sort_unstable();
+            visits.dedup();
+        }
+        self.dirty.clear();
+        for &di in &visits {
+            if self.devices[di].is_down() {
+                self.idle_empty.remove(&di);
+                continue;
+            }
+            if self.devices[di].is_idle() {
+                if self.work_stealing
+                    && self.queued[di].is_empty()
+                    && self.resident[di].is_empty()
+                {
+                    self.steal_into(now_s, di);
+                }
+                if !self.queued[di].is_empty() || !self.resident[di].is_empty() {
+                    self.start_step(di, now_s, executor)?;
+                }
+            }
+            // Refresh steal-candidate membership for the visited device.
+            if self.devices[di].is_idle()
+                && self.queued[di].is_empty()
+                && self.resident[di].is_empty()
+            {
+                self.idle_empty.insert(di);
+            } else {
+                self.idle_empty.remove(&di);
+            }
+        }
+        self.kick_scratch = visits;
+        Ok(())
+    }
+
+    /// Work stealing (ROADMAP "Scaling out"): an idle device with an
+    /// empty admission queue pulls the oldest queued requests from the
+    /// most-loaded device, up to its own batch capacity. Donors must be
+    /// mid-step (their queued work is guaranteed to wait at least one
+    /// full step; an idle donor starts its own work this same boundary).
+    /// Deterministic: ties break toward the lowest donor id. The donor
+    /// is an O(log N) index query, not a fleet scan.
+    fn steal_into(&mut self, now_s: f64, di: usize) {
+        while self.resident[di].len() + self.queued[di].len() < self.devices[di].capacity {
+            // `di` is idle, so it can never be its own donor.
+            let Some(j) = self.index.max_donor() else { break };
+            let slot = self.queued[j].pop_front().expect("donor queue non-empty");
+            self.index.set_counts(j, self.resident[j].len(), self.queued[j].len());
+            emit(
+                &mut self.trace,
+                TraceEvent::Steal {
+                    t: now_s,
+                    id: slot.req.id.0,
+                    class: slot.req.class,
+                    device: di,
+                    from: j,
+                },
+            );
+            self.queued[di].push_back(slot);
+            self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        }
+    }
+
+    /// Handle a device's step-completion event: retire finished samples
+    /// (reporting each back to the source), promote queued requests into
+    /// the freed slots, start the next step.
+    fn complete(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+        source: &mut RequestSource,
+        results: &mut Vec<ClusterResult>,
+        rejected: &mut Vec<RequestId>,
+    ) -> crate::Result<()> {
+        self.devices[di].finish_step();
+        self.index.set_busy(di, false);
+        let mut still_resident = std::mem::take(&mut self.retire_scratch);
+        for slot in self.resident[di].drain(..) {
+            let id64 = slot.req.id.0;
+            // The other copy of a hedged request already finished: this
+            // loser leaves at the step boundary without completing.
+            if self.hedges.get(&id64).map_or(false, |tw| tw.done) {
+                let tw = self.hedges.get_mut(&id64).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&id64);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: id64,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                continue;
+            }
+            if slot.step_index >= slot.timesteps.len() {
+                // First copy home wins; any surviving twin cancels at
+                // its own next boundary (completion ties break by
+                // device id, so the winner is deterministic).
+                if let Some(tw) = self.hedges.get_mut(&id64) {
+                    tw.done = true;
+                    tw.live -= 1;
+                    if tw.live == 0 {
+                        self.hedges.remove(&id64);
+                    }
+                }
+                self.devices[di].samples_completed += 1;
+                let steps = slot.timesteps.len();
+                source.on_done(slot.req.id, now_s);
+                let r = ClusterResult {
+                    id: slot.req.id,
+                    device: DeviceId(di),
+                    sample: slot.x,
+                    steps,
+                    arrival_s: slot.req.arrival_s,
+                    first_step_s: slot.first_step_s.unwrap_or(slot.req.arrival_s),
+                    finish_s: now_s,
+                    mean_batch: slot.occupancy_sum as f64 / steps.max(1) as f64,
+                    full_steps: slot.full_steps as usize,
+                    class: slot.req.class,
+                    deadline_s: slot.req.deadline_s,
+                };
+                if self.hedge.is_some() {
+                    self.hedge_latency.record(r.latency_s());
+                }
+                if let Some(met) = r.deadline_met() {
+                    if let Some(b) = &mut self.brownout {
+                        b.on_tracked(met);
+                    }
+                }
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Complete {
+                        t: now_s,
+                        id: r.id.0,
+                        class: r.class,
+                        device: di as i64,
+                        latency_s: r.latency_s(),
+                        queue_s: r.queue_s(),
+                        deadline_met: r.deadline_met(),
+                    },
+                );
+                results.push(r);
+            } else {
+                still_resident.push(slot);
+            }
+        }
+        std::mem::swap(&mut self.resident[di], &mut still_resident);
+        self.retire_scratch = still_resident;
+        self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        self.dirty.insert(di);
+        // A crash or outage that struck mid-step lands here, at the step
+        // boundary — the checkpointable instant (latents are explicit
+        // `x`/`t` state between UNet calls). Survivors that just retired
+        // kept their completions; the rest migrate off the device.
+        if let Some(kind) = self.pending_down[di].take() {
+            self.apply_down(di, now_s, kind, source, rejected);
+        }
+        // Hedge stragglers: at every step boundary, any resident sample
+        // past the hedge threshold gets a duplicate on another device.
+        if self.hedge.is_some() {
+            self.hedge_scan(now_s);
+        }
+        // Freed slots (and queue space) may unblock deferred requests —
+        // possibly onto other, currently idle devices.
+        self.drain_backlog(now_s, source, rejected);
+        self.kick(now_s, executor)
+    }
+
+    /// Issue hedge duplicates for straggling residents: any in-flight
+    /// sample whose elapsed time since arrival crossed the policy
+    /// threshold — a fixed latency, or a live quantile of this window's
+    /// completion latencies — gets a clone on a *different* device.
+    /// Whichever copy finishes first wins; the loser cancels at its
+    /// next step boundary. At most one hedge per request lifecycle. The
+    /// duplicate inherits the original's (possibly degraded) generation
+    /// length and RNG seed, so either copy yields the bit-identical
+    /// sample — hedging trades duplicate step work for tail latency,
+    /// never for a different result.
+    fn hedge_scan(&mut self, now_s: f64) {
+        let Some(policy) = self.hedge else { return };
+        let threshold_s = match policy {
+            HedgePolicy::Fixed { threshold_s } => threshold_s,
+            HedgePolicy::Quantile { q } => {
+                // The quantile needs a base of completions before it
+                // means anything; until then, never hedge.
+                if self.hedge_latency.count() < HEDGE_MIN_SAMPLES {
+                    return;
+                }
+                self.hedge_latency.quantile(q * 100.0)
+            }
+        };
+        // Collect first (ascending device id, resident order — the
+        // order the reference sweep sees), then route: issuing a
+        // duplicate perturbs the router index, which must not change
+        // which stragglers this boundary considers.
+        let mut due: Vec<(usize, ClusterRequest, SamplerKind, bool)> = Vec::new();
+        for di in 0..self.devices.len() {
+            for slot in &self.resident[di] {
+                if now_s - slot.req.arrival_s > threshold_s
+                    && !self.hedges.contains_key(&slot.req.id.0)
+                {
+                    due.push((di, slot.req.clone(), effective_kind(slot), slot.degraded));
+                }
+            }
+        }
+        for (from, req, kind, degraded) in due {
+            // Route with the straggler's device masked out — a hedge on
+            // the same die would wait behind the very step it is meant
+            // to beat. `from` holds a resident, so it is up, and the
+            // mask is restored immediately after the query.
+            self.index.set_excluded(from, true);
+            let dest = self.index.route(req.sampler);
+            self.index.set_excluded(from, false);
+            // No second device has room: skip. The straggler stays
+            // unhedged and may qualify again at a later boundary.
+            let Some(did) = dest else { continue };
+            let id64 = req.id.0;
+            let class = req.class;
+            let mut dup = self.make_slot_with(req, kind);
+            dup.degraded = degraded;
+            self.hedges.insert(id64, HedgeTwin { live: 2, done: false });
+            // `hedged` charges the straggler's device — the one whose
+            // slowness the duplicate is hedging against.
+            self.devices[from].hedged += 1;
+            emit(
+                &mut self.trace,
+                TraceEvent::Hedge { t: now_s, id: id64, class, from, to: did.0 },
+            );
+            // Straight to the destination queue: no admission estimate,
+            // no Route event — a hedge is a scheduler decision, not a
+            // client arrival.
+            self.queued[did.0].push_back(dup);
+            self.index.set_counts(did.0, self.resident[did.0].len(), self.queued[did.0].len());
+            self.dirty.insert(did.0);
+        }
+    }
+
+    /// Promote queued requests into free slots and launch the next fused
+    /// step (no-op when nothing is resident).
+    fn start_step(
+        &mut self,
+        di: usize,
+        now_s: f64,
+        executor: &mut dyn StepExecutor,
+    ) -> crate::Result<()> {
+        let mut promoted = false;
+        while self.resident[di].len() < self.devices[di].capacity {
+            let Some(mut slot) = self.queued[di].pop_front() else { break };
+            // A queued copy whose hedge twin already finished is dead
+            // weight: cancel it here instead of burning a batch slot.
+            if self.hedges.get(&slot.req.id.0).map_or(false, |tw| tw.done) {
+                let tw = self.hedges.get_mut(&slot.req.id.0).expect("checked above");
+                tw.live -= 1;
+                if tw.live == 0 {
+                    self.hedges.remove(&slot.req.id.0);
+                }
+                self.devices[di].cancelled += 1;
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Cancel {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        steps: slot.step_index as u64,
+                    },
+                );
+                // The queue shrank: resync the index below.
+                promoted = true;
+                continue;
+            }
+            // Keep the original first-step instant for fault-migrated
+            // victims (they already ran on the failed device).
+            slot.first_step_s.get_or_insert(now_s);
+            self.resident[di].push(slot);
+            promoted = true;
+        }
+        if promoted {
+            self.index.set_counts(di, self.resident[di].len(), self.queued[di].len());
+        }
+        let k = self.resident[di].len();
+        if k == 0 {
+            return Ok(());
+        }
+
+        // DeepCache step reuse: the device cycles full/shallow steps;
+        // admission phase-aligns to the cycle (a freshly promoted sample
+        // — `step_index == 0`, empty feature cache — escalates the fused
+        // step to full and restarts the cycle, so every resident row
+        // always agrees on the step class). In simulation the executor
+        // still runs every step — reuse changes the *priced* cost, not
+        // the sample trajectory, so `K` is a pure performance knob and
+        // results stay bit-identical across reuse intervals. Degraded
+        // admissions never force a full step: riding the running reuse
+        // phase is part of the brownout quality reduction.
+        let force_full = self.resident[di].iter().any(|s| s.step_index == 0 && !s.degraded);
+        let full = self.devices[di].next_step_full(force_full);
+        if self.trace.is_some() {
+            for slot in &self.resident[di] {
+                emit(
+                    &mut self.trace,
+                    TraceEvent::Step {
+                        t: now_s,
+                        id: slot.req.id.0,
+                        class: slot.req.class,
+                        device: di,
+                        full,
+                    },
+                );
+            }
+        }
+
+        // Fused UNet call over the reusable batch buffers: one t per row
+        // (rows may sit at different denoise depths — that is the whole
+        // point of step-level batching).
+        let elems = self.elems;
+        self.x_buf.clear();
+        self.t_buf.clear();
+        self.x_buf.reserve(k * elems);
+        for slot in &self.resident[di] {
+            self.x_buf.extend_from_slice(&slot.x);
+            self.t_buf.push(slot.timesteps[slot.step_index] as f32);
+        }
+        self.eps_buf.clear();
+        executor.predict_noise(DeviceId(di), &self.x_buf, &self.t_buf, elems, &mut self.eps_buf)?;
+        anyhow::ensure!(
+            self.eps_buf.len() == k * elems,
+            "executor returned {} elems, want {}",
+            self.eps_buf.len(),
+            k * elems
+        );
+
+        // Per-row sampler updates are independent; each row owns its RNG,
+        // so worker order cannot change results. Small fused batches run
+        // inline on the shared eps buffer (zero moves, zero allocation);
+        // large ones fan out over the pool in chunks, lending the eps
+        // buffer via `Arc` instead of copying a slice per row.
+        if k * elems < PARALLEL_ROWS_MIN_ELEMS {
+            for (i, slot) in self.resident[di].iter_mut().enumerate() {
+                let eps_row = &self.eps_buf[i * elems..(i + 1) * elems];
+                slot.sampler.apply(slot.step_index, &mut slot.x, eps_row, &mut slot.rng);
+            }
+        } else {
+            let eps = Arc::new(std::mem::take(&mut self.eps_buf));
+            let rows: Vec<(Vec<f32>, SlotSampler, usize, XorShift)> = self.resident[di]
+                .iter_mut()
+                .map(|slot| {
+                    (
+                        std::mem::take(&mut slot.x),
+                        slot.sampler.clone(),
+                        slot.step_index,
+                        slot.rng.clone(),
+                    )
+                })
+                .collect();
+            let chunk = k.div_ceil(self.pool.size());
+            let shared = Arc::clone(&eps);
+            let updated = self.pool.map_chunked(rows, chunk, move |i, (mut x, sampler, idx, mut rng)| {
+                sampler.apply(idx, &mut x, &shared[i * elems..(i + 1) * elems], &mut rng);
+                (x, rng)
+            });
+            for (slot, (x, rng)) in self.resident[di].iter_mut().zip(updated) {
+                slot.x = x;
+                slot.rng = rng;
+            }
+            // Reclaim the buffer; a worker may still briefly hold its Arc
+            // clone after the final notify — fall back to a fresh one then.
+            self.eps_buf = Arc::try_unwrap(eps).map(|mut v| {
+                v.clear();
+                v
+            })
+            .unwrap_or_default();
+        }
+        for slot in self.resident[di].iter_mut() {
+            slot.step_index += 1;
+            slot.occupancy_sum += k as u64;
+            slot.full_steps += full as u64;
+        }
+        let done_s = self.devices[di].begin_step(now_s, k, full);
+        self.index.set_busy(di, true);
+        self.events
+            .push(Reverse(Event { time_s: done_s, kind: EventKind::Completion { device: di } }));
+        Ok(())
+    }
+}

@@ -1,0 +1,311 @@
+//! Fleet sharding primitives for the parallel event core.
+//!
+//! Two small, independently testable pieces:
+//!
+//! * [`ShardMap`] — a contiguous, near-even partition of the device id
+//!   space into `S` shards. The sharded scheduler keys its per-shard
+//!   event heaps, metrics partials and step-flush workers off this map,
+//!   so the split must be total (every device in exactly one shard),
+//!   ordered (shard `s` owns a lower id range than shard `s+1` — merge
+//!   in shard order reproduces device order) and loud about degenerate
+//!   requests (zero shards, or more shards than devices: an empty shard
+//!   would own an empty heap and an empty metrics partial, silently
+//!   skewing roll-up shapes — see `ShardMap::new`).
+//! * [`Heap4`] — a 4-ary array-backed min-heap. The discrete-event core
+//!   pops tens of millions of events per fleet sweep; a 4-ary layout
+//!   halves the tree depth of the binary `BinaryHeap` and keeps the
+//!   children of a node in one cache line, which is where the
+//!   arrival-heavy regime spends its time. Pop order is the total order
+//!   of `T: Ord` — identical to `BinaryHeap<Reverse<T>>` — so swapping
+//!   heap shapes can never change scheduling decisions.
+
+use crate::util::threadpool::ThreadPool;
+
+/// A contiguous near-even partition of `devices` device ids into
+/// `shards` shards. Shard `s` owns `range(s)`; the first
+/// `devices % shards` shards own one extra device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Shard boundaries: `shards + 1` entries, `starts[0] == 0`,
+    /// `starts[shards] == devices`; shard `s` owns
+    /// `starts[s]..starts[s + 1]`.
+    starts: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Partition `devices` ids into `shards` contiguous ranges.
+    ///
+    /// Errors loudly on a degenerate split: zero shards, or more shards
+    /// than devices (every shard must own at least one device — empty
+    /// shards would dilute the per-shard roll-ups and spawn workers
+    /// with nothing to do).
+    pub fn new(devices: usize, shards: usize) -> crate::Result<Self> {
+        anyhow::ensure!(shards >= 1, "shard count must be at least 1 (got 0)");
+        anyhow::ensure!(
+            shards <= devices,
+            "{shards} shards exceed the {devices}-device fleet; \
+             every shard must own at least one device"
+        );
+        let base = devices / shards;
+        let extra = devices % shards;
+        let mut starts = Vec::with_capacity(shards + 1);
+        let mut at = 0;
+        starts.push(at);
+        for s in 0..shards {
+            at += base + usize::from(s < extra);
+            starts.push(at);
+        }
+        Ok(Self { starts })
+    }
+
+    /// The 1-shard map (the pre-shard scheduler's layout).
+    pub fn single(devices: usize) -> Self {
+        Self { starts: vec![0, devices] }
+    }
+
+    /// Machine-sized shard count for a `devices`-device fleet: the
+    /// thread pool's worker count, capped at the device count so no
+    /// shard comes up empty (the loud-error contract of
+    /// [`ShardMap::new`] — `--shards auto` must never violate it).
+    pub fn auto(devices: usize) -> usize {
+        ThreadPool::default_workers().min(devices).max(1)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn devices(&self) -> usize {
+        *self.starts.last().expect("starts is never empty")
+    }
+
+    /// First device id of shard `s`.
+    pub fn start(&self, shard: usize) -> usize {
+        self.starts[shard]
+    }
+
+    /// The device id range shard `s` owns.
+    pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
+        self.starts[shard]..self.starts[shard + 1]
+    }
+
+    /// The shard owning `device`. O(log S).
+    pub fn shard_of(&self, device: usize) -> usize {
+        debug_assert!(device < self.devices(), "device {device} out of range");
+        self.starts.partition_point(|&s| s <= device) - 1
+    }
+
+    /// The shard owning `device`, or `None` for out-of-range ids (the
+    /// `DeviceId::NONE` sentinel on zero-step completions).
+    pub fn try_shard_of(&self, device: usize) -> Option<usize> {
+        (device < self.devices()).then(|| self.shard_of(device))
+    }
+
+    /// Per-device shard ids (`assignments()[d]` = shard of device `d`)
+    /// — the lookup table the trace sink stamps events with.
+    pub fn assignments(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.devices());
+        for s in 0..self.shards() {
+            out.extend(self.range(s).map(|_| s as u32));
+        }
+        out
+    }
+}
+
+/// Array-backed 4-ary min-heap. Same contract as
+/// `BinaryHeap<Reverse<T>>` (min-first, pop order = the `Ord` total
+/// order) with half the tree depth and sibling nodes adjacent in
+/// memory.
+#[derive(Debug, Clone, Default)]
+pub struct Heap4<T: Ord> {
+    items: Vec<T>,
+}
+
+impl<T: Ord> Heap4<T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+
+    /// The minimum element, if any.
+    pub fn peek(&self) -> Option<&T> {
+        self.items.first()
+    }
+
+    pub fn push(&mut self, value: T) {
+        self.items.push(value);
+        self.sift_up(self.items.len() - 1);
+    }
+
+    /// Remove and return the minimum element.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let top = self.items.pop();
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        top
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 4;
+            if self.items[i] < self.items[parent] {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let first = 4 * i + 1;
+            if first >= n {
+                break;
+            }
+            let mut best = first;
+            for c in first + 1..(first + 4).min(n) {
+                if self.items[c] < self.items[best] {
+                    best = c;
+                }
+            }
+            if self.items[best] < self.items[i] {
+                self.items.swap(i, best);
+                i = best;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn shard_map_partitions_evenly_and_totally() {
+        for devices in 1..40 {
+            for shards in 1..=devices {
+                let m = ShardMap::new(devices, shards).unwrap();
+                assert_eq!(m.shards(), shards);
+                assert_eq!(m.devices(), devices);
+                // Ranges tile the id space in order, sizes within 1.
+                let mut seen = 0;
+                let base = devices / shards;
+                for s in 0..shards {
+                    let r = m.range(s);
+                    assert_eq!(r.start, seen, "gap before shard {s}");
+                    let len = r.len();
+                    assert!(len == base || len == base + 1, "uneven split {len}");
+                    for d in r.clone() {
+                        assert_eq!(m.shard_of(d), s);
+                        assert_eq!(m.try_shard_of(d), Some(s));
+                    }
+                    seen = r.end;
+                }
+                assert_eq!(seen, devices);
+                assert_eq!(m.try_shard_of(devices), None);
+                assert_eq!(m.try_shard_of(usize::MAX), None);
+                let assign = m.assignments();
+                assert_eq!(assign.len(), devices);
+                for d in 0..devices {
+                    assert_eq!(assign[d] as usize, m.shard_of(d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_map_rejects_degenerate_splits() {
+        let err = ShardMap::new(8, 0).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        let err = ShardMap::new(4, 5).unwrap_err().to_string();
+        assert!(err.contains("exceed"), "{err}");
+        assert!(err.contains("4-device"), "{err}");
+        // Zero devices can never be sharded.
+        assert!(ShardMap::new(0, 1).is_err());
+    }
+
+    #[test]
+    fn auto_never_exceeds_devices() {
+        for devices in 1..32 {
+            let s = ShardMap::auto(devices);
+            assert!(s >= 1 && s <= devices, "auto({devices}) = {s}");
+            ShardMap::new(devices, s).expect("auto must always be a valid shard count");
+        }
+        assert!(ShardMap::auto(1024) <= 16, "auto is machine-sized, not fleet-sized");
+    }
+
+    #[test]
+    fn single_matches_new() {
+        assert_eq!(ShardMap::single(7), ShardMap::new(7, 1).unwrap());
+    }
+
+    #[test]
+    fn heap4_pop_order_matches_binary_heap() {
+        forall("heap4 vs BinaryHeap", 64, |g| {
+            let n = g.usize_in(0, 200);
+            let mut h = Heap4::new();
+            let mut b = std::collections::BinaryHeap::new();
+            for _ in 0..n {
+                // Duplicates included: equal keys are indistinguishable
+                // values, so any pop order among them is the same order.
+                let v = (g.usize_in(0, 30) as u64, g.usize_in(0, 5) as u64);
+                h.push(v);
+                b.push(std::cmp::Reverse(v));
+            }
+            assert_eq!(h.len(), n);
+            let mut last = None;
+            while let Some(&top) = h.peek() {
+                let got = h.pop().unwrap();
+                assert_eq!(got, top, "peek/pop must agree");
+                assert_eq!(got, b.pop().unwrap().0, "pop order diverged");
+                if let Some(prev) = last {
+                    assert!(got >= prev, "pops must be non-decreasing");
+                }
+                last = Some(got);
+            }
+            assert!(h.is_empty() && b.is_empty());
+            assert_eq!(h.pop(), None);
+        });
+    }
+
+    #[test]
+    fn heap4_interleaved_push_pop() {
+        forall("heap4 interleaved", 64, |g| {
+            let mut h = Heap4::new();
+            let mut b = std::collections::BinaryHeap::new();
+            for _ in 0..g.usize_in(1, 300) {
+                if g.usize_in(0, 2) == 0 && !h.is_empty() {
+                    assert_eq!(h.pop(), b.pop().map(|r| r.0));
+                } else {
+                    let v = g.usize_in(0, 1000);
+                    h.push(v);
+                    b.push(std::cmp::Reverse(v));
+                }
+                assert_eq!(h.len(), b.len());
+                assert_eq!(h.peek().copied(), b.peek().map(|r| r.0));
+            }
+        });
+    }
+}

@@ -150,6 +150,31 @@ impl TraceEvent {
         }
     }
 
+    /// The device whose shard tags this event in the v3 serialization
+    /// (`None`: deviceless lifecycle events, or the `-1` no-device
+    /// sentinel on shed/complete). Events that name two devices tag
+    /// with the one that *owned* the decision: the donor shard for a
+    /// migration, the straggler's shard for a hedge, the thief's for a
+    /// steal (the steal lands on the thief's queue).
+    pub fn shard_device(&self) -> Option<usize> {
+        match *self {
+            TraceEvent::Admit { .. }
+            | TraceEvent::Requeue { .. }
+            | TraceEvent::Retry { .. }
+            | TraceEvent::Degrade { .. } => None,
+            TraceEvent::Route { device, .. }
+            | TraceEvent::Steal { device, .. }
+            | TraceEvent::Step { device, .. }
+            | TraceEvent::Fault { device, .. }
+            | TraceEvent::Recover { device, .. }
+            | TraceEvent::Cancel { device, .. } => Some(device),
+            TraceEvent::Migrate { from, .. } | TraceEvent::Hedge { from, .. } => Some(from),
+            TraceEvent::Shed { device, .. } | TraceEvent::Complete { device, .. } => {
+                usize::try_from(device).ok()
+            }
+        }
+    }
+
     /// One JSON object per event (`{"ev":...,"t":...}` plus `id` /
     /// `class` for request-lifecycle events and kind-specific fields).
     /// `f64`s go through the shortest-round-trip formatter, so parsing
@@ -324,11 +349,25 @@ impl TraceEvent {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TraceSink {
     events: Vec<TraceEvent>,
+    /// Device → shard lookup installed by the sharded scheduler
+    /// (`ShardMap::assignments`). When present, serialization stamps
+    /// every device-carrying event with an optional `"shard"` field
+    /// (schema v3). Purely a serialization-layer annotation: in-memory
+    /// events — and therefore `events()`, replay and diff — stay
+    /// shard-count-invariant.
+    shards: Vec<u32>,
 }
 
 impl TraceSink {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install the device → shard lookup used to stamp the optional
+    /// `"shard"` field on serialized events. Survives [`TraceSink::clear`]
+    /// (the layout outlives any one serve window).
+    pub fn set_shard_map(&mut self, shards: Vec<u32>) {
+        self.shards = shards;
     }
 
     #[inline]
@@ -352,13 +391,26 @@ impl TraceSink {
         self.events.clear();
     }
 
+    /// Serialize one event, stamping the optional `"shard"` field when
+    /// a shard map is installed and the event names a device. Shed and
+    /// complete events can carry the `-1` no-device sentinel; those —
+    /// and deviceless lifecycle events (admit/requeue/retry/degrade) —
+    /// stay untagged, exactly like every event of a pre-v3 trace.
+    fn event_json(&self, ev: &TraceEvent) -> Json {
+        let j = ev.to_json();
+        match ev.shard_device().and_then(|d| self.shards.get(d)) {
+            Some(&shard) => j.set("shard", shard),
+            None => j,
+        }
+    }
+
     /// The JSON-lines encoding: the versioned header line, then one
     /// compact object per event.
     pub fn to_jsonl(&self) -> String {
         let mut out = header_line();
         out.push('\n');
         for ev in &self.events {
-            out.push_str(&ev.to_json().to_string_compact());
+            out.push_str(&self.event_json(ev).to_string_compact());
             out.push('\n');
         }
         out
@@ -368,7 +420,7 @@ impl TraceSink {
     pub fn write_jsonl(&self, out: &mut dyn Write) -> std::io::Result<()> {
         writeln!(out, "{}", header_line())?;
         for ev in &self.events {
-            writeln!(out, "{}", ev.to_json().to_string_compact())?;
+            writeln!(out, "{}", self.event_json(ev).to_string_compact())?;
         }
         Ok(())
     }
@@ -389,8 +441,16 @@ pub(super) fn emit(trace: &mut Option<TraceSink>, ev: TraceEvent) {
 /// this build writes. Bumped whenever the event vocabulary or field
 /// layout changes, so a replayer never silently misreads an
 /// old-schema file. Version 2 added the resilience-tier events
-/// (`retry` / `hedge` / `cancel` / `degrade`) and the header itself.
-pub const TRACE_VERSION: u64 = 2;
+/// (`retry` / `hedge` / `cancel` / `degrade`) and the header itself;
+/// version 3 added the optional per-event `shard` tag (sharded event
+/// core). v2 traces differ only by the absence of that optional field,
+/// so this build still reads them ([`MIN_TRACE_VERSION`]) with the
+/// field defaulted to untagged.
+pub const TRACE_VERSION: u64 = 3;
+
+/// Oldest trace schema this build still reads (v2: identical layout
+/// minus the optional `shard` tag).
+pub const MIN_TRACE_VERSION: u64 = 2;
 
 /// The header line [`TraceSink::to_jsonl`] writes.
 fn header_line() -> String {
@@ -403,10 +463,10 @@ fn check_header(j: &Json) -> Result<(), String> {
         return Err("bad trace header: expected \"trace\":\"difflight\"".to_string());
     }
     match j.get("version").and_then(Json::as_f64) {
-        Some(v) if v == TRACE_VERSION as f64 => Ok(()),
+        Some(v) if v >= MIN_TRACE_VERSION as f64 && v <= TRACE_VERSION as f64 => Ok(()),
         Some(v) => Err(format!(
-            "unsupported trace version {v} (this build reads version {TRACE_VERSION}); \
-             re-record the trace"
+            "unsupported trace version {v} (this build reads versions \
+             {MIN_TRACE_VERSION}-{TRACE_VERSION}); re-record the trace"
         )),
         None => Err("trace header missing 'version'".to_string()),
     }
@@ -760,6 +820,56 @@ mod tests {
         // Blank lines before the header are fine.
         let padded = format!("\n{}\n{doc}", header_line());
         assert_eq!(parse_jsonl_versioned(&padded).expect("padded").len(), 1);
+    }
+
+    #[test]
+    fn v2_traces_still_parse_with_shard_defaulted() {
+        // A pre-shard (v2) trace differs from v3 only by the absent
+        // optional `shard` field: both parsers must accept it and
+        // decode the same events a v3 reader sees.
+        let body = "{\"ev\":\"admit\",\"t\":0,\"id\":1,\"class\":0}\n\
+                    {\"ev\":\"route\",\"t\":0,\"id\":1,\"class\":0,\"dev\":2,\"est\":0.5}\n";
+        let v2 = format!("{{\"trace\":\"difflight\",\"version\":2}}\n{body}");
+        let v3 = format!("{{\"trace\":\"difflight\",\"version\":3}}\n{body}");
+        let from_v2 = parse_jsonl_versioned(&v2).expect("v2 must still parse");
+        assert_eq!(from_v2, parse_jsonl_versioned(&v3).expect("v3 parses"));
+        assert_eq!(from_v2.len(), 2);
+        assert_eq!(parse_jsonl(&v2).expect("lenient v2"), from_v2);
+    }
+
+    #[test]
+    fn shard_map_tags_device_events_only_and_round_trips() {
+        let mut sink = TraceSink::new();
+        // Devices 0-1 in shard 0, devices 2-3 in shard 1.
+        sink.set_shard_map(vec![0, 0, 1, 1]);
+        for ev in [
+            TraceEvent::Admit { t: 0.0, id: 1, class: 0 },
+            TraceEvent::Route { t: 0.0, id: 1, class: 0, device: 2, est_s: 0.5 },
+            TraceEvent::Hedge { t: 1.0, id: 1, class: 0, from: 0, to: 3 },
+            TraceEvent::Shed { t: 1.0, id: 2, class: 0, device: -1, tracked: false },
+            TraceEvent::Fault { t: 2.0, device: 3, fault: TraceFault::Crash },
+        ] {
+            sink.record(ev);
+        }
+        let text = sink.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], header_line());
+        assert!(!lines[1].contains("\"shard\""), "admit carries no device: {}", lines[1]);
+        assert!(lines[2].contains("\"shard\":1"), "route tags its device's shard: {}", lines[2]);
+        assert!(lines[3].contains("\"shard\":0"), "hedge tags the straggler's shard: {}", lines[3]);
+        assert!(!lines[4].contains("\"shard\""), "dev=-1 sentinel stays untagged: {}", lines[4]);
+        assert!(lines[5].contains("\"shard\":1"), "fault tags its device's shard: {}", lines[5]);
+        // The tag is serialization-only: parsing drops it, so events
+        // round-trip identically to an untagged sink's.
+        let parsed = parse_jsonl_versioned(&text).expect("tagged trace parses");
+        assert_eq!(parsed, sink.events());
+        // write_jsonl agrees byte-for-byte, and clear() keeps the map.
+        let mut buf = Vec::new();
+        sink.write_jsonl(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), text);
+        sink.clear();
+        sink.record(TraceEvent::Recover { t: 3.0, device: 1 });
+        assert!(sink.to_jsonl().contains("\"shard\":0"), "map survives clear");
     }
 
     #[test]

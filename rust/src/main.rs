@@ -23,7 +23,8 @@
 //!   [--fleet SPEC | --fleet-file PATH]
 //!   [--arrival poisson:RATE|burst:RATE:DUTY | --clients N:THINK_MS]
 //!   [--slo-ms MS[,MS...]] [--shed-late] [--backlog B]
-//!   [--faults SPEC | --faults-file PATH] [--no-migration]` —
+//!   [--faults SPEC | --faults-file PATH] [--no-migration]
+//!   [--shards N|auto]` —
 //!   pure-simulation fleet serving (no artifacts needed): continuous
 //!   step-level batching over simulated DiffLight devices — homogeneous
 //!   (`--devices`) or heterogeneous
@@ -62,7 +63,7 @@ use difflight::cluster::trace::{
 use difflight::cluster::{
     parse_brownout_spec, parse_faults_json, parse_fleet_json, parse_fleet_spec, parse_retry_spec,
     synthetic_workload, Cluster, ClusterConfig, DeviceProfile, FaultPlan, HedgePolicy,
-    RequestSource, ShardPolicy, SimExecutor, TraceEvent, TraceSink,
+    RequestSource, ShardMap, ShardPolicy, SimExecutor, TraceEvent, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
@@ -120,6 +121,7 @@ fn print_help(program: &str) {
     println!("          --hedge-q 0.95              ...or past a quantile of observed completion latency");
     println!("          --brownout \"target=0.99:window=64\"");
     println!("                                      degrade timestep tiers before shedding (also :max=L:factor=F)");
+    println!("          --shards 4                  partition the fleet into parallel event shards (auto = worker count)");
     println!("          --trace trace.jsonl         flight recorder: per-request events as JSON lines");
     println!("  trace replay FILE                   rebuild metrics from a recorded trace");
     println!("        replay FILE --expect artifacts/cluster_report.json");
@@ -575,6 +577,21 @@ fn cmd_cluster(args: &Args) -> i32 {
     if let Some(b) = brownout {
         config = config.brownout(b);
     }
+    // Shard validation itself lives in `Cluster::new` (via `ShardMap`),
+    // so `--shards 9` on an 8-device fleet fails loudly there; only the
+    // `auto` keyword and plain parse errors are handled here.
+    let shards = match args.get("shards") {
+        None => 1,
+        Some("auto") => ShardMap::auto(config.device_count()),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("error: --shards {s}: expected a positive integer or `auto`");
+                return 2;
+            }
+        },
+    };
+    config = config.with_shards(shards);
     let requests = args.get_parsed("requests", 32usize);
     let steps = args.get_parsed("steps", 25usize);
     if steps > 1000 {
@@ -718,10 +735,11 @@ fn cmd_cluster(args: &Args) -> i32 {
         );
     }
     println!(
-        "scheduler: {} events in {} serving host time ({:.0} events/s; pricing {})",
+        "scheduler: {} events in {} serving host time ({:.0} events/s; {} shard(s); pricing {})",
         m.sched_events,
         fmt_si(host_s, "s"),
         if host_s > 0.0 { m.sched_events as f64 / host_s } else { 0.0 },
+        config.shards,
         fmt_si(pricing_s, "s"),
     );
     if let Some(path) = &trace_path {

@@ -153,6 +153,30 @@ impl ThreadPool {
     }
 }
 
+/// Run `f` over every item on its own *scoped* thread and collect the
+/// results in item order. Unlike [`ThreadPool::map`], whose jobs must
+/// be `'static`, scoped workers may borrow from the caller's stack —
+/// the sharded scheduler's step flush hands each worker a mutable slice
+/// of pending step tasks plus a forked executor, none of which can
+/// escape the flush call. Intended for a handful of coarse shard-sized
+/// jobs per call (one OS thread each), not fine-grained fan-out.
+pub fn scoped_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> =
+            items.into_iter().map(|item| s.spawn(move || f(item))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoped worker panicked"))
+            .collect()
+    })
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
@@ -245,6 +269,24 @@ mod tests {
         let inline = pool.map_chunked((0..4).map(|i| i * 10).collect(), 8, |i, x| x + i);
         assert_eq!(inline, vec![0, 11, 22, 33]);
         let empty: Vec<usize> = pool.map_chunked(Vec::new(), 4, |i, x: usize| x + i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_state() {
+        // The whole point over ThreadPool::map: jobs may borrow
+        // non-'static state (here, mutable slices of a local vec).
+        let mut data = vec![0u64; 12];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(4).collect();
+        let lens = scoped_map(chunks, |chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = i as u64 + 1;
+            }
+            chunk.len()
+        });
+        assert_eq!(lens, vec![4, 4, 4]);
+        assert_eq!(data, vec![1, 2, 3, 4, 1, 2, 3, 4, 1, 2, 3, 4]);
+        let empty: Vec<usize> = scoped_map(Vec::<u8>::new(), |b| b as usize);
         assert!(empty.is_empty());
     }
 

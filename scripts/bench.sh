@@ -24,12 +24,15 @@
 # goodput from degraded-tier serving over shed-only at 2x overload
 # with >=99% attainment on the undegraded top class, >=0.9x recovery
 # of the straggler p99 regression from hedging at <=10% duplicate
-# work, zero lost requests with retry budgets, and heap-vs-reference
-# bit-identity with retry+hedge+brownout all enabled) and writing
-# BENCH_sim.json at the repo root.
+# work, zero lost requests with retry budgets, heap-vs-reference
+# bit-identity with retry+hedge+brownout all enabled, >=1.2x events/sec
+# from the arena/4-ary layout alone over the frozen pre-shard core at
+# 256 devices, and >=3x events/sec at the 4096-device 8-shard point vs
+# 1 shard on hosts with >=8 workers) and writing BENCH_sim.json at the
+# repo root.
 #
 # Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
-#                         [--obs] [--faults] [--brownout]
+#                         [--obs] [--faults] [--brownout] [--shards]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
 #                    gating the 64-device scheduler point, the 2-profile
 #                    and closed-loop heap-vs-reference parities, and a
@@ -61,6 +64,13 @@
 #                    BENCH_sim.json) even together with --smoke; the
 #                    section itself always runs and lands in
 #                    BENCH_sim.json.
+#   --shards         force the full-size sharded-core section (the
+#                    arena-vs-legacy layout gate at 256 devices and the
+#                    devices {256,1024,4096} x shards {1,4,8} sweep,
+#                    writing the "layout"/"shard_sweep" keys under
+#                    "fleet_scale" in BENCH_sim.json) even together
+#                    with --smoke; the section itself always runs and
+#                    lands in BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

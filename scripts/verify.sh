@@ -38,7 +38,10 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # straggler p99 regression for <= 10% duplicate work, retry budgets
 # lose zero requests where the no-retry ablation loses the crash
 # victims, and retry+hedge+brownout together stay heap-vs-reference
-# bit-identical (traces included).
+# bit-identical (traces included). The sharded-core section smoke-runs
+# the arena-vs-legacy layout point and a miniature shards sweep
+# (bit-identity asserted; the full-size ratio gates need
+# `scripts/bench.sh --shards`).
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== obs smoke (flight recorder round trip) =="
@@ -99,6 +102,33 @@ trap 'rm -rf "$obs_tmp" "$churn_tmp" "$resil_tmp"' EXIT
         --expect artifacts/cluster_report.json >/dev/null
 )
 echo "brownout smoke: replayed resilience accounting matches the live report"
+
+echo "== shard smoke (sharded event core round trip) =="
+# End-to-end CLI gate for the sharded event core: serve the same
+# 64-device workload once at 1 shard and once at 4 shards (traced),
+# then replay the 4-shard trace against the 1-shard report — every
+# counter and histogram must match exactly, proving reports and traces
+# are shard-count-invariant (exit 1 on any divergent key). Also checks
+# that oversharding is a loud CLI error, not an empty shard.
+shard_tmp="$(mktemp -d)"
+trap 'rm -rf "$obs_tmp" "$churn_tmp" "$resil_tmp" "$shard_tmp"' EXIT
+(
+    cd "$shard_tmp"
+    "$OLDPWD/target/release/difflight" cluster --devices 64 --requests 256 \
+        --steps 8 --gap-us 20 --slo-ms 30,100 --shards 1 >/dev/null
+    mv artifacts/cluster_report.json one_shard_report.json
+    "$OLDPWD/target/release/difflight" cluster --devices 64 --requests 256 \
+        --steps 8 --gap-us 20 --slo-ms 30,100 --shards 4 \
+        --trace shards.jsonl >/dev/null
+    "$OLDPWD/target/release/difflight" trace replay shards.jsonl \
+        --expect one_shard_report.json >/dev/null
+    if "$OLDPWD/target/release/difflight" cluster --devices 4 --shards 9 \
+        >/dev/null 2>&1; then
+        echo "shard smoke: --shards 9 on a 4-device fleet must fail" >&2
+        exit 1
+    fi
+)
+echo "shard smoke: 4-shard trace replays to the 1-shard report"
 
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
