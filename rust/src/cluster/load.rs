@@ -408,6 +408,19 @@ impl RequestSource {
         Self { kind: SourceKind::Replay(requests.into()), retry: None }
     }
 
+    /// Replay only the first `n` requests of a materialized trace — the
+    /// successive-halving rung source in [`crate::dse::fleet`]: a cheap
+    /// temporal prefix of the full trace, sorted by `(arrival, id)` like
+    /// [`RequestSource::replay`] so the prefix of the sorted trace *is*
+    /// the earliest-arriving slice. `n >= len` replays the whole trace
+    /// (bit-identically to `replay`).
+    pub fn replay_prefix(requests: &[ClusterRequest], n: usize) -> Self {
+        let mut sorted: Vec<ClusterRequest> = requests.to_vec();
+        sorted.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+        sorted.truncate(n);
+        Self { kind: SourceKind::Replay(sorted.into()), retry: None }
+    }
+
     /// Open-loop Poisson arrivals: `n` requests at `rate_per_s`.
     /// Generates the [`synthetic_workload`] sequence (same ids, seeds
     /// and arrival instants) lazily.
@@ -876,6 +889,38 @@ pub fn parse_fault_spec(spec: &str, devices: usize) -> crate::Result<FaultPlan> 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn replay_prefix_is_the_earliest_arriving_slice() {
+        // Build out of order on purpose: the prefix must be taken after
+        // the (arrival, id) sort, so it is a temporal prefix.
+        let mut reqs = synthetic_workload(12, 7, SamplerKind::Ddim { steps: 4 }, 1e-4);
+        reqs.reverse();
+        let mut prefix = RequestSource::replay_prefix(&reqs, 5);
+        let mut seen = Vec::new();
+        while prefix.peek().is_some() {
+            let r = prefix.pop();
+            seen.push((r.arrival_s, r.id.0));
+        }
+        assert_eq!(seen.len(), 5);
+        assert!(seen.windows(2).all(|w| w[0] <= w[1]), "prefix must stay sorted");
+        let sorted_ids: Vec<u64> = {
+            let mut s = reqs.clone();
+            s.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+            s.iter().take(5).map(|r| r.id.0).collect()
+        };
+        assert_eq!(seen.iter().map(|(_, id)| *id).collect::<Vec<_>>(), sorted_ids);
+        // n >= len is the whole trace, bit-identical to replay().
+        let mut full = RequestSource::replay_prefix(&reqs, 100);
+        let mut via_replay = RequestSource::replay(reqs.clone());
+        while full.peek().is_some() {
+            assert_eq!(full.peek(), via_replay.peek());
+            let a = full.pop();
+            let b = via_replay.pop();
+            assert_eq!((a.id, a.arrival_s.to_bits()), (b.id, b.arrival_s.to_bits()));
+        }
+        assert!(via_replay.peek().is_none());
+    }
 
     #[test]
     fn pinned_arrival_sequence() {

@@ -608,6 +608,12 @@ impl FleetMetrics {
         self.queue.mean()
     }
 
+    /// Total energy drawn across the fleet over the run, in joules —
+    /// the denominator of the `dse::fleet` goodput-per-joule objective.
+    pub fn total_energy_j(&self) -> f64 {
+        self.devices.iter().map(|d| d.energy_j).sum()
+    }
+
     /// Fleet energy per bit: total energy over total data bits moved
     /// (each device weighted by its own datapath width); 0.0 when no
     /// ops ran.
@@ -886,6 +892,13 @@ mod tests {
         assert!((m.fleet_gops() - 1.0).abs() < 1e-12);
         // 16 J over 4e9 ops * 8 bits.
         assert!((m.fleet_epb() - 16.0 / 32e9).abs() < 1e-20);
+    }
+
+    #[test]
+    fn total_energy_sums_every_device() {
+        let m = fleet();
+        assert!((m.total_energy_j() - 16.0).abs() < 1e-12);
+        assert_eq!(FleetMetrics::default().total_energy_j(), 0.0);
     }
 
     #[test]

@@ -69,7 +69,10 @@ pub use load::{
     RequestSource, RetryPolicy,
 };
 pub use metrics::{ClassMetrics, DeviceMetrics, FleetMetrics, MigrateOutcome, ProfileMetrics};
-pub use profile::{parse_fleet_json, parse_fleet_spec, DeviceProfile};
+pub use profile::{
+    fleet_spec_key, merge_duplicate_groups, parse_fleet_json, parse_fleet_spec, profile_key,
+    DeviceProfile,
+};
 pub use reference::ReferenceScheduler;
 pub use router::{DeviceLoad, Router, RouterIndex, ShardPolicy};
 pub use scheduler::{
@@ -379,7 +382,9 @@ static WIDTH_CACHES: once_cell::sync::Lazy<std::sync::Mutex<Vec<(u32, Arc<CostCa
 
 /// The shared cost cache for Table II paper parameters at `bit_width`
 /// (the paper width resolves to [`CostCache::shared_paper`] itself).
-fn cache_for_width(bit_width: u32) -> Arc<CostCache> {
+/// Public so the DSE benches can attribute step-memo traffic to a
+/// sweep via [`crate::sim::CacheStats::delta`].
+pub fn cache_for_width(bit_width: u32) -> Arc<CostCache> {
     let paper = CostCache::shared_paper();
     if bit_width == paper.params().bit_width {
         return paper;
@@ -457,6 +462,17 @@ impl Cluster {
         // steps run unclamped; 16×16×1 sample geometry matches the AOT
         // pipeline's default.
         Self::new(config, NoiseSchedule::linear(1000), 256)
+    }
+
+    /// Rebuild a simulated fleet straight from a `(profile, count)`
+    /// spec — the fleet-DSE hot path. Construction is cheap on repeat:
+    /// every step cost comes out of the process-wide per-bit-width
+    /// memo ([`cache_for_width`] → [`CostCache`] step keys), so
+    /// instantiating one candidate `Cluster` per evaluation — or one
+    /// per sweep worker — re-prices nothing after the first sibling
+    /// touched the profile.
+    pub fn from_fleet(fleet: Vec<(DeviceProfile, usize)>) -> crate::Result<Self> {
+        Self::simulated(ClusterConfig::heterogeneous(profile::merge_duplicate_groups(fleet)))
     }
 
     /// Serve a materialized workload to completion through `executor`.
@@ -580,6 +596,18 @@ mod tests {
         }
         assert_eq!(one.metrics.makespan_s, two.metrics.makespan_s);
         assert_eq!(one.metrics.samples_completed, two.metrics.samples_completed);
+    }
+
+    #[test]
+    fn from_fleet_canonicalizes_split_groups() {
+        // The DSE entry point merges duplicate identical groups before
+        // construction, so memoized specs and per_profile rows agree.
+        let p = DeviceProfile::default();
+        let mut c = Cluster::from_fleet(vec![(p, 2), (p, 2)]).unwrap();
+        assert_eq!(c.config.fleet, vec![(p, 4)]);
+        let reqs = synthetic_workload(8, 3, SamplerKind::Ddim { steps: 4 }, 0.0);
+        let out = c.serve(reqs, &mut SimExecutor).unwrap();
+        assert_eq!(out.metrics.per_profile().len(), 1);
     }
 
     #[test]

@@ -127,6 +127,53 @@ impl std::fmt::Display for DeviceProfile {
     }
 }
 
+/// Canonically merge duplicate identical profile groups by summing
+/// their counts (the first occurrence keeps its position). Grouping is
+/// presentation, not semantics — the schedulers treat `[(p, 2), (p, 3)]`
+/// exactly like `[(p, 5)]` — but a split group *would* split
+/// `per_profile` metric rows and fleet-memo keys, so both fleet parsers
+/// canonicalize through this before returning.
+pub fn merge_duplicate_groups(
+    fleet: Vec<(DeviceProfile, usize)>,
+) -> Vec<(DeviceProfile, usize)> {
+    let mut out: Vec<(DeviceProfile, usize)> = Vec::with_capacity(fleet.len());
+    for (profile, count) in fleet {
+        match out.iter_mut().find(|(p, _)| *p == profile) {
+            Some((_, n)) => *n += count,
+            None => out.push((profile, count)),
+        }
+    }
+    out
+}
+
+/// Canonical identity of one profile for fleet-memo keys: the compact
+/// [`DeviceProfile::spec`] string plus an explicit opts tag (`opts` has
+/// no compact grammar spelling, so two profiles differing only in
+/// dataflow optimizations must not collide on `spec()` alone).
+pub fn profile_key(profile: &DeviceProfile) -> String {
+    let mut s = profile.spec();
+    if profile.opts != OptFlags::ALL {
+        s.push_str(&format!(
+            "|o{}{}{}",
+            profile.opts.sparse as u8, profile.opts.pipelined as u8, profile.opts.dac_sharing as u8
+        ));
+    }
+    s
+}
+
+/// Canonical key of a whole fleet spec: per-group `profile_key x count`
+/// strings, merged ([`merge_duplicate_groups`]) and sorted — so permuted
+/// and duplicate-group spellings of the same fleet map to one key. This
+/// is what the fleet-sim memo ([`crate::dse::fleet`]) keys candidates by.
+pub fn fleet_spec_key(fleet: &[(DeviceProfile, usize)]) -> String {
+    let mut parts: Vec<String> = merge_duplicate_groups(fleet.to_vec())
+        .iter()
+        .map(|(p, n)| format!("{}x{n}", profile_key(p)))
+        .collect();
+    parts.sort();
+    parts.join(",")
+}
+
 /// Parse the compact `--fleet` grammar into a fleet spec:
 ///
 /// ```text
@@ -149,7 +196,7 @@ pub fn parse_fleet_spec(spec: &str) -> crate::Result<Vec<(DeviceProfile, usize)>
         fleet.push(parse_group(group, &params)?);
     }
     anyhow::ensure!(!fleet.is_empty(), "fleet spec {spec:?} has no groups");
-    Ok(fleet)
+    Ok(merge_duplicate_groups(fleet))
 }
 
 fn parse_group(group: &str, params: &DeviceParams) -> crate::Result<(DeviceProfile, usize)> {
@@ -330,7 +377,7 @@ pub fn parse_fleet_json(text: &str) -> crate::Result<Vec<(DeviceProfile, usize)>
         fleet.push((profile, count));
     }
     anyhow::ensure!(!fleet.is_empty(), "fleet file has no groups");
-    Ok(fleet)
+    Ok(merge_duplicate_groups(fleet))
 }
 
 /// A present-but-wrong-typed or negative/fractional value is an error,
@@ -514,6 +561,66 @@ mod tests {
         assert_eq!(fleet[0].1, 2);
         // And an out-of-rule λ still errors through validate.
         assert!(parse_fleet_json(r#"[{"wavelengths": 64}]"#).is_err());
+    }
+
+    #[test]
+    fn spec_parser_merges_duplicate_identical_groups() {
+        // Two spellings of the same logical group must come back as one
+        // entry with the summed count — a split group would split
+        // per_profile rows and fleet-memo keys.
+        let fleet = parse_fleet_spec("x2,x3").unwrap();
+        assert_eq!(fleet.len(), 1);
+        assert_eq!(fleet[0], (DeviceProfile::default(), 5));
+        // Interleaved duplicates merge into their first occurrence,
+        // preserving group order.
+        let fleet = parse_fleet_spec("Y8N12K3H8L6M3x1,x2,Y8N12K3H8L6M3x4").unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[0].0.arch.vector(), [8, 12, 3, 8, 6, 3]);
+        assert_eq!(fleet[0].1, 5);
+        assert_eq!(fleet[1], (DeviceProfile::default(), 2));
+        // Near-duplicates (any differing field) stay separate groups.
+        let fleet = parse_fleet_spec(":cap2x1,:cap4x1").unwrap();
+        assert_eq!(fleet.len(), 2);
+    }
+
+    #[test]
+    fn json_parser_merges_duplicate_identical_groups() {
+        let fleet = parse_fleet_json(
+            r#"{"fleet": [
+                {"arch": [8,12,3,8,6,3], "count": 2},
+                {"count": 3},
+                {"arch": [8,12,3,8,6,3], "count": 1}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[0].0.arch.vector(), [8, 12, 3, 8, 6, 3]);
+        assert_eq!(fleet[0].1, 3);
+        assert_eq!(fleet[1], (DeviceProfile::default(), 3));
+        // Same arch but different opts is a different logical group.
+        let fleet = parse_fleet_json(
+            r#"[{"count": 1}, {"opts": "sparse", "count": 1}]"#,
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+    }
+
+    #[test]
+    fn fleet_spec_key_is_permutation_and_grouping_invariant() {
+        let a = parse_fleet_spec("Y8N12K3H8L6M3x2,:cap2x6").unwrap();
+        let b = parse_fleet_spec(":cap2x3,Y8N12K3H8L6M3x2,:cap2x3").unwrap();
+        assert_eq!(fleet_spec_key(&a), fleet_spec_key(&b));
+        let c = parse_fleet_spec("Y8N12K3H8L6M3x2,:cap2x5").unwrap();
+        assert_ne!(fleet_spec_key(&a), fleet_spec_key(&c), "counts are part of the key");
+    }
+
+    #[test]
+    fn profile_key_distinguishes_opts() {
+        // spec() cannot spell opts, so the memo key must tag them.
+        let all = DeviceProfile::default();
+        let sparse = DeviceProfile { opts: OptFlags::SPARSE, ..DeviceProfile::default() };
+        assert_eq!(all.spec(), sparse.spec());
+        assert_ne!(profile_key(&all), profile_key(&sparse));
     }
 
     #[test]

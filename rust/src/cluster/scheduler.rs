@@ -4073,6 +4073,53 @@ mod tests {
     }
 
     #[test]
+    fn heap4_pop_order_matches_binary_heap_on_random_event_streams() {
+        // Satellite of ISSUE 10: the 4-ary heap itself, not just the
+        // scheduler built on it, must agree with the std binary heap's
+        // min-order on randomized Event streams — duplicate timestamps,
+        // duplicate ranks and interleaved push/pop included. Event's
+        // PartialEq is `cmp == Equal`, so equal-key events compare equal
+        // regardless of which identical element each heap yields first.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        crate::util::prop::forall("Heap4 vs BinaryHeap<Reverse<Event>> pop order", 48, |g| {
+            let mut quad: Heap4<Event> = Heap4::new();
+            let mut bin: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+            for _ in 0..g.usize_in(1, 120) {
+                if g.bool() || quad.is_empty() {
+                    // Times drawn from a small palette (forcing exact
+                    // duplicates) or the continuum, never NaN — the
+                    // queue's invariant, and total_cmp handles -0.0.
+                    let time_s = if g.bool() {
+                        *g.choose(&[0.0, -0.0, 1e-6, 5e-4, 5e-4, 2.5e-3])
+                    } else {
+                        g.f64_in(0.0, 1e-3)
+                    };
+                    let kind = match g.usize_in(0, 3) {
+                        0 => EventKind::Fault { seq: g.usize_in(0, 3) },
+                        1 => EventKind::Recover { device: g.usize_in(0, 3) },
+                        2 => EventKind::Arrival,
+                        _ => EventKind::Completion { device: g.usize_in(0, 3) },
+                    };
+                    let e = Event { time_s, kind };
+                    quad.push(e);
+                    bin.push(Reverse(e));
+                } else {
+                    assert_eq!(quad.peek(), bin.peek().map(|Reverse(e)| e));
+                    assert_eq!(quad.pop(), bin.pop().map(|Reverse(e)| e));
+                }
+                assert_eq!(quad.len(), bin.len());
+            }
+            // Drain whatever is left: the full tail must agree too.
+            while let Some(e) = quad.pop() {
+                assert_eq!(Some(e), bin.pop().map(|Reverse(e)| e));
+            }
+            assert!(bin.is_empty());
+            assert!(quad.is_empty());
+        });
+    }
+
+    #[test]
     fn shard_parity_randomized_suite() {
         // ISSUE 9 acceptance gate: the sharded event core is
         // seed-stable and bit-identical at every shard count, and at 1

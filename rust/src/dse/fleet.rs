@@ -1,0 +1,565 @@
+//! Fleet-composition search: which fleet should you build for this
+//! traffic?
+//!
+//! The die-level DSE ([`super::search`]) picks the best `[Y,N,K,H,L,M]`
+//! vector by GOPS/EPB in isolation. This module answers the ROADMAP's
+//! composition question: given a fixed traffic trace and a total-MR
+//! silicon budget, which *mix* of dies (a [`FleetSpace`] candidate —
+//! profile groups × counts) serves it best? Candidates are ranked by
+//! **goodput per joule** — good (SLO-met, un-shed) samples completed
+//! over the run divided by the fleet energy drawn — scaled down when
+//! the fleet misses the target SLO attainment.
+//!
+//! Each candidate costs a full discrete-event simulation, so the sweep
+//! stacks three perf layers:
+//!
+//! 1. **Parallel evaluation** — candidates fan out over
+//!    [`ThreadPool::map`], one [`Cluster`] per evaluation. Workers share
+//!    the process-wide per-bit-width step memo
+//!    ([`crate::cluster::cache_for_width`]), so sibling candidates never
+//!    re-price a profile's step cost.
+//! 2. **A fleet-sim memo** ([`FleetMemo`]) — keyed by the *canonical*
+//!    fleet key ([`fleet_spec_key`]: duplicate groups merged, groups
+//!    sorted), the trace id, the effective prefix length, the scheduler
+//!    knobs and the attainment target. Permuted or split-group
+//!    duplicates of a candidate, and re-sweeps over the same trace, hit
+//!    instead of re-simulating. Memoized results are bit-identical to
+//!    uncached evaluation (the memo stores, never recomputes).
+//! 3. **Successive-halving pruning** ([`explore_fleet`]) — rung `r` of
+//!    `R` scores survivors on the first [`rung_prefix`] requests of the
+//!    trace (half the trace at the penultimate rung, a quarter before
+//!    that, …), keeps the top `keep` fraction, and only runs the final
+//!    rung on the full trace. The exhaustive sweep is kept as
+//!    [`explore_fleet_unpruned`] — the quality oracle (the pruned winner
+//!    must land within 2% of its optimum on the bench workload) and the
+//!    perf baseline. The final rung's memo key is exactly the
+//!    full-trace key, so a pruned sweep's winners seed later unpruned
+//!    or re-run sweeps.
+//!
+//! Ties (equal objectives) order by canonical spec string, so rankings
+//! are stable across runs and thread counts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::cluster::{
+    apply_slos, fleet_spec_key, merge_duplicate_groups, synthetic_workload, Cluster,
+    ClusterConfig, ClusterRequest, DeviceProfile, RequestSource, ShardPolicy, SimExecutor,
+};
+use crate::coordinator::request::SamplerKind;
+use crate::util::fxhash::{fx_hash_one, FxMap};
+use crate::util::threadpool::ThreadPool;
+use crate::workload::ModelId;
+
+use super::space::FleetSpace;
+
+/// A fixed traffic trace with a stable identity for memo keys.
+///
+/// The id hashes every generation parameter (count, seed, sampler,
+/// arrival process, SLO ladder), so two traces with the same id carry
+/// bit-identical requests within one process.
+#[derive(Debug, Clone)]
+pub struct FleetTrace {
+    pub id: u64,
+    pub requests: Vec<ClusterRequest>,
+    /// Per-class latency SLOs (empty = best-effort traffic).
+    pub slos_s: Vec<f64>,
+}
+
+impl FleetTrace {
+    /// A synthetic Poisson trace ([`synthetic_workload`]) with the SLO
+    /// ladder applied round-robin by request id ([`apply_slos`]).
+    pub fn synthetic(
+        n: usize,
+        seed: u64,
+        sampler: SamplerKind,
+        mean_gap_s: f64,
+        slos_s: Vec<f64>,
+    ) -> Self {
+        let mut requests = synthetic_workload(n, seed, sampler, mean_gap_s);
+        apply_slos(&mut requests, &slos_s);
+        let sampler_code = match sampler {
+            SamplerKind::Ddpm => 1u64 << 32,
+            SamplerKind::Ddim { steps } => steps as u64,
+        };
+        let mut enc: Vec<u64> = vec![n as u64, seed, sampler_code, mean_gap_s.to_bits()];
+        enc.extend(slos_s.iter().map(|s| s.to_bits()));
+        Self { id: fx_hash_one(&enc), requests, slos_s }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Scheduler knobs held fixed across one sweep — part of the memo key,
+/// because the same fleet under a different router or backlog policy is
+/// a different simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetKnobs {
+    pub model: ModelId,
+    pub policy: ShardPolicy,
+    /// Shed requests that cannot meet their deadline at admission
+    /// (only applied when the trace carries SLOs).
+    pub shed_late: bool,
+    pub max_backlog: usize,
+}
+
+impl Default for FleetKnobs {
+    fn default() -> Self {
+        Self {
+            model: ModelId::DdpmCifar10,
+            policy: ShardPolicy::default(),
+            shed_late: true,
+            max_backlog: 0,
+        }
+    }
+}
+
+impl FleetKnobs {
+    /// Canonical memo-key fragment.
+    pub fn key(&self) -> String {
+        format!(
+            "{:?}|{:?}|shed{}|bl{}",
+            self.model, self.policy, self.shed_late as u8, self.max_backlog
+        )
+    }
+}
+
+/// One evaluated fleet candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPoint {
+    /// The canonical (merged) fleet spec this point was simulated with.
+    pub fleet: Vec<(DeviceProfile, usize)>,
+    /// Canonical key ([`fleet_spec_key`]) — the tie-break and memo id.
+    pub spec: String,
+    pub devices: usize,
+    /// Silicon footprint across the fleet (total MRs).
+    pub total_mrs: usize,
+    /// Good (SLO-met, un-shed) samples per second over the run.
+    pub goodput_samples_per_s: f64,
+    /// SLO attainment over tracked requests (sheds count as misses);
+    /// 0.0 on best-effort traffic.
+    pub attainment: f64,
+    /// Total fleet energy drawn over the run, joules.
+    pub energy_j: f64,
+    /// The figure of merit: good samples per joule, scaled by
+    /// `min(1, attainment/target)` when the trace carries SLOs.
+    pub objective: f64,
+}
+
+/// The number of trace requests rung `rung` of `rungs` evaluates:
+/// the full trace at the final rung, halving per rung below it, floored
+/// at 8 requests (or the whole trace when it is shorter than that).
+pub fn rung_prefix(trace_len: usize, rungs: usize, rung: usize) -> usize {
+    if rung + 1 >= rungs {
+        return trace_len;
+    }
+    (trace_len >> (rungs - 1 - rung)).max(8.min(trace_len))
+}
+
+/// Simulate one fleet candidate on the first `prefix_len` requests of
+/// `trace` (saturating at the trace length) and score it. Returns `None`
+/// when the fleet cannot be built (e.g. a die violating design rules).
+pub fn evaluate_fleet(
+    fleet: &[(DeviceProfile, usize)],
+    trace: &FleetTrace,
+    prefix_len: usize,
+    knobs: &FleetKnobs,
+    target_attainment: f64,
+) -> Option<FleetPoint> {
+    let fleet = merge_duplicate_groups(fleet.to_vec());
+    let spec = fleet_spec_key(&fleet);
+    let total_mrs = FleetSpace::fleet_mrs(&fleet);
+    let mut cfg = ClusterConfig::heterogeneous(fleet.clone());
+    cfg.model = knobs.model;
+    cfg.policy = knobs.policy;
+    cfg.max_backlog = knobs.max_backlog;
+    cfg.shed_late = knobs.shed_late && !trace.slos_s.is_empty();
+    let devices = cfg.device_count();
+    let mut cluster = Cluster::simulated(cfg).ok()?;
+    let source = RequestSource::replay_prefix(&trace.requests, prefix_len);
+    let out = cluster.serve_source(source, &mut SimExecutor).ok()?;
+    let m = &out.metrics;
+    let goodput = m.goodput_samples_per_s();
+    let energy_j = m.total_energy_j();
+    let attainment = m.slo_attainment();
+    // Good samples completed over the run; invariant to trace length,
+    // so rung scores on different prefixes stay comparable.
+    let good_samples = goodput * m.makespan_s;
+    let mut objective = if energy_j > 0.0 { good_samples / energy_j } else { 0.0 };
+    if !trace.slos_s.is_empty() && target_attainment > 0.0 {
+        objective *= (attainment / target_attainment).min(1.0);
+    }
+    Some(FleetPoint {
+        fleet,
+        spec,
+        devices,
+        total_mrs,
+        goodput_samples_per_s: goodput,
+        attainment,
+        energy_j,
+        objective,
+    })
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct FleetMemoKey {
+    /// Canonical fleet key — permutation/grouping invariant.
+    spec: String,
+    trace_id: u64,
+    /// Effective prefix (`min(prefix_len, trace.len())`), so a
+    /// final-rung evaluation and a direct full-trace evaluation share
+    /// one entry.
+    prefix: usize,
+    knobs: String,
+    target_bits: u64,
+}
+
+/// Hit/miss/size snapshot of a [`FleetMemo`] (the fleet-level analogue
+/// of [`crate::sim::CacheStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FleetMemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl FleetMemoStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Traffic since `earlier` (saturating counter deltas, current
+    /// entry count) — mirrors [`crate::sim::CacheStats::delta`].
+    pub fn delta(&self, earlier: &FleetMemoStats) -> FleetMemoStats {
+        FleetMemoStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            entries: self.entries,
+        }
+    }
+}
+
+/// The fleet-sim memo: canonical candidate key → evaluated point.
+/// Thread-safe; one instance is shared by every worker of a sweep (and
+/// across sweeps, when the caller keeps it alive). Unbuildable fleets
+/// memoize their `None` too, so repeated rejects stay cheap.
+#[derive(Default)]
+pub struct FleetMemo {
+    map: RwLock<FxMap<FleetMemoKey, Option<FleetPoint>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl FleetMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stats(&self) -> FleetMemoStats {
+        FleetMemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.read().expect("memo lock").len(),
+        }
+    }
+}
+
+/// [`evaluate_fleet`] through the memo: permuted/duplicate specs and
+/// repeated evaluations return the cached point (bit-identical — the
+/// memo only ever stores what [`evaluate_fleet`] produced).
+pub fn evaluate_fleet_memo(
+    fleet: &[(DeviceProfile, usize)],
+    trace: &FleetTrace,
+    prefix_len: usize,
+    knobs: &FleetKnobs,
+    target_attainment: f64,
+    memo: &FleetMemo,
+) -> Option<FleetPoint> {
+    let key = FleetMemoKey {
+        spec: fleet_spec_key(fleet),
+        trace_id: trace.id,
+        prefix: prefix_len.min(trace.requests.len()),
+        knobs: knobs.key(),
+        target_bits: target_attainment.to_bits(),
+    };
+    if let Some(p) = memo.map.read().expect("memo lock").get(&key) {
+        memo.hits.fetch_add(1, Ordering::Relaxed);
+        return p.clone();
+    }
+    // Concurrent misses on the same key simulate the same bits, so
+    // racing inserts are benign (same value).
+    memo.misses.fetch_add(1, Ordering::Relaxed);
+    let p = evaluate_fleet(fleet, trace, prefix_len, knobs, target_attainment);
+    memo.map.write().expect("memo lock").insert(key, p.clone());
+    p
+}
+
+/// Sort best-first: objective descending, NaN after real scores, and
+/// equal objectives ordered by canonical spec string so rankings are
+/// deterministic across runs and thread counts.
+pub fn sort_fleet_points(points: &mut [FleetPoint]) {
+    points.sort_by(|a, b| match (a.objective.is_nan(), b.objective.is_nan()) {
+        (false, false) => {
+            b.objective.total_cmp(&a.objective).then_with(|| a.spec.cmp(&b.spec))
+        }
+        (true, true) => a.spec.cmp(&b.spec),
+        (true, false) => std::cmp::Ordering::Greater, // NaN after real scores
+        (false, true) => std::cmp::Ordering::Less,
+    });
+}
+
+/// Successive-halving sweep over `space`: rung `r` evaluates the
+/// surviving candidates on [`rung_prefix`] requests across `threads`
+/// workers (all through `memo`), keeps the top `keep` fraction (at
+/// least one), and the final rung scores survivors on the full trace.
+/// Returns the final rung's points, best first.
+pub fn explore_fleet(
+    space: &FleetSpace,
+    trace: &FleetTrace,
+    knobs: &FleetKnobs,
+    target_attainment: f64,
+    rungs: usize,
+    keep: f64,
+    threads: usize,
+    memo: &Arc<FleetMemo>,
+) -> Vec<FleetPoint> {
+    let rungs = rungs.max(1);
+    let keep = if keep.is_finite() { keep.clamp(0.05, 1.0) } else { 0.5 };
+    let pool = ThreadPool::new(threads.max(1));
+    let trace = Arc::new(trace.clone());
+    let len = trace.len();
+    let mut survivors = space.candidates();
+    for rung in 0..rungs {
+        let prefix = rung_prefix(len, rungs, rung);
+        let tr = Arc::clone(&trace);
+        let kn = knobs.clone();
+        let mm = Arc::clone(memo);
+        let mut points: Vec<FleetPoint> = pool
+            .map(survivors, move |fleet| {
+                evaluate_fleet_memo(&fleet, &tr, prefix, &kn, target_attainment, &mm)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        sort_fleet_points(&mut points);
+        if rung + 1 == rungs {
+            return points;
+        }
+        let keep_n = ((points.len() as f64 * keep).ceil() as usize).max(1);
+        points.truncate(keep_n);
+        survivors = points.into_iter().map(|p| p.fleet).collect();
+    }
+    Vec::new()
+}
+
+/// The exhaustive baseline: every candidate on the full trace,
+/// sequentially, with no memo. Quality oracle and perf yardstick for
+/// [`explore_fleet`].
+pub fn explore_fleet_unpruned(
+    space: &FleetSpace,
+    trace: &FleetTrace,
+    knobs: &FleetKnobs,
+    target_attainment: f64,
+) -> Vec<FleetPoint> {
+    let mut points: Vec<FleetPoint> = space
+        .candidates()
+        .iter()
+        .filter_map(|f| evaluate_fleet(f, trace, usize::MAX, knobs, target_attainment))
+        .collect();
+    sort_fleet_points(&mut points);
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_trace() -> FleetTrace {
+        FleetTrace::synthetic(24, 11, SamplerKind::Ddim { steps: 4 }, 2e-4, vec![0.002, 0.01])
+    }
+
+    fn small_space() -> FleetSpace {
+        let mut s = FleetSpace::paper(4 * FleetSpace::paper_die_mrs());
+        s.counts = vec![0, 1, 2];
+        s
+    }
+
+    fn bits(p: &FleetPoint) -> [u64; 4] {
+        [
+            p.goodput_samples_per_s.to_bits(),
+            p.attainment.to_bits(),
+            p.energy_j.to_bits(),
+            p.objective.to_bits(),
+        ]
+    }
+
+    #[test]
+    fn trace_id_is_a_parameter_fingerprint() {
+        let a = small_trace();
+        assert_eq!(a.id, small_trace().id, "same params, same id");
+        let b = FleetTrace::synthetic(24, 12, SamplerKind::Ddim { steps: 4 }, 2e-4, vec![0.002, 0.01]);
+        let c = FleetTrace::synthetic(24, 11, SamplerKind::Ddim { steps: 4 }, 2e-4, vec![]);
+        assert_ne!(a.id, b.id, "seed must change the id");
+        assert_ne!(a.id, c.id, "SLO ladder must change the id");
+        assert_eq!(a.len(), 24);
+        assert!(a.requests.iter().all(|r| r.deadline_s.is_some()));
+    }
+
+    #[test]
+    fn memoized_evaluation_bit_identical_to_uncached() {
+        let trace = small_trace();
+        let knobs = FleetKnobs::default();
+        let fleet = vec![(DeviceProfile::default(), 2)];
+        let want = evaluate_fleet(&fleet, &trace, usize::MAX, &knobs, 0.99).expect("evaluates");
+        let memo = FleetMemo::new();
+        let cold = evaluate_fleet_memo(&fleet, &trace, usize::MAX, &knobs, 0.99, &memo)
+            .expect("evaluates");
+        assert_eq!(bits(&cold), bits(&want), "memoized must be bit-identical to uncached");
+        assert_eq!(cold.spec, want.spec);
+        let warm = evaluate_fleet_memo(&fleet, &trace, usize::MAX, &knobs, 0.99, &memo)
+            .expect("evaluates");
+        assert_eq!(bits(&warm), bits(&want));
+        let s = memo.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn memo_hits_on_permuted_split_and_full_prefix_aliases() {
+        let trace = small_trace();
+        let knobs = FleetKnobs::default();
+        let a = DeviceProfile::default();
+        let b = DeviceProfile::with_capacity(2, 16);
+        let memo = FleetMemo::new();
+        let base = evaluate_fleet_memo(&[(a, 1), (b, 2)], &trace, usize::MAX, &knobs, 0.99, &memo)
+            .expect("evaluates");
+        // Permuted, split-group, and over-length-prefix spellings of the
+        // same candidate all alias to the one entry.
+        for fleet in [vec![(b, 2), (a, 1)], vec![(a, 1), (b, 1), (b, 1)]] {
+            let again = evaluate_fleet_memo(&fleet, &trace, trace.len(), &knobs, 0.99, &memo)
+                .expect("evaluates");
+            assert_eq!(bits(&again), bits(&base));
+        }
+        let s = memo.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        // A different prefix is a different simulation: miss.
+        evaluate_fleet_memo(&[(a, 1), (b, 2)], &trace, 12, &knobs, 0.99, &memo);
+        assert_eq!(memo.stats().misses, 2);
+    }
+
+    #[test]
+    fn rung_schedule_halves_down_to_the_floor() {
+        assert_eq!(rung_prefix(64, 3, 0), 16);
+        assert_eq!(rung_prefix(64, 3, 1), 32);
+        assert_eq!(rung_prefix(64, 3, 2), 64);
+        assert_eq!(rung_prefix(64, 1, 0), 64);
+        // The floor: tiny prefixes clamp to 8 requests…
+        assert_eq!(rung_prefix(64, 5, 0), 8);
+        // …or the whole trace when it is shorter than that.
+        assert_eq!(rung_prefix(6, 3, 0), 6);
+    }
+
+    #[test]
+    fn pruned_search_matches_unpruned_oracle_on_small_space() {
+        let space = small_space();
+        let trace = small_trace();
+        let knobs = FleetKnobs::default();
+        let oracle = explore_fleet_unpruned(&space, &trace, &knobs, 0.99);
+        assert!(!oracle.is_empty());
+        let memo = Arc::new(FleetMemo::new());
+        let pruned = explore_fleet(&space, &trace, &knobs, 0.99, 2, 0.75, 2, &memo);
+        assert!(!pruned.is_empty());
+        let best = oracle[0].objective;
+        assert!(best > 0.0, "oracle optimum must score");
+        assert!(
+            pruned[0].objective >= 0.98 * best,
+            "pruned winner {} must be within 2% of unpruned optimum {}",
+            pruned[0].objective,
+            best
+        );
+        // Final-rung survivors were scored on the full trace, so their
+        // objectives are bit-identical to the oracle's for the same spec.
+        for p in &pruned {
+            let o = oracle.iter().find(|o| o.spec == p.spec).expect("oracle covers the space");
+            assert_eq!(bits(p), bits(o));
+        }
+        assert!(memo.stats().misses > 0);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let space = small_space();
+        let trace = small_trace();
+        let knobs = FleetKnobs::default();
+        let one = explore_fleet(&space, &trace, &knobs, 0.99, 2, 0.75, 1, &Arc::new(FleetMemo::new()));
+        let four = explore_fleet(&space, &trace, &knobs, 0.99, 2, 0.75, 4, &Arc::new(FleetMemo::new()));
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(four.iter()) {
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(bits(a), bits(b));
+        }
+    }
+
+    #[test]
+    fn resweep_through_a_shared_memo_is_all_hits() {
+        let space = small_space();
+        let trace = small_trace();
+        let knobs = FleetKnobs::default();
+        let memo = Arc::new(FleetMemo::new());
+        let first = explore_fleet(&space, &trace, &knobs, 0.99, 2, 0.75, 2, &memo);
+        let cold = memo.stats();
+        assert_eq!(cold.hits, 0, "fresh memo, cold sweep");
+        let second = explore_fleet(&space, &trace, &knobs, 0.99, 2, 0.75, 2, &memo);
+        let warm = memo.stats().delta(&cold);
+        assert_eq!(warm.misses, 0, "re-sweep must not re-simulate");
+        assert!(warm.hits > 0);
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(second.iter()) {
+            assert_eq!((a.spec.as_str(), bits(a)), (b.spec.as_str(), bits(b)));
+        }
+    }
+
+    #[test]
+    fn ties_order_by_spec_and_nan_sorts_last() {
+        let mk = |spec: &str, objective: f64| FleetPoint {
+            fleet: Vec::new(),
+            spec: spec.to_string(),
+            devices: 1,
+            total_mrs: 1,
+            goodput_samples_per_s: 1.0,
+            attainment: 1.0,
+            energy_j: 1.0,
+            objective,
+        };
+        let mut pts = vec![
+            mk("c", 2.0),
+            mk("b", f64::NAN),
+            mk("a", 2.0),
+            mk("d", 5.0),
+            mk("e", f64::NAN),
+        ];
+        sort_fleet_points(&mut pts);
+        let order: Vec<&str> = pts.iter().map(|p| p.spec.as_str()).collect();
+        assert_eq!(order, ["d", "a", "c", "b", "e"]);
+        // Stability under shuffles: reversing the input changes nothing.
+        let mut rev = vec![
+            mk("e", f64::NAN),
+            mk("d", 5.0),
+            mk("a", 2.0),
+            mk("b", f64::NAN),
+            mk("c", 2.0),
+        ];
+        sort_fleet_points(&mut rev);
+        assert_eq!(rev.iter().map(|p| p.spec.as_str()).collect::<Vec<_>>(), order);
+    }
+}

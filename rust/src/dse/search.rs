@@ -104,9 +104,15 @@ fn point(config: ArchConfig, gops: &[f64], epb: &[f64]) -> DsePoint {
 /// objective — e.g. a degenerate 0/0 GOPS-over-EPB — used to crash the
 /// sweep), with NaN objectives deterministically sorted last.
 pub fn sort_by_objective(points: &mut [DsePoint]) {
+    // Equal objectives (and NaN groups) tie-break on the architectural
+    // vector so rankings are deterministic across runs, thread counts
+    // and candidate enumeration order.
+    let key = |p: &DsePoint| (p.config.vector(), p.config.wavelengths);
     points.sort_by(|a, b| match (a.objective.is_nan(), b.objective.is_nan()) {
-        (false, false) => b.objective.total_cmp(&a.objective),
-        (true, true) => std::cmp::Ordering::Equal,
+        (false, false) => {
+            b.objective.total_cmp(&a.objective).then_with(|| key(a).cmp(&key(b)))
+        }
+        (true, true) => key(a).cmp(&key(b)),
         (true, false) => std::cmp::Ordering::Greater, // NaN after real scores
         (false, true) => std::cmp::Ordering::Less,
     });
@@ -247,6 +253,29 @@ mod tests {
         assert_eq!(objs[2], 1.0);
         assert_eq!(objs[3], -1.0);
         assert!(objs[4].is_nan() && objs[5].is_nan());
+    }
+
+    #[test]
+    fn equal_objectives_order_by_config_vector() {
+        let pt = |v: [usize; 6], objective: f64| DsePoint {
+            config: ArchConfig::from_vector(v, 36),
+            avg_gops: 0.0,
+            avg_epb: 0.0,
+            objective,
+            total_mrs: 0,
+        };
+        let a = [1, 4, 1, 2, 2, 1];
+        let b = [2, 4, 1, 2, 2, 1];
+        let c = [1, 8, 1, 2, 2, 1];
+        let mut fwd = vec![pt(b, 1.0), pt(c, 1.0), pt(a, 1.0), pt(b, f64::NAN), pt(a, f64::NAN)];
+        sort_by_objective(&mut fwd);
+        let order: Vec<[usize; 6]> = fwd.iter().map(|p| p.config.vector()).collect();
+        // Ties ascend by vector; the NaN tail orders the same way.
+        assert_eq!(order, vec![a, c, b, a, b]);
+        // Any input permutation converges to the same ranking.
+        let mut rev = vec![pt(a, f64::NAN), pt(b, f64::NAN), pt(a, 1.0), pt(c, 1.0), pt(b, 1.0)];
+        sort_by_objective(&mut rev);
+        assert_eq!(rev.iter().map(|p| p.config.vector()).collect::<Vec<_>>(), order);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! The architectural design space.
+//! The architectural design space: per-die vectors ([`DesignSpace`]) and
+//! fleet compositions over a die menu ([`FleetSpace`]).
 
 use crate::arch::ArchConfig;
+use crate::cluster::DeviceProfile;
 
 /// Candidate ranges per architectural parameter.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +67,98 @@ impl DesignSpace {
     }
 }
 
+/// The fleet-composition search space: a menu of candidate dies and a
+/// set of per-die counts, swept as a cartesian product under a total-MR
+/// silicon budget. A candidate is a `--fleet`-style spec — profile
+/// groups × counts — fed to [`crate::cluster::Cluster::from_fleet`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpace {
+    /// Candidate dies. Kept small and architecturally diverse: the sweep
+    /// cost is exponential in menu size (`counts^menu` fleets).
+    pub menu: Vec<DeviceProfile>,
+    /// Per-die instance counts to try (0 = leave the die out).
+    pub counts: Vec<usize>,
+    /// Silicon budget: maximum total MR count across the whole fleet.
+    pub max_total_mrs: usize,
+}
+
+impl FleetSpace {
+    /// The MR footprint of one paper-optimal die — the natural budget
+    /// unit for fleet sweeps (`--budget-dies` in the CLI).
+    pub fn paper_die_mrs() -> usize {
+        ArchConfig::paper_optimal().total_mrs()
+    }
+
+    /// The bench/CLI menu: three §V-rule-saturating dies around the
+    /// paper optimum — a wide conv-heavy die (Y=8, H=8), the paper die
+    /// itself, and a small low-area die (Y=2, H=3) with a shallower
+    /// resident batch — swept over counts `{0, 1, 2, 4, 8}` under
+    /// `budget_mrs` total silicon.
+    pub fn paper(budget_mrs: usize) -> Self {
+        let die = |v: [usize; 6]| DeviceProfile {
+            arch: ArchConfig::from_vector(v, 36),
+            ..DeviceProfile::default()
+        };
+        let small = DeviceProfile {
+            arch: ArchConfig::from_vector([2, 12, 3, 3, 6, 3], 36),
+            capacity: 2,
+            ..DeviceProfile::default()
+        };
+        Self {
+            menu: vec![die([8, 12, 3, 8, 6, 3]), die([4, 12, 3, 6, 6, 3]), small],
+            counts: vec![0, 1, 2, 4, 8],
+            max_total_mrs: budget_mrs,
+        }
+    }
+
+    /// Total MR footprint of a fleet spec.
+    pub fn fleet_mrs(fleet: &[(DeviceProfile, usize)]) -> usize {
+        fleet.iter().map(|(p, n)| p.arch.total_mrs() * n).sum()
+    }
+
+    /// Enumerate all in-budget, non-empty fleet candidates. Each
+    /// candidate lists only the menu dies with a non-zero count, in menu
+    /// order (canonicalisation to a sorted key is the memo's job, not
+    /// the enumerator's).
+    pub fn candidates(&self) -> Vec<Vec<(DeviceProfile, usize)>> {
+        let mut out = Vec::new();
+        if self.menu.is_empty() || self.counts.is_empty() {
+            return out;
+        }
+        let mut idx = vec![0usize; self.menu.len()];
+        loop {
+            let fleet: Vec<(DeviceProfile, usize)> = self
+                .menu
+                .iter()
+                .zip(idx.iter())
+                .map(|(p, &i)| (*p, self.counts[i]))
+                .filter(|&(_, n)| n > 0)
+                .collect();
+            if !fleet.is_empty() && Self::fleet_mrs(&fleet) <= self.max_total_mrs {
+                out.push(fleet);
+            }
+            // Odometer increment over indices into `self.counts`.
+            let mut i = 0;
+            loop {
+                if i == idx.len() {
+                    return out;
+                }
+                idx[i] += 1;
+                if idx[i] < self.counts.len() {
+                    break;
+                }
+                idx[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    /// Total unconstrained size of the grid (including the empty fleet).
+    pub fn grid_size(&self) -> usize {
+        self.counts.len().pow(self.menu.len() as u32)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +184,49 @@ mod tests {
     fn all_candidates_within_budget() {
         let s = DesignSpace::paper();
         assert!(s.candidates().iter().all(|c| c.total_mrs() <= s.max_total_mrs));
+    }
+
+    #[test]
+    fn fleet_space_enumerates_nonempty_in_budget_fleets() {
+        let s = FleetSpace::paper(8 * FleetSpace::paper_die_mrs());
+        let cands = s.candidates();
+        assert!(!cands.is_empty());
+        assert!(cands.len() < s.grid_size(), "budget + empty-fleet skip must prune");
+        for fleet in &cands {
+            assert!(!fleet.is_empty());
+            assert!(fleet.iter().all(|&(_, n)| n > 0), "zero-count groups must be dropped");
+            assert!(FleetSpace::fleet_mrs(fleet) <= s.max_total_mrs);
+        }
+        // Every menu die validates against the paper design rules.
+        let p = crate::devices::DeviceParams::paper();
+        for die in &s.menu {
+            die.validate(&p).expect("menu die must satisfy design rules");
+        }
+        // The homogeneous all-paper fleet (8x the default die) is in the space.
+        let d = DeviceProfile::default();
+        assert!(cands.iter().any(|f| f == &vec![(d, 8)]));
+    }
+
+    #[test]
+    fn fleet_space_candidates_are_distinct() {
+        let s = FleetSpace::paper(8 * FleetSpace::paper_die_mrs());
+        let keys: std::collections::HashSet<String> = s
+            .candidates()
+            .iter()
+            .map(|f| crate::cluster::fleet_spec_key(f))
+            .collect();
+        assert_eq!(keys.len(), s.candidates().len(), "no two candidates share a memo key");
+    }
+
+    #[test]
+    fn tiny_budget_still_admits_the_small_die() {
+        // One small die fits in a one-paper-die budget; the big die does not.
+        let s = FleetSpace::paper(FleetSpace::paper_die_mrs());
+        let cands = s.candidates();
+        assert!(!cands.is_empty());
+        let small = s.menu[2];
+        assert!(cands.iter().any(|f| f == &vec![(small, 1)]));
+        let big = s.menu[0];
+        assert!(!cands.iter().any(|f| f.iter().any(|&(p, _)| p == big)));
     }
 }

@@ -8,6 +8,17 @@
 //! * `compare` — the Figure 9/10 platform comparison table.
 //! * `dse [--threads N]` — design-space exploration (reports the top
 //!   configurations and the paper config's rank).
+//! * `dse-fleet [--budget MRS | --budget-dies N] [--trace N] [--steps S]
+//!   [--gap-us G] [--slo-ms MS[,MS...]] [--slo-target F] [--rungs R]
+//!   [--keep F] [--threads N] [--oracle]` — fleet-composition search:
+//!   sweep profile-group × count fleets under a total-MR silicon budget
+//!   against a fixed synthetic trace and rank them by goodput per joule
+//!   at the target SLO attainment. The sweep runs parallel, memoized
+//!   (a second invocation of the same sweep is all memo hits) and
+//!   successive-halving-pruned; `--oracle` also runs the exhaustive
+//!   unpruned sweep and fails (exit 3) if the pruned winner lands more
+//!   than 2% below the unpruned optimum or the re-sweep missed the
+//!   memo. Grammar details in `rust/src/dse/README.md`.
 //! * `serve [--requests N] [--batch B] [--steps S] [--artifacts DIR]
 //!   [--fp32] [--devices N] [--reuse-interval K] [--policy P]
 //!   [--fleet SPEC | --fleet-file PATH] [--slo-ms MS[,MS...]]
@@ -68,7 +79,10 @@ use difflight::cluster::{
 use difflight::coordinator::request::SamplerKind;
 use difflight::coordinator::{Coordinator, EngineConfig};
 use difflight::devices::DeviceParams;
-use difflight::dse::{explore, DesignSpace};
+use difflight::dse::{
+    explore, explore_fleet, explore_fleet_unpruned, DesignSpace, FleetKnobs, FleetMemo,
+    FleetSpace, FleetTrace,
+};
 use difflight::sim::Simulator;
 use difflight::util::cli::Args;
 use difflight::util::json::Json;
@@ -82,6 +96,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(),
         "dse" => cmd_dse(&args),
+        "dse-fleet" => cmd_dse_fleet(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "trace" => cmd_trace(&args),
@@ -96,10 +111,16 @@ fn main() {
 
 fn print_help(program: &str) {
     println!("DiffLight — silicon-photonics accelerator for diffusion models");
-    println!("usage: {program} <simulate|compare|dse|serve|cluster|trace|devices> [options]");
+    println!("usage: {program} <simulate|compare|dse|dse-fleet|serve|cluster|trace|devices> [options]");
     println!("  simulate --model all --all-opts     simulator GOPS/EPB");
     println!("  compare                             Figure 9/10 comparison");
     println!("  dse --threads 8                     design-space exploration");
+    println!("  dse-fleet --budget-dies 8           fleet-composition search (goodput/J)");
+    println!("            --budget 500000           ...or an explicit total-MR silicon budget");
+    println!("            --trace 96 --steps 8      synthetic trace size / DDIM steps");
+    println!("            --slo-ms 2,10             per-class SLOs (--slo-target 0.99)");
+    println!("            --rungs 3 --keep 0.5      successive-halving schedule");
+    println!("            --oracle                  verify against the unpruned sweep (exit 3 on drift)");
     println!("  serve --requests 8 --steps 25       serve via PJRT artifacts");
     println!("  cluster --devices 4 --requests 32   simulated fleet serving");
     println!("          --reuse-interval 3          DeepCache step reuse (1 = off)");
@@ -353,6 +374,153 @@ fn cmd_dse(args: &Args) -> i32 {
         );
     }
     0
+}
+
+/// `dse-fleet`: fleet-composition search over a [`FleetSpace`] under a
+/// total-MR silicon budget, ranked by goodput per joule at the target
+/// SLO attainment. Runs the pruned+memoized sweep twice (the re-sweep
+/// demonstrates the fleet memo); `--oracle` adds the exhaustive
+/// unpruned sweep and turns the 2%-winner and memo-hit checks into the
+/// exit code (3 on failure) — the verify.sh smoke gate.
+fn cmd_dse_fleet(args: &Args) -> i32 {
+    let budget = match args.get("budget") {
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                eprintln!("error: --budget {raw}: expected a positive total-MR count");
+                return 2;
+            }
+        },
+        None => args.get_parsed("budget-dies", 8usize).max(1) * FleetSpace::paper_die_mrs(),
+    };
+    let threads = args.get_parsed("threads", 8usize).max(1);
+    let rungs = args.get_parsed("rungs", 3usize).max(1);
+    let keep = args.get_parsed("keep", 0.5f64);
+    if !(0.0..=1.0).contains(&keep) || keep == 0.0 {
+        eprintln!("error: --keep {keep}: expected a fraction in (0, 1]");
+        return 2;
+    }
+    let requests = args.get_parsed("trace", 96usize).max(1);
+    let steps = args.get_parsed("steps", 8usize).max(1);
+    let seed = args.get_parsed("seed", 1u64);
+    let gap_s = args.get_parsed("gap-us", 200.0f64) * 1e-6;
+    let target = args.get_parsed("slo-target", 0.99f64);
+    if !(0.0..=1.0).contains(&target) {
+        eprintln!("error: --slo-target {target}: expected a fraction in [0, 1]");
+        return 2;
+    }
+    let slos_s = match parse_slo_spec(&args.get_or("slo-ms", "2,10")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let space = FleetSpace::paper(budget);
+    let candidates = space.candidates();
+    if candidates.is_empty() {
+        eprintln!(
+            "error: no fleet fits a {budget}-MR budget (the smallest menu die needs {} MRs)",
+            space.menu.iter().map(|p| p.arch.total_mrs()).min().unwrap_or(0)
+        );
+        return 2;
+    }
+    let trace =
+        FleetTrace::synthetic(requests, seed, SamplerKind::Ddim { steps }, gap_s, slos_s);
+    let knobs = FleetKnobs::default();
+    let memo = std::sync::Arc::new(FleetMemo::new());
+
+    let t0 = std::time::Instant::now();
+    let points = explore_fleet(&space, &trace, &knobs, target, rungs, keep, threads, &memo);
+    let sweep_s = t0.elapsed().as_secs_f64();
+    let cold = memo.stats();
+    let t1 = std::time::Instant::now();
+    let again = explore_fleet(&space, &trace, &knobs, target, rungs, keep, threads, &memo);
+    let resweep_s = t1.elapsed().as_secs_f64();
+    let warm = memo.stats().delta(&cold);
+    if points.is_empty() {
+        eprintln!("error: no candidate produced a score (all simulations failed)");
+        return 1;
+    }
+
+    println!(
+        "fleet DSE: {} candidates under {budget} MRs, {} trace requests, {} rung(s) keep {keep}, {} thread(s)",
+        candidates.len(),
+        trace.len(),
+        rungs,
+        threads,
+    );
+    let mut table = Table::new(&[
+        "rank", "fleet", "dev", "MRs", "good/s", "attain", "energy", "samples/J",
+    ]);
+    for (i, pt) in points.iter().take(10).enumerate() {
+        table.row(&[
+            (i + 1).to_string(),
+            pt.spec.clone(),
+            pt.devices.to_string(),
+            pt.total_mrs.to_string(),
+            format!("{:.1}", pt.goodput_samples_per_s),
+            format!("{:.1}%", 100.0 * pt.attainment),
+            fmt_si(pt.energy_j, "J"),
+            format!("{:.3e}", pt.objective),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "sweep {} (cold: {} sims, {} memo hits) → re-sweep {} ({} hits, {} misses)",
+        fmt_si(sweep_s, "s"),
+        cold.misses,
+        cold.hits,
+        fmt_si(resweep_s, "s"),
+        warm.hits,
+        warm.misses,
+    );
+
+    let mut failed = false;
+    if args.flag("oracle") {
+        let t2 = std::time::Instant::now();
+        let oracle = explore_fleet_unpruned(&space, &trace, &knobs, target);
+        let oracle_s = t2.elapsed().as_secs_f64();
+        let best = oracle.first().map(|p| p.objective).unwrap_or(0.0);
+        let got = points[0].objective;
+        println!(
+            "oracle: unpruned optimum {} = {:.3e} samples/J in {} ({} sims)",
+            oracle.first().map(|p| p.spec.as_str()).unwrap_or("-"),
+            best,
+            fmt_si(oracle_s, "s"),
+            oracle.len(),
+        );
+        if !(got >= 0.98 * best) {
+            eprintln!(
+                "FAIL: pruned winner {} = {:.3e} is more than 2% below the unpruned \
+                 optimum {:.3e}",
+                points[0].spec, got, best
+            );
+            failed = true;
+        }
+        if warm.hits == 0 || warm.misses > 0 {
+            eprintln!(
+                "FAIL: re-sweep expected pure memo hits, saw {} hits / {} misses",
+                warm.hits, warm.misses
+            );
+            failed = true;
+        }
+        for (a, b) in points.iter().zip(again.iter()) {
+            if a.spec != b.spec || a.objective.to_bits() != b.objective.to_bits() {
+                eprintln!("FAIL: memoized re-sweep diverged on {}", a.spec);
+                failed = true;
+                break;
+            }
+        }
+        if !failed {
+            println!("oracle checks passed: winner within 2%, re-sweep fully memoized");
+        }
+    }
+    if failed {
+        3
+    } else {
+        0
+    }
 }
 
 fn cmd_serve(args: &Args) -> i32 {

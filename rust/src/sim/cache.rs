@@ -162,6 +162,20 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Traffic since `earlier`: hit/miss counters become deltas
+    /// (saturating, so a fresh cache vs a stale snapshot never
+    /// underflows), entry counts stay at the current totals. This is how
+    /// the DSE benches attribute step-memo traffic to one sweep when the
+    /// cache is process-wide and other sections have already warmed it.
+    pub fn delta(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            layer_entries: self.layer_entries,
+            step_entries: self.step_entries,
+        }
+    }
 }
 
 /// Number of hash-selected shards in the layer memo. Cold multi-threaded
@@ -443,6 +457,25 @@ mod tests {
         assert_eq!(s.layer_entries, distinct.len());
         assert_eq!(s.misses as usize, distinct.len());
         assert!(distinct.len() > 8, "sweep must populate several shards");
+    }
+
+    #[test]
+    fn stats_delta_isolates_one_windows_traffic() {
+        let cache = CostCache::new(DeviceParams::paper());
+        let acc = Simulator::paper_optimal().accelerator.clone();
+        cache.step_cost(&acc, ModelId::DdpmCifar10, OptFlags::ALL);
+        let before = cache.stats();
+        cache.step_cost(&acc, ModelId::DdpmCifar10, OptFlags::ALL);
+        cache.step_cost(&acc, ModelId::DdpmCifar10, OptFlags::ALL);
+        let d = cache.stats().delta(&before);
+        assert_eq!(d.hits, 2, "two warm step lookups in the window");
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.step_entries, 1);
+        // Stale snapshot against a fresh cache saturates instead of
+        // wrapping.
+        let fresh = CostCache::new(DeviceParams::paper());
+        let d = fresh.stats().delta(&before);
+        assert_eq!((d.hits, d.misses), (0, 0));
     }
 
     #[test]

@@ -27,12 +27,17 @@
 # work, zero lost requests with retry budgets, heap-vs-reference
 # bit-identity with retry+hedge+brownout all enabled, >=1.2x events/sec
 # from the arena/4-ary layout alone over the frozen pre-shard core at
-# 256 devices, and >=3x events/sec at the 4096-device 8-shard point vs
-# 1 shard on hosts with >=8 workers) and writing BENCH_sim.json at the
-# repo root.
+# 256 devices, >=3x events/sec at the 4096-device 8-shard point vs
+# 1 shard on hosts with >=8 workers, and — for the fleet-composition
+# DSE — a pruned winner within 2% of the unpruned optimum's
+# goodput-per-joule objective, bit-identical memoized fleet
+# evaluations, a pure-hit memo re-sweep, and >=5x speedup of the
+# parallel+memoized+pruned sweep over the sequential unpruned
+# baseline) and writing BENCH_sim.json at the repo root.
 #
 # Usage: scripts/bench.sh [--smoke] [--devices-sweep] [--hetero] [--slo]
 #                         [--obs] [--faults] [--brownout] [--shards]
+#                         [--fleet-dse]
 #   --smoke          1-iteration miniature (what scripts/verify.sh runs,
 #                    gating the 64-device scheduler point, the 2-profile
 #                    and closed-loop heap-vs-reference parities, and a
@@ -71,6 +76,14 @@
 #                    "fleet_scale" in BENCH_sim.json) even together
 #                    with --smoke; the section itself always runs and
 #                    lands in BENCH_sim.json.
+#   --fleet-dse      force the full-size fleet-composition DSE section
+#                    (8-die MR budget, 96-request trace, 3 halving
+#                    rungs, with the >=5x parallel+memoized+pruned
+#                    speedup gate enforced, writing the "fleet_dse" key
+#                    of BENCH_sim.json) even together with --smoke; the
+#                    section itself always runs — with its 2%-of-oracle,
+#                    bit-identity and memo-hit gates — and lands in
+#                    BENCH_sim.json.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

@@ -41,7 +41,12 @@ echo "== bench smoke (sim_hot_path --smoke) =="
 # bit-identical (traces included). The sharded-core section smoke-runs
 # the arena-vs-legacy layout point and a miniature shards sweep
 # (bit-identity asserted; the full-size ratio gates need
-# `scripts/bench.sh --shards`).
+# `scripts/bench.sh --shards`). The fleet_dse section smoke-runs a
+# miniature fleet-composition sweep (2-die budget, 32-request trace)
+# with its deterministic gates — pruned winner within 2% of the
+# unpruned oracle, memoized evaluations bit-identical, re-sweep pure
+# memo hits — always on; the >=5x speedup gate needs
+# `scripts/bench.sh --fleet-dse`.
 cargo bench --bench sim_hot_path -- --smoke
 
 echo "== obs smoke (flight recorder round trip) =="
@@ -129,6 +134,18 @@ trap 'rm -rf "$obs_tmp" "$churn_tmp" "$resil_tmp" "$shard_tmp"' EXIT
     fi
 )
 echo "shard smoke: 4-shard trace replays to the 1-shard report"
+
+echo "== fleet DSE smoke (pruned-vs-oracle + memo round trip) =="
+# End-to-end CLI gate for the fleet-composition search: sweep the menu
+# under the default 8-die MR budget (so 8-device candidates are in
+# range) against a tiny 24-request trace with 2 halving rungs, then
+# (--oracle) run the sequential unpruned sweep and require the pruned
+# winner's goodput-per-joule objective within 2% of the unpruned
+# optimum, the in-process re-sweep to be pure fleet-memo hits, and its
+# ranking to be bit-identical (exit 3 on any violated gate).
+target/release/difflight dse-fleet --trace 24 --steps 4 --rungs 2 \
+    --keep 0.5 --threads 4 --oracle >/dev/null
+echo "fleet DSE smoke: pruned winner matches the unpruned oracle"
 
 echo "== cargo fmt --check =="
 # fmt is advisory when rustfmt is not installed in the build image.
